@@ -1,0 +1,109 @@
+//! End-to-end driver — proves all three layers compose on a real workload:
+//!
+//!   Layer 1/2 (JAX + Pallas, AOT)  →  artifacts/*.hlo.txt
+//!   Runtime (PJRT)                 →  bulk kernel blocks from rust
+//!   Layer 3 (this binary)          →  seeded k-fold cross-validation
+//!
+//! It runs the paper's core experiment on the Adult analogue (n=2000,
+//! d=123, C=100, γ=0.5 — Table 2's row) twice: cold-start (the LibSVM
+//! baseline) and SIR-seeded, with the warm-start gradient and test-fold
+//! decision values served by the AOT artifacts when present, and prints
+//! the paper-style comparison. Recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example e2e_cv_driver
+
+use alphaseed::cv::{run_kfold, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::Kernel;
+use alphaseed::metrics::Table;
+use alphaseed::seeding::{ColdStart, Sir};
+use alphaseed::runtime::XlaBackend;
+
+fn main() {
+    let ds = synth::generate("adult", None, 42);
+    let (c, gamma, k) = (100.0, 0.5, 10);
+    let kernel = Kernel::rbf(gamma);
+    println!(
+        "end-to-end: {} (n={}, d={}, sparse={}), k={k}, C={c}, γ={gamma}",
+        ds.name,
+        ds.len(),
+        ds.dim(),
+        ds.x.is_sparse()
+    );
+
+    // Try the AOT artifact backend; fall back to native with a notice.
+    let dir = XlaBackend::default_dir();
+    let mut xla = match XlaBackend::load(&dir) {
+        Ok(b) => {
+            println!("PJRT backend: artifacts loaded from {dir:?}");
+            Some(b)
+        }
+        Err(e) => {
+            println!("PJRT backend unavailable ({e}); using native bulk path");
+            None
+        }
+    };
+
+    // Both variants run the SAME compute path (artifacts when available),
+    // so the accuracy comparison isolates the seeding algorithm — mixing
+    // f32 artifact decisions with f64 native ones would not be a fair
+    // parity check.
+    let cold = run_kfold(
+        &ds,
+        kernel,
+        c,
+        k,
+        &ColdStart,
+        CvOptions {
+            backend: xla
+                .as_mut()
+                .map(|b| b as &mut dyn alphaseed::runtime::ComputeBackend),
+            ..Default::default()
+        },
+    );
+    let sir = run_kfold(
+        &ds,
+        kernel,
+        c,
+        k,
+        &Sir,
+        CvOptions {
+            backend: xla
+                .as_mut()
+                .map(|b| b as &mut dyn alphaseed::runtime::ComputeBackend),
+            ..Default::default()
+        },
+    );
+
+    let mut t = Table::new("cold (LibSVM semantics) vs SIR-seeded, 10-fold CV").header(&[
+        "variant", "init(s)", "rest(s)", "total(s)", "iterations", "accuracy(%)",
+    ]);
+    for rep in [&cold, &sir] {
+        t.row(vec![
+            rep.seeder.clone(),
+            format!("{:.3}", rep.total_init().as_secs_f64()),
+            format!("{:.3}", rep.total_rest().as_secs_f64()),
+            format!("{:.3}", rep.total_elapsed().as_secs_f64()),
+            rep.total_iterations().to_string(),
+            format!("{:.2}", rep.accuracy() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    if let Some(b) = &xla {
+        println!(
+            "artifact calls: {} (compiles: {}, native fallbacks: {})",
+            b.stats.artifact_calls, b.stats.compiles, b.stats.native_fallbacks
+        );
+    }
+    let speedup = cold.total_elapsed().as_secs_f64() / sir.total_elapsed().as_secs_f64();
+    let iter_saving =
+        cold.total_iterations() as f64 / sir.total_iterations().max(1) as f64;
+    println!(
+        "SIR: {speedup:.2}x faster wall-clock, {iter_saving:.2}x fewer iterations, \
+         accuracy identical: {}",
+        cold.accuracy() == sir.accuracy()
+    );
+    assert_eq!(cold.accuracy(), sir.accuracy(), "accuracy must match");
+    assert!(sir.total_iterations() < cold.total_iterations());
+}

@@ -1,0 +1,77 @@
+"""AOT pipeline: lower every L2 graph x shape bucket to HLO text.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one `<op>_b<b>_n<n>_d<d>.hlo.txt` per bucket plus `manifest.json`,
+which `rust/src/runtime/manifest.rs` consumes. HLO **text** (never
+`.serialize()`): jax >= 0.5 writes HloModuleProto with 64-bit instruction
+ids that the rust crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
+DESIGN.md §2).
+
+Python runs only here, at build time. The output directory is the entire
+interface to the rust runtime.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(op: dict) -> str:
+    if op["op"] == "rbf_rows":
+        lowered = model.lower_kernel_rows(op["n"], op["d"], op["b"])
+    elif op["op"] == "rbf_matvec":
+        lowered = model.lower_kernel_matvec(op["n"], op["d"], op["b"])
+    else:
+        raise ValueError(f"unknown op {op['op']!r}")
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, buckets=None, quiet=False) -> dict:
+    """Lower all buckets into out_dir; returns the manifest dict."""
+    buckets = buckets if buckets is not None else model.default_buckets()
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for op in buckets:
+        fname = f"{op['op']}_b{op['b']}_n{op['n']}_d{op['d']}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = lower_bucket(op)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({**op, "file": fname})
+        if not quiet:
+            print(f"  {fname}  ({len(text)} chars)")
+    manifest = {"ops": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build(args.out, quiet=args.quiet)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

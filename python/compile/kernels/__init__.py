@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot (Gaussian kernel
+# blocks), plus pure-jnp oracles in ref.py.
+from .rbf_matvec import rbf_matvec
+from .rbf_rows import rbf_rows
+
+__all__ = ["rbf_rows", "rbf_matvec"]

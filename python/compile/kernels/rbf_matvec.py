@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: fused Gaussian-kernel matvec K(X, W) @ coef.
+
+Serves warm-start gradient initialisation (f_j = sum_i coef_i K(sv_i, x_j))
+and test-fold decision values from the rust coordinator. Fusing the matvec
+into the kernel tile avoids materialising the full [n, m] kernel block in
+HBM -- only the [TILE_N] partial result leaves VMEM per step.
+
+VMEM at the largest bucket (n=2048, m=2048, d=784, TILE_N=512):
+W 2048*784*4 = 6.4 MiB resident + X tile 1.6 MiB + K tile 512*2048*4 =
+4 MiB intermediate -- ~12 MiB, inside the 16 MiB budget (documented in
+DESIGN.md; larger m would need an m-tiled accumulation loop).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_rows import _tile_n
+
+
+def _rbf_matvec_kernel(x_ref, w_ref, c_ref, g_ref, o_ref):
+    """One grid step: K(X_tile, W) @ coef -> [TILE_N]."""
+    x = x_ref[...]                                        # [TILE_N, d]
+    w = w_ref[...]                                        # [m, d]
+    c = c_ref[...]                                        # [m]
+    g = g_ref[0]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)            # [TILE_N, 1]
+    wn = jnp.sum(w * w, axis=1)[None, :]                  # [1, m]
+    dot = jnp.dot(x, w.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xn + wn - 2.0 * dot, 0.0)
+    k = jnp.exp(-g * d2)                                  # [TILE_N, m]
+    o_ref[...] = jnp.dot(k, c, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rbf_matvec(x, w, coef, gamma):
+    """f_j = sum_i coef_i * K(w_i, x_j); see ref.rbf_matvec_ref."""
+    n, d = x.shape
+    m, d2 = w.shape
+    assert d == d2, f"width mismatch {d} vs {d2}"
+    assert coef.shape == (m,), f"coef shape {coef.shape} != ({m},)"
+    tile = _tile_n(n)
+    gamma = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _rbf_matvec_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),    # stream X tiles
+            pl.BlockSpec((m, d), lambda i: (0, 0)),       # W resident
+            pl.BlockSpec((m,), lambda i: (0,)),           # coef resident
+            pl.BlockSpec((1,), lambda i: (0,)),           # gamma
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, w, coef, gamma)

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: a block of Gaussian-kernel rows K(Q, X).
+
+TPU mapping of the paper's hot spot (DESIGN.md §Hardware-Adaptation):
+the paper's C++ solver computes kernel rows on a CPU with cache blocking;
+here the same computation is tiled for VMEM with the -2*Q@X^T inner
+product on the MXU (jnp.dot with f32 accumulation) and the norm/exp
+epilogue on the VPU.
+
+Tiling: the grid walks X in TILE_N-row tiles; the full query block Q stays
+resident. VMEM footprint per step at the largest bucket (b=128, d=784,
+TILE_N=512): Q 128*784*4 = 0.4 MiB, X tile 512*784*4 = 1.6 MiB, out tile
+128*512*4 = 0.25 MiB -- ~2.3 MiB of the ~16 MiB budget, leaving room for
+double buffering of the X stream.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; on a real TPU the same
+code compiles to Mosaic (compile-only target in this sandbox).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_rows_kernel(x_ref, q_ref, g_ref, o_ref):
+    """One grid step: K(Q, X_tile) -> [b, TILE_N]."""
+    x = x_ref[...]                                        # [TILE_N, d]
+    q = q_ref[...]                                        # [b, d]
+    g = g_ref[0]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)            # [b, 1]   (VPU)
+    xn = jnp.sum(x * x, axis=1)[None, :]                  # [1, TILE_N]
+    dot = jnp.dot(q, x.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(qn + xn - 2.0 * dot, 0.0)
+    o_ref[...] = jnp.exp(-g * d2)
+
+
+def _tile_n(n: int) -> int:
+    """Largest power-of-two tile <= 512 that divides n."""
+    for t in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rbf_rows(x, q, gamma):
+    """K(q_i, x_j) over the whole dataset block; see ref.rbf_rows_ref."""
+    n, d = x.shape
+    b, d2 = q.shape
+    assert d == d2, f"width mismatch {d} vs {d2}"
+    tile = _tile_n(n)
+    gamma = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _rbf_rows_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),    # stream X tiles
+            pl.BlockSpec((b, d), lambda i: (0, 0)),       # Q resident
+            pl.BlockSpec((1,), lambda i: (0,)),           # gamma
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, q, gamma)

@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernel implementations are tested against
+(pytest + hypothesis in python/tests/) and the shape/semantics contract the
+rust NativeBackend mirrors in f64.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_rows_ref(x, q, gamma):
+    """K(q_i, x_j) = exp(-gamma * ||q_i - x_j||^2).
+
+    Args:
+      x: [n, d] dataset block.
+      q: [b, d] query rows.
+      gamma: scalar or [1].
+    Returns:
+      [b, n] kernel block.
+    """
+    gamma = jnp.asarray(gamma).reshape(())
+    qn = jnp.sum(q * q, axis=1, keepdims=True)           # [b, 1]
+    xn = jnp.sum(x * x, axis=1)[None, :]                 # [1, n]
+    dot = q @ x.T                                        # [b, n]
+    d2 = jnp.maximum(qn + xn - 2.0 * dot, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def rbf_matvec_ref(x, w, coef, gamma):
+    """f_j = sum_i coef_i * K(w_i, x_j).
+
+    Args:
+      x: [n, d] evaluation rows.
+      w: [m, d] support vectors.
+      coef: [m] dual coefficients (y_i * alpha_i).
+      gamma: scalar or [1].
+    Returns:
+      [n] kernel matvec.
+    """
+    k = rbf_rows_ref(x, w, gamma)                        # [m, n]
+    return k.T @ coef

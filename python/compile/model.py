@@ -1,0 +1,70 @@
+"""Layer-2 JAX compute graphs.
+
+The paper's system has no neural model; its "model" is the SVM dual, whose
+bulk compute is Gaussian-kernel algebra. This module is the L2 composition
+layer: jax functions (calling the L1 Pallas kernels) that `aot.py` lowers
+to the HLO artifacts the rust coordinator executes at run time.
+
+Each graph is shape-monomorphic at lowering time — `aot.py` instantiates
+one artifact per shape bucket (see `default_buckets`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rbf_matvec, rbf_rows
+
+
+def kernel_rows(x, q, gamma):
+    """K(Q, X) block: [n,d], [b,d], [1] -> [b,n]. Pallas inside."""
+    return (rbf_rows(x, q, gamma),)
+
+
+def kernel_matvec(x, w, coef, gamma):
+    """K(X, W) @ coef: [n,d], [m,d], [m], [1] -> [n]. Pallas inside.
+
+    Used for warm-start gradient init (coef = y*alpha over SVs) and for
+    decision values (the rust side subtracts the bias b).
+    """
+    return (rbf_matvec(x, w, coef, gamma),)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_kernel_rows(n, d, b):
+    """jax.jit-lower kernel_rows for one (n, d, b) bucket."""
+    return jax.jit(kernel_rows).lower(
+        spec((n, d)), spec((b, d)), spec((1,))
+    )
+
+
+def lower_kernel_matvec(n, d, m):
+    """jax.jit-lower kernel_matvec for one (n, d, m) bucket."""
+    return jax.jit(kernel_matvec).lower(
+        spec((n, d)), spec((m, d)), spec((m,)), spec((1,))
+    )
+
+
+def default_buckets():
+    """Shape buckets covering the five paper-dataset analogues at their
+    sandbox-default sizes plus a tiny smoke bucket for tests.
+
+    (name, padded_n, padded_d): adult (2000,123)->(2048,128),
+    heart (270,13)->(512,16), madelon (600,500)->(1024,512),
+    mnist (1200,780)->(2048,784), webdata (2000,300)->(2048,304).
+    """
+    pairs = [
+        (512, 16),     # heart
+        (2048, 128),   # adult
+        (1024, 512),   # madelon
+        (2048, 784),   # mnist
+        (2048, 304),   # webdata
+        (64, 8),       # smoke/test bucket
+    ]
+    ops = []
+    for (n, d) in pairs:
+        ops.append({"op": "rbf_rows", "b": 128 if n > 64 else 16, "n": n, "d": d})
+        ops.append({"op": "rbf_matvec", "b": n, "n": n, "d": d})
+    return ops

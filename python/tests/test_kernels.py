@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+hypothesis sweeps shapes; every case asserts allclose against ref.py.
+This is the CORE correctness signal for the compute layer — the rust
+NativeBackend mirrors the same contract in f64 and the AOT artifacts are
+lowered from exactly these functions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rbf_matvec, rbf_rows
+from compile.kernels.ref import rbf_matvec_ref, rbf_rows_ref
+
+# hypothesis-friendly dims: keep cases small, interpret mode is slow
+dims = st.integers(min_value=1, max_value=24)
+rows = st.integers(min_value=1, max_value=48)
+batch = st.integers(min_value=1, max_value=12)
+gammas = st.floats(min_value=1e-3, max_value=8.0, allow_nan=False)
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=rows, d=dims, b=batch, gamma=gammas, seed=st.integers(0, 2**16))
+def test_rbf_rows_matches_ref(n, d, b, gamma, seed):
+    x = _rand((n, d), seed)
+    q = _rand((b, d), seed + 1)
+    got = rbf_rows(x, q, jnp.float32(gamma))
+    want = rbf_rows_ref(x, q, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=rows, d=dims, m=batch, gamma=gammas, seed=st.integers(0, 2**16))
+def test_rbf_matvec_matches_ref(n, d, m, gamma, seed):
+    x = _rand((n, d), seed)
+    w = _rand((m, d), seed + 1)
+    coef = _rand((m,), seed + 2)
+    got = rbf_matvec(x, w, coef, jnp.float32(gamma))
+    want = rbf_matvec_ref(x, w, coef, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_self_similarity_is_one():
+    x = _rand((8, 5), 0)
+    k = rbf_rows(x, x, jnp.float32(0.7))
+    np.testing.assert_allclose(np.diag(k), np.ones(8), rtol=1e-6)
+
+
+def test_symmetry():
+    x = _rand((16, 6), 3)
+    k = np.asarray(rbf_rows(x, x, jnp.float32(0.3)))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-7)
+
+
+def test_kernel_values_in_unit_interval():
+    x = _rand((32, 7), 5) * 10.0
+    q = _rand((4, 7), 6) * 10.0
+    k = np.asarray(rbf_rows(x, q, jnp.float32(2.0)))
+    assert (k >= 0.0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_gamma_zero_gives_all_ones():
+    x = _rand((8, 3), 7)
+    q = _rand((2, 3), 8)
+    k = np.asarray(rbf_rows(x, q, jnp.float32(0.0)))
+    np.testing.assert_allclose(k, np.ones_like(k), rtol=1e-7)
+
+
+def test_large_gamma_vanishes_off_diagonal():
+    x = _rand((6, 4), 9)
+    k = np.asarray(rbf_rows(x, x, jnp.float32(1e4)))
+    off = k - np.diag(np.diag(k))
+    assert off.max() < 1e-6
+
+
+def test_matvec_zero_coef_gives_zero():
+    x = _rand((16, 5), 10)
+    w = _rand((4, 5), 11)
+    out = np.asarray(rbf_matvec(x, w, np.zeros(4, np.float32), jnp.float32(0.5)))
+    np.testing.assert_allclose(out, np.zeros(16), atol=1e-8)
+
+
+def test_matvec_padding_invariance():
+    """Zero-padded features & zero coefs must not change the result —
+    the property the rust XLA backend's bucket padding relies on."""
+    x = _rand((16, 5), 12)
+    w = _rand((4, 5), 13)
+    coef = _rand((4,), 14)
+    base = np.asarray(rbf_matvec(x, w, coef, jnp.float32(0.5)))
+
+    xp = np.zeros((16, 8), np.float32)
+    xp[:, :5] = x
+    wp = np.zeros((6, 8), np.float32)
+    wp[:4, :5] = w
+    cp = np.zeros((6,), np.float32)
+    cp[:4] = coef
+    padded = np.asarray(rbf_matvec(xp, wp, cp, jnp.float32(0.5)))
+    np.testing.assert_allclose(padded, base, rtol=1e-5, atol=1e-6)
+
+
+def test_rows_padding_invariance():
+    x = _rand((16, 5), 15)
+    q = _rand((3, 5), 16)
+    base = np.asarray(rbf_rows(x, q, jnp.float32(0.3)))
+    xp = np.zeros((24, 8), np.float32)
+    xp[:16, :5] = x
+    qp = np.zeros((4, 8), np.float32)
+    qp[:3, :5] = q
+    padded = np.asarray(rbf_rows(xp, qp, jnp.float32(0.3)))
+    np.testing.assert_allclose(padded[:3, :16], base, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,tile", [(512, 512), (64, 64), (96, 32), (100, 4)])
+def test_tile_selection(n, tile):
+    from compile.kernels.rbf_rows import _tile_n
+
+    assert _tile_n(n) == tile
+    assert n % _tile_n(n) == 0

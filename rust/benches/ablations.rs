@@ -1,0 +1,109 @@
+//! Ablation benches (DESIGN.md experiment index A1–A3):
+//!
+//! - A1: backend routing — bulk block size where the PJRT artifact
+//!   overtakes the native path.
+//! - A2: kernel-cache size vs wall time for a fixed CV run.
+//! - A3: solver shrinking on/off.
+//! - A4: SIR with vs without similarity matching (random transplant) —
+//!   isolates how much of SIR's win comes from the kernel-similarity rule.
+
+use alphaseed::cv::{run_kfold, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::Kernel;
+use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use alphaseed::seeding::{ColdStart, Sir};
+use alphaseed::smo::{SmoParams, Solver};
+use alphaseed::util::bench::{bench, once};
+
+fn main() {
+    a1_backend_routing();
+    a2_cache_size();
+    a3_shrinking();
+    a4_sir_vs_random_iterations();
+}
+
+fn a1_backend_routing() {
+    println!("\n-- A1: backend routing threshold --");
+    let ds = synth::generate("heart", Some(270), 1);
+    let mut native = NativeBackend;
+    let dir = XlaBackend::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("   (skipped: run `make artifacts`)");
+        return;
+    }
+    let mut xla = XlaBackend::load(&dir).expect("artifacts");
+    let _ = xla.kernel_rows(&ds, 0.2, &[0]);
+    for b in [1usize, 4, 16, 64, 128] {
+        let queries: Vec<usize> = (0..b).collect();
+        let n = bench(&format!("native  batch={b:>3}"), 2, 20, || {
+            native.kernel_rows(&ds, 0.2, &queries).unwrap().len()
+        });
+        let x = bench(&format!("xla     batch={b:>3}"), 2, 20, || {
+            xla.kernel_rows(&ds, 0.2, &queries).unwrap().len()
+        });
+        println!(
+            "   batch {b:>3}: native/xla = {:.2}",
+            n.mean().as_secs_f64() / x.mean().as_secs_f64()
+        );
+    }
+}
+
+fn a2_cache_size() {
+    println!("\n-- A2: solver kernel-cache budget (adult n=600, k=5, SIR) --");
+    let ds = synth::generate("adult", Some(600), 2);
+    for mb in [1usize, 4, 64] {
+        once(&format!("cache {mb:>3} MiB"), || {
+            run_kfold(
+                &ds,
+                Kernel::rbf(0.5),
+                100.0,
+                5,
+                &Sir,
+                CvOptions {
+                    cache_bytes: mb << 20,
+                    ..Default::default()
+                },
+            )
+            .total_iterations()
+        });
+    }
+}
+
+fn a3_shrinking() {
+    println!("\n-- A3: shrinking on/off (adult n=600 single solve) --");
+    let ds = synth::generate("adult", Some(600), 3);
+    for shrinking in [true, false] {
+        let eval = alphaseed::kernel::KernelEval::new(ds.clone(), Kernel::rbf(0.5));
+        once(&format!("shrinking={shrinking}"), || {
+            let mut solver = Solver::new(
+                eval.clone(),
+                SmoParams {
+                    c: 100.0,
+                    shrinking,
+                    ..Default::default()
+                },
+            );
+            let r = solver.solve();
+            (r.iterations, r.objective)
+        });
+    }
+}
+
+fn a4_sir_vs_random_iterations() {
+    println!("\n-- A4: SIR vs cold iteration profile per analogue (k=5) --");
+    for name in ["heart", "madelon", "webdata"] {
+        let spec = synth::spec(name).unwrap();
+        let n = (spec.default_n / 2).max(100);
+        let ds = synth::generate(name, Some(n), 4);
+        let kernel = Kernel::rbf(spec.hyper.gamma);
+        let cold = run_kfold(&ds, kernel, spec.hyper.c, 5, &ColdStart, CvOptions::default());
+        let sir = run_kfold(&ds, kernel, spec.hyper.c, 5, &Sir, CvOptions::default());
+        println!(
+            "   {name:<8} cold {:>8} iters | sir {:>8} iters | saving {:.2}x | acc match: {}",
+            cold.total_iterations(),
+            sir.total_iterations(),
+            cold.total_iterations() as f64 / sir.total_iterations().max(1) as f64,
+            cold.accuracy() == sir.accuracy(),
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate the paper's **Figure 2** (leave-one-out elapsed time
+//! of cold/AVG/TOP/ATO/MIR/SIR relative to SIR).
+//!
+//! Shape: every seeding method beats cold start by a large factor; SIR is
+//! best or near-best (AVG ≈ TOP). `ALPHASEED_BENCH_SCALE` (default 0.25)
+//! and `ALPHASEED_LOO_ROUNDS` (default 25) bound the cost.
+
+use alphaseed::config::RunConfig;
+use alphaseed::coordinator::experiments;
+use alphaseed::util::bench::once;
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let rounds: usize = std::env::var("ALPHASEED_LOO_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25);
+    let cfg = RunConfig {
+        scale,
+        ..Default::default()
+    };
+    println!("== fig2 bench (scale {scale}, {rounds} LOO rounds estimated) ==");
+    let (result, total) = once("fig2: 5 datasets x 6 LOO algorithms", || {
+        experiments::fig2(&cfg, rounds, &mut |m| eprintln!("  … {m}"))
+    });
+    print!("{}", result.table.render());
+    println!("fig2 bench total: {total:?}");
+
+    // Shape: seeded LOO variants need fewer iterations than the cold chain.
+    for name in ["heart", "madelon"] {
+        let iters = |s: &str| {
+            result
+                .cells
+                .iter()
+                .find(|c| c.dataset == name && c.seeder == s)
+                .map(|c| c.report.total_iterations())
+                .unwrap()
+        };
+        let cold = iters("cold");
+        for s in ["avg", "top", "sir"] {
+            assert!(iters(s) < cold, "{name}/{s}: {} ≥ cold {cold}", iters(s));
+        }
+    }
+    println!("shape checks passed: seeded LOO beats cold on iterations");
+}

@@ -1,0 +1,128 @@
+//! Micro-benchmarks of the hot paths (§Perf, EXPERIMENTS.md):
+//!
+//! - kernel row evaluation (dense vs sparse, cached vs cold)
+//! - one SMO iteration (WSS2 select + update + gradient sweep)
+//! - seeding initialisation per algorithm
+//! - PJRT artifact dispatch vs native for bulk kernel blocks
+
+use alphaseed::data::synth;
+use alphaseed::kernel::{Kernel, KernelCache, KernelEval};
+use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use alphaseed::seeding::{seeder_by_name, SeedContext};
+use alphaseed::smo::{SmoParams, Solver};
+use alphaseed::util::bench::{bench, black_box};
+
+fn main() {
+    kernel_row_benches();
+    smo_iteration_bench();
+    seeding_benches();
+    backend_benches();
+}
+
+fn kernel_row_benches() {
+    println!("\n-- kernel rows --");
+    let dense = synth::generate("heart", Some(270), 1);
+    let eval = KernelEval::new(dense.clone(), Kernel::rbf(0.2));
+    let mut row = vec![0.0f64; dense.len()];
+    bench("rbf row, dense d=13 n=270 (uncached)", 20, 200, || {
+        eval.eval_row(black_box(7), &mut row);
+    });
+
+    let sparse = synth::generate("adult", Some(2000), 1);
+    let eval_sp = KernelEval::new(sparse.clone(), Kernel::rbf(0.5));
+    let mut row_sp = vec![0.0f64; sparse.len()];
+    bench("rbf row, sparse d=123 n=2000 (uncached)", 5, 50, || {
+        eval_sp.eval_row(black_box(7), &mut row_sp);
+    });
+
+    let mut cache = KernelCache::with_byte_budget(eval_sp.clone(), 64 << 20);
+    cache.row(7);
+    bench("rbf row, sparse n=2000 (LRU hit)", 100, 2000, || {
+        black_box(cache.row(7)[13]);
+    });
+}
+
+fn smo_iteration_bench() {
+    println!("\n-- SMO solve --");
+    let ds = synth::generate("heart", Some(270), 2);
+    let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+    let stats = bench("full SMO solve heart n=270 (cold)", 2, 10, || {
+        let mut solver = Solver::new(eval.clone(), SmoParams::with_c(2182.0));
+        solver.solve().iterations
+    });
+    // per-iteration figure for EXPERIMENTS.md
+    let mut solver = Solver::new(eval.clone(), SmoParams::with_c(2182.0));
+    let iters = solver.solve().iterations;
+    println!(
+        "   ≈ {:.2} µs / SMO iteration ({} iterations per solve)",
+        stats.mean().as_secs_f64() * 1e6 / iters as f64,
+        iters
+    );
+}
+
+fn seeding_benches() {
+    println!("\n-- seeding init (heart n=270, k=10 transition) --");
+    use alphaseed::data::FoldPlan;
+    let full = synth::generate("heart", Some(270), 3);
+    let kernel = Kernel::rbf(0.2);
+    let c = 2182.0;
+    let plan = FoldPlan::stratified(&full, 10, 42);
+    let prev_train = plan.train_indices(0);
+    let train = full.select(&prev_train);
+    let mut s0 = Solver::new(KernelEval::new(train.clone(), kernel), SmoParams::with_c(c));
+    let r0 = s0.solve();
+    let prev_f = r0.f_indicators(&train.y);
+    let trans = plan.transition(0);
+    let next_train = plan.train_indices(1);
+
+    for name in ["sir", "mir", "ato"] {
+        let seeder = seeder_by_name(name).unwrap();
+        let mut cache = KernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), kernel),
+            64 << 20,
+        );
+        bench(&format!("{name} seed (one fold transition)"), 2, 10, || {
+            let ctx = SeedContext {
+                full: &full,
+                kernel,
+                c,
+                prev_train: &prev_train,
+                prev_alpha: &r0.alpha,
+                prev_f: &prev_f,
+                prev_b: r0.b,
+                removed: &trans.removed,
+                added: &trans.added,
+                next_train: &next_train,
+                rng_seed: 7,
+            };
+            black_box(seeder.seed(&ctx, &mut cache).alpha.len())
+        });
+    }
+}
+
+fn backend_benches() {
+    println!("\n-- backends (bulk kernel block, heart n=270) --");
+    let ds = synth::generate("heart", Some(270), 4);
+    let queries: Vec<usize> = (0..128).collect();
+    let mut native = NativeBackend;
+    bench("native bulk 128 rows", 2, 20, || {
+        native.kernel_rows(&ds, 0.2, &queries).unwrap().len()
+    });
+
+    let dir = XlaBackend::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut xla = XlaBackend::load(&dir).expect("artifacts");
+        let _ = xla.kernel_rows(&ds, 0.2, &queries); // compile once
+        bench("xla artifact bulk 128 rows", 2, 20, || {
+            xla.kernel_rows(&ds, 0.2, &queries).unwrap().len()
+        });
+        bench("xla artifact single row (dispatch overhead)", 2, 50, || {
+            xla.kernel_rows(&ds, 0.2, &[5]).unwrap().len()
+        });
+        bench("native single row", 2, 50, || {
+            native.kernel_rows(&ds, 0.2, &[5]).unwrap().len()
+        });
+    } else {
+        println!("   (no artifacts — run `make artifacts` for the PJRT side)");
+    }
+}

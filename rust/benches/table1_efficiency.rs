@@ -1,0 +1,47 @@
+//! Bench: regenerate the paper's **Table 1** (efficiency at k = 10).
+//!
+//! Runs the full dataset × {cold, ato, mir, sir} grid at a bench-friendly
+//! scale and prints the paper-shaped table. Scale via
+//! `ALPHASEED_BENCH_SCALE` (default 0.25 of the sandbox defaults; the
+//! EXPERIMENTS.md record uses `alphaseed experiment table1` at scale 1.0).
+
+use alphaseed::config::RunConfig;
+use alphaseed::coordinator::experiments;
+use alphaseed::util::bench::once;
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let cfg = RunConfig {
+        scale,
+        ..Default::default()
+    };
+    println!("== table1 bench (scale {scale}) ==");
+    let (result, total) = once("table1: 5 datasets x 4 seeders, k=10", || {
+        experiments::table1(&cfg, &mut |m| eprintln!("  … {m}"))
+    });
+    print!("{}", result.table.render());
+    println!("table1 bench total: {total:?}");
+
+    // Shape assertions — who wins, as in the paper.
+    for name in ["adult", "heart", "madelon", "webdata", "mnist"] {
+        let get = |s: &str| {
+            result
+                .cells
+                .iter()
+                .find(|c| c.dataset == name && c.seeder == s)
+                .expect("cell")
+        };
+        let cold = get("cold").report.total_iterations();
+        let sir = get("sir").report.total_iterations();
+        assert!(
+            sir <= cold,
+            "{name}: SIR iterations {sir} exceed cold {cold}"
+        );
+        let acc_diff = (get("cold").report.accuracy() - get("sir").report.accuracy()).abs();
+        assert!(acc_diff < 1e-9, "{name}: accuracy diverged by {acc_diff}");
+    }
+    println!("shape checks passed: SIR ≤ cold iterations and identical accuracy on all datasets");
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate the paper's **Table 3** (effect of k ∈ {3,10,100}).
+//!
+//! The headline shape: SIR's speedup over cold start *grows with k*
+//! (paper: ~1.1× at k=3 up to ~32× at k=100 on Madelon).
+//! `ALPHASEED_BENCH_SCALE` scales dataset sizes (default 0.25).
+
+use alphaseed::config::RunConfig;
+use alphaseed::coordinator::experiments;
+use alphaseed::util::bench::once;
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let cfg = RunConfig {
+        scale,
+        ..Default::default()
+    };
+    let ks = [3usize, 10, 100];
+    println!("== table3 bench (scale {scale}, k = {ks:?}) ==");
+    let (result, total) = once("table3: 5 datasets x cold/sir x 3 k-values", || {
+        experiments::table3(&cfg, &ks, &mut |m| eprintln!("  … {m}"))
+    });
+    print!("{}", result.table.render());
+    println!("table3 bench total: {total:?}");
+
+    // Shape: on madelon (the paper's best case) the speedup grows with k.
+    let speedup = |k: usize| {
+        let cold = result
+            .cells
+            .iter()
+            .find(|c| c.dataset == "madelon" && c.seeder == "cold" && c.k == k)
+            .unwrap();
+        let sir = result
+            .cells
+            .iter()
+            .find(|c| c.dataset == "madelon" && c.seeder == "sir" && c.k == k)
+            .unwrap();
+        cold.report.extrapolated_elapsed(k).as_secs_f64()
+            / sir.report.extrapolated_elapsed(k).as_secs_f64().max(1e-9)
+    };
+    let (s3, s10, s100) = (speedup(3), speedup(10), speedup(100));
+    println!("madelon speedups: k=3 {s3:.2}x, k=10 {s10:.2}x, k=100 {s100:.2}x");
+    assert!(s100 > s3, "speedup should grow with k: {s3:.2} → {s100:.2}");
+}

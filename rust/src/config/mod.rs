@@ -1,0 +1,208 @@
+//! Experiment configuration: JSON config files + CLI overrides.
+//!
+//! A config file fixes a whole experiment suite (which datasets, sizes,
+//! hyper-parameters, seeders, k values); the CLI can override any scalar.
+//! JSON is used because the in-repo parser (`util::json`) already exists —
+//! see DESIGN.md §4 on the offline-registry substitutions.
+
+use crate::data::synth::{paper_datasets, Hyper};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-dataset experiment settings.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    pub name: String,
+    /// Cardinality (None → the analogue's sandbox default).
+    pub n: Option<usize>,
+    pub hyper: Hyper,
+}
+
+/// A full experiment suite configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub datasets: Vec<DatasetConfig>,
+    pub seeders: Vec<String>,
+    pub k: usize,
+    pub eps: f64,
+    pub rng_seed: u64,
+    /// Scale factor applied to every dataset's default n (quick runs).
+    pub scale: f64,
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            datasets: paper_datasets()
+                .into_iter()
+                .map(|s| DatasetConfig {
+                    name: s.name.to_string(),
+                    n: None,
+                    hyper: s.hyper,
+                })
+                .collect(),
+            seeders: crate::seeding::ALL_SEEDERS.iter().map(|s| s.to_string()).collect(),
+            k: 10,
+            eps: 1e-3,
+            rng_seed: 42,
+            scale: 1.0,
+            threads: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; missing keys fall back to defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<RunConfig> {
+        let root = Json::parse(text).context("config is not valid JSON")?;
+        let mut cfg = RunConfig::default();
+        if let Some(k) = root.get("k").and_then(Json::as_usize) {
+            cfg.k = k;
+        }
+        if let Some(eps) = root.get("eps").and_then(Json::as_f64) {
+            cfg.eps = eps;
+        }
+        if let Some(seed) = root.get("rng_seed").and_then(Json::as_f64) {
+            cfg.rng_seed = seed as u64;
+        }
+        if let Some(scale) = root.get("scale").and_then(Json::as_f64) {
+            cfg.scale = scale;
+        }
+        if let Some(threads) = root.get("threads").and_then(Json::as_usize) {
+            cfg.threads = threads;
+        }
+        if let Some(seeders) = root.get("seeders").and_then(Json::as_arr) {
+            cfg.seeders = seeders
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect();
+            anyhow::ensure!(!cfg.seeders.is_empty(), "'seeders' must not be empty");
+        }
+        if let Some(datasets) = root.get("datasets").and_then(Json::as_arr) {
+            let mut list = Vec::new();
+            for (i, d) in datasets.iter().enumerate() {
+                let name = d
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("datasets[{i}] missing 'name'"))?
+                    .to_string();
+                let spec = crate::data::synth::spec(&name)
+                    .with_context(|| format!("unknown dataset '{name}'"))?;
+                let hyper = Hyper {
+                    c: d.get("c").and_then(Json::as_f64).unwrap_or(spec.hyper.c),
+                    gamma: d
+                        .get("gamma")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(spec.hyper.gamma),
+                };
+                list.push(DatasetConfig {
+                    name,
+                    n: d.get("n").and_then(Json::as_usize),
+                    hyper,
+                });
+            }
+            anyhow::ensure!(!list.is_empty(), "'datasets' must not be empty");
+            cfg.datasets = list;
+        }
+        Ok(cfg)
+    }
+
+    /// Effective cardinality for a dataset entry after `scale`.
+    pub fn effective_n(&self, d: &DatasetConfig) -> usize {
+        let base = d
+            .n
+            .unwrap_or_else(|| crate::data::synth::spec(&d.name).expect("spec").default_n);
+        ((base as f64 * self.scale).round() as usize).max(30)
+    }
+
+    /// Serialise (for `results/*.json` reproducibility stamps).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::num(self.k as f64)),
+            ("eps", Json::num(self.eps)),
+            ("rng_seed", Json::num(self.rng_seed as f64)),
+            ("scale", Json::num(self.scale)),
+            ("threads", Json::num(self.threads as f64)),
+            (
+                "seeders",
+                Json::arr(self.seeders.iter().map(|s| Json::str(s.clone()))),
+            ),
+            (
+                "datasets",
+                Json::arr(self.datasets.iter().map(|d| {
+                    Json::obj(vec![
+                        ("name", Json::str(d.name.clone())),
+                        (
+                            "n",
+                            d.n.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("c", Json::num(d.hyper.c)),
+                        ("gamma", Json::num(d.hyper.gamma)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_paper_datasets() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.datasets.len(), 5);
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.seeders, vec!["cold", "ato", "mir", "sir"]);
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let cfg = RunConfig::parse(
+            r#"{
+              "k": 5, "scale": 0.5, "seeders": ["cold", "sir"],
+              "datasets": [{"name": "heart", "n": 100, "c": 10.0}]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.k, 5);
+        assert_eq!(cfg.seeders, vec!["cold", "sir"]);
+        assert_eq!(cfg.datasets.len(), 1);
+        assert_eq!(cfg.datasets[0].hyper.c, 10.0);
+        // gamma falls back to the spec default
+        assert_eq!(cfg.datasets[0].hyper.gamma, 0.2);
+        assert_eq!(cfg.effective_n(&cfg.datasets[0]), 50);
+    }
+
+    #[test]
+    fn rejects_unknown_dataset() {
+        assert!(RunConfig::parse(r#"{"datasets":[{"name":"nope"}]}"#).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let cfg = RunConfig::default();
+        let text = cfg.to_json().to_string_pretty();
+        let cfg2 = RunConfig::parse(&text).unwrap();
+        assert_eq!(cfg2.k, cfg.k);
+        assert_eq!(cfg2.datasets.len(), cfg.datasets.len());
+        assert_eq!(cfg2.seeders, cfg.seeders);
+    }
+
+    #[test]
+    fn scale_floors_at_30() {
+        let mut cfg = RunConfig::default();
+        cfg.scale = 0.001;
+        let d = cfg.datasets[1].clone(); // heart, n=270
+        assert_eq!(cfg.effective_n(&d), 30);
+    }
+}

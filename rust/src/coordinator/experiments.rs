@@ -1,0 +1,347 @@
+//! Paper-experiment drivers: regenerate every table and figure of the
+//! evaluation section. Shared between the CLI (`alphaseed experiment …`)
+//! and the bench targets.
+//!
+//! | fn | reproduces |
+//! |----|------------|
+//! | [`table1`] | Table 1 — efficiency at k = 10 (init / rest / iterations / accuracy) |
+//! | [`table2`] | Table 2 — dataset & hyper-parameter inventory |
+//! | [`table3`] | Table 3 — total elapsed vs k ∈ {3, 10, 100} |
+//! | [`fig2`]   | Figure 2 — LOO elapsed time relative to SIR |
+
+use super::jobs::{run_one, JobSpec};
+use crate::config::RunConfig;
+use crate::cv::CvReport;
+use crate::metrics::Table;
+use crate::util::json::Json;
+use crate::util::timing::fmt_secs;
+
+/// One (dataset × seeder) cell of an experiment, with its full report.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: String,
+    pub seeder: String,
+    pub k: usize,
+    pub report: CvReport,
+}
+
+fn run_cell(cfg: &RunConfig, di: usize, seeder: &str, k: usize, max_rounds: Option<usize>) -> Cell {
+    let d = &cfg.datasets[di];
+    let n = cfg.effective_n(d);
+    // k cannot exceed the (possibly scaled-down) cardinality; clamping
+    // turns k = n into leave-one-out, the natural limit.
+    let k = k.min(n);
+    let spec = JobSpec {
+        dataset: d.name.clone(),
+        n: Some(n),
+        c: d.hyper.c,
+        gamma: d.hyper.gamma,
+        seeder: seeder.to_string(),
+        k,
+        max_rounds,
+        rng_seed: cfg.rng_seed,
+    };
+    let report = run_one(&spec, None);
+    Cell {
+        dataset: d.name.clone(),
+        seeder: seeder.to_string(),
+        k,
+        report,
+    }
+}
+
+/// Experiment output: rendered table + machine-readable cells.
+pub struct ExperimentResult {
+    pub table: Table,
+    pub cells: Vec<Cell>,
+}
+
+impl ExperimentResult {
+    /// JSON dump for results/<name>.json.
+    pub fn to_json(&self, cfg: &RunConfig) -> Json {
+        Json::obj(vec![
+            ("config", cfg.to_json()),
+            (
+                "cells",
+                Json::arr(self.cells.iter().map(|c| {
+                    Json::obj(vec![
+                        ("dataset", Json::str(c.dataset.clone())),
+                        ("seeder", Json::str(c.seeder.clone())),
+                        ("k", Json::num(c.k as f64)),
+                        ("init_secs", Json::num(c.report.total_init().as_secs_f64())),
+                        ("rest_secs", Json::num(c.report.total_rest().as_secs_f64())),
+                        (
+                            "elapsed_secs",
+                            Json::num(c.report.total_elapsed().as_secs_f64()),
+                        ),
+                        (
+                            "extrapolated_secs",
+                            Json::num(c.report.extrapolated_elapsed(c.k).as_secs_f64()),
+                        ),
+                        ("iterations", Json::num(c.report.total_iterations() as f64)),
+                        ("accuracy", Json::num(c.report.accuracy())),
+                        ("fallbacks", Json::num(c.report.fallbacks() as f64)),
+                        ("rounds_run", Json::num(c.report.rounds.len() as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Table 1: efficiency comparison at k = 10. One row per dataset; columns
+/// mirror the paper (cold elapsed; ATO/MIR/SIR init + rest; iterations per
+/// algorithm; accuracy cold vs SIR).
+pub fn table1(cfg: &RunConfig, progress: &mut dyn FnMut(&str)) -> ExperimentResult {
+    let seeders = &cfg.seeders;
+    let mut cells = Vec::new();
+    for di in 0..cfg.datasets.len() {
+        for seeder in seeders {
+            progress(&format!("table1: {} / {seeder}", cfg.datasets[di].name));
+            cells.push(run_cell(cfg, di, seeder, cfg.k, None));
+        }
+    }
+
+    let mut header: Vec<String> = vec!["Dataset".into(), "cold(s)".into()];
+    for s in seeders.iter().filter(|s| *s != "cold") {
+        header.push(format!("{s} init(s)"));
+        header.push(format!("{s} rest(s)"));
+    }
+    for s in seeders {
+        header.push(format!("iters {s}"));
+    }
+    header.push("acc cold(%)".into());
+    header.push("acc sir(%)".into());
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table =
+        Table::new(format!("Table 1: efficiency comparison (k = {})", cfg.k)).header(&header_refs);
+
+    for di in 0..cfg.datasets.len() {
+        let name = &cfg.datasets[di].name;
+        let cell = |s: &str| -> &Cell {
+            cells
+                .iter()
+                .find(|c| &c.dataset == name && c.seeder == s)
+                .expect("cell")
+        };
+        let mut row = vec![name.clone()];
+        row.push(fmt_secs(cell("cold").report.total_elapsed()));
+        for s in seeders.iter().filter(|s| *s != "cold") {
+            row.push(fmt_secs(cell(s).report.total_init()));
+            row.push(fmt_secs(cell(s).report.total_rest()));
+        }
+        for s in seeders {
+            row.push(cell(s).report.total_iterations().to_string());
+        }
+        row.push(format!("{:.2}", cell("cold").report.accuracy() * 100.0));
+        let acc_seeded = seeders
+            .iter()
+            .rev()
+            .find(|s| *s != "cold")
+            .map(|s| cell(s).report.accuracy())
+            .unwrap_or(cell("cold").report.accuracy());
+        row.push(format!("{:.2}", acc_seeded * 100.0));
+        table.row(row);
+    }
+    ExperimentResult { table, cells }
+}
+
+/// Table 2: dataset inventory (the analogues actually generated).
+pub fn table2(cfg: &RunConfig) -> ExperimentResult {
+    let mut table = Table::new("Table 2: datasets and kernel parameters").header(&[
+        "Dataset",
+        "Cardinality",
+        "(paper)",
+        "Dimension",
+        "C",
+        "gamma",
+        "pos%",
+        "storage",
+    ]);
+    for d in &cfg.datasets {
+        let spec = crate::data::synth::spec(&d.name).expect("spec");
+        let n = cfg.effective_n(d);
+        let ds = crate::data::synth::generate(&d.name, Some(n), cfg.rng_seed);
+        table.row(vec![
+            d.name.clone(),
+            n.to_string(),
+            spec.paper_n.to_string(),
+            ds.dim().to_string(),
+            format!("{}", d.hyper.c),
+            format!("{}", d.hyper.gamma),
+            format!("{:.0}", 100.0 * ds.positives() as f64 / ds.len() as f64),
+            if ds.x.is_sparse() { "CSR" } else { "dense" }.to_string(),
+        ]);
+    }
+    ExperimentResult {
+        table,
+        cells: Vec::new(),
+    }
+}
+
+/// Table 3: effect of k on total elapsed time, cold vs SIR.
+///
+/// Expensive configurations (k = 100 on large sets) run a round prefix and
+/// extrapolate — the paper's own protocol for MNIST at k = 100.
+pub fn table3(cfg: &RunConfig, ks: &[usize], progress: &mut dyn FnMut(&str)) -> ExperimentResult {
+    let mut cells = Vec::new();
+    let mut header: Vec<String> = vec!["Dataset".into()];
+    for &k in ks {
+        header.push(format!("k={k} cold(s)"));
+        header.push(format!("k={k} SIR(s)"));
+        header.push(format!("k={k} speedup"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new("Table 3: effect of k on total elapsed time").header(&header_refs);
+
+    for di in 0..cfg.datasets.len() {
+        let name = cfg.datasets[di].name.clone();
+        let n = cfg.effective_n(&cfg.datasets[di]);
+        let mut row = vec![name.clone()];
+        for &k in ks {
+            // prefix-estimate when the full sweep would be k·n solves on a
+            // large analogue (paper: "only ran the first 30 rounds")
+            let max_rounds = if k > 30 && n > 800 { Some(25) } else { None };
+            progress(&format!("table3: {name} k={k} cold"));
+            let cold = run_cell(cfg, di, "cold", k, max_rounds);
+            progress(&format!("table3: {name} k={k} sir"));
+            let sir = run_cell(cfg, di, "sir", k, max_rounds);
+            let k_eff = k.min(n);
+            let ct = cold.report.extrapolated_elapsed(k_eff);
+            let st = sir.report.extrapolated_elapsed(k_eff);
+            row.push(fmt_secs(ct));
+            row.push(fmt_secs(st));
+            row.push(format!(
+                "{:.1}x",
+                ct.as_secs_f64() / st.as_secs_f64().max(1e-9)
+            ));
+            cells.push(cold);
+            cells.push(sir);
+        }
+        table.row(row);
+    }
+    ExperimentResult { table, cells }
+}
+
+/// Figure 2: leave-one-out elapsed time, reported (like the paper) as the
+/// ratio of each algorithm's total time to SIR's.
+pub fn fig2(
+    cfg: &RunConfig,
+    max_rounds: usize,
+    progress: &mut dyn FnMut(&str),
+) -> ExperimentResult {
+    let seeders = crate::seeding::LOO_SEEDERS;
+    let mut cells = Vec::new();
+    let mut header: Vec<String> = vec!["Dataset".into()];
+    for s in seeders {
+        header.push(format!("{s} (xSIR)"));
+    }
+    header.push("SIR est total(s)".into());
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(format!(
+        "Figure 2: LOO elapsed time relative to SIR (first {max_rounds} rounds estimated)"
+    ))
+    .header(&header_refs);
+
+    for di in 0..cfg.datasets.len() {
+        let name = cfg.datasets[di].name.clone();
+        let n = cfg.effective_n(&cfg.datasets[di]);
+        let rounds = max_rounds.min(n);
+        let mut times = Vec::new();
+        for s in seeders {
+            progress(&format!("fig2: {name} / {s}"));
+            let spec = JobSpec {
+                dataset: name.clone(),
+                n: Some(n),
+                c: cfg.datasets[di].hyper.c,
+                gamma: cfg.datasets[di].hyper.gamma,
+                seeder: s.to_string(),
+                k: 0, // LOO
+                max_rounds: Some(rounds),
+                rng_seed: cfg.rng_seed,
+            };
+            let report = run_one(&spec, None);
+            times.push(report.extrapolated_elapsed(n).as_secs_f64());
+            cells.push(Cell {
+                dataset: name.clone(),
+                seeder: s.to_string(),
+                k: n,
+                report,
+            });
+        }
+        let sir_time = *times.last().expect("sir last in LOO_SEEDERS");
+        let mut row = vec![name];
+        for t in &times {
+            row.push(format!("{:.1}", t / sir_time.max(1e-9)));
+        }
+        row.push(fmt_secs(std::time::Duration::from_secs_f64(sir_time)));
+        table.row(row);
+    }
+    ExperimentResult { table, cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetConfig;
+    use crate::data::synth::Hyper;
+
+    fn tiny_cfg() -> RunConfig {
+        RunConfig {
+            datasets: vec![DatasetConfig {
+                name: "heart".into(),
+                n: Some(60),
+                hyper: Hyper { c: 2.0, gamma: 0.2 },
+            }],
+            seeders: vec!["cold".into(), "sir".into()],
+            k: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table1_structure() {
+        let cfg = tiny_cfg();
+        let r = table1(&cfg, &mut |_| {});
+        assert_eq!(r.cells.len(), 2);
+        assert_eq!(r.table.n_rows(), 1);
+        let rendered = r.table.render();
+        assert!(rendered.contains("heart"));
+        assert!(rendered.contains("iters sir"));
+        // JSON dump parses back
+        let dump = r.to_json(&cfg).to_string();
+        assert!(crate::util::json::Json::parse(&dump).is_ok());
+    }
+
+    #[test]
+    fn table2_lists_all() {
+        let cfg = RunConfig {
+            scale: 0.1,
+            ..Default::default()
+        };
+        let r = table2(&cfg);
+        assert_eq!(r.table.n_rows(), 5);
+        let s = r.table.render();
+        assert!(s.contains("madelon"));
+        assert!(s.contains("CSR"));
+    }
+
+    #[test]
+    fn table3_speedup_column() {
+        let cfg = tiny_cfg();
+        let r = table3(&cfg, &[3], &mut |_| {});
+        assert_eq!(r.cells.len(), 2);
+        assert!(r.table.render().contains("speedup"));
+    }
+
+    #[test]
+    fn fig2_relative_to_sir() {
+        let cfg = tiny_cfg();
+        let r = fig2(&cfg, 5, &mut |_| {});
+        // 6 LOO seeders × 1 dataset
+        assert_eq!(r.cells.len(), 6);
+        let s = r.table.render();
+        assert!(s.contains("avg"));
+        assert!(s.contains("top"));
+    }
+}

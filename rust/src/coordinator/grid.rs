@@ -1,0 +1,125 @@
+//! Hyper-parameter grid search over (C, γ), each cell evaluated by
+//! seeded k-fold cross-validation.
+//!
+//! This is the workload that motivates the paper: model selection runs
+//! many cross-validations, so accelerating each one compounds. Cells are
+//! independent and fan out across the coordinator's workers; within a
+//! cell the seeding chain runs as usual.
+
+use super::jobs::{run_one, JobSpec};
+use crate::data::Dataset;
+use crate::util::pool::scoped_map;
+
+/// One evaluated grid cell.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub c: f64,
+    pub gamma: f64,
+    pub accuracy: f64,
+    pub iterations: u64,
+    pub elapsed: std::time::Duration,
+}
+
+/// Result of a grid search.
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    pub points: Vec<GridPoint>,
+}
+
+impl GridResult {
+    /// The cell with the highest CV accuracy (ties → smaller C, then γ:
+    /// prefer the simpler model).
+    pub fn best(&self) -> &GridPoint {
+        self.points
+            .iter()
+            .min_by(|a, b| {
+                b.accuracy
+                    .partial_cmp(&a.accuracy)
+                    .unwrap()
+                    .then(a.c.partial_cmp(&b.c).unwrap())
+                    .then(a.gamma.partial_cmp(&b.gamma).unwrap())
+            })
+            .expect("empty grid")
+    }
+
+    pub fn total_iterations(&self) -> u64 {
+        self.points.iter().map(|p| p.iterations).sum()
+    }
+}
+
+/// Evaluate the (C, γ) grid with `seeder`-accelerated k-fold CV.
+pub fn grid_search(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    k: usize,
+    seeder: &str,
+    threads: usize,
+    rng_seed: u64,
+) -> GridResult {
+    let cells: Vec<(f64, f64)> = c_values
+        .iter()
+        .flat_map(|&c| gamma_values.iter().map(move |&g| (c, g)))
+        .collect();
+    let points = scoped_map(threads.max(1), cells.len(), |i| {
+        let (c, gamma) = cells[i];
+        let spec = JobSpec {
+            dataset: ds.name.clone(),
+            n: None,
+            c,
+            gamma,
+            seeder: seeder.to_string(),
+            k,
+            max_rounds: None,
+            rng_seed,
+        };
+        let started = std::time::Instant::now();
+        let report = run_one(&spec, Some(ds));
+        GridPoint {
+            c,
+            gamma,
+            accuracy: report.accuracy(),
+            iterations: report.total_iterations(),
+            elapsed: started.elapsed(),
+        }
+    });
+    GridResult { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_all_cells() {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let g = grid_search(&ds, &[0.5, 2.0], &[0.1, 0.2, 0.4], 3, "sir", 2, 7);
+        assert_eq!(g.points.len(), 6);
+        let best = g.best();
+        assert!(g.points.iter().all(|p| p.accuracy <= best.accuracy));
+        assert!(g.total_iterations() > 0);
+    }
+
+    #[test]
+    fn best_prefers_smaller_c_on_tie() {
+        let g = GridResult {
+            points: vec![
+                GridPoint {
+                    c: 10.0,
+                    gamma: 0.1,
+                    accuracy: 0.9,
+                    iterations: 1,
+                    elapsed: Default::default(),
+                },
+                GridPoint {
+                    c: 1.0,
+                    gamma: 0.1,
+                    accuracy: 0.9,
+                    iterations: 1,
+                    elapsed: Default::default(),
+                },
+            ],
+        };
+        assert_eq!(g.best().c, 1.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Job descriptions and the leader loop.
+
+use crate::cv::{run_kfold, run_loo, CvOptions, CvReport, LooOptions};
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::metrics::{Counter, Histogram};
+use crate::seeding::seeder_by_name;
+use crate::util::pool::scoped_map;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A self-contained unit of work. Datasets are generated (or cloned)
+/// inside the job so specs stay `Send` without sharing backends.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Synthetic dataset name ("adult", "heart", …) or a pre-built dataset
+    /// supplied via [`Coordinator::run_with_data`].
+    pub dataset: String,
+    /// Override the analogue's default cardinality.
+    pub n: Option<usize>,
+    pub c: f64,
+    pub gamma: f64,
+    /// Seeder name ("cold", "ato", "mir", "sir", "avg", "top").
+    pub seeder: String,
+    /// k = 0 means leave-one-out.
+    pub k: usize,
+    pub max_rounds: Option<usize>,
+    pub rng_seed: u64,
+}
+
+impl JobSpec {
+    pub fn is_loo(&self) -> bool {
+        self.k == 0
+    }
+
+    /// Short id for logs: "adult/sir/k10".
+    pub fn id(&self) -> String {
+        if self.is_loo() {
+            format!("{}/{}/loo", self.dataset, self.seeder)
+        } else {
+            format!("{}/{}/k{}", self.dataset, self.seeder, self.k)
+        }
+    }
+}
+
+/// A finished job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub spec: JobSpec,
+    pub report: CvReport,
+    pub wall: std::time::Duration,
+}
+
+/// Leader: schedules jobs across `threads` workers (scoped fork-join, so
+/// shared datasets are borrowed, not copied per job) and keeps telemetry.
+pub struct Coordinator {
+    threads: usize,
+    pub jobs_done: Arc<Counter>,
+    pub job_latency: Arc<Histogram>,
+}
+
+impl Coordinator {
+    pub fn new(threads: usize) -> Coordinator {
+        Coordinator {
+            threads: threads.max(1),
+            jobs_done: Arc::new(Counter::new()),
+            job_latency: Arc::new(Histogram::new()),
+        }
+    }
+
+    /// Run a batch of jobs over synthetic datasets (each job generates its
+    /// own data deterministically from the spec).
+    pub fn run(&self, specs: &[JobSpec]) -> Vec<JobOutcome> {
+        self.run_inner(specs, None)
+    }
+
+    /// Run a batch of jobs against one shared pre-built dataset (e.g. a
+    /// real LibSVM file) instead of the named analogue.
+    pub fn run_with_data(&self, specs: &[JobSpec], data: &Dataset) -> Vec<JobOutcome> {
+        self.run_inner(specs, Some(data))
+    }
+
+    fn run_inner(&self, specs: &[JobSpec], shared: Option<&Dataset>) -> Vec<JobOutcome> {
+        let done = Arc::clone(&self.jobs_done);
+        let latency = Arc::clone(&self.job_latency);
+        scoped_map(self.threads, specs.len(), move |i| {
+            let spec = specs[i].clone();
+            let started = Instant::now();
+            let report = run_one(&spec, shared);
+            let wall = started.elapsed();
+            done.inc();
+            latency.record(wall);
+            JobOutcome { spec, report, wall }
+        })
+    }
+}
+
+/// Execute a single job (used directly by the CLI for one-off runs).
+pub fn run_one(spec: &JobSpec, shared: Option<&Dataset>) -> CvReport {
+    let ds = match shared {
+        Some(d) => d.clone(),
+        None => crate::data::synth::generate(&spec.dataset, spec.n, spec.rng_seed),
+    };
+    let kernel = Kernel::rbf(spec.gamma);
+    let seeder = seeder_by_name(&spec.seeder)
+        .unwrap_or_else(|| panic!("unknown seeder '{}'", spec.seeder));
+    if spec.is_loo() {
+        run_loo(
+            &ds,
+            kernel,
+            spec.c,
+            seeder.as_ref(),
+            LooOptions {
+                max_rounds: spec.max_rounds,
+                rng_seed: spec.rng_seed,
+                ..Default::default()
+            },
+        )
+    } else {
+        run_kfold(
+            &ds,
+            kernel,
+            spec.c,
+            spec.k,
+            seeder.as_ref(),
+            CvOptions {
+                max_rounds: spec.max_rounds,
+                rng_seed: spec.rng_seed,
+                ..Default::default()
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seeder: &str) -> JobSpec {
+        JobSpec {
+            dataset: "heart".into(),
+            n: Some(80),
+            c: 2.0,
+            gamma: 0.2,
+            seeder: seeder.into(),
+            k: 4,
+            max_rounds: None,
+            rng_seed: 5,
+        }
+    }
+
+    #[test]
+    fn runs_batch_in_order() {
+        let coord = Coordinator::new(2);
+        let specs = vec![spec("cold"), spec("sir")];
+        let out = coord.run(&specs);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].spec.seeder, "cold");
+        assert_eq!(out[1].spec.seeder, "sir");
+        assert_eq!(coord.jobs_done.get(), 2);
+        assert_eq!(coord.job_latency.count(), 2);
+        // identical data/folds → identical accuracy (the paper's claim)
+        assert!((out[0].report.accuracy() - out[1].report.accuracy()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loo_dispatch() {
+        let mut s = spec("avg");
+        s.k = 0;
+        s.max_rounds = Some(4);
+        assert!(s.is_loo());
+        assert_eq!(s.id(), "heart/avg/loo");
+        let out = Coordinator::new(1).run(&[s]);
+        assert_eq!(out[0].report.rounds.len(), 4);
+    }
+
+    #[test]
+    fn shared_dataset_mode() {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let out = Coordinator::new(1).run_with_data(&[spec("mir")], &ds);
+        assert_eq!(out[0].report.dataset, ds.name);
+    }
+}

@@ -1,0 +1,17 @@
+//! The experiment coordinator: a leader that schedules CV / LOO / grid
+//! jobs over a worker pool and collects their reports.
+//!
+//! The paper's system contribution lives in the *seeding chain* (state
+//! handoff between consecutive folds), which is inherently sequential per
+//! run — but experiment suites (dataset × seeder × k cells) and
+//! hyper-parameter grids are embarrassingly parallel across runs, and
+//! that's what the coordinator fans out.
+
+pub mod experiments;
+mod grid;
+mod jobs;
+mod server;
+
+pub use grid::{grid_search, GridPoint, GridResult};
+pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
+pub use server::PredictServer;

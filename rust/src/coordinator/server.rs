@@ -1,0 +1,293 @@
+//! Prediction server: a minimal TCP/JSON-lines service over a trained
+//! model — the serving half of the L3 coordinator (request routing +
+//! micro-batching, in the spirit of an inference router).
+//!
+//! Protocol: one JSON object per line.
+//!
+//! ```text
+//! → {"op":"predict","rows":[[0.1,0.2,…],…]}
+//! ← {"ok":true,"decisions":[…],"labels":[…],"probs":[…]?}
+//! → {"op":"info"}
+//! ← {"ok":true,"n_sv":…,"dim":…,"kernel":"rbf","served":…}
+//! → {"op":"shutdown"}
+//! ```
+//!
+//! Requests are answered by a worker that batches the rows of each request
+//! into one bulk decision evaluation (native or via the AOT artifacts).
+
+use crate::data::{DataMatrix, Dataset};
+use crate::metrics::{Counter, Histogram};
+use crate::smo::{Model, PlattScaler};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server state shared across connections.
+pub struct PredictServer {
+    model: Model,
+    scaler: Option<PlattScaler>,
+    pub served: Arc<Counter>,
+    pub latency: Arc<Histogram>,
+    stop: Arc<AtomicBool>,
+}
+
+impl PredictServer {
+    pub fn new(model: Model, scaler: Option<PlattScaler>) -> PredictServer {
+        PredictServer {
+            model,
+            scaler,
+            served: Arc::new(Counter::new()),
+            latency: Arc::new(Histogram::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Bind and serve until a `shutdown` request arrives. Returns the
+    /// bound address through `on_ready` (port 0 picks a free port).
+    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr).context("bind")?;
+        listener.set_nonblocking(true)?;
+        on_ready(listener.local_addr()?);
+        while !self.stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // single-threaded accept loop: the expensive part is
+                    // the batched kernel evaluation, not concurrency
+                    if let Err(e) = self.handle(stream) {
+                        log::warn!("connection error: {e:#}");
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nonblocking(false)?;
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let started = std::time::Instant::now();
+            let response = self.respond(&line);
+            self.latency.record(started.elapsed());
+            writeln!(writer, "{response}")?;
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute the response for one request line (exposed for tests).
+    pub fn respond(&self, line: &str) -> Json {
+        match self.respond_inner(line) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+        }
+    }
+
+    fn respond_inner(&self, line: &str) -> Result<Json> {
+        let req = Json::parse(line).context("request is not valid JSON")?;
+        let op = req
+            .get("op")
+            .and_then(Json::as_str)
+            .context("missing 'op'")?;
+        match op {
+            "info" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("n_sv", Json::num(self.model.n_sv() as f64)),
+                ("dim", Json::num(self.model.sv.dim() as f64)),
+                (
+                    "kernel",
+                    Json::str(match self.model.kernel {
+                        crate::kernel::Kernel::Rbf { .. } => "rbf",
+                        crate::kernel::Kernel::Linear => "linear",
+                        crate::kernel::Kernel::Poly { .. } => "polynomial",
+                        crate::kernel::Kernel::Sigmoid { .. } => "sigmoid",
+                    }),
+                ),
+                ("served", Json::num(self.served.get() as f64)),
+                ("calibrated", Json::Bool(self.scaler.is_some())),
+            ])),
+            "predict" => {
+                let rows = req
+                    .get("rows")
+                    .and_then(Json::as_arr)
+                    .context("missing 'rows' array")?;
+                anyhow::ensure!(!rows.is_empty(), "empty batch");
+                let dim = self.model.sv.dim();
+                let mut data = Vec::with_capacity(rows.len() * dim);
+                for (i, row) in rows.iter().enumerate() {
+                    let vals = row
+                        .as_arr()
+                        .with_context(|| format!("rows[{i}] is not an array"))?;
+                    anyhow::ensure!(
+                        vals.len() == dim,
+                        "rows[{i}] has {} features, model expects {dim}",
+                        vals.len()
+                    );
+                    for v in vals {
+                        data.push(v.as_f64().context("non-numeric feature")? as f32);
+                    }
+                }
+                // batch: one bulk decision evaluation for the whole request
+                let batch = Dataset::new(
+                    "request",
+                    DataMatrix::dense(rows.len(), dim, data),
+                    vec![1.0; rows.len()],
+                );
+                let decisions = self.model.decision_values(&batch);
+                self.served.add(rows.len() as u64);
+                let labels: Vec<Json> = decisions
+                    .iter()
+                    .map(|&d| Json::num(if d >= 0.0 { 1.0 } else { -1.0 }))
+                    .collect();
+                let mut fields = vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "decisions",
+                        Json::arr(decisions.iter().map(|&d| Json::num(d))),
+                    ),
+                    ("labels", Json::arr(labels)),
+                ];
+                if let Some(s) = &self.scaler {
+                    fields.push((
+                        "probs",
+                        Json::arr(decisions.iter().map(|&d| Json::num(s.prob(d)))),
+                    ));
+                }
+                Ok(Json::obj(fields))
+            }
+            "shutdown" => {
+                self.stop.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            other => anyhow::bail!("unknown op '{other}'"),
+        }
+    }
+
+    /// Handle for external shutdown (tests).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, KernelEval};
+    use crate::smo::{SmoParams, Solver};
+
+    fn server() -> (PredictServer, Dataset) {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(2.0));
+        let r = solver.solve();
+        let model = Model::from_result(&ds, kernel, &r);
+        (PredictServer::new(model, None), ds)
+    }
+
+    #[test]
+    fn info_reports_model() {
+        let (srv, _) = server();
+        let resp = srv.respond(r#"{"op":"info"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("dim").and_then(Json::as_usize), Some(13));
+        assert!(resp.get("n_sv").and_then(Json::as_usize).unwrap() > 0);
+    }
+
+    #[test]
+    fn predict_batch_matches_model() {
+        let (srv, ds) = server();
+        // request with the first two training rows
+        let rows: Vec<Json> = (0..2)
+            .map(|i| {
+                Json::arr(
+                    ds.x.dense_row(i)
+                        .iter()
+                        .map(|&v| Json::num(v as f64)),
+                )
+            })
+            .collect();
+        let req = Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]);
+        let resp = srv.respond(&req.to_string());
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let dec = resp.get("decisions").unwrap().as_arr().unwrap();
+        assert_eq!(dec.len(), 2);
+        // agree with direct model evaluation
+        let expect = srv.model.decision_values(&ds.select(&[0, 1]));
+        for (d, e) in dec.iter().zip(&expect) {
+            assert!((d.as_f64().unwrap() - e).abs() < 1e-9);
+        }
+        assert_eq!(srv.served.get(), 2);
+    }
+
+    #[test]
+    fn predict_with_probabilities() {
+        let (mut srv, ds) = server();
+        srv.scaler = Some(crate::smo::PlattScaler { a: -1.5, b: 0.1 });
+        let rows = Json::arr([Json::arr(
+            ds.x.dense_row(0).iter().map(|&v| Json::num(v as f64)),
+        )]);
+        let req = Json::obj(vec![("op", Json::str("predict")), ("rows", rows)]);
+        let resp = srv.respond(&req.to_string());
+        let probs = resp.get("probs").unwrap().as_arr().unwrap();
+        let p = probs[0].as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&p));
+    }
+
+    #[test]
+    fn malformed_requests_reported() {
+        let (srv, _) = server();
+        for bad in [
+            "not json",
+            r#"{"op":"nope"}"#,
+            r#"{"op":"predict"}"#,
+            r#"{"op":"predict","rows":[[1.0]]}"#, // wrong dim
+        ] {
+            let resp = srv.respond(bad);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert!(resp.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let (srv, ds) = server();
+        let srv = Arc::new(srv);
+        let srv2 = Arc::clone(&srv);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            srv2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let row: Vec<String> = ds.x.dense_row(0).iter().map(|v| v.to_string()).collect();
+        writeln!(conn, r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(",")).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        writeln!(conn, r#"{{"op":"shutdown"}}"#).unwrap();
+        line.clear();
+        let _ = reader.read_line(&mut line);
+        handle.join().unwrap();
+        assert_eq!(srv.served.get(), 1);
+    }
+}

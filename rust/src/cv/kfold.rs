@@ -1,0 +1,432 @@
+//! The k-fold cross-validation chain with alpha seeding (paper §2–3).
+//!
+//! Round 0 always trains cold (there is no previous SVM); rounds 1..k seed
+//! from round h−1's solution through the configured [`Seeder`]. The paper's
+//! time accounting is kept exactly: *init* = seeding computation +
+//! warm-start gradient setup; *the rest* = partitioning + SMO + test-fold
+//! classification.
+
+use super::report::{CvReport, RoundStat};
+use crate::data::{Dataset, FoldPlan};
+use crate::kernel::{Kernel, KernelCache, KernelEval};
+use crate::runtime::ComputeBackend;
+use crate::seeding::{check_feasible, SeedContext, Seeder};
+use crate::smo::{Model, SmoParams, Solver};
+use std::time::Instant;
+
+/// Options for a CV run.
+pub struct CvOptions<'a> {
+    /// SMO tolerance (LibSVM default 1e-3).
+    pub eps: f64,
+    /// LibSVM-style shrinking in the solver.
+    pub shrinking: bool,
+    /// Solver kernel-cache budget per round.
+    pub cache_bytes: usize,
+    /// Shared seeding-cache budget (rows over the full dataset).
+    pub seed_cache_bytes: usize,
+    /// Fold-partition + seeding determinism.
+    pub rng_seed: u64,
+    /// Run only the first `max_rounds` rounds (paper's estimation protocol
+    /// for the expensive configurations); `None` = all k.
+    pub max_rounds: Option<usize>,
+    /// Bulk backend for warm-start gradient init and test-fold decision
+    /// values; `None` = native in-process math.
+    pub backend: Option<&'a mut dyn ComputeBackend>,
+}
+
+impl Default for CvOptions<'_> {
+    fn default() -> Self {
+        CvOptions {
+            eps: 1e-3,
+            shrinking: true,
+            cache_bytes: 256 << 20,
+            seed_cache_bytes: 128 << 20,
+            rng_seed: 42,
+            max_rounds: None,
+            backend: None,
+        }
+    }
+}
+
+/// Run k-fold cross-validation of an RBF C-SVC over `full` with the given
+/// seeder. Returns per-round and aggregate statistics.
+pub fn run_kfold(
+    full: &Dataset,
+    kernel: Kernel,
+    c: f64,
+    k: usize,
+    seeder: &dyn Seeder,
+    mut opts: CvOptions,
+) -> CvReport {
+    let t_part = Instant::now();
+    let plan = FoldPlan::stratified(full, k, opts.rng_seed);
+    let partition = t_part.elapsed();
+
+    // Shared kernel-row cache over the full dataset for the seeders.
+    let mut seed_cache =
+        KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), opts.seed_cache_bytes);
+
+    let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
+    let mut rounds = Vec::with_capacity(rounds_to_run);
+
+    // Carried state from round h−1.
+    let mut prev_alpha: Vec<f64> = Vec::new();
+    let mut prev_f: Vec<f64> = Vec::new();
+    let mut prev_b = 0.0f64;
+    let mut prev_train: Vec<usize> = Vec::new();
+
+    for h in 0..rounds_to_run {
+        let train_idx = plan.train_indices(h);
+        let train = full.select(&train_idx);
+        let test = full.select(plan.test_indices(h));
+
+        // ---- init phase: produce the seed α ------------------------------
+        let t_init = Instant::now();
+        let (alpha0, fell_back) = if h == 0 {
+            (vec![0.0; train_idx.len()], false)
+        } else {
+            let trans = plan.transition(h - 1);
+            let ctx = SeedContext {
+                full,
+                kernel,
+                c,
+                prev_train: &prev_train,
+                prev_alpha: &prev_alpha,
+                prev_f: &prev_f,
+                prev_b,
+                removed: &trans.removed,
+                added: &trans.added,
+                next_train: &train_idx,
+                rng_seed: opts.rng_seed ^ (h as u64),
+            };
+            let seed = seeder.seed(&ctx, &mut seed_cache);
+            debug_assert!(
+                check_feasible(&seed.alpha, &train.y, c).is_ok(),
+                "{} produced infeasible seed at round {h}: {:?}",
+                seeder.name(),
+                check_feasible(&seed.alpha, &train.y, c)
+            );
+            (seed.alpha, seed.fell_back)
+        };
+
+        // Warm-start gradient (part of init time — it only exists because
+        // of seeding): through the bulk artifact backend when wired, else
+        // through the shared seed cache, whose full-dataset rows are
+        // already hot from the seeding computation and previous rounds.
+        let initial_g = if h > 0 && alpha0.iter().any(|&a| a > 0.0) {
+            match &mut opts.backend {
+                Some(backend) => {
+                    let sv_idx: Vec<usize> =
+                        (0..train.len()).filter(|&i| alpha0[i] > 0.0).collect();
+                    let sv = train.select(&sv_idx);
+                    let coef: Vec<f64> =
+                        sv_idx.iter().map(|&i| train.y[i] * alpha0[i]).collect();
+                    match backend.kernel_matvec(&train, &sv, &coef, kernel.gamma().unwrap_or(1.0))
+                    {
+                        Ok(kv) => Some(
+                            kv.iter()
+                                .zip(&train.y)
+                                .map(|(v, y)| y * v - 1.0)
+                                .collect::<Vec<f64>>(),
+                        ),
+                        Err(_) => None, // fall through to native gradient init
+                    }
+                }
+                None => Some(warm_gradient(
+                    &mut seed_cache,
+                    full,
+                    &prev_train,
+                    &prev_alpha,
+                    &prev_f,
+                    &train_idx,
+                    &train.y,
+                    &alpha0,
+                )),
+            }
+        } else {
+            None
+        };
+        let init = t_init.elapsed();
+
+        // ---- "the rest": train + classify --------------------------------
+        let t_rest = Instant::now();
+        let params = SmoParams {
+            c,
+            eps: opts.eps,
+            shrinking: opts.shrinking,
+            cache_bytes: opts.cache_bytes,
+            ..Default::default()
+        };
+        let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
+        let result = solver.solve_from(alpha0, initial_g);
+
+        let model = Model::from_result(&train, kernel, &result);
+        let correct = match &mut opts.backend {
+            Some(backend) => {
+                match crate::runtime::decision_values_via(
+                    *backend,
+                    &model.sv,
+                    &model.coef,
+                    model.b,
+                    kernel.gamma().unwrap_or(1.0),
+                    &test,
+                ) {
+                    Ok(vals) => vals
+                        .iter()
+                        .zip(&test.y)
+                        .filter(|(d, y)| (if **d >= 0.0 { 1.0 } else { -1.0 }) == **y)
+                        .count(),
+                    Err(_) => count_correct(&model, &test),
+                }
+            }
+            None => count_correct(&model, &test),
+        };
+        let mut rest = t_rest.elapsed();
+
+        // Warm-start gradient setup that happened *inside* the solver is
+        // init cost, not training cost (paper accounting).
+        let grad_init = std::time::Duration::from_secs_f64(result.grad_init_secs);
+        let init = if h > 0 { init + grad_init } else { init };
+        rest = rest.saturating_sub(if h > 0 { grad_init } else { Default::default() });
+
+        rounds.push(RoundStat {
+            round: h,
+            init,
+            rest,
+            iterations: result.iterations,
+            test_correct: correct,
+            test_total: test.len(),
+            fell_back,
+            n_sv: result.n_sv,
+        });
+
+        // Carry state to round h+1.
+        prev_f = result.f_indicators(&train.y);
+        prev_alpha = result.alpha;
+        prev_b = result.b;
+        prev_train = train_idx;
+    }
+
+    CvReport {
+        dataset: full.name.clone(),
+        seeder: seeder.name().to_string(),
+        k,
+        rounds,
+        partition,
+    }
+}
+
+/// Gᵢ = Σⱼ αⱼQᵢⱼ − 1 over the round's training set, computed from the
+/// *full-dataset* kernel-row cache (global indices). Rows touched by the
+/// seeders and earlier rounds are already resident, so by round 2–3 the
+/// warm-start gradient is nearly free — the native analogue of routing
+/// the bulk matvec to the AOT artifact.
+fn gradient_via_cache(
+    cache: &mut KernelCache,
+    full: &Dataset,
+    train_idx: &[usize],
+    train_y: &[f64],
+    alpha: &[f64],
+) -> Vec<f64> {
+    let n = train_idx.len();
+    let mut g = vec![-1.0f64; n];
+    for (j, &a) in alpha.iter().enumerate() {
+        if a > 0.0 {
+            let gj = train_idx[j];
+            let coef = a * full.y[gj];
+            let row = cache.row(gj);
+            for (t, &gt) in train_idx.iter().enumerate() {
+                g[t] += train_y[t] * coef * row[gt];
+            }
+        }
+    }
+    g
+}
+
+/// Warm-start gradient, picking between two strategies (§Perf,
+/// EXPERIMENTS.md):
+///
+/// - **delta** — SIR/MIR keep α_𝓢 unchanged, so for a carried-over
+///   instance t the new gradient is the old one plus the contribution of
+///   the *changed* dual coefficients only (𝓡 dropping to zero, 𝒯 gaining
+///   weight): G′_t = G_t + Σ_{Δcoef_j ≠ 0} y_t·Δcoef_j·K(t, j). Fresh 𝒯
+///   instances get one kernel row each. Cost ≈ (|Δ| + |𝒯|) rows.
+/// - **from-scratch** — Σ over all support vectors; cost ≈ n_sv rows.
+///
+/// The cheaper one (by row count) is chosen per round; both pull rows from
+/// the shared full-dataset LRU.
+#[allow(clippy::too_many_arguments)]
+fn warm_gradient(
+    cache: &mut KernelCache,
+    full: &Dataset,
+    prev_train: &[usize],
+    prev_alpha: &[f64],
+    prev_f: &[f64],
+    next_train: &[usize],
+    next_y: &[f64],
+    alpha0: &[f64],
+) -> Vec<f64> {
+    let n = next_train.len();
+    // Changed coefficients by global index: coef = y·α; Δ = new − old.
+    // Collect per global index over the union of both training sets.
+    let mut delta: Vec<(usize, f64)> = Vec::new();
+    let mut fresh: Vec<usize> = Vec::new(); // next positions not in prev
+    // old coef lookup (prev is sorted)
+    let old_coef = |gi: usize| -> Option<f64> {
+        prev_train
+            .binary_search(&gi)
+            .ok()
+            .map(|p| prev_alpha[p] * full.y[gi])
+    };
+    // instances leaving the training set (in prev, not in next)
+    for (p, &gi) in prev_train.iter().enumerate() {
+        if next_train.binary_search(&gi).is_err() {
+            let c = prev_alpha[p] * full.y[gi];
+            if c != 0.0 {
+                delta.push((gi, -c));
+            }
+        }
+    }
+    for (t, &gi) in next_train.iter().enumerate() {
+        let nc = alpha0[t] * full.y[gi];
+        match old_coef(gi) {
+            Some(oc) => {
+                if (nc - oc).abs() > 0.0 {
+                    delta.push((gi, nc - oc));
+                }
+            }
+            None => {
+                // fresh instance: its own row is recomputed in full below,
+                // but its coefficient still perturbs every carried row
+                if nc != 0.0 {
+                    delta.push((gi, nc));
+                }
+                fresh.push(t);
+            }
+        }
+    }
+
+    let n_sv = alpha0.iter().filter(|&&a| a > 0.0).count();
+    if delta.len() + fresh.len() >= n_sv {
+        // from-scratch is cheaper
+        return gradient_via_cache(cache, full, next_train, next_y, alpha0);
+    }
+
+    // base: carry G over from prev (G_t = y_t · f_t), −1 for fresh rows
+    let mut g = vec![0.0f64; n];
+    for (t, &gi) in next_train.iter().enumerate() {
+        match prev_train.binary_search(&gi) {
+            Ok(p) => g[t] = next_y[t] * prev_f[p],
+            Err(_) => g[t] = -1.0,
+        }
+    }
+    // apply changed coefficients to carried rows
+    for &(gj, dc) in &delta {
+        let row = cache.row(gj);
+        for (t, &gt) in next_train.iter().enumerate() {
+            // fresh rows get the full sum below instead
+            g[t] += next_y[t] * dc * row[gt];
+        }
+    }
+    // fresh 𝒯 instances: full sum over the new solution's SVs via one row
+    for &t in &fresh {
+        let gt = next_train[t];
+        let row = cache.row(gt);
+        let mut acc = -1.0f64;
+        for (j, &gj) in next_train.iter().enumerate() {
+            if alpha0[j] > 0.0 {
+                acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+            }
+        }
+        g[t] = acc;
+    }
+    g
+}
+
+fn count_correct(model: &Model, test: &Dataset) -> usize {
+    model
+        .predict(test)
+        .iter()
+        .zip(&test.y)
+        .filter(|(p, y)| (*p - *y).abs() < 1e-9)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seeding::{ColdStart, Mir, Sir};
+
+    fn heart() -> Dataset {
+        crate::data::synth::generate("heart", Some(150), 42)
+    }
+
+    #[test]
+    fn cold_cv_runs_all_rounds() {
+        let ds = heart();
+        let rep = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &ColdStart, CvOptions::default());
+        assert_eq!(rep.rounds.len(), 5);
+        assert_eq!(rep.k, 5);
+        // every instance tested exactly once
+        let total: usize = rep.rounds.iter().map(|r| r.test_total).sum();
+        assert_eq!(total, ds.len());
+        // cold start has zero meaningful init time per round
+        assert!(rep.total_init().as_secs_f64() < 0.05);
+    }
+
+    #[test]
+    fn sir_fewer_iterations_same_accuracy() {
+        let ds = heart();
+        let cold = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &ColdStart, CvOptions::default());
+        let sir = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &Sir, CvOptions::default());
+        assert!(
+            sir.total_iterations() < cold.total_iterations(),
+            "SIR {} vs cold {}",
+            sir.total_iterations(),
+            cold.total_iterations()
+        );
+        // The paper's headline: identical accuracy.
+        assert!(
+            (sir.accuracy() - cold.accuracy()).abs() < 1e-9,
+            "accuracy differs: sir {} cold {}",
+            sir.accuracy(),
+            cold.accuracy()
+        );
+    }
+
+    #[test]
+    fn mir_matches_cold_accuracy() {
+        let ds = heart();
+        let cold = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 4, &ColdStart, CvOptions::default());
+        let mir = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 4, &Mir, CvOptions::default());
+        assert!((mir.accuracy() - cold.accuracy()).abs() < 1e-9);
+        assert!(mir.total_iterations() <= cold.total_iterations());
+    }
+
+    #[test]
+    fn max_rounds_prefix() {
+        let ds = heart();
+        let rep = run_kfold(
+            &ds,
+            Kernel::rbf(0.2),
+            2.0,
+            10,
+            &ColdStart,
+            CvOptions {
+                max_rounds: Some(3),
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep.rounds.len(), 3);
+        assert!(rep.extrapolated_elapsed(10) > rep.total_elapsed());
+    }
+
+    #[test]
+    fn round0_identical_across_seeders() {
+        // Round 0 is always cold → same iteration count for any seeder.
+        let ds = heart();
+        let a = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 4, &ColdStart, CvOptions::default());
+        let b = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 4, &Sir, CvOptions::default());
+        assert_eq!(a.rounds[0].iterations, b.rounds[0].iterations);
+    }
+}

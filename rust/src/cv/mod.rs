@@ -1,0 +1,12 @@
+//! Cross-validation drivers: the k-fold chain (paper §2–3) and the
+//! leave-one-out protocol (supplementary §Figure 2).
+
+mod kfold;
+mod loo;
+mod report;
+mod warmc;
+
+pub use kfold::{run_kfold, CvOptions};
+pub use loo::{run_loo, LooOptions};
+pub use report::{CvReport, RoundStat};
+pub use warmc::{rescale_alpha, run_kfold_warm_c, WarmCOptions};

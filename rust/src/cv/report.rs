@@ -1,0 +1,151 @@
+//! Per-round statistics and the aggregated CV report — the exact columns
+//! of the paper's Table 1 (init time / "the rest" / iterations / accuracy).
+
+use std::time::Duration;
+
+/// One cross-validation round.
+#[derive(Debug, Clone)]
+pub struct RoundStat {
+    pub round: usize,
+    /// Alpha-initialisation time (seeding computation + warm-start gradient
+    /// setup). Zero for the cold baseline.
+    pub init: Duration,
+    /// Everything else the paper counts in "the rest": SMO training and
+    /// test-fold classification.
+    pub rest: Duration,
+    /// SMO iterations of this round's solve.
+    pub iterations: u64,
+    pub test_correct: usize,
+    pub test_total: usize,
+    /// The seeder gave up and fell back to cold start this round.
+    pub fell_back: bool,
+    /// Support vectors in this round's model.
+    pub n_sv: usize,
+}
+
+/// Aggregated result of one (dataset × seeder × k) cross-validation run.
+#[derive(Debug, Clone)]
+pub struct CvReport {
+    pub dataset: String,
+    pub seeder: String,
+    pub k: usize,
+    pub rounds: Vec<RoundStat>,
+    /// Fold partitioning time (counted in "the rest", as in the paper).
+    pub partition: Duration,
+}
+
+impl CvReport {
+    /// Σ alpha-initialisation time (paper Table 1 "init" column).
+    pub fn total_init(&self) -> Duration {
+        self.rounds.iter().map(|r| r.init).sum()
+    }
+
+    /// Σ training+classification time plus partitioning ("the rest").
+    pub fn total_rest(&self) -> Duration {
+        self.partition + self.rounds.iter().map(|r| r.rest).sum::<Duration>()
+    }
+
+    /// Total elapsed = init + rest.
+    pub fn total_elapsed(&self) -> Duration {
+        self.total_init() + self.total_rest()
+    }
+
+    /// Σ SMO iterations (paper Table 1 "number of iterations").
+    pub fn total_iterations(&self) -> u64 {
+        self.rounds.iter().map(|r| r.iterations).sum()
+    }
+
+    /// Pooled CV accuracy: total correct / total tested — how LibSVM's
+    /// `svm_cross_validation` reports it.
+    pub fn accuracy(&self) -> f64 {
+        let correct: usize = self.rounds.iter().map(|r| r.test_correct).sum();
+        let total: usize = self.rounds.iter().map(|r| r.test_total).sum();
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Rounds where the seeder fell back to cold start.
+    pub fn fallbacks(&self) -> usize {
+        self.rounds.iter().filter(|r| r.fell_back).count()
+    }
+
+    /// Linear extrapolation to `k_total` rounds when only a prefix was run
+    /// (the paper's method for MNIST at k=100 and the large-dataset LOO).
+    pub fn extrapolated_elapsed(&self, k_total: usize) -> Duration {
+        if self.rounds.is_empty() || self.rounds.len() >= k_total {
+            return self.total_elapsed();
+        }
+        let per_round = self.total_elapsed().as_secs_f64() / self.rounds.len() as f64;
+        Duration::from_secs_f64(per_round * k_total as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> CvReport {
+        CvReport {
+            dataset: "d".into(),
+            seeder: "sir".into(),
+            k: 3,
+            partition: Duration::from_millis(10),
+            rounds: vec![
+                RoundStat {
+                    round: 0,
+                    init: Duration::from_millis(0),
+                    rest: Duration::from_millis(100),
+                    iterations: 500,
+                    test_correct: 8,
+                    test_total: 10,
+                    fell_back: false,
+                    n_sv: 5,
+                },
+                RoundStat {
+                    round: 1,
+                    init: Duration::from_millis(5),
+                    rest: Duration::from_millis(50),
+                    iterations: 200,
+                    test_correct: 9,
+                    test_total: 10,
+                    fell_back: false,
+                    n_sv: 6,
+                },
+                RoundStat {
+                    round: 2,
+                    init: Duration::from_millis(5),
+                    rest: Duration::from_millis(60),
+                    iterations: 250,
+                    test_correct: 7,
+                    test_total: 10,
+                    fell_back: true,
+                    n_sv: 6,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report();
+        assert_eq!(r.total_init(), Duration::from_millis(10));
+        assert_eq!(r.total_rest(), Duration::from_millis(220));
+        assert_eq!(r.total_elapsed(), Duration::from_millis(230));
+        assert_eq!(r.total_iterations(), 950);
+        assert!((r.accuracy() - 0.8).abs() < 1e-12);
+        assert_eq!(r.fallbacks(), 1);
+    }
+
+    #[test]
+    fn extrapolation() {
+        let r = report();
+        // 3 rounds took 230ms → 30 rounds ≈ 2300ms
+        let est = r.extrapolated_elapsed(30);
+        assert!((est.as_secs_f64() - 2.3).abs() < 1e-9);
+        // no extrapolation needed when complete
+        assert_eq!(r.extrapolated_elapsed(3), r.total_elapsed());
+    }
+}

@@ -1,0 +1,257 @@
+//! Warm start across the C grid (Chu et al., KDD 2015 — the paper's
+//! "related work on alpha seeding" line of attack, implemented here as a
+//! first-class feature so the two reuse dimensions compose):
+//!
+//! - *within* one CV run, fold h+1 seeds from fold h (the paper's
+//!   contribution, any [`Seeder`]);
+//! - *across* CV runs with increasing C, fold h of run C′ seeds from the
+//!   **same fold** of the previous run, scaled by r = C′/C and clipped to
+//!   the new box (the warm-start rule for C-SVC: the optimal α scales
+//!   roughly linearly while the same instances stay support vectors).
+//!
+//! For a (C₁ < C₂ < … < C_m) sweep this multiplies the savings of the
+//! fold chain by the savings of the C chain — the model-selection workload
+//! the paper's introduction motivates.
+
+use super::report::{CvReport, RoundStat};
+use crate::data::{Dataset, FoldPlan};
+use crate::kernel::{Kernel, KernelCache, KernelEval};
+use crate::seeding::{balance_to_target, SeedContext, Seeder};
+use crate::smo::{Model, SmoParams, Solver};
+use std::time::Instant;
+
+/// Options for the warm-C sweep.
+pub struct WarmCOptions {
+    pub eps: f64,
+    pub shrinking: bool,
+    pub cache_bytes: usize,
+    pub seed_cache_bytes: usize,
+    pub rng_seed: u64,
+    /// Also seed fold-to-fold within each C (the paper's chain). When
+    /// false only the C-chain reuse is active (pure Chu et al.).
+    pub fold_chain: bool,
+}
+
+impl Default for WarmCOptions {
+    fn default() -> Self {
+        WarmCOptions {
+            eps: 1e-3,
+            shrinking: true,
+            cache_bytes: 256 << 20,
+            seed_cache_bytes: 128 << 20,
+            rng_seed: 42,
+            fold_chain: true,
+        }
+    }
+}
+
+/// Scale a solved α from penalty `c_old` to `c_new` (r = c_new/c_old,
+/// clip into the new box) and repair Σyα = 0 — the Chu et al. rule
+/// adapted to the non-linear C-SVC dual.
+pub fn rescale_alpha(alpha: &[f64], y: &[f64], c_old: f64, c_new: f64) -> Vec<f64> {
+    let r = c_new / c_old;
+    let mut out: Vec<f64> = alpha.iter().map(|&a| (a * r).clamp(0.0, c_new)).collect();
+    // clipping can break the equality constraint; rebalance to 0
+    if !balance_to_target(&mut out, y, c_new, 0.0) {
+        out.iter_mut().for_each(|a| *a = 0.0);
+    }
+    out
+}
+
+/// Run k-fold CV for every C in `cs` (ascending recommended), reusing
+/// state across both folds and C values. Returns one report per C.
+pub fn run_kfold_warm_c(
+    full: &Dataset,
+    kernel: Kernel,
+    cs: &[f64],
+    k: usize,
+    seeder: &dyn Seeder,
+    opts: WarmCOptions,
+) -> Vec<CvReport> {
+    assert!(!cs.is_empty());
+    let t_part = Instant::now();
+    let plan = FoldPlan::stratified(full, k, opts.rng_seed);
+    let partition = t_part.elapsed();
+
+    let mut seed_cache = KernelCache::with_byte_budget(
+        KernelEval::new(full.clone(), kernel),
+        opts.seed_cache_bytes,
+    );
+
+    // per-fold carried state from the previous C value
+    let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
+    let mut reports = Vec::with_capacity(cs.len());
+
+    for (ci, &c) in cs.iter().enumerate() {
+        let mut rounds = Vec::with_capacity(k);
+        // fold-chain state within this C
+        let mut prev_alpha: Vec<f64> = Vec::new();
+        let mut prev_f: Vec<f64> = Vec::new();
+        let mut prev_b = 0.0f64;
+        let mut prev_train: Vec<usize> = Vec::new();
+
+        for h in 0..k {
+            let train_idx = plan.train_indices(h);
+            let train = full.select(&train_idx);
+            let test = full.select(plan.test_indices(h));
+
+            let t_init = Instant::now();
+            // Priority: C-chain seed for this fold; else fold-chain seed;
+            // else cold.
+            let (alpha0, fell_back) = if let Some(prev) = prev_c_alpha[h].take() {
+                let a = rescale_alpha(&prev, &train.y, cs[ci - 1], c);
+                (a, false)
+            } else if opts.fold_chain && h > 0 {
+                let trans = plan.transition(h - 1);
+                let ctx = SeedContext {
+                    full,
+                    kernel,
+                    c,
+                    prev_train: &prev_train,
+                    prev_alpha: &prev_alpha,
+                    prev_f: &prev_f,
+                    prev_b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &train_idx,
+                    rng_seed: opts.rng_seed ^ (h as u64) ^ ((ci as u64) << 32),
+                };
+                let seed = seeder.seed(&ctx, &mut seed_cache);
+                (seed.alpha, seed.fell_back)
+            } else {
+                (vec![0.0; train_idx.len()], false)
+            };
+            let init = t_init.elapsed();
+
+            let t_rest = Instant::now();
+            let params = SmoParams {
+                c,
+                eps: opts.eps,
+                shrinking: opts.shrinking,
+                cache_bytes: opts.cache_bytes,
+                ..Default::default()
+            };
+            let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
+            let result = solver.solve_from(alpha0, None);
+            let model = Model::from_result(&train, kernel, &result);
+            let pred = model.predict(&test);
+            let correct = pred
+                .iter()
+                .zip(&test.y)
+                .filter(|(p, y)| (*p - *y).abs() < 1e-9)
+                .count();
+            let grad_init = std::time::Duration::from_secs_f64(result.grad_init_secs);
+            let rest = t_rest.elapsed().saturating_sub(grad_init);
+
+            rounds.push(RoundStat {
+                round: h,
+                init: init + grad_init,
+                rest,
+                iterations: result.iterations,
+                test_correct: correct,
+                test_total: test.len(),
+                fell_back,
+                n_sv: result.n_sv,
+            });
+
+            // carry to the next C for this fold
+            if ci + 1 < cs.len() {
+                prev_c_alpha[h] = Some(result.alpha.clone());
+            }
+            // carry to the next fold within this C
+            prev_f = result.f_indicators(&train.y);
+            prev_alpha = result.alpha;
+            prev_b = result.b;
+            prev_train = train_idx;
+        }
+
+        reports.push(CvReport {
+            dataset: full.name.clone(),
+            seeder: format!("{}+warmC", seeder.name()),
+            k,
+            rounds,
+            partition: if ci == 0 { partition } else { Default::default() },
+        });
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::{run_kfold, CvOptions};
+    use crate::seeding::{ColdStart, Sir};
+
+    #[test]
+    fn rescale_preserves_feasibility() {
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let alpha = vec![0.5, 0.5, 2.0, 2.0];
+        let out = rescale_alpha(&alpha, &y, 2.0, 8.0);
+        let sum: f64 = out.iter().zip(&y).map(|(a, yy)| a * yy).sum();
+        assert!(sum.abs() < 1e-9);
+        assert!(out.iter().all(|&a| (0.0..=8.0).contains(&a)));
+        // scaling up by 4: unclipped values quadruple
+        assert!((out[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_down_clips_and_balances() {
+        let y = vec![1.0, -1.0];
+        let alpha = vec![4.0, 4.0];
+        let out = rescale_alpha(&alpha, &y, 4.0, 1.0);
+        assert!(out.iter().all(|&a| a <= 1.0));
+        let sum: f64 = out.iter().zip(&y).map(|(a, yy)| a * yy).sum();
+        assert!(sum.abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_c_sweep_matches_independent_runs() {
+        // A fine ascending grid (2× steps) at non-trivial C is the regime
+        // Chu et al. target; coarse grids on toy problems may not win.
+        let ds = crate::data::synth::generate("heart", Some(150), 5);
+        let kernel = Kernel::rbf(0.2);
+        let cs = [64.0, 128.0, 256.0, 512.0];
+        let warm = run_kfold_warm_c(&ds, kernel, &cs, 4, &Sir, WarmCOptions::default());
+        assert_eq!(warm.len(), cs.len());
+        let mut warm_total = 0u64;
+        let mut cold_total = 0u64;
+        for (i, &c) in cs.iter().enumerate() {
+            let cold = run_kfold(&ds, kernel, c, 4, &ColdStart, CvOptions::default());
+            // identical accuracy per C value
+            assert!(
+                (warm[i].accuracy() - cold.accuracy()).abs() < 1e-9,
+                "C={c}: warm {} vs cold {}",
+                warm[i].accuracy(),
+                cold.accuracy()
+            );
+            warm_total += warm[i].total_iterations();
+            cold_total += cold.total_iterations();
+        }
+        // the sweep beats independent cold runs overall
+        assert!(
+            warm_total < cold_total,
+            "warm sweep {warm_total} vs cold {cold_total}"
+        );
+    }
+
+    #[test]
+    fn pure_c_chain_without_fold_chain() {
+        let ds = crate::data::synth::generate("heart", Some(80), 7);
+        let kernel = Kernel::rbf(0.2);
+        let warm = run_kfold_warm_c(
+            &ds,
+            kernel,
+            &[1.0, 4.0],
+            3,
+            &ColdStart,
+            WarmCOptions {
+                fold_chain: false,
+                ..Default::default()
+            },
+        );
+        // second C's rounds all seeded from the first C
+        assert!(warm[1].total_iterations() > 0);
+        assert_eq!(warm[0].rounds.len(), 3);
+        assert_eq!(warm[1].rounds.len(), 3);
+    }
+}

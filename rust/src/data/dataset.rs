@@ -1,0 +1,104 @@
+//! A labelled binary-classification dataset.
+
+use super::matrix::DataMatrix;
+
+/// Binary-labelled dataset: features + labels in {+1, −1} + cached squared
+/// row norms (the RBF kernel uses ‖xᵢ−xⱼ‖² = ‖xᵢ‖² + ‖xⱼ‖² − 2xᵢ·xⱼ, so
+/// norms are computed once here).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: DataMatrix,
+    /// Labels, each +1.0 or −1.0.
+    pub y: Vec<f64>,
+    /// ‖xᵢ‖², one per row.
+    pub sq_norms: Vec<f64>,
+    /// Human-readable name (used in experiment tables).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: DataMatrix, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
+        for &label in &y {
+            assert!(
+                label == 1.0 || label == -1.0,
+                "labels must be ±1, got {label}"
+            );
+        }
+        let sq_norms = (0..x.rows()).map(|i| x.row_sq_norm(i)).collect();
+        Dataset {
+            x,
+            y,
+            sq_norms,
+            name: name.into(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Count of +1 labels.
+    pub fn positives(&self) -> usize {
+        self.y.iter().filter(|&&l| l > 0.0).count()
+    }
+
+    /// Subset by row indices (copies).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let x = self.x.select_rows(idx);
+        let y = idx.iter().map(|&i| self.y[i]).collect();
+        Dataset::new(format!("{}[{}]", self.name, idx.len()), x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            "tiny",
+            DataMatrix::dense(3, 2, vec![1., 0., 0., 2., 3., 4.]),
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn norms_precomputed() {
+        let d = tiny();
+        assert_eq!(d.sq_norms, vec![1.0, 4.0, 25.0]);
+    }
+
+    #[test]
+    fn counts() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.positives(), 2);
+    }
+
+    #[test]
+    fn select_remaps() {
+        let d = tiny().select(&[2, 0]);
+        assert_eq!(d.y, vec![1.0, 1.0]);
+        assert_eq!(d.sq_norms, vec![25.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        Dataset::new(
+            "bad",
+            DataMatrix::dense(1, 1, vec![1.0]),
+            vec![0.5],
+        );
+    }
+}

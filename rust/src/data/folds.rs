@@ -1,0 +1,256 @@
+//! k-fold partitioning and the round-to-round transition sets.
+//!
+//! The paper's §2 relationship: in round h (1-based; 0-based here), fold h
+//! is the test set 𝒯 and all other folds train. Moving to round h+1:
+//!
+//! - 𝓡 = fold h+1 — was *training* in round h, becomes the test set,
+//!   so it must be **removed** from the trained SVM;
+//! - 𝒯 = fold h — was the test set in round h, becomes training, so it
+//!   must be **added**;
+//! - 𝓢 = the remaining k−2 folds — shared between both rounds.
+//!
+//! [`FoldPlan::transition`] materialises exactly these sets, which is the
+//! interface every seeding algorithm consumes.
+
+use super::dataset::Dataset;
+use crate::util::rng::Pcg32;
+
+/// A k-fold partition of 0..n. Folds are near-equal size (sizes differ by
+/// at most 1) and stratified by label so each fold mirrors the global
+/// class balance — matching LibSVM's `svm_cross_validation` behaviour.
+#[derive(Debug, Clone)]
+pub struct FoldPlan {
+    pub k: usize,
+    /// folds[f] = sorted instance indices of fold f.
+    pub folds: Vec<Vec<usize>>,
+    n: usize,
+}
+
+/// The paper's 𝓡 / 𝒯 / 𝓢 sets for the h → h+1 handoff (§2).
+#[derive(Debug, Clone)]
+pub struct FoldTransition {
+    /// Instances leaving the training set (fold h+1): 𝓡.
+    pub removed: Vec<usize>,
+    /// Instances entering the training set (fold h, the old test set): 𝒯.
+    pub added: Vec<usize>,
+    /// Instances common to both training sets: 𝓢.
+    pub shared: Vec<usize>,
+}
+
+impl FoldPlan {
+    /// Stratified k-fold split, deterministic under `seed`.
+    pub fn stratified(ds: &Dataset, k: usize, seed: u64) -> FoldPlan {
+        assert!(k >= 2, "k must be >= 2, got {k}");
+        assert!(
+            k <= ds.len(),
+            "k={k} exceeds dataset size {}",
+            ds.len()
+        );
+        let mut rng = Pcg32::new(seed, 0xF01D5);
+        let mut pos: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] > 0.0).collect();
+        let mut neg: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] < 0.0).collect();
+        rng.shuffle(&mut pos);
+        rng.shuffle(&mut neg);
+
+        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+        // Deal each class round-robin so every fold gets its share.
+        for (i, &idx) in pos.iter().enumerate() {
+            folds[i % k].push(idx);
+        }
+        // Offset the negative deal so fold sizes stay balanced when the
+        // positive count is not a multiple of k.
+        let offset = pos.len() % k;
+        for (i, &idx) in neg.iter().enumerate() {
+            folds[(i + offset) % k].push(idx);
+        }
+        for f in folds.iter_mut() {
+            f.sort_unstable();
+        }
+        FoldPlan {
+            k,
+            folds,
+            n: ds.len(),
+        }
+    }
+
+    /// Build from explicit folds (each a sorted index list into 0..n).
+    /// Used by callers with their own stratification (e.g. multi-class
+    /// one-vs-one, which stratifies on the full label set and projects).
+    pub fn from_folds(folds: Vec<Vec<usize>>, n: usize) -> FoldPlan {
+        let k = folds.len();
+        assert!(k >= 2, "need at least 2 folds");
+        debug_assert_eq!(folds.iter().map(Vec::len).sum::<usize>(), n);
+        FoldPlan { k, folds, n }
+    }
+
+    /// Leave-one-out plan: k = n, fold i = {i}.
+    pub fn leave_one_out(n: usize) -> FoldPlan {
+        FoldPlan {
+            k: n,
+            folds: (0..n).map(|i| vec![i]).collect(),
+            n,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Training indices for round h: every fold except h, ascending.
+    pub fn train_indices(&self, h: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n - self.folds[h].len());
+        for (f, fold) in self.folds.iter().enumerate() {
+            if f != h {
+                out.extend_from_slice(fold);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Test indices for round h (fold h).
+    pub fn test_indices(&self, h: usize) -> &[usize] {
+        &self.folds[h]
+    }
+
+    /// The 𝓡/𝒯/𝓢 handoff sets between rounds h and h+1 (see module doc).
+    pub fn transition(&self, h: usize) -> FoldTransition {
+        assert!(h + 1 < self.k, "no round after h={h} for k={}", self.k);
+        let removed = self.folds[h + 1].clone();
+        let added = self.folds[h].clone();
+        let mut shared = Vec::with_capacity(self.n - removed.len() - added.len());
+        for (f, fold) in self.folds.iter().enumerate() {
+            if f != h && f != h + 1 {
+                shared.extend_from_slice(fold);
+            }
+        }
+        shared.sort_unstable();
+        FoldTransition {
+            removed,
+            added,
+            shared,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::DataMatrix;
+
+    fn ds(n: usize, pos_frac: f64) -> Dataset {
+        let y: Vec<f64> = (0..n)
+            .map(|i| if (i as f64) < pos_frac * n as f64 { 1.0 } else { -1.0 })
+            .collect();
+        Dataset::new(
+            "t",
+            DataMatrix::dense(n, 1, (0..n).map(|i| i as f32).collect()),
+            y,
+        )
+    }
+
+    #[test]
+    fn folds_partition_exactly() {
+        let d = ds(103, 0.3);
+        let plan = FoldPlan::stratified(&d, 10, 7);
+        let mut all: Vec<usize> = plan.folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_sizes_balanced() {
+        let d = ds(103, 0.3);
+        let plan = FoldPlan::stratified(&d, 10, 7);
+        let sizes: Vec<usize> = plan.folds.iter().map(|f| f.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "sizes {sizes:?}");
+    }
+
+    #[test]
+    fn stratification_keeps_class_balance() {
+        let d = ds(200, 0.25);
+        let plan = FoldPlan::stratified(&d, 10, 3);
+        for fold in &plan.folds {
+            let pos = fold.iter().filter(|&&i| d.y[i] > 0.0).count();
+            assert_eq!(pos, 5, "each fold of 20 should hold 5 positives");
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let d = ds(50, 0.5);
+        let a = FoldPlan::stratified(&d, 5, 42);
+        let b = FoldPlan::stratified(&d, 5, 42);
+        assert_eq!(a.folds, b.folds);
+        let c = FoldPlan::stratified(&d, 5, 43);
+        assert_ne!(a.folds, c.folds);
+    }
+
+    #[test]
+    fn train_test_disjoint_cover() {
+        let d = ds(30, 0.5);
+        let plan = FoldPlan::stratified(&d, 3, 1);
+        for h in 0..3 {
+            let train = plan.train_indices(h);
+            let test = plan.test_indices(h);
+            let mut union: Vec<usize> = train.iter().chain(test.iter()).copied().collect();
+            union.sort_unstable();
+            assert_eq!(union, (0..30).collect::<Vec<_>>());
+            assert!(train.iter().all(|i| !test.contains(i)));
+        }
+    }
+
+    #[test]
+    fn transition_sets_match_paper_definition() {
+        let d = ds(40, 0.5);
+        let plan = FoldPlan::stratified(&d, 4, 9);
+        for h in 0..3 {
+            let t = plan.transition(h);
+            // 𝓡 = fold h+1, 𝒯 = fold h
+            assert_eq!(t.removed, plan.folds[h + 1]);
+            assert_eq!(t.added, plan.folds[h]);
+            // 𝓢 = train(h) ∖ 𝓡 = train(h+1) ∖ 𝒯
+            let train_h = plan.train_indices(h);
+            let mut expect: Vec<usize> = train_h
+                .iter()
+                .filter(|i| !t.removed.contains(i))
+                .copied()
+                .collect();
+            expect.sort_unstable();
+            assert_eq!(t.shared, expect);
+            // 𝒯 ∪ 𝓢 = train(h+1)
+            let mut next: Vec<usize> = t.added.iter().chain(t.shared.iter()).copied().collect();
+            next.sort_unstable();
+            assert_eq!(next, plan.train_indices(h + 1));
+        }
+    }
+
+    #[test]
+    fn shared_fraction_matches_k() {
+        // For k folds, |S| / |train| = (k-2)/(k-1) — e.g. 8/9 ≈ 89% at k=10.
+        let d = ds(1000, 0.5);
+        let plan = FoldPlan::stratified(&d, 10, 5);
+        let t = plan.transition(0);
+        let train_size = plan.train_indices(0).len();
+        let frac = t.shared.len() as f64 / train_size as f64;
+        assert!((frac - 8.0 / 9.0).abs() < 0.01, "shared fraction {frac}");
+    }
+
+    #[test]
+    fn loo_plan() {
+        let plan = FoldPlan::leave_one_out(5);
+        assert_eq!(plan.k, 5);
+        assert_eq!(plan.test_indices(3), &[3]);
+        assert_eq!(plan.train_indices(3), vec![0, 1, 2, 4]);
+        let t = plan.transition(1);
+        assert_eq!(t.removed, vec![2]);
+        assert_eq!(t.added, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "k must be >= 2")]
+    fn rejects_k1() {
+        FoldPlan::stratified(&ds(10, 0.5), 1, 0);
+    }
+}

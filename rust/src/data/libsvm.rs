@@ -1,0 +1,252 @@
+//! LibSVM / SVMlight text format I/O.
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...` with
+//! 1-based feature indices. This loader accepts real LibSVM-site files
+//! (Adult `a9a`, `heart_scale`, Madelon, MNIST, `w8a`), so genuine data can
+//! replace the synthetic analogues wherever available.
+
+use super::dataset::Dataset;
+use super::matrix::{CsrMatrix, DataMatrix};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("dataset is empty")]
+    Empty,
+}
+
+/// Parse LibSVM text. Labels are mapped to ±1: {+1,1} → +1, {-1,0,2} → −1
+/// (the paper studies binary classification; MNIST-style multi-class files
+/// are binarised by `label <= threshold`, here label < 1 or == 0 heuristic
+/// is NOT applied — pass pre-binarised files or use `parse_libsvm_binarise`).
+pub fn parse_libsvm(text: &str, name: &str) -> Result<Dataset, LibsvmError> {
+    parse_inner(text.lines().map(|l| Ok(l.to_string())), name, None)
+}
+
+/// Parse with explicit binarisation: labels <= `threshold` become −1,
+/// the rest +1. Matches how MNIST odd/even-style binary tasks are built.
+pub fn parse_libsvm_binarise(
+    text: &str,
+    name: &str,
+    threshold: f64,
+) -> Result<Dataset, LibsvmError> {
+    parse_inner(text.lines().map(|l| Ok(l.to_string())), name, Some(threshold))
+}
+
+/// Read a LibSVM file from disk.
+pub fn read_libsvm(path: impl AsRef<Path>) -> Result<Dataset, LibsvmError> {
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "dataset".to_string());
+    let file = std::fs::File::open(path.as_ref())?;
+    let reader = BufReader::new(file);
+    parse_inner(reader.lines(), &name, None)
+}
+
+fn parse_inner(
+    lines: impl Iterator<Item = std::io::Result<String>>,
+    name: &str,
+    binarise: Option<f64>,
+) -> Result<Dataset, LibsvmError> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_col: u32 = 0;
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: "missing label".into(),
+        })?;
+        let raw: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label {label_tok:?}"),
+        })?;
+        let label = match binarise {
+            Some(t) => {
+                if raw <= t {
+                    -1.0
+                } else {
+                    1.0
+                }
+            }
+            None => {
+                if raw > 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        };
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for tok in parts {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature token {tok:?}"),
+            })?;
+            let idx: u32 = idx_s.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature index {idx_s:?}"),
+            })?;
+            if idx == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based, got 0".into(),
+                });
+            }
+            let val: f32 = val_s.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad feature value {val_s:?}"),
+            })?;
+            let col = idx - 1;
+            max_col = max_col.max(col);
+            row.push((col, val));
+        }
+        row.sort_by_key(|&(c, _)| c);
+        // LibSVM files occasionally repeat an index; keep the first
+        // occurrence (Vec::dedup semantics), matching sort stability.
+        row.dedup_by_key(|&mut (c, _)| c);
+        rows.push(row);
+        labels.push(label);
+    }
+
+    if rows.is_empty() {
+        return Err(LibsvmError::Empty);
+    }
+    let cols = max_col as usize + 1;
+    let csr = CsrMatrix::from_rows(cols, &rows);
+
+    // Densify automatically when the data is mostly non-zero: dense row
+    // access is faster and the storage smaller than CSR at >50% density.
+    let density = csr.nnz() as f64 / (csr.rows * csr.cols) as f64;
+    let x = if density > 0.5 {
+        DataMatrix::dense(csr.rows, csr.cols, DataMatrix::Sparse(csr).to_dense_vec())
+    } else {
+        DataMatrix::Sparse(csr)
+    };
+    Ok(Dataset::new(name, x, labels))
+}
+
+/// Write a dataset in LibSVM format (sparse lines, 1-based indices).
+pub fn write_libsvm(ds: &Dataset, mut w: impl Write) -> std::io::Result<()> {
+    for i in 0..ds.len() {
+        let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        match &ds.x {
+            DataMatrix::Sparse(m) => {
+                let (idx, val) = m.row(i);
+                for (&c, &v) in idx.iter().zip(val) {
+                    write!(w, " {}:{}", c + 1, v)?;
+                }
+            }
+            DataMatrix::Dense { .. } => {
+                for (j, &v) in ds.x.dense_row(i).iter().enumerate() {
+                    if v != 0.0 {
+                        write!(w, " {}:{}", j + 1, v)?;
+                    }
+                }
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.0
+-1 2:2.0
++1 1:1.0 2:1.0 3:1.0
+";
+
+    #[test]
+    fn parses_basic_file() {
+        let ds = parse_libsvm(SAMPLE, "sample").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.dot_rows(0, 2), 0.5 + 1.0);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# header\n\n+1 1:1 # trailing\n\n-1 1:2\n";
+        let ds = parse_libsvm(text, "c").unwrap();
+        assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn zero_label_is_negative() {
+        let ds = parse_libsvm("0 1:1\n1 1:1\n", "z").unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn binarise_threshold() {
+        // digits 0-9; <=4 → -1 (even/odd style split by magnitude)
+        let text = "3 1:1\n7 1:1\n4 1:1\n5 1:1\n";
+        let ds = parse_libsvm_binarise(text, "digits", 4.0).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(matches!(
+            parse_libsvm("+1 0:1\n", "bad"),
+            Err(LibsvmError::Parse { line: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_token() {
+        assert!(parse_libsvm("+1 1-0.5\n", "bad").is_err());
+        assert!(parse_libsvm("abc 1:0.5\n", "bad").is_err());
+        assert!(matches!(parse_libsvm("", "e"), Err(LibsvmError::Empty)));
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let ds = parse_libsvm(SAMPLE, "s").unwrap();
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        let ds2 = parse_libsvm(std::str::from_utf8(&buf).unwrap(), "s").unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x.to_dense_vec(), ds2.x.to_dense_vec());
+    }
+
+    #[test]
+    fn dense_promotion_for_dense_data() {
+        // 100% density → dense storage
+        let text = "+1 1:1 2:2\n-1 1:3 2:4\n";
+        let ds = parse_libsvm(text, "d").unwrap();
+        assert!(!ds.x.is_sparse());
+        // sparse data stays sparse
+        let mut sparse_text = String::new();
+        for i in 0..20 {
+            sparse_text.push_str(&format!("+1 {}:1\n", i * 5 + 1));
+        }
+        let ds2 = parse_libsvm(&sparse_text, "sp").unwrap();
+        assert!(ds2.x.is_sparse());
+    }
+
+    #[test]
+    fn duplicate_indices_keep_first() {
+        let ds = parse_libsvm("+1 1:1 1:9\n", "dup").unwrap();
+        assert_eq!(ds.x.row_sq_norm(0), 1.0);
+    }
+}

@@ -1,0 +1,347 @@
+//! Feature-matrix storage: dense row-major f32 and CSR sparse.
+//!
+//! Adult/Webdata-style datasets are sparse binary (a few % non-zeros);
+//! storing them dense would waste memory *and* slow the kernel hot loop,
+//! so `DataMatrix` abstracts over both and the kernel module dispatches on
+//! the variant.
+
+/// Compressed sparse row matrix, f32 values, u32 column indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row i occupies values[indptr[i]..indptr[i+1]].
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (col, value) pairs. Pairs must be sorted by col.
+    pub fn from_rows(cols: usize, rows: &[Vec<(u32, f32)>]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in rows {
+            debug_assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "cols not sorted");
+            for &(c, v) in row {
+                assert!((c as usize) < cols, "col {c} out of bounds {cols}");
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            rows: rows.len(),
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Non-zeros of row i as (indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sparse·sparse dot product of rows i and j (merge join).
+    #[inline]
+    pub fn dot_rows(&self, i: usize, j: usize) -> f64 {
+        let (ia, va) = self.row(i);
+        let (ib, vb) = self.row(j);
+        sparse_dot(ia, va, ib, vb)
+    }
+
+    /// Dot product of row i with an external sparse row.
+    #[inline]
+    pub fn dot_row_with(&self, i: usize, idx: &[u32], val: &[f32]) -> f64 {
+        let (ia, va) = self.row(i);
+        sparse_dot(ia, va, idx, val)
+    }
+
+    /// Densify row i into `out` (len = cols), zero-filled first.
+    pub fn densify_row(&self, i: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        let (idx, val) = self.row(i);
+        for (&c, &v) in idx.iter().zip(val) {
+            out[c as usize] = v;
+        }
+    }
+}
+
+/// Merge-join dot product of two sorted sparse rows.
+#[inline]
+pub fn sparse_dot(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < ia.len() && q < ib.len() {
+        let (ca, cb) = (ia[p], ib[q]);
+        if ca == cb {
+            acc += va[p] as f64 * vb[q] as f64;
+            p += 1;
+            q += 1;
+        } else if ca < cb {
+            p += 1;
+        } else {
+            q += 1;
+        }
+    }
+    acc
+}
+
+/// Feature matrix: dense or sparse, uniform row-oriented access.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataMatrix {
+    /// Row-major dense: data[i*cols..(i+1)*cols].
+    Dense {
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+    },
+    Sparse(CsrMatrix),
+}
+
+impl DataMatrix {
+    pub fn dense(rows: usize, cols: usize, data: Vec<f32>) -> DataMatrix {
+        assert_eq!(data.len(), rows * cols);
+        DataMatrix::Dense { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            DataMatrix::Dense { rows, .. } => *rows,
+            DataMatrix::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            DataMatrix::Dense { cols, .. } => *cols,
+            DataMatrix::Sparse(m) => m.cols,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DataMatrix::Sparse(_))
+    }
+
+    /// Dense row view; panics for sparse (use `densify_row`).
+    #[inline]
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        match self {
+            DataMatrix::Dense { cols, data, .. } => &data[i * cols..(i + 1) * cols],
+            DataMatrix::Sparse(_) => panic!("dense_row on sparse matrix"),
+        }
+    }
+
+    /// x_i · x_j in f64.
+    #[inline]
+    pub fn dot_rows(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DataMatrix::Dense { .. } => {
+                let (a, b) = (self.dense_row(i), self.dense_row(j));
+                dense_dot(a, b)
+            }
+            DataMatrix::Sparse(m) => m.dot_rows(i, j),
+        }
+    }
+
+    /// ‖x_i‖² in f64.
+    #[inline]
+    pub fn row_sq_norm(&self, i: usize) -> f64 {
+        match self {
+            DataMatrix::Dense { .. } => {
+                let r = self.dense_row(i);
+                dense_dot(r, r)
+            }
+            DataMatrix::Sparse(m) => {
+                let (_, v) = m.row(i);
+                v.iter().map(|&x| (x as f64) * (x as f64)).sum()
+            }
+        }
+    }
+
+    /// Dot product between row i of self and row j of `other` (shapes must
+    /// share `cols`). Used across train/test splits.
+    pub fn dot_cross(&self, i: usize, other: &DataMatrix, j: usize) -> f64 {
+        assert_eq!(self.cols(), other.cols());
+        match (self, other) {
+            (DataMatrix::Dense { .. }, DataMatrix::Dense { .. }) => {
+                dense_dot(self.dense_row(i), other.dense_row(j))
+            }
+            (DataMatrix::Sparse(a), DataMatrix::Sparse(b)) => {
+                let (ib, vb) = b.row(j);
+                a.dot_row_with(i, ib, vb)
+            }
+            (DataMatrix::Dense { .. }, DataMatrix::Sparse(b)) => {
+                let (idx, val) = b.row(j);
+                let row = self.dense_row(i);
+                idx.iter()
+                    .zip(val)
+                    .map(|(&c, &v)| row[c as usize] as f64 * v as f64)
+                    .sum()
+            }
+            (DataMatrix::Sparse(a), DataMatrix::Dense { .. }) => {
+                let (idx, val) = a.row(i);
+                let row = other.dense_row(j);
+                idx.iter()
+                    .zip(val)
+                    .map(|(&c, &v)| v as f64 * row[c as usize] as f64)
+                    .sum()
+            }
+        }
+    }
+
+    /// Extract the sub-matrix of the given rows (preserves storage kind).
+    pub fn select_rows(&self, idx: &[usize]) -> DataMatrix {
+        match self {
+            DataMatrix::Dense { cols, .. } => {
+                let mut data = Vec::with_capacity(idx.len() * cols);
+                for &i in idx {
+                    data.extend_from_slice(self.dense_row(i));
+                }
+                DataMatrix::dense(idx.len(), *cols, data)
+            }
+            DataMatrix::Sparse(m) => {
+                let rows: Vec<Vec<(u32, f32)>> = idx
+                    .iter()
+                    .map(|&i| {
+                        let (ix, vx) = m.row(i);
+                        ix.iter().copied().zip(vx.iter().copied()).collect()
+                    })
+                    .collect();
+                DataMatrix::Sparse(CsrMatrix::from_rows(m.cols, &rows))
+            }
+        }
+    }
+
+    /// Densify all rows into a row-major f32 buffer (for the XLA backend,
+    /// which takes dense blocks).
+    pub fn to_dense_vec(&self) -> Vec<f32> {
+        match self {
+            DataMatrix::Dense { data, .. } => data.clone(),
+            DataMatrix::Sparse(m) => {
+                let mut out = vec![0.0f32; m.rows * m.cols];
+                for i in 0..m.rows {
+                    let (idx, val) = m.row(i);
+                    let base = i * m.cols;
+                    for (&c, &v) in idx.iter().zip(val) {
+                        out[base + c as usize] = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// f32 slices, f64 accumulation (matches LibSVM's double kernel math).
+#[inline]
+pub fn dense_dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] as f64 * b[i] as f64;
+        acc[1] += a[i + 1] as f64 * b[i + 1] as f64;
+        acc[2] += a[i + 2] as f64 * b[i + 2] as f64;
+        acc[3] += a[i + 3] as f64 * b[i + 3] as f64;
+    }
+    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        sum += a[i] as f64 * b[i] as f64;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_csr() -> CsrMatrix {
+        // [[1,0,2],[0,3,0],[4,5,6]]
+        CsrMatrix::from_rows(
+            3,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, 4.0), (1, 5.0), (2, 6.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn csr_row_access() {
+        let m = small_csr();
+        assert_eq!(m.nnz(), 6);
+        let (idx, val) = m.row(1);
+        assert_eq!(idx, &[1]);
+        assert_eq!(val, &[3.0]);
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense() {
+        let m = small_csr();
+        // row0 · row2 = 1*4 + 2*6 = 16
+        assert_eq!(m.dot_rows(0, 2), 16.0);
+        // row0 · row1 = 0 (disjoint support)
+        assert_eq!(m.dot_rows(0, 1), 0.0);
+    }
+
+    #[test]
+    fn dense_sparse_agree() {
+        let sp = DataMatrix::Sparse(small_csr());
+        let de = DataMatrix::dense(3, 3, vec![1., 0., 2., 0., 3., 0., 4., 5., 6.]);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(sp.dot_rows(i, j), de.dot_rows(i, j), "({i},{j})");
+                assert_eq!(sp.dot_cross(i, &de, j), de.dot_rows(i, j));
+                assert_eq!(de.dot_cross(i, &sp, j), de.dot_rows(i, j));
+            }
+            assert_eq!(sp.row_sq_norm(i), de.row_sq_norm(i));
+        }
+    }
+
+    #[test]
+    fn select_rows_both_kinds() {
+        let sp = DataMatrix::Sparse(small_csr());
+        let de = DataMatrix::dense(3, 3, sp.to_dense_vec());
+        let sub_sp = sp.select_rows(&[2, 0]);
+        let sub_de = de.select_rows(&[2, 0]);
+        assert_eq!(sub_sp.rows(), 2);
+        assert_eq!(sub_sp.to_dense_vec(), sub_de.to_dense_vec());
+        assert_eq!(sub_de.dense_row(0), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let m = small_csr();
+        let d = DataMatrix::Sparse(m).to_dense_vec();
+        assert_eq!(d, vec![1., 0., 2., 0., 3., 0., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn densify_row_zero_fills() {
+        let m = small_csr();
+        let mut buf = vec![9.0f32; 3];
+        m.densify_row(1, &mut buf);
+        assert_eq!(buf, vec![0., 3., 0.]);
+    }
+
+    #[test]
+    fn zero_values_dropped() {
+        let m = CsrMatrix::from_rows(2, &[vec![(0, 0.0), (1, 5.0)]]);
+        assert_eq!(m.nnz(), 1);
+    }
+}

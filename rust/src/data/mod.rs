@@ -1,0 +1,16 @@
+//! Dataset substrate: storage (dense + CSR sparse), LibSVM-format I/O,
+//! feature scaling, stratified fold partitioning, and the synthetic
+//! analogues of the paper's five benchmark datasets.
+
+mod dataset;
+mod folds;
+mod libsvm;
+mod matrix;
+mod scale;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use folds::{FoldPlan, FoldTransition};
+pub use libsvm::{parse_libsvm, parse_libsvm_binarise, read_libsvm, write_libsvm, LibsvmError};
+pub use matrix::{CsrMatrix, DataMatrix};
+pub use scale::{scale_minmax, ScaleParams};

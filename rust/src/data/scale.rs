@@ -1,0 +1,205 @@
+//! Min–max feature scaling (the `svm-scale` step of the LibSVM pipeline).
+//!
+//! RBF hyper-parameters in the paper's Table 2 assume scaled inputs (the
+//! LibSVM site's `heart_scale`, `a9a`, `w8a` are pre-scaled); our synthetic
+//! generators emit scaled data directly, but the loader path for real files
+//! needs this.
+
+use super::dataset::Dataset;
+use super::matrix::DataMatrix;
+
+/// Per-feature affine parameters fitted on a training set; apply to any
+/// split (fit-on-train / apply-on-test to avoid leakage).
+#[derive(Debug, Clone)]
+pub struct ScaleParams {
+    pub lo: f32,
+    pub hi: f32,
+    /// Per-feature (min, max) over the fitted data.
+    pub feature_range: Vec<(f32, f32)>,
+}
+
+impl ScaleParams {
+    /// Fit min/max per feature.
+    pub fn fit(ds: &Dataset, lo: f32, hi: f32) -> ScaleParams {
+        let d = ds.dim();
+        let mut range = vec![(f32::INFINITY, f32::NEG_INFINITY); d];
+        match &ds.x {
+            DataMatrix::Dense { .. } => {
+                for i in 0..ds.len() {
+                    for (j, &v) in ds.x.dense_row(i).iter().enumerate() {
+                        range[j].0 = range[j].0.min(v);
+                        range[j].1 = range[j].1.max(v);
+                    }
+                }
+            }
+            DataMatrix::Sparse(m) => {
+                // Sparse: implicit zeros participate in min/max.
+                let mut seen = vec![0usize; d];
+                for i in 0..m.rows {
+                    let (idx, val) = m.row(i);
+                    for (&c, &v) in idx.iter().zip(val) {
+                        let j = c as usize;
+                        range[j].0 = range[j].0.min(v);
+                        range[j].1 = range[j].1.max(v);
+                        seen[j] += 1;
+                    }
+                }
+                for j in 0..d {
+                    if seen[j] < m.rows {
+                        range[j].0 = range[j].0.min(0.0);
+                        range[j].1 = range[j].1.max(0.0);
+                    }
+                }
+            }
+        }
+        for r in range.iter_mut() {
+            if !r.0.is_finite() {
+                *r = (0.0, 0.0);
+            }
+        }
+        ScaleParams {
+            lo,
+            hi,
+            feature_range: range,
+        }
+    }
+
+    #[inline]
+    fn scale_one(&self, j: usize, v: f32) -> f32 {
+        let (mn, mx) = self.feature_range[j];
+        if mx <= mn {
+            return 0.0; // constant feature carries no information
+        }
+        self.lo + (self.hi - self.lo) * (v - mn) / (mx - mn)
+    }
+
+    /// Apply to a dataset, producing a new (dense) dataset.
+    ///
+    /// Scaling generally destroys sparsity (zero maps to a non-zero unless
+    /// lo ≤ 0 ≤ hi maps zero to zero only when mn = 0); we keep CSR only if
+    /// zeros are preserved, i.e. every feature's min is exactly 0 and lo=0.
+    pub fn apply(&self, ds: &Dataset) -> Dataset {
+        let zero_preserved =
+            self.lo == 0.0 && self.feature_range.iter().all(|&(mn, _)| mn == 0.0);
+        match (&ds.x, zero_preserved) {
+            (DataMatrix::Sparse(m), true) => {
+                let rows: Vec<Vec<(u32, f32)>> = (0..m.rows)
+                    .map(|i| {
+                        let (idx, val) = m.row(i);
+                        idx.iter()
+                            .zip(val)
+                            .map(|(&c, &v)| (c, self.scale_one(c as usize, v)))
+                            .collect()
+                    })
+                    .collect();
+                Dataset::new(
+                    ds.name.clone(),
+                    DataMatrix::Sparse(super::matrix::CsrMatrix::from_rows(m.cols, &rows)),
+                    ds.y.clone(),
+                )
+            }
+            _ => {
+                let d = ds.dim();
+                let dense = ds.x.to_dense_vec();
+                let scaled: Vec<f32> = dense
+                    .iter()
+                    .enumerate()
+                    .map(|(flat, &v)| self.scale_one(flat % d, v))
+                    .collect();
+                Dataset::new(
+                    ds.name.clone(),
+                    DataMatrix::dense(ds.len(), d, scaled),
+                    ds.y.clone(),
+                )
+            }
+        }
+    }
+}
+
+/// Fit-and-apply convenience for a single dataset.
+pub fn scale_minmax(ds: &Dataset, lo: f32, hi: f32) -> Dataset {
+    ScaleParams::fit(ds, lo, hi).apply(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_ds() -> Dataset {
+        Dataset::new(
+            "d",
+            DataMatrix::dense(3, 2, vec![0., 10., 5., 20., 10., 30.]),
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn scales_to_unit_interval() {
+        let s = scale_minmax(&dense_ds(), 0.0, 1.0);
+        let flat = s.x.to_dense_vec();
+        assert_eq!(flat, vec![0.0, 0.0, 0.5, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn scales_to_symmetric_interval() {
+        let s = scale_minmax(&dense_ds(), -1.0, 1.0);
+        let flat = s.x.to_dense_vec();
+        assert_eq!(flat, vec![-1.0, -1.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn constant_feature_zeroed() {
+        let ds = Dataset::new(
+            "c",
+            DataMatrix::dense(2, 2, vec![5., 1., 5., 2.]),
+            vec![1.0, -1.0],
+        );
+        let s = scale_minmax(&ds, 0.0, 1.0);
+        let flat = s.x.to_dense_vec();
+        assert_eq!(flat[0], 0.0);
+        assert_eq!(flat[2], 0.0);
+    }
+
+    #[test]
+    fn fit_train_apply_test() {
+        let train = dense_ds();
+        let params = ScaleParams::fit(&train, 0.0, 1.0);
+        // test point outside the training range extrapolates linearly
+        let test = Dataset::new(
+            "t",
+            DataMatrix::dense(1, 2, vec![20., 40.]),
+            vec![1.0],
+        );
+        let st = params.apply(&test);
+        assert_eq!(st.x.to_dense_vec(), vec![2.0, 1.5]);
+    }
+
+    #[test]
+    fn sparse_zero_preserving_stays_sparse() {
+        use super::super::matrix::CsrMatrix;
+        let ds = Dataset::new(
+            "sp",
+            DataMatrix::Sparse(CsrMatrix::from_rows(
+                3,
+                &[vec![(0, 4.0)], vec![(2, 2.0)], vec![(0, 2.0), (2, 1.0)]],
+            )),
+            vec![1.0, -1.0, 1.0],
+        );
+        let s = scale_minmax(&ds, 0.0, 1.0);
+        assert!(s.x.is_sparse(), "zero-preserving scale should stay sparse");
+        assert_eq!(s.x.row_sq_norm(0), 1.0); // 4 → 1
+    }
+
+    #[test]
+    fn sparse_implicit_zero_in_range() {
+        use super::super::matrix::CsrMatrix;
+        // feature 0 values: {4, 0} → min 0 even though row 1 has no entry
+        let ds = Dataset::new(
+            "sp0",
+            DataMatrix::Sparse(CsrMatrix::from_rows(1, &[vec![(0, 4.0)], vec![]])),
+            vec![1.0, -1.0],
+        );
+        let p = ScaleParams::fit(&ds, 0.0, 1.0);
+        assert_eq!(p.feature_range[0], (0.0, 4.0));
+    }
+}

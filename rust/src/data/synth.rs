@@ -1,0 +1,350 @@
+//! Synthetic analogues of the paper's five benchmark datasets.
+//!
+//! The paper evaluates on LibSVM-site datasets (Table 2). This sandbox has
+//! no network access, so each dataset is replaced by a deterministic
+//! generator matching its **dimensionality, feature sparsity type, class
+//! balance, and qualitative hardness** — the properties the alpha-seeding
+//! effect actually depends on (fold-to-fold overlap and support-vector
+//! structure stability), per DESIGN.md §4. Cardinalities of the large sets
+//! are scaled to a 1-core sandbox; `heart` keeps its true size. A real
+//! LibSVM file can replace any analogue via `data::read_libsvm`.
+//!
+//! Hardness calibration (per paper Table 1 accuracy column):
+//! - `adult`  → ~82% accuracy, ~24% positives, sparse binary features
+//! - `heart`  → mid-50s% (paper: 55.56% — the C=2182 setting overfits)
+//! - `madelon`→ 50% (label ⟂ features: the γ=1/√2 on 500-dim data makes
+//!   every instance a support vector, which is the regime that matters)
+//! - `mnist`  → low-50s% (strong cluster structure, parity labels, heavy
+//!   overlap at the paper's γ)
+//! - `webdata`→ ~97% (easily separable sparse binary)
+
+use super::dataset::Dataset;
+use super::matrix::{CsrMatrix, DataMatrix};
+use crate::util::rng::Pcg32;
+
+/// SVM hyper-parameters, as in the paper's Table 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyper {
+    pub c: f64,
+    pub gamma: f64,
+}
+
+/// Specification of one paper dataset analogue.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    /// Canonical lower-case name ("adult", "heart", ...).
+    pub name: &'static str,
+    /// Cardinality in the paper.
+    pub paper_n: usize,
+    /// Default cardinality here (scaled for the sandbox).
+    pub default_n: usize,
+    /// Feature dimension (same as the paper).
+    pub dim: usize,
+    /// Hyper-parameters from the paper's Table 2.
+    pub hyper: Hyper,
+    /// Fraction of positive instances.
+    pub pos_frac: f64,
+    /// True if features are sparse binary (CSR storage).
+    pub sparse: bool,
+}
+
+/// The paper's five datasets (Table 2) with sandbox-scaled sizes.
+pub fn paper_datasets() -> Vec<SynthSpec> {
+    vec![
+        SynthSpec {
+            name: "adult",
+            paper_n: 32_561,
+            default_n: 2_000,
+            dim: 123,
+            hyper: Hyper { c: 100.0, gamma: 0.5 },
+            pos_frac: 0.24,
+            sparse: true,
+        },
+        SynthSpec {
+            name: "heart",
+            paper_n: 270,
+            default_n: 270,
+            dim: 13,
+            hyper: Hyper { c: 2182.0, gamma: 0.2 },
+            pos_frac: 0.44,
+            sparse: false,
+        },
+        SynthSpec {
+            name: "madelon",
+            paper_n: 2_000,
+            default_n: 600,
+            dim: 500,
+            hyper: Hyper { c: 1.0, gamma: std::f64::consts::FRAC_1_SQRT_2 },
+            pos_frac: 0.5,
+            sparse: false,
+        },
+        SynthSpec {
+            name: "mnist",
+            paper_n: 60_000,
+            default_n: 1_200,
+            dim: 780,
+            hyper: Hyper { c: 10.0, gamma: 0.125 },
+            pos_frac: 0.5,
+            sparse: false,
+        },
+        SynthSpec {
+            name: "webdata",
+            paper_n: 49_749,
+            default_n: 2_000,
+            dim: 300,
+            hyper: Hyper { c: 64.0, gamma: 7.8125 },
+            pos_frac: 0.3,
+            sparse: true,
+        },
+    ]
+}
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Option<SynthSpec> {
+    paper_datasets().into_iter().find(|s| s.name == name)
+}
+
+/// Generate an analogue dataset. `n` overrides the spec's default size
+/// (pass `None` for the default). Deterministic under `seed`.
+pub fn generate(name: &str, n: Option<usize>, seed: u64) -> Dataset {
+    let s = spec(name).unwrap_or_else(|| panic!("unknown dataset '{name}'"));
+    let n = n.unwrap_or(s.default_n);
+    match s.name {
+        "adult" => gen_sparse_binary(&s, n, seed, 0.08, 0.35),
+        "heart" => gen_gaussian_overlap(&s, n, seed, 0.55),
+        "madelon" => gen_random_labels(&s, n, seed),
+        "mnist" => gen_cluster_parity(&s, n, seed),
+        "webdata" => gen_sparse_binary(&s, n, seed, 0.05, 1.6),
+        other => panic!("unknown dataset '{other}'"),
+    }
+}
+
+/// Sparse binary features. Each class has its own per-feature activation
+/// profile; `base_rate` sets density, `separation` scales how far apart the
+/// class profiles are (higher → more separable: adult ~0.35 → ≈82%
+/// accuracy regime, webdata ~1.6 → ≈97%).
+fn gen_sparse_binary(
+    s: &SynthSpec,
+    n: usize,
+    seed: u64,
+    base_rate: f64,
+    separation: f64,
+) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xAD017);
+    let d = s.dim;
+    // Class-conditional activation rates per feature.
+    let mut rate_pos = vec![0.0f64; d];
+    let mut rate_neg = vec![0.0f64; d];
+    for j in 0..d {
+        let common = base_rate * rng.uniform(0.3, 1.7);
+        let delta = common * separation * rng.normal();
+        rate_pos[j] = (common + delta).clamp(0.002, 0.9);
+        rate_neg[j] = (common - delta).clamp(0.002, 0.9);
+    }
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = rng.bernoulli(s.pos_frac);
+        let rates = if pos { &rate_pos } else { &rate_neg };
+        let mut row = Vec::new();
+        for (j, &r) in rates.iter().enumerate() {
+            if rng.bernoulli(r) {
+                row.push((j as u32, 1.0f32));
+            }
+        }
+        rows.push(row);
+        y.push(if pos { 1.0 } else { -1.0 });
+    }
+    Dataset::new(
+        s.name,
+        DataMatrix::Sparse(CsrMatrix::from_rows(d, &rows)),
+        y,
+    )
+}
+
+/// Dense continuous features from heavily overlapping class-conditional
+/// Gaussians (scaled into roughly [−1, 1] like `heart_scale`).
+/// `mean_shift` controls overlap: 0.55 lands mid-50s–60s% accuracy at the
+/// paper's (C, γ), matching the Heart row's hardness.
+fn gen_gaussian_overlap(s: &SynthSpec, n: usize, seed: u64, mean_shift: f64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x43A27);
+    let d = s.dim;
+    // Class means drawn once; only a few informative dimensions.
+    let informative = (d / 3).max(1);
+    let mut mu = vec![0.0f64; d];
+    for m in mu.iter_mut().take(informative) {
+        *m = mean_shift * rng.normal();
+    }
+    let mut data = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = rng.bernoulli(s.pos_frac);
+        let sign = if pos { 1.0 } else { -1.0 };
+        for m in &mu {
+            let v = (sign * m + rng.normal() * 0.5).clamp(-1.0, 1.0);
+            data.push(v as f32);
+        }
+        y.push(sign);
+    }
+    Dataset::new(s.name, DataMatrix::dense(n, d, data), y)
+}
+
+/// Labels independent of features: the classifier cannot beat 50%, and at
+/// the paper's Madelon setting (γ≈0.707 over 500 standardised dims, C=1)
+/// every training instance ends up a bounded support vector — reproducing
+/// the regime where the paper's Madelon row shows its largest speedups.
+fn gen_random_labels(s: &SynthSpec, n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x3ADE1);
+    let d = s.dim;
+    let mut data = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _ in 0..d {
+            // standardised continuous features, as Madelon's are after scaling
+            data.push((rng.normal() * 0.5) as f32);
+        }
+        y.push(if rng.bernoulli(0.5) { 1.0 } else { -1.0 });
+    }
+    Dataset::new(s.name, DataMatrix::dense(n, d, data), y)
+}
+
+/// MNIST analogue: 10 cluster centroids in [0,1]^d (digit prototypes),
+/// label = centroid parity, strong within-cluster noise plus inter-cluster
+/// overlap so accuracy at the paper's (C=10, γ=0.125) sits in the low 50s,
+/// matching the paper's 50.85% binary-MNIST row.
+fn gen_cluster_parity(s: &SynthSpec, n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x30157);
+    let d = s.dim;
+    let clusters = 10;
+    // Prototypes: sparse-ish blobs like pixel images (most of the canvas
+    // dark, a patch lit per class).
+    let mut protos = vec![vec![0.0f64; d]; clusters];
+    for proto in protos.iter_mut() {
+        let lit = d / 8;
+        for _ in 0..lit {
+            let j = rng.gen_range(d);
+            proto[j] = rng.uniform(0.4, 1.0);
+        }
+    }
+    let mut data = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.gen_range(clusters);
+        // heavy noise: each pixel blends the prototype with another random
+        // cluster's prototype plus pixel noise, washing out separability so
+        // the paper's near-chance regime (50.85%, mostly bounded SVs —
+        // where alpha seeding shines) is reproduced
+        let other = rng.gen_range(clusters);
+        let blend = rng.uniform(0.42, 0.58);
+        for j in 0..d {
+            let v = blend * protos[c][j]
+                + (1.0 - blend) * protos[other][j]
+                + rng.normal() * 0.3;
+            data.push(v.clamp(0.0, 1.0) as f32);
+        }
+        y.push(if c % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    Dataset::new(s.name, DataMatrix::dense(n, d, data), y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_generate() {
+        for s in paper_datasets() {
+            let ds = generate(s.name, Some(120), 1);
+            assert_eq!(ds.len(), 120, "{}", s.name);
+            assert_eq!(ds.dim(), s.dim, "{}", s.name);
+            assert_eq!(ds.x.is_sparse(), s.sparse, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate("heart", None, 9);
+        let b = generate("heart", None, 9);
+        assert_eq!(a.x.to_dense_vec(), b.x.to_dense_vec());
+        assert_eq!(a.y, b.y);
+        let c = generate("heart", None, 10);
+        assert_ne!(a.x.to_dense_vec(), c.x.to_dense_vec());
+    }
+
+    #[test]
+    fn class_balance_near_spec() {
+        for s in paper_datasets() {
+            let ds = generate(s.name, Some(1000), 3);
+            let frac = ds.positives() as f64 / ds.len() as f64;
+            assert!(
+                (frac - s.pos_frac).abs() < 0.07,
+                "{}: pos frac {frac} vs spec {}",
+                s.name,
+                s.pos_frac
+            );
+        }
+    }
+
+    #[test]
+    fn heart_default_matches_paper_cardinality() {
+        let ds = generate("heart", None, 1);
+        assert_eq!(ds.len(), 270);
+        assert_eq!(ds.dim(), 13);
+    }
+
+    #[test]
+    fn madelon_labels_independent() {
+        // Mean feature value should not differ between classes.
+        let ds = generate("madelon", Some(400), 5);
+        let (mut sum_p, mut n_p, mut sum_n, mut n_n) = (0.0, 0, 0.0, 0);
+        for i in 0..ds.len() {
+            let m: f32 = ds.x.dense_row(i).iter().sum();
+            if ds.y[i] > 0.0 {
+                sum_p += m as f64;
+                n_p += 1;
+            } else {
+                sum_n += m as f64;
+                n_n += 1;
+            }
+        }
+        let diff = (sum_p / n_p as f64 - sum_n / n_n as f64).abs();
+        assert!(diff < 2.0, "class-conditional mean gap {diff}");
+    }
+
+    #[test]
+    fn sparse_analogues_are_actually_sparse() {
+        for name in ["adult", "webdata"] {
+            let ds = generate(name, Some(300), 2);
+            if let DataMatrix::Sparse(m) = &ds.x {
+                let density = m.nnz() as f64 / (m.rows * m.cols) as f64;
+                assert!(density < 0.35, "{name} density {density}");
+                assert!(density > 0.005, "{name} density {density}");
+            } else {
+                panic!("{name} should be sparse");
+            }
+        }
+    }
+
+    #[test]
+    fn values_in_expected_ranges() {
+        let mnist = generate("mnist", Some(100), 4);
+        for i in 0..mnist.len() {
+            for &v in mnist.x.dense_row(i) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        let heart = generate("heart", Some(100), 4);
+        for i in 0..heart.len() {
+            for &v in heart.x.dense_row(i) {
+                assert!((-1.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert!(spec("adult").is_some());
+        assert!(spec("nope").is_none());
+        assert_eq!(spec("madelon").unwrap().hyper.c, 1.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Kernel function definitions and evaluation over datasets.
+
+use crate::data::Dataset;
+
+/// The kernel functions LibSVM supports; the paper's experiments all use
+/// `Rbf` (Gaussian), with (C, γ) per dataset from its Table 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// K(x,z) = exp(−γ‖x−z‖²)
+    Rbf { gamma: f64 },
+    /// K(x,z) = x·z
+    Linear,
+    /// K(x,z) = (γ·x·z + coef0)^degree
+    Poly { gamma: f64, coef0: f64, degree: u32 },
+    /// K(x,z) = tanh(γ·x·z + coef0)
+    Sigmoid { gamma: f64, coef0: f64 },
+}
+
+impl Kernel {
+    pub fn rbf(gamma: f64) -> Kernel {
+        Kernel::Rbf { gamma }
+    }
+
+    /// Combine a dot product and the two squared norms into a kernel value.
+    /// For RBF this is the ‖x‖²+‖z‖²−2x·z expansion — norms are cached in
+    /// [`Dataset::sq_norms`], so only the dot product is data-dependent.
+    #[inline]
+    pub fn from_dot(&self, dot: f64, sq_i: f64, sq_j: f64) -> f64 {
+        match *self {
+            Kernel::Rbf { gamma } => {
+                let d2 = (sq_i + sq_j - 2.0 * dot).max(0.0);
+                (-gamma * d2).exp()
+            }
+            Kernel::Linear => dot,
+            Kernel::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => (gamma * dot + coef0).powi(degree as i32),
+            Kernel::Sigmoid { gamma, coef0 } => (gamma * dot + coef0).tanh(),
+        }
+    }
+
+    /// γ when the kernel has one (used by the XLA artifact dispatch, which
+    /// only supports RBF — the paper's kernel).
+    pub fn gamma(&self) -> Option<f64> {
+        match *self {
+            Kernel::Rbf { gamma } | Kernel::Poly { gamma, .. } | Kernel::Sigmoid { gamma, .. } => {
+                Some(gamma)
+            }
+            Kernel::Linear => None,
+        }
+    }
+}
+
+/// A dataset bound to a kernel: evaluates K(i,j), rows, and cross-dataset
+/// values natively (f64 accumulation, matching LibSVM's double math).
+#[derive(Debug, Clone)]
+pub struct KernelEval {
+    pub ds: Dataset,
+    pub kernel: Kernel,
+}
+
+impl KernelEval {
+    pub fn new(ds: Dataset, kernel: Kernel) -> KernelEval {
+        KernelEval { ds, kernel }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ds.is_empty()
+    }
+
+    /// K(xᵢ, xⱼ) within the dataset.
+    #[inline]
+    pub fn eval(&self, i: usize, j: usize) -> f64 {
+        let dot = self.ds.x.dot_rows(i, j);
+        self.kernel
+            .from_dot(dot, self.ds.sq_norms[i], self.ds.sq_norms[j])
+    }
+
+    /// Full kernel row K(xᵢ, ·) into `out` (len = n).
+    pub fn eval_row(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.len());
+        let sq_i = self.ds.sq_norms[i];
+        for (j, o) in out.iter_mut().enumerate() {
+            let dot = self.ds.x.dot_rows(i, j);
+            *o = self.kernel.from_dot(dot, sq_i, self.ds.sq_norms[j]);
+        }
+    }
+
+    /// K(xᵢ, zⱼ) against a row of another dataset with the same width.
+    #[inline]
+    pub fn eval_cross(&self, i: usize, other: &Dataset, j: usize) -> f64 {
+        let dot = self.ds.x.dot_cross(i, &other.x, j);
+        self.kernel
+            .from_dot(dot, self.ds.sq_norms[i], other.sq_norms[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataMatrix;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            DataMatrix::dense(3, 2, vec![0., 0., 1., 0., 0., 2.]),
+            vec![1.0, -1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn rbf_matches_definition() {
+        let ev = KernelEval::new(toy(), Kernel::rbf(0.5));
+        // ‖x0−x1‖² = 1 → exp(−0.5)
+        assert!((ev.eval(0, 1) - (-0.5f64).exp()).abs() < 1e-12);
+        // ‖x1−x2‖² = 1+4 = 5 → exp(−2.5)
+        assert!((ev.eval(1, 2) - (-2.5f64).exp()).abs() < 1e-12);
+        // self-similarity is exactly 1
+        assert_eq!(ev.eval(2, 2), 1.0);
+    }
+
+    #[test]
+    fn rbf_symmetry() {
+        let ev = KernelEval::new(toy(), Kernel::rbf(0.7));
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(ev.eval(i, j), ev.eval(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn linear_poly_sigmoid() {
+        let ev_l = KernelEval::new(toy(), Kernel::Linear);
+        assert_eq!(ev_l.eval(1, 2), 0.0);
+        let ds2 = Dataset::new(
+            "d2",
+            DataMatrix::dense(2, 1, vec![2.0, 3.0]),
+            vec![1.0, -1.0],
+        );
+        let ev_p = KernelEval::new(
+            ds2.clone(),
+            Kernel::Poly {
+                gamma: 1.0,
+                coef0: 1.0,
+                degree: 2,
+            },
+        );
+        // (2*3 + 1)^2 = 49
+        assert_eq!(ev_p.eval(0, 1), 49.0);
+        let ev_s = KernelEval::new(
+            ds2,
+            Kernel::Sigmoid {
+                gamma: 0.1,
+                coef0: 0.0,
+            },
+        );
+        assert!((ev_s.eval(0, 1) - 0.6f64.tanh()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_row_matches_pointwise() {
+        let ev = KernelEval::new(toy(), Kernel::rbf(1.3));
+        let mut row = vec![0.0; 3];
+        ev.eval_row(1, &mut row);
+        for j in 0..3 {
+            assert_eq!(row[j], ev.eval(1, j));
+        }
+    }
+
+    #[test]
+    fn eval_cross_consistent_with_self() {
+        let ds = toy();
+        let ev = KernelEval::new(ds.clone(), Kernel::rbf(0.9));
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((ev.eval_cross(i, &ds, j) - ev.eval(i, j)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_distance_clamped_nonnegative() {
+        // identical rows with float rounding must still give K = 1, not >1
+        let ds = Dataset::new(
+            "same",
+            DataMatrix::dense(2, 2, vec![0.3, 0.7, 0.3, 0.7]),
+            vec![1.0, -1.0],
+        );
+        let ev = KernelEval::new(ds, Kernel::rbf(10.0));
+        assert!(ev.eval(0, 1) <= 1.0);
+        assert!((ev.eval(0, 1) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Kernel functions and the kernel-row cache.
+//!
+//! The SMO hot loop requests two kernel rows per iteration; the seeding
+//! algorithms request cross-set blocks (K(𝓡,𝒯)) and matvecs. Single rows
+//! are served natively through an LRU cache ([`KernelCache`]); bulk blocks
+//! route to the AOT Pallas artifacts via `runtime::ComputeBackend`.
+
+mod cache;
+mod function;
+
+pub use cache::{CacheStats, KernelCache};
+pub use function::{Kernel, KernelEval};

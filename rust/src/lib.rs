@@ -1,0 +1,34 @@
+//! # alphaseed
+//!
+//! A production-grade reproduction of **"Improving Efficiency of SVM k-Fold
+//! Cross-Validation by Alpha Seeding"** (Wen et al., AAAI 2017) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the cross-validation coordinator: fold
+//!   scheduling, a LibSVM-equivalent SMO solver, and the paper's three
+//!   alpha-seeding algorithms (ATO, MIR, SIR) plus the leave-one-out
+//!   baselines (AVG, TOP).
+//! - **Layer 2 (python/compile)** — JAX compute graphs (kernel-row blocks,
+//!   kernel matvec) AOT-lowered to HLO text at build time.
+//! - **Layer 1 (python/compile/kernels)** — Pallas kernels for the Gaussian
+//!   kernel-matrix hot spot, tiled for VMEM/MXU.
+//!
+//! Python never runs at request time: `runtime::XlaBackend` loads the AOT
+//! artifacts through PJRT and serves bulk kernel evaluations to the solver.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod kernel;
+pub mod linalg;
+pub mod metrics;
+pub mod multiclass;
+pub mod runtime;
+pub mod seeding;
+pub mod smo;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate.
+//!
+//! ATO solves the margin-compensation system Φ (paper Eq. 10) and MIR the
+//! normal-equation least-squares system (paper Eq. 18); both may be
+//! singular, in which case the paper prescribes the Moore–Penrose
+//! pseudo-inverse (Greville 1960). The offline registry has no `nalgebra`/
+//! `ndarray`, so this module implements exactly what those need:
+//!
+//! - [`Mat`] — row-major dense f64 matrix with the usual products
+//! - LU with partial pivoting ([`Mat::lu_solve`], [`Mat::inverse`])
+//! - Cholesky for SPD systems ([`Mat::cholesky_solve`])
+//! - Householder QR least-squares ([`lstsq`])
+//! - One-sided Jacobi SVD ([`Mat::svd`]) and pseudo-inverse ([`Mat::pinv`])
+
+mod mat;
+mod solve;
+mod svd;
+
+pub use mat::Mat;
+pub use solve::{lstsq, LinalgError};

@@ -1,0 +1,328 @@
+//! Direct solvers: LU with partial pivoting, Cholesky, Householder QR
+//! least-squares.
+
+use super::Mat;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix is singular (pivot {pivot:.3e} at step {step})")]
+    Singular { step: usize, pivot: f64 },
+    #[error("matrix is not positive definite (diagonal {0:.3e})")]
+    NotPositiveDefinite(f64),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl Mat {
+    /// Solve A·x = b via LU with partial pivoting. A must be square.
+    pub fn lu_solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        let n = self.rows();
+        if self.cols() != n {
+            return Err(LinalgError::Shape(format!(
+                "lu_solve needs square A, got {}x{}",
+                self.rows(),
+                self.cols()
+            )));
+        }
+        if b.len() != n {
+            return Err(LinalgError::Shape(format!(
+                "rhs length {} != {}",
+                b.len(),
+                n
+            )));
+        }
+        let mut a = self.clone();
+        let mut x = b.to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+
+        for k in 0..n {
+            // Partial pivot: largest |a[i][k]| for i >= k.
+            let (mut pi, mut pv) = (k, a[(k, k)].abs());
+            for i in k + 1..n {
+                let v = a[(i, k)].abs();
+                if v > pv {
+                    pi = i;
+                    pv = v;
+                }
+            }
+            if pv < 1e-13 {
+                return Err(LinalgError::Singular { step: k, pivot: pv });
+            }
+            if pi != k {
+                perm.swap(pi, k);
+                // swap rows in a and x
+                for j in 0..n {
+                    let tmp = a[(k, j)];
+                    a[(k, j)] = a[(pi, j)];
+                    a[(pi, j)] = tmp;
+                }
+                x.swap(pi, k);
+            }
+            let pivot = a[(k, k)];
+            for i in k + 1..n {
+                let m = a[(i, k)] / pivot;
+                if m == 0.0 {
+                    continue;
+                }
+                a[(i, k)] = 0.0;
+                for j in k + 1..n {
+                    let v = a[(k, j)];
+                    a[(i, j)] -= m * v;
+                }
+                x[i] -= m * x[k];
+            }
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= a[(i, j)] * x[j];
+            }
+            x[i] = s / a[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Inverse via LU on the identity columns. Prefer `lu_solve`/`pinv`.
+    pub fn inverse(&self) -> Result<Mat, LinalgError> {
+        let n = self.rows();
+        let mut out = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = self.lu_solve(&e)?;
+            for i in 0..n {
+                out[(i, j)] = col[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve SPD system A·x = b via Cholesky (A = L·Lᵀ). Used for the MIR
+    /// normal equations when well-conditioned — ~2× cheaper than LU.
+    pub fn cholesky_solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        let n = self.rows();
+        if self.cols() != n || b.len() != n {
+            return Err(LinalgError::Shape("cholesky_solve shapes".into()));
+        }
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 1e-13 {
+                        return Err(LinalgError::NotPositiveDefinite(s));
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        // Forward: L·y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= l[(i, k)] * y[k];
+            }
+            y[i] = s / l[(i, i)];
+        }
+        // Backward: Lᵀ·x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= l[(k, i)] * x[k];
+            }
+            x[i] = s / l[(i, i)];
+        }
+        Ok(x)
+    }
+}
+
+/// Least-squares solution of min ‖A·x − b‖₂ via Householder QR.
+///
+/// Handles m ≥ n (overdetermined, the MIR case). For rank-deficient A the
+/// caller should fall back to [`Mat::pinv`].
+pub fn lstsq(a: &Mat, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+    let (m, n) = (a.rows(), a.cols());
+    if b.len() != m {
+        return Err(LinalgError::Shape(format!("lstsq rhs {} != {}", b.len(), m)));
+    }
+    if m < n {
+        return Err(LinalgError::Shape(format!(
+            "lstsq needs m >= n, got {m}x{n}"
+        )));
+    }
+    let mut r = a.clone();
+    let mut qtb = b.to_vec();
+
+    // Householder reflections column by column; apply to rhs as we go.
+    for k in 0..n {
+        // norm of column k below the diagonal
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-13 {
+            return Err(LinalgError::Singular {
+                step: k,
+                pivot: norm,
+            });
+        }
+        let alpha = if r[(k, k)] > 0.0 { -norm } else { norm };
+        // v = x - alpha*e1 (stored in-place below diagonal), beta = 2/(vᵀv)
+        let mut vtv = 0.0;
+        let v0 = r[(k, k)] - alpha;
+        vtv += v0 * v0;
+        for i in k + 1..m {
+            vtv += r[(i, k)] * r[(i, k)];
+        }
+        if vtv < 1e-300 {
+            continue; // column already triangular
+        }
+        let beta = 2.0 / vtv;
+        // Apply H = I - beta v vᵀ to the columns right of k (column k
+        // itself stores v below the diagonal and is finalised after).
+        for j in k + 1..n {
+            let mut s = v0 * r[(k, j)];
+            for i in k + 1..m {
+                s += r[(i, k)] * r[(i, j)];
+            }
+            s *= beta;
+            r[(k, j)] -= s * v0;
+            for i in k + 1..m {
+                let vik = r[(i, k)];
+                r[(i, j)] -= s * vik;
+            }
+        }
+        // Apply H to rhs.
+        let mut s = v0 * qtb[k];
+        for i in k + 1..m {
+            s += r[(i, k)] * qtb[i];
+        }
+        s *= beta;
+        qtb[k] -= s * v0;
+        for i in k + 1..m {
+            qtb[i] -= s * r[(i, k)];
+        }
+        r[(k, k)] = alpha;
+        for i in k + 1..m {
+            r[(i, k)] = 0.0;
+        }
+    }
+
+    // Back-substitute R x = Qᵀ b (top n rows).
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = qtb[i];
+        for j in i + 1..n {
+            s -= r[(i, j)] * x[j];
+        }
+        if r[(i, i)].abs() < 1e-13 {
+            return Err(LinalgError::Singular {
+                step: i,
+                pivot: r[(i, i)].abs(),
+            });
+        }
+        x[i] = s / r[(i, i)];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lu_solves_known_system() {
+        // 2x + y = 5 ; x + 3y = 10 → x = 1, y = 3
+        let a = Mat::from_rows(2, 2, &[2., 1., 1., 3.]);
+        let x = a.lu_solve(&[5., 10.]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_requires_pivoting() {
+        // a11 = 0 forces a row swap.
+        let a = Mat::from_rows(2, 2, &[0., 1., 1., 0.]);
+        let x = a.lu_solve(&[2., 3.]).unwrap();
+        assert_eq!(x, vec![3., 2.]);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(2, 2, &[1., 2., 2., 4.]);
+        assert!(matches!(
+            a.lu_solve(&[1., 2.]),
+            Err(LinalgError::Singular { .. })
+        ));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Mat::from_rows(3, 3, &[4., 2., 1., 2., 5., 3., 1., 3., 6.]);
+        let inv = a.inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye(3)) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_matches_lu_on_spd() {
+        let a = Mat::from_rows(3, 3, &[4., 2., 1., 2., 5., 3., 1., 3., 6.]);
+        let b = [1., -2., 0.5];
+        let x1 = a.cholesky_solve(&b).unwrap();
+        let x2 = a.lu_solve(&b).unwrap();
+        for (u, v) in x1.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, &[1., 2., 2., 1.]); // eigenvalues 3, -1
+        assert!(matches!(
+            a.cholesky_solve(&[1., 1.]),
+            Err(LinalgError::NotPositiveDefinite(_))
+        ));
+    }
+
+    #[test]
+    fn lstsq_exact_when_square() {
+        let a = Mat::from_rows(2, 2, &[2., 1., 1., 3.]);
+        let x = lstsq(&a, &[5., 10.]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-10);
+        assert!((x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_line_fit() {
+        // Fit y = 2t + 1 through noisy-free points: exact recovery.
+        let ts = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let a = Mat::from_fn(5, 2, |i, j| if j == 0 { ts[i] } else { 1.0 });
+        let b: Vec<f64> = ts.iter().map(|t| 2.0 * t + 1.0).collect();
+        let x = lstsq(&a, &b).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-10, "slope {x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-10, "intercept {x:?}");
+    }
+
+    #[test]
+    fn lstsq_minimises_residual() {
+        // Inconsistent system: verify normal equations Aᵀ(Ax−b)=0.
+        let a = Mat::from_rows(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        let b = [1., 1., 0.];
+        let x = lstsq(&a, &b).unwrap();
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
+        let grad = a.t_matvec(&resid);
+        for g in grad {
+            assert!(g.abs() < 1e-10, "gradient not zero: {g}");
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! One-sided Jacobi SVD and Moore–Penrose pseudo-inverse.
+//!
+//! The paper's ATO (Eq. 10) and MIR (Eq. 18) both say "if the inverse does
+//! not exist, find the pseudo inverse (Greville 1960)". Jacobi SVD is exact
+//! enough for the small systems these produce (|M|, |T| ≤ a few hundred)
+//! and needs no external LAPACK.
+
+use super::Mat;
+
+/// Result of a thin SVD: A = U · diag(s) · Vᵀ with U m×n, s n, V n×n
+/// (requires m ≥ n; callers transpose when m < n).
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub v: Mat,
+}
+
+impl Mat {
+    /// Thin SVD via one-sided Jacobi rotations on the columns of A.
+    ///
+    /// Converges when every column pair is numerically orthogonal. O(n²·m)
+    /// per sweep; typically < 10 sweeps for our sizes.
+    pub fn svd(&self) -> Svd {
+        let transpose = self.rows() < self.cols();
+        let a0 = if transpose { self.t() } else { self.clone() };
+        let (m, n) = (a0.rows(), a0.cols());
+
+        // Work on columns of `u` (starts as A), accumulate rotations in V.
+        let mut u = a0;
+        let mut v = Mat::eye(n);
+        let eps = 1e-14;
+        let max_sweeps = 60;
+
+        for _sweep in 0..max_sweeps {
+            let mut off = 0.0f64;
+            for p in 0..n {
+                for q in p + 1..n {
+                    // 2x2 Gram entries for columns p, q.
+                    let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                    for i in 0..m {
+                        let up = u[(i, p)];
+                        let uq = u[(i, q)];
+                        app += up * up;
+                        aqq += uq * uq;
+                        apq += up * uq;
+                    }
+                    if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                        continue;
+                    }
+                    off = off.max(apq.abs() / ((app * aqq).sqrt() + 1e-300));
+                    // Jacobi rotation annihilating apq.
+                    let tau = (aqq - app) / (2.0 * apq);
+                    let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = c * t;
+                    for i in 0..m {
+                        let up = u[(i, p)];
+                        let uq = u[(i, q)];
+                        u[(i, p)] = c * up - s * uq;
+                        u[(i, q)] = s * up + c * uq;
+                    }
+                    for i in 0..n {
+                        let vp = v[(i, p)];
+                        let vq = v[(i, q)];
+                        v[(i, p)] = c * vp - s * vq;
+                        v[(i, q)] = s * vp + c * vq;
+                    }
+                }
+            }
+            if off < 1e-12 {
+                break;
+            }
+        }
+
+        // Singular values = column norms of u; normalise columns.
+        let mut s = vec![0.0; n];
+        for j in 0..n {
+            let mut norm = 0.0;
+            for i in 0..m {
+                norm += u[(i, j)] * u[(i, j)];
+            }
+            let norm = norm.sqrt();
+            s[j] = norm;
+            if norm > 1e-300 {
+                for i in 0..m {
+                    u[(i, j)] /= norm;
+                }
+            }
+        }
+
+        // Sort descending by singular value.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+        let mut us = Mat::zeros(m, n);
+        let mut vs = Mat::zeros(n, n);
+        let mut ss = vec![0.0; n];
+        for (new_j, &old_j) in order.iter().enumerate() {
+            ss[new_j] = s[old_j];
+            for i in 0..m {
+                us[(i, new_j)] = u[(i, old_j)];
+            }
+            for i in 0..n {
+                vs[(i, new_j)] = v[(i, old_j)];
+            }
+        }
+
+        if transpose {
+            // A = (Aᵀ)ᵀ = (U S Vᵀ)ᵀ = V S Uᵀ
+            Svd {
+                u: vs,
+                s: ss,
+                v: us,
+            }
+        } else {
+            Svd {
+                u: us,
+                s: ss,
+                v: vs,
+            }
+        }
+    }
+
+    /// Moore–Penrose pseudo-inverse: V · diag(1/sᵢ for sᵢ > tol) · Uᵀ.
+    pub fn pinv(&self) -> Mat {
+        let Svd { u, s, v } = self.svd();
+        let tol = s.first().copied().unwrap_or(0.0)
+            * self.rows().max(self.cols()) as f64
+            * f64::EPSILON
+            + 1e-300;
+        let k = s.len();
+        // pinv = V * S⁺ * Uᵀ  (n×k · k×k · k×m)
+        let mut vs = Mat::zeros(v.rows(), k);
+        for j in 0..k {
+            let inv = if s[j] > tol { 1.0 / s[j] } else { 0.0 };
+            for i in 0..v.rows() {
+                vs[(i, j)] = v[(i, j)] * inv;
+            }
+        }
+        vs.matmul(&u.t())
+    }
+
+    /// Solve A·x ≈ b through the pseudo-inverse (minimum-norm
+    /// least-squares). Never fails; rank-deficient directions are dropped.
+    pub fn pinv_solve(&self, b: &[f64]) -> Vec<f64> {
+        self.pinv().matvec(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let k = svd.s.len();
+        let mut usv = Mat::zeros(svd.u.rows(), svd.v.rows());
+        for i in 0..svd.u.rows() {
+            for j in 0..svd.v.rows() {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += svd.u[(i, t)] * svd.s[t] * svd.v[(j, t)];
+                }
+                usv[(i, j)] = acc;
+            }
+        }
+        usv
+    }
+
+    #[test]
+    fn svd_reconstructs_tall() {
+        let a = Mat::from_rows(4, 2, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let svd = a.svd();
+        assert!(reconstruct(&svd).max_abs_diff(&a) < 1e-10);
+        assert!(svd.s[0] >= svd.s[1]);
+    }
+
+    #[test]
+    fn svd_reconstructs_wide() {
+        let a = Mat::from_rows(2, 4, &[1., 0., 2., -1., 3., 1., 0., 2.]);
+        let svd = a.svd();
+        assert!(reconstruct(&svd).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn svd_diagonal_known_values() {
+        let a = Mat::from_rows(2, 2, &[3., 0., 0., -2.]);
+        let svd = a.svd();
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pinv_of_invertible_matches_inverse() {
+        let a = Mat::from_rows(2, 2, &[2., 1., 1., 3.]);
+        let pinv = a.pinv();
+        let inv = a.inverse().unwrap();
+        assert!(pinv.max_abs_diff(&inv) < 1e-10);
+    }
+
+    #[test]
+    fn pinv_penrose_conditions_rank_deficient() {
+        // rank-1 matrix
+        let a = Mat::from_rows(3, 2, &[1., 2., 2., 4., 3., 6.]);
+        let p = a.pinv();
+        // A P A = A
+        assert!(a.matmul(&p).matmul(&a).max_abs_diff(&a) < 1e-10);
+        // P A P = P
+        assert!(p.matmul(&a).matmul(&p).max_abs_diff(&p) < 1e-10);
+        // (A P)ᵀ = A P ; (P A)ᵀ = P A
+        let ap = a.matmul(&p);
+        assert!(ap.t().max_abs_diff(&ap) < 1e-10);
+        let pa = p.matmul(&a);
+        assert!(pa.t().max_abs_diff(&pa) < 1e-10);
+    }
+
+    #[test]
+    fn pinv_solve_minimum_norm() {
+        // Underdetermined x + y = 2 → minimum-norm solution (1, 1).
+        let a = Mat::from_rows(1, 2, &[1., 1.]);
+        let x = a.pinv_solve(&[2.0]);
+        assert!((x[0] - 1.0).abs() < 1e-10);
+        assert!((x[1] - 1.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,523 @@
+//! `alphaseed` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   cv          one k-fold cross-validation run
+//!   loo         one leave-one-out run
+//!   train       train a single SVM and report the model
+//!   grid        (C, γ) grid search with seeded CV
+//!   datagen     write a synthetic analogue as a LibSVM file
+//!   experiment  regenerate the paper's tables/figure (table1|table2|table3|fig2|all)
+//!   probe       measure PJRT artifact dispatch overhead vs native
+
+use alphaseed::config::RunConfig;
+use alphaseed::coordinator::experiments;
+use alphaseed::coordinator::grid_search;
+use alphaseed::cv::CvReport;
+use alphaseed::data::{read_libsvm, synth, write_libsvm};
+use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::metrics::Table;
+use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
+use alphaseed::smo::{Model, SmoParams, Solver};
+use alphaseed::util::cli::Args;
+use alphaseed::util::timing::fmt_secs;
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("cv") => cmd_cv(args),
+        Some("loo") => cmd_loo(args),
+        Some("train") => cmd_train(args),
+        Some("grid") => cmd_grid(args),
+        Some("datagen") => cmd_datagen(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("probe") => cmd_probe(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
+        Some("ovo") => cmd_ovo(args),
+        Some(other) => bail!("unknown subcommand '{other}' (run with no args for help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "alphaseed — SVM k-fold cross-validation with alpha seeding (AAAI'17 reproduction)\n\
+         \n\
+         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe> [options]\n\
+         \n\
+         common options:\n\
+           --dataset <name>    adult|heart|madelon|mnist|webdata (synthetic analogue)\n\
+           --data <file>       LibSVM-format file instead of a synthetic analogue\n\
+           --n <int>           override analogue cardinality\n\
+           --c <f> --gamma <f> hyper-parameters (defaults: paper Table 2)\n\
+           --seeder <name>     cold|ato|mir|sir|avg|top        (default sir)\n\
+           --k <int>           folds                           (default 10)\n\
+           --backend <b>       native|xla                      (default native)\n\
+           --seed <int>        RNG seed                        (default 42)\n\
+         experiment options:\n\
+           --scale <f>         scale dataset sizes (default 1.0)\n\
+           --out <dir>         results directory (default results/)\n\
+           --loo-rounds <int>  LOO estimation prefix for fig2 (default 40)\n\
+           --ks <list>         table3 k values (default 3,10,100)"
+    );
+}
+
+/// Load the dataset a command refers to (--data file or --dataset name).
+fn load_dataset(args: &Args) -> Result<(alphaseed::data::Dataset, f64, f64)> {
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    if let Some(path) = args.opt_str("data") {
+        let ds = read_libsvm(&path)?;
+        let c = args.parse_or("c", 1.0)?;
+        let gamma = args.parse_or("gamma", 1.0 / ds.dim() as f64)?;
+        Ok((ds, c, gamma))
+    } else {
+        let name = args.str_or("dataset", "heart");
+        let spec = synth::spec(&name).with_context(|| format!("unknown dataset '{name}'"))?;
+        let n = args.opt_parse::<usize>("n")?;
+        let ds = synth::generate(&name, n, seed);
+        let c = args.parse_or("c", spec.hyper.c)?;
+        let gamma = args.parse_or("gamma", spec.hyper.gamma)?;
+        Ok((ds, c, gamma))
+    }
+}
+
+/// `--backend native` (default) uses the CV driver's in-process cached
+/// path (`None` here); `--backend xla` routes bulk ops to the AOT
+/// artifacts through PJRT.
+fn make_backend(args: &Args) -> Result<Option<XlaBackend>> {
+    match args.str_or("backend", "native").parse::<BackendChoice>() {
+        Ok(BackendChoice::Native) => Ok(None),
+        Ok(BackendChoice::Xla) => {
+            let dir = XlaBackend::default_dir();
+            let b = XlaBackend::load(&dir)
+                .with_context(|| format!("loading artifacts from {dir:?} (make artifacts)"))?;
+            Ok(Some(b))
+        }
+        Err(e) => bail!(e),
+    }
+}
+
+fn print_report(rep: &CvReport) {
+    let mut t = Table::new(format!(
+        "{} / {} (k = {}, {} rounds run)",
+        rep.dataset,
+        rep.seeder,
+        rep.k,
+        rep.rounds.len()
+    ))
+    .header(&["metric", "value"]);
+    t.row(vec!["init time (s)".into(), fmt_secs(rep.total_init())]);
+    t.row(vec!["rest time (s)".into(), fmt_secs(rep.total_rest())]);
+    t.row(vec!["total (s)".into(), fmt_secs(rep.total_elapsed())]);
+    t.row(vec!["iterations".into(), rep.total_iterations().to_string()]);
+    t.row(vec![
+        "accuracy (%)".into(),
+        format!("{:.2}", rep.accuracy() * 100.0),
+    ]);
+    t.row(vec!["seed fallbacks".into(), rep.fallbacks().to_string()]);
+    print!("{}", t.render());
+}
+
+fn cmd_cv(args: &Args) -> Result<()> {
+    let (ds, c, gamma) = load_dataset(args)?;
+    let k = args.parse_or("k", 10usize)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
+        .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
+    let mut backend = make_backend(args)?;
+    let max_rounds = args.opt_parse::<usize>("max-rounds")?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+
+    let opts = alphaseed::cv::CvOptions {
+        rng_seed: seed,
+        max_rounds,
+        backend: backend
+            .as_mut()
+            .map(|b| b as &mut dyn ComputeBackend),
+        ..Default::default()
+    };
+    let rep = alphaseed::cv::run_kfold(&ds, Kernel::rbf(gamma), c, k, seeder.as_ref(), opts);
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_loo(args: &Args) -> Result<()> {
+    let (ds, c, gamma) = load_dataset(args)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
+        .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
+    let max_rounds = args.opt_parse::<usize>("max-rounds")?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+
+    let rep = alphaseed::cv::run_loo(
+        &ds,
+        Kernel::rbf(gamma),
+        c,
+        seeder.as_ref(),
+        alphaseed::cv::LooOptions {
+            max_rounds,
+            rng_seed: seed,
+            ..Default::default()
+        },
+    );
+    print_report(&rep);
+    if rep.rounds.len() < ds.len() {
+        println!(
+            "estimated full-LOO total: {} s ({} of {} rounds run)",
+            fmt_secs(rep.extrapolated_elapsed(ds.len())),
+            rep.rounds.len(),
+            ds.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (ds, c, gamma) = load_dataset(args)?;
+    args.reject_unknown()?;
+    let kernel = Kernel::rbf(gamma);
+    let started = std::time::Instant::now();
+    let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
+    let r = solver.solve();
+    let model = Model::from_result(&ds, kernel, &r);
+    let mut t = Table::new(format!("train {} (n={}, d={})", ds.name, ds.len(), ds.dim()))
+        .header(&["metric", "value"]);
+    t.row(vec!["time (s)".into(), fmt_secs(started.elapsed())]);
+    t.row(vec!["iterations".into(), r.iterations.to_string()]);
+    t.row(vec!["objective".into(), format!("{:.6}", r.objective)]);
+    t.row(vec!["bias b".into(), format!("{:.6}", r.b)]);
+    t.row(vec![
+        "SVs".into(),
+        format!("{} ({} bounded)", r.n_sv, r.n_bsv),
+    ]);
+    t.row(vec![
+        "train accuracy (%)".into(),
+        format!("{:.2}", model.accuracy(&ds) * 100.0),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    let (ds, _, _) = load_dataset(args)?;
+    let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
+    let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
+    let k = args.parse_or("k", 5usize)?;
+    let seeder = args.str_or("seeder", "sir");
+    let threads = args.parse_or("threads", 1usize)?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+
+    let started = std::time::Instant::now();
+    let g = grid_search(&ds, &cs, &gammas, k, &seeder, threads, seed);
+    let mut t = Table::new(format!(
+        "grid search on {} ({} cells, seeder {seeder}, {} s)",
+        ds.name,
+        g.points.len(),
+        fmt_secs(started.elapsed())
+    ))
+    .header(&["C", "gamma", "accuracy(%)", "iterations", "time(s)"]);
+    for p in &g.points {
+        t.row(vec![
+            format!("{}", p.c),
+            format!("{}", p.gamma),
+            format!("{:.2}", p.accuracy * 100.0),
+            p.iterations.to_string(),
+            fmt_secs(p.elapsed),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = g.best();
+    println!(
+        "best: C={} gamma={} accuracy={:.2}%",
+        best.c,
+        best.gamma,
+        best.accuracy * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let (ds, _, _) = load_dataset(args)?;
+    let out = args.req_str("out")?;
+    args.reject_unknown()?;
+    let file = std::fs::File::create(&out)?;
+    write_libsvm(&ds, std::io::BufWriter::new(file))?;
+    println!(
+        "wrote {} instances × {} features to {out}",
+        ds.len(),
+        ds.dim()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => RunConfig::load(&path)?,
+        None => RunConfig::default(),
+    };
+    cfg.scale = args.parse_or("scale", cfg.scale)?;
+    cfg.k = args.parse_or("k", cfg.k)?;
+    cfg.rng_seed = args.parse_or("seed", cfg.rng_seed)?;
+    let ks = args.list_or("ks", &[3usize, 10, 100])?;
+    let loo_rounds = args.parse_or("loo-rounds", 40usize)?;
+    let out_dir = args.str_or("out", "results");
+    args.reject_unknown()?;
+    std::fs::create_dir_all(&out_dir)?;
+
+    let mut progress = |msg: &str| {
+        eprintln!("[{}] {msg}", uptime_stamp());
+    };
+
+    let run = |name: &str,
+               result: experiments::ExperimentResult,
+               cfg: &RunConfig,
+               out_dir: &str|
+     -> Result<()> {
+        print!("{}", result.table.render());
+        let path = format!("{out_dir}/{name}.json");
+        std::fs::write(&path, result.to_json(cfg).to_string_pretty())?;
+        println!("(cells written to {path})\n");
+        Ok(())
+    };
+
+    match which.as_str() {
+        "table1" => run("table1", experiments::table1(&cfg, &mut progress), &cfg, &out_dir)?,
+        "table2" => run("table2", experiments::table2(&cfg), &cfg, &out_dir)?,
+        "table3" => run(
+            "table3",
+            experiments::table3(&cfg, &ks, &mut progress),
+            &cfg,
+            &out_dir,
+        )?,
+        "fig2" => run(
+            "fig2",
+            experiments::fig2(&cfg, loo_rounds, &mut progress),
+            &cfg,
+            &out_dir,
+        )?,
+        "all" => {
+            run("table2", experiments::table2(&cfg), &cfg, &out_dir)?;
+            run("table1", experiments::table1(&cfg, &mut progress), &cfg, &out_dir)?;
+            run(
+                "table3",
+                experiments::table3(&cfg, &ks, &mut progress),
+                &cfg,
+                &out_dir,
+            )?;
+            run(
+                "fig2",
+                experiments::fig2(&cfg, loo_rounds, &mut progress),
+                &cfg,
+                &out_dir,
+            )?;
+        }
+        other => bail!("unknown experiment '{other}' (table1|table2|table3|fig2|all)"),
+    }
+    Ok(())
+}
+
+/// Warm-start sweep across a C grid (Chu et al. composition with the
+/// paper's fold chain): `alphaseed sweep --dataset heart --c-grid 1,4,16`.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (ds, _, gamma) = load_dataset(args)?;
+    let cs = args.list_or("c-grid", &[1.0, 4.0, 16.0, 64.0])?;
+    let k = args.parse_or("k", 5usize)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
+        .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    let fold_chain = !args.flag("no-fold-chain");
+    args.reject_unknown()?;
+
+    let reports = alphaseed::cv::run_kfold_warm_c(
+        &ds,
+        Kernel::rbf(gamma),
+        &cs,
+        k,
+        seeder.as_ref(),
+        alphaseed::cv::WarmCOptions {
+            rng_seed: seed,
+            fold_chain,
+            ..Default::default()
+        },
+    );
+    let mut t = Table::new(format!(
+        "warm-C sweep on {} (k={k}, seeder {seeder_name}, fold_chain={fold_chain})",
+        ds.name
+    ))
+    .header(&["C", "iterations", "total(s)", "accuracy(%)"]);
+    for (rep, &c) in reports.iter().zip(&cs) {
+        t.row(vec![
+            format!("{c}"),
+            rep.total_iterations().to_string(),
+            fmt_secs(rep.total_elapsed()),
+            format!("{:.2}", rep.accuracy() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Train (+ optionally calibrate) a model and serve predictions over
+/// TCP/JSON lines: `alphaseed serve --dataset heart --port 7878 --probs`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (ds, c, gamma) = load_dataset(args)?;
+    let port = args.parse_or("port", 7878u16)?;
+    let want_probs = args.flag("probs");
+    args.reject_unknown()?;
+
+    let kernel = Kernel::rbf(gamma);
+    let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
+    let r = solver.solve();
+    let model = Model::from_result(&ds, kernel, &r);
+    let scaler = if want_probs {
+        println!("calibrating probabilities via SIR-seeded 5-fold CV…");
+        Some(alphaseed::smo::PlattScaler::fit_from_cv(
+            &ds,
+            kernel,
+            c,
+            5,
+            &alphaseed::seeding::Sir,
+            42,
+        ))
+    } else {
+        None
+    };
+    println!(
+        "model trained: {} SVs, b = {:.4}; serving on 127.0.0.1:{port}",
+        model.n_sv(),
+        model.b
+    );
+    let server = alphaseed::coordinator::PredictServer::new(model, scaler);
+    server.serve(&format!("127.0.0.1:{port}"), |addr| {
+        println!("listening on {addr} — send {{\"op\":\"predict\",\"rows\":[[…]]}} lines");
+    })?;
+    Ok(())
+}
+
+/// One-vs-one multiclass seeded CV on synthetic blobs:
+/// `alphaseed ovo --classes 4 --n 200 --seeder sir`.
+fn cmd_ovo(args: &Args) -> Result<()> {
+    let n = args.parse_or("n", 200usize)?;
+    let classes = args.parse_or("classes", 3u32)?;
+    let dim = args.parse_or("dim", 4usize)?;
+    let sep = args.parse_or("sep", 2.0f64)?;
+    let c = args.parse_or("c", 10.0f64)?;
+    let gamma = args.parse_or("gamma", 0.5f64)?;
+    let k = args.parse_or("k", 5usize)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+    let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
+        .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
+    let ds = alphaseed::multiclass::synth_blobs(n, dim, classes, sep, seed);
+    let started = std::time::Instant::now();
+    let (acc, pairs) =
+        alphaseed::multiclass::cv_ovo(&ds, Kernel::rbf(gamma), c, k, seeder.as_ref(), seed);
+    let mut t = Table::new(format!(
+        "OvO {classes}-class CV (n={n}, k={k}, seeder {seeder_name}, {} s)",
+        fmt_secs(started.elapsed())
+    ))
+    .header(&["pair", "iterations", "pair accuracy(%)"]);
+    for p in &pairs {
+        t.row(vec![
+            format!("{} vs {}", p.class_a, p.class_b),
+            p.iterations.to_string(),
+            format!("{:.2}", p.accuracy * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("ensemble CV accuracy: {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+/// Measure artifact dispatch overhead: single-row PJRT call vs native row —
+/// the measurement behind the runtime's bulk/latency routing split.
+fn cmd_probe(args: &Args) -> Result<()> {
+    let n_iter = args.parse_or("iters", 50usize)?;
+    args.reject_unknown()?;
+    let ds = synth::generate("heart", Some(270), 42);
+    let mut native = NativeBackend;
+
+    let t0 = std::time::Instant::now();
+    for i in 0..n_iter {
+        let _ = native.kernel_rows(&ds, 0.2, &[i % ds.len()])?;
+    }
+    let native_per = t0.elapsed() / n_iter as u32;
+
+    let dir = XlaBackend::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("native single row: {native_per:?}; no artifacts for the XLA probe");
+        return Ok(());
+    }
+    let mut xla = XlaBackend::load(&dir)?;
+    let _ = xla.kernel_rows(&ds, 0.2, &[0])?; // compile outside the loop
+    let t1 = std::time::Instant::now();
+    for i in 0..n_iter {
+        let _ = xla.kernel_rows(&ds, 0.2, &[i % ds.len()])?;
+    }
+    let xla_per = t1.elapsed() / n_iter as u32;
+
+    // bulk: all rows at once
+    let queries: Vec<usize> = (0..ds.len()).collect();
+    let t2 = std::time::Instant::now();
+    let _ = xla.kernel_rows(&ds, 0.2, &queries)?;
+    let xla_bulk = t2.elapsed();
+    let t3 = std::time::Instant::now();
+    let _ = native.kernel_rows(&ds, 0.2, &queries)?;
+    let native_bulk = t3.elapsed();
+
+    let mut t = Table::new("PJRT dispatch probe (heart analogue, n=270, d=13)")
+        .header(&["path", "single row", "all rows"]);
+    t.row(vec![
+        "native".into(),
+        format!("{native_per:?}"),
+        format!("{native_bulk:?}"),
+    ]);
+    t.row(vec![
+        "xla artifact".into(),
+        format!("{xla_per:?}"),
+        format!("{xla_bulk:?}"),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "dispatch overhead ≈ {:?}/call → single rows stay native, bulk ops go to artifacts",
+        xla_per.saturating_sub(native_per)
+    );
+    Ok(())
+}
+
+/// Minimal monotonic timestamp (the offline registry has no chrono).
+fn uptime_stamp() -> String {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    let start = START.get_or_init(Instant::now);
+    format!("{:7.1}s", start.elapsed().as_secs_f64())
+}

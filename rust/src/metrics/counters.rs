@@ -1,0 +1,125 @@
+//! Thread-safe counters and a fixed-bucket histogram for coordinator
+//! telemetry (jobs completed, queue latencies).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.value.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram over power-of-two microsecond buckets: [1µs, 2µs, 4µs, … ~17min].
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 30;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> std::time::Duration {
+        let c = self.count();
+        if c == 0 {
+            return std::time::Duration::ZERO;
+        }
+        std::time::Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> std::time::Duration {
+        let total = self.count();
+        if total == 0 {
+            return std::time::Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return std::time::Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        std::time::Duration::from_micros(1u64 << N_BUCKETS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean(), Duration::from_micros(230));
+        // p50 should land near the middle values, p100 covers the max
+        assert!(h.quantile(0.5) >= Duration::from_micros(16));
+        assert!(h.quantile(1.0) >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+}

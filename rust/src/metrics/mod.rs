@@ -1,0 +1,9 @@
+//! Experiment metrics: fixed-width table rendering (the paper-style output
+//! of the `experiment` subcommands) and simple counters/histograms used by
+//! the coordinator.
+
+mod counters;
+mod table;
+
+pub use counters::{Counter, Histogram};
+pub use table::Table;

@@ -1,0 +1,148 @@
+//! The [`ComputeBackend`] trait and its native (pure-rust) implementation.
+
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelEval};
+use anyhow::Result;
+
+/// Which backend to use for bulk kernel computations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Pure rust (always available).
+    #[default]
+    Native,
+    /// AOT JAX/Pallas artifacts via PJRT; falls back to native per-call for
+    /// shapes without a compiled bucket.
+    Xla,
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(BackendChoice::Native),
+            "xla" => Ok(BackendChoice::Xla),
+            other => Err(format!("unknown backend '{other}' (native|xla)")),
+        }
+    }
+}
+
+/// Bulk kernel computations (RBF only — the paper's kernel; the native
+/// solver paths support the other kernels).
+///
+/// Deliberately NOT `Send`: the PJRT client handle is single-threaded, so
+/// the coordinator creates one backend per worker thread instead of
+/// sharing one.
+pub trait ComputeBackend {
+    fn name(&self) -> &'static str;
+
+    /// Rows K(x_q, ·) over the whole dataset for each global query index,
+    /// K(q, j) = exp(−γ‖x_q − x_j‖²). Returns one `ds.len()` row per query.
+    fn kernel_rows(&mut self, ds: &Dataset, gamma: f64, queries: &[usize]) -> Result<Vec<Vec<f64>>>;
+
+    /// fⱼ = Σᵢ coefᵢ·K(wᵢ, xⱼ) for all rows xⱼ of `x` — the decision /
+    /// gradient-init bulk primitive.
+    fn kernel_matvec(&mut self, x: &Dataset, w: &Dataset, coef: &[f64], gamma: f64)
+        -> Result<Vec<f64>>;
+}
+
+/// Pure-rust backend: same math as the solver's kernel path.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn kernel_rows(&mut self, ds: &Dataset, gamma: f64, queries: &[usize]) -> Result<Vec<Vec<f64>>> {
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(gamma));
+        let mut out = Vec::with_capacity(queries.len());
+        for &q in queries {
+            let mut row = vec![0.0f64; ds.len()];
+            eval.eval_row(q, &mut row);
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    fn kernel_matvec(
+        &mut self,
+        x: &Dataset,
+        w: &Dataset,
+        coef: &[f64],
+        gamma: f64,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(w.len() == coef.len(), "coef/W length mismatch");
+        let eval = KernelEval::new(w.clone(), Kernel::rbf(gamma));
+        Ok((0..x.len())
+            .map(|j| {
+                let mut acc = 0.0;
+                for i in 0..w.len() {
+                    if coef[i] != 0.0 {
+                        acc += coef[i] * eval.eval_cross(i, x, j);
+                    }
+                }
+                acc
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataMatrix;
+
+    fn ds() -> Dataset {
+        crate::data::synth::generate("heart", Some(30), 3)
+    }
+
+    #[test]
+    fn rows_match_kernel_eval() {
+        let d = ds();
+        let mut b = NativeBackend;
+        let rows = b.kernel_rows(&d, 0.2, &[0, 5, 29]).unwrap();
+        let eval = KernelEval::new(d.clone(), Kernel::rbf(0.2));
+        for (qi, &q) in [0usize, 5, 29].iter().enumerate() {
+            for j in 0..d.len() {
+                assert!((rows[qi][j] - eval.eval(q, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let d = ds();
+        let w = d.select(&[1, 3, 7]);
+        let coef = [0.5, -1.0, 0.25];
+        let mut b = NativeBackend;
+        let out = b.kernel_matvec(&d, &w, &coef, 0.2).unwrap();
+        let eval = KernelEval::new(w.clone(), Kernel::rbf(0.2));
+        for j in 0..d.len() {
+            let expect: f64 = (0..3).map(|i| coef[i] * eval.eval_cross(i, &d, j)).sum();
+            assert!((out[j] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn decision_values_via_subtracts_bias() {
+        let d = Dataset::new(
+            "t",
+            DataMatrix::dense(2, 1, vec![0.0, 1.0]),
+            vec![1.0, -1.0],
+        );
+        let mut b = NativeBackend;
+        let vals =
+            super::super::decision_values_via(&mut b, &d, &[1.0, -1.0], 0.25, 1.0, &d).unwrap();
+        // d(x0) = K(0,0) − K(1,0) − 0.25 = 1 − e^{−1} − 0.25
+        let expect = 1.0 - (-1.0f64).exp() - 0.25;
+        assert!((vals[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!("native".parse::<BackendChoice>().unwrap(), BackendChoice::Native);
+        assert_eq!("xla".parse::<BackendChoice>().unwrap(), BackendChoice::Xla);
+        assert!("gpu".parse::<BackendChoice>().is_err());
+    }
+}

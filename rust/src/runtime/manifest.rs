@@ -1,0 +1,129 @@
+//! The AOT artifact manifest: which HLO files exist, for which op and
+//! shape bucket. Written by `python/compile/aot.py`, read here.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactOp {
+    /// "rbf_rows" (K(Q,X) block) or "rbf_matvec" (K(X,W)·coef).
+    pub op: String,
+    /// Max query batch (rows) / max W rows (matvec).
+    pub b: usize,
+    /// Padded dataset rows.
+    pub n: usize,
+    /// Padded feature dimension.
+    pub d: usize,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub ops: Vec<ArtifactOp>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactManifest> {
+        let root = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let ops_json = root
+            .get("ops")
+            .and_then(|o| o.as_arr())
+            .context("manifest missing 'ops' array")?;
+        let mut ops = Vec::with_capacity(ops_json.len());
+        for (i, entry) in ops_json.iter().enumerate() {
+            let field = |k: &str| -> Result<&Json> {
+                entry.get(k).with_context(|| format!("ops[{i}] missing '{k}'"))
+            };
+            ops.push(ArtifactOp {
+                op: field("op")?.as_str().context("op not a string")?.to_string(),
+                b: field("b")?.as_usize().context("b not an int")?,
+                n: field("n")?.as_usize().context("n not an int")?,
+                d: field("d")?.as_usize().context("d not an int")?,
+                file: field("file")?
+                    .as_str()
+                    .context("file not a string")?
+                    .to_string(),
+            });
+        }
+        Ok(ArtifactManifest { dir, ops })
+    }
+
+    /// Smallest bucket of `op` that fits (b, n, d); None when nothing fits.
+    pub fn find_bucket(&self, op: &str, b: usize, n: usize, d: usize) -> Option<&ArtifactOp> {
+        self.ops
+            .iter()
+            .filter(|o| o.op == op && o.b >= b && o.n >= n && o.d >= d)
+            .min_by_key(|o| (o.n, o.d, o.b))
+    }
+
+    /// Absolute path of an op's HLO file.
+    pub fn path_of(&self, op: &ArtifactOp) -> PathBuf {
+        self.dir.join(&op.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "ops": [
+        {"op": "rbf_rows",   "b": 128, "n": 512,  "d": 16,  "file": "rbf_rows_b128_n512_d16.hlo.txt"},
+        {"op": "rbf_rows",   "b": 128, "n": 2048, "d": 128, "file": "rbf_rows_b128_n2048_d128.hlo.txt"},
+        {"op": "rbf_matvec", "b": 512, "n": 512,  "d": 16,  "file": "rbf_matvec_b512_n512_d16.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.ops.len(), 3);
+        assert_eq!(m.ops[0].op, "rbf_rows");
+        assert_eq!(m.ops[1].n, 2048);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        // fits the small bucket
+        let b = m.find_bucket("rbf_rows", 10, 300, 13).unwrap();
+        assert_eq!(b.n, 512);
+        // needs the big one
+        let b = m.find_bucket("rbf_rows", 10, 600, 100).unwrap();
+        assert_eq!(b.n, 2048);
+        // nothing fits
+        assert!(m.find_bucket("rbf_rows", 10, 5000, 13).is_none());
+        assert!(m.find_bucket("rbf_rows", 200, 300, 13).is_none());
+        assert!(m.find_bucket("nope", 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse(r#"{"ops":[{"op":"x"}]}"#, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn path_joins_dir() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        assert_eq!(
+            m.path_of(&m.ops[0]),
+            PathBuf::from("/art/rbf_rows_b128_n512_d16.hlo.txt")
+        );
+    }
+}

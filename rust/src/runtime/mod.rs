@@ -1,0 +1,43 @@
+//! Execution backends for bulk kernel computations.
+//!
+//! The solver's per-iteration row fetches stay native (PJRT dispatch costs
+//! O(10µs) per call — measured in `benches/micro_hotpath.rs` — while a hit
+//! in the LRU is O(1)); the *bulk* operations route through
+//! [`ComputeBackend`]:
+//!
+//! - warm-start gradient initialisation `K(X, SV)·coef`,
+//! - the SIR similarity block and seeding-cache prefill `K(Q, X)`,
+//! - test-fold decision values.
+//!
+//! [`NativeBackend`] computes them on the CPU in rust; [`XlaBackend`] loads
+//! the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`, built by
+//! `make artifacts`) and executes them through the PJRT C API — python is
+//! never on this path.
+
+mod backend;
+mod manifest;
+mod xla_backend;
+
+pub use backend::{BackendChoice, ComputeBackend, NativeBackend};
+pub use manifest::{ArtifactManifest, ArtifactOp};
+pub use xla_backend::XlaBackend;
+
+use crate::data::Dataset;
+use anyhow::Result;
+
+/// Convenience: decision values of a model over a dataset through any
+/// backend ( Σᵢ coefᵢ·K(svᵢ, xⱼ) − b ).
+pub fn decision_values_via(
+    backend: &mut dyn ComputeBackend,
+    sv: &Dataset,
+    coef: &[f64],
+    b: f64,
+    gamma: f64,
+    data: &Dataset,
+) -> Result<Vec<f64>> {
+    let mut vals = backend.kernel_matvec(data, sv, coef, gamma)?;
+    for v in vals.iter_mut() {
+        *v -= b;
+    }
+    Ok(vals)
+}

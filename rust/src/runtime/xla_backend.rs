@@ -1,0 +1,211 @@
+//! PJRT-backed implementation of [`ComputeBackend`].
+//!
+//! Loads HLO-text artifacts produced by `python/compile/aot.py` (JAX/Pallas
+//! lowered once at build time), compiles them on the PJRT CPU client and
+//! executes them for bulk kernel computations. HLO **text** is the
+//! interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that the crate's xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+//!
+//! Shape discipline: every artifact is compiled for a fixed (b, n, d)
+//! bucket. Inputs are zero-padded up to the bucket — zero-padded *features*
+//! leave RBF distances unchanged, zero-padded *coefficients* contribute
+//! nothing to the matvec, and padded rows/queries are sliced off the
+//! output. Shapes with no fitting bucket fall back to the native backend
+//! (counted in [`XlaStats`]).
+
+use super::backend::{ComputeBackend, NativeBackend};
+use super::manifest::{ArtifactManifest, ArtifactOp};
+use crate::data::Dataset;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Call accounting (exposed for the ablation bench and EXPERIMENTS.md).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct XlaStats {
+    pub artifact_calls: u64,
+    pub native_fallbacks: u64,
+    pub compiles: u64,
+}
+
+/// AOT-artifact backend.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    fallback: NativeBackend,
+    /// Padded dense feature cache keyed by (name, rows, cols, content
+    /// fingerprint, n_pad, d_pad). CV reuses the same full dataset for
+    /// every seeding call, so this hits constantly; the fingerprint (sum
+    /// of squared norms) keeps distinct `select()` subsets with colliding
+    /// names/shapes apart.
+    padded: HashMap<(String, usize, usize, u64, usize, usize), Vec<f32>>,
+    pub stats: XlaStats,
+}
+
+impl XlaBackend {
+    /// Load the manifest in `dir` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(XlaBackend {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            fallback: NativeBackend,
+            padded: HashMap::new(),
+            stats: XlaStats::default(),
+        })
+    }
+
+    /// The default artifacts directory: $ALPHASEED_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("ALPHASEED_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| "artifacts".into())
+    }
+
+    fn executable(&mut self, op: &ArtifactOp) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&op.file) {
+            let path = self.manifest.path_of(op);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.stats.compiles += 1;
+            self.compiled.insert(op.file.clone(), exe);
+        }
+        Ok(&self.compiled[&op.file])
+    }
+
+    /// Dense, zero-padded [n_pad × d_pad] copy of the dataset features.
+    fn padded_features(&mut self, ds: &Dataset, n_pad: usize, d_pad: usize) -> Vec<f32> {
+        let fingerprint = ds.sq_norms.iter().sum::<f64>().to_bits();
+        let key = (ds.name.clone(), ds.len(), ds.dim(), fingerprint, n_pad, d_pad);
+        if let Some(buf) = self.padded.get(&key) {
+            return buf.clone();
+        }
+        let buf = pad_rows(&ds.x.to_dense_vec(), ds.len(), ds.dim(), n_pad, d_pad);
+        self.padded.insert(key, buf.clone());
+        buf
+    }
+
+    fn run(
+        &mut self,
+        op: &ArtifactOp,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(op)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .context("artifact execution")?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Zero-pad a row-major [rows × cols] buffer to [n_pad × d_pad].
+fn pad_rows(src: &[f32], rows: usize, cols: usize, n_pad: usize, d_pad: usize) -> Vec<f32> {
+    debug_assert!(n_pad >= rows && d_pad >= cols);
+    let mut out = vec![0.0f32; n_pad * d_pad];
+    for r in 0..rows {
+        out[r * d_pad..r * d_pad + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn kernel_rows(&mut self, ds: &Dataset, gamma: f64, queries: &[usize]) -> Result<Vec<Vec<f64>>> {
+        let (n, d) = (ds.len(), ds.dim());
+        let Some(op) = self.manifest.find_bucket("rbf_rows", 1, n, d).cloned() else {
+            self.stats.native_fallbacks += 1;
+            return self.fallback.kernel_rows(ds, gamma, queries);
+        };
+        let x_pad = self.padded_features(ds, op.n, op.d);
+        let x_lit = xla::Literal::vec1(&x_pad).reshape(&[op.n as i64, op.d as i64])?;
+        let gamma_lit = xla::Literal::vec1(&[gamma as f32]);
+
+        let dense = ds.x.to_dense_vec();
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(op.b) {
+            // Pack the chunk's rows into the padded query block.
+            let mut q_pad = vec![0.0f32; op.b * op.d];
+            for (qi, &gq) in chunk.iter().enumerate() {
+                q_pad[qi * op.d..qi * op.d + d].copy_from_slice(&dense[gq * d..(gq + 1) * d]);
+            }
+            let q_lit = xla::Literal::vec1(&q_pad).reshape(&[op.b as i64, op.d as i64])?;
+            let flat = self.run(&op, &[x_lit.clone(), q_lit, gamma_lit.clone()])?;
+            anyhow::ensure!(flat.len() == op.b * op.n, "artifact output shape mismatch");
+            self.stats.artifact_calls += 1;
+            for qi in 0..chunk.len() {
+                out.push(
+                    flat[qi * op.n..qi * op.n + n]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect(),
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    fn kernel_matvec(
+        &mut self,
+        x: &Dataset,
+        w: &Dataset,
+        coef: &[f64],
+        gamma: f64,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(w.len() == coef.len(), "coef/W length mismatch");
+        anyhow::ensure!(x.dim() == w.dim(), "X/W width mismatch");
+        let (n, d, m) = (x.len(), x.dim(), w.len());
+        let Some(op) = self.manifest.find_bucket("rbf_matvec", m, n, d).cloned() else {
+            self.stats.native_fallbacks += 1;
+            return self.fallback.kernel_matvec(x, w, coef, gamma);
+        };
+        let x_pad = self.padded_features(x, op.n, op.d);
+        let w_pad = pad_rows(&w.x.to_dense_vec(), m, d, op.b, op.d);
+        let mut coef_pad = vec![0.0f32; op.b];
+        for (i, &c) in coef.iter().enumerate() {
+            coef_pad[i] = c as f32;
+        }
+        let x_lit = xla::Literal::vec1(&x_pad).reshape(&[op.n as i64, op.d as i64])?;
+        let w_lit = xla::Literal::vec1(&w_pad).reshape(&[op.b as i64, op.d as i64])?;
+        let c_lit = xla::Literal::vec1(&coef_pad);
+        let g_lit = xla::Literal::vec1(&[gamma as f32]);
+        let flat = self.run(&op, &[x_lit, w_lit, c_lit, g_lit])?;
+        anyhow::ensure!(flat.len() == op.n, "artifact output shape mismatch");
+        self.stats.artifact_calls += 1;
+        Ok(flat[..n].iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_layout() {
+        // 2x2 → 3x4
+        let out = pad_rows(&[1., 2., 3., 4.], 2, 2, 3, 4);
+        assert_eq!(
+            out,
+            vec![1., 2., 0., 0., 3., 4., 0., 0., 0., 0., 0., 0.]
+        );
+    }
+
+    // End-to-end artifact execution is covered by rust/tests/xla_runtime.rs
+    // (requires `make artifacts` to have run).
+}

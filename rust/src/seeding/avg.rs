@@ -1,0 +1,199 @@
+//! AVG (DeCoste & Wagstaff 2000) — leave-one-out baseline.
+//!
+//! Train one SVM on the whole dataset; to seed the round that leaves out
+//! x_t, distribute its weight y_t·α_t *uniformly* across the free support
+//! vectors (0 < α < C), clamping at the box and re-spreading the overflow
+//! among the instances that can still move (paper supplementary §AVG).
+//!
+//! Used in the Figure 2 leave-one-out comparison: the CV driver constructs
+//! a SeedContext whose `prev_train` is the full index set, `removed` the
+//! single left-out instance, and `added` empty.
+
+use super::{pos_of, SeedContext, SeedResult, Seeder};
+use crate::kernel::KernelCache;
+
+/// Uniform redistribution over free support vectors.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Avg;
+
+impl Seeder for Avg {
+    fn name(&self) -> &'static str {
+        "avg"
+    }
+
+    fn seed(&self, ctx: &SeedContext, _cache: &mut KernelCache) -> SeedResult {
+        assert!(
+            ctx.added.is_empty(),
+            "AVG is a leave-one-out seeder: 𝒯 must be empty"
+        );
+        let c = ctx.c;
+        let y = &ctx.full.y;
+        let next = ctx.next_train;
+
+        // Copy all surviving α.
+        let mut alpha = vec![0.0f64; next.len()];
+        for (p, &gi) in ctx.prev_train.iter().enumerate() {
+            if let Some(np) = pos_of(next, gi) {
+                alpha[np] = ctx.prev_alpha[p];
+            }
+        }
+
+        // Mass to redistribute: Σ over removed of y_t·α_t (normally one
+        // instance in LOO, but the code handles a set).
+        let mut residual: f64 = ctx
+            .removed
+            .iter()
+            .map(|&gr| {
+                let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+                y[gr] * ctx.prev_alpha[p]
+            })
+            .sum();
+
+        if residual != 0.0 {
+            // Iteratively spread over currently-free instances. In s-space
+            // (s = y·α) we must *add* `residual` in total.
+            for _pass in 0..64 {
+                if residual.abs() < 1e-12 {
+                    break;
+                }
+                let free: Vec<usize> = (0..alpha.len())
+                    .filter(|&i| alpha[i] > 0.0 && alpha[i] < c)
+                    .collect();
+                if free.is_empty() {
+                    break;
+                }
+                let share = residual / free.len() as f64;
+                for &i in &free {
+                    let yy = y[next[i]];
+                    // s_i += share  →  α_i += y_i·share, clamped to the box
+                    let desired = alpha[i] + yy * share;
+                    let clamped = desired.clamp(0.0, c);
+                    let moved = (clamped - alpha[i]) * yy; // in s-space
+                    alpha[i] = clamped;
+                    residual -= moved;
+                }
+            }
+        }
+
+        if residual.abs() > 1e-9 {
+            // Free set saturated: spread the leftover over *all* instances.
+            let ny: Vec<f64> = next.iter().map(|&gi| y[gi]).collect();
+            let total: f64 = alpha.iter().zip(&ny).map(|(a, yy)| a * yy).sum();
+            if !super::balance_to_target(&mut alpha, &ny, c, total + residual) {
+                return SeedResult {
+                    alpha: vec![0.0; next.len()],
+                    fell_back: true,
+                };
+            }
+        }
+
+        SeedResult {
+            alpha,
+            fell_back: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::FoldPlan;
+    use crate::kernel::{Kernel, KernelEval};
+    use crate::seeding::check_feasible;
+    use crate::smo::{SmoParams, Solver};
+
+    /// Build a LOO-style context: prev = full solve, removed = {t}.
+    fn loo_ctx(
+        n: usize,
+        t: usize,
+    ) -> (
+        crate::data::Dataset,
+        Vec<usize>,
+        Vec<f64>,
+        Vec<f64>,
+        f64,
+        Vec<usize>,
+        Vec<usize>,
+    ) {
+        let full = crate::data::synth::generate("heart", Some(n), 33);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver = Solver::new(KernelEval::new(full.clone(), kernel), SmoParams::with_c(2.0));
+        let r = solver.solve();
+        assert!(r.converged);
+        let f = r.f_indicators(&full.y);
+        let prev_train: Vec<usize> = (0..n).collect();
+        let plan = FoldPlan::leave_one_out(n);
+        let next_train = plan.train_indices(t);
+        (full, prev_train, r.alpha, f, r.b, vec![t], next_train)
+    }
+
+    #[test]
+    fn loo_seed_feasible_and_close() {
+        let (full, prev_train, prev_alpha, prev_f, prev_b, removed, next_train) = loo_ctx(80, 3);
+        let ctx = SeedContext {
+            full: &full,
+            kernel: Kernel::rbf(0.2),
+            c: 2.0,
+            prev_train: &prev_train,
+            prev_alpha: &prev_alpha,
+            prev_f: &prev_f,
+            prev_b,
+            removed: &removed,
+            added: &[],
+            next_train: &next_train,
+            rng_seed: 1,
+        };
+        let mut cache = KernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), Kernel::rbf(0.2)),
+            16 << 20,
+        );
+        let r = Avg.seed(&ctx, &mut cache);
+        let y: Vec<f64> = next_train.iter().map(|&i| full.y[i]).collect();
+        check_feasible(&r.alpha, &y, 2.0).unwrap();
+
+        // Seeding from the full model should converge in far fewer
+        // iterations than cold start.
+        let train = full.select(&next_train);
+        let mut s_warm = Solver::new(
+            KernelEval::new(train.clone(), Kernel::rbf(0.2)),
+            SmoParams::with_c(2.0),
+        );
+        let rw = s_warm.solve_from(r.alpha, None);
+        let mut s_cold = Solver::new(KernelEval::new(train, Kernel::rbf(0.2)), SmoParams::with_c(2.0));
+        let rc = s_cold.solve();
+        assert!(rw.converged && rc.converged);
+        assert!(
+            rw.iterations < rc.iterations,
+            "AVG warm {} vs cold {}",
+            rw.iterations,
+            rc.iterations
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "leave-one-out")]
+    fn rejects_kfold_context() {
+        let full = crate::data::synth::generate("heart", Some(30), 1);
+        let prev: Vec<usize> = (0..30).collect();
+        let alpha = vec![0.0; 30];
+        let f = vec![0.0; 30];
+        let ctx = SeedContext {
+            full: &full,
+            kernel: Kernel::rbf(0.2),
+            c: 1.0,
+            prev_train: &prev,
+            prev_alpha: &alpha,
+            prev_f: &f,
+            prev_b: 0.0,
+            removed: &[0],
+            added: &[1], // non-empty 𝒯 → panic
+            next_train: &prev,
+            rng_seed: 0,
+        };
+        let mut cache = KernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), Kernel::rbf(0.2)),
+            1 << 20,
+        );
+        let _ = Avg.seed(&ctx, &mut cache);
+    }
+}

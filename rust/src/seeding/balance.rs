@@ -1,0 +1,151 @@
+//! The paper's *AdjustAlpha* step, shared by MIR and SIR.
+//!
+//! After estimating α'_𝒯, the constraints 0 ≤ α'_t ≤ C and
+//! Σ_t y_t·α'_t = Σ_r y_r·α_r may be violated. The paper prescribes:
+//! clip into the box, then *uniformly* increase/decrease the y_t·α'_t
+//! until the signed sum matches the target, re-distributing the residual
+//! over the entries that can still move.
+
+/// Adjust `alpha` (box [0, c]) so that Σᵢ yᵢ·αᵢ == `target`.
+///
+/// Works in s = y·α space, where the box maps to [0, c] for y = +1 and
+/// [−c, 0] for y = −1. Each pass spreads the residual equally over every
+/// entry with remaining headroom; entries that saturate absorb what they
+/// can and the loop re-distributes the rest (exactly the paper's scheme
+/// for AVG overflow, applied to the 𝒯 set).
+///
+/// Returns `false` when the target is unreachable within the box (the
+/// caller falls back to the cold start).
+pub fn balance_to_target(alpha: &mut [f64], y: &[f64], c: f64, target: f64) -> bool {
+    assert_eq!(alpha.len(), y.len());
+    // Clip into the box first (paper step 1).
+    for a in alpha.iter_mut() {
+        *a = a.clamp(0.0, c);
+    }
+    let mut sum: f64 = alpha.iter().zip(y).map(|(a, yy)| a * yy).sum();
+    let tol = 1e-12 * c.max(1.0) * (alpha.len() as f64).max(1.0);
+
+    for _pass in 0..64 {
+        let delta = target - sum;
+        if delta.abs() <= tol {
+            return true;
+        }
+        // Headroom of entry i in s-space, in the direction of delta:
+        // s_i = y_i·α_i ∈ [min_i, max_i].
+        fn headroom(alpha: &[f64], y: &[f64], c: f64, delta: f64, i: usize) -> f64 {
+            let s = y[i] * alpha[i];
+            if delta > 0.0 {
+                let max = if y[i] > 0.0 { c } else { 0.0 };
+                max - s
+            } else {
+                let min = if y[i] > 0.0 { 0.0 } else { -c };
+                s - min
+            }
+        }
+        let movable: Vec<usize> = (0..alpha.len())
+            .filter(|&i| headroom(alpha, y, c, delta, i) > tol)
+            .collect();
+        if movable.is_empty() {
+            return false;
+        }
+        let step = delta / movable.len() as f64;
+        for &i in &movable {
+            let room = headroom(alpha, y, c, delta, i);
+            let move_by = step.abs().min(room) * step.signum();
+            // s_i += move_by  →  α_i += y_i·move_by
+            alpha[i] += y[i] * move_by;
+            alpha[i] = alpha[i].clamp(0.0, c);
+            sum += move_by;
+        }
+    }
+    (target - sum).abs() <= tol.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn signed_sum(alpha: &[f64], y: &[f64]) -> f64 {
+        alpha.iter().zip(y).map(|(a, yy)| a * yy).sum()
+    }
+
+    #[test]
+    fn already_balanced_is_noop() {
+        let mut a = vec![0.5, 0.5];
+        let y = vec![1.0, -1.0];
+        assert!(balance_to_target(&mut a, &y, 1.0, 0.0));
+        assert_eq!(a, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn uniform_increase() {
+        let mut a = vec![0.0, 0.0, 0.0];
+        let y = vec![1.0, 1.0, 1.0];
+        assert!(balance_to_target(&mut a, &y, 1.0, 1.5));
+        assert!((signed_sum(&a, &y) - 1.5).abs() < 1e-9);
+        for &x in &a {
+            assert!((x - 0.5).abs() < 1e-9, "uniform spread expected: {a:?}");
+        }
+    }
+
+    #[test]
+    fn saturation_redistributes() {
+        // first entry can only take 0.2 more; rest spills to the others
+        let mut a = vec![0.8, 0.0, 0.0];
+        let y = vec![1.0, 1.0, 1.0];
+        assert!(balance_to_target(&mut a, &y, 1.0, 2.0));
+        assert!((signed_sum(&a, &y) - 2.0).abs() < 1e-9);
+        // pass 1 spreads 0.4 each (entry 0 clamps at 1.0, absorbing 0.2);
+        // pass 2 spreads the leftover 0.2 over the two still-movable slots
+        assert!((a[0] - 1.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 0.5).abs() < 1e-6, "{a:?}");
+        assert!((a[2] - 0.5).abs() < 1e-6, "{a:?}");
+    }
+
+    #[test]
+    fn mixed_labels() {
+        let mut a = vec![0.3, 0.3];
+        let y = vec![1.0, -1.0];
+        // current sum = 0; push to −0.4: positive entry shrinks / negative grows
+        assert!(balance_to_target(&mut a, &y, 1.0, -0.4));
+        assert!((signed_sum(&a, &y) + 0.4).abs() < 1e-9);
+        for &x in &a {
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn clips_out_of_box_input() {
+        let mut a = vec![1.7, -0.3];
+        let y = vec![1.0, -1.0];
+        assert!(balance_to_target(&mut a, &y, 1.0, 0.5));
+        assert!((signed_sum(&a, &y) - 0.5).abs() < 1e-9);
+        for &x in &a {
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn unreachable_target_reports_false() {
+        let mut a = vec![0.0, 0.0];
+        let y = vec![1.0, 1.0];
+        // max achievable sum = 2·c = 2 < 3
+        assert!(!balance_to_target(&mut a, &y, 1.0, 3.0));
+    }
+
+    #[test]
+    fn decrease_path() {
+        let mut a = vec![1.0, 1.0, 0.5];
+        let y = vec![1.0, 1.0, 1.0];
+        assert!(balance_to_target(&mut a, &y, 1.0, 1.0));
+        assert!((signed_sum(&a, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_slice_only_balances_zero_target() {
+        let mut a: Vec<f64> = vec![];
+        let y: Vec<f64> = vec![];
+        assert!(balance_to_target(&mut a, &y, 1.0, 0.0));
+        assert!(!balance_to_target(&mut a, &y, 1.0, 0.5));
+    }
+}

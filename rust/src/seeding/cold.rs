@@ -1,0 +1,37 @@
+//! The baseline: no reuse, α = 0 — exactly what LibSVM's
+//! `svm_cross_validation` does for every fold.
+
+use super::{SeedContext, SeedResult, Seeder};
+use crate::kernel::KernelCache;
+
+/// Cold start (the paper's "LibSVM" column).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ColdStart;
+
+impl Seeder for ColdStart {
+    fn name(&self) -> &'static str {
+        "cold"
+    }
+
+    fn seed(&self, ctx: &SeedContext, _cache: &mut KernelCache) -> SeedResult {
+        SeedResult {
+            alpha: vec![0.0; ctx.next_train.len()],
+            fell_back: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seeding::test_support::solved_round;
+
+    #[test]
+    fn emits_zeros_of_right_length() {
+        let sr = solved_round("heart", 80, 4, 2.0, 0.2);
+        let r = ColdStart.seed(&sr.ctx(), &mut sr.cache());
+        assert_eq!(r.alpha.len(), sr.next_train.len());
+        assert!(r.alpha.iter().all(|&a| a == 0.0));
+        assert!(!r.fell_back);
+    }
+}

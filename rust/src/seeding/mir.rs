@@ -1,0 +1,203 @@
+//! Multiple Instance Replacement (paper §3.2, Algorithm 2).
+//!
+//! Keeps α_𝓢 unchanged and estimates α'_𝒯 in one shot by solving the
+//! least-squares system of paper Eq. (17)/(18):
+//!
+//! ```text
+//!   [ Q_{X,T} ]            [ y ⊙ Δf + Q_{X,R}·α_R ]
+//!   [  y_T^T  ] · α'_T  ≈  [     y_R^T·α_R        ]
+//! ```
+//!
+//! with Δfᵢ = b − fᵢ for bounded instances (pushing each indicator exactly
+//! to the bias) and Δfᵢ = 0 for the margin set. The solution is clipped to
+//! the box and re-balanced to satisfy Σ_t y_t·α'_t = Σ_r y_r·α_r (Eq. 16).
+
+use super::{balance_to_target, pos_of, SeedContext, SeedResult, Seeder};
+use crate::kernel::KernelCache;
+use crate::linalg::{lstsq, Mat};
+
+/// Multiple Instance Replacement.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Mir;
+
+impl Seeder for Mir {
+    fn name(&self) -> &'static str {
+        "mir"
+    }
+
+    fn seed(&self, ctx: &SeedContext, cache: &mut KernelCache) -> SeedResult {
+        let n = ctx.prev_train.len();
+        let nt = ctx.added.len();
+        let next = ctx.next_train;
+        let c = ctx.c;
+        let y = &ctx.full.y;
+
+        // Base: copy shared α (α'_s = α_s).
+        let mut alpha = vec![0.0f64; next.len()];
+        for (p, &gi) in ctx.prev_train.iter().enumerate() {
+            if ctx.prev_alpha[p] > 0.0 {
+                if let Some(np) = pos_of(next, gi) {
+                    alpha[np] = ctx.prev_alpha[p];
+                }
+            }
+        }
+
+        // Target for the Σyα balance (Eq. 16): what 𝓡 carried away.
+        let target: f64 = ctx
+            .removed
+            .iter()
+            .map(|&gr| {
+                let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+                y[gr] * ctx.prev_alpha[p]
+            })
+            .sum();
+
+        if nt == 0 {
+            // Degenerate (LOO-style) transition: nothing to estimate; just
+            // rebalance the copied α to absorb the removed mass.
+            let mut a = alpha.clone();
+            let ny: Vec<f64> = next.iter().map(|&gi| y[gi]).collect();
+            let fell_back = !balance_to_target(&mut a, &ny, c, 0.0);
+            return SeedResult {
+                alpha: if fell_back { vec![0.0; next.len()] } else { a },
+                fell_back,
+            };
+        }
+
+        // ---- Build the (n+1) × |T| system --------------------------------
+        // rhs_i = yᵢ·Δfᵢ + (Q_{X,R}·α_R)ᵢ   for i ∈ X;  rhs_n = y_R^T·α_R
+        // Δfᵢ = b − fᵢ for i ∈ I_u ∪ I_l, 0 for i ∈ I_m.
+        let mut rhs = vec![0.0f64; n + 1];
+        for (i, &gi) in ctx.prev_train.iter().enumerate() {
+            let a = ctx.prev_alpha[i];
+            let free = a > 0.0 && a < c;
+            let df = if free { 0.0 } else { ctx.prev_b - ctx.prev_f[i] };
+            rhs[i] = y[gi] * df;
+        }
+        // += Q_{X,R}·α_R: one cached global kernel row per support vector
+        // of 𝓡 (Q_{i,r} = yᵢ·y_r·K(i,r)).
+        for &gr in ctx.removed {
+            let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+            let ar = ctx.prev_alpha[p];
+            if ar <= 0.0 {
+                continue;
+            }
+            let coef = ar * y[gr];
+            let row = cache.row(gr);
+            for (i, &gi) in ctx.prev_train.iter().enumerate() {
+                rhs[i] += y[gi] * coef * row[gi];
+            }
+        }
+        rhs[n] = target;
+
+        // A = [Q_{X,T}; y_T^T], column t = y_X ⊙ y_t·K(X, x_t).
+        let mut a_mat = Mat::zeros(n + 1, nt);
+        for (t, &gt) in ctx.added.iter().enumerate() {
+            let yt = y[gt];
+            let row = cache.row(gt);
+            for (i, &gi) in ctx.prev_train.iter().enumerate() {
+                a_mat[(i, t)] = y[gi] * yt * row[gi];
+            }
+            a_mat[(n, t)] = yt;
+        }
+
+        // Least squares; Householder QR first, pseudo-inverse of the
+        // normal equations when rank-deficient (the paper's prescription).
+        let mut at = match lstsq(&a_mat, &rhs) {
+            Ok(x) => x,
+            Err(_) => {
+                let ata = a_mat.t().matmul(&a_mat);
+                let atb = a_mat.t_matvec(&rhs);
+                ata.pinv().matvec(&atb)
+            }
+        };
+
+        // ---- AdjustAlpha: clip + rebalance to Eq. 16 ----------------------
+        let t_y: Vec<f64> = ctx.added.iter().map(|&gt| y[gt]).collect();
+        let balanced = balance_to_target(&mut at, &t_y, c, target);
+        if !balanced {
+            return SeedResult {
+                alpha: vec![0.0; next.len()],
+                fell_back: true,
+            };
+        }
+        for (t, &gt) in ctx.added.iter().enumerate() {
+            let np = pos_of(next, gt).expect("T ⊄ next_train");
+            alpha[np] = at[t];
+        }
+        SeedResult {
+            alpha,
+            fell_back: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seeding::test_support::solved_round;
+    use crate::seeding::{check_feasible, ColdStart, Seeder};
+
+    #[test]
+    fn seed_is_feasible() {
+        let sr = solved_round("heart", 120, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let r = Mir.seed(&sr.ctx(), &mut cache);
+        let y: Vec<f64> = sr.next_train.iter().map(|&i| sr.full.y[i]).collect();
+        check_feasible(&r.alpha, &y, sr.c).unwrap();
+    }
+
+    #[test]
+    fn shared_alpha_unchanged() {
+        let sr = solved_round("heart", 120, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let r = Mir.seed(&sr.ctx(), &mut cache);
+        if r.fell_back {
+            return;
+        }
+        for (p, &gi) in sr.prev_train.iter().enumerate() {
+            if sr.removed.contains(&gi) {
+                continue;
+            }
+            let np = sr.next_train.binary_search(&gi).unwrap();
+            assert!(
+                (r.alpha[np] - sr.prev_alpha[p]).abs() < 1e-12,
+                "α_S changed at {gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduces_iterations_vs_cold() {
+        let sr = solved_round("heart", 150, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let seeded = Mir.seed(&sr.ctx(), &mut cache);
+        let cold = ColdStart.seed(&sr.ctx(), &mut cache);
+        let (it_seeded, obj_s, _) = sr.solve_next(seeded.alpha);
+        let (it_cold, obj_c, _) = sr.solve_next(cold.alpha);
+        assert!(
+            it_seeded < it_cold,
+            "MIR did not reduce iterations: {it_seeded} vs cold {it_cold}"
+        );
+        assert!((obj_s - obj_c).abs() < 1e-3 * obj_c.abs().max(1.0));
+    }
+
+    #[test]
+    fn works_on_sparse_data() {
+        let sr = solved_round("adult", 200, 5, 100.0, 0.5);
+        let mut cache = sr.cache();
+        let r = Mir.seed(&sr.ctx(), &mut cache);
+        let y: Vec<f64> = sr.next_train.iter().map(|&i| sr.full.y[i]).collect();
+        check_feasible(&r.alpha, &y, sr.c).unwrap();
+    }
+
+    #[test]
+    fn all_bounded_regime() {
+        // madelon: all α at the bound; MIR must still emit a feasible seed
+        let sr = solved_round("madelon", 100, 5, 1.0, std::f64::consts::FRAC_1_SQRT_2);
+        let mut cache = sr.cache();
+        let r = Mir.seed(&sr.ctx(), &mut cache);
+        let y: Vec<f64> = sr.next_train.iter().map(|&i| sr.full.y[i]).collect();
+        check_feasible(&r.alpha, &y, sr.c).unwrap();
+    }
+}

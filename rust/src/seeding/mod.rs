@@ -1,0 +1,209 @@
+//! Alpha-seeding algorithms — the paper's contribution (§3) plus the
+//! leave-one-out baselines from the supplementary material.
+//!
+//! Every algorithm consumes the solved round-h SVM plus the 𝓡/𝒯/𝓢 fold
+//! transition and emits an initial α for round h+1 that is **feasible**
+//! (0 ≤ αᵢ ≤ C and Σyᵢαᵢ = 0), which `smo::Solver::solve_from` then
+//! polishes to optimality:
+//!
+//! | Seeder | Paper | Strategy |
+//! |--------|-------|----------|
+//! | [`ColdStart`] | baseline | α = 0 (LibSVM semantics) |
+//! | [`Ato`] | §3.1 | ramp α_𝒯 up / α_𝓡 down, compensating on the margin set |
+//! | [`Mir`] | §3.2 | one least-squares solve for α_𝒯 (Eq. 18) |
+//! | [`Sir`] | §3.3 | per-instance similarity transplant |
+//! | [`Avg`] | suppl. | LOO: spread the removed α uniformly over free SVs |
+//! | [`Top`] | suppl. | LOO: give the removed α to the most similar SVs |
+
+mod ato;
+mod avg;
+mod balance;
+mod cold;
+mod mir;
+mod sir;
+mod top;
+
+pub use ato::Ato;
+pub use avg::Avg;
+pub use balance::balance_to_target;
+pub use cold::ColdStart;
+pub use mir::Mir;
+pub use sir::Sir;
+pub use top::Top;
+
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelCache};
+
+/// Everything a seeder may use from round h to initialise round h+1.
+/// All index slices hold **global** indices into `full` and are sorted
+/// ascending except `removed`/`added` (fold order).
+pub struct SeedContext<'a> {
+    /// The complete dataset (all k folds).
+    pub full: &'a Dataset,
+    pub kernel: Kernel,
+    pub c: f64,
+    /// Round h's training instances.
+    pub prev_train: &'a [usize],
+    /// Round h's optimal α, aligned with `prev_train`.
+    pub prev_alpha: &'a [f64],
+    /// Round h's optimality indicators fᵢ = yᵢGᵢ, aligned with `prev_train`.
+    pub prev_f: &'a [f64],
+    /// Round h's bias b.
+    pub prev_b: f64,
+    /// 𝓡: leaving the training set (fold h+1).
+    pub removed: &'a [usize],
+    /// 𝒯: entering the training set (fold h, round h's test set).
+    pub added: &'a [usize],
+    /// Round h+1's training instances (= prev_train ∖ 𝓡 ∪ 𝒯, sorted).
+    pub next_train: &'a [usize],
+    /// Deterministic seed for any stochastic tie-breaking (SIR fallback).
+    pub rng_seed: u64,
+}
+
+/// Outcome of a seeding step.
+#[derive(Debug, Clone)]
+pub struct SeedResult {
+    /// Initial α aligned with `ctx.next_train`.
+    pub alpha: Vec<f64>,
+    /// True if the algorithm had to fall back to the cold start (e.g. the
+    /// Σyα balance was unreachable within the box).
+    pub fell_back: bool,
+}
+
+/// An alpha-seeding strategy. `Send + Sync` so the coordinator can ship
+/// jobs holding a seeder to worker threads (all implementations are
+/// stateless value types).
+pub trait Seeder: Send + Sync {
+    /// Short name for tables ("sir", "mir", ...).
+    fn name(&self) -> &'static str;
+
+    /// Produce a feasible initial α for round h+1. `cache` is an LRU of
+    /// kernel rows over the **full** dataset (global indices), shared
+    /// across the whole cross-validation run.
+    fn seed(&self, ctx: &SeedContext, cache: &mut KernelCache) -> SeedResult;
+}
+
+/// Look up a seeder by canonical name.
+pub fn seeder_by_name(name: &str) -> Option<Box<dyn Seeder>> {
+    match name {
+        "cold" | "libsvm" => Some(Box::new(ColdStart)),
+        "ato" => Some(Box::new(Ato::default())),
+        "mir" => Some(Box::new(Mir)),
+        "sir" => Some(Box::new(Sir)),
+        "avg" => Some(Box::new(Avg)),
+        "top" => Some(Box::new(Top)),
+        _ => None,
+    }
+}
+
+/// Names of the k-fold seeders, baseline first (Table 1 ordering).
+pub const ALL_SEEDERS: &[&str] = &["cold", "ato", "mir", "sir"];
+/// Names of the LOO comparison set (Figure 2 ordering).
+pub const LOO_SEEDERS: &[&str] = &["cold", "avg", "top", "ato", "mir", "sir"];
+
+/// Position of global index `gi` in a sorted index slice.
+#[inline]
+pub(crate) fn pos_of(sorted: &[usize], gi: usize) -> Option<usize> {
+    sorted.binary_search(&gi).ok()
+}
+
+/// Validate a seed result against the feasibility contract; used by tests
+/// and debug assertions in the CV driver.
+pub fn check_feasible(alpha: &[f64], y: &[f64], c: f64) -> Result<(), String> {
+    for (i, &a) in alpha.iter().enumerate() {
+        if !(-1e-9..=c + 1e-9).contains(&a) {
+            return Err(format!("alpha[{i}] = {a} outside [0, {c}]"));
+        }
+    }
+    let s: f64 = alpha.iter().zip(y).map(|(a, yy)| a * yy).sum();
+    if s.abs() > 1e-6 * c * (alpha.len() as f64).max(1.0) {
+        return Err(format!("sum y·alpha = {s} != 0"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::data::FoldPlan;
+    use crate::kernel::KernelEval;
+    use crate::smo::{SmoParams, Solver};
+
+    /// Solve round h of a CV plan and package a SeedContext's owned parts.
+    pub struct SolvedRound {
+        pub full: Dataset,
+        pub kernel: Kernel,
+        pub c: f64,
+        pub prev_train: Vec<usize>,
+        pub prev_alpha: Vec<f64>,
+        pub prev_f: Vec<f64>,
+        pub prev_b: f64,
+        pub removed: Vec<usize>,
+        pub added: Vec<usize>,
+        pub next_train: Vec<usize>,
+    }
+
+    impl SolvedRound {
+        pub fn ctx(&self) -> SeedContext<'_> {
+            SeedContext {
+                full: &self.full,
+                kernel: self.kernel,
+                c: self.c,
+                prev_train: &self.prev_train,
+                prev_alpha: &self.prev_alpha,
+                prev_f: &self.prev_f,
+                prev_b: self.prev_b,
+                removed: &self.removed,
+                added: &self.added,
+                next_train: &self.next_train,
+                rng_seed: 7,
+            }
+        }
+
+        pub fn cache(&self) -> KernelCache {
+            KernelCache::with_byte_budget(
+                KernelEval::new(self.full.clone(), self.kernel),
+                64 << 20,
+            )
+        }
+
+        /// Solve round h+1 from a given seed; returns (iterations, obj, b).
+        pub fn solve_next(&self, alpha0: Vec<f64>) -> (u64, f64, f64) {
+            let train = self.full.select(&self.next_train);
+            let mut solver = Solver::new(
+                KernelEval::new(train, self.kernel),
+                SmoParams::with_c(self.c),
+            );
+            let r = solver.solve_from(alpha0, None);
+            assert!(r.converged);
+            (r.iterations, r.objective, r.b)
+        }
+    }
+
+    /// Train round h=0 of a k-fold plan on a synthetic dataset.
+    pub fn solved_round(dataset: &str, n: usize, k: usize, c: f64, gamma: f64) -> SolvedRound {
+        let full = crate::data::synth::generate(dataset, Some(n), 42);
+        let kernel = Kernel::rbf(gamma);
+        let plan = FoldPlan::stratified(&full, k, 11);
+        let h = 0;
+        let prev_train = plan.train_indices(h);
+        let train = full.select(&prev_train);
+        let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), SmoParams::with_c(c));
+        let r = solver.solve();
+        assert!(r.converged, "round-0 solve did not converge");
+        let prev_f = r.f_indicators(&train.y);
+        let t = plan.transition(h);
+        SolvedRound {
+            full,
+            kernel,
+            c,
+            prev_train,
+            prev_alpha: r.alpha,
+            prev_f,
+            prev_b: r.b,
+            removed: t.removed,
+            added: t.added,
+            next_train: plan.train_indices(h + 1),
+        }
+    }
+}

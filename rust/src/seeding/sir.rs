@@ -1,0 +1,218 @@
+//! Single Instance Replacement (paper §3.3, Algorithm 3) — the paper's
+//! best-performing seeder.
+//!
+//! For each removed instance x_p with α_p > 0, find the unused added
+//! instance x_q that is *most similar* (same label, maximal kernel value
+//! K(x_p, x_q)) and transplant α_p onto it. The change to every optimality
+//! indicator is then Δfᵢ = α_p(y_q·K(xᵢ,x_q) − y_p·K(xᵢ,x_p)) ≈ 0 (Eq. 21).
+//! When no same-label instance remains, a deterministic pseudo-random one
+//! is used and the resulting Σyα imbalance is repaired by *AdjustAlpha*.
+
+use super::{balance_to_target, pos_of, SeedContext, SeedResult, Seeder};
+use crate::kernel::KernelCache;
+use crate::util::rng::Pcg32;
+
+/// Single Instance Replacement.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Sir;
+
+impl Seeder for Sir {
+    fn name(&self) -> &'static str {
+        "sir"
+    }
+
+    fn seed(&self, ctx: &SeedContext, cache: &mut KernelCache) -> SeedResult {
+        let next = ctx.next_train;
+        let mut alpha = vec![0.0f64; next.len()];
+
+        // Copy the shared instances' α unchanged (α'_s = α_s).
+        for (p, &gi) in ctx.prev_train.iter().enumerate() {
+            if ctx.prev_alpha[p] > 0.0 {
+                if let Some(np) = pos_of(next, gi) {
+                    alpha[np] = ctx.prev_alpha[p];
+                }
+            }
+        }
+
+        // Transplant each removed α_p onto the most similar unused 𝒯
+        // instance with the same label.
+        let mut used = vec![false; ctx.added.len()];
+        let mut rng = Pcg32::new(ctx.rng_seed, 0x51B);
+        let mut any_random = false;
+
+        // Process 𝓡 in descending α so large weights get first pick of the
+        // similarity pool (deterministic; the paper leaves order open).
+        let mut r_order: Vec<usize> = (0..ctx.removed.len()).collect();
+        let r_alpha: Vec<f64> = ctx
+            .removed
+            .iter()
+            .map(|&gr| {
+                let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+                ctx.prev_alpha[p]
+            })
+            .collect();
+        r_order.sort_by(|&a, &b| r_alpha[b].partial_cmp(&r_alpha[a]).unwrap());
+
+        for &ri in &r_order {
+            let ap = r_alpha[ri];
+            if ap <= 0.0 {
+                continue; // α_p = 0 ⇒ Δf ≡ 0, nothing to transplant
+            }
+            let gp = ctx.removed[ri];
+            let yp = ctx.full.y[gp];
+            // Most similar same-label unused t: maximal K(x_p, x_t).
+            // One cached kernel row over the full dataset serves all of 𝒯.
+            let row_p = cache.row(gp);
+            let mut best: Option<(usize, f64)> = None;
+            for (ti, &gt) in ctx.added.iter().enumerate() {
+                if used[ti] || ctx.full.y[gt] != yp {
+                    continue;
+                }
+                let k = row_p[gt];
+                if best.map(|(_, bk)| k > bk).unwrap_or(true) {
+                    best = Some((ti, k));
+                }
+            }
+            let ti = match best {
+                Some((ti, _)) => ti,
+                None => {
+                    // no same-label candidate left: random unused fallback
+                    let free: Vec<usize> =
+                        (0..ctx.added.len()).filter(|&t| !used[t]).collect();
+                    if free.is_empty() {
+                        // |𝒯| < number of SVs in 𝓡 — leave the residual to
+                        // the balance step below.
+                        any_random = true;
+                        continue;
+                    }
+                    any_random = true;
+                    free[rng.gen_range(free.len())]
+                }
+            };
+            used[ti] = true;
+            let gq = ctx.added[ti];
+            let nq = pos_of(next, gq).expect("T ⊄ next_train");
+            alpha[nq] = ap;
+        }
+
+        // Repair Σyα if any random (label-mismatched) replacement happened
+        // or residual α could not be placed. Target: Σ_{t∈𝒯} y_t·α'_t must
+        // equal Σ_{r∈𝓡} y_r·α_r (Eq. 16).
+        let target: f64 = ctx
+            .removed
+            .iter()
+            .zip(&r_alpha)
+            .map(|(&gr, &a)| ctx.full.y[gr] * a)
+            .sum();
+        let t_positions: Vec<usize> = ctx
+            .added
+            .iter()
+            .map(|&gt| pos_of(next, gt).expect("T ⊄ next_train"))
+            .collect();
+        let mut t_alpha: Vec<f64> = t_positions.iter().map(|&np| alpha[np]).collect();
+        let t_y: Vec<f64> = ctx.added.iter().map(|&gt| ctx.full.y[gt]).collect();
+        let current: f64 = t_alpha.iter().zip(&t_y).map(|(a, y)| a * y).sum();
+
+        let mut fell_back = false;
+        if (current - target).abs() > 1e-9 || any_random {
+            if balance_to_target(&mut t_alpha, &t_y, ctx.c, target) {
+                for (&np, &a) in t_positions.iter().zip(&t_alpha) {
+                    alpha[np] = a;
+                }
+            } else {
+                // Unreachable within the box: cold-start fallback.
+                alpha.iter_mut().for_each(|a| *a = 0.0);
+                fell_back = true;
+            }
+        }
+
+        SeedResult { alpha, fell_back }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seeding::test_support::solved_round;
+    use crate::seeding::{check_feasible, ColdStart, Seeder};
+
+    #[test]
+    fn seed_is_feasible() {
+        let sr = solved_round("heart", 120, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let r = Sir.seed(&sr.ctx(), &mut cache);
+        let y: Vec<f64> = sr.next_train.iter().map(|&i| sr.full.y[i]).collect();
+        check_feasible(&r.alpha, &y, sr.c).unwrap();
+    }
+
+    #[test]
+    fn shared_alphas_copied() {
+        let sr = solved_round("heart", 120, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let r = Sir.seed(&sr.ctx(), &mut cache);
+        if r.fell_back {
+            return; // nothing to check on fallback
+        }
+        // every shared instance keeps its α
+        for (p, &gi) in sr.prev_train.iter().enumerate() {
+            if sr.removed.contains(&gi) {
+                continue;
+            }
+            let np = sr.next_train.binary_search(&gi).unwrap();
+            assert!(
+                (r.alpha[np] - sr.prev_alpha[p]).abs() < 1e-12,
+                "shared α changed at {gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduces_iterations_vs_cold() {
+        let sr = solved_round("heart", 150, 5, 2.0, 0.2);
+        let mut cache = sr.cache();
+        let seeded = Sir.seed(&sr.ctx(), &mut cache);
+        let cold = ColdStart.seed(&sr.ctx(), &mut cache);
+        let (it_seeded, obj_s, _) = sr.solve_next(seeded.alpha);
+        let (it_cold, obj_c, _) = sr.solve_next(cold.alpha);
+        assert!(
+            it_seeded < it_cold,
+            "SIR did not reduce iterations: {it_seeded} vs cold {it_cold}"
+        );
+        // identical optimum
+        assert!(
+            (obj_s - obj_c).abs() < 1e-3 * obj_c.abs().max(1.0),
+            "objectives differ: {obj_s} vs {obj_c}"
+        );
+    }
+
+    #[test]
+    fn transplant_prefers_same_label_similar() {
+        // On the sparse adult analogue the label-match rule should hold for
+        // every transplanted weight (enough candidates of each class).
+        let sr = solved_round("adult", 200, 5, 100.0, 0.5);
+        let mut cache = sr.cache();
+        let r = Sir.seed(&sr.ctx(), &mut cache);
+        if r.fell_back {
+            return;
+        }
+        let y: Vec<f64> = sr.next_train.iter().map(|&i| sr.full.y[i]).collect();
+        check_feasible(&r.alpha, &y, sr.c).unwrap();
+        // 𝒯 got non-trivial mass whenever 𝓡 carried support vectors
+        let removed_mass: f64 = sr
+            .removed
+            .iter()
+            .map(|&gr| {
+                let p = sr.prev_train.binary_search(&gr).unwrap();
+                sr.prev_alpha[p]
+            })
+            .sum();
+        if removed_mass > 0.0 {
+            let t_mass: f64 = sr
+                .added
+                .iter()
+                .map(|&gt| r.alpha[sr.next_train.binary_search(&gt).unwrap()])
+                .sum();
+            assert!(t_mass > 0.0, "no mass transplanted");
+        }
+    }
+}

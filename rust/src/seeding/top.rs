@@ -1,0 +1,187 @@
+//! TOP (Lee et al. 2004) — leave-one-out baseline.
+//!
+//! Instead of spreading the removed weight uniformly (AVG), give it to the
+//! instances *most similar* to x_t: sort the survivors by kernel value
+//! K(x_j, x_t) descending and pour y_t·α_t into them one by one, each
+//! absorbing as much as its box constraint allows (paper supplementary
+//! §TOP). Same LOO context contract as [`super::Avg`].
+
+use super::{pos_of, SeedContext, SeedResult, Seeder};
+use crate::kernel::KernelCache;
+
+/// Similarity-ranked redistribution.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Top;
+
+impl Seeder for Top {
+    fn name(&self) -> &'static str {
+        "top"
+    }
+
+    fn seed(&self, ctx: &SeedContext, cache: &mut KernelCache) -> SeedResult {
+        assert!(
+            ctx.added.is_empty(),
+            "TOP is a leave-one-out seeder: 𝒯 must be empty"
+        );
+        let c = ctx.c;
+        let y = &ctx.full.y;
+        let next = ctx.next_train;
+
+        let mut alpha = vec![0.0f64; next.len()];
+        for (p, &gi) in ctx.prev_train.iter().enumerate() {
+            if let Some(np) = pos_of(next, gi) {
+                alpha[np] = ctx.prev_alpha[p];
+            }
+        }
+
+        for &gt in ctx.removed {
+            let p = pos_of(ctx.prev_train, gt).expect("R ⊄ prev_train");
+            let at = ctx.prev_alpha[p];
+            if at <= 0.0 {
+                continue;
+            }
+            let yt = y[gt];
+            // Rank survivors by similarity to the removed instance.
+            let row_t = cache.row(gt);
+            let mut order: Vec<usize> = (0..next.len()).collect();
+            order.sort_by(|&a, &b| {
+                row_t[next[b]]
+                    .partial_cmp(&row_t[next[a]])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+
+            // Pour y_t·α_t down the ranking.
+            let mut remaining = at; // in α units; sign handled per target
+            for &j in &order {
+                if remaining <= 1e-15 {
+                    break;
+                }
+                let yj = y[next[j]];
+                if yj == yt {
+                    // same label: increase α_j toward C
+                    let room = c - alpha[j];
+                    let give = remaining.min(room);
+                    alpha[j] += give;
+                    remaining -= give;
+                } else {
+                    // opposite label: decrease α_j toward 0
+                    let room = alpha[j];
+                    let give = remaining.min(room);
+                    alpha[j] -= give;
+                    remaining -= give;
+                }
+            }
+            if remaining > 1e-9 {
+                // Could not place the full weight (box saturated): repair
+                // globally like the other seeders.
+                let ny: Vec<f64> = next.iter().map(|&gi| y[gi]).collect();
+                if !super::balance_to_target(&mut alpha, &ny, c, 0.0) {
+                    return SeedResult {
+                        alpha: vec![0.0; next.len()],
+                        fell_back: true,
+                    };
+                }
+            }
+        }
+
+        SeedResult {
+            alpha,
+            fell_back: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::FoldPlan;
+    use crate::kernel::{Kernel, KernelEval};
+    use crate::seeding::check_feasible;
+    use crate::smo::{SmoParams, Solver};
+
+    #[test]
+    fn loo_seed_feasible_and_warm() {
+        let n = 80;
+        let full = crate::data::synth::generate("heart", Some(n), 33);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver =
+            Solver::new(KernelEval::new(full.clone(), kernel), SmoParams::with_c(2.0));
+        let r = solver.solve();
+        let f = r.f_indicators(&full.y);
+        let prev_train: Vec<usize> = (0..n).collect();
+        let t = 5usize;
+        let plan = FoldPlan::leave_one_out(n);
+        let next_train = plan.train_indices(t);
+        let ctx = SeedContext {
+            full: &full,
+            kernel,
+            c: 2.0,
+            prev_train: &prev_train,
+            prev_alpha: &r.alpha,
+            prev_f: &f,
+            prev_b: r.b,
+            removed: &[t],
+            added: &[],
+            next_train: &next_train,
+            rng_seed: 1,
+        };
+        let mut cache =
+            KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 16 << 20);
+        let seed = Top.seed(&ctx, &mut cache);
+        let y: Vec<f64> = next_train.iter().map(|&i| full.y[i]).collect();
+        check_feasible(&seed.alpha, &y, 2.0).unwrap();
+
+        let train = full.select(&next_train);
+        let mut s_warm = Solver::new(
+            KernelEval::new(train.clone(), kernel),
+            SmoParams::with_c(2.0),
+        );
+        let rw = s_warm.solve_from(seed.alpha, None);
+        let mut s_cold = Solver::new(KernelEval::new(train, kernel), SmoParams::with_c(2.0));
+        let rc = s_cold.solve();
+        assert!(rw.converged && rc.converged);
+        assert!(
+            rw.iterations < rc.iterations,
+            "TOP warm {} vs cold {}",
+            rw.iterations,
+            rc.iterations
+        );
+    }
+
+    #[test]
+    fn removed_nonsupport_is_noop() {
+        // If the left-out instance has α = 0, the seed equals the original
+        // α restricted to the survivors.
+        let n = 60;
+        let full = crate::data::synth::generate("heart", Some(n), 9);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver =
+            Solver::new(KernelEval::new(full.clone(), kernel), SmoParams::with_c(2.0));
+        let r = solver.solve();
+        let Some(t) = (0..n).find(|&i| r.alpha[i] == 0.0) else {
+            return; // no non-SV in this draw; nothing to test
+        };
+        let f = r.f_indicators(&full.y);
+        let prev_train: Vec<usize> = (0..n).collect();
+        let next_train: Vec<usize> = (0..n).filter(|&i| i != t).collect();
+        let ctx = SeedContext {
+            full: &full,
+            kernel,
+            c: 2.0,
+            prev_train: &prev_train,
+            prev_alpha: &r.alpha,
+            prev_f: &f,
+            prev_b: r.b,
+            removed: &[t],
+            added: &[],
+            next_train: &next_train,
+            rng_seed: 1,
+        };
+        let mut cache =
+            KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 16 << 20);
+        let seed = Top.seed(&ctx, &mut cache);
+        for (np, &gi) in next_train.iter().enumerate() {
+            assert_eq!(seed.alpha[np], r.alpha[gi]);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Sequential Minimal Optimisation — a LibSVM-equivalent C-SVC solver.
+//!
+//! The dual problem (paper Eq. 1) is solved by the SMO decomposition method
+//! with second-order working-set selection (WSS2, Fan–Chen–Lin 2005) and
+//! LibSVM-style shrinking. The solver accepts an **arbitrary feasible
+//! initial α** (and optionally a pre-computed gradient) — that is the hook
+//! every alpha-seeding algorithm plugs into; cold start is α = 0.
+//!
+//! Notation bridge to the paper: the paper's optimality indicator
+//! fᵢ = yᵢ·Gᵢ where Gᵢ = ∂W/∂αᵢ = Σⱼ αⱼQᵢⱼ − 1 is LibSVM's gradient, and
+//! the paper's bias b equals LibSVM's ρ.
+
+mod model;
+mod persist;
+mod platt;
+mod solver;
+mod verify;
+
+pub use model::Model;
+pub use persist::ModelIoError;
+pub use platt::PlattScaler;
+pub use solver::{SmoParams, SmoResult, Solver};
+pub use verify::{kkt_violation, KktReport};

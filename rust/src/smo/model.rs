@@ -1,0 +1,148 @@
+//! A trained SVM model: support vectors + dual coefficients + bias.
+
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelEval};
+
+use super::solver::SmoResult;
+
+/// Trained C-SVC model. Decision function:
+/// `d(x) = Σᵢ coefᵢ · K(svᵢ, x) − b`, predict `sign(d(x))`.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Support vectors (a copy of the relevant training rows).
+    pub sv: Dataset,
+    /// coefᵢ = yᵢ·αᵢ for each support vector.
+    pub coef: Vec<f64>,
+    /// Bias (paper's b = LibSVM ρ).
+    pub b: f64,
+    pub kernel: Kernel,
+}
+
+impl Model {
+    /// Extract a model from a solver result over its training set.
+    pub fn from_result(train: &Dataset, kernel: Kernel, result: &SmoResult) -> Model {
+        let sv_idx: Vec<usize> = (0..train.len())
+            .filter(|&i| result.alpha[i] > 0.0)
+            .collect();
+        let coef: Vec<f64> = sv_idx
+            .iter()
+            .map(|&i| train.y[i] * result.alpha[i])
+            .collect();
+        Model {
+            sv: train.select(&sv_idx),
+            coef,
+            b: result.b,
+            kernel,
+        }
+    }
+
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Decision value for row `j` of `data`.
+    pub fn decision_one(&self, data: &Dataset, j: usize) -> f64 {
+        let ev = KernelEval::new(self.sv.clone(), self.kernel);
+        let mut acc = 0.0;
+        for i in 0..self.sv.len() {
+            acc += self.coef[i] * ev.eval_cross(i, data, j);
+        }
+        acc - self.b
+    }
+
+    /// Decision values for every row of `data` (native path; the XLA
+    /// backend offers the same contract as a bulk artifact call).
+    pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
+        let ev = KernelEval::new(self.sv.clone(), self.kernel);
+        (0..data.len())
+            .map(|j| {
+                let mut acc = 0.0;
+                for i in 0..self.sv.len() {
+                    acc += self.coef[i] * ev.eval_cross(i, data, j);
+                }
+                acc - self.b
+            })
+            .collect()
+    }
+
+    /// Predicted labels (±1) for every row of `data`.
+    pub fn predict(&self, data: &Dataset) -> Vec<f64> {
+        self.decision_values(data)
+            .into_iter()
+            .map(|d| if d >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Classification accuracy on a labelled set.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let pred = self.predict(data);
+        let correct = pred
+            .iter()
+            .zip(&data.y)
+            .filter(|(p, y)| (*p - *y).abs() < 1e-9)
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataMatrix;
+    use crate::smo::{SmoParams, Solver};
+
+    fn train_simple() -> (Dataset, Model) {
+        // linearly separable strip
+        let n = 40;
+        let mut data = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let x = i as f32 / n as f32; // 0..1
+            data.push(x);
+            data.push(if i % 2 == 0 { 0.1 } else { -0.1 });
+            y.push(if x > 0.5 { 1.0 } else { -1.0 });
+        }
+        let ds = Dataset::new("strip", DataMatrix::dense(n, 2, data), y);
+        let kernel = Kernel::rbf(2.0);
+        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(10.0));
+        let r = solver.solve();
+        assert!(r.converged);
+        let model = Model::from_result(&ds, kernel, &r);
+        (ds, model)
+    }
+
+    #[test]
+    fn train_accuracy_high_on_separable() {
+        let (ds, model) = train_simple();
+        assert!(model.accuracy(&ds) >= 0.95, "acc {}", model.accuracy(&ds));
+    }
+
+    #[test]
+    fn decision_one_matches_bulk() {
+        let (ds, model) = train_simple();
+        let bulk = model.decision_values(&ds);
+        for j in [0usize, 7, 23, 39] {
+            assert!((model.decision_one(&ds, j) - bulk[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn model_keeps_only_svs() {
+        let (ds, model) = train_simple();
+        assert!(model.n_sv() > 0);
+        assert!(model.n_sv() <= ds.len());
+        assert_eq!(model.sv.len(), model.coef.len());
+        // coefficients carry the label sign
+        for (i, &c) in model.coef.iter().enumerate() {
+            assert_eq!(c.signum(), model.sv.y[i]);
+        }
+    }
+
+    #[test]
+    fn predict_emits_plus_minus_one() {
+        let (ds, model) = train_simple();
+        for p in model.predict(&ds) {
+            assert!(p == 1.0 || p == -1.0);
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Model persistence in LibSVM's `svm_save_model` text format.
+//!
+//! A model trained here loads in stock LibSVM tooling and vice versa
+//! (binary C-SVC with the four classic kernels). Format:
+//!
+//! ```text
+//! svm_type c_svc
+//! kernel_type rbf
+//! gamma 0.5
+//! nr_class 2
+//! total_sv 3
+//! rho 0.25
+//! label 1 -1
+//! nr_sv 2 1
+//! SV
+//! 0.5 1:0.1 3:0.2
+//! ...
+//! ```
+
+use super::model::Model;
+use crate::data::{CsrMatrix, DataMatrix, Dataset};
+use crate::kernel::Kernel;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ModelIoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("unsupported model: {0}")]
+    Unsupported(String),
+}
+
+impl Model {
+    /// Serialise in LibSVM model format. Support vectors are written with
+    /// positive-label SVs first (LibSVM's class-grouped layout).
+    pub fn save(&self, mut w: impl Write) -> Result<(), ModelIoError> {
+        writeln!(w, "svm_type c_svc")?;
+        match self.kernel {
+            Kernel::Rbf { gamma } => {
+                writeln!(w, "kernel_type rbf")?;
+                writeln!(w, "gamma {gamma}")?;
+            }
+            Kernel::Linear => writeln!(w, "kernel_type linear")?,
+            Kernel::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => {
+                writeln!(w, "kernel_type polynomial")?;
+                writeln!(w, "degree {degree}")?;
+                writeln!(w, "gamma {gamma}")?;
+                writeln!(w, "coef0 {coef0}")?;
+            }
+            Kernel::Sigmoid { gamma, coef0 } => {
+                writeln!(w, "kernel_type sigmoid")?;
+                writeln!(w, "gamma {gamma}")?;
+                writeln!(w, "coef0 {coef0}")?;
+            }
+        }
+        writeln!(w, "nr_class 2")?;
+        writeln!(w, "total_sv {}", self.n_sv())?;
+        writeln!(w, "rho {}", self.b)?;
+        writeln!(w, "label 1 -1")?;
+        let pos: Vec<usize> = (0..self.n_sv()).filter(|&i| self.sv.y[i] > 0.0).collect();
+        let neg: Vec<usize> = (0..self.n_sv()).filter(|&i| self.sv.y[i] < 0.0).collect();
+        writeln!(w, "nr_sv {} {}", pos.len(), neg.len())?;
+        writeln!(w, "SV")?;
+        for &i in pos.iter().chain(neg.iter()) {
+            // sv_coef = y_i * alpha_i = coef[i]
+            write!(w, "{}", self.coef[i])?;
+            match &self.sv.x {
+                DataMatrix::Sparse(m) => {
+                    let (idx, val) = m.row(i);
+                    for (&c, &v) in idx.iter().zip(val) {
+                        write!(w, " {}:{}", c + 1, v)?;
+                    }
+                }
+                DataMatrix::Dense { .. } => {
+                    for (j, &v) in self.sv.x.dense_row(i).iter().enumerate() {
+                        if v != 0.0 {
+                            write!(w, " {}:{}", j + 1, v)?;
+                        }
+                    }
+                }
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Save to a file path.
+    pub fn save_file(&self, path: impl AsRef<Path>) -> Result<(), ModelIoError> {
+        let f = std::fs::File::create(path)?;
+        self.save(std::io::BufWriter::new(f))
+    }
+
+    /// Parse a LibSVM model (binary c_svc only — the paper's setting).
+    pub fn load(r: impl std::io::Read) -> Result<Model, ModelIoError> {
+        let reader = BufReader::new(r);
+        let mut lines = reader.lines().enumerate();
+
+        let mut kernel_type = String::new();
+        let mut gamma = 0.0f64;
+        let mut coef0 = 0.0f64;
+        let mut degree = 3u32;
+        let mut rho = 0.0f64;
+        let mut nr_sv: Vec<usize> = Vec::new();
+        let mut labels: Vec<f64> = Vec::new();
+
+        // header
+        loop {
+            let (lineno, line) = lines
+                .next()
+                .ok_or_else(|| ModelIoError::Parse {
+                    line: 0,
+                    msg: "missing SV section".into(),
+                })?;
+            let line = line?;
+            let mut parts = line.split_ascii_whitespace();
+            let key = parts.next().unwrap_or("");
+            let err = |msg: &str| ModelIoError::Parse {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            match key {
+                "svm_type" => {
+                    let v = parts.next().ok_or_else(|| err("missing svm_type"))?;
+                    if v != "c_svc" {
+                        return Err(ModelIoError::Unsupported(format!("svm_type {v}")));
+                    }
+                }
+                "kernel_type" => {
+                    kernel_type = parts.next().ok_or_else(|| err("missing kernel"))?.to_string()
+                }
+                "gamma" => gamma = parse_f64(parts.next(), lineno)?,
+                "coef0" => coef0 = parse_f64(parts.next(), lineno)?,
+                "degree" => degree = parse_f64(parts.next(), lineno)? as u32,
+                "rho" => rho = parse_f64(parts.next(), lineno)?,
+                "nr_class" => {
+                    let n = parse_f64(parts.next(), lineno)? as usize;
+                    if n != 2 {
+                        return Err(ModelIoError::Unsupported(format!("nr_class {n}")));
+                    }
+                }
+                "total_sv" => {}
+                "label" => {
+                    labels = parts
+                        .map(|p| p.parse::<f64>())
+                        .collect::<Result<_, _>>()
+                        .map_err(|_| err("bad label list"))?;
+                }
+                "nr_sv" => {
+                    nr_sv = parts
+                        .map(|p| p.parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .map_err(|_| err("bad nr_sv list"))?;
+                }
+                "SV" => break,
+                other => {
+                    return Err(ModelIoError::Unsupported(format!("header key '{other}'")))
+                }
+            }
+        }
+        if labels.len() != 2 || nr_sv.len() != 2 {
+            return Err(ModelIoError::Unsupported(
+                "model must be binary (2 labels)".into(),
+            ));
+        }
+
+        let kernel = match kernel_type.as_str() {
+            "rbf" => Kernel::Rbf { gamma },
+            "linear" => Kernel::Linear,
+            "polynomial" => Kernel::Poly {
+                gamma,
+                coef0,
+                degree,
+            },
+            "sigmoid" => Kernel::Sigmoid { gamma, coef0 },
+            other => return Err(ModelIoError::Unsupported(format!("kernel '{other}'"))),
+        };
+
+        // SV rows
+        let mut coef = Vec::new();
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+        let mut max_col = 0u32;
+        for (lineno, line) in lines {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_ascii_whitespace();
+            let c: f64 = parts
+                .next()
+                .unwrap()
+                .parse()
+                .map_err(|_| ModelIoError::Parse {
+                    line: lineno + 1,
+                    msg: "bad sv_coef".into(),
+                })?;
+            let mut row = Vec::new();
+            for tok in parts {
+                let (i, v) = tok.split_once(':').ok_or_else(|| ModelIoError::Parse {
+                    line: lineno + 1,
+                    msg: format!("bad feature {tok:?}"),
+                })?;
+                let idx: u32 = i.parse().map_err(|_| ModelIoError::Parse {
+                    line: lineno + 1,
+                    msg: "bad index".into(),
+                })?;
+                let val: f32 = v.parse().map_err(|_| ModelIoError::Parse {
+                    line: lineno + 1,
+                    msg: "bad value".into(),
+                })?;
+                max_col = max_col.max(idx - 1);
+                row.push((idx - 1, val));
+            }
+            row.sort_by_key(|&(c, _)| c);
+            rows.push(row);
+            coef.push(c);
+        }
+        if rows.len() != nr_sv[0] + nr_sv[1] {
+            return Err(ModelIoError::Parse {
+                line: 0,
+                msg: format!(
+                    "SV count {} != nr_sv sum {}",
+                    rows.len(),
+                    nr_sv[0] + nr_sv[1]
+                ),
+            });
+        }
+        // labels per class-grouped layout
+        let y: Vec<f64> = (0..rows.len())
+            .map(|i| if i < nr_sv[0] { labels[0] } else { labels[1] })
+            .collect();
+        let csr = CsrMatrix::from_rows(max_col as usize + 1, &rows);
+        let sv = Dataset::new("loaded-model", DataMatrix::Sparse(csr), y);
+        Ok(Model {
+            sv,
+            coef,
+            b: rho,
+            kernel,
+        })
+    }
+
+    pub fn load_file(path: impl AsRef<Path>) -> Result<Model, ModelIoError> {
+        let f = std::fs::File::open(path)?;
+        Model::load(f)
+    }
+}
+
+fn parse_f64(tok: Option<&str>, lineno: usize) -> Result<f64, ModelIoError> {
+    tok.and_then(|t| t.parse().ok()).ok_or(ModelIoError::Parse {
+        line: lineno + 1,
+        msg: "bad number".into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelEval;
+    use crate::smo::{SmoParams, Solver};
+
+    fn trained() -> (Dataset, Model) {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(2.0));
+        let r = solver.solve();
+        (ds.clone(), Model::from_result(&ds, kernel, &r))
+    }
+
+    #[test]
+    fn roundtrip_preserves_decisions() {
+        let (ds, model) = trained();
+        let mut buf = Vec::new();
+        model.save(&mut buf).unwrap();
+        let loaded = Model::load(&buf[..]).unwrap();
+        assert_eq!(loaded.n_sv(), model.n_sv());
+        assert!((loaded.b - model.b).abs() < 1e-12);
+        // identical predictions on the training set
+        let d0 = model.decision_values(&ds);
+        let d1 = loaded.decision_values(&ds);
+        for (a, b) in d0.iter().zip(&d1) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn header_is_libsvm_shaped() {
+        let (_, model) = trained();
+        let mut buf = Vec::new();
+        model.save(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("svm_type c_svc\nkernel_type rbf\n"));
+        assert!(text.contains("\nrho "));
+        assert!(text.contains("\nlabel 1 -1\n"));
+        assert!(text.contains("\nSV\n"));
+        // positive-class SVs first: their coefs are positive
+        let sv_section = text.split("\nSV\n").nth(1).unwrap();
+        let first_coef: f64 = sv_section
+            .lines()
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(first_coef > 0.0);
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(matches!(
+            Model::load("svm_type nu_svc\n".as_bytes()),
+            Err(ModelIoError::Unsupported(_))
+        ));
+        assert!(Model::load("garbage header\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn save_load_file_paths() {
+        let (_, model) = trained();
+        let path = std::env::temp_dir().join("alphaseed_model_test.svm");
+        model.save_file(&path).unwrap();
+        let loaded = Model::load_file(&path).unwrap();
+        assert_eq!(loaded.n_sv(), model.n_sv());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,269 @@
+//! Platt scaling — probability calibration for SVM decision values
+//! (Platt 1999, with the Lin–Weng–Keerthi 2007 numerically-stable Newton
+//! fit used by LibSVM's `-b 1`).
+//!
+//! Fits P(y=1|x) = 1 / (1 + exp(A·d(x) + B)) on held-out decision values.
+//! Integrates with the CV machinery: `fit_from_cv` calibrates on the
+//! cross-validated decision values exactly like LibSVM does — and the
+//! alpha-seeded CV makes that calibration pass cheaper too.
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::smo::{Model, SmoParams, Solver};
+
+/// A fitted sigmoid d ↦ 1/(1+exp(A·d+B)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlattScaler {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl PlattScaler {
+    /// Fit A, B from decision values and ±1 labels (LibSVM's
+    /// `sigmoid_train`: regularised targets + backtracking Newton).
+    pub fn fit(decision: &[f64], y: &[f64]) -> PlattScaler {
+        assert_eq!(decision.len(), y.len());
+        let n = decision.len();
+        let prior1 = y.iter().filter(|&&l| l > 0.0).count() as f64;
+        let prior0 = n as f64 - prior1;
+
+        // regularised targets
+        let hi = (prior1 + 1.0) / (prior1 + 2.0);
+        let lo = 1.0 / (prior0 + 2.0);
+        let t: Vec<f64> = y.iter().map(|&l| if l > 0.0 { hi } else { lo }).collect();
+
+        let mut a = 0.0f64;
+        let mut b = ((prior0 + 1.0) / (prior1 + 1.0)).ln();
+        let eps = 1e-5;
+        let sigma = 1e-12; // Hessian ridge
+        let max_iter = 100;
+
+        let fval = |a: f64, b: f64| -> f64 {
+            let mut f = 0.0;
+            for i in 0..n {
+                let fapb = decision[i] * a + b;
+                // numerically-stable log-loss
+                if fapb >= 0.0 {
+                    f += t[i] * fapb + (1.0 + (-fapb).exp()).ln();
+                } else {
+                    f += (t[i] - 1.0) * fapb + (1.0 + fapb.exp()).ln();
+                }
+            }
+            f
+        };
+
+        let mut fv = fval(a, b);
+        for _ in 0..max_iter {
+            // gradient and Hessian
+            let (mut h11, mut h22, mut h21) = (sigma, sigma, 0.0);
+            let (mut g1, mut g2) = (0.0, 0.0);
+            for i in 0..n {
+                let fapb = decision[i] * a + b;
+                let (p, q) = if fapb >= 0.0 {
+                    let e = (-fapb).exp();
+                    (e / (1.0 + e), 1.0 / (1.0 + e))
+                } else {
+                    let e = fapb.exp();
+                    (1.0 / (1.0 + e), e / (1.0 + e))
+                };
+                let d2 = p * q;
+                h11 += decision[i] * decision[i] * d2;
+                h22 += d2;
+                h21 += decision[i] * d2;
+                let d1 = t[i] - p;
+                g1 += decision[i] * d1;
+                g2 += d1;
+            }
+            if g1.abs() < eps && g2.abs() < eps {
+                break;
+            }
+            // Newton direction (2x2 solve)
+            let det = h11 * h22 - h21 * h21;
+            let da = -(h22 * g1 - h21 * g2) / det;
+            let db = -(-h21 * g1 + h11 * g2) / det;
+            let gd = g1 * da + g2 * db;
+
+            // backtracking line search
+            let mut step = 1.0;
+            let mut improved = false;
+            while step >= 1e-10 {
+                let (na, nb) = (a + step * da, b + step * db);
+                let nf = fval(na, nb);
+                if nf < fv + 1e-4 * step * gd {
+                    a = na;
+                    b = nb;
+                    fv = nf;
+                    improved = true;
+                    break;
+                }
+                step /= 2.0;
+            }
+            if !improved {
+                break;
+            }
+        }
+        PlattScaler { a, b }
+    }
+
+    /// Fit from k-fold cross-validated decision values — the LibSVM `-b 1`
+    /// protocol (train on k−1 folds, collect decisions on the held-out
+    /// fold), optionally alpha-seeded fold to fold.
+    pub fn fit_from_cv(
+        ds: &Dataset,
+        kernel: Kernel,
+        c: f64,
+        k: usize,
+        seeder: &dyn crate::seeding::Seeder,
+        rng_seed: u64,
+    ) -> PlattScaler {
+        use crate::data::FoldPlan;
+        use crate::kernel::{KernelCache, KernelEval};
+        use crate::seeding::SeedContext;
+
+        let plan = FoldPlan::stratified(ds, k, rng_seed);
+        let mut seed_cache =
+            KernelCache::with_byte_budget(KernelEval::new(ds.clone(), kernel), 64 << 20);
+        let mut decisions = vec![0.0f64; ds.len()];
+        let mut prev_alpha: Vec<f64> = Vec::new();
+        let mut prev_f: Vec<f64> = Vec::new();
+        let mut prev_b = 0.0;
+        let mut prev_train: Vec<usize> = Vec::new();
+
+        for h in 0..k {
+            let train_idx = plan.train_indices(h);
+            let train = ds.select(&train_idx);
+            let alpha0 = if h == 0 {
+                vec![0.0; train_idx.len()]
+            } else {
+                let trans = plan.transition(h - 1);
+                let ctx = SeedContext {
+                    full: ds,
+                    kernel,
+                    c,
+                    prev_train: &prev_train,
+                    prev_alpha: &prev_alpha,
+                    prev_f: &prev_f,
+                    prev_b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &train_idx,
+                    rng_seed: rng_seed ^ h as u64,
+                };
+                seeder.seed(&ctx, &mut seed_cache).alpha
+            };
+            let mut solver =
+                Solver::new(KernelEval::new(train.clone(), kernel), SmoParams::with_c(c));
+            let r = solver.solve_from(alpha0, None);
+            let model = Model::from_result(&train, kernel, &r);
+            let test_idx = plan.test_indices(h);
+            let test = ds.select(test_idx);
+            for (pos, &gi) in test_idx.iter().enumerate() {
+                decisions[gi] = model.decision_one(&test, pos);
+            }
+            prev_f = r.f_indicators(&train.y);
+            prev_alpha = r.alpha;
+            prev_b = r.b;
+            prev_train = train_idx;
+        }
+        PlattScaler::fit(&decisions, &ds.y)
+    }
+
+    /// P(y = +1 | decision value d).
+    #[inline]
+    pub fn prob(&self, d: f64) -> f64 {
+        let fapb = self.a * d + self.b;
+        if fapb >= 0.0 {
+            let e = (-fapb).exp();
+            e / (1.0 + e)
+        } else {
+            1.0 / (1.0 + fapb.exp())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separable_decisions_give_steep_sigmoid() {
+        // clearly separated decision values
+        let d: Vec<f64> = (0..40)
+            .map(|i| if i < 20 { -2.0 - (i as f64) * 0.1 } else { 2.0 + (i as f64) * 0.1 })
+            .collect();
+        let y: Vec<f64> = (0..40).map(|i| if i < 20 { -1.0 } else { 1.0 }).collect();
+        let s = PlattScaler::fit(&d, &y);
+        // regularised targets cap at (n₊+1)/(n₊+2) ≈ 0.95, so test at the
+        // extremes of the decision range
+        assert!(s.prob(4.0) > 0.85, "p(+|4.0) = {}", s.prob(4.0));
+        assert!(s.prob(-4.0) < 0.15, "p(+|-4.0) = {}", s.prob(-4.0));
+        // monotone decreasing A (LibSVM convention: A < 0)
+        assert!(s.a < 0.0);
+    }
+
+    #[test]
+    fn probabilities_bounded_and_monotone() {
+        let d = vec![-1.0, -0.5, 0.0, 0.5, 1.0, -0.2, 0.2, 0.9, -0.9, 0.1];
+        let y = vec![-1.0, -1.0, 1.0, 1.0, 1.0, -1.0, 1.0, 1.0, -1.0, -1.0];
+        let s = PlattScaler::fit(&d, &y);
+        let mut prev = s.prob(-5.0);
+        for i in -20..=20 {
+            let p = s.prob(i as f64 * 0.25);
+            assert!((0.0..=1.0).contains(&p));
+            assert!(p >= prev - 1e-12, "not monotone at {i}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn random_decisions_give_flat_sigmoid() {
+        // labels independent of decisions → probabilities near the prior
+        let mut rng = crate::util::rng::Pcg32::seed_from_u64(5);
+        let d: Vec<f64> = (0..200).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> = (0..200)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let s = PlattScaler::fit(&d, &y);
+        let p = s.prob(0.5);
+        assert!((0.3..0.7).contains(&p), "p = {p} should be near 0.5");
+    }
+
+    #[test]
+    fn fit_from_cv_calibrates_heart() {
+        let ds = crate::data::synth::generate("heart", Some(80), 3);
+        let s = PlattScaler::fit_from_cv(
+            &ds,
+            Kernel::rbf(0.2),
+            2.0,
+            4,
+            &crate::seeding::Sir,
+            42,
+        );
+        // a trained model's confident positives get p > 0.5
+        use crate::kernel::KernelEval;
+        let mut solver = Solver::new(
+            KernelEval::new(ds.clone(), Kernel::rbf(0.2)),
+            SmoParams::with_c(2.0),
+        );
+        let r = solver.solve();
+        let model = Model::from_result(&ds, Kernel::rbf(0.2), &r);
+        let dec = model.decision_values(&ds);
+        let mut correct_conf = 0;
+        let mut total = 0;
+        for (d, &label) in dec.iter().zip(&ds.y) {
+            let p = s.prob(*d);
+            if label > 0.0 && *d > 1.0 {
+                total += 1;
+                if p > 0.5 {
+                    correct_conf += 1;
+                }
+            }
+        }
+        if total > 0 {
+            assert!(
+                correct_conf as f64 / total as f64 > 0.8,
+                "{correct_conf}/{total} confident positives calibrated"
+            );
+        }
+    }
+}

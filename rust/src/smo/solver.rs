@@ -1,0 +1,681 @@
+//! The SMO solver core.
+
+use crate::kernel::{KernelCache, KernelEval};
+use std::time::Instant;
+
+/// Solver hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SmoParams {
+    /// Penalty C (box constraint upper bound).
+    pub c: f64,
+    /// Stopping tolerance on the maximal KKT violation (LibSVM default 1e-3).
+    pub eps: f64,
+    /// Hard iteration cap (safety net; LibSVM caps at 10⁷-ish).
+    pub max_iter: u64,
+    /// Enable LibSVM-style shrinking.
+    pub shrinking: bool,
+    /// Kernel-row cache budget in bytes.
+    pub cache_bytes: usize,
+}
+
+impl Default for SmoParams {
+    fn default() -> Self {
+        SmoParams {
+            c: 1.0,
+            eps: 1e-3,
+            max_iter: 20_000_000,
+            shrinking: true,
+            cache_bytes: 256 << 20,
+        }
+    }
+}
+
+impl SmoParams {
+    pub fn with_c(c: f64) -> SmoParams {
+        SmoParams {
+            c,
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of one SMO solve.
+#[derive(Debug, Clone)]
+pub struct SmoResult {
+    /// Optimal dual weights, one per training instance.
+    pub alpha: Vec<f64>,
+    /// Bias of the hyperplane: the paper's b (= LibSVM's ρ). The decision
+    /// function is  sign(Σᵢ yᵢαᵢK(xᵢ,x) − b).
+    pub b: f64,
+    /// SMO iterations actually performed — the hardware-independent cost
+    /// measure reported in the paper's Table 1.
+    pub iterations: u64,
+    /// Dual objective value ½αᵀQα − Σα (LibSVM's obj).
+    pub objective: f64,
+    /// Support vectors (αᵢ > 0).
+    pub n_sv: usize,
+    /// Bounded support vectors (αᵢ = C).
+    pub n_bsv: usize,
+    /// Whether the solver hit `max_iter` before reaching tolerance.
+    pub converged: bool,
+    /// Wall time spent computing the initial gradient (non-zero only for
+    /// warm starts; part of the seeding cost accounting).
+    pub grad_init_secs: f64,
+    /// Final gradient Gᵢ = Σⱼ αⱼQᵢⱼ − 1. The paper's optimality indicator
+    /// is fᵢ = yᵢ·Gᵢ; the seeding algorithms consume it.
+    pub g: Vec<f64>,
+}
+
+impl SmoResult {
+    /// The paper's optimality indicators fᵢ = yᵢ·Gᵢ over the training set.
+    pub fn f_indicators(&self, y: &[f64]) -> Vec<f64> {
+        self.g.iter().zip(y).map(|(g, y)| g * y).collect()
+    }
+}
+
+const TAU: f64 = 1e-12;
+
+/// One SMO solve over a fixed training set. Owns the kernel cache; reuse
+/// across solves on the same data by calling [`Solver::solve_from`] again.
+pub struct Solver {
+    cache: KernelCache,
+    y: Vec<f64>,
+    params: SmoParams,
+}
+
+impl Solver {
+    pub fn new(eval: KernelEval, params: SmoParams) -> Solver {
+        let y = eval.ds.y.clone();
+        let cache = KernelCache::with_byte_budget(eval, params.cache_bytes);
+        Solver { cache, y, params }
+    }
+
+    pub fn params(&self) -> &SmoParams {
+        &self.params
+    }
+
+    pub fn cache(&mut self) -> &mut KernelCache {
+        &mut self.cache
+    }
+
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Solve from the zero start (LibSVM cold start).
+    pub fn solve(&mut self) -> SmoResult {
+        let n = self.n();
+        self.solve_from(vec![0.0; n], None)
+    }
+
+    /// Solve from a seeded α. `initial_g` may carry a pre-computed gradient
+    /// Gᵢ = Σⱼ αⱼQᵢⱼ − 1 (e.g. from the XLA bulk backend); otherwise it is
+    /// computed here natively.
+    ///
+    /// The initial α must be feasible: 0 ≤ αᵢ ≤ C. (Σyα = 0 is the seeders'
+    /// contract; it is asserted in debug builds.)
+    pub fn solve_from(&mut self, alpha: Vec<f64>, initial_g: Option<Vec<f64>>) -> SmoResult {
+        let n = self.n();
+        assert_eq!(alpha.len(), n);
+        let c = self.params.c;
+        debug_assert!(
+            alpha.iter().all(|&a| (-1e-9..=c + 1e-9).contains(&a)),
+            "seeded alpha violates box constraints"
+        );
+        debug_assert!(
+            alpha.iter().zip(&self.y).map(|(a, y)| a * y).sum::<f64>().abs() < 1e-6 * c * n as f64,
+            "seeded alpha violates sum y·alpha = 0"
+        );
+
+        let grad_start = Instant::now();
+        let mut g = match initial_g {
+            Some(g) => {
+                assert_eq!(g.len(), n);
+                g
+            }
+            None => self.compute_gradient(&alpha),
+        };
+        let grad_init_secs = grad_start.elapsed().as_secs_f64();
+
+        let mut alpha = alpha;
+        let mut active: Vec<usize> = (0..n).collect();
+        let mut shrunk = false;
+        let mut iter: u64 = 0;
+        let shrink_interval = n.min(1000).max(1) as u64;
+        let mut counter = shrink_interval;
+        let mut converged = false;
+
+        loop {
+            if iter >= self.params.max_iter {
+                break;
+            }
+
+            // Periodic shrinking.
+            if self.params.shrinking {
+                counter -= 1;
+                if counter == 0 {
+                    counter = shrink_interval;
+                    self.do_shrinking(&mut active, &alpha, &g, &mut shrunk);
+                }
+            }
+
+            // Working-set selection on the active set.
+            let (i, j, m_minus_big_m) = match self.select_working_set(&active, &alpha, &g) {
+                Some(sel) => sel,
+                None => {
+                    // Optimal on the active set. If shrunk, reconstruct and
+                    // retry globally once before declaring convergence.
+                    if shrunk && !active_is_all(&active, n) {
+                        self.reconstruct_gradient(&alpha, &mut g, &active);
+                        active = (0..n).collect();
+                        shrunk = false;
+                        counter = shrink_interval;
+                        match self.select_working_set(&active, &alpha, &g) {
+                            Some(_) => continue,
+                            None => {
+                                converged = true;
+                                break;
+                            }
+                        }
+                    }
+                    converged = true;
+                    break;
+                }
+            };
+            let _ = m_minus_big_m;
+
+            iter += 1;
+
+            // Two-variable subproblem (LibSVM update, f64 throughout).
+            let (yi, yj) = (self.y[i], self.y[j]);
+            let (kii, kjj) = (self.cache.value(i, i), self.cache.value(j, j));
+            let kij = self.cache.value(i, j);
+            let mut quad = kii + kjj - 2.0 * kij;
+            if quad <= 0.0 {
+                quad = TAU;
+            }
+
+            let (old_ai, old_aj) = (alpha[i], alpha[j]);
+            if yi != yj {
+                let delta = (-g[i] - g[j]) / quad;
+                let diff = alpha[i] - alpha[j];
+                alpha[i] += delta;
+                alpha[j] += delta;
+                if diff > 0.0 {
+                    if alpha[j] < 0.0 {
+                        alpha[j] = 0.0;
+                        alpha[i] = diff;
+                    }
+                } else if alpha[i] < 0.0 {
+                    alpha[i] = 0.0;
+                    alpha[j] = -diff;
+                }
+                if diff > 0.0 {
+                    if alpha[i] > c {
+                        alpha[i] = c;
+                        alpha[j] = c - diff;
+                    }
+                } else if alpha[j] > c {
+                    alpha[j] = c;
+                    alpha[i] = c + diff;
+                }
+            } else {
+                let delta = (g[i] - g[j]) / quad;
+                let sum = alpha[i] + alpha[j];
+                alpha[i] -= delta;
+                alpha[j] += delta;
+                if sum > c {
+                    if alpha[i] > c {
+                        alpha[i] = c;
+                        alpha[j] = sum - c;
+                    }
+                } else if alpha[j] < 0.0 {
+                    alpha[j] = 0.0;
+                    alpha[i] = sum;
+                }
+                if sum > c {
+                    if alpha[j] > c {
+                        alpha[j] = c;
+                        alpha[i] = sum - c;
+                    }
+                } else if alpha[i] < 0.0 {
+                    alpha[i] = 0.0;
+                    alpha[j] = sum;
+                }
+            }
+
+            // Gradient update over the active set:
+            // G_t += Q_ti·Δαᵢ + Q_tj·Δαⱼ,  Q_ti = y_t·yᵢ·K_ti.
+            let dai = alpha[i] - old_ai;
+            let daj = alpha[j] - old_aj;
+            if dai != 0.0 || daj != 0.0 {
+                let ci = yi * dai;
+                let cj = yj * daj;
+                let (row_i, row_j) = self.cache.row_pair(i, j);
+                for &t in &active {
+                    g[t] += self.y[t] * (ci * row_i[t] + cj * row_j[t]);
+                }
+            }
+        }
+
+        // Ensure g is globally consistent (it may be stale for shrunk
+        // indices if we stopped at max_iter while shrunk).
+        if !active_is_all(&active, n) {
+            self.reconstruct_gradient(&alpha, &mut g, &active);
+        }
+
+        // Bias (paper's b = LibSVM ρ) from the final gradient.
+        let b = self.compute_bias(&alpha, &g);
+
+        // Dual objective ½·Σᵢ αᵢ(Gᵢ − 1)  (since G = Qα − 1).
+        let objective = 0.5
+            * alpha
+                .iter()
+                .zip(&g)
+                .map(|(&a, &gi)| a * (gi - 1.0))
+                .sum::<f64>();
+
+        let n_sv = alpha.iter().filter(|&&a| a > 0.0).count();
+        let n_bsv = alpha.iter().filter(|&&a| a >= c).count();
+
+        SmoResult {
+            alpha,
+            b,
+            iterations: iter,
+            objective,
+            n_sv,
+            n_bsv,
+            converged,
+            grad_init_secs,
+            g,
+        }
+    }
+
+    /// Gᵢ = Σⱼ αⱼQᵢⱼ − 1, computed from the support vectors only.
+    pub fn compute_gradient(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut g = vec![-1.0f64; n];
+        for j in 0..n {
+            if alpha[j] > 0.0 {
+                let coef = alpha[j] * self.y[j];
+                let row = self.cache.row(j);
+                // SAFETY-free split: copy row borrow is fine here (cold path)
+                let row: &[f64] = row;
+                for t in 0..n {
+                    g[t] += self.y[t] * coef * row[t];
+                }
+            }
+        }
+        g
+    }
+
+    /// WSS2: returns (i, j) or None when the active set is ε-optimal.
+    fn select_working_set(
+        &mut self,
+        active: &[usize],
+        alpha: &[f64],
+        g: &[f64],
+    ) -> Option<(usize, usize, f64)> {
+        let c = self.params.c;
+        // i = argmax_{t ∈ I_up} −y_t·G_t
+        let mut gmax = f64::NEG_INFINITY;
+        let mut i = usize::MAX;
+        for &t in active {
+            let in_up = (self.y[t] > 0.0 && alpha[t] < c) || (self.y[t] < 0.0 && alpha[t] > 0.0);
+            if in_up {
+                let v = -self.y[t] * g[t];
+                if v >= gmax {
+                    gmax = v;
+                    i = t;
+                }
+            }
+        }
+        if i == usize::MAX {
+            return None;
+        }
+
+        // j: second-order selection over I_low with violation.
+        let row_i = {
+            // borrow ends before second cache use below (value() for Ktt
+            // uses the row cache too, so copy K_ii and the needed entries
+            // lazily via the row reference held in a raw slice)
+            let r = self.cache.row(i);
+            r.as_ptr()
+        };
+        let n_total = self.cache.n();
+        let row_i: &[f64] = unsafe { std::slice::from_raw_parts(row_i, n_total) };
+        let kii = row_i[i];
+
+        let mut gmin = f64::INFINITY; // M(α)
+        let mut obj_min = f64::INFINITY;
+        let mut j = usize::MAX;
+        for &t in active {
+            let in_low = (self.y[t] > 0.0 && alpha[t] > 0.0) || (self.y[t] < 0.0 && alpha[t] < c);
+            if !in_low {
+                continue;
+            }
+            let v = -self.y[t] * g[t];
+            if v < gmin {
+                gmin = v;
+            }
+            let b_it = gmax - v; // violation margin
+            if b_it > 0.0 {
+                // a_it = K_ii + K_tt − 2·y_i·y_t·K_it   (sign folds into Q)
+                let ktt = self.diag(t);
+                let mut a_it = kii + ktt - 2.0 * self.y[i] * self.y[t] * row_i[t];
+                if a_it <= 0.0 {
+                    a_it = TAU;
+                }
+                let dec = -(b_it * b_it) / a_it;
+                if dec <= obj_min {
+                    obj_min = dec;
+                    j = t;
+                }
+            }
+        }
+
+        if gmax - gmin < self.params.eps || j == usize::MAX {
+            return None;
+        }
+        Some((i, j, gmax - gmin))
+    }
+
+    /// K(t,t); O(1) for RBF (=1), computed otherwise.
+    #[inline]
+    fn diag(&mut self, t: usize) -> f64 {
+        match self.cache.eval().kernel {
+            crate::kernel::Kernel::Rbf { .. } => 1.0,
+            _ => self.cache.value(t, t),
+        }
+    }
+
+    /// LibSVM `be_shrunk` + active-set filtering.
+    fn do_shrinking(
+        &mut self,
+        active: &mut Vec<usize>,
+        alpha: &[f64],
+        g: &[f64],
+        shrunk: &mut bool,
+    ) {
+        let c = self.params.c;
+        // Gmax1 = max_{I_up} −yG, Gmax2 = max_{I_low} yG
+        let (mut gmax1, mut gmax2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for &t in active.iter() {
+            let (y, a) = (self.y[t], alpha[t]);
+            if (y > 0.0 && a < c) || (y < 0.0 && a > 0.0) {
+                gmax1 = gmax1.max(-y * g[t]);
+            }
+            if (y > 0.0 && a > 0.0) || (y < 0.0 && a < c) {
+                gmax2 = gmax2.max(y * g[t]);
+            }
+        }
+        // Don't shrink when close to optimal: LibSVM unshrinks at 10·eps.
+        if gmax1 + gmax2 <= self.params.eps * 10.0 {
+            return;
+        }
+        let before = active.len();
+        active.retain(|&t| {
+            let (y, a) = (self.y[t], alpha[t]);
+            let upper = a >= c;
+            let lower = a <= 0.0;
+            if upper {
+                if y > 0.0 {
+                    -g[t] <= gmax1
+                } else {
+                    g[t] <= gmax2
+                }
+            } else if lower {
+                if y > 0.0 {
+                    g[t] <= gmax2
+                } else {
+                    -g[t] <= gmax1
+                }
+            } else {
+                true
+            }
+        });
+        if active.len() < before {
+            *shrunk = true;
+        }
+    }
+
+    /// Recompute G for every index outside `active` from scratch (the
+    /// LibSVM `reconstruct_gradient`, without the G̅ incremental trick:
+    /// reconstruction is rare — once per unshrink).
+    fn reconstruct_gradient(&mut self, alpha: &[f64], g: &mut [f64], active: &[usize]) {
+        let n = self.n();
+        let mut is_active = vec![false; n];
+        for &t in active {
+            is_active[t] = true;
+        }
+        for t in 0..n {
+            if !is_active[t] {
+                g[t] = -1.0;
+            }
+        }
+        for j in 0..n {
+            if alpha[j] > 0.0 {
+                let coef = alpha[j] * self.y[j];
+                let row_ptr = self.cache.row(j).as_ptr();
+                let row: &[f64] = unsafe { std::slice::from_raw_parts(row_ptr, n) };
+                for t in 0..n {
+                    if !is_active[t] {
+                        g[t] += self.y[t] * coef * row[t];
+                    }
+                }
+            }
+        }
+    }
+
+    /// ρ/b from the final gradient: average of yᵢGᵢ over free SVs, or the
+    /// midpoint of the bound brackets when no free SV exists.
+    fn compute_bias(&self, alpha: &[f64], g: &[f64]) -> f64 {
+        let c = self.params.c;
+        let mut free_sum = 0.0;
+        let mut free_count = 0usize;
+        let (mut ub, mut lb) = (f64::INFINITY, f64::NEG_INFINITY);
+        for t in 0..alpha.len() {
+            let yg = self.y[t] * g[t];
+            if alpha[t] > 0.0 && alpha[t] < c {
+                free_sum += yg;
+                free_count += 1;
+            } else {
+                let in_up =
+                    (self.y[t] > 0.0 && alpha[t] <= 0.0) || (self.y[t] < 0.0 && alpha[t] >= c);
+                if in_up {
+                    ub = ub.min(yg);
+                } else {
+                    lb = lb.max(yg);
+                }
+            }
+        }
+        if free_count > 0 {
+            free_sum / free_count as f64
+        } else {
+            (ub + lb) / 2.0
+        }
+    }
+}
+
+fn active_is_all(active: &[usize], n: usize) -> bool {
+    active.len() == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DataMatrix, Dataset};
+    use crate::kernel::Kernel;
+    use crate::smo::verify::kkt_violation;
+
+    fn solve_ds(ds: Dataset, kernel: Kernel, c: f64) -> (SmoResult, KernelEval) {
+        let eval = KernelEval::new(ds, kernel);
+        let mut solver = Solver::new(eval.clone(), SmoParams::with_c(c));
+        (solver.solve(), eval)
+    }
+
+    /// Two separable points: analytic solution known.
+    #[test]
+    fn two_point_linear_analytic() {
+        // x = −1 (y=−1), x = +1 (y=+1), linear kernel.
+        // Dual: max 2α − ½αᵀQα with α₁=α₂=α (equality constraint), Q=[[1,-1],[-1,1]]·yy→
+        // obj = 2α − ½(α²·(1) + α²(1) − 2α²(−1·1·−1)) ... direct known result: α = 0.5, w = 1, b = 0.
+        let ds = Dataset::new(
+            "2pt",
+            DataMatrix::dense(2, 1, vec![-1.0, 1.0]),
+            vec![-1.0, 1.0],
+        );
+        let (r, _) = solve_ds(ds, Kernel::Linear, 10.0);
+        assert!(r.converged);
+        assert!((r.alpha[0] - 0.5).abs() < 1e-3, "alpha {:?}", r.alpha);
+        assert!((r.alpha[1] - 0.5).abs() < 1e-3);
+        assert!(r.b.abs() < 1e-3, "b = {}", r.b);
+    }
+
+    /// Four-point XOR with RBF: must be separable (classic sanity check).
+    #[test]
+    fn xor_rbf_separates() {
+        let ds = Dataset::new(
+            "xor",
+            DataMatrix::dense(4, 2, vec![0., 0., 1., 1., 0., 1., 1., 0.]),
+            vec![1.0, 1.0, -1.0, -1.0],
+        );
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(1.0));
+        let mut solver = Solver::new(eval.clone(), SmoParams::with_c(100.0));
+        let r = solver.solve();
+        assert!(r.converged);
+        // All four points should be correctly classified.
+        for i in 0..4 {
+            let dec: f64 = (0..4)
+                .map(|j| ds.y[j] * r.alpha[j] * eval.eval(j, i))
+                .sum::<f64>()
+                - r.b;
+            assert!(dec * ds.y[i] > 0.0, "point {i} misclassified: {dec}");
+        }
+    }
+
+    #[test]
+    fn kkt_satisfied_at_convergence() {
+        let ds = crate::data::synth::generate("heart", Some(80), 3);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+        let mut solver = Solver::new(eval.clone(), SmoParams::with_c(10.0));
+        let r = solver.solve();
+        assert!(r.converged);
+        let report = kkt_violation(&eval, &r.alpha, 10.0);
+        assert!(
+            report.max_violation < 2e-3,
+            "KKT violation {}",
+            report.max_violation
+        );
+        // equality constraint holds
+        assert!(report.sum_y_alpha.abs() < 1e-8);
+    }
+
+    #[test]
+    fn warm_start_from_optimum_is_instant() {
+        let ds = crate::data::synth::generate("heart", Some(60), 5);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+        let mut s1 = Solver::new(eval.clone(), SmoParams::with_c(5.0));
+        let r1 = s1.solve();
+        assert!(r1.converged);
+        // Re-solve seeded with the optimum: should take (near-)zero iterations.
+        let mut s2 = Solver::new(eval, SmoParams::with_c(5.0));
+        let r2 = s2.solve_from(r1.alpha.clone(), None);
+        assert!(r2.converged);
+        assert!(
+            r2.iterations <= 2,
+            "seeding with the optimum still took {} iterations",
+            r2.iterations
+        );
+        assert!((r2.objective - r1.objective).abs() < 1e-6);
+    }
+
+    #[test]
+    fn seeded_and_cold_agree() {
+        let ds = crate::data::synth::generate("heart", Some(80), 7);
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.2));
+        let mut cold = Solver::new(eval.clone(), SmoParams::with_c(2.0));
+        let rc = cold.solve();
+
+        // a feasible (but arbitrary) warm start: balanced small values
+        let n = ds.len();
+        let mut alpha = vec![0.0; n];
+        let pos: Vec<usize> = (0..n).filter(|&i| ds.y[i] > 0.0).collect();
+        let neg: Vec<usize> = (0..n).filter(|&i| ds.y[i] < 0.0).collect();
+        let m = pos.len().min(neg.len());
+        for t in 0..m {
+            alpha[pos[t]] = 0.5;
+            alpha[neg[t]] = 0.5;
+        }
+        let mut warm = Solver::new(eval, SmoParams::with_c(2.0));
+        let rw = warm.solve_from(alpha, None);
+        assert!(rw.converged);
+        assert!(
+            (rw.objective - rc.objective).abs() < 1e-3 * rc.objective.abs().max(1.0),
+            "objectives differ: cold {} vs warm {}",
+            rc.objective,
+            rw.objective
+        );
+        assert!((rw.b - rc.b).abs() < 5e-3, "bias differ {} vs {}", rw.b, rc.b);
+    }
+
+    #[test]
+    fn shrinking_matches_no_shrinking() {
+        let ds = crate::data::synth::generate("adult", Some(150), 11);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.5));
+        let mut with = Solver::new(
+            eval.clone(),
+            SmoParams {
+                c: 100.0,
+                shrinking: true,
+                ..Default::default()
+            },
+        );
+        let mut without = Solver::new(
+            eval,
+            SmoParams {
+                c: 100.0,
+                shrinking: false,
+                ..Default::default()
+            },
+        );
+        let rs = with.solve();
+        let rn = without.solve();
+        assert!(rs.converged && rn.converged);
+        assert!(
+            (rs.objective - rn.objective).abs() < 1e-2 * rn.objective.abs().max(1.0),
+            "obj: shrink {} vs none {}",
+            rs.objective,
+            rn.objective
+        );
+    }
+
+    #[test]
+    fn all_bounded_madelon_regime() {
+        // Random labels at small C: every α goes to the bound C.
+        let ds = crate::data::synth::generate("madelon", Some(60), 13);
+        let eval = KernelEval::new(ds, Kernel::rbf(std::f64::consts::FRAC_1_SQRT_2));
+        let mut solver = Solver::new(eval, SmoParams::with_c(1.0));
+        let r = solver.solve();
+        assert!(r.converged);
+        let frac_sv = r.n_sv as f64 / r.alpha.len() as f64;
+        assert!(frac_sv > 0.9, "madelon regime should make ~all SVs: {frac_sv}");
+    }
+
+    #[test]
+    fn max_iter_cap_respected() {
+        let ds = crate::data::synth::generate("heart", Some(100), 17);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+        let mut solver = Solver::new(
+            eval,
+            SmoParams {
+                c: 1000.0,
+                max_iter: 5,
+                ..Default::default()
+            },
+        );
+        let r = solver.solve();
+        assert_eq!(r.iterations, 5);
+        assert!(!r.converged);
+    }
+}

@@ -1,0 +1,122 @@
+//! KKT-condition verification, used by tests and the property harness.
+
+use crate::kernel::KernelEval;
+
+/// Summary of how far an α vector is from the paper's Constraint (3)/(5).
+#[derive(Debug, Clone)]
+pub struct KktReport {
+    /// m(α) − M(α): the maximal violating-pair gap. ≤ ε at optimality.
+    pub max_violation: f64,
+    /// Σ yᵢαᵢ (must be 0 up to rounding).
+    pub sum_y_alpha: f64,
+    /// Worst box-constraint breach (negative α or α−C overshoot); 0 if none.
+    pub box_breach: f64,
+    /// Estimated bias from the free SVs (paper's b).
+    pub bias: f64,
+}
+
+/// Evaluate the KKT conditions of `alpha` for the C-SVC dual on `eval`.
+///
+/// Recomputes the gradient from scratch (O(n_sv·n) kernel evaluations) —
+/// this is a *verification* tool, not a production path.
+pub fn kkt_violation(eval: &KernelEval, alpha: &[f64], c: f64) -> KktReport {
+    let n = eval.len();
+    assert_eq!(alpha.len(), n);
+    let y = &eval.ds.y;
+
+    // G_i = Σ_j α_j Q_ij − 1
+    let mut g = vec![-1.0f64; n];
+    for j in 0..n {
+        if alpha[j] != 0.0 {
+            let coef = alpha[j] * y[j];
+            for t in 0..n {
+                g[t] += y[t] * coef * eval.eval(j, t);
+            }
+        }
+    }
+
+    // m(α) = max_{I_up} −yG ; M(α) = min_{I_low} −yG
+    let mut m = f64::NEG_INFINITY;
+    let mut big_m = f64::INFINITY;
+    let mut free_sum = 0.0;
+    let mut free_cnt = 0usize;
+    for t in 0..n {
+        let v = -y[t] * g[t];
+        let in_up = (y[t] > 0.0 && alpha[t] < c) || (y[t] < 0.0 && alpha[t] > 0.0);
+        let in_low = (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < c);
+        if in_up {
+            m = m.max(v);
+        }
+        if in_low {
+            big_m = big_m.min(v);
+        }
+        if alpha[t] > 0.0 && alpha[t] < c {
+            free_sum += y[t] * g[t];
+            free_cnt += 1;
+        }
+    }
+
+    let sum_y_alpha: f64 = alpha.iter().zip(y).map(|(a, yy)| a * yy).sum();
+    let box_breach = alpha
+        .iter()
+        .map(|&a| (-a).max(a - c).max(0.0))
+        .fold(0.0, f64::max);
+    let bias = if free_cnt > 0 {
+        free_sum / free_cnt as f64
+    } else {
+        (m + big_m) / 2.0
+    };
+
+    KktReport {
+        max_violation: m - big_m,
+        sum_y_alpha,
+        box_breach,
+        bias,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DataMatrix, Dataset};
+    use crate::kernel::Kernel;
+    use crate::smo::{SmoParams, Solver};
+
+    #[test]
+    fn zero_alpha_violates_when_separable() {
+        let ds = Dataset::new(
+            "v",
+            DataMatrix::dense(2, 1, vec![-1.0, 1.0]),
+            vec![-1.0, 1.0],
+        );
+        let eval = KernelEval::new(ds, Kernel::Linear);
+        let rep = kkt_violation(&eval, &[0.0, 0.0], 1.0);
+        // cold start: m − M = 1 − (−1) = 2
+        assert!((rep.max_violation - 2.0).abs() < 1e-12);
+        assert_eq!(rep.sum_y_alpha, 0.0);
+    }
+
+    #[test]
+    fn solved_alpha_passes() {
+        let ds = crate::data::synth::generate("heart", Some(60), 21);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+        let mut solver = Solver::new(eval.clone(), SmoParams::with_c(3.0));
+        let r = solver.solve();
+        let rep = kkt_violation(&eval, &r.alpha, 3.0);
+        assert!(rep.max_violation <= 1.5e-3, "violation {}", rep.max_violation);
+        assert!(rep.box_breach == 0.0);
+        assert!((rep.bias - r.b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn box_breach_detected() {
+        let ds = Dataset::new(
+            "b",
+            DataMatrix::dense(2, 1, vec![-1.0, 1.0]),
+            vec![-1.0, 1.0],
+        );
+        let eval = KernelEval::new(ds, Kernel::Linear);
+        let rep = kkt_violation(&eval, &[1.5, 1.5], 1.0);
+        assert!((rep.box_breach - 0.5).abs() < 1e-12);
+    }
+}

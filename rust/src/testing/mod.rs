@@ -1,0 +1,174 @@
+//! In-repo property-based testing harness.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so this module
+//! provides the minimal machinery the invariant suites need: a seeded
+//! case runner with failure reporting and first-failure shrinking over a
+//! numeric size parameter, plus generators for random SVM problems.
+//! (Documented substitution — DESIGN.md §4.)
+
+use crate::data::{DataMatrix, Dataset};
+use crate::util::rng::Pcg32;
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 32,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the failing
+/// case index, seed, and message on the first violation.
+pub fn for_all<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    generate: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg32::new(cfg.seed, case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case}/{} (seed {:#x}): {msg}\ninput: {input:#?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Sized variant: generates with a size drawn from `sizes`, and on failure
+/// retries smaller sizes first to report a minimal-ish counterexample.
+pub fn for_all_sized<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    sizes: std::ops::Range<usize>,
+    generate: impl Fn(&mut Pcg32, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg32::new(cfg.seed, case as u64);
+        let span = (sizes.end - sizes.start).max(1);
+        let size = sizes.start + rng.gen_range(span);
+        let input = generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // shrink: walk sizes down from the failing one
+            let mut minimal = (size, msg.clone());
+            let mut s = size;
+            while s > sizes.start {
+                s -= ((s - sizes.start) / 2).max(1);
+                let mut rng2 = Pcg32::new(cfg.seed, case as u64);
+                let smaller = generate(&mut rng2, s);
+                match prop(&smaller) {
+                    Err(m) => minimal = (s, m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed on case {case} (seed {:#x}), minimal failing size {}: {}",
+                cfg.seed, minimal.0, minimal.1
+            );
+        }
+    }
+}
+
+/// A random binary-classification problem with tunable separability —
+/// the generator behind the SMO/seeding invariant suites.
+#[derive(Debug, Clone)]
+pub struct SvmProblem {
+    pub ds: Dataset,
+    pub c: f64,
+    pub gamma: f64,
+}
+
+/// Generate a random problem: n points in `dim` dimensions, two
+/// class-conditional Gaussians separated by `sep` (0 = random labels).
+pub fn gen_svm_problem(rng: &mut Pcg32, n: usize, dim: usize, sep: f64) -> SvmProblem {
+    let n = n.max(4);
+    let mut data = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    // guarantee both classes appear
+    for i in 0..n {
+        let pos = if i < 2 { i == 0 } else { rng.bernoulli(0.5) };
+        let sign = if pos { 1.0 } else { -1.0 };
+        for j in 0..dim {
+            let mu = if j == 0 { sign * sep } else { 0.0 };
+            data.push((mu + rng.normal()) as f32);
+        }
+        y.push(sign);
+    }
+    let ds = Dataset::new(
+        format!("prop-n{n}-d{dim}"),
+        DataMatrix::dense(n, dim, data),
+        y,
+    );
+    SvmProblem {
+        ds,
+        c: 10f64.powf(rng.uniform(-1.0, 2.0)),
+        gamma: 10f64.powf(rng.uniform(-1.5, 0.5)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        for_all(
+            PropConfig { cases: 16, seed: 1 },
+            |rng| rng.gen_range(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn for_all_reports_failure() {
+        for_all(
+            PropConfig { cases: 16, seed: 2 },
+            |rng| rng.gen_range(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing size")]
+    fn sized_shrinks() {
+        for_all_sized(
+            PropConfig { cases: 8, seed: 3 },
+            4..64,
+            |_rng, size| size,
+            |&s| if s < 4 { Ok(()) } else { Err(format!("size {s}")) },
+        );
+    }
+
+    #[test]
+    fn svm_problem_generator_valid() {
+        let mut rng = Pcg32::seed_from_u64(9);
+        let p = gen_svm_problem(&mut rng, 20, 3, 1.0);
+        assert_eq!(p.ds.len(), 20);
+        assert_eq!(p.ds.dim(), 3);
+        assert!(p.ds.positives() >= 1);
+        assert!(p.ds.positives() < 20);
+        assert!(p.c > 0.0 && p.gamma > 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Minimal benchmarking harness for the `cargo bench` targets (the offline
+//! registry has no criterion — documented substitution, DESIGN.md §4).
+//!
+//! Measures wall time over warmup + sample iterations and prints
+//! mean / stddev / min, plus named one-shot experiment timings for the
+//! paper-table benches where a single end-to-end run *is* the measurement.
+
+use std::time::{Duration, Instant};
+
+/// Result of a micro-bench.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn stddev(&self) -> Duration {
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        Duration::from_secs_f64(var.sqrt())
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} mean {:>12?}  ±{:>10?}  min {:>12?}  ({} samples)",
+            self.name,
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.samples.len()
+        );
+    }
+}
+
+/// Micro-bench: `iters` timed runs after `warmup` untimed ones. The
+/// closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        black_box(f());
+        samples.push(start.elapsed());
+    }
+    let stats = BenchStats {
+        name: name.to_string(),
+        samples,
+    };
+    stats.report();
+    stats
+}
+
+/// One-shot measurement for end-to-end experiment benches.
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = black_box(f());
+    let elapsed = start.elapsed();
+    println!("{name:<44} {elapsed:>12?}");
+    (out, elapsed)
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 1, 5, || 42);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.mean() >= s.min());
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, d) = once("quick", || 7);
+        assert_eq!(v, 7);
+        assert!(d.as_nanos() > 0);
+    }
+}

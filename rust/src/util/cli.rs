@@ -1,0 +1,238 @@
+//! Tiny CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports the subset this binary needs: a subcommand word followed by
+//! `--flag`, `--key value`, and `--key=value` options plus positional
+//! arguments, with typed accessors and "unknown flag" diagnostics.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand, options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    /// Option keys that were actually read by the program; used to report
+    /// typos ("unknown option") after parsing.
+    #[allow(clippy::type_complexity)]
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({expected})")]
+    BadValue {
+        key: String,
+        value: String,
+        expected: &'static str,
+    },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+    #[error("unknown option(s): {0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I, S>(raw: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().map(Into::into).peekable();
+
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    args.opts.insert(k.to_string(), v[1..].to_string());
+                } else {
+                    // `--key value` if next token is not another option,
+                    // else a bare flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.opts.insert(stripped.to_string(), v);
+                        }
+                        _ => args.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn req_str(&self, key: &str) -> Result<String, CliError> {
+        self.opt_str(key)
+            .ok_or_else(|| CliError::MissingRequired(key.to_string()))
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(
+            self.opts.get(key).map(|s| s.as_str()),
+            Some("true" | "1" | "yes")
+        )
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError> {
+        match self.opt_str(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| CliError::BadValue {
+                key: key.to_string(),
+                value: v,
+                expected: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list option, e.g. `--k 3,10,100`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.opt_str(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|part| {
+                    part.trim().parse::<T>().map_err(|_| CliError::BadValue {
+                        key: key.to_string(),
+                        value: part.to_string(),
+                        expected: std::any::type_name::<T>(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// After all options are read, error on anything the program never
+    /// looked at — catches typos like `--gama`.
+    pub fn reject_unknown(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.iter().any(|c| c == *k))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("cv --dataset heart --k 10 --seeder sir");
+        assert_eq!(a.subcommand.as_deref(), Some("cv"));
+        assert_eq!(a.opt_str("dataset").as_deref(), Some("heart"));
+        assert_eq!(a.parse_or::<usize>("k", 5).unwrap(), 10);
+        assert_eq!(a.str_or("seeder", "cold"), "sir");
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = parse("bench --quick --gamma=0.5 --verbose");
+        assert!(a.flag("quick"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.parse_or::<f64>("gamma", 1.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // `--c -1.5`: the value starts with '-' but not '--'.
+        let a = parse("train --c -1.5");
+        assert_eq!(a.parse_or::<f64>("c", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("experiment --k 3,10,100");
+        assert_eq!(a.list_or::<usize>("k", &[10]).unwrap(), vec![3, 10, 100]);
+        assert_eq!(a.list_or::<usize>("absent", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("train data/heart.svm --c 1.0 out.model");
+        assert_eq!(a.positional, vec!["data/heart.svm", "out.model"]);
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = parse("train");
+        assert!(matches!(a.req_str("data"), Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn bad_value_diagnostic() {
+        let a = parse("cv --k ten");
+        assert!(matches!(
+            a.opt_parse::<usize>("k"),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = parse("cv --dataset heart --gama 0.5");
+        let _ = a.opt_str("dataset");
+        let err = a.reject_unknown().unwrap_err();
+        assert!(err.to_string().contains("--gama"));
+    }
+}

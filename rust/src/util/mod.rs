@@ -1,0 +1,10 @@
+//! Foundational substrates built in-repo (the sandbox's offline registry
+//! lacks `rand`, `serde`, `clap`, `tokio`, `criterion`): deterministic RNG,
+//! JSON, CLI parsing, thread pools, and timing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,221 @@
+//! Fixed-size worker thread pool (the offline registry has no `tokio` /
+//! `rayon`). The coordinator uses it to run fold jobs and grid-search cells;
+//! `scope` provides structured fork-join over borrowed data via
+//! `crossbeam_utils::thread`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A classic channel-fed thread pool with graceful shutdown on drop.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers (min 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("alphaseed-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            queued,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and collect results in
+    /// order. Panics in jobs propagate as a collected error string.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let out = f(i);
+                // Receiver may be dropped if caller panicked; ignore.
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("pool job {i} never returned (panicked?)")))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Structured fork-join over borrowed data: runs `f(i)` for i in 0..n on up
+/// to `threads` scoped threads and returns results in order. Unlike
+/// `ThreadPool::map`, closures may borrow from the caller's stack.
+pub fn scoped_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots_ptr = SendPtr(slots.as_mut_ptr());
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..threads {
+                let f = &f;
+                let next = &next;
+                let slots_ptr = slots_ptr;
+                s.spawn(move |_| {
+                    // Force capture of the whole SendPtr wrapper (edition
+                    // 2021 would otherwise capture only the raw-pointer
+                    // field, which is not Send).
+                    let slots_ptr = slots_ptr;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= n {
+                            break;
+                        }
+                        let out = f(i);
+                        // SAFETY: each index i is claimed exactly once via
+                        // the atomic counter, so writes are disjoint; the
+                        // scope guarantees threads finish before `slots`
+                        // is read.
+                        unsafe { *slots_ptr.0.add(i) = Some(out) };
+                    }
+                });
+            }
+        })
+        .expect("scoped_map worker panicked");
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// Raw pointer wrapper that asserts Send; used only with disjoint writes.
+struct SendPtr<T>(*mut T);
+// Manual Clone/Copy: `*mut T` is always Copy; derive would demand T: Copy.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let out = scoped_map(4, data.len(), |i| data[i] * 2.0);
+        assert_eq!(out[31], 62.0);
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn scoped_map_single_thread_fallback() {
+        let out = scoped_map(1, 5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pool_min_one_thread() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map(3, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,243 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The sandbox registry has no `rand` crate, so we implement PCG-XSH-RR
+//! 64/32 (O'Neill 2014) plus the distribution helpers the rest of the
+//! system needs (uniform, normal, Bernoulli, shuffling, sampling without
+//! replacement). Every experiment in this repo is seeded, so runs are
+//! reproducible bit-for-bit.
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit xorshift-rotate output.
+///
+/// Statistically solid for simulation workloads (passes TestU01 SmallCrush),
+/// tiny state, and — critically for the kernel-cache tests — deterministic
+/// across platforms.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+const PCG_DEFAULT_INC: u64 = 1442695040888963407;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id. Distinct streams
+    /// with the same seed are independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed on the default stream.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed, PCG_DEFAULT_INC)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be > 0");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64_wide(x, bound);
+            if lo >= bound || lo >= x.wrapping_neg() % bound {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (no cached spare: simplicity over
+    /// the extra draw; this is not on a hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.gen_range(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.gen_range(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+/// Full 64×64→128-bit multiply returning (high, low) words.
+#[inline]
+fn mul_u64_wide(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::seed_from_u64(42);
+        let mut b = Pcg32::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg32::seed_from_u64(1);
+        let mut b = Pcg32::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "two seeds nearly collide: {same}/64 equal draws");
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(7, 1);
+        let mut b = Pcg32::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_centered() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_unbiased_small_bound() {
+        let mut rng = Pcg32::seed_from_u64(11);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[rng.gen_range(5)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.2).abs() < 0.02, "bucket {i}: {frac}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seed_from_u64(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle left identity");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg32::seed_from_u64(13);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &s {
+            assert!(i < 50);
+            assert!(seen.insert(i), "duplicate index {i}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg32::seed_from_u64(17);
+        let n = 50_000;
+        let hits = (0..n).filter(|_| rng.bernoulli(0.3)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+}

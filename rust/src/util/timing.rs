@@ -1,0 +1,120 @@
+//! Wall-clock timing helpers used by the CV drivers and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named phases; the CV driver uses one per
+/// fold to split "alpha initialisation" from "the rest" exactly like the
+/// paper's Table 1 columns.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a named phase; repeated names accumulate.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(name, start.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(slot) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            slot.1 += d;
+        } else {
+            self.phases.push((name.to_string(), d));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (n, d) in &other.phases {
+            self.add(n, *d);
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.phases.iter().map(|(n, d)| (n.as_str(), *d))
+    }
+}
+
+/// Human-readable duration, in the style of the paper's tables (seconds
+/// with magnitude-appropriate precision).
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.3}", s)
+    } else {
+        format!("{:.6}", s)
+    }
+}
+
+/// Measure a closure's wall time.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.add("init", Duration::from_millis(5));
+        t.add("rest", Duration::from_millis(10));
+        t.add("init", Duration::from_millis(5));
+        assert_eq!(t.get("init"), Duration::from_millis(10));
+        assert_eq!(t.total(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimer::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_runs_closure() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") > Duration::ZERO || t.get("work") == Duration::ZERO);
+    }
+
+    #[test]
+    fn fmt_magnitudes() {
+        assert_eq!(fmt_secs(Duration::from_secs(172)), "172");
+        assert_eq!(fmt_secs(Duration::from_millis(2500)), "2.50");
+        assert_eq!(fmt_secs(Duration::from_millis(36)), "0.036");
+        assert_eq!(fmt_secs(Duration::from_micros(57)), "0.000057");
+    }
+}

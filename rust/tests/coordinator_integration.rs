@@ -1,0 +1,108 @@
+//! Coordinator integration: job batches, grid search, and experiment
+//! drivers produce consistent, complete results.
+
+use alphaseed::config::{DatasetConfig, RunConfig};
+use alphaseed::coordinator::experiments;
+use alphaseed::coordinator::{grid_search, Coordinator, JobSpec};
+use alphaseed::data::synth::Hyper;
+
+fn heart_spec(seeder: &str, k: usize) -> JobSpec {
+    JobSpec {
+        dataset: "heart".into(),
+        n: Some(90),
+        c: 2.0,
+        gamma: 0.2,
+        seeder: seeder.into(),
+        k,
+        max_rounds: None,
+        rng_seed: 17,
+    }
+}
+
+#[test]
+fn coordinator_runs_mixed_batch() {
+    let coord = Coordinator::new(2);
+    let specs = vec![
+        heart_spec("cold", 4),
+        heart_spec("sir", 4),
+        heart_spec("mir", 4),
+        {
+            let mut s = heart_spec("avg", 0);
+            s.max_rounds = Some(5);
+            s
+        },
+    ];
+    let out = coord.run(&specs);
+    assert_eq!(out.len(), 4);
+    // results arrive in spec order regardless of completion order
+    for (o, s) in out.iter().zip(&specs) {
+        assert_eq!(o.spec.seeder, s.seeder);
+    }
+    // same folds → cold and sir agree on accuracy
+    assert_eq!(out[0].report.accuracy(), out[1].report.accuracy());
+    assert_eq!(out[0].report.accuracy(), out[2].report.accuracy());
+    assert_eq!(coord.jobs_done.get(), 4);
+}
+
+#[test]
+fn grid_search_total_cells_and_best() {
+    let ds = alphaseed::data::synth::generate("heart", Some(80), 3);
+    let g = grid_search(&ds, &[1.0, 100.0], &[0.1, 0.5], 3, "sir", 2, 5);
+    assert_eq!(g.points.len(), 4);
+    let best = g.best();
+    assert!(g.points.iter().all(|p| p.accuracy <= best.accuracy));
+}
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        datasets: vec![
+            DatasetConfig {
+                name: "heart".into(),
+                n: Some(70),
+                hyper: Hyper { c: 2.0, gamma: 0.2 },
+            },
+            DatasetConfig {
+                name: "webdata".into(),
+                n: Some(80),
+                hyper: Hyper {
+                    c: 64.0,
+                    gamma: 7.8125,
+                },
+            },
+        ],
+        seeders: vec!["cold".into(), "mir".into(), "sir".into()],
+        k: 3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn experiment_table1_complete_grid() {
+    let cfg = tiny_cfg();
+    let r = experiments::table1(&cfg, &mut |_| {});
+    // datasets × seeders cells
+    assert_eq!(r.cells.len(), 6);
+    assert_eq!(r.table.n_rows(), 2);
+    // every dataset has a cold + sir cell with equal accuracy
+    for name in ["heart", "webdata"] {
+        let acc: Vec<f64> = r
+            .cells
+            .iter()
+            .filter(|c| c.dataset == name)
+            .map(|c| c.report.accuracy())
+            .collect();
+        assert!(acc.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12), "{name}: {acc:?}");
+    }
+}
+
+#[test]
+fn experiment_results_json_parse_back() {
+    let cfg = tiny_cfg();
+    let r = experiments::table3(&cfg, &[3], &mut |_| {});
+    let dump = r.to_json(&cfg).to_string_pretty();
+    let parsed = alphaseed::util::json::Json::parse(&dump).unwrap();
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), r.cells.len());
+    // config echoed for reproducibility
+    assert!(parsed.get("config").is_some());
+}

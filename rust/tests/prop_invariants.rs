@@ -1,0 +1,227 @@
+//! Property-based invariant suites over random SVM problems, driven by the
+//! in-repo `testing::prop` harness (DESIGN.md §6):
+//!
+//!  (a) SMO output satisfies the KKT conditions within tolerance,
+//!  (b) every seeder emits a feasible α (box + Σyα = 0),
+//!  (c) seeded and cold training converge to the same objective,
+//!  (d) the fold partitioner is a permutation-exact cover,
+//!  (e) the kernel cache returns bit-identical rows under eviction.
+
+use alphaseed::data::FoldPlan;
+use alphaseed::kernel::{Kernel, KernelCache, KernelEval};
+use alphaseed::seeding::{check_feasible, seeder_by_name, SeedContext};
+use alphaseed::smo::{kkt_violation, SmoParams, Solver};
+use alphaseed::testing::{for_all, gen_svm_problem, PropConfig};
+
+#[test]
+fn prop_smo_reaches_kkt_optimality() {
+    for_all(
+        PropConfig { cases: 20, seed: 0xCAFE },
+        |rng| {
+            let n = 12 + rng.gen_range(40);
+            let d = 1 + rng.gen_range(6);
+            let sep = rng.uniform(0.0, 2.0);
+            gen_svm_problem(rng, n, d, sep)
+        },
+        |p| {
+            let eval = KernelEval::new(p.ds.clone(), Kernel::rbf(p.gamma));
+            let mut solver = Solver::new(eval.clone(), SmoParams::with_c(p.c));
+            let r = solver.solve();
+            if !r.converged {
+                return Err("did not converge".into());
+            }
+            let rep = kkt_violation(&eval, &r.alpha, p.c);
+            if rep.max_violation > 2e-3 {
+                return Err(format!("KKT violation {}", rep.max_violation));
+            }
+            if rep.sum_y_alpha.abs() > 1e-7 * p.c * p.ds.len() as f64 {
+                return Err(format!("sum y alpha = {}", rep.sum_y_alpha));
+            }
+            if rep.box_breach > 0.0 {
+                return Err(format!("box breach {}", rep.box_breach));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_seeder_feasible_and_objective_preserving() {
+    for_all(
+        PropConfig { cases: 10, seed: 77 },
+        |rng| {
+            let n = 30 + rng.gen_range(50);
+            let d = 2 + rng.gen_range(4);
+            let sep = rng.uniform(0.3, 1.5);
+            gen_svm_problem(rng, n, d, sep)
+        },
+        |p| {
+            let kernel = Kernel::rbf(p.gamma);
+            let k = 4;
+            let plan = FoldPlan::stratified(&p.ds, k, 3);
+            // solve round 0
+            let prev_train = plan.train_indices(0);
+            let train0 = p.ds.select(&prev_train);
+            let mut s0 =
+                Solver::new(KernelEval::new(train0.clone(), kernel), SmoParams::with_c(p.c));
+            let r0 = s0.solve();
+            if !r0.converged {
+                return Err("round 0 did not converge".into());
+            }
+            let prev_f = r0.f_indicators(&train0.y);
+            let trans = plan.transition(0);
+            let next_train = plan.train_indices(1);
+            let train1 = p.ds.select(&next_train);
+
+            // cold reference for round 1
+            let mut sc =
+                Solver::new(KernelEval::new(train1.clone(), kernel), SmoParams::with_c(p.c));
+            let rc = sc.solve();
+
+            for name in ["cold", "ato", "mir", "sir"] {
+                let seeder = seeder_by_name(name).unwrap();
+                let ctx = SeedContext {
+                    full: &p.ds,
+                    kernel,
+                    c: p.c,
+                    prev_train: &prev_train,
+                    prev_alpha: &r0.alpha,
+                    prev_f: &prev_f,
+                    prev_b: r0.b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &next_train,
+                    rng_seed: 9,
+                };
+                let mut cache = KernelCache::with_byte_budget(
+                    KernelEval::new(p.ds.clone(), kernel),
+                    16 << 20,
+                );
+                let seed = seeder.seed(&ctx, &mut cache);
+                // (b) feasibility
+                check_feasible(&seed.alpha, &train1.y, p.c)
+                    .map_err(|e| format!("{name}: {e}"))?;
+                // (c) objective identical to cold after polish
+                let mut sw =
+                    Solver::new(KernelEval::new(train1.clone(), kernel), SmoParams::with_c(p.c));
+                let rw = sw.solve_from(seed.alpha, None);
+                if !rw.converged {
+                    return Err(format!("{name}: seeded solve did not converge"));
+                }
+                let scale = rc.objective.abs().max(1.0);
+                if (rw.objective - rc.objective).abs() > 5e-3 * scale {
+                    return Err(format!(
+                        "{name}: objective {} vs cold {}",
+                        rw.objective, rc.objective
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fold_plan_exact_cover() {
+    for_all(
+        PropConfig { cases: 40, seed: 5 },
+        |rng| {
+            let n = 10 + rng.gen_range(200);
+            let k = 2 + rng.gen_range(8.min(n - 2));
+            let p = gen_svm_problem(rng, n, 2, 1.0);
+            (p.ds, k)
+        },
+        |(ds, k)| {
+            let plan = FoldPlan::stratified(ds, *k, 11);
+            let mut all: Vec<usize> = plan.folds.iter().flatten().copied().collect();
+            all.sort_unstable();
+            if all != (0..ds.len()).collect::<Vec<_>>() {
+                return Err("folds are not an exact cover".into());
+            }
+            let sizes: Vec<usize> = plan.folds.iter().map(|f| f.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            if mx - mn > 1 {
+                return Err(format!("unbalanced folds {sizes:?}"));
+            }
+            // transitions partition correctly for every h
+            for h in 0..*k - 1 {
+                let t = plan.transition(h);
+                let mut union: Vec<usize> =
+                    t.added.iter().chain(t.shared.iter()).copied().collect();
+                union.sort_unstable();
+                if union != plan.train_indices(h + 1) {
+                    return Err(format!("transition {h} broken"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_rows_bit_identical_under_eviction() {
+    for_all(
+        PropConfig { cases: 20, seed: 21 },
+        |rng| {
+            let n0 = 12 + rng.gen_range(30);
+            let p = gen_svm_problem(rng, n0, 3, 1.0);
+            let cap = 2 + rng.gen_range(6);
+            let n = p.ds.len();
+            let accesses: Vec<usize> = (0..60).map(|_| rng.gen_range(n)).collect();
+            (p, cap, accesses)
+        },
+        |(p, cap, accesses)| {
+            let eval = KernelEval::new(p.ds.clone(), Kernel::rbf(p.gamma));
+            let mut small = KernelCache::with_row_capacity(eval.clone(), *cap);
+            let mut big = KernelCache::with_row_capacity(eval, 1000);
+            for &i in accesses {
+                let a = small.row(i).to_vec();
+                let b = big.row(i).to_vec();
+                if a != b {
+                    return Err(format!("row {i} differs under eviction"));
+                }
+            }
+            let distinct: std::collections::HashSet<_> = accesses.iter().collect();
+            if small.stats().evictions == 0 && distinct.len() > *cap {
+                return Err("no evictions despite cache pressure".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_balance_preserves_target_and_box() {
+    use alphaseed::seeding::balance_to_target;
+    for_all(
+        PropConfig { cases: 60, seed: 33 },
+        |rng| {
+            let n = 1 + rng.gen_range(20);
+            let c = rng.uniform(0.5, 10.0);
+            let alpha: Vec<f64> = (0..n).map(|_| rng.uniform(-0.5, c + 0.5)).collect();
+            let y: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            // target drawn from the reachable interval
+            let max: f64 = y.iter().map(|&yy| if yy > 0.0 { c } else { 0.0 }).sum();
+            let min: f64 = y.iter().map(|&yy| if yy < 0.0 { -c } else { 0.0 }).sum();
+            let target = rng.uniform(min, max);
+            (alpha, y, c, target)
+        },
+        |(alpha, y, c, target)| {
+            let mut a = alpha.clone();
+            let ok = balance_to_target(&mut a, y, *c, *target);
+            if !ok {
+                return Err("reachable target reported unreachable".into());
+            }
+            let sum: f64 = a.iter().zip(y).map(|(x, yy)| x * yy).sum();
+            if (sum - target).abs() > 1e-6 {
+                return Err(format!("sum {sum} != target {target}"));
+            }
+            if a.iter().any(|&x| !(-1e-9..=c + 1e-9).contains(&x)) {
+                return Err("box violated".into());
+            }
+            Ok(())
+        },
+    );
+}

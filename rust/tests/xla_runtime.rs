@@ -1,0 +1,107 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
+//! agree with the native f64 backend. Requires `make artifacts`.
+
+use alphaseed::data::synth;
+use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+
+fn xla() -> Option<XlaBackend> {
+    let dir = XlaBackend::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::load(dir).expect("loading artifacts"))
+}
+
+#[test]
+fn kernel_rows_artifact_matches_native() {
+    let Some(mut xb) = xla() else { return };
+    let mut nb = NativeBackend;
+    // heart analogue fits the (512, 16) bucket
+    let ds = synth::generate("heart", Some(200), 11);
+    let queries = [0usize, 7, 63, 199];
+    let a = xb.kernel_rows(&ds, 0.2, &queries).unwrap();
+    let b = nb.kernel_rows(&ds, 0.2, &queries).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.len(), rb.len());
+        for (va, vb) in ra.iter().zip(rb) {
+            assert!(
+                (va - vb).abs() < 1e-4,
+                "artifact {va} vs native {vb}"
+            );
+        }
+    }
+    assert!(xb.stats.artifact_calls >= 1);
+    assert_eq!(xb.stats.native_fallbacks, 0);
+}
+
+#[test]
+fn kernel_matvec_artifact_matches_native() {
+    let Some(mut xb) = xla() else { return };
+    let mut nb = NativeBackend;
+    let ds = synth::generate("heart", Some(150), 5);
+    let w = ds.select(&[3, 10, 42, 99]);
+    let coef = [0.5, -1.25, 2.0, -0.75];
+    let a = xb.kernel_matvec(&ds, &w, &coef, 0.2).unwrap();
+    let b = nb.kernel_matvec(&ds, &w, &coef, 0.2).unwrap();
+    for (va, vb) in a.iter().zip(&b) {
+        assert!((va - vb).abs() < 1e-3, "artifact {va} vs native {vb}");
+    }
+}
+
+#[test]
+fn oversize_shape_falls_back_to_native() {
+    let Some(mut xb) = xla() else { return };
+    // 3000 rows exceed every rbf_rows bucket → silent native fallback
+    let ds = synth::generate("heart", Some(3000), 5);
+    let rows = xb.kernel_rows(&ds, 0.2, &[0]).unwrap();
+    assert_eq!(rows[0].len(), 3000);
+    assert!(xb.stats.native_fallbacks >= 1);
+}
+
+#[test]
+fn batched_queries_chunk_correctly() {
+    let Some(mut xb) = xla() else { return };
+    let mut nb = NativeBackend;
+    // 40 queries through the b=16 smoke bucket (64-row dataset) → 3 chunks
+    let ds = synth::generate("heart", Some(60), 9);
+    let queries: Vec<usize> = (0..40).collect();
+    let a = xb.kernel_rows(&ds, 0.5, &queries).unwrap();
+    let b = nb.kernel_rows(&ds, 0.5, &queries).unwrap();
+    assert_eq!(a.len(), 40);
+    for (ra, rb) in a.iter().zip(&b) {
+        for (va, vb) in ra.iter().zip(rb) {
+            assert!((va - vb).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn full_cv_with_xla_backend_matches_native_accuracy() {
+    let Some(mut xb) = xla() else { return };
+    use alphaseed::cv::{run_kfold, CvOptions};
+    use alphaseed::kernel::Kernel;
+    use alphaseed::seeding::Sir;
+
+    let ds = synth::generate("heart", Some(200), 21);
+    let native = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &Sir, CvOptions::default());
+    let with_xla = run_kfold(
+        &ds,
+        Kernel::rbf(0.2),
+        2.0,
+        5,
+        &Sir,
+        CvOptions {
+            backend: Some(&mut xb),
+            ..Default::default()
+        },
+    );
+    // f32 artifacts vs f64 native: accuracies must match exactly on this
+    // dataset (decisions are far from the boundary) and iteration counts
+    // must stay in the same ballpark.
+    assert_eq!(native.accuracy(), with_xla.accuracy());
+    let (a, b) = (native.total_iterations(), with_xla.total_iterations());
+    let ratio = a.max(b) as f64 / a.min(b).max(1) as f64;
+    assert!(ratio < 1.5, "iteration counts diverged: {a} vs {b}");
+}
