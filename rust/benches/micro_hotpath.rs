@@ -3,6 +3,7 @@
 //! - kernel row evaluation (dense vs sparse, cached vs cold)
 //! - one SMO iteration (WSS2 select + update + gradient sweep)
 //! - seeding initialisation per algorithm
+//! - warm-start gradient init, sequential vs thread-pooled
 //! - PJRT artifact dispatch vs native for bulk kernel blocks
 
 use alphaseed::data::synth;
@@ -16,7 +17,42 @@ fn main() {
     kernel_row_benches();
     smo_iteration_bench();
     seeding_benches();
+    parallel_gradient_bench();
     backend_benches();
+}
+
+/// The tentpole hot path: warm-start gradient initialisation (kernel-row
+/// blocks + the Σⱼ sweep), sequential vs the work-stealing pool. Same
+/// bits either way — only the wall clock may differ.
+fn parallel_gradient_bench() {
+    let cores = alphaseed::util::pool::parallelism();
+    println!("\n-- warm-start gradient init (adult n=2000, {cores} cores) --");
+    let ds = synth::generate("adult", Some(2000), 6);
+    let eval = KernelEval::new(ds, Kernel::rbf(0.5));
+    let mut cold = Solver::new(eval.clone(), SmoParams::with_c(10.0));
+    let alpha = cold.solve().alpha;
+
+    let grad = |threads: usize, label: &str| {
+        bench(label, 2, 8, || {
+            // fresh solver per run: an empty row cache, so the bench
+            // measures row evaluation + sweep, not LRU hits
+            let mut s = Solver::new(
+                eval.clone(),
+                SmoParams {
+                    c: 10.0,
+                    threads,
+                    ..Default::default()
+                },
+            );
+            black_box(s.compute_gradient(&alpha)[7])
+        })
+    };
+    let seq = grad(1, "gradient init, 1 thread");
+    let par = grad(0, "gradient init, auto threads");
+    println!(
+        "   speedup ×{:.2} on {cores} cores",
+        seq.mean().as_secs_f64() / par.mean().as_secs_f64().max(1e-12)
+    );
 }
 
 fn kernel_row_benches() {

@@ -1,14 +1,33 @@
-//! Hyper-parameter grid search over (C, γ), each cell evaluated by
-//! seeded k-fold cross-validation.
+//! Concurrent hyper-parameter grid search over (C, γ), each cell
+//! evaluated by seeded k-fold cross-validation.
 //!
 //! This is the workload that motivates the paper: model selection runs
-//! many cross-validations, so accelerating each one compounds. Cells are
-//! independent and fan out across the coordinator's workers; within a
-//! cell the seeding chain runs as usual.
+//! many cross-validations, so accelerating each one compounds. The
+//! scheduler layers three kinds of reuse / parallelism:
+//!
+//! 1. **Across cells** — independent units fan out over scoped worker
+//!    threads ([`scoped_map`]); each unit is either one (C, γ) cell or,
+//!    with [`GridOptions::warm_c`], one whole ascending-C chain.
+//! 2. **Across C within a γ** (`warm_c`) — Chu et al.'s warm start: fold
+//!    h of the run at C′ seeds from the same fold at the previous C via
+//!    [`rescale_alpha`](crate::cv::rescale_alpha). The chain is a
+//!    *dependency edge* between cells, so it runs sequentially inside one
+//!    unit while different γ chains run concurrently.
+//! 3. **Across everything sharing a γ** — RBF rows depend on the data and
+//!    γ, not on C, so all cells of one γ column share a read-mostly
+//!    [`SharedKernelCache`] and compute each seeding row once.
+//!
+//! Within every cell the fold-to-fold seeding chain runs exactly as in
+//! the sequential driver — scheduling changes *when* a cell runs, never
+//! what it computes — so per-cell accuracies and iteration counts are
+//! identical to a sequential sweep (asserted in `tests/parallel_identity.rs`).
 
-use super::jobs::{run_one, JobSpec};
+use crate::cv::{run_kfold, run_kfold_warm_c, CvOptions, WarmCOptions};
 use crate::data::Dataset;
-use crate::util::pool::scoped_map;
+use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
+use crate::seeding::seeder_by_name;
+use crate::util::pool::{effective_threads, scoped_map};
+use std::sync::Arc;
 
 /// One evaluated grid cell.
 #[derive(Debug, Clone)]
@@ -34,10 +53,9 @@ impl GridResult {
             .iter()
             .min_by(|a, b| {
                 b.accuracy
-                    .partial_cmp(&a.accuracy)
-                    .unwrap()
-                    .then(a.c.partial_cmp(&b.c).unwrap())
-                    .then(a.gamma.partial_cmp(&b.gamma).unwrap())
+                    .total_cmp(&a.accuracy)
+                    .then(a.c.total_cmp(&b.c))
+                    .then(a.gamma.total_cmp(&b.gamma))
             })
             .expect("empty grid")
     }
@@ -47,7 +65,46 @@ impl GridResult {
     }
 }
 
-/// Evaluate the (C, γ) grid with `seeder`-accelerated k-fold CV.
+/// Scheduling options for [`grid_search_opts`].
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    /// Folds per cell.
+    pub k: usize,
+    /// Seeder name ("cold", "ato", "mir", "sir").
+    pub seeder: String,
+    /// Concurrent scheduling width (0 = auto). Never changes results.
+    pub threads: usize,
+    /// Fold-partition + seeding determinism.
+    pub rng_seed: u64,
+    /// Chain ascending C values within each γ through
+    /// [`rescale_alpha`](crate::cv::rescale_alpha) (Chu et al. reuse).
+    /// Changes iteration counts (that is the point) but not accuracies.
+    pub warm_c: bool,
+    /// Share one kernel-row store per γ across that γ's cells. Pure
+    /// compute sharing — adopted rows are bit-identical to locally
+    /// computed ones.
+    pub share_rows: bool,
+    /// Byte budget for each per-γ shared row store.
+    pub seed_cache_bytes: usize,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        GridOptions {
+            k: 5,
+            seeder: "sir".into(),
+            threads: 0,
+            rng_seed: 42,
+            warm_c: false,
+            share_rows: true,
+            seed_cache_bytes: 64 << 20,
+        }
+    }
+}
+
+/// Evaluate the (C, γ) grid with `seeder`-accelerated k-fold CV — the
+/// original entry point, scheduling independent cells concurrently.
+/// Equivalent to [`grid_search_opts`] with `warm_c = false`.
 pub fn grid_search(
     ds: &Dataset,
     c_values: &[f64],
@@ -57,24 +114,85 @@ pub fn grid_search(
     threads: usize,
     rng_seed: u64,
 ) -> GridResult {
-    let cells: Vec<(f64, f64)> = c_values
-        .iter()
-        .flat_map(|&c| gamma_values.iter().map(move |&g| (c, g)))
-        .collect();
-    let points = scoped_map(threads.max(1), cells.len(), |i| {
-        let (c, gamma) = cells[i];
-        let spec = JobSpec {
-            dataset: ds.name.clone(),
-            n: None,
-            c,
-            gamma,
-            seeder: seeder.to_string(),
+    grid_search_opts(
+        ds,
+        c_values,
+        gamma_values,
+        &GridOptions {
             k,
-            max_rounds: None,
+            seeder: seeder.to_string(),
+            threads,
             rng_seed,
-        };
+            ..Default::default()
+        },
+    )
+}
+
+/// Evaluate the (C, γ) grid under explicit scheduling options. Points come
+/// back in C-major order (`c_values` outer, `gamma_values` inner)
+/// regardless of execution order.
+pub fn grid_search_opts(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> GridResult {
+    assert!(!c_values.is_empty() && !gamma_values.is_empty(), "empty grid");
+    // One shared row store per γ column (rows depend on γ, never on C).
+    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
+        .iter()
+        .map(|&gamma| {
+            opts.share_rows.then(|| {
+                SharedKernelCache::with_byte_budget(
+                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
+                    opts.seed_cache_bytes,
+                )
+            })
+        })
+        .collect();
+
+    let points = if opts.warm_c {
+        warm_c_sweep(ds, c_values, gamma_values, &shares, opts)
+    } else {
+        independent_cells(ds, c_values, gamma_values, &shares, opts)
+    };
+    GridResult { points }
+}
+
+/// Every (C, γ) cell is an independent unit; fan all of them out.
+fn independent_cells(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    let cells: Vec<(usize, usize)> = (0..c_values.len())
+        .flat_map(|ci| (0..gamma_values.len()).map(move |gi| (ci, gi)))
+        .collect();
+    // Split the scheduling width between fan-out and intra-cell
+    // parallelism: cells.len() × intra ≈ width, never oversubscribing.
+    let width = effective_threads(opts.threads);
+    let intra = (width / cells.len().max(1)).max(1);
+    scoped_map(opts.threads, cells.len(), |i| {
+        let (ci, gi) = cells[i];
+        let (c, gamma) = (c_values[ci], gamma_values[gi]);
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
         let started = std::time::Instant::now();
-        let report = run_one(&spec, Some(ds));
+        let report = run_kfold(
+            ds,
+            Kernel::rbf(gamma),
+            c,
+            opts.k,
+            seeder.as_ref(),
+            CvOptions {
+                rng_seed: opts.rng_seed,
+                threads: intra,
+                shared_seed_cache: shares[gi].clone(),
+                ..Default::default()
+            },
+        );
         GridPoint {
             c,
             gamma,
@@ -82,8 +200,61 @@ pub fn grid_search(
             iterations: report.total_iterations(),
             elapsed: started.elapsed(),
         }
+    })
+}
+
+/// One unit per γ: the ascending-C chain (each C seeds the next via
+/// `rescale_alpha`) runs sequentially inside the unit; units run
+/// concurrently.
+fn warm_c_sweep(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    // The chain must visit C ascending; remember how to map back.
+    let mut order: Vec<usize> = (0..c_values.len()).collect();
+    order.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
+    let sorted_cs: Vec<f64> = order.iter().map(|&i| c_values[i]).collect();
+
+    let width = effective_threads(opts.threads);
+    let intra = (width / gamma_values.len().max(1)).max(1);
+    let per_gamma = scoped_map(opts.threads, gamma_values.len(), |gi| {
+        let gamma = gamma_values[gi];
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        run_kfold_warm_c(
+            ds,
+            Kernel::rbf(gamma),
+            &sorted_cs,
+            opts.k,
+            seeder.as_ref(),
+            WarmCOptions {
+                rng_seed: opts.rng_seed,
+                threads: intra,
+                shared_seed_cache: shares[gi].clone(),
+                ..Default::default()
+            },
+        )
     });
-    GridResult { points }
+
+    // Assemble in C-major caller order.
+    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
+    for (ci, &c) in c_values.iter().enumerate() {
+        let sorted_pos = order.iter().position(|&o| o == ci).expect("order is a permutation");
+        for (gi, &gamma) in gamma_values.iter().enumerate() {
+            let report = &per_gamma[gi][sorted_pos];
+            points.push(GridPoint {
+                c,
+                gamma,
+                accuracy: report.accuracy(),
+                iterations: report.total_iterations(),
+                elapsed: report.total_elapsed(),
+            });
+        }
+    }
+    points
 }
 
 #[cfg(test)]
@@ -121,5 +292,88 @@ mod tests {
             ],
         };
         assert_eq!(g.best().c, 1.0);
+    }
+
+    #[test]
+    fn warm_c_matches_plain_accuracies() {
+        let ds = crate::data::synth::generate("heart", Some(120), 5);
+        let cs = [16.0, 64.0, 256.0];
+        let gammas = [0.1, 0.3];
+        let base = GridOptions {
+            k: 3,
+            seeder: "sir".into(),
+            threads: 4,
+            rng_seed: 11,
+            ..Default::default()
+        };
+        let plain = grid_search_opts(&ds, &cs, &gammas, &base);
+        let warm = grid_search_opts(
+            &ds,
+            &cs,
+            &gammas,
+            &GridOptions {
+                warm_c: true,
+                ..base
+            },
+        );
+        assert_eq!(plain.points.len(), warm.points.len());
+        for (p, w) in plain.points.iter().zip(&warm.points) {
+            assert_eq!(p.c, w.c);
+            assert_eq!(p.gamma, w.gamma);
+            // the headline guarantee: reuse never changes accuracy
+            assert_eq!(p.accuracy, w.accuracy, "C={} gamma={}", p.c, p.gamma);
+        }
+    }
+
+    #[test]
+    fn shared_rows_do_not_change_results() {
+        let ds = crate::data::synth::generate("heart", Some(80), 9);
+        let cs = [1.0, 8.0];
+        let gammas = [0.2];
+        let with = grid_search_opts(
+            &ds,
+            &cs,
+            &gammas,
+            &GridOptions {
+                k: 3,
+                threads: 2,
+                share_rows: true,
+                ..Default::default()
+            },
+        );
+        let without = grid_search_opts(
+            &ds,
+            &cs,
+            &gammas,
+            &GridOptions {
+                k: 3,
+                threads: 2,
+                share_rows: false,
+                ..Default::default()
+            },
+        );
+        for (a, b) in with.points.iter().zip(&without.points) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.iterations, b.iterations);
+        }
+    }
+
+    #[test]
+    fn warm_c_unsorted_c_grid_keeps_caller_order() {
+        let ds = crate::data::synth::generate("heart", Some(60), 2);
+        let cs = [8.0, 1.0]; // deliberately descending
+        let g = grid_search_opts(
+            &ds,
+            &cs,
+            &[0.2],
+            &GridOptions {
+                k: 3,
+                warm_c: true,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.points[0].c, 8.0);
+        assert_eq!(g.points[1].c, 1.0);
     }
 }

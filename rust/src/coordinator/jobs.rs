@@ -5,7 +5,7 @@ use crate::data::Dataset;
 use crate::kernel::Kernel;
 use crate::metrics::{Counter, Histogram};
 use crate::seeding::seeder_by_name;
-use crate::util::pool::scoped_map;
+use crate::util::pool::{effective_threads, scoped_map};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -83,10 +83,15 @@ impl Coordinator {
     fn run_inner(&self, specs: &[JobSpec], shared: Option<&Dataset>) -> Vec<JobOutcome> {
         let done = Arc::clone(&self.jobs_done);
         let latency = Arc::clone(&self.job_latency);
+        // Split the width between the batch fan-out and each job's inner
+        // sweeps (specs.len() × intra ≈ width) instead of oversubscribing
+        // the machine. The knob never changes results (bit-identical
+        // parallel paths).
+        let intra = (effective_threads(self.threads) / specs.len().max(1)).max(1);
         scoped_map(self.threads, specs.len(), move |i| {
             let spec = specs[i].clone();
             let started = Instant::now();
-            let report = run_one(&spec, shared);
+            let report = run_one_with_threads(&spec, shared, intra);
             let wall = started.elapsed();
             done.inc();
             latency.record(wall);
@@ -97,6 +102,11 @@ impl Coordinator {
 
 /// Execute a single job (used directly by the CLI for one-off runs).
 pub fn run_one(spec: &JobSpec, shared: Option<&Dataset>) -> CvReport {
+    run_one_with_threads(spec, shared, 0)
+}
+
+/// [`run_one`] with an explicit intra-run thread count (0 = auto).
+fn run_one_with_threads(spec: &JobSpec, shared: Option<&Dataset>, threads: usize) -> CvReport {
     let ds = match shared {
         Some(d) => d.clone(),
         None => crate::data::synth::generate(&spec.dataset, spec.n, spec.rng_seed),
@@ -113,6 +123,7 @@ pub fn run_one(spec: &JobSpec, shared: Option<&Dataset>) -> CvReport {
             LooOptions {
                 max_rounds: spec.max_rounds,
                 rng_seed: spec.rng_seed,
+                threads,
                 ..Default::default()
             },
         )
@@ -126,6 +137,7 @@ pub fn run_one(spec: &JobSpec, shared: Option<&Dataset>) -> CvReport {
             CvOptions {
                 max_rounds: spec.max_rounds,
                 rng_seed: spec.rng_seed,
+                threads,
                 ..Default::default()
             },
         )

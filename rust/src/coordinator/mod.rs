@@ -6,12 +6,21 @@
 //! run — but experiment suites (dataset × seeder × k cells) and
 //! hyper-parameter grids are embarrassingly parallel across runs, and
 //! that's what the coordinator fans out.
+//!
+//! The grid scheduler ([`grid_search_opts`]) additionally understands two
+//! reuse dimensions: Chu et al.'s warm start across ascending C values
+//! (a dependency chain per γ, cells within a chain run in order while
+//! chains run concurrently) and a per-γ
+//! [`SharedKernelCache`](crate::kernel::SharedKernelCache) so cells over
+//! the same data + γ compute each kernel row once. Scheduling never
+//! changes what a cell computes — per-cell results are identical to a
+//! sequential sweep.
 
 pub mod experiments;
 mod grid;
 mod jobs;
 mod server;
 
-pub use grid::{grid_search, GridPoint, GridResult};
+pub use grid::{grid_search, grid_search_opts, GridOptions, GridPoint, GridResult};
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use server::PredictServer;

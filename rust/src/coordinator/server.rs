@@ -14,6 +14,9 @@
 //!
 //! Requests are answered by a worker that batches the rows of each request
 //! into one bulk decision evaluation (native or via the AOT artifacts).
+//! Connections fan out on the process-wide work-stealing pool
+//! (`util::pool::global`), so slow clients and big batches overlap
+//! instead of serialising behind one accept loop.
 
 use crate::data::{DataMatrix, Dataset};
 use crate::metrics::{Counter, Histogram};
@@ -47,18 +50,25 @@ impl PredictServer {
 
     /// Bind and serve until a `shutdown` request arrives. Returns the
     /// bound address through `on_ready` (port 0 picks a free port).
-    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    /// Each accepted connection is handled on the process-wide
+    /// work-stealing pool, so concurrent clients overlap.
+    pub fn serve(
+        self: Arc<Self>,
+        addr: &str,
+        on_ready: impl FnOnce(std::net::SocketAddr),
+    ) -> Result<()> {
         let listener = TcpListener::bind(addr).context("bind")?;
         listener.set_nonblocking(true)?;
         on_ready(listener.local_addr()?);
         while !self.stop.load(Ordering::SeqCst) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    // single-threaded accept loop: the expensive part is
-                    // the batched kernel evaluation, not concurrency
-                    if let Err(e) = self.handle(stream) {
-                        log::warn!("connection error: {e:#}");
-                    }
+                    let me = Arc::clone(&self);
+                    crate::util::pool::global().execute(move || {
+                        if let Err(e) = me.handle(stream) {
+                            eprintln!("warning: connection error: {e:#}");
+                        }
+                    });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));

@@ -8,11 +8,21 @@
 
 use super::report::{CvReport, RoundStat};
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelCache, KernelEval};
+use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::runtime::ComputeBackend;
 use crate::seeding::{check_feasible, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
+use crate::util::pool::{effective_threads, par_chunks_mut};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Kernel rows per parallel block in the warm-gradient sweeps (bounds
+/// pinned-row memory at `ROW_BLOCK·n·8` bytes).
+const ROW_BLOCK: usize = 64;
+/// Training sets smaller than this run the sequential gradient loop (the
+/// parallel hand-off would cost more than it saves). Both paths perform
+/// identical arithmetic, so the cutoff never changes results.
+const PAR_MIN_N: usize = 256;
 
 /// Options for a CV run.
 pub struct CvOptions<'a> {
@@ -32,6 +42,18 @@ pub struct CvOptions<'a> {
     /// Bulk backend for warm-start gradient init and test-fold decision
     /// values; `None` = native in-process math.
     pub backend: Option<&'a mut dyn ComputeBackend>,
+    /// Worker threads for the intra-run parallel paths (kernel-row blocks
+    /// and warm-start gradient sweeps): 0 = auto, 1 = sequential. The
+    /// fold-to-fold seeding chain itself stays sequential by design — its
+    /// order is the paper's contribution — and the thread count never
+    /// changes any result (the parallel sweeps are bit-identical).
+    pub threads: usize,
+    /// Optional process-wide row store (same dataset + kernel) backing
+    /// this run's seeding cache, so concurrent runs over the same data —
+    /// e.g. grid cells sharing a γ — compute each kernel row once. Purely
+    /// a compute-sharing device: the adopted rows are the exact bits the
+    /// local cache would have produced.
+    pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
 }
 
 impl Default for CvOptions<'_> {
@@ -44,6 +66,8 @@ impl Default for CvOptions<'_> {
             rng_seed: 42,
             max_rounds: None,
             backend: None,
+            threads: 0,
+            shared_seed_cache: None,
         }
     }
 }
@@ -62,9 +86,24 @@ pub fn run_kfold(
     let plan = FoldPlan::stratified(full, k, opts.rng_seed);
     let partition = t_part.elapsed();
 
-    // Shared kernel-row cache over the full dataset for the seeders.
-    let mut seed_cache =
-        KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), opts.seed_cache_bytes);
+    // Kernel-row cache over the full dataset for the seeders — backed by
+    // the process-wide shared store when the caller provides one (grid
+    // cells with the same dataset + γ then compute each row only once).
+    let mut seed_cache = match &opts.shared_seed_cache {
+        Some(shared) => {
+            // cheap enough to check in release: adopting rows from a store
+            // built for different data or kernel would silently corrupt
+            // every warm-start gradient
+            assert!(
+                shared.n() == full.len() && shared.eval().kernel == kernel,
+                "shared seed cache bound to a different dataset or kernel"
+            );
+            KernelCache::with_shared_backing(Arc::clone(shared), opts.seed_cache_bytes)
+        }
+        None => {
+            KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), opts.seed_cache_bytes)
+        }
+    };
 
     let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
     let mut rounds = Vec::with_capacity(rounds_to_run);
@@ -141,6 +180,7 @@ pub fn run_kfold(
                     &train_idx,
                     &train.y,
                     &alpha0,
+                    opts.threads,
                 )),
             }
         } else {
@@ -155,6 +195,7 @@ pub fn run_kfold(
             eps: opts.eps,
             shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
+            threads: opts.threads,
             ..Default::default()
         };
         let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
@@ -221,24 +262,51 @@ pub fn run_kfold(
 /// seeders and earlier rounds are already resident, so by round 2–3 the
 /// warm-start gradient is nearly free — the native analogue of routing
 /// the bulk matvec to the AOT artifact.
+///
+/// With `threads > 1` and enough work, support vectors are processed in
+/// kernel-row blocks (rows evaluated concurrently) and the sweep over t
+/// is chunked across threads. Each `g[t]` accumulates its terms in the
+/// same ascending-j order as the sequential loop — bit-identical output
+/// for every thread count.
 fn gradient_via_cache(
     cache: &mut KernelCache,
     full: &Dataset,
     train_idx: &[usize],
     train_y: &[f64],
     alpha: &[f64],
+    threads: usize,
 ) -> Vec<f64> {
     let n = train_idx.len();
+    let threads = effective_threads(threads);
     let mut g = vec![-1.0f64; n];
-    for (j, &a) in alpha.iter().enumerate() {
-        if a > 0.0 {
+    let svs: Vec<usize> = (0..alpha.len()).filter(|&j| alpha[j] > 0.0).collect();
+    if threads <= 1 || n < PAR_MIN_N || svs.len() < 2 {
+        for &j in &svs {
             let gj = train_idx[j];
-            let coef = a * full.y[gj];
+            let coef = alpha[j] * full.y[gj];
             let row = cache.row(gj);
             for (t, &gt) in train_idx.iter().enumerate() {
                 g[t] += train_y[t] * coef * row[gt];
             }
         }
+        return g;
+    }
+    let chunk = (n / (threads * 4)).max(64);
+    for block in svs.chunks(ROW_BLOCK) {
+        let gjs: Vec<usize> = block.iter().map(|&j| train_idx[j]).collect();
+        let rows = cache.rows_block(&gjs, threads);
+        par_chunks_mut(threads, &mut g, chunk, |_c, start, piece| {
+            for (off, slot) in piece.iter_mut().enumerate() {
+                let t = start + off;
+                let gt = train_idx[t];
+                let mut acc = *slot;
+                for (b, &j) in block.iter().enumerate() {
+                    let coef = alpha[j] * full.y[train_idx[j]];
+                    acc += train_y[t] * coef * rows[b][gt];
+                }
+                *slot = acc;
+            }
+        });
     }
     g
 }
@@ -254,7 +322,9 @@ fn gradient_via_cache(
 /// - **from-scratch** — Σ over all support vectors; cost ≈ n_sv rows.
 ///
 /// The cheaper one (by row count) is chosen per round; both pull rows from
-/// the shared full-dataset LRU.
+/// the shared full-dataset LRU. Like [`gradient_via_cache`], both
+/// strategies run their row fetches and accumulation sweeps across
+/// `threads` workers with bit-identical arithmetic.
 #[allow(clippy::too_many_arguments)]
 fn warm_gradient(
     cache: &mut KernelCache,
@@ -265,6 +335,7 @@ fn warm_gradient(
     next_train: &[usize],
     next_y: &[f64],
     alpha0: &[f64],
+    threads: usize,
 ) -> Vec<f64> {
     let n = next_train.len();
     // Changed coefficients by global index: coef = y·α; Δ = new − old.
@@ -309,8 +380,11 @@ fn warm_gradient(
     let n_sv = alpha0.iter().filter(|&&a| a > 0.0).count();
     if delta.len() + fresh.len() >= n_sv {
         // from-scratch is cheaper
-        return gradient_via_cache(cache, full, next_train, next_y, alpha0);
+        return gradient_via_cache(cache, full, next_train, next_y, alpha0, threads);
     }
+
+    let threads = effective_threads(threads);
+    let parallel = threads > 1 && n >= PAR_MIN_N;
 
     // base: carry G over from prev (G_t = y_t · f_t), −1 for fresh rows
     let mut g = vec![0.0f64; n];
@@ -321,24 +395,67 @@ fn warm_gradient(
         }
     }
     // apply changed coefficients to carried rows
-    for &(gj, dc) in &delta {
-        let row = cache.row(gj);
-        for (t, &gt) in next_train.iter().enumerate() {
-            // fresh rows get the full sum below instead
-            g[t] += next_y[t] * dc * row[gt];
+    if parallel && delta.len() >= 2 {
+        let chunk = (n / (threads * 4)).max(64);
+        for dblock in delta.chunks(ROW_BLOCK) {
+            let gjs: Vec<usize> = dblock.iter().map(|&(gj, _)| gj).collect();
+            let rows = cache.rows_block(&gjs, threads);
+            par_chunks_mut(threads, &mut g, chunk, |_c, start, piece| {
+                for (off, slot) in piece.iter_mut().enumerate() {
+                    let t = start + off;
+                    let gt = next_train[t];
+                    let mut acc = *slot;
+                    for (b, &(_, dc)) in dblock.iter().enumerate() {
+                        // fresh rows get the full sum below instead
+                        acc += next_y[t] * dc * rows[b][gt];
+                    }
+                    *slot = acc;
+                }
+            });
+        }
+    } else {
+        for &(gj, dc) in &delta {
+            let row = cache.row(gj);
+            for (t, &gt) in next_train.iter().enumerate() {
+                // fresh rows get the full sum below instead
+                g[t] += next_y[t] * dc * row[gt];
+            }
         }
     }
     // fresh 𝒯 instances: full sum over the new solution's SVs via one row
-    for &t in &fresh {
-        let gt = next_train[t];
-        let row = cache.row(gt);
-        let mut acc = -1.0f64;
-        for (j, &gj) in next_train.iter().enumerate() {
-            if alpha0[j] > 0.0 {
-                acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+    if parallel && fresh.len() >= 2 {
+        // blocked like every other parallel path, so pinned-row memory
+        // stays bounded at ROW_BLOCK·n·8 bytes
+        for fchunk in fresh.chunks(ROW_BLOCK) {
+            let gts: Vec<usize> = fchunk.iter().map(|&t| next_train[t]).collect();
+            let rows = cache.rows_block(&gts, threads);
+            let accs = crate::util::pool::scoped_map(threads, fchunk.len(), |fi| {
+                let t = fchunk[fi];
+                let row = &rows[fi];
+                let mut acc = -1.0f64;
+                for (j, &gj) in next_train.iter().enumerate() {
+                    if alpha0[j] > 0.0 {
+                        acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+                    }
+                }
+                acc
+            });
+            for (&t, acc) in fchunk.iter().zip(accs) {
+                g[t] = acc;
             }
         }
-        g[t] = acc;
+    } else {
+        for &t in &fresh {
+            let gt = next_train[t];
+            let row = cache.row(gt);
+            let mut acc = -1.0f64;
+            for (j, &gj) in next_train.iter().enumerate() {
+                if alpha0[j] > 0.0 {
+                    acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+                }
+            }
+            g[t] = acc;
+        }
     }
     g
 }

@@ -23,13 +23,21 @@ use std::time::Instant;
 
 /// Options for a leave-one-out run.
 pub struct LooOptions {
+    /// SMO tolerance (LibSVM default 1e-3).
     pub eps: f64,
+    /// LibSVM-style shrinking in the solver.
     pub shrinking: bool,
+    /// Solver kernel-cache budget per round.
     pub cache_bytes: usize,
+    /// Shared seeding-cache budget (rows over the full dataset).
     pub seed_cache_bytes: usize,
+    /// Fold-partition + seeding determinism.
     pub rng_seed: u64,
     /// Evaluate only the first `max_rounds` held-out instances.
     pub max_rounds: Option<usize>,
+    /// Worker threads for the intra-run parallel paths (0 = auto,
+    /// 1 = sequential); bit-identical results for any value.
+    pub threads: usize,
 }
 
 impl Default for LooOptions {
@@ -41,6 +49,7 @@ impl Default for LooOptions {
             seed_cache_bytes: 128 << 20,
             rng_seed: 42,
             max_rounds: None,
+            threads: 0,
         }
     }
 }
@@ -65,6 +74,8 @@ pub fn run_loo(
                 rng_seed: opts.rng_seed,
                 max_rounds: opts.max_rounds,
                 backend: None,
+                threads: opts.threads,
+                shared_seed_cache: None,
             };
             let mut rep = run_kfold(full, kernel, c, full.len(), seeder, cv_opts);
             rep.seeder = seeder.name().to_string();
@@ -92,6 +103,7 @@ fn run_loo_from_full(
         eps: opts.eps,
         shrinking: opts.shrinking,
         cache_bytes: opts.cache_bytes,
+        threads: opts.threads,
         ..Default::default()
     };
     let mut full_solver = Solver::new(KernelEval::new(full.clone(), kernel), params.clone());

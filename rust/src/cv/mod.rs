@@ -1,5 +1,14 @@
-//! Cross-validation drivers: the k-fold chain (paper §2–3) and the
-//! leave-one-out protocol (supplementary §Figure 2).
+//! Cross-validation drivers: the k-fold chain (paper §2–3), the
+//! leave-one-out protocol (supplementary §Figure 2), and the warm-start
+//! sweep across a C grid (Chu et al., composed with the fold chain).
+//!
+//! All drivers share two invariants:
+//!
+//! - the fold-to-fold seeding chain runs in order (round h seeds round
+//!   h+1) — that ordering *is* the paper's method;
+//! - the intra-round parallel paths (kernel-row blocks, warm-start
+//!   gradient sweeps; `threads` option) perform bit-identical arithmetic
+//!   for every thread count, so parallelism never changes a result.
 
 mod kfold;
 mod loo;

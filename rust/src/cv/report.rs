@@ -6,6 +6,7 @@ use std::time::Duration;
 /// One cross-validation round.
 #[derive(Debug, Clone)]
 pub struct RoundStat {
+    /// Round index h (0-based; round 0 always trains cold).
     pub round: usize,
     /// Alpha-initialisation time (seeding computation + warm-start gradient
     /// setup). Zero for the cold baseline.
@@ -15,7 +16,9 @@ pub struct RoundStat {
     pub rest: Duration,
     /// SMO iterations of this round's solve.
     pub iterations: u64,
+    /// Correctly classified instances of this round's test fold.
     pub test_correct: usize,
+    /// Size of this round's test fold.
     pub test_total: usize,
     /// The seeder gave up and fell back to cold start this round.
     pub fell_back: bool,
@@ -26,9 +29,14 @@ pub struct RoundStat {
 /// Aggregated result of one (dataset × seeder × k) cross-validation run.
 #[derive(Debug, Clone)]
 pub struct CvReport {
+    /// Dataset name the run was over.
     pub dataset: String,
+    /// Seeder name (plus decorations like `+warmC` for the C-chain sweep).
     pub seeder: String,
+    /// Number of folds k (= n for leave-one-out).
     pub k: usize,
+    /// Per-round statistics, in round order (may be a prefix when
+    /// `max_rounds` limited the run).
     pub rounds: Vec<RoundStat>,
     /// Fold partitioning time (counted in "the rest", as in the paper).
     pub partition: Duration,

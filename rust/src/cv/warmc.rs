@@ -15,21 +15,36 @@
 
 use super::report::{CvReport, RoundStat};
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelCache, KernelEval};
+use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::seeding::{balance_to_target, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Options for the warm-C sweep.
 pub struct WarmCOptions {
+    /// SMO tolerance (LibSVM default 1e-3).
     pub eps: f64,
+    /// LibSVM-style shrinking in the solver.
     pub shrinking: bool,
+    /// Solver kernel-cache budget per round.
     pub cache_bytes: usize,
+    /// Shared seeding-cache budget (rows over the full dataset).
     pub seed_cache_bytes: usize,
+    /// Fold-partition + seeding determinism.
     pub rng_seed: u64,
     /// Also seed fold-to-fold within each C (the paper's chain). When
     /// false only the C-chain reuse is active (pure Chu et al.).
     pub fold_chain: bool,
+    /// Worker threads for the intra-run parallel paths (0 = auto,
+    /// 1 = sequential); bit-identical results for any value. The C-chain
+    /// itself is a dependency chain and stays sequential — the concurrent
+    /// grid scheduler parallelises *across* chains instead.
+    pub threads: usize,
+    /// Optional process-wide row store (same dataset + kernel) backing
+    /// the sweep's seeding cache; see
+    /// [`CvOptions::shared_seed_cache`](super::CvOptions::shared_seed_cache).
+    pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
 }
 
 impl Default for WarmCOptions {
@@ -41,13 +56,32 @@ impl Default for WarmCOptions {
             seed_cache_bytes: 128 << 20,
             rng_seed: 42,
             fold_chain: true,
+            threads: 0,
+            shared_seed_cache: None,
         }
     }
 }
 
-/// Scale a solved α from penalty `c_old` to `c_new` (r = c_new/c_old,
-/// clip into the new box) and repair Σyα = 0 — the Chu et al. rule
-/// adapted to the non-linear C-SVC dual.
+/// Scale a solved α from penalty `c_old` to `c_new` — the Chu et al.
+/// (KDD 2015) warm-start rule adapted to the non-linear C-SVC dual.
+///
+/// With the ratio r = C_new / C_old, the **clip-and-rebalance** rule is
+///
+/// ```text
+/// α'ᵢ = clip(r·αᵢ, 0, C_new)            (scale, then clip into the box)
+/// Σᵢ yᵢ·α'ᵢ = 0                          (repaired by AdjustAlpha)
+/// ```
+///
+/// Rationale: as C grows, the optimal duals of bounded support vectors
+/// scale roughly linearly (αᵢ = C stays at the bound, which r·αᵢ maps to
+/// exactly) while the same instances tend to remain support vectors, so
+/// r·α is a near-feasible, near-optimal start. Clipping can break the
+/// equality constraint Σyα = 0; the residual is redistributed over the
+/// entries with remaining box headroom by
+/// [`balance_to_target`](crate::seeding::balance_to_target) — the
+/// paper's *AdjustAlpha* step. If the target is unreachable inside the
+/// box (pathological shrink ratios), the seed falls back to α = 0, which
+/// is always feasible.
 pub fn rescale_alpha(alpha: &[f64], y: &[f64], c_old: f64, c_new: f64) -> Vec<f64> {
     let r = c_new / c_old;
     let mut out: Vec<f64> = alpha.iter().map(|&a| (a * r).clamp(0.0, c_new)).collect();
@@ -73,10 +107,19 @@ pub fn run_kfold_warm_c(
     let plan = FoldPlan::stratified(full, k, opts.rng_seed);
     let partition = t_part.elapsed();
 
-    let mut seed_cache = KernelCache::with_byte_budget(
-        KernelEval::new(full.clone(), kernel),
-        opts.seed_cache_bytes,
-    );
+    let mut seed_cache = match &opts.shared_seed_cache {
+        Some(shared) => {
+            assert!(
+                shared.n() == full.len() && shared.eval().kernel == kernel,
+                "shared seed cache bound to a different dataset or kernel"
+            );
+            KernelCache::with_shared_backing(Arc::clone(shared), opts.seed_cache_bytes)
+        }
+        None => KernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), kernel),
+            opts.seed_cache_bytes,
+        ),
+    };
 
     // per-fold carried state from the previous C value
     let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
@@ -129,6 +172,7 @@ pub fn run_kfold_warm_c(
                 eps: opts.eps,
                 shrinking: opts.shrinking,
                 cache_bytes: opts.cache_bytes,
+                threads: opts.threads,
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);

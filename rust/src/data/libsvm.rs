@@ -10,14 +10,36 @@ use super::matrix::{CsrMatrix, DataMatrix};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("dataset is empty")]
     Empty,
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io error: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            LibsvmError::Empty => write!(f, "dataset is empty"),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> LibsvmError {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse LibSVM text. Labels are mapped to ±1: {+1,1} → +1, {-1,0,2} → −1

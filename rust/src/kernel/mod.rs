@@ -4,9 +4,15 @@
 //! algorithms request cross-set blocks (K(𝓡,𝒯)) and matvecs. Single rows
 //! are served natively through an LRU cache ([`KernelCache`]); bulk blocks
 //! route to the AOT Pallas artifacts via `runtime::ComputeBackend`.
+//!
+//! For concurrent workloads (the parallel grid scheduler), a sharded
+//! read-mostly [`SharedKernelCache`] holds rows once per process and backs
+//! any number of per-run [`KernelCache`]s over the same dataset.
 
 mod cache;
 mod function;
+mod shared;
 
 pub use cache::{CacheStats, KernelCache};
 pub use function::{Kernel, KernelEval};
+pub use shared::SharedKernelCache;

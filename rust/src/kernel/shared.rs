@@ -1,0 +1,227 @@
+//! A sharded, read-mostly kernel-row cache shared across threads.
+//!
+//! The concurrent grid scheduler runs many seeded CV chains over the
+//! *same* dataset at once. Every chain with the same γ needs the same RBF
+//! rows for seeding and warm-start gradients (rows depend on the data and
+//! γ, **not** on C), so recomputing them per chain is pure waste. This
+//! store computes each row once process-wide and hands out `Arc<[f64]>`
+//! clones.
+//!
+//! Design:
+//!
+//! - **Sharded**: rows hash to `shards` independent `RwLock`ed maps, so
+//!   concurrent readers of different rows never contend on one lock.
+//! - **Read-mostly**: a resident row is served under a read lock (many
+//!   concurrent readers). Rows are immutable once computed, which is what
+//!   makes sharing safe *and* deterministic — every consumer sees exactly
+//!   the bits `KernelEval::eval_row` produced.
+//! - **Compute outside the lock**: a miss evaluates the row with no lock
+//!   held, then inserts under a short write lock. Two threads racing on
+//!   the same row may both compute it; they produce identical bits and
+//!   the first insert wins, so the race costs work, never correctness.
+//! - **FIFO eviction** per shard under a byte budget. Evicting drops the
+//!   shard's `Arc`; readers holding clones are unaffected.
+
+use super::function::KernelEval;
+use crate::kernel::CacheStats;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Default shard count; enough to keep a 16-way grid sweep contention-free.
+const DEFAULT_SHARDS: usize = 16;
+
+struct Shard {
+    rows: RwLock<HashMap<usize, Arc<[f64]>>>,
+    /// Insertion order for FIFO eviction. Locked only on insert.
+    order: Mutex<VecDeque<usize>>,
+}
+
+/// Concurrent kernel-row store over one (dataset, kernel) pair. Safe to
+/// share behind an `Arc` between any number of threads; typically one per
+/// γ value of a grid sweep, backing each cell's
+/// [`KernelCache`](super::KernelCache) via
+/// [`KernelCache::with_shared_backing`](super::KernelCache::with_shared_backing).
+pub struct SharedKernelCache {
+    eval: KernelEval,
+    shards: Vec<Shard>,
+    capacity_rows_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SharedKernelCache {
+    /// Store with an explicit total row capacity split over `shards`.
+    pub fn new(eval: KernelEval, shards: usize, capacity_rows: usize) -> Arc<SharedKernelCache> {
+        let shards = shards.max(1);
+        let per_shard = (capacity_rows / shards).max(1);
+        Arc::new(SharedKernelCache {
+            eval,
+            shards: (0..shards)
+                .map(|_| Shard {
+                    rows: RwLock::new(HashMap::new()),
+                    order: Mutex::new(VecDeque::new()),
+                })
+                .collect(),
+            capacity_rows_per_shard: per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// Store sized in bytes (row = n·8 bytes) with the default shard
+    /// count; always at least one row per shard.
+    pub fn with_byte_budget(eval: KernelEval, bytes: usize) -> Arc<SharedKernelCache> {
+        let n = eval.len().max(1);
+        let rows = (bytes / (n * std::mem::size_of::<f64>())).max(DEFAULT_SHARDS);
+        Self::new(eval, DEFAULT_SHARDS, rows)
+    }
+
+    /// The bound evaluator (dataset + kernel).
+    pub fn eval(&self) -> &KernelEval {
+        &self.eval
+    }
+
+    /// Number of instances (row length).
+    pub fn n(&self) -> usize {
+        self.eval.len()
+    }
+
+    /// Kernel row K(xᵢ, ·), computed at most once per residency.
+    pub fn row(&self, i: usize) -> Arc<[f64]> {
+        let shard = &self.shards[i % self.shards.len()];
+        if let Some(row) = shard.rows.read().expect("shared cache poisoned").get(&i) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(row);
+        }
+        // Miss: evaluate with no lock held.
+        let mut data = vec![0.0f64; self.eval.len()];
+        self.eval.eval_row(i, &mut data);
+        let arc: Arc<[f64]> = data.into();
+
+        let mut rows = shard.rows.write().expect("shared cache poisoned");
+        if let Some(existing) = rows.get(&i) {
+            // Lost the compute race; adopt the winner (identical bits).
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(existing);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        rows.insert(i, Arc::clone(&arc));
+        let mut order = shard.order.lock().expect("shared cache poisoned");
+        order.push_back(i);
+        while rows.len() > self.capacity_rows_per_shard {
+            match order.pop_front() {
+                Some(old) => {
+                    if rows.remove(&old).is_some() {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+        arc
+    }
+
+    /// Rows currently resident across all shards.
+    pub fn cached_rows(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.rows.read().expect("shared cache poisoned").len())
+            .sum()
+    }
+
+    /// Snapshot of the hit/miss/eviction counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DataMatrix, Dataset};
+    use crate::kernel::Kernel;
+    use crate::util::pool::scoped_map;
+
+    fn eval(n: usize) -> KernelEval {
+        let data: Vec<f32> = (0..n * 3).map(|i| ((i * 7) % 13) as f32 * 0.25).collect();
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        KernelEval::new(
+            Dataset::new("shared", DataMatrix::dense(n, 3, data), y),
+            Kernel::rbf(0.4),
+        )
+    }
+
+    #[test]
+    fn rows_match_direct_eval() {
+        let ev = eval(10);
+        let cache = SharedKernelCache::new(ev.clone(), 4, 64);
+        for i in 0..10 {
+            let row = cache.row(i);
+            let mut direct = vec![0.0; 10];
+            ev.eval_row(i, &mut direct);
+            assert_eq!(&row[..], &direct[..]);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 10);
+    }
+
+    #[test]
+    fn second_fetch_hits() {
+        let cache = SharedKernelCache::new(eval(8), 2, 32);
+        let a = cache.row(3);
+        let b = cache.row(3);
+        assert!(Arc::ptr_eq(&a, &b), "same residency must share one Arc");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn concurrent_readers_get_identical_rows() {
+        let n = 24;
+        let ev = eval(n);
+        let cache = SharedKernelCache::new(ev.clone(), 4, 256);
+        // 8 threads × all rows, interleaved
+        let rows = scoped_map(8, 8 * n, |t| {
+            let i = t % n;
+            (i, cache.row(i))
+        });
+        for (i, row) in rows {
+            let mut direct = vec![0.0; n];
+            ev.eval_row(i, &mut direct);
+            assert_eq!(&row[..], &direct[..]);
+        }
+        // each row computed at most... once per race window; at least all misses counted
+        assert!(cache.stats().misses >= n as u64);
+        assert_eq!(cache.cached_rows(), n);
+    }
+
+    #[test]
+    fn fifo_eviction_respects_budget() {
+        let cache = SharedKernelCache::new(eval(12), 1, 4);
+        for i in 0..12 {
+            cache.row(i);
+        }
+        assert!(cache.cached_rows() <= 4);
+        assert!(cache.stats().evictions >= 8);
+        // pinned Arcs stay valid even after eviction
+        let pinned = cache.row(0);
+        for i in 0..12 {
+            cache.row(i);
+        }
+        assert_eq!(pinned.len(), 12);
+    }
+
+    #[test]
+    fn byte_budget_floor() {
+        let cache = SharedKernelCache::with_byte_budget(eval(6), 1);
+        // min one row per shard
+        assert!(cache.capacity_rows_per_shard >= 1);
+    }
+}

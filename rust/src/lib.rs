@@ -7,7 +7,12 @@
 //! - **Layer 3 (this crate)** — the cross-validation coordinator: fold
 //!   scheduling, a LibSVM-equivalent SMO solver, and the paper's three
 //!   alpha-seeding algorithms (ATO, MIR, SIR) plus the leave-one-out
-//!   baselines (AVG, TOP).
+//!   baselines (AVG, TOP). A parallel execution engine (work-stealing
+//!   pool in `util::pool`, sharded `kernel::SharedKernelCache`,
+//!   concurrent grid scheduler in `coordinator`) runs grid sweeps and
+//!   warm-start gradient setup across all cores while keeping every
+//!   result bit-identical to the sequential path — see
+//!   `docs/ARCHITECTURE.md`.
 //! - **Layer 2 (python/compile)** — JAX compute graphs (kernel-row blocks,
 //!   kernel matvec) AOT-lowered to HLO text at build time.
 //! - **Layer 1 (python/compile/kernels)** — Pallas kernels for the Gaussian
@@ -21,6 +26,9 @@
 
 pub mod config;
 pub mod coordinator;
+// The CV drivers and seeding algorithms are the paper-facing API; keep
+// their rustdoc complete (`cargo doc` fails the build on a bare item).
+#[deny(missing_docs)]
 pub mod cv;
 pub mod data;
 pub mod kernel;
@@ -28,6 +36,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod multiclass;
 pub mod runtime;
+#[deny(missing_docs)]
 pub mod seeding;
 pub mod smo;
 pub mod testing;

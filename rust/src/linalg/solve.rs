@@ -3,15 +3,28 @@
 
 use super::Mat;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix is singular (pivot {pivot:.3e} at step {step})")]
     Singular { step: usize, pivot: f64 },
-    #[error("matrix is not positive definite (diagonal {0:.3e})")]
     NotPositiveDefinite(f64),
-    #[error("shape mismatch: {0}")]
     Shape(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::Singular { step, pivot } => {
+                write!(f, "matrix is singular (pivot {pivot:.3e} at step {step})")
+            }
+            LinalgError::NotPositiveDefinite(d) => {
+                write!(f, "matrix is not positive definite (diagonal {d:.3e})")
+            }
+            LinalgError::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 impl Mat {
     /// Solve A·x = b via LU with partial pivoting. A must be square.

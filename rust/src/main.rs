@@ -11,7 +11,6 @@
 
 use alphaseed::config::RunConfig;
 use alphaseed::coordinator::experiments;
-use alphaseed::coordinator::grid_search;
 use alphaseed::cv::CvReport;
 use alphaseed::data::{read_libsvm, synth, write_libsvm};
 use alphaseed::kernel::{Kernel, KernelEval};
@@ -71,6 +70,9 @@ fn print_help() {
            --k <int>           folds                           (default 10)\n\
            --backend <b>       native|xla                      (default native)\n\
            --seed <int>        RNG seed                        (default 42)\n\
+         grid options:\n\
+           --threads <int>     concurrent cells/chains, 0 = auto (default 0)\n\
+           --warm-c            chain ascending C per gamma (Chu et al. reuse)\n\
          experiment options:\n\
            --scale <f>         scale dataset sizes (default 1.0)\n\
            --out <dir>         results directory (default results/)\n\
@@ -223,16 +225,31 @@ fn cmd_grid(args: &Args) -> Result<()> {
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
     let k = args.parse_or("k", 5usize)?;
     let seeder = args.str_or("seeder", "sir");
-    let threads = args.parse_or("threads", 1usize)?;
+    // 0 = auto (machine parallelism); cells run concurrently either way
+    let threads = args.parse_or("threads", 0usize)?;
     let seed = args.parse_or::<u64>("seed", 42)?;
+    let warm_c = args.flag("warm-c");
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
-    let g = grid_search(&ds, &cs, &gammas, k, &seeder, threads, seed);
+    let g = alphaseed::coordinator::grid_search_opts(
+        &ds,
+        &cs,
+        &gammas,
+        &alphaseed::coordinator::GridOptions {
+            k,
+            seeder: seeder.clone(),
+            threads,
+            rng_seed: seed,
+            warm_c,
+            ..Default::default()
+        },
+    );
     let mut t = Table::new(format!(
-        "grid search on {} ({} cells, seeder {seeder}, {} s)",
+        "grid search on {} ({} cells, seeder {seeder}{}, {} s)",
         ds.name,
         g.points.len(),
+        if warm_c { ", warm-C chains" } else { "" },
         fmt_secs(started.elapsed())
     ))
     .header(&["C", "gamma", "accuracy(%)", "iterations", "time(s)"]);
@@ -414,7 +431,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.n_sv(),
         model.b
     );
-    let server = alphaseed::coordinator::PredictServer::new(model, scaler);
+    let server = std::sync::Arc::new(alphaseed::coordinator::PredictServer::new(model, scaler));
     server.serve(&format!("127.0.0.1:{port}"), |addr| {
         println!("listening on {addr} — send {{\"op\":\"predict\",\"rows\":[[…]]}} lines");
     })?;

@@ -16,11 +16,15 @@
 
 mod backend;
 mod manifest;
+#[cfg(feature = "xla")]
+mod xla_backend;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 mod xla_backend;
 
 pub use backend::{BackendChoice, ComputeBackend, NativeBackend};
 pub use manifest::{ArtifactManifest, ArtifactOp};
-pub use xla_backend::XlaBackend;
+pub use xla_backend::{XlaBackend, XlaStats};
 
 use crate::data::Dataset;
 use anyhow::Result;

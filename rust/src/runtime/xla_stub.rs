@@ -1,0 +1,71 @@
+//! Stub for [`XlaBackend`] compiled when the `xla` cargo feature is off.
+//!
+//! The real backend (see `xla_backend.rs`) executes AOT JAX/Pallas
+//! artifacts through the PJRT C API and needs the `xla` bindings crate,
+//! which the offline build image does not carry. This stub keeps the
+//! public surface identical — `default_dir()`, `load()`, [`XlaStats`],
+//! and the [`ComputeBackend`] impl — so callers compile unchanged;
+//! `load()` simply reports that the backend is disabled, and every call
+//! site already falls back to the native path on load failure.
+
+use super::backend::ComputeBackend;
+use crate::data::Dataset;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Call accounting (exposed for the ablation bench and EXPERIMENTS.md).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct XlaStats {
+    pub artifact_calls: u64,
+    pub native_fallbacks: u64,
+    pub compiles: u64,
+}
+
+/// AOT-artifact backend (disabled build: construction always fails).
+pub struct XlaBackend {
+    /// Call accounting; always zero in the stub.
+    pub stats: XlaStats,
+}
+
+impl XlaBackend {
+    /// Always fails: this binary was built without the `xla` feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        let _ = dir.as_ref();
+        bail!(
+            "the XLA/PJRT backend is disabled in this build; \
+             rebuild with `--features xla` (requires the xla bindings crate)"
+        )
+    }
+
+    /// The default artifacts directory: $ALPHASEED_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("ALPHASEED_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| "artifacts".into())
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla(disabled)"
+    }
+
+    fn kernel_rows(
+        &mut self,
+        _ds: &Dataset,
+        _gamma: f64,
+        _queries: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        bail!("XLA backend disabled (built without the `xla` feature)")
+    }
+
+    fn kernel_matvec(
+        &mut self,
+        _x: &Dataset,
+        _w: &Dataset,
+        _coef: &[f64],
+        _gamma: f64,
+    ) -> Result<Vec<f64>> {
+        bail!("XLA backend disabled (built without the `xla` feature)")
+    }
+}

@@ -40,7 +40,9 @@ use crate::kernel::{Kernel, KernelCache};
 pub struct SeedContext<'a> {
     /// The complete dataset (all k folds).
     pub full: &'a Dataset,
+    /// The kernel both rounds train with.
     pub kernel: Kernel,
+    /// The box constraint C both rounds train with.
     pub c: f64,
     /// Round h's training instances.
     pub prev_train: &'a [usize],
@@ -70,9 +72,26 @@ pub struct SeedResult {
     pub fell_back: bool,
 }
 
-/// An alpha-seeding strategy. `Send + Sync` so the coordinator can ship
-/// jobs holding a seeder to worker threads (all implementations are
-/// stateless value types).
+/// An alpha-seeding strategy: given round h's solved SVM and the fold
+/// transition (𝓡 leaving, 𝒯 entering, 𝓢 shared), produce a feasible
+/// initial α for round h+1 so the SMO solver starts near the optimum
+/// instead of at zero.
+///
+/// Contract:
+///
+/// - **Feasibility** — the returned α satisfies 0 ≤ αᵢ ≤ C and
+///   Σᵢ yᵢ·αᵢ = 0 (checked by [`check_feasible`] in debug builds); an
+///   infeasible estimate must be repaired (see [`balance_to_target`]) or
+///   abandoned via [`SeedResult::fell_back`].
+/// - **Determinism** — same `SeedContext` (including `rng_seed`) ⇒ same
+///   seed, regardless of thread count or scheduling; any tie-breaking
+///   randomness must come from `ctx.rng_seed` only.
+/// - **No effect on the solution** — seeding moves the solver's *start*,
+///   never its fixed point: the paper's headline guarantee is that
+///   seeded CV reaches the same accuracy as cold-started CV.
+///
+/// Implementations are stateless value types, `Send + Sync` so the
+/// coordinator can ship jobs holding a seeder to worker threads.
 pub trait Seeder: Send + Sync {
     /// Short name for tables ("sir", "mir", ...).
     fn name(&self) -> &'static str;

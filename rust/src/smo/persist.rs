@@ -23,14 +23,36 @@ use crate::kernel::Kernel;
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ModelIoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("unsupported model: {0}")]
     Unsupported(String),
+}
+
+impl std::fmt::Display for ModelIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelIoError::Io(e) => write!(f, "io: {e}"),
+            ModelIoError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            ModelIoError::Unsupported(what) => write!(f, "unsupported model: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ModelIoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ModelIoError {
+    fn from(e: std::io::Error) -> ModelIoError {
+        ModelIoError::Io(e)
+    }
 }
 
 impl Model {

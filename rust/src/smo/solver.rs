@@ -16,6 +16,14 @@ pub struct SmoParams {
     pub shrinking: bool,
     /// Kernel-row cache budget in bytes.
     pub cache_bytes: usize,
+    /// Worker threads for the warm-start gradient initialisation (kernel
+    /// row blocks + the gradient sweep): 0 = auto (machine parallelism),
+    /// 1 = sequential. The parallel sweep performs bit-identical
+    /// arithmetic for every thread count, so this knob never changes the
+    /// solution — only wall-clock time. The SMO iteration loop itself
+    /// stays sequential (it is an inherently sequential coordinate
+    /// method).
+    pub threads: usize,
 }
 
 impl Default for SmoParams {
@@ -26,6 +34,7 @@ impl Default for SmoParams {
             max_iter: 20_000_000,
             shrinking: true,
             cache_bytes: 256 << 20,
+            threads: 0,
         }
     }
 }
@@ -74,6 +83,13 @@ impl SmoResult {
 }
 
 const TAU: f64 = 1e-12;
+
+/// Support vectors per parallel kernel-row block in the warm-start
+/// gradient (bounds peak pinned-row memory at `ROW_BLOCK·n·8` bytes).
+const ROW_BLOCK: usize = 64;
+/// Below this problem size the parallel gradient path is not worth the
+/// thread hand-off; the sequential loop (identical arithmetic) runs.
+const PAR_MIN_N: usize = 256;
 
 /// One SMO solve over a fixed training set. Owns the kernel cache; reuse
 /// across solves on the same data by calling [`Solver::solve_from`] again.
@@ -292,11 +308,20 @@ impl Solver {
     }
 
     /// Gᵢ = Σⱼ αⱼQᵢⱼ − 1, computed from the support vectors only.
+    ///
+    /// For warm starts with enough work this runs in parallel: support
+    /// vectors are processed in kernel-row *blocks* (rows of a block are
+    /// evaluated concurrently through the cache), and the gradient sweep
+    /// over t is chunked across threads. Every `g[t]` accumulates its
+    /// terms in the same (ascending-j) order as the sequential loop, so
+    /// the result is **bit-identical** for any `params.threads`.
     pub fn compute_gradient(&mut self, alpha: &[f64]) -> Vec<f64> {
         let n = self.n();
+        let threads = crate::util::pool::effective_threads(self.params.threads);
         let mut g = vec![-1.0f64; n];
-        for j in 0..n {
-            if alpha[j] > 0.0 {
+        let svs: Vec<usize> = (0..n).filter(|&j| alpha[j] > 0.0).collect();
+        if threads <= 1 || n < PAR_MIN_N || svs.len() < 2 {
+            for &j in &svs {
                 let coef = alpha[j] * self.y[j];
                 let row = self.cache.row(j);
                 // SAFETY-free split: copy row borrow is fine here (cold path)
@@ -305,6 +330,23 @@ impl Solver {
                     g[t] += self.y[t] * coef * row[t];
                 }
             }
+            return g;
+        }
+        let chunk = (n / (threads * 4)).max(64);
+        for block in svs.chunks(ROW_BLOCK) {
+            let rows = self.cache.rows_block(block, threads);
+            let y = &self.y;
+            crate::util::pool::par_chunks_mut(threads, &mut g, chunk, |_c, start, piece| {
+                for (off, gt) in piece.iter_mut().enumerate() {
+                    let t = start + off;
+                    let mut acc = *gt;
+                    for (bj, &j) in block.iter().enumerate() {
+                        let coef = alpha[j] * y[j];
+                        acc += y[t] * coef * rows[bj][t];
+                    }
+                    *gt = acc;
+                }
+            });
         }
         g
     }
@@ -660,6 +702,41 @@ mod tests {
         assert!(r.converged);
         let frac_sv = r.n_sv as f64 / r.alpha.len() as f64;
         assert!(frac_sv > 0.9, "madelon regime should make ~all SVs: {frac_sv}");
+    }
+
+    #[test]
+    fn parallel_gradient_init_is_bit_identical() {
+        // n ≥ PAR_MIN_N so the parallel path actually engages; seed from a
+        // solved model so the warm-start gradient has real work to do.
+        let ds = crate::data::synth::generate("heart", Some(300), 9);
+        let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+        let mut first = Solver::new(eval.clone(), SmoParams::with_c(5.0));
+        let r0 = first.solve();
+        assert!(r0.converged);
+
+        let solve_with = |threads: usize| {
+            let mut s = Solver::new(
+                eval.clone(),
+                SmoParams {
+                    c: 5.0,
+                    threads,
+                    ..Default::default()
+                },
+            );
+            s.solve_from(r0.alpha.clone(), None)
+        };
+        let seq = solve_with(1);
+        for threads in [2usize, 8] {
+            let par = solve_with(threads);
+            assert_eq!(seq.iterations, par.iterations, "threads={threads}");
+            assert_eq!(seq.b.to_bits(), par.b.to_bits(), "threads={threads}");
+            for (a, b) in seq.alpha.iter().zip(&par.alpha) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+            for (a, b) in seq.g.iter().zip(&par.g) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

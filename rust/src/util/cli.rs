@@ -19,21 +19,34 @@ pub struct Args {
     consumed: std::cell::RefCell<Vec<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({expected})")]
     BadValue {
         key: String,
         value: String,
         expected: &'static str,
     },
-    #[error("missing required option --{0}")]
     MissingRequired(String),
-    #[error("unknown option(s): {0}")]
     Unknown(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(key) => write!(f, "missing value for option --{key}"),
+            CliError::BadValue {
+                key,
+                value,
+                expected,
+            } => write!(f, "invalid value for --{key}: {value:?} ({expected})"),
+            CliError::MissingRequired(key) => write!(f, "missing required option --{key}"),
+            CliError::Unknown(opts) => write!(f, "unknown option(s): {opts}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).

@@ -1,55 +1,186 @@
-//! Fixed-size worker thread pool (the offline registry has no `tokio` /
-//! `rayon`). The coordinator uses it to run fold jobs and grid-search cells;
-//! `scope` provides structured fork-join over borrowed data via
-//! `crossbeam_utils::thread`.
+//! The parallel-execution substrate: a work-stealing thread pool plus
+//! structured fork-join primitives (the offline registry has no `tokio` /
+//! `rayon` / `crossbeam`, so everything here is built on `std`).
+//!
+//! Three layers, used by the rest of the system:
+//!
+//! - [`ThreadPool`] — a long-lived work-stealing pool (per-worker deques
+//!   plus a shared injector; idle workers steal from the back of their
+//!   siblings' deques) for `'static` jobs. [`global()`] is the
+//!   process-wide instance; the predict server fans connection handling
+//!   out on it.
+//! - [`scoped_map`] — structured fork-join over *borrowed* data: `f(i)`
+//!   for `i in 0..n` on scoped threads with atomic work claiming, results
+//!   in order. The coordinator's grid scheduler and job leader fan out
+//!   with this (their units borrow the dataset from the caller's stack,
+//!   which a `'static` pool cannot).
+//! - [`par_chunks_mut`] — deterministic parallel sweep over disjoint
+//!   chunks of one mutable slice. This is the primitive behind parallel
+//!   warm-start gradient initialisation: every element's arithmetic is
+//!   identical to the sequential loop (same per-element accumulation
+//!   order), so results are **bit-identical regardless of thread count**
+//!   — the invariant the paper's "same accuracy" guarantee rests on.
+//!
+//! Thread-count policy: [`parallelism()`] reads `ALPHASEED_THREADS` (≥1)
+//! or falls back to `std::thread::available_parallelism`. APIs take a
+//! `threads` argument where `0` means "auto" via [`effective_threads`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A classic channel-fed thread pool with graceful shutdown on drop.
+/// Process-wide parallelism: `ALPHASEED_THREADS` override, else the
+/// machine's available parallelism. Cached after first read.
+pub fn parallelism() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("ALPHASEED_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Resolve a user-facing `threads` knob: `0` = auto ([`parallelism`]),
+/// anything else is taken literally (min 1).
+pub fn effective_threads(requested: usize) -> usize {
+    if requested == 0 {
+        parallelism()
+    } else {
+        requested
+    }
+}
+
+/// The process-wide shared pool, sized by [`parallelism`]. Lives for the
+/// whole process; schedule through it rather than spawning ad-hoc pools
+/// so concurrent grid sweeps share one set of workers.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(parallelism()))
+}
+
+/// Shared state between the pool handle and its workers.
+struct PoolState {
+    /// One local deque per worker; owners pop the front, thieves steal
+    /// from the back.
+    locals: Vec<Mutex<VecDeque<Job>>>,
+    /// Overflow / external-submission queue, drained by every worker.
+    injector: Mutex<VecDeque<Job>>,
+    /// Wakes sleeping workers on submission and shutdown.
+    signal: Condvar,
+    sleep: Mutex<()>,
+    shutdown: AtomicBool,
+    /// Jobs submitted but not yet finished ([`ThreadPool::pending`]).
+    queued: AtomicUsize,
+    /// Jobs pushed but not yet claimed by any worker — the idle/sleep
+    /// predicate (a long-*running* job must not keep idle workers
+    /// spinning, so this is tracked separately from `queued`).
+    unclaimed: AtomicUsize,
+}
+
+impl PoolState {
+    /// Claim one job: own deque first (front = most recently queued for
+    /// this worker), then the injector, then steal from siblings' backs.
+    fn find_job(&self, me: usize) -> Option<Job> {
+        let job = self.try_pop(me);
+        if job.is_some() {
+            self.unclaimed.fetch_sub(1, Ordering::SeqCst);
+        }
+        job
+    }
+
+    fn try_pop(&self, me: usize) -> Option<Job> {
+        if let Some(job) = self.locals[me].lock().expect("pool queue poisoned").pop_front() {
+            return Some(job);
+        }
+        if let Some(job) = self.injector.lock().expect("pool injector poisoned").pop_front() {
+            return Some(job);
+        }
+        let n = self.locals.len();
+        for off in 1..n {
+            let victim = (me + off) % n;
+            if let Some(job) = self.locals[victim]
+                .lock()
+                .expect("pool queue poisoned")
+                .pop_back()
+            {
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+/// A work-stealing worker pool with graceful shutdown on drop (all
+/// submitted jobs run before the workers exit).
 pub struct ThreadPool {
-    tx: Option<Sender<Job>>,
+    state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+    /// Round-robin cursor for distributing `map` jobs across deques.
+    next_queue: AtomicUsize,
 }
 
 impl ThreadPool {
     /// Spawn `threads` workers (min 1).
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState {
+            locals: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            signal: Condvar::new(),
+            sleep: Mutex::new(()),
+            shutdown: AtomicBool::new(false),
+            queued: AtomicUsize::new(0),
+            unclaimed: AtomicUsize::new(0),
+        });
         let workers = (0..threads)
             .map(|i| {
-                let rx = Arc::clone(&rx);
-                let queued = Arc::clone(&queued);
+                let state = Arc::clone(&state);
                 std::thread::Builder::new()
                     .name(format!("alphaseed-worker-{i}"))
                     .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("pool receiver poisoned");
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
-                            }
-                            Err(_) => break, // sender dropped: shutdown
+                        if let Some(job) = state.find_job(i) {
+                            // A panicking job must not kill the worker (the
+                            // global pool lives for the whole process) or
+                            // leak the pending count. `map` still surfaces
+                            // the failure: the result slot never fills.
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            state.queued.fetch_sub(1, Ordering::SeqCst);
+                            continue;
+                        }
+                        if state.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Nothing found: sleep until a submission (the
+                        // timeout bounds any lost-wakeup window).
+                        let guard = state.sleep.lock().expect("pool sleep lock poisoned");
+                        if state.unclaimed.load(Ordering::SeqCst) == 0
+                            && !state.shutdown.load(Ordering::SeqCst)
+                        {
+                            let _ = state
+                                .signal
+                                .wait_timeout(guard, Duration::from_millis(10))
+                                .expect("pool sleep lock poisoned");
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
         ThreadPool {
-            tx: Some(tx),
+            state,
             workers,
-            queued,
+            next_queue: AtomicUsize::new(0),
         }
     }
 
@@ -60,21 +191,29 @@ impl ThreadPool {
 
     /// Jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
-        self.queued.load(Ordering::SeqCst)
+        self.state.queued.load(Ordering::SeqCst)
     }
 
-    /// Submit a job.
+    /// Submit a job through the shared injector.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.queued.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(f))
-            .expect("pool workers gone");
+        assert!(
+            !self.state.shutdown.load(Ordering::SeqCst),
+            "pool already shut down"
+        );
+        self.state.queued.fetch_add(1, Ordering::SeqCst);
+        self.state.unclaimed.fetch_add(1, Ordering::SeqCst);
+        self.state
+            .injector
+            .lock()
+            .expect("pool injector poisoned")
+            .push_back(Box::new(f));
+        self.state.signal.notify_one();
     }
 
     /// Run `f(i)` for i in 0..n across the pool and collect results in
-    /// order. Panics in jobs propagate as a collected error string.
+    /// order. Jobs are dealt round-robin onto the worker deques so an
+    /// imbalanced workload rebalances by stealing. Panics in jobs
+    /// surface as a panic here (the slot never fills).
     pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -85,13 +224,22 @@ impl ThreadPool {
         for i in 0..n {
             let f = Arc::clone(&f);
             let tx = tx.clone();
-            self.execute(move || {
+            let job: Job = Box::new(move || {
                 let out = f(i);
-                // Receiver may be dropped if caller panicked; ignore.
+                // Receiver may be dropped if the caller panicked; ignore.
                 let _ = tx.send((i, out));
             });
+            self.state.queued.fetch_add(1, Ordering::SeqCst);
+            self.state.unclaimed.fetch_add(1, Ordering::SeqCst);
+            let q = self.next_queue.fetch_add(1, Ordering::Relaxed) % self.state.locals.len();
+            self.state
+                .locals[q]
+                .lock()
+                .expect("pool queue poisoned")
+                .push_back(job);
         }
         drop(tx);
+        self.state.signal.notify_all();
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
         for (i, v) in rx {
             slots[i] = Some(v);
@@ -106,22 +254,24 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close channel; workers exit on recv error
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.signal.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// Structured fork-join over borrowed data: runs `f(i)` for i in 0..n on up
-/// to `threads` scoped threads and returns results in order. Unlike
-/// `ThreadPool::map`, closures may borrow from the caller's stack.
+/// Structured fork-join over borrowed data: runs `f(i)` for i in 0..n on
+/// up to `threads` scoped threads (atomic index claiming, so fast items
+/// don't wait for slow ones) and returns results in order. Unlike
+/// [`ThreadPool::map`], closures may borrow from the caller's stack.
 pub fn scoped_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Send + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
+    let threads = effective_threads(threads).min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
@@ -129,12 +279,12 @@ where
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     {
         let slots_ptr = SendPtr(slots.as_mut_ptr());
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for _ in 0..threads {
                 let f = &f;
                 let next = &next;
                 let slots_ptr = slots_ptr;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     // Force capture of the whole SendPtr wrapper (edition
                     // 2021 would otherwise capture only the raw-pointer
                     // field, which is not Send).
@@ -153,10 +303,60 @@ where
                     }
                 });
             }
-        })
-        .expect("scoped_map worker panicked");
+        });
     }
     slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// Deterministic parallel sweep over one mutable slice, split into
+/// `chunk`-sized pieces. `f(chunk_index, start, piece)` is called exactly
+/// once per piece, where `start` is the piece's offset into `data`.
+///
+/// Chunking only decides *which thread* computes an element, never the
+/// arithmetic performed for it — keep each element's computation
+/// self-contained (e.g. accumulate over a fixed-order index list) and the
+/// result is bit-identical to the sequential sweep for every `threads`
+/// value. All CV fast paths rely on this invariant; see
+/// `docs/ARCHITECTURE.md` §Parallel engine.
+pub fn par_chunks_mut<T, F>(threads: usize, data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Send + Sync,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = (data.len() + chunk - 1) / chunk;
+    let threads = effective_threads(threads).min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        for (c, piece) in data.chunks_mut(chunk).enumerate() {
+            f(c, c * chunk, piece);
+        }
+        return;
+    }
+    let mut parts: Vec<&mut [T]> = data.chunks_mut(chunk).collect();
+    let next = AtomicUsize::new(0);
+    let parts_ptr = SendPtr(parts.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            let parts_ptr = parts_ptr;
+            s.spawn(move || {
+                let parts_ptr = parts_ptr;
+                loop {
+                    let c = next.fetch_add(1, Ordering::SeqCst);
+                    if c >= n_chunks {
+                        break;
+                    }
+                    // SAFETY: chunk index c is claimed exactly once, the
+                    // `&mut [T]` entries are disjoint sub-slices, and the
+                    // scope joins before `parts` drops.
+                    let piece: &mut [T] = unsafe { &mut **parts_ptr.0.add(c) };
+                    f(c, c * chunk, piece);
+                }
+            });
+        }
+    });
+    drop(parts);
 }
 
 /// Raw pointer wrapper that asserts Send; used only with disjoint writes.
@@ -198,6 +398,37 @@ mod tests {
     }
 
     #[test]
+    fn stealing_rebalances_skewed_jobs() {
+        // One long job pinned to a deque should not serialise the rest:
+        // with 4 workers and one 50 ms job, 40 tiny jobs must be stolen
+        // and finished well before 40 × 50 ms.
+        let pool = ThreadPool::new(4);
+        let started = std::time::Instant::now();
+        let out = pool.map(41, |i| {
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            i
+        });
+        assert_eq!(out.len(), 41);
+        assert!(
+            started.elapsed() < Duration::from_millis(2000),
+            "stealing failed to rebalance: {:?}",
+            started.elapsed()
+        );
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(global().size() >= 1);
+        let out = global().map(8, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn scoped_map_borrows_stack_data() {
         let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
         let out = scoped_map(4, data.len(), |i| data[i] * 2.0);
@@ -217,5 +448,52 @@ mod tests {
         assert_eq!(pool.size(), 1);
         let out = pool.map(3, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_element() {
+        let mut data = vec![0u32; 103];
+        par_chunks_mut(4, &mut data, 10, |_c, start, piece| {
+            for (off, v) in piece.iter_mut().enumerate() {
+                *v = (start + off) as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_bit_identical_across_thread_counts() {
+        // A numerically non-trivial per-element reduction must give the
+        // same bits for 1, 2, and 8 threads.
+        let weights: Vec<f64> = (0..57).map(|j| ((j * 37) % 11) as f64 * 0.31).collect();
+        let run = |threads: usize| {
+            let mut g = vec![0.0f64; 41];
+            par_chunks_mut(threads, &mut g, 7, |_c, start, piece| {
+                for (off, v) in piece.iter_mut().enumerate() {
+                    let t = start + off;
+                    let mut acc = -1.0f64;
+                    for (j, w) in weights.iter().enumerate() {
+                        acc += w * ((t * j) as f64).sin();
+                    }
+                    *v = acc;
+                }
+            });
+            g
+        };
+        let g1 = run(1);
+        for threads in [2, 8] {
+            let gp = run(threads);
+            for (a, b) in g1.iter().zip(&gp) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert_eq!(effective_threads(3), 3);
+        assert!(effective_threads(0) >= 1);
     }
 }

@@ -1,0 +1,179 @@
+//! The parallel engine's contract: scheduling and thread counts may
+//! change *when* something is computed, never *what*. Sequential and
+//! parallel runs must agree bit-for-bit — alphas, biases, gradients,
+//! per-round iteration counts, and accuracies.
+
+use alphaseed::coordinator::{grid_search_opts, GridOptions};
+use alphaseed::cv::{run_kfold, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::{Kernel, KernelEval, SharedKernelCache};
+use alphaseed::seeding::Sir;
+use alphaseed::smo::{SmoParams, Solver};
+
+const CS: [f64; 2] = [2.0, 32.0];
+const GAMMAS: [f64; 2] = [0.1, 0.3];
+
+/// Per-cell results of a grid sweep, reduced to exact-comparable facts.
+fn facts(points: &[alphaseed::coordinator::GridPoint]) -> Vec<(u64, u64, u64, u64)> {
+    points
+        .iter()
+        .map(|p| {
+            (
+                p.c.to_bits(),
+                p.gamma.to_bits(),
+                p.accuracy.to_bits(),
+                p.iterations,
+            )
+        })
+        .collect()
+}
+
+/// A ≥4-cell (C, γ) grid swept sequentially (1 thread, no sharing) and
+/// concurrently (8 threads, shared per-γ row stores) must produce
+/// bit-identical per-cell accuracy and identical iteration counts.
+#[test]
+fn parallel_grid_sweep_is_bit_identical_to_sequential() {
+    let ds = synth::generate("heart", Some(150), 21);
+    let base = GridOptions {
+        k: 4,
+        seeder: "sir".into(),
+        rng_seed: 13,
+        ..Default::default()
+    };
+    let sequential = grid_search_opts(
+        &ds,
+        &CS,
+        &GAMMAS,
+        &GridOptions {
+            threads: 1,
+            share_rows: false,
+            ..base.clone()
+        },
+    );
+    let parallel = grid_search_opts(
+        &ds,
+        &CS,
+        &GAMMAS,
+        &GridOptions {
+            threads: 8,
+            share_rows: true,
+            ..base
+        },
+    );
+    assert_eq!(sequential.points.len(), 4);
+    assert_eq!(facts(&sequential.points), facts(&parallel.points));
+    // the winning cell must therefore agree too
+    assert_eq!(sequential.best().c, parallel.best().c);
+    assert_eq!(sequential.best().gamma, parallel.best().gamma);
+}
+
+/// Same contract for the warm-C scheduler: chains across γ in parallel,
+/// sequential C order within a chain.
+#[test]
+fn warm_c_grid_is_bit_identical_across_thread_counts() {
+    let ds = synth::generate("heart", Some(120), 3);
+    let run = |threads: usize| {
+        grid_search_opts(
+            &ds,
+            &CS,
+            &GAMMAS,
+            &GridOptions {
+                k: 3,
+                seeder: "sir".into(),
+                rng_seed: 7,
+                warm_c: true,
+                threads,
+                ..Default::default()
+            },
+        )
+    };
+    let seq = run(1);
+    let par = run(8);
+    assert_eq!(facts(&seq.points), facts(&par.points));
+}
+
+/// One seeded CV run with intra-run parallelism on (threads = 8, n large
+/// enough to engage the parallel gradient paths) must match the
+/// sequential run round by round.
+#[test]
+fn seeded_cv_rounds_identical_across_thread_counts() {
+    let ds = synth::generate("adult", Some(600), 5);
+    let run = |threads: usize| {
+        run_kfold(
+            &ds,
+            Kernel::rbf(0.5),
+            10.0,
+            4,
+            &Sir,
+            CvOptions {
+                rng_seed: 19,
+                threads,
+                ..Default::default()
+            },
+        )
+    };
+    let seq = run(1);
+    let par = run(8);
+    assert_eq!(seq.rounds.len(), par.rounds.len());
+    for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+        assert_eq!(a.iterations, b.iterations, "round {}", a.round);
+        assert_eq!(a.test_correct, b.test_correct, "round {}", a.round);
+        assert_eq!(a.n_sv, b.n_sv, "round {}", a.round);
+        assert_eq!(a.fell_back, b.fell_back, "round {}", a.round);
+    }
+    assert_eq!(seq.accuracy().to_bits(), par.accuracy().to_bits());
+}
+
+/// The solver level: warm-started solves through a shared row store and
+/// across thread counts return bit-identical alphas, bias, and gradient.
+#[test]
+fn warm_solver_alphas_bit_identical_with_shared_cache_and_threads() {
+    let ds = synth::generate("heart", Some(300), 11);
+    let eval = KernelEval::new(ds, Kernel::rbf(0.2));
+    let mut cold = Solver::new(eval.clone(), SmoParams::with_c(5.0));
+    let r0 = cold.solve();
+    assert!(r0.converged);
+
+    let solve = |threads: usize| {
+        let mut s = Solver::new(
+            eval.clone(),
+            SmoParams {
+                c: 5.0,
+                threads,
+                ..Default::default()
+            },
+        );
+        s.solve_from(r0.alpha.clone(), None)
+    };
+    let seq = solve(1);
+    let par = solve(8);
+    assert_eq!(seq.b.to_bits(), par.b.to_bits());
+    assert_eq!(seq.iterations, par.iterations);
+    for (a, b) in seq.alpha.iter().zip(&par.alpha) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in seq.g.iter().zip(&par.g) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Rows adopted from the shared store are the exact bits the local cache
+/// would have computed — under concurrency.
+#[test]
+fn shared_rows_exact_under_concurrency() {
+    let ds = synth::generate("heart", Some(200), 2);
+    let eval = KernelEval::new(ds, Kernel::rbf(0.25));
+    let shared = SharedKernelCache::with_byte_budget(eval.clone(), 32 << 20);
+    let n = eval.len();
+    let rows = alphaseed::util::pool::scoped_map(8, 4 * n, |t| {
+        let i = t % n;
+        (i, shared.row(i))
+    });
+    for (i, row) in rows {
+        let mut direct = vec![0.0f64; n];
+        eval.eval_row(i, &mut direct);
+        for (a, b) in row.iter().zip(&direct) {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+        }
+    }
+}
