@@ -4,10 +4,18 @@
 //! scale and prints the paper-shaped table. Scale via
 //! `ALPHASEED_BENCH_SCALE` (default 0.25 of the sandbox defaults; the
 //! EXPERIMENTS.md record uses `alphaseed experiment table1` at scale 1.0).
+//!
+//! Besides the human-readable table, the run emits a machine-readable
+//! `BENCH_cv.json` (override the path with `ALPHASEED_BENCH_OUT`): per
+//! seeder, the mean wall time per CV run with its init-vs-rest split,
+//! plus total iterations — the artifact CI uploads so the perf
+//! trajectory of the seeding chain is tracked per commit.
 
 use alphaseed::config::RunConfig;
 use alphaseed::coordinator::experiments;
 use alphaseed::util::bench::once;
+use alphaseed::util::json::Json;
+use std::collections::BTreeMap;
 
 fn main() {
     let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
@@ -44,4 +52,59 @@ fn main() {
         assert!(acc_diff < 1e-9, "{name}: accuracy diverged by {acc_diff}");
     }
     println!("shape checks passed: SIR ≤ cold iterations and identical accuracy on all datasets");
+
+    // Machine-readable record: per-seeder means over the dataset axis.
+    let mut seeders: BTreeMap<String, Json> = BTreeMap::new();
+    let names: Vec<String> = {
+        let mut v: Vec<String> = result.cells.iter().map(|c| c.seeder.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    for seeder in &names {
+        let cells: Vec<_> = result.cells.iter().filter(|c| &c.seeder == seeder).collect();
+        let n = cells.len().max(1) as f64;
+        let mean_init: f64 = cells
+            .iter()
+            .map(|c| c.report.total_init().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_rest: f64 = cells
+            .iter()
+            .map(|c| c.report.total_rest().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_total = mean_init + mean_rest;
+        let iterations: u64 = cells.iter().map(|c| c.report.total_iterations()).sum();
+        seeders.insert(
+            seeder.clone(),
+            Json::obj(vec![
+                ("mean_total_secs", Json::Num(mean_total)),
+                ("mean_init_secs", Json::Num(mean_init)),
+                ("mean_rest_secs", Json::Num(mean_rest)),
+                (
+                    "init_fraction",
+                    Json::Num(if mean_total > 0.0 {
+                        mean_init / mean_total
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("total_iterations", Json::Num(iterations as f64)),
+                ("cells", Json::Num(cells.len() as f64)),
+            ]),
+        );
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("table1_efficiency".into())),
+        ("scale", Json::Num(scale)),
+        ("k", Json::Num(cfg.k as f64)),
+        ("total_secs", Json::Num(total.as_secs_f64())),
+        ("per_seeder", Json::Obj(seeders)),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_cv.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

@@ -1,5 +1,6 @@
-//! Concurrent hyper-parameter grid search over (C, γ), each cell
-//! evaluated by seeded k-fold cross-validation.
+//! Concurrent hyper-parameter grid search, each cell evaluated by seeded
+//! k-fold cross-validation: (C, γ) for C-SVC ([`grid_search_opts`]) and
+//! (C, ε, γ) for ε-SVR ([`grid_search_svr`]).
 //!
 //! This is the workload that motivates the paper: model selection runs
 //! many cross-validations, so accelerating each one compounds. The
@@ -22,10 +23,11 @@
 //! what it computes — so per-cell accuracies and iteration counts are
 //! identical to a sequential sweep (asserted in `tests/parallel_identity.rs`).
 
-use crate::cv::{run_kfold, run_kfold_warm_c, CvOptions, WarmCOptions};
+use crate::cv::{run_kfold, run_kfold_svr, run_kfold_warm_c, CvOptions, WarmCOptions};
 use crate::data::Dataset;
 use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
 use crate::seeding::seeder_by_name;
+use crate::seeding::svr::svr_seeder_by_name;
 use crate::util::pool::{effective_threads, scoped_map};
 use std::sync::Arc;
 
@@ -257,6 +259,123 @@ fn warm_c_sweep(
     points
 }
 
+// ---- the (C, ε, γ) regression grid ----------------------------------------
+
+/// One evaluated ε-SVR grid cell.
+#[derive(Debug, Clone)]
+pub struct SvrGridPoint {
+    /// Penalty C of this cell.
+    pub c: f64,
+    /// Tube half-width ε of this cell.
+    pub epsilon: f64,
+    /// RBF kernel width γ of this cell.
+    pub gamma: f64,
+    /// Cross-validated mean squared error.
+    pub mse: f64,
+    /// Σ SMO iterations across the cell's CV rounds.
+    pub iterations: u64,
+    /// Wall time of the cell's CV run.
+    pub elapsed: std::time::Duration,
+}
+
+/// Result of an ε-SVR grid search over (C, ε, γ).
+#[derive(Debug, Clone)]
+pub struct SvrGridResult {
+    /// Evaluated cells in C-major, then ε, then γ order.
+    pub points: Vec<SvrGridPoint>,
+}
+
+impl SvrGridResult {
+    /// The cell with the lowest CV MSE (ties → smaller C, then wider ε,
+    /// then smaller γ: prefer the flatter model).
+    pub fn best(&self) -> &SvrGridPoint {
+        self.points
+            .iter()
+            .min_by(|a, b| {
+                a.mse
+                    .total_cmp(&b.mse)
+                    .then(a.c.total_cmp(&b.c))
+                    .then(b.epsilon.total_cmp(&a.epsilon))
+                    .then(a.gamma.total_cmp(&b.gamma))
+            })
+            .expect("empty grid")
+    }
+
+    /// Σ iterations over every cell.
+    pub fn total_iterations(&self) -> u64 {
+        self.points.iter().map(|p| p.iterations).sum()
+    }
+}
+
+/// Evaluate the (C, ε, γ) grid with seeded ε-SVR k-fold CV — the
+/// regression counterpart of [`grid_search_opts`], with the tube width as
+/// a third axis (ε changes the dual's linear term, so unlike C it cannot
+/// be warm-chained by rescaling; cells are independent units). Per-γ
+/// [`SharedKernelCache`]s are shared across all (C, ε) cells of that γ
+/// when `opts.share_rows` is set, exactly as in the classification grid.
+/// `opts.warm_c` is ignored. Points come back in C-major, then ε, then γ
+/// order regardless of execution order.
+pub fn grid_search_svr(
+    ds: &Dataset,
+    c_values: &[f64],
+    eps_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> SvrGridResult {
+    assert!(
+        !c_values.is_empty() && !eps_values.is_empty() && !gamma_values.is_empty(),
+        "empty grid"
+    );
+    assert!(ds.is_regression(), "grid_search_svr needs a regression dataset");
+    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
+        .iter()
+        .map(|&gamma| {
+            opts.share_rows.then(|| {
+                SharedKernelCache::with_byte_budget(
+                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
+                    opts.seed_cache_bytes,
+                )
+            })
+        })
+        .collect();
+
+    let cells: Vec<(usize, usize, usize)> = (0..c_values.len())
+        .flat_map(|ci| {
+            (0..eps_values.len())
+                .flat_map(move |ei| (0..gamma_values.len()).map(move |gi| (ci, ei, gi)))
+        })
+        .collect();
+    let points = scoped_map(opts.threads, cells.len(), |i| {
+        let (ci, ei, gi) = cells[i];
+        let (c, epsilon, gamma) = (c_values[ci], eps_values[ei], gamma_values[gi]);
+        let seeder = svr_seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown SVR seeder '{}'", opts.seeder));
+        let started = std::time::Instant::now();
+        let report = run_kfold_svr(
+            ds,
+            Kernel::rbf(gamma),
+            c,
+            epsilon,
+            opts.k,
+            seeder.as_ref(),
+            CvOptions {
+                rng_seed: opts.rng_seed,
+                shared_seed_cache: shares[gi].clone(),
+                ..Default::default()
+            },
+        );
+        SvrGridPoint {
+            c,
+            epsilon,
+            gamma,
+            mse: report.mse(),
+            iterations: report.total_iterations(),
+            elapsed: started.elapsed(),
+        }
+    });
+    SvrGridResult { points }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +473,57 @@ mod tests {
         );
         for (a, b) in with.points.iter().zip(&without.points) {
             assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.iterations, b.iterations);
+        }
+    }
+
+    #[test]
+    fn svr_grid_covers_cells_and_best_is_min_mse() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(80), 3);
+        let g = grid_search_svr(
+            &ds,
+            &[1.0, 10.0],
+            &[0.05, 0.2],
+            &[0.5],
+            &GridOptions {
+                k: 3,
+                seeder: "sir".into(),
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.points.len(), 4);
+        let best = g.best();
+        assert!(g.points.iter().all(|p| p.mse >= best.mse));
+        assert!(g.total_iterations() > 0);
+        // C-major, then ε, then γ ordering
+        assert_eq!((g.points[0].c, g.points[0].epsilon), (1.0, 0.05));
+        assert_eq!((g.points[1].c, g.points[1].epsilon), (1.0, 0.2));
+        assert_eq!((g.points[2].c, g.points[2].epsilon), (10.0, 0.05));
+    }
+
+    #[test]
+    fn svr_grid_shared_rows_do_not_change_results() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(60), 9);
+        let run = |share_rows: bool| {
+            grid_search_svr(
+                &ds,
+                &[5.0],
+                &[0.05],
+                &[0.3, 0.6],
+                &GridOptions {
+                    k: 3,
+                    seeder: "sir".into(),
+                    threads: 2,
+                    share_rows,
+                    ..Default::default()
+                },
+            )
+        };
+        let with = run(true);
+        let without = run(false);
+        for (a, b) in with.points.iter().zip(&without.points) {
+            assert_eq!(a.mse, b.mse);
             assert_eq!(a.iterations, b.iterations);
         }
     }

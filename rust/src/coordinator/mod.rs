@@ -21,6 +21,9 @@ mod grid;
 mod jobs;
 mod server;
 
-pub use grid::{grid_search, grid_search_opts, GridOptions, GridPoint, GridResult};
+pub use grid::{
+    grid_search, grid_search_opts, grid_search_svr, GridOptions, GridPoint, GridResult,
+    SvrGridPoint, SvrGridResult,
+};
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use server::PredictServer;

@@ -162,6 +162,7 @@ fn run_loo_from_full(
             iterations: result.iterations,
             test_correct: correct,
             test_total: test.len(),
+            sq_err: 0.0,
             fell_back: seed.fell_back,
             n_sv: result.n_sv,
         });

@@ -1,21 +1,27 @@
-//! Cross-validation drivers: the k-fold chain (paper §2–3), the
-//! leave-one-out protocol (supplementary §Figure 2), and the warm-start
-//! sweep across a C grid (Chu et al., composed with the fold chain).
+//! Cross-validation drivers: the k-fold chain (paper §2–3) for all three
+//! workloads — C-SVC, ε-SVR and one-class SVM — the leave-one-out
+//! protocol (supplementary §Figure 2), and the warm-start sweep across a
+//! C grid (Chu et al., composed with the fold chain).
 //!
 //! All drivers share two invariants:
 //!
 //! - the fold-to-fold seeding chain runs in order (round h seeds round
 //!   h+1) — that ordering *is* the paper's method;
-//! - the intra-round parallel paths (kernel-row blocks, warm-start
-//!   gradient sweeps; `threads` option) perform bit-identical arithmetic
-//!   for every thread count, so parallelism never changes a result.
+//! - seeding moves the solver's start, never its fixed point: per-fold
+//!   accuracies (C-SVC, one-class) are identical to cold-started CV and
+//!   per-fold MSE (ε-SVR) agrees to the solver's convergence tolerance.
+//!
+//! The C-SVC driver's intra-round parallel paths (kernel-row blocks,
+//! warm-start gradient sweeps; `threads` option) additionally perform
+//! bit-identical arithmetic for every thread count, so parallelism never
+//! changes a result.
 
 mod kfold;
 mod loo;
 mod report;
 mod warmc;
 
-pub use kfold::{run_kfold, CvOptions};
+pub use kfold::{run_kfold, run_kfold_oneclass, run_kfold_svr, CvOptions};
 pub use loo::{run_loo, LooOptions};
 pub use report::{CvReport, RoundStat};
 pub use warmc::{rescale_alpha, run_kfold_warm_c, WarmCOptions};

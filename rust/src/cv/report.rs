@@ -16,10 +16,17 @@ pub struct RoundStat {
     pub rest: Duration,
     /// SMO iterations of this round's solve.
     pub iterations: u64,
-    /// Correctly classified instances of this round's test fold.
+    /// Correctly classified instances of this round's test fold. For
+    /// ε-SVR rounds this counts predictions within the ε-tube of the
+    /// target (the natural "correct" notion for tube regression); for
+    /// one-class rounds it counts agreement with the ground-truth
+    /// inlier/outlier labels.
     pub test_correct: usize,
     /// Size of this round's test fold.
     pub test_total: usize,
+    /// Sum of squared test-fold residuals Σ(f(x) − z)² for ε-SVR rounds;
+    /// 0 for classification and one-class rounds.
+    pub sq_err: f64,
     /// The seeder gave up and fell back to cold start this round.
     pub fell_back: bool,
     /// Support vectors in this round's model.
@@ -75,6 +82,31 @@ impl CvReport {
         }
     }
 
+    /// Pooled cross-validation mean squared error for ε-SVR runs:
+    /// Σ per-round squared residuals / Σ tested instances. 0 for
+    /// classification runs (whose rounds carry no squared error).
+    pub fn mse(&self) -> f64 {
+        let sq: f64 = self.rounds.iter().map(|r| r.sq_err).sum();
+        let total: usize = self.rounds.iter().map(|r| r.test_total).sum();
+        if total == 0 {
+            0.0
+        } else {
+            sq / total as f64
+        }
+    }
+
+    /// Fraction of total elapsed time spent on alpha initialisation —
+    /// the paper's "init vs the rest" split as a single ratio. 0 when
+    /// nothing was measured.
+    pub fn init_fraction(&self) -> f64 {
+        let total = self.total_elapsed().as_secs_f64();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.total_init().as_secs_f64() / total
+        }
+    }
+
     /// Rounds where the seeder fell back to cold start.
     pub fn fallbacks(&self) -> usize {
         self.rounds.iter().filter(|r| r.fell_back).count()
@@ -109,6 +141,7 @@ mod tests {
                     iterations: 500,
                     test_correct: 8,
                     test_total: 10,
+                    sq_err: 0.5,
                     fell_back: false,
                     n_sv: 5,
                 },
@@ -119,6 +152,7 @@ mod tests {
                     iterations: 200,
                     test_correct: 9,
                     test_total: 10,
+                    sq_err: 0.25,
                     fell_back: false,
                     n_sv: 6,
                 },
@@ -129,6 +163,7 @@ mod tests {
                     iterations: 250,
                     test_correct: 7,
                     test_total: 10,
+                    sq_err: 0.15,
                     fell_back: true,
                     n_sv: 6,
                 },
@@ -145,6 +180,10 @@ mod tests {
         assert_eq!(r.total_iterations(), 950);
         assert!((r.accuracy() - 0.8).abs() < 1e-12);
         assert_eq!(r.fallbacks(), 1);
+        // Σ sq_err = 0.9 over 30 tested instances
+        assert!((r.mse() - 0.03).abs() < 1e-12);
+        // init 10ms of 230ms total
+        assert!((r.init_fraction() - 10.0 / 230.0).abs() < 1e-9);
     }
 
     #[test]

@@ -194,6 +194,7 @@ pub fn run_kfold_warm_c(
                 iterations: result.iterations,
                 test_correct: correct,
                 test_total: test.len(),
+                sq_err: 0.0,
                 fell_back,
                 n_sv: result.n_sv,
             });

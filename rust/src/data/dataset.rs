@@ -1,15 +1,28 @@
-//! A labelled binary-classification dataset.
+//! A labelled dataset: binary classification, ε-regression, or one-class.
 
 use super::matrix::DataMatrix;
 
-/// Binary-labelled dataset: features + labels in {+1, −1} + cached squared
-/// row norms (the RBF kernel uses ‖xᵢ−xⱼ‖² = ‖xᵢ‖² + ‖xⱼ‖² − 2xᵢ·xⱼ, so
-/// norms are computed once here).
+/// A dataset bound to one of the three LibSVM core tasks.
+///
+/// - **Classification (C-SVC)** — labels in {+1, −1} live in [`Dataset::y`]
+///   and [`Dataset::targets`] is empty.
+/// - **Regression (ε-SVR)** — real-valued targets live in
+///   [`Dataset::targets`]; `y` is filled with a +1 placeholder so every
+///   label-agnostic consumer (kernel evaluation, fold bookkeeping) keeps
+///   working unchanged.
+/// - **One-class** — trained on features only; `y` may carry ±1
+///   *ground-truth* inlier/outlier labels used purely for evaluation.
+///
+/// Squared row norms are cached at construction (the RBF kernel uses
+/// ‖xᵢ−xⱼ‖² = ‖xᵢ‖² + ‖xⱼ‖² − 2xᵢ·xⱼ, so norms are computed once here).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Feature matrix (dense or CSR sparse), one instance per row.
     pub x: DataMatrix,
-    /// Labels, each +1.0 or −1.0.
+    /// Labels, each +1.0 or −1.0 (placeholder +1.0 for regression data).
     pub y: Vec<f64>,
+    /// Real-valued regression targets; empty for classification/one-class.
+    pub targets: Vec<f64>,
     /// ‖xᵢ‖², one per row.
     pub sq_norms: Vec<f64>,
     /// Human-readable name (used in experiment tables).
@@ -17,6 +30,7 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Classification dataset: features + ±1 labels.
     pub fn new(name: impl Into<String>, x: DataMatrix, y: Vec<f64>) -> Dataset {
         assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
         for &label in &y {
@@ -29,19 +43,46 @@ impl Dataset {
         Dataset {
             x,
             y,
+            targets: Vec::new(),
             sq_norms,
             name: name.into(),
         }
     }
 
+    /// Regression dataset: features + real-valued targets. `y` is filled
+    /// with +1 placeholders so kernel and fold code stay label-agnostic.
+    pub fn regression(name: impl Into<String>, x: DataMatrix, targets: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows(), targets.len(), "feature/target count mismatch");
+        for &z in &targets {
+            assert!(z.is_finite(), "targets must be finite, got {z}");
+        }
+        let sq_norms = (0..x.rows()).map(|i| x.row_sq_norm(i)).collect();
+        let y = vec![1.0; targets.len()];
+        Dataset {
+            x,
+            y,
+            targets,
+            sq_norms,
+            name: name.into(),
+        }
+    }
+
+    /// True when this dataset carries regression targets (ε-SVR task).
+    pub fn is_regression(&self) -> bool {
+        !self.targets.is_empty()
+    }
+
+    /// Number of instances.
     pub fn len(&self) -> usize {
         self.y.len()
     }
 
+    /// True when the dataset holds no instances.
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }
 
+    /// Feature dimensionality.
     pub fn dim(&self) -> usize {
         self.x.cols()
     }
@@ -51,11 +92,18 @@ impl Dataset {
         self.y.iter().filter(|&&l| l > 0.0).count()
     }
 
-    /// Subset by row indices (copies).
+    /// Subset by row indices (copies). Regression targets, when present,
+    /// are carried through the selection.
     pub fn select(&self, idx: &[usize]) -> Dataset {
         let x = self.x.select_rows(idx);
-        let y = idx.iter().map(|&i| self.y[i]).collect();
-        Dataset::new(format!("{}[{}]", self.name, idx.len()), x, y)
+        let name = format!("{}[{}]", self.name, idx.len());
+        if self.is_regression() {
+            let targets = idx.iter().map(|&i| self.targets[i]).collect();
+            Dataset::regression(name, x, targets)
+        } else {
+            let y = idx.iter().map(|&i| self.y[i]).collect();
+            Dataset::new(name, x, y)
+        }
     }
 }
 
@@ -99,6 +147,37 @@ mod tests {
             "bad",
             DataMatrix::dense(1, 1, vec![1.0]),
             vec![0.5],
+        );
+    }
+
+    #[test]
+    fn regression_carries_targets() {
+        let d = Dataset::regression(
+            "reg",
+            DataMatrix::dense(3, 1, vec![0.0, 1.0, 2.0]),
+            vec![0.5, -1.25, 3.0],
+        );
+        assert!(d.is_regression());
+        assert_eq!(d.y, vec![1.0, 1.0, 1.0]); // placeholder labels
+        let s = d.select(&[2, 0]);
+        assert!(s.is_regression());
+        assert_eq!(s.targets, vec![3.0, 0.5]);
+        assert_eq!(s.sq_norms, vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn classification_has_no_targets() {
+        assert!(!tiny().is_regression());
+        assert!(tiny().select(&[0, 1]).targets.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "targets must be finite")]
+    fn regression_rejects_nan_targets() {
+        Dataset::regression(
+            "bad",
+            DataMatrix::dense(1, 1, vec![1.0]),
+            vec![f64::NAN],
         );
     }
 }

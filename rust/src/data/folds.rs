@@ -20,6 +20,7 @@ use crate::util::rng::Pcg32;
 /// class balance — matching LibSVM's `svm_cross_validation` behaviour.
 #[derive(Debug, Clone)]
 pub struct FoldPlan {
+    /// Number of folds.
     pub k: usize,
     /// folds[f] = sorted instance indices of fold f.
     pub folds: Vec<Vec<usize>>,
@@ -73,6 +74,26 @@ impl FoldPlan {
         }
     }
 
+    /// Unstratified k-fold split of `0..n`, deterministic under `seed` —
+    /// the partition for **regression** (ε-SVR) and one-class workloads,
+    /// where there is no ±1 label to stratify on. Fold sizes differ by at
+    /// most 1, matching the stratified plan's balance guarantee.
+    pub fn random(n: usize, k: usize, seed: u64) -> FoldPlan {
+        assert!(k >= 2, "k must be >= 2, got {k}");
+        assert!(k <= n, "k={k} exceeds dataset size {n}");
+        let mut rng = Pcg32::new(seed, 0xF01D5);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &idx) in order.iter().enumerate() {
+            folds[i % k].push(idx);
+        }
+        for f in folds.iter_mut() {
+            f.sort_unstable();
+        }
+        FoldPlan { k, folds, n }
+    }
+
     /// Build from explicit folds (each a sorted index list into 0..n).
     /// Used by callers with their own stratification (e.g. multi-class
     /// one-vs-one, which stratifies on the full label set and projects).
@@ -92,6 +113,7 @@ impl FoldPlan {
         }
     }
 
+    /// Total number of instances partitioned by this plan.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -252,5 +274,24 @@ mod tests {
     #[should_panic(expected = "k must be >= 2")]
     fn rejects_k1() {
         FoldPlan::stratified(&ds(10, 0.5), 1, 0);
+    }
+
+    #[test]
+    fn random_plan_partitions_exactly() {
+        let plan = FoldPlan::random(103, 10, 7);
+        let mut all: Vec<usize> = plan.folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        let sizes: Vec<usize> = plan.folds.iter().map(|f| f.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "sizes {sizes:?}");
+        // deterministic under seed, different across seeds
+        assert_eq!(plan.folds, FoldPlan::random(103, 10, 7).folds);
+        assert_ne!(plan.folds, FoldPlan::random(103, 10, 8).folds);
+        // transitions work exactly as for stratified plans
+        let t = plan.transition(0);
+        let mut union: Vec<usize> = t.added.iter().chain(t.shared.iter()).copied().collect();
+        union.sort_unstable();
+        assert_eq!(union, plan.train_indices(1));
     }
 }

@@ -10,10 +10,19 @@ use super::matrix::{CsrMatrix, DataMatrix};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+/// Errors from reading or parsing a LibSVM-format file.
 #[derive(Debug)]
 pub enum LibsvmError {
+    /// Underlying I/O failure.
     Io(std::io::Error),
-    Parse { line: usize, msg: String },
+    /// Malformed line.
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// The file held no instances.
     Empty,
 }
 

@@ -8,11 +8,15 @@
 /// Compressed sparse row matrix, f32 values, u32 column indices.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
+    /// Number of rows (instances).
     pub rows: usize,
+    /// Number of columns (features).
     pub cols: usize,
     /// Row i occupies values[indptr[i]..indptr[i+1]].
     pub indptr: Vec<usize>,
+    /// Column index of each stored value, sorted within a row.
     pub indices: Vec<u32>,
+    /// Non-zero values, row-major.
     pub values: Vec<f32>,
 }
 
@@ -50,6 +54,7 @@ impl CsrMatrix {
         (&self.indices[s..e], &self.values[s..e])
     }
 
+    /// Number of stored non-zeros.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -104,19 +109,25 @@ pub fn sparse_dot(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32]) -> f64 {
 pub enum DataMatrix {
     /// Row-major dense: data[i*cols..(i+1)*cols].
     Dense {
+        /// Number of rows (instances).
         rows: usize,
+        /// Number of columns (features).
         cols: usize,
+        /// Row-major values, `rows * cols` long.
         data: Vec<f32>,
     },
+    /// CSR sparse storage (Adult/Webdata-style binary features).
     Sparse(CsrMatrix),
 }
 
 impl DataMatrix {
+    /// Build a dense matrix from row-major values.
     pub fn dense(rows: usize, cols: usize, data: Vec<f32>) -> DataMatrix {
         assert_eq!(data.len(), rows * cols);
         DataMatrix::Dense { rows, cols, data }
     }
 
+    /// Number of rows (instances).
     pub fn rows(&self) -> usize {
         match self {
             DataMatrix::Dense { rows, .. } => *rows,
@@ -124,6 +135,7 @@ impl DataMatrix {
         }
     }
 
+    /// Number of columns (features).
     pub fn cols(&self) -> usize {
         match self {
             DataMatrix::Dense { cols, .. } => *cols,
@@ -131,6 +143,7 @@ impl DataMatrix {
         }
     }
 
+    /// True for CSR storage.
     pub fn is_sparse(&self) -> bool {
         matches!(self, DataMatrix::Sparse(_))
     }

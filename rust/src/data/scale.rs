@@ -12,7 +12,9 @@ use super::matrix::DataMatrix;
 /// split (fit-on-train / apply-on-test to avoid leakage).
 #[derive(Debug, Clone)]
 pub struct ScaleParams {
+    /// Target range lower bound.
     pub lo: f32,
+    /// Target range upper bound.
     pub hi: f32,
     /// Per-feature (min, max) over the fitted data.
     pub feature_range: Vec<(f32, f32)>,
@@ -78,6 +80,8 @@ impl ScaleParams {
     /// Scaling generally destroys sparsity (zero maps to a non-zero unless
     /// lo ≤ 0 ≤ hi maps zero to zero only when mn = 0); we keep CSR only if
     /// zeros are preserved, i.e. every feature's min is exactly 0 and lo=0.
+    /// Regression targets, when present, are carried through unscaled
+    /// (only features are affine-mapped).
     pub fn apply(&self, ds: &Dataset) -> Dataset {
         let zero_preserved =
             self.lo == 0.0 && self.feature_range.iter().all(|&(mn, _)| mn == 0.0);
@@ -92,10 +96,9 @@ impl ScaleParams {
                             .collect()
                     })
                     .collect();
-                Dataset::new(
-                    ds.name.clone(),
+                rebuild(
+                    ds,
                     DataMatrix::Sparse(super::matrix::CsrMatrix::from_rows(m.cols, &rows)),
-                    ds.y.clone(),
                 )
             }
             _ => {
@@ -106,13 +109,19 @@ impl ScaleParams {
                     .enumerate()
                     .map(|(flat, &v)| self.scale_one(flat % d, v))
                     .collect();
-                Dataset::new(
-                    ds.name.clone(),
-                    DataMatrix::dense(ds.len(), d, scaled),
-                    ds.y.clone(),
-                )
+                rebuild(ds, DataMatrix::dense(ds.len(), d, scaled))
             }
         }
+    }
+}
+
+/// Rebuild `ds` around scaled features, preserving the task kind
+/// (labels for classification, targets for regression).
+fn rebuild(ds: &Dataset, x: DataMatrix) -> Dataset {
+    if ds.is_regression() {
+        Dataset::regression(ds.name.clone(), x, ds.targets.clone())
+    } else {
+        Dataset::new(ds.name.clone(), x, ds.y.clone())
     }
 }
 

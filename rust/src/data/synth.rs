@@ -25,7 +25,9 @@ use crate::util::rng::Pcg32;
 /// SVM hyper-parameters, as in the paper's Table 2.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hyper {
+    /// Penalty C (box constraint upper bound).
     pub c: f64,
+    /// RBF kernel width γ.
     pub gamma: f64,
 }
 
@@ -247,6 +249,112 @@ fn gen_cluster_parity(s: &SynthSpec, n: usize, seed: u64) -> Dataset {
     Dataset::new(s.name, DataMatrix::dense(n, d, data), y)
 }
 
+// ---- regression (ε-SVR) and one-class analogues ---------------------------
+
+/// Canonical names of the synthetic regression datasets accepted by
+/// [`generate_regression`].
+pub const REGRESSION_DATASETS: &[&str] = &["sinc", "friedman1"];
+
+/// Default hyper-parameters (C, γ) plus the tube width ε for a synthetic
+/// regression dataset — the ε-SVR analogue of the classification
+/// [`spec`] lookup. Returns `None` for unknown names.
+pub fn regression_hyper(name: &str) -> Option<(Hyper, f64)> {
+    match name {
+        "sinc" => Some((Hyper { c: 10.0, gamma: 0.5 }, 0.05)),
+        "friedman1" => Some((Hyper { c: 10.0, gamma: 0.8 }, 0.1)),
+        _ => None,
+    }
+}
+
+/// Generate a synthetic regression dataset (real-valued targets, stored in
+/// [`Dataset::targets`]). Deterministic under `seed`.
+///
+/// - `"sinc"` — the classic 1-d SVR benchmark z = sin(πx)/(πx) + noise on
+///   x ∈ [−4, 4]; smooth with a narrow useful tube (default n = 300).
+/// - `"friedman1"` — Friedman #1: 10 features on \[0,1\], 5 informative:
+///   z ∝ 10·sin(πx₁x₂) + 20(x₃−½)² + 10x₄ + 5x₅ + noise, rescaled to
+///   roughly \[−1, 1\] (default n = 400).
+pub fn generate_regression(name: &str, n: Option<usize>, seed: u64) -> Dataset {
+    match name {
+        "sinc" => gen_sinc(n.unwrap_or(300), seed),
+        "friedman1" => gen_friedman1(n.unwrap_or(400), seed),
+        other => panic!("unknown regression dataset '{other}'"),
+    }
+}
+
+fn gen_sinc(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0x51C);
+    let mut data = Vec::with_capacity(n);
+    let mut z = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = rng.uniform(-4.0, 4.0);
+        let t = std::f64::consts::PI * x;
+        let sinc = if t.abs() < 1e-12 { 1.0 } else { t.sin() / t };
+        data.push(x as f32);
+        z.push(sinc + rng.normal() * 0.05);
+    }
+    Dataset::regression("sinc", DataMatrix::dense(n, 1, data), z)
+}
+
+fn gen_friedman1(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 0xF21ED);
+    let d = 10;
+    let mut data = Vec::with_capacity(n * d);
+    let mut z = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, 1.0)).collect();
+        for &v in &x {
+            data.push(v as f32);
+        }
+        let raw = 10.0 * (std::f64::consts::PI * x[0] * x[1]).sin()
+            + 20.0 * (x[2] - 0.5).powi(2)
+            + 10.0 * x[3]
+            + 5.0 * x[4]
+            + rng.normal();
+        // raw spans ≈ [0, 30]; centre and rescale to ≈ [−1, 1]
+        z.push((raw - 14.0) / 15.0);
+    }
+    Dataset::regression("friedman1", DataMatrix::dense(n, d, data), z)
+}
+
+/// Generate a one-class (anomaly-detection) dataset: a 2-d Gaussian blob
+/// of inliers (ground-truth label +1) contaminated with `outlier_frac`
+/// uniform far-field outliers (label −1). The labels are evaluation
+/// ground truth only — one-class training consumes features alone.
+/// Deterministic under `seed`; default n = 400.
+pub fn generate_outliers(n: Option<usize>, outlier_frac: f64, seed: u64) -> Dataset {
+    assert!(
+        (0.0..1.0).contains(&outlier_frac),
+        "outlier_frac must be in [0, 1), got {outlier_frac}"
+    );
+    let n = n.unwrap_or(400);
+    let mut rng = Pcg32::new(seed, 0x0C1A55);
+    let d = 2;
+    let mut data = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.bernoulli(outlier_frac) {
+            // far-field outlier: uniform over a wide box, excluded from the
+            // blob's 3σ core (radius 1.2 = 3 × the 0.4-σ inliers) by
+            // resampling — the detection task is cleanly separable
+            loop {
+                let (a, b) = (rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0));
+                if a * a + b * b > 1.2 * 1.2 {
+                    data.push(a as f32);
+                    data.push(b as f32);
+                    break;
+                }
+            }
+            y.push(-1.0);
+        } else {
+            data.push((rng.normal() * 0.4) as f32);
+            data.push((rng.normal() * 0.4) as f32);
+            y.push(1.0);
+        }
+    }
+    Dataset::new("outliers", DataMatrix::dense(n, d, data), y)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,5 +454,50 @@ mod tests {
         assert!(spec("adult").is_some());
         assert!(spec("nope").is_none());
         assert_eq!(spec("madelon").unwrap().hyper.c, 1.0);
+    }
+
+    #[test]
+    fn regression_generators() {
+        for &name in REGRESSION_DATASETS {
+            let ds = generate_regression(name, Some(120), 3);
+            assert_eq!(ds.len(), 120, "{name}");
+            assert!(ds.is_regression(), "{name}");
+            assert!(regression_hyper(name).is_some(), "{name}");
+            // deterministic
+            let again = generate_regression(name, Some(120), 3);
+            assert_eq!(ds.targets, again.targets, "{name}");
+            assert_eq!(ds.x.to_dense_vec(), again.x.to_dense_vec(), "{name}");
+        }
+        assert!(regression_hyper("nope").is_none());
+    }
+
+    #[test]
+    fn sinc_targets_track_the_function() {
+        let ds = generate_regression("sinc", Some(500), 9);
+        for i in 0..ds.len() {
+            let x = ds.x.dense_row(i)[0] as f64;
+            let t = std::f64::consts::PI * x;
+            let sinc = if t.abs() < 1e-12 { 1.0 } else { t.sin() / t };
+            assert!(
+                (ds.targets[i] - sinc).abs() < 0.3,
+                "target {} far from sinc({x}) = {sinc}",
+                ds.targets[i]
+            );
+        }
+    }
+
+    #[test]
+    fn outlier_generator_contaminates_as_asked() {
+        let ds = generate_outliers(Some(1000), 0.1, 5);
+        assert!(!ds.is_regression());
+        let frac = ds.y.iter().filter(|&&l| l < 0.0).count() as f64 / ds.len() as f64;
+        assert!((frac - 0.1).abs() < 0.04, "outlier fraction {frac}");
+        // outliers sit outside the inlier core by construction
+        for i in 0..ds.len() {
+            let r = ds.sq_norms[i];
+            if ds.y[i] < 0.0 {
+                assert!(r > 1.2 * 1.2 - 1e-3, "outlier {i} inside the core: r² = {r}");
+            }
+        }
     }
 }

@@ -25,12 +25,16 @@ use std::sync::Arc;
 /// Cache hit/miss counters (ablation A2 plots these).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CacheStats {
+    /// Row requests served from a resident slot.
     pub hits: u64,
+    /// Row requests that had to compute (or adopt) the row.
     pub misses: u64,
+    /// Resident rows displaced to make room.
     pub evictions: u64,
 }
 
 impl CacheStats {
+    /// hits / (hits + misses); 0 when nothing was requested yet.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -75,6 +79,8 @@ impl KernelCache {
         Self::with_row_capacity(eval, rows)
     }
 
+    /// Cache holding at most `capacity_rows` rows (minimum 2, so one SMO
+    /// iteration's pair always fits).
     pub fn with_row_capacity(eval: KernelEval, capacity_rows: usize) -> KernelCache {
         KernelCache {
             eval,
@@ -97,22 +103,27 @@ impl KernelCache {
         cache
     }
 
+    /// The bound evaluator (dataset + kernel).
     pub fn eval(&self) -> &KernelEval {
         &self.eval
     }
 
+    /// Number of instances (row length).
     pub fn n(&self) -> usize {
         self.eval.len()
     }
 
+    /// Snapshot of the hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Maximum number of resident rows.
     pub fn capacity_rows(&self) -> usize {
         self.capacity_rows
     }
 
+    /// Rows currently resident.
     pub fn cached_rows(&self) -> usize {
         self.map.len()
     }

@@ -7,16 +7,32 @@ use crate::data::Dataset;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Kernel {
     /// K(x,z) = exp(−γ‖x−z‖²)
-    Rbf { gamma: f64 },
+    Rbf {
+        /// Width parameter γ.
+        gamma: f64,
+    },
     /// K(x,z) = x·z
     Linear,
     /// K(x,z) = (γ·x·z + coef0)^degree
-    Poly { gamma: f64, coef0: f64, degree: u32 },
+    Poly {
+        /// Scale on the dot product.
+        gamma: f64,
+        /// Additive constant.
+        coef0: f64,
+        /// Polynomial degree.
+        degree: u32,
+    },
     /// K(x,z) = tanh(γ·x·z + coef0)
-    Sigmoid { gamma: f64, coef0: f64 },
+    Sigmoid {
+        /// Scale on the dot product.
+        gamma: f64,
+        /// Additive constant.
+        coef0: f64,
+    },
 }
 
 impl Kernel {
+    /// Shorthand for [`Kernel::Rbf`].
     pub fn rbf(gamma: f64) -> Kernel {
         Kernel::Rbf { gamma }
     }
@@ -57,19 +73,24 @@ impl Kernel {
 /// values natively (f64 accumulation, matching LibSVM's double math).
 #[derive(Debug, Clone)]
 pub struct KernelEval {
+    /// The dataset kernel values are computed over.
     pub ds: Dataset,
+    /// The kernel function.
     pub kernel: Kernel,
 }
 
 impl KernelEval {
+    /// Bind `kernel` to `ds`.
     pub fn new(ds: Dataset, kernel: Kernel) -> KernelEval {
         KernelEval { ds, kernel }
     }
 
+    /// Number of instances.
     pub fn len(&self) -> usize {
         self.ds.len()
     }
 
+    /// True when the dataset holds no instances.
     pub fn is_empty(&self) -> bool {
         self.ds.is_empty()
     }

@@ -5,14 +5,18 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! - **Layer 3 (this crate)** — the cross-validation coordinator: fold
-//!   scheduling, a LibSVM-equivalent SMO solver, and the paper's three
-//!   alpha-seeding algorithms (ATO, MIR, SIR) plus the leave-one-out
-//!   baselines (AVG, TOP). A parallel execution engine (work-stealing
-//!   pool in `util::pool`, sharded `kernel::SharedKernelCache`,
-//!   concurrent grid scheduler in `coordinator`) runs grid sweeps and
-//!   warm-start gradient setup across all cores while keeping every
-//!   result bit-identical to the sequential path — see
-//!   `docs/ARCHITECTURE.md`.
+//!   scheduling, a LibSVM-equivalent SMO solver family covering the three
+//!   core formulations (binary C-SVC, ε-SVR over the doubled α/α* dual,
+//!   one-class SVM), and the paper's three alpha-seeding algorithms (ATO,
+//!   MIR, SIR) plus the leave-one-out baselines (AVG, TOP) — with the
+//!   seeding rules carried over to the ε-SVR pair variables and the
+//!   one-class constraint (see `docs/SEEDING.md` for the paper-to-module
+//!   map and the transfer derivations). A parallel execution engine
+//!   (work-stealing pool in `util::pool`, sharded
+//!   `kernel::SharedKernelCache`, concurrent grid scheduler in
+//!   `coordinator`) runs grid sweeps and warm-start gradient setup across
+//!   all cores while keeping every result bit-identical to the sequential
+//!   path — see `docs/ARCHITECTURE.md`.
 //! - **Layer 2 (python/compile)** — JAX compute graphs (kernel-row blocks,
 //!   kernel matvec) AOT-lowered to HLO text at build time.
 //! - **Layer 1 (python/compile/kernels)** — Pallas kernels for the Gaussian
@@ -23,14 +27,41 @@
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
+//!
+//! ## Quickstart
+//!
+//! Seeded k-fold cross-validation of a binary C-SVC (the paper's Table 1
+//! protocol), then the same chain on an ε-SVR workload:
+//!
+//! ```
+//! use alphaseed::cv::{run_kfold, run_kfold_svr, CvOptions};
+//! use alphaseed::data::synth;
+//! use alphaseed::kernel::Kernel;
+//! use alphaseed::seeding::{svr::SvrSir, Sir};
+//!
+//! // C-SVC: SIR-seeded 3-fold CV on the heart analogue.
+//! let ds = synth::generate("heart", Some(60), 42);
+//! let report = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 3, &Sir, CvOptions::default());
+//! assert_eq!(report.rounds.len(), 3);
+//! assert!(report.accuracy() >= 0.0);
+//!
+//! // ε-SVR: the same fold chain seeds the (α − α*) pairs.
+//! let reg = synth::generate_regression("sinc", Some(60), 42);
+//! let svr = run_kfold_svr(&reg, Kernel::rbf(0.5), 10.0, 0.1, 3, &SvrSir, CvOptions::default());
+//! assert_eq!(svr.rounds.len(), 3);
+//! assert!(svr.mse().is_finite());
+//! ```
 
 pub mod config;
 pub mod coordinator;
-// The CV drivers and seeding algorithms are the paper-facing API; keep
-// their rustdoc complete (`cargo doc` fails the build on a bare item).
+// The paper-facing API layers keep their rustdoc complete (`cargo doc`
+// fails the build on a bare item): the CV drivers and seeding algorithms,
+// plus the solver, kernel and dataset substrate they sit on.
 #[deny(missing_docs)]
 pub mod cv;
+#[deny(missing_docs)]
 pub mod data;
+#[deny(missing_docs)]
 pub mod kernel;
 pub mod linalg;
 pub mod metrics;
@@ -38,6 +69,7 @@ pub mod multiclass;
 pub mod runtime;
 #[deny(missing_docs)]
 pub mod seeding;
+#[deny(missing_docs)]
 pub mod smo;
 pub mod testing;
 pub mod util;

@@ -17,7 +17,7 @@ use alphaseed::kernel::{Kernel, KernelEval};
 use alphaseed::metrics::Table;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
 use alphaseed::smo::{Model, SmoParams, Solver};
-use alphaseed::util::cli::Args;
+use alphaseed::util::cli::{Args, Task};
 use alphaseed::util::timing::fmt_secs;
 use anyhow::{bail, Context, Result};
 
@@ -62,7 +62,9 @@ fn print_help() {
          USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe> [options]\n\
          \n\
          common options:\n\
-           --dataset <name>    adult|heart|madelon|mnist|webdata (synthetic analogue)\n\
+           --task <t>          csvc|svr|oneclass               (default csvc)\n\
+           --dataset <name>    csvc: adult|heart|madelon|mnist|webdata\n\
+                               svr:  sinc|friedman1 (synthetic regression)\n\
            --data <file>       LibSVM-format file instead of a synthetic analogue\n\
            --n <int>           override analogue cardinality\n\
            --c <f> --gamma <f> hyper-parameters (defaults: paper Table 2)\n\
@@ -70,9 +72,14 @@ fn print_help() {
            --k <int>           folds                           (default 10)\n\
            --backend <b>       native|xla                      (default native)\n\
            --seed <int>        RNG seed                        (default 42)\n\
+         svr / oneclass options:\n\
+           --epsilon <f>       SVR tube half-width             (default per dataset)\n\
+           --nu <f>            one-class outlier-fraction bound (default 0.15)\n\
+           --outlier-frac <f>  contamination of the synthetic set (default 0.1)\n\
          grid options:\n\
            --threads <int>     concurrent cells/chains, 0 = auto (default 0)\n\
            --warm-c            chain ascending C per gamma (Chu et al. reuse)\n\
+           --eps-grid <list>   SVR tube-width axis (with --task svr)\n\
          experiment options:\n\
            --scale <f>         scale dataset sizes (default 1.0)\n\
            --out <dir>         results directory (default results/)\n\
@@ -128,6 +135,10 @@ fn print_report(rep: &CvReport) {
     t.row(vec!["init time (s)".into(), fmt_secs(rep.total_init())]);
     t.row(vec!["rest time (s)".into(), fmt_secs(rep.total_rest())]);
     t.row(vec!["total (s)".into(), fmt_secs(rep.total_elapsed())]);
+    t.row(vec![
+        "init fraction (%)".into(),
+        format!("{:.2}", rep.init_fraction() * 100.0),
+    ]);
     t.row(vec!["iterations".into(), rep.total_iterations().to_string()]);
     t.row(vec![
         "accuracy (%)".into(),
@@ -137,7 +148,144 @@ fn print_report(rep: &CvReport) {
     print!("{}", t.render());
 }
 
+fn print_svr_report(rep: &CvReport) {
+    let mut t = Table::new(format!(
+        "{} / svr+{} (k = {}, {} rounds run)",
+        rep.dataset,
+        rep.seeder,
+        rep.k,
+        rep.rounds.len()
+    ))
+    .header(&["metric", "value"]);
+    t.row(vec!["init time (s)".into(), fmt_secs(rep.total_init())]);
+    t.row(vec!["rest time (s)".into(), fmt_secs(rep.total_rest())]);
+    t.row(vec!["total (s)".into(), fmt_secs(rep.total_elapsed())]);
+    t.row(vec![
+        "init fraction (%)".into(),
+        format!("{:.2}", rep.init_fraction() * 100.0),
+    ]);
+    t.row(vec!["iterations".into(), rep.total_iterations().to_string()]);
+    t.row(vec!["CV MSE".into(), format!("{:.6}", rep.mse())]);
+    t.row(vec![
+        "within ε-tube (%)".into(),
+        format!("{:.2}", rep.accuracy() * 100.0),
+    ]);
+    t.row(vec!["seed fallbacks".into(), rep.fallbacks().to_string()]);
+    print!("{}", t.render());
+}
+
+/// Load the regression dataset an `--task svr` command refers to.
+fn load_regression_dataset(args: &Args) -> Result<(alphaseed::data::Dataset, f64, f64, f64)> {
+    if args.opt_str("data").is_some() {
+        bail!("--task svr reads synthetic regression sets (--dataset sinc|friedman1); LibSVM regression files are not wired yet");
+    }
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    let name = args.str_or("dataset", "sinc");
+    let (hyper, default_eps) = synth::regression_hyper(&name)
+        .with_context(|| format!("unknown regression dataset '{name}' (sinc|friedman1)"))?;
+    let n = args.opt_parse::<usize>("n")?;
+    let ds = synth::generate_regression(&name, n, seed);
+    let c = args.parse_or("c", hyper.c)?;
+    let gamma = args.parse_or("gamma", hyper.gamma)?;
+    let epsilon = args.parse_or("epsilon", default_eps)?;
+    Ok((ds, c, gamma, epsilon))
+}
+
 fn cmd_cv(args: &Args) -> Result<()> {
+    match args.parse_or("task", Task::CSvc)? {
+        Task::CSvc => cmd_cv_csvc(args),
+        Task::Svr => cmd_cv_svr(args),
+        Task::OneClass => cmd_cv_oneclass(args),
+    }
+}
+
+/// The general-solver tasks run natively only; accept the default
+/// `--backend native` and reject `xla` with a targeted message (instead
+/// of the generic "unknown option" the consumed-keys check would give).
+fn reject_xla_backend(args: &Args, task: &str) -> Result<()> {
+    match args.str_or("backend", "native").as_str() {
+        "native" => Ok(()),
+        other => bail!("--task {task} runs natively; --backend {other} is not supported"),
+    }
+}
+
+fn cmd_cv_svr(args: &Args) -> Result<()> {
+    reject_xla_backend(args, "svr")?;
+    let (ds, c, gamma, epsilon) = load_regression_dataset(args)?;
+    let k = args.parse_or("k", 10usize)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let seeder = alphaseed::seeding::svr::svr_seeder_by_name(&seeder_name)
+        .with_context(|| format!("unknown SVR seeder '{seeder_name}' (cold|ato|mir|sir)"))?;
+    let max_rounds = args.opt_parse::<usize>("max-rounds")?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+
+    let rep = alphaseed::cv::run_kfold_svr(
+        &ds,
+        Kernel::rbf(gamma),
+        c,
+        epsilon,
+        k,
+        seeder.as_ref(),
+        alphaseed::cv::CvOptions {
+            rng_seed: seed,
+            max_rounds,
+            ..Default::default()
+        },
+    );
+    print_svr_report(&rep);
+    Ok(())
+}
+
+fn cmd_cv_oneclass(args: &Args) -> Result<()> {
+    reject_xla_backend(args, "oneclass")?;
+    if args.opt_str("data").is_some() {
+        bail!("--task oneclass reads the synthetic outlier set (--n/--outlier-frac); LibSVM files are not wired yet");
+    }
+    if let Some(name) = args.opt_str("dataset") {
+        if name != "outliers" {
+            bail!("--task oneclass has one synthetic dataset ('outliers'); got --dataset {name}");
+        }
+    }
+    if args.opt_str("c").is_some() {
+        bail!("one-class SVM has no penalty C (the box is [0, 1]); use --nu to bound the outlier fraction");
+    }
+    if args.opt_str("epsilon").is_some() {
+        bail!("--epsilon is the SVR tube width; one-class takes --nu");
+    }
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    let n = args.opt_parse::<usize>("n")?;
+    let outlier_frac = args.parse_or("outlier-frac", 0.1f64)?;
+    let ds = synth::generate_outliers(n, outlier_frac, seed);
+    let nu = args.parse_or("nu", 0.15f64)?;
+    let gamma = args.parse_or("gamma", 1.0f64)?;
+    let k = args.parse_or("k", 10usize)?;
+    let seeder_name = args.str_or("seeder", "sir");
+    let transplant = match seeder_name.as_str() {
+        "cold" | "libsvm" => false,
+        "sir" | "transplant" => true,
+        other => bail!("unknown one-class seeder '{other}' (cold|sir)"),
+    };
+    let max_rounds = args.opt_parse::<usize>("max-rounds")?;
+    args.reject_unknown()?;
+
+    let rep = alphaseed::cv::run_kfold_oneclass(
+        &ds,
+        Kernel::rbf(gamma),
+        nu,
+        k,
+        transplant,
+        alphaseed::cv::CvOptions {
+            rng_seed: seed,
+            max_rounds,
+            ..Default::default()
+        },
+    );
+    print_report(&rep);
+    Ok(())
+}
+
+fn cmd_cv_csvc(args: &Args) -> Result<()> {
     let (ds, c, gamma) = load_dataset(args)?;
     let k = args.parse_or("k", 10usize)?;
     let seeder_name = args.str_or("seeder", "sir");
@@ -220,6 +368,77 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_grid(args: &Args) -> Result<()> {
+    match args.parse_or("task", Task::CSvc)? {
+        Task::CSvc => cmd_grid_csvc(args),
+        Task::Svr => cmd_grid_svr(args),
+        Task::OneClass => bail!("grid search over one-class runs is not wired yet (use cv --task oneclass)"),
+    }
+}
+
+fn cmd_grid_svr(args: &Args) -> Result<()> {
+    reject_xla_backend(args, "svr")?;
+    if args.flag("warm-c") {
+        bail!("--warm-c chains C for the C-SVC grid; the SVR grid's ε axis changes the dual's linear term, so its cells run independently");
+    }
+    // checked before load_regression_dataset consumes the keys: the grid
+    // sweeps its own axes, so lone point values would be silently ignored
+    if args.opt_str("epsilon").is_some() {
+        bail!("grid --task svr sweeps the tube width via --eps-grid; --epsilon applies to single cv runs");
+    }
+    if args.opt_str("c").is_some() || args.opt_str("gamma").is_some() {
+        bail!("grid --task svr sweeps --c-grid/--gamma-grid; point values --c/--gamma apply to single cv runs");
+    }
+    let (ds, _, _, _) = load_regression_dataset(args)?;
+    let cs = args.list_or("c-grid", &[1.0, 10.0, 100.0])?;
+    let epss = args.list_or("eps-grid", &[0.01, 0.05, 0.2])?;
+    let gammas = args.list_or("gamma-grid", &[0.1, 0.5, 1.0])?;
+    let k = args.parse_or("k", 5usize)?;
+    let seeder = args.str_or("seeder", "sir");
+    let threads = args.parse_or("threads", 0usize)?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    args.reject_unknown()?;
+
+    let started = std::time::Instant::now();
+    let g = alphaseed::coordinator::grid_search_svr(
+        &ds,
+        &cs,
+        &epss,
+        &gammas,
+        &alphaseed::coordinator::GridOptions {
+            k,
+            seeder: seeder.clone(),
+            threads,
+            rng_seed: seed,
+            ..Default::default()
+        },
+    );
+    let mut t = Table::new(format!(
+        "SVR grid search on {} ({} cells, seeder {seeder}, {} s)",
+        ds.name,
+        g.points.len(),
+        fmt_secs(started.elapsed())
+    ))
+    .header(&["C", "epsilon", "gamma", "CV MSE", "iterations", "time(s)"]);
+    for p in &g.points {
+        t.row(vec![
+            format!("{}", p.c),
+            format!("{}", p.epsilon),
+            format!("{}", p.gamma),
+            format!("{:.6}", p.mse),
+            p.iterations.to_string(),
+            fmt_secs(p.elapsed),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = g.best();
+    println!(
+        "best: C={} epsilon={} gamma={} MSE={:.6}",
+        best.c, best.epsilon, best.gamma, best.mse
+    );
+    Ok(())
+}
+
+fn cmd_grid_csvc(args: &Args) -> Result<()> {
     let (ds, _, _) = load_dataset(args)?;
     let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;

@@ -14,13 +14,22 @@
 //! | [`Sir`] | §3.3 | per-instance similarity transplant |
 //! | [`Avg`] | suppl. | LOO: spread the removed α uniformly over free SVs |
 //! | [`Top`] | suppl. | LOO: give the removed α to the most similar SVs |
+//!
+//! The same fold-overlap argument applies to the other LibSVM
+//! formulations, whose duals share the box + single-equality structure:
+//! [`svr`] carries ATO/MIR/SIR over to the ε-SVR pair variables
+//! δ = α − α* (box \[−C, C\], Σδ = 0) and [`oneclass`] to the one-class
+//! constraint Σα = ν·n. docs/SEEDING.md maps every rule to its paper
+//! section and derives the transfers.
 
 mod ato;
 mod avg;
 mod balance;
 mod cold;
 mod mir;
+pub mod oneclass;
 mod sir;
+pub mod svr;
 mod top;
 
 pub use ato::Ato;
@@ -124,6 +133,51 @@ pub const LOO_SEEDERS: &[&str] = &["cold", "avg", "top", "ato", "mir", "sir"];
 #[inline]
 pub(crate) fn pos_of(sorted: &[usize], gi: usize) -> Option<usize> {
     sorted.binary_search(&gi).ok()
+}
+
+/// Greedy similarity transplant shared by the ε-SVR and one-class
+/// chains: visit the removed instances in descending |weight| order and
+/// hand each non-zero weight to the most similar (maximal cached kernel
+/// value) unused entering instance — one kernel row per donor.
+/// `place(next_pos, weight)` writes the received weight into the
+/// caller's seed vector; donors left over once 𝒯 is exhausted are
+/// skipped (the caller's balance pass absorbs the residual). The binary
+/// SIR keeps its own loop: its candidate filter (same label) and
+/// deterministic random fallback have no analogue here.
+pub(crate) fn transplant_by_similarity(
+    removed: &[usize],
+    weights: &[f64],
+    added: &[usize],
+    next_train: &[usize],
+    cache: &mut KernelCache,
+    mut place: impl FnMut(usize, f64),
+) {
+    debug_assert_eq!(removed.len(), weights.len());
+    let mut order: Vec<usize> = (0..removed.len()).collect();
+    order.sort_by(|&a, &b| weights[b].abs().partial_cmp(&weights[a].abs()).unwrap());
+    let mut used = vec![false; added.len()];
+    for &ri in &order {
+        let w = weights[ri];
+        if w == 0.0 {
+            continue;
+        }
+        let row = cache.row(removed[ri]);
+        let mut best: Option<(usize, f64)> = None;
+        for (ti, &gt) in added.iter().enumerate() {
+            if used[ti] {
+                continue;
+            }
+            let k = row[gt];
+            if best.map(|(_, bk)| k > bk).unwrap_or(true) {
+                best = Some((ti, k));
+            }
+        }
+        if let Some((ti, _)) = best {
+            used[ti] = true;
+            let np = pos_of(next_train, added[ti]).expect("T ⊄ next_train");
+            place(np, w);
+        }
+    }
 }
 
 /// Validate a seed result against the feasibility contract; used by tests

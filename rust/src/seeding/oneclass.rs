@@ -1,0 +1,215 @@
+//! Alpha seeding for the one-class SVM fold chain.
+//!
+//! The one-class dual has the box 0 ≤ αᵢ ≤ 1 and the equality constraint
+//! Σᵢ αᵢ = ν·n — like C-SVC with every "label" +1 and a **round-dependent
+//! right-hand side** (n changes with the training-fold size). The SIR
+//! transplant rule carries over directly: copy the shared α, move each
+//! removed support weight onto the most similar entering instance, then
+//! repair the sum to the new ν·n with the *AdjustAlpha* pass (which also
+//! absorbs the between-round change of ν·n itself). Cold start is the
+//! LibSVM ν-fraction point, not α = 0
+//! ([`oneclass_initial_alpha`](crate::smo::problem::oneclass_initial_alpha)).
+
+use super::pos_of;
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelCache};
+use crate::seeding::balance_to_target;
+use crate::smo::problem::oneclass_initial_alpha;
+
+/// Everything the one-class seeder may use from round h to initialise
+/// round h+1. Index slices hold global indices into `full`.
+pub struct OneClassSeedContext<'a> {
+    /// The complete dataset (all k folds; labels are evaluation-only).
+    pub full: &'a Dataset,
+    /// The kernel both rounds train with.
+    pub kernel: Kernel,
+    /// ν ∈ (0, 1]; fixes the per-round constraint Σα = ν·|train|.
+    pub nu: f64,
+    /// Round h's training instances.
+    pub prev_train: &'a [usize],
+    /// Round h's optimal α, aligned with `prev_train`.
+    pub prev_alpha: &'a [f64],
+    /// 𝓡: leaving the training set (fold h+1).
+    pub removed: &'a [usize],
+    /// 𝒯: entering the training set (fold h).
+    pub added: &'a [usize],
+    /// Round h+1's training instances (sorted).
+    pub next_train: &'a [usize],
+}
+
+/// Outcome of a one-class seeding step.
+#[derive(Debug, Clone)]
+pub struct OneClassSeedResult {
+    /// Initial α aligned with `ctx.next_train`: 0 ≤ αᵢ ≤ 1 and
+    /// Σᵢ αᵢ = ν·|next_train|.
+    pub alpha: Vec<f64>,
+    /// True if the transplant could not reach the constraint and the
+    /// LibSVM ν-fraction cold start was used instead.
+    pub fell_back: bool,
+}
+
+/// SIR-style transplant for the one-class chain: copy shared α, move each
+/// removed αₚ > 0 (largest first) onto the most similar unused 𝒯
+/// instance (one cached kernel row per removed support vector), then
+/// balance Σα to ν·|next| inside the unit box.
+pub fn seed_oneclass(ctx: &OneClassSeedContext, cache: &mut KernelCache) -> OneClassSeedResult {
+    let next = ctx.next_train;
+    let n_next = next.len();
+    let target = ctx.nu * n_next as f64;
+
+    let mut alpha = vec![0.0f64; n_next];
+    for (p, &gi) in ctx.prev_train.iter().enumerate() {
+        if ctx.prev_alpha[p] > 0.0 {
+            if let Some(np) = pos_of(next, gi) {
+                alpha[np] = ctx.prev_alpha[p];
+            }
+        }
+    }
+
+    // Transplant removed weights, largest first (shared greedy loop;
+    // α ≥ 0 here, so |weight| ordering is plain descending α).
+    let r_alpha: Vec<f64> = ctx
+        .removed
+        .iter()
+        .map(|&gr| {
+            let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+            ctx.prev_alpha[p]
+        })
+        .collect();
+    super::transplant_by_similarity(
+        ctx.removed,
+        &r_alpha,
+        ctx.added,
+        next,
+        cache,
+        |np, w| alpha[np] = w,
+    );
+
+    // Σα must equal ν·|next| (a different value than round h's when fold
+    // sizes differ); AdjustAlpha with unit labels repairs both the
+    // transplant residue and that shift.
+    let ones = vec![1.0f64; n_next];
+    if balance_to_target(&mut alpha, &ones, 1.0, target) {
+        OneClassSeedResult {
+            alpha,
+            fell_back: false,
+        }
+    } else {
+        OneClassSeedResult {
+            alpha: oneclass_initial_alpha(ctx.nu, n_next),
+            fell_back: true,
+        }
+    }
+}
+
+/// Validate a one-class seed: unit box and Σα = ν·n.
+pub fn check_feasible_oneclass(alpha: &[f64], nu: f64) -> Result<(), String> {
+    for (i, &a) in alpha.iter().enumerate() {
+        if !(-1e-9..=1.0 + 1e-9).contains(&a) {
+            return Err(format!("alpha[{i}] = {a} outside [0, 1]"));
+        }
+    }
+    let target = nu * alpha.len() as f64;
+    let s: f64 = alpha.iter().sum();
+    if (s - target).abs() > 1e-6 * (alpha.len() as f64).max(1.0) {
+        return Err(format!("sum alpha = {s} != nu*n = {target}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::FoldPlan;
+    use crate::kernel::KernelEval;
+    use crate::smo::problem::{solver_for, OneClassProblem};
+    use crate::smo::{QpProblem, SmoParams};
+
+    fn solved_round() -> (Dataset, Kernel, f64, Vec<usize>, Vec<f64>, FoldPlan) {
+        let full = crate::data::synth::generate_outliers(Some(150), 0.1, 3);
+        let kernel = Kernel::rbf(1.0);
+        let nu = 0.2;
+        let plan = FoldPlan::stratified(&full, 5, 11);
+        let prev_train = plan.train_indices(0);
+        let train = full.select(&prev_train);
+        let problem = OneClassProblem { nu };
+        let mut solver = solver_for(&problem, &train, kernel, SmoParams::default());
+        let beta0 = problem.initial_alpha(&train);
+        let r = solver.solve_from(beta0, None);
+        assert!(r.converged);
+        (full, kernel, nu, prev_train, r.alpha, plan)
+    }
+
+    #[test]
+    fn transplant_seed_is_feasible() {
+        let (full, kernel, nu, prev_train, prev_alpha, plan) = solved_round();
+        let t = plan.transition(0);
+        let next_train = plan.train_indices(1);
+        let ctx = OneClassSeedContext {
+            full: &full,
+            kernel,
+            nu,
+            prev_train: &prev_train,
+            prev_alpha: &prev_alpha,
+            removed: &t.removed,
+            added: &t.added,
+            next_train: &next_train,
+        };
+        let mut cache =
+            KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 16 << 20);
+        let r = seed_oneclass(&ctx, &mut cache);
+        check_feasible_oneclass(&r.alpha, nu).unwrap();
+    }
+
+    #[test]
+    fn transplant_seed_reduces_iterations() {
+        let (full, kernel, nu, prev_train, prev_alpha, plan) = solved_round();
+        let t = plan.transition(0);
+        let next_train = plan.train_indices(1);
+        let train1 = full.select(&next_train);
+        let problem = OneClassProblem { nu };
+
+        let solve_from = |alpha0: Vec<f64>| {
+            let mut solver = solver_for(&problem, &train1, kernel, SmoParams::default());
+            let r = solver.solve_from(alpha0, None);
+            assert!(r.converged);
+            r
+        };
+        let cold = solve_from(problem.initial_alpha(&train1));
+
+        let ctx = OneClassSeedContext {
+            full: &full,
+            kernel,
+            nu,
+            prev_train: &prev_train,
+            prev_alpha: &prev_alpha,
+            removed: &t.removed,
+            added: &t.added,
+            next_train: &next_train,
+        };
+        let mut cache =
+            KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 16 << 20);
+        let seed = seed_oneclass(&ctx, &mut cache);
+        assert!(!seed.fell_back);
+        let warm = solve_from(seed.alpha);
+        assert!(
+            warm.iterations < cold.iterations,
+            "transplant {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-2 * cold.objective.abs().max(1.0),
+            "objective {} vs {}",
+            warm.objective,
+            cold.objective
+        );
+    }
+
+    #[test]
+    fn feasibility_checker_catches_violations() {
+        assert!(check_feasible_oneclass(&[0.5, 0.5], 0.5).is_ok());
+        assert!(check_feasible_oneclass(&[1.5, 0.0], 0.75).is_err()); // box
+        assert!(check_feasible_oneclass(&[0.5, 0.5], 0.2).is_err()); // sum
+    }
+}

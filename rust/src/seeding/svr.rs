@@ -1,0 +1,636 @@
+//! SVR-aware alpha seeding — the paper's three rules transferred to the
+//! ε-SVR pair variables (docs/SEEDING.md §"Transfer to ε-SVR" derives the
+//! mapping).
+//!
+//! The doubled ε-SVR dual has the *same constraint structure* as the
+//! binary C-SVC dual once expressed in the pair differences
+//! δᵢ = αᵢ − α*ᵢ: a box (δᵢ ∈ \[−C, C\]) and one linear equality
+//! (Σᵢ δᵢ = 0, which is exactly Σᵢ signsᵢ·βᵢ = 0 of the doubled QP).
+//! Every seeder here therefore estimates a feasible δ for round h+1 from
+//! round h's solved SVR; the CV driver expands δ into the doubled
+//! β = (max(δ,0), max(−δ,0)) — complementary and box-feasible by
+//! construction — and hands it to the
+//! [`GeneralSolver`](crate::smo::GeneralSolver).
+//!
+//! | Seeder | C-SVC original | δ-space transfer |
+//! |--------|----------------|------------------|
+//! | [`SvrCold`] | α = 0 | δ = 0 |
+//! | [`SvrAto`] | §3.1 ramp with margin-set compensation | drain δ_𝓡 onto the most-similar shared instances with box headroom |
+//! | [`SvrMir`] | §3.2 Eq. 18 least squares | K(X,𝒯)·δ_𝒯 ≈ Δf + K(X,𝓡)·δ_𝓡 with tube-edge Δf, plus the Σδ row |
+//! | [`SvrSir`] | §3.3 similarity transplant | transplant each δ_p onto the most similar unused 𝒯 instance |
+
+use super::{balance_to_target, pos_of};
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelCache};
+use crate::linalg::{lstsq, Mat};
+
+/// Everything an SVR seeder may use from round h to initialise round h+1.
+/// All index slices hold **global** indices into `full`, sorted ascending
+/// except `removed`/`added` (fold order) — the same layout as the
+/// classification [`SeedContext`](super::SeedContext).
+pub struct SvrSeedContext<'a> {
+    /// The complete regression dataset (all k folds).
+    pub full: &'a Dataset,
+    /// The kernel both rounds train with.
+    pub kernel: Kernel,
+    /// The box constraint C both rounds train with (δ ∈ \[−C, C\]).
+    pub c: f64,
+    /// The tube half-width ε both rounds train with.
+    pub epsilon: f64,
+    /// Round h's training instances.
+    pub prev_train: &'a [usize],
+    /// Round h's optimal pair differences δ = α − α*, aligned with
+    /// `prev_train`.
+    pub prev_delta: &'a [f64],
+    /// Round h's tube residuals eᵢ = f(xᵢ) − zᵢ, aligned with
+    /// `prev_train` (the ε-SVR optimality indicator; see
+    /// [`svr_errors`](crate::smo::problem::svr_errors)).
+    pub prev_err: &'a [f64],
+    /// Round h's bias ρ.
+    pub prev_b: f64,
+    /// 𝓡: leaving the training set (fold h+1).
+    pub removed: &'a [usize],
+    /// 𝒯: entering the training set (fold h, round h's test set).
+    pub added: &'a [usize],
+    /// Round h+1's training instances (= prev_train ∖ 𝓡 ∪ 𝒯, sorted).
+    pub next_train: &'a [usize],
+    /// Deterministic seed for any stochastic tie-breaking (none of the
+    /// current rules need it; kept for parity with the C-SVC contract).
+    pub rng_seed: u64,
+}
+
+/// Outcome of an SVR seeding step.
+#[derive(Debug, Clone)]
+pub struct SvrSeedResult {
+    /// Pair differences δ aligned with `ctx.next_train`, feasible:
+    /// δᵢ ∈ \[−C, C\] and Σᵢ δᵢ = 0.
+    pub delta: Vec<f64>,
+    /// True if the algorithm fell back to the cold start (δ = 0).
+    pub fell_back: bool,
+}
+
+/// An ε-SVR alpha-seeding strategy over pair differences. The contract
+/// mirrors [`Seeder`](super::Seeder): **feasibility** (box + Σδ = 0,
+/// checked by [`check_feasible_delta`]), **determinism**, and **no effect
+/// on the solution** — the solver's fixed point is independent of its
+/// start, so seeded CV reports the same fold MSE as cold-started CV (up
+/// to the solver's convergence tolerance).
+pub trait SvrSeeder: Send + Sync {
+    /// Short name for tables ("sir", "mir", ...).
+    fn name(&self) -> &'static str;
+
+    /// Produce a feasible δ for round h+1. `cache` is an LRU of kernel
+    /// rows over the **full** dataset (global indices), shared across the
+    /// whole cross-validation run.
+    fn seed(&self, ctx: &SvrSeedContext, cache: &mut KernelCache) -> SvrSeedResult;
+}
+
+/// Cold start: δ = 0 (LibSVM semantics for ε-SVR).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SvrCold;
+
+impl SvrSeeder for SvrCold {
+    fn name(&self) -> &'static str {
+        "cold"
+    }
+
+    fn seed(&self, ctx: &SvrSeedContext, _cache: &mut KernelCache) -> SvrSeedResult {
+        SvrSeedResult {
+            delta: vec![0.0; ctx.next_train.len()],
+            fell_back: false,
+        }
+    }
+}
+
+/// Single Instance Replacement in δ-space: copy δ_𝓢 unchanged, then
+/// transplant each removed δ_p (largest |δ| first) onto the most similar
+/// unused 𝒯 instance — maximal K(x_p, x_t), served by one cached kernel
+/// row per removed support vector. Transplanting the signed value keeps
+/// Σδ exactly; any residual (|𝒯| smaller than 𝓡's support) is repaired
+/// by the δ-space *AdjustAlpha* ([`balance_delta`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SvrSir;
+
+impl SvrSeeder for SvrSir {
+    fn name(&self) -> &'static str {
+        "sir"
+    }
+
+    fn seed(&self, ctx: &SvrSeedContext, cache: &mut KernelCache) -> SvrSeedResult {
+        let mut delta = copy_shared(ctx);
+        let r_delta = removed_deltas(ctx);
+        // donors that outnumber 𝒯 are skipped; the balance below absorbs
+        // the resulting residual
+        super::transplant_by_similarity(
+            ctx.removed,
+            &r_delta,
+            ctx.added,
+            ctx.next_train,
+            cache,
+            |np, w| delta[np] = w,
+        );
+        finish_with_added_balance(ctx, delta)
+    }
+}
+
+/// Multiple Instance Replacement in δ-space (the Eq. 18 analogue): keep
+/// δ_𝓢 unchanged and solve one least-squares system for δ_𝒯,
+///
+/// ```text
+///   [ K(X,T) ]            [ Δf + K(X,R)·δ_R ]
+///   [  1ᵀ    ] · δ'_T  ≈  [     Σ_r δ_r     ]
+/// ```
+///
+/// where Δfᵢ pushes each *bounded* residual to its KKT tube edge
+/// (δᵢ = +C ⇒ eᵢ → −ε, δᵢ = −C ⇒ eᵢ → +ε) and leaves free/inactive
+/// instances in place — exactly the paper's Δf = b − f rule translated
+/// through the SVR optimality conditions. The solution is clipped to the
+/// box and rebalanced so Σ_t δ'_t = Σ_r δ_r (the Eq. 16 analogue).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SvrMir;
+
+impl SvrSeeder for SvrMir {
+    fn name(&self) -> &'static str {
+        "mir"
+    }
+
+    fn seed(&self, ctx: &SvrSeedContext, cache: &mut KernelCache) -> SvrSeedResult {
+        let n = ctx.prev_train.len();
+        let nt = ctx.added.len();
+        let next = ctx.next_train;
+        let c = ctx.c;
+        let mut delta = copy_shared(ctx);
+
+        let r_delta = removed_deltas(ctx);
+        let target: f64 = r_delta.iter().sum();
+
+        if nt == 0 {
+            // degenerate (LOO-style) transition: rebalance the copy
+            let mut d = delta.clone();
+            let fell_back = !balance_delta(&mut d, c, 0.0);
+            return SvrSeedResult {
+                delta: if fell_back { vec![0.0; next.len()] } else { d },
+                fell_back,
+            };
+        }
+
+        // rhs_i = Δfᵢ + Σ_r δ_r·K(i, r);  rhs_n = Σ_r δ_r
+        let mut rhs = vec![0.0f64; n + 1];
+        for (i, _gi) in ctx.prev_train.iter().enumerate() {
+            let d = ctx.prev_delta[i];
+            let e = ctx.prev_err[i];
+            rhs[i] = if d >= c {
+                -ctx.epsilon - e
+            } else if d <= -c {
+                ctx.epsilon - e
+            } else {
+                0.0
+            };
+        }
+        for (ri, &gr) in ctx.removed.iter().enumerate() {
+            let dr = r_delta[ri];
+            if dr == 0.0 {
+                continue;
+            }
+            let row = cache.row(gr);
+            for (i, &gi) in ctx.prev_train.iter().enumerate() {
+                rhs[i] += dr * row[gi];
+            }
+        }
+        rhs[n] = target;
+
+        // A = [K(X,T); 1ᵀ], column t = K(X, x_t).
+        let mut a_mat = Mat::zeros(n + 1, nt);
+        for (t, &gt) in ctx.added.iter().enumerate() {
+            let row = cache.row(gt);
+            for (i, &gi) in ctx.prev_train.iter().enumerate() {
+                a_mat[(i, t)] = row[gi];
+            }
+            a_mat[(n, t)] = 1.0;
+        }
+
+        let mut dt = match lstsq(&a_mat, &rhs) {
+            Ok(x) => x,
+            Err(_) => {
+                let ata = a_mat.t().matmul(&a_mat);
+                let atb = a_mat.t_matvec(&rhs);
+                ata.pinv().matvec(&atb)
+            }
+        };
+
+        // AdjustAlpha in δ-space: clip to [−C, C] + rebalance to Eq. 16.
+        if !balance_delta(&mut dt, c, target) {
+            return SvrSeedResult {
+                delta: vec![0.0; next.len()],
+                fell_back: true,
+            };
+        }
+        for (t, &gt) in ctx.added.iter().enumerate() {
+            let np = pos_of(next, gt).expect("T ⊄ next_train");
+            delta[np] = dt[t];
+        }
+        SvrSeedResult {
+            delta,
+            fell_back: false,
+        }
+    }
+}
+
+/// Adjusting Alpha Towards Optimum in δ-space: drain each removed δ_r to
+/// zero and deposit the drained (signed) mass onto the shared instances
+/// most similar to x_r that still have box headroom in that direction —
+/// the first-order counterpart of Algorithm 1's ramp, where the margin
+/// set absorbs the change (fresh 𝒯 instances stay at δ = 0: unlike the
+/// C-SVC case their optimal sign is unknown before solving). Saturating
+/// every candidate leaves a residual that the δ-space *AdjustAlpha*
+/// repairs.
+#[derive(Debug, Clone, Copy)]
+pub struct SvrAto {
+    /// Numerical floor below which a δ is treated as drained to 0.
+    pub drain_tol: f64,
+}
+
+impl Default for SvrAto {
+    fn default() -> Self {
+        SvrAto { drain_tol: 1e-10 }
+    }
+}
+
+impl SvrSeeder for SvrAto {
+    fn name(&self) -> &'static str {
+        "ato"
+    }
+
+    fn seed(&self, ctx: &SvrSeedContext, cache: &mut KernelCache) -> SvrSeedResult {
+        let next = ctx.next_train;
+        let c = ctx.c;
+        let mut delta = copy_shared(ctx);
+
+        // Shared positions in next (candidates for compensation).
+        let shared_pos: Vec<usize> = ctx
+            .prev_train
+            .iter()
+            .filter(|&&gi| !ctx.removed.contains(&gi))
+            .filter_map(|&gi| pos_of(next, gi))
+            .collect();
+
+        let r_delta = removed_deltas(ctx);
+        let mut order: Vec<usize> = (0..ctx.removed.len()).collect();
+        order.sort_by(|&a, &b| r_delta[b].abs().partial_cmp(&r_delta[a].abs()).unwrap());
+
+        for &ri in &order {
+            let dp = r_delta[ri];
+            if dp.abs() <= self.drain_tol {
+                continue;
+            }
+            let gp = ctx.removed[ri];
+            let row_p = cache.row(gp);
+            // candidates with headroom toward sign(dp), most similar first
+            let mut cands: Vec<(usize, f64)> = shared_pos
+                .iter()
+                .filter_map(|&np| {
+                    let head = if dp > 0.0 { c - delta[np] } else { delta[np] + c };
+                    (head > self.drain_tol).then(|| (np, row_p[next[np]]))
+                })
+                .collect();
+            cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut remaining = dp;
+            for (np, _) in cands {
+                if remaining.abs() <= self.drain_tol {
+                    break;
+                }
+                let head = if remaining > 0.0 {
+                    c - delta[np]
+                } else {
+                    delta[np] + c
+                };
+                let take = remaining.abs().min(head) * remaining.signum();
+                delta[np] += take;
+                remaining -= take;
+            }
+            // any residual stays unplaced; the balance below repairs it
+        }
+
+        finish_with_whole_balance(ctx, delta)
+    }
+}
+
+/// Look up an SVR seeder by canonical name (same names as the C-SVC
+/// registry: "cold", "ato", "mir", "sir").
+pub fn svr_seeder_by_name(name: &str) -> Option<Box<dyn SvrSeeder>> {
+    match name {
+        "cold" | "libsvm" => Some(Box::new(SvrCold)),
+        "ato" => Some(Box::new(SvrAto::default())),
+        "mir" => Some(Box::new(SvrMir)),
+        "sir" => Some(Box::new(SvrSir)),
+        _ => None,
+    }
+}
+
+/// Names of the ε-SVR k-fold seeders, baseline first.
+pub const ALL_SVR_SEEDERS: &[&str] = &["cold", "ato", "mir", "sir"];
+
+/// Validate a δ vector against the ε-SVR feasibility contract:
+/// δᵢ ∈ \[−C, C\] and Σᵢ δᵢ = 0.
+pub fn check_feasible_delta(delta: &[f64], c: f64) -> Result<(), String> {
+    for (i, &d) in delta.iter().enumerate() {
+        if !(-c - 1e-9..=c + 1e-9).contains(&d) {
+            return Err(format!("delta[{i}] = {d} outside [-{c}, {c}]"));
+        }
+    }
+    let s: f64 = delta.iter().sum();
+    if s.abs() > 1e-6 * c * (delta.len() as f64).max(1.0) {
+        return Err(format!("sum delta = {s} != 0"));
+    }
+    Ok(())
+}
+
+/// The paper's *AdjustAlpha* step in δ-space: clip `delta` into
+/// \[−C, C\] and spread the residual uniformly until Σᵢ δᵢ = `target`.
+/// Implemented by shifting into u = δ + C ∈ \[0, 2C\] and reusing the
+/// classification [`balance_to_target`] with unit labels. Returns `false`
+/// when the target is unreachable inside the box.
+pub fn balance_delta(delta: &mut [f64], c: f64, target: f64) -> bool {
+    let n = delta.len();
+    let mut u: Vec<f64> = delta.iter().map(|d| d + c).collect();
+    let ones = vec![1.0f64; n];
+    let ok = balance_to_target(&mut u, &ones, 2.0 * c, target + n as f64 * c);
+    if ok {
+        for (d, uu) in delta.iter_mut().zip(&u) {
+            *d = (uu - c).clamp(-c, c);
+        }
+    }
+    ok
+}
+
+// ---- shared helpers --------------------------------------------------------
+
+/// Copy the shared instances' δ onto the next-round layout.
+fn copy_shared(ctx: &SvrSeedContext) -> Vec<f64> {
+    let mut delta = vec![0.0f64; ctx.next_train.len()];
+    for (p, &gi) in ctx.prev_train.iter().enumerate() {
+        if ctx.prev_delta[p] != 0.0 {
+            if let Some(np) = pos_of(ctx.next_train, gi) {
+                delta[np] = ctx.prev_delta[p];
+            }
+        }
+    }
+    delta
+}
+
+/// δ values of the removed instances, in `ctx.removed` order.
+fn removed_deltas(ctx: &SvrSeedContext) -> Vec<f64> {
+    ctx.removed
+        .iter()
+        .map(|&gr| {
+            let p = pos_of(ctx.prev_train, gr).expect("R ⊄ prev_train");
+            ctx.prev_delta[p]
+        })
+        .collect()
+}
+
+/// Repair Σδ = 0 preferring to move only the 𝒯 entries (they absorb the
+/// transition, Eq. 16 analogue), falling back to a whole-vector balance,
+/// then to the cold start.
+fn finish_with_added_balance(ctx: &SvrSeedContext, mut delta: Vec<f64>) -> SvrSeedResult {
+    let total: f64 = delta.iter().sum();
+    if total.abs() <= 1e-9 {
+        return SvrSeedResult {
+            delta,
+            fell_back: false,
+        };
+    }
+    let t_positions: Vec<usize> = ctx
+        .added
+        .iter()
+        .filter_map(|&gt| pos_of(ctx.next_train, gt))
+        .collect();
+    let mut t_delta: Vec<f64> = t_positions.iter().map(|&np| delta[np]).collect();
+    let t_sum: f64 = t_delta.iter().sum();
+    if !t_positions.is_empty() && balance_delta(&mut t_delta, ctx.c, t_sum - total) {
+        for (&np, &d) in t_positions.iter().zip(&t_delta) {
+            delta[np] = d;
+        }
+        return SvrSeedResult {
+            delta,
+            fell_back: false,
+        };
+    }
+    finish_with_whole_balance(ctx, delta)
+}
+
+/// Repair Σδ = 0 over the whole vector; cold start when unreachable.
+fn finish_with_whole_balance(ctx: &SvrSeedContext, mut delta: Vec<f64>) -> SvrSeedResult {
+    let total: f64 = delta.iter().sum();
+    if total.abs() <= 1e-9 {
+        return SvrSeedResult {
+            delta,
+            fell_back: false,
+        };
+    }
+    if balance_delta(&mut delta, ctx.c, 0.0) {
+        SvrSeedResult {
+            delta,
+            fell_back: false,
+        }
+    } else {
+        SvrSeedResult {
+            delta: vec![0.0; ctx.next_train.len()],
+            fell_back: true,
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::data::FoldPlan;
+    use crate::kernel::KernelEval;
+    use crate::smo::problem::{collapse_svr_pairs, expand_svr_pairs, svr_errors, SvrProblem};
+    use crate::smo::{GeneralSolver, QpProblem, SmoParams};
+
+    /// Round-h solved state of an ε-SVR CV plan, ready to build contexts.
+    pub struct SolvedSvrRound {
+        pub full: Dataset,
+        pub kernel: Kernel,
+        pub c: f64,
+        pub epsilon: f64,
+        pub prev_train: Vec<usize>,
+        pub prev_delta: Vec<f64>,
+        pub prev_err: Vec<f64>,
+        pub prev_b: f64,
+        pub removed: Vec<usize>,
+        pub added: Vec<usize>,
+        pub next_train: Vec<usize>,
+    }
+
+    impl SolvedSvrRound {
+        pub fn ctx(&self) -> SvrSeedContext<'_> {
+            SvrSeedContext {
+                full: &self.full,
+                kernel: self.kernel,
+                c: self.c,
+                epsilon: self.epsilon,
+                prev_train: &self.prev_train,
+                prev_delta: &self.prev_delta,
+                prev_err: &self.prev_err,
+                prev_b: self.prev_b,
+                removed: &self.removed,
+                added: &self.added,
+                next_train: &self.next_train,
+                rng_seed: 7,
+            }
+        }
+
+        pub fn cache(&self) -> KernelCache {
+            KernelCache::with_byte_budget(
+                KernelEval::new(self.full.clone(), self.kernel),
+                64 << 20,
+            )
+        }
+
+        /// Solve round h+1 from a δ seed; returns (iterations, obj, b).
+        pub fn solve_next(&self, delta0: Vec<f64>) -> (u64, f64, f64) {
+            let train = self.full.select(&self.next_train);
+            let problem = SvrProblem {
+                c: self.c,
+                epsilon: self.epsilon,
+            };
+            let mut solver = GeneralSolver::new(
+                KernelEval::new(train.clone(), self.kernel),
+                problem.spec(&train),
+                SmoParams::default(),
+            );
+            let r = solver.solve_from(expand_svr_pairs(&delta0), None);
+            assert!(r.converged);
+            (r.iterations, r.objective, r.b)
+        }
+    }
+
+    /// Train round h=0 of a k-fold ε-SVR plan on a synthetic dataset.
+    pub fn solved_svr_round(
+        dataset: &str,
+        n: usize,
+        k: usize,
+        c: f64,
+        epsilon: f64,
+        gamma: f64,
+    ) -> SolvedSvrRound {
+        let full = crate::data::synth::generate_regression(dataset, Some(n), 42);
+        let kernel = Kernel::rbf(gamma);
+        let plan = FoldPlan::random(full.len(), k, 11);
+        let h = 0;
+        let prev_train = plan.train_indices(h);
+        let train = full.select(&prev_train);
+        let problem = SvrProblem { c, epsilon };
+        let mut solver = GeneralSolver::new(
+            KernelEval::new(train.clone(), kernel),
+            problem.spec(&train),
+            SmoParams::default(),
+        );
+        let r = solver.solve();
+        assert!(r.converged, "round-0 SVR solve did not converge");
+        let t = plan.transition(h);
+        SolvedSvrRound {
+            full,
+            kernel,
+            c,
+            epsilon,
+            prev_train,
+            prev_delta: collapse_svr_pairs(&r.alpha),
+            prev_err: svr_errors(&r, epsilon),
+            prev_b: r.b,
+            removed: t.removed,
+            added: t.added,
+            next_train: plan.train_indices(h + 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::solved_svr_round;
+    use super::*;
+
+    #[test]
+    fn all_seeders_emit_feasible_delta() {
+        let sr = solved_svr_round("sinc", 120, 5, 10.0, 0.05, 0.5);
+        for name in ALL_SVR_SEEDERS {
+            let seeder = svr_seeder_by_name(name).unwrap();
+            let mut cache = sr.cache();
+            let r = seeder.seed(&sr.ctx(), &mut cache);
+            check_feasible_delta(&r.delta, sr.c)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn sir_and_mir_keep_shared_delta() {
+        let sr = solved_svr_round("sinc", 120, 5, 10.0, 0.05, 0.5);
+        for name in ["sir", "mir"] {
+            let seeder = svr_seeder_by_name(name).unwrap();
+            let mut cache = sr.cache();
+            let r = seeder.seed(&sr.ctx(), &mut cache);
+            if r.fell_back {
+                continue;
+            }
+            for (p, &gi) in sr.prev_train.iter().enumerate() {
+                if sr.removed.contains(&gi) {
+                    continue;
+                }
+                let np = sr.next_train.binary_search(&gi).unwrap();
+                assert!(
+                    (r.delta[np] - sr.prev_delta[p]).abs() < 1e-9,
+                    "{name}: shared δ changed at {gi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_svr_reduces_iterations_and_preserves_objective() {
+        let sr = solved_svr_round("sinc", 150, 5, 10.0, 0.05, 0.5);
+        let mut cache = sr.cache();
+        let cold = SvrCold.seed(&sr.ctx(), &mut cache);
+        let (it_cold, obj_c, _) = sr.solve_next(cold.delta);
+        for name in ["ato", "mir", "sir"] {
+            let seeder = svr_seeder_by_name(name).unwrap();
+            let seeded = seeder.seed(&sr.ctx(), &mut cache);
+            assert!(!seeded.fell_back, "{name} fell back to cold start");
+            let (it_seeded, obj_s, _) = sr.solve_next(seeded.delta);
+            assert!(
+                it_seeded < it_cold,
+                "{name} did not reduce iterations: {it_seeded} vs cold {it_cold}"
+            );
+            assert!(
+                (obj_s - obj_c).abs() < 1e-2 * obj_c.abs().max(1.0),
+                "{name}: objective {obj_s} vs cold {obj_c}"
+            );
+        }
+    }
+
+    #[test]
+    fn balance_delta_reaches_target_inside_box() {
+        let mut d = vec![0.4, -0.2, 0.0];
+        assert!(balance_delta(&mut d, 1.0, 0.0));
+        assert!(d.iter().sum::<f64>().abs() < 1e-9);
+        assert!(d.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        // unreachable: max sum is 3·C = 3 < 4
+        let mut d = vec![0.0, 0.0, 0.0];
+        assert!(!balance_delta(&mut d, 1.0, 4.0));
+    }
+
+    #[test]
+    fn mir_degenerate_no_added() {
+        // LOO-style transition (empty 𝒯): MIR rebalances the copy
+        let sr = solved_svr_round("sinc", 80, 4, 5.0, 0.05, 0.5);
+        let ctx_base = sr.ctx();
+        let ctx = SvrSeedContext {
+            added: &[],
+            ..ctx_base
+        };
+        let mut cache = sr.cache();
+        let r = SvrMir.seed(&ctx, &mut cache);
+        check_feasible_delta(&r.delta, sr.c).unwrap();
+    }
+}

@@ -1,23 +1,39 @@
-//! Sequential Minimal Optimisation — a LibSVM-equivalent C-SVC solver.
+//! Sequential Minimal Optimisation — a LibSVM-equivalent solver family.
 //!
 //! The dual problem (paper Eq. 1) is solved by the SMO decomposition method
-//! with second-order working-set selection (WSS2, Fan–Chen–Lin 2005) and
-//! LibSVM-style shrinking. The solver accepts an **arbitrary feasible
-//! initial α** (and optionally a pre-computed gradient) — that is the hook
-//! every alpha-seeding algorithm plugs into; cold start is α = 0.
+//! with second-order working-set selection (WSS2, Fan–Chen–Lin 2005). Two
+//! solver paths share that machinery:
+//!
+//! - [`Solver`] — the specialised **binary C-SVC** path (the paper's
+//!   setting) with LibSVM-style shrinking and the parallel warm-start
+//!   gradient; this is what the alpha-seeded k-fold chain trains.
+//! - [`GeneralSolver`] — the same decomposition over an explicit
+//!   [`QpSpec`] (per-variable signs, linear term p, kernel-row map),
+//!   which is how **ε-SVR** (doubled α/α* variables) and **one-class
+//!   SVM** (Σα = ν·n) run; the [`QpProblem`] trait builds the spec per
+//!   formulation.
+//!
+//! Both accept an **arbitrary feasible initial point** (and optionally a
+//! pre-computed gradient) — that is the hook every alpha-seeding algorithm
+//! plugs into; cold start is α = 0 (C-SVC/ε-SVR) or the ν-fraction point
+//! (one-class).
 //!
 //! Notation bridge to the paper: the paper's optimality indicator
 //! fᵢ = yᵢ·Gᵢ where Gᵢ = ∂W/∂αᵢ = Σⱼ αⱼQᵢⱼ − 1 is LibSVM's gradient, and
-//! the paper's bias b equals LibSVM's ρ.
+//! the paper's bias b equals LibSVM's ρ. For ε-SVR the analogous
+//! indicator is the tube residual eᵢ = f(xᵢ) − zᵢ (see
+//! [`problem::svr_errors`]).
 
 mod model;
 mod persist;
 mod platt;
+pub mod problem;
 mod solver;
 mod verify;
 
-pub use model::Model;
+pub use model::{Model, OneClassModel, SvrModel};
 pub use persist::ModelIoError;
 pub use platt::PlattScaler;
-pub use solver::{SmoParams, SmoResult, Solver};
+pub use problem::{OneClassProblem, SvcProblem, SvrProblem};
+pub use solver::{GeneralSolver, QpProblem, QpSpec, SmoParams, SmoResult, Solver};
 pub use verify::{kkt_violation, KktReport};

@@ -1,8 +1,11 @@
-//! A trained SVM model: support vectors + dual coefficients + bias.
+//! Trained models for the three workloads: C-SVC ([`Model`]), ε-SVR
+//! ([`SvrModel`]) and one-class ([`OneClassModel`]) — support vectors +
+//! dual coefficients + bias, with native bulk prediction.
 
 use crate::data::Dataset;
 use crate::kernel::{Kernel, KernelEval};
 
+use super::problem::collapse_svr_pairs;
 use super::solver::SmoResult;
 
 /// Trained C-SVC model. Decision function:
@@ -15,7 +18,29 @@ pub struct Model {
     pub coef: Vec<f64>,
     /// Bias (paper's b = LibSVM ρ).
     pub b: f64,
+    /// The kernel the model was trained with.
     pub kernel: Kernel,
+}
+
+/// Σᵢ coefᵢ·K(svᵢ, xⱼ) − b for every row of `data` — the one kernel-sum
+/// loop all three model kinds share.
+fn kernel_sums_minus_b(
+    sv: &Dataset,
+    coef: &[f64],
+    b: f64,
+    kernel: Kernel,
+    data: &Dataset,
+) -> Vec<f64> {
+    let ev = KernelEval::new(sv.clone(), kernel);
+    (0..data.len())
+        .map(|j| {
+            let mut acc = 0.0;
+            for (i, &c) in coef.iter().enumerate() {
+                acc += c * ev.eval_cross(i, data, j);
+            }
+            acc - b
+        })
+        .collect()
 }
 
 impl Model {
@@ -36,6 +61,7 @@ impl Model {
         }
     }
 
+    /// Number of support vectors.
     pub fn n_sv(&self) -> usize {
         self.coef.len()
     }
@@ -53,16 +79,7 @@ impl Model {
     /// Decision values for every row of `data` (native path; the XLA
     /// backend offers the same contract as a bulk artifact call).
     pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
-        let ev = KernelEval::new(self.sv.clone(), self.kernel);
-        (0..data.len())
-            .map(|j| {
-                let mut acc = 0.0;
-                for i in 0..self.sv.len() {
-                    acc += self.coef[i] * ev.eval_cross(i, data, j);
-                }
-                acc - self.b
-            })
-            .collect()
+        kernel_sums_minus_b(&self.sv, &self.coef, self.b, self.kernel, data)
     }
 
     /// Predicted labels (±1) for every row of `data`.
@@ -82,6 +99,107 @@ impl Model {
             .filter(|(p, y)| (*p - *y).abs() < 1e-9)
             .count();
         correct as f64 / data.len() as f64
+    }
+}
+
+/// Trained ε-SVR model. Regression function:
+/// `f(x) = Σᵢ coefᵢ · K(svᵢ, x) − b` with coefᵢ = αᵢ − α*ᵢ ≠ 0.
+#[derive(Debug, Clone)]
+pub struct SvrModel {
+    /// Support vectors (training rows with a non-zero pair difference).
+    pub sv: Dataset,
+    /// coefᵢ = αᵢ − α*ᵢ for each support vector.
+    pub coef: Vec<f64>,
+    /// Bias (LibSVM's ρ; the regression function subtracts it).
+    pub b: f64,
+    /// The kernel the model was trained with.
+    pub kernel: Kernel,
+}
+
+impl SvrModel {
+    /// Extract a model from a [`GeneralSolver`](super::GeneralSolver)
+    /// result over the doubled ε-SVR problem on `train`.
+    pub fn from_result(train: &Dataset, kernel: Kernel, result: &SmoResult) -> SvrModel {
+        let delta = collapse_svr_pairs(&result.alpha);
+        let sv_idx: Vec<usize> = (0..train.len()).filter(|&i| delta[i] != 0.0).collect();
+        let coef: Vec<f64> = sv_idx.iter().map(|&i| delta[i]).collect();
+        SvrModel {
+            sv: train.select(&sv_idx),
+            coef,
+            b: result.b,
+            kernel,
+        }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Predicted regression values for every row of `data`.
+    pub fn predict(&self, data: &Dataset) -> Vec<f64> {
+        kernel_sums_minus_b(&self.sv, &self.coef, self.b, self.kernel, data)
+    }
+
+    /// Mean squared error against a labelled regression set.
+    pub fn mse(&self, data: &Dataset) -> f64 {
+        assert!(data.is_regression(), "mse needs regression targets");
+        let pred = self.predict(data);
+        pred.iter()
+            .zip(&data.targets)
+            .map(|(p, z)| (p - z) * (p - z))
+            .sum::<f64>()
+            / data.len() as f64
+    }
+}
+
+/// Trained one-class model. Decision function:
+/// `d(x) = Σᵢ αᵢ · K(svᵢ, x) − b`; `d(x) ≥ 0` ⇒ inlier (+1), else
+/// outlier (−1).
+#[derive(Debug, Clone)]
+pub struct OneClassModel {
+    /// Support vectors (training rows with αᵢ > 0).
+    pub sv: Dataset,
+    /// coefᵢ = αᵢ for each support vector.
+    pub coef: Vec<f64>,
+    /// Bias (LibSVM's ρ; the decision function subtracts it).
+    pub b: f64,
+    /// The kernel the model was trained with.
+    pub kernel: Kernel,
+}
+
+impl OneClassModel {
+    /// Extract a model from a [`GeneralSolver`](super::GeneralSolver)
+    /// result over the one-class problem on `train`.
+    pub fn from_result(train: &Dataset, kernel: Kernel, result: &SmoResult) -> OneClassModel {
+        let sv_idx: Vec<usize> = (0..train.len())
+            .filter(|&i| result.alpha[i] > 0.0)
+            .collect();
+        let coef: Vec<f64> = sv_idx.iter().map(|&i| result.alpha[i]).collect();
+        OneClassModel {
+            sv: train.select(&sv_idx),
+            coef,
+            b: result.b,
+            kernel,
+        }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Decision values for every row of `data` (≥ 0 ⇒ inlier).
+    pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
+        kernel_sums_minus_b(&self.sv, &self.coef, self.b, self.kernel, data)
+    }
+
+    /// Predicted labels (+1 inlier / −1 outlier) for every row of `data`.
+    pub fn predict(&self, data: &Dataset) -> Vec<f64> {
+        self.decision_values(data)
+            .into_iter()
+            .map(|d| if d >= 0.0 { 1.0 } else { -1.0 })
+            .collect()
     }
 }
 
@@ -141,6 +259,43 @@ mod tests {
     #[test]
     fn predict_emits_plus_minus_one() {
         let (ds, model) = train_simple();
+        for p in model.predict(&ds) {
+            assert!(p == 1.0 || p == -1.0);
+        }
+    }
+
+    #[test]
+    fn svr_model_predicts_sinc() {
+        use crate::smo::problem::{solver_for, SvrProblem};
+        let ds = crate::data::synth::generate_regression("sinc", Some(150), 3);
+        let kernel = Kernel::rbf(0.5);
+        let problem = SvrProblem { c: 10.0, epsilon: 0.05 };
+        let mut solver = solver_for(&problem, &ds, kernel, SmoParams::default());
+        let r = solver.solve();
+        assert!(r.converged);
+        let model = SvrModel::from_result(&ds, kernel, &r);
+        assert!(model.n_sv() > 0);
+        assert!(model.n_sv() <= ds.len());
+        // training MSE should be small for a smooth 1-d function
+        let mse = model.mse(&ds);
+        assert!(mse < 0.05, "training MSE {mse}");
+    }
+
+    #[test]
+    fn oneclass_model_keeps_nu_fraction_svs() {
+        use crate::smo::problem::{solver_for, OneClassProblem};
+        use crate::smo::QpProblem;
+        let ds = crate::data::synth::generate_outliers(Some(200), 0.1, 7);
+        let kernel = Kernel::rbf(1.0);
+        let problem = OneClassProblem { nu: 0.2 };
+        let mut solver = solver_for(&problem, &ds, kernel, SmoParams::default());
+        let beta0 = problem.initial_alpha(&ds);
+        let r = solver.solve_from(beta0, None);
+        assert!(r.converged);
+        let model = OneClassModel::from_result(&ds, kernel, &r);
+        // ν lower-bounds the SV fraction (up to the solver tolerance)
+        let frac = model.n_sv() as f64 / ds.len() as f64;
+        assert!(frac >= 0.2 - 0.05, "SV fraction {frac} below nu");
         for p in model.predict(&ds) {
             assert!(p == 1.0 || p == -1.0);
         }

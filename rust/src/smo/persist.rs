@@ -23,10 +23,19 @@ use crate::kernel::Kernel;
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+/// Errors from saving or loading a LibSVM-format model file.
 #[derive(Debug)]
 pub enum ModelIoError {
+    /// Underlying I/O failure.
     Io(std::io::Error),
-    Parse { line: usize, msg: String },
+    /// Malformed model file.
+    Parse {
+        /// 1-based line number.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
+    /// Valid LibSVM model of a kind this crate does not load.
     Unsupported(String),
 }
 
@@ -268,6 +277,7 @@ impl Model {
         })
     }
 
+    /// Load from a file path.
     pub fn load_file(path: impl AsRef<Path>) -> Result<Model, ModelIoError> {
         let f = std::fs::File::open(path)?;
         Model::load(f)

@@ -14,7 +14,9 @@ use crate::smo::{Model, SmoParams, Solver};
 /// A fitted sigmoid d ↦ 1/(1+exp(A·d+B)).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlattScaler {
+    /// Sigmoid slope A.
     pub a: f64,
+    /// Sigmoid offset B.
     pub b: f64,
 }
 

@@ -1,0 +1,339 @@
+//! The three LibSVM core formulations as [`QpProblem`] instances, plus
+//! the ε-SVR pair-variable helpers.
+//!
+//! Each problem builds the [`QpSpec`] the [`GeneralSolver`] consumes:
+//!
+//! - [`SvcProblem`] — binary C-SVC (the paper's setting; the specialised
+//!   [`Solver`](super::Solver) remains the production path for it, this
+//!   instance exists to cross-check the general solver against it);
+//! - [`SvrProblem`] — ε-SVR with the doubled α/α* variables and the
+//!   p-vector pᵢ = ε ∓ zᵢ;
+//! - [`OneClassProblem`] — Schölkopf one-class SVM with p = 0, unit box
+//!   and the Σα = ν·n equality constraint fixed by its initial point.
+
+use super::solver::{GeneralSolver, QpProblem, QpSpec, SmoResult};
+use crate::data::Dataset;
+
+/// Binary C-SVC as a [`QpProblem`]: signs = labels, p = −1, identity map.
+#[derive(Debug, Clone, Copy)]
+pub struct SvcProblem {
+    /// Penalty C (box constraint upper bound).
+    pub c: f64,
+}
+
+impl QpProblem for SvcProblem {
+    fn name(&self) -> &'static str {
+        "c_svc"
+    }
+
+    fn spec(&self, ds: &Dataset) -> QpSpec {
+        let n = ds.len();
+        QpSpec {
+            signs: ds.y.clone(),
+            p: vec![-1.0; n],
+            c: self.c,
+            map: (0..n).collect(),
+        }
+    }
+
+    fn initial_alpha(&self, ds: &Dataset) -> Vec<f64> {
+        vec![0.0; ds.len()]
+    }
+}
+
+/// ε-SVR as a [`QpProblem`] over 2n variables β = (α, α*):
+///
+/// ```text
+///   min  ½ βᵀQβ + pᵀβ,   Q_ij = s_i·s_j·K(i mod n, j mod n)
+///   s    = (+1, …, +1, −1, …, −1)
+///   p_i  = ε − z_i   (α side),    p_{n+i} = ε + z_i   (α* side)
+///   0 ≤ β ≤ C,   Σα − Σα* = 0
+/// ```
+///
+/// The regression function is f(x) = Σᵢ (αᵢ − α*ᵢ)·K(xᵢ, x) − ρ with ρ
+/// from the solver's bias (LibSVM's sign convention).
+#[derive(Debug, Clone, Copy)]
+pub struct SvrProblem {
+    /// Penalty C (box constraint upper bound).
+    pub c: f64,
+    /// Tube half-width ε: residuals within ±ε cost nothing.
+    pub epsilon: f64,
+}
+
+impl QpProblem for SvrProblem {
+    fn name(&self) -> &'static str {
+        "epsilon_svr"
+    }
+
+    fn spec(&self, ds: &Dataset) -> QpSpec {
+        assert!(
+            ds.is_regression(),
+            "epsilon-SVR needs a regression dataset (Dataset::regression)"
+        );
+        assert!(self.epsilon >= 0.0, "epsilon must be >= 0");
+        let n = ds.len();
+        let mut signs = vec![1.0; 2 * n];
+        signs[n..].iter_mut().for_each(|s| *s = -1.0);
+        let mut p = Vec::with_capacity(2 * n);
+        for &z in &ds.targets {
+            p.push(self.epsilon - z);
+        }
+        for &z in &ds.targets {
+            p.push(self.epsilon + z);
+        }
+        let map: Vec<usize> = (0..n).chain(0..n).collect();
+        QpSpec {
+            signs,
+            p,
+            c: self.c,
+            map,
+        }
+    }
+
+    fn initial_alpha(&self, ds: &Dataset) -> Vec<f64> {
+        vec![0.0; 2 * ds.len()]
+    }
+}
+
+/// One-class SVM (Schölkopf et al.) as a [`QpProblem`]: p = 0, unit box,
+/// all signs +1. The constraint Σα = ν·n is established by
+/// [`QpProblem::initial_alpha`] (LibSVM's ⌊νn⌋-ones-plus-fraction point)
+/// and preserved by every SMO update.
+#[derive(Debug, Clone, Copy)]
+pub struct OneClassProblem {
+    /// ν ∈ (0, 1]: upper bound on the outlier fraction / lower bound on
+    /// the support-vector fraction.
+    pub nu: f64,
+}
+
+impl QpProblem for OneClassProblem {
+    fn name(&self) -> &'static str {
+        "one_class"
+    }
+
+    fn spec(&self, ds: &Dataset) -> QpSpec {
+        assert!(
+            self.nu > 0.0 && self.nu <= 1.0,
+            "nu must be in (0, 1], got {}",
+            self.nu
+        );
+        let n = ds.len();
+        QpSpec {
+            signs: vec![1.0; n],
+            p: vec![0.0; n],
+            c: 1.0,
+            map: (0..n).collect(),
+        }
+    }
+
+    fn initial_alpha(&self, ds: &Dataset) -> Vec<f64> {
+        oneclass_initial_alpha(self.nu, ds.len())
+    }
+}
+
+/// LibSVM's feasible one-class start: the first ⌊ν·n⌋ variables at the
+/// unit bound, one fractional remainder, the rest zero — the unique point
+/// of this shape with Σα = ν·n.
+pub fn oneclass_initial_alpha(nu: f64, n: usize) -> Vec<f64> {
+    let mut alpha = vec![0.0; n];
+    let total = nu * n as f64;
+    let full = (total.floor() as usize).min(n);
+    alpha.iter_mut().take(full).for_each(|a| *a = 1.0);
+    if full < n {
+        alpha[full] = total - full as f64;
+    }
+    alpha
+}
+
+/// Expand ε-SVR pair differences δ = α − α* (each in \[−C, C\]) into the
+/// doubled feasible β = (max(δ, 0), max(−δ, 0)) the solver consumes.
+/// The expansion is complementary (αᵢ·α*ᵢ = 0) and preserves
+/// Σsᵢβᵢ = Σδᵢ.
+pub fn expand_svr_pairs(delta: &[f64]) -> Vec<f64> {
+    let n = delta.len();
+    let mut beta = vec![0.0; 2 * n];
+    for (i, &d) in delta.iter().enumerate() {
+        if d > 0.0 {
+            beta[i] = d;
+        } else if d < 0.0 {
+            beta[n + i] = -d;
+        }
+    }
+    beta
+}
+
+/// Collapse a solved doubled β back to the pair differences
+/// δᵢ = βᵢ − β_{n+i} — the dual coefficients of the regression function.
+pub fn collapse_svr_pairs(beta: &[f64]) -> Vec<f64> {
+    let n = beta.len() / 2;
+    assert_eq!(beta.len(), 2 * n, "doubled vector must have even length");
+    (0..n).map(|i| beta[i] - beta[n + i]).collect()
+}
+
+/// Per-instance tube residuals eᵢ = f(xᵢ) − zᵢ of a solved ε-SVR, read
+/// directly off the solver's α-side gradient: for the α variable i,
+/// Gᵢ = (ε − zᵢ) + Σⱼ δⱼK(i,j), and f(xᵢ) = ΣⱼδⱼK(i,j) − ρ, hence
+/// eᵢ = Gᵢ − ε − ρ. These residuals are the ε-SVR analogue of the
+/// paper's optimality indicators fᵢ and feed the SVR seeders.
+pub fn svr_errors(result: &SmoResult, epsilon: f64) -> Vec<f64> {
+    let n = result.g.len() / 2;
+    (0..n).map(|i| result.g[i] - epsilon - result.b).collect()
+}
+
+/// Convenience: build a [`GeneralSolver`] for `problem` over `ds`.
+pub fn solver_for(
+    problem: &dyn QpProblem,
+    ds: &Dataset,
+    kernel: crate::kernel::Kernel,
+    params: super::SmoParams,
+) -> GeneralSolver {
+    let spec = problem.spec(ds);
+    GeneralSolver::new(crate::kernel::KernelEval::new(ds.clone(), kernel), spec, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, KernelEval};
+    use crate::smo::{SmoParams, Solver};
+
+    #[test]
+    fn general_solver_matches_binary_on_csvc() {
+        let ds = crate::data::synth::generate("heart", Some(80), 3);
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.2));
+        let mut bin = Solver::new(eval.clone(), SmoParams::with_c(2.0));
+        let rb = bin.solve();
+        assert!(rb.converged);
+
+        let mut gen = solver_for(&SvcProblem { c: 2.0 }, &ds, Kernel::rbf(0.2), SmoParams::with_c(2.0));
+        let rg = gen.solve();
+        assert!(rg.converged);
+        assert!(
+            (rg.objective - rb.objective).abs() < 1e-3 * rb.objective.abs().max(1.0),
+            "objective: general {} vs binary {}",
+            rg.objective,
+            rb.objective
+        );
+        assert!((rg.b - rb.b).abs() < 5e-3, "bias {} vs {}", rg.b, rb.b);
+    }
+
+    #[test]
+    fn svr_fits_sinc_within_tube() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(120), 7);
+        let problem = SvrProblem { c: 10.0, epsilon: 0.1 };
+        let mut solver = solver_for(&problem, &ds, Kernel::rbf(0.5), SmoParams::default());
+        let r = solver.solve();
+        assert!(r.converged);
+        // equality constraint Σα − Σα* = 0 preserved from the zero start
+        let n = ds.len();
+        let sum: f64 = (0..n).map(|i| r.alpha[i] - r.alpha[n + i]).sum();
+        assert!(sum.abs() < 1e-6, "sum delta = {sum}");
+        // complementarity holds at the optimum for ε > 0; at the solver's
+        // finite tolerance only tiny simultaneous activations can remain
+        for i in 0..n {
+            let both_free = r.alpha[i] > 0.05 && r.alpha[n + i] > 0.05;
+            assert!(!both_free, "pair {i} has both alpha and alpha* active");
+        }
+        // most training residuals fall inside (a slack above) the ε-tube
+        let delta = collapse_svr_pairs(&r.alpha);
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.5));
+        let mut inside = 0usize;
+        for t in 0..n {
+            let f: f64 = (0..n).map(|j| delta[j] * eval.eval(j, t)).sum::<f64>() - r.b;
+            if (f - ds.targets[t]).abs() <= 0.1 + 0.1 {
+                inside += 1;
+            }
+        }
+        assert!(
+            inside as f64 >= 0.85 * n as f64,
+            "only {inside}/{n} residuals near the tube"
+        );
+    }
+
+    #[test]
+    fn svr_errors_match_direct_evaluation() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(80), 11);
+        let epsilon = 0.1;
+        let problem = SvrProblem { c: 5.0, epsilon };
+        let mut solver = solver_for(&problem, &ds, Kernel::rbf(0.5), SmoParams::default());
+        let r = solver.solve();
+        assert!(r.converged);
+        let delta = collapse_svr_pairs(&r.alpha);
+        let errs = svr_errors(&r, epsilon);
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.5));
+        for t in 0..ds.len() {
+            let f: f64 = (0..ds.len())
+                .map(|j| delta[j] * eval.eval(j, t))
+                .sum::<f64>()
+                - r.b;
+            assert!(
+                (errs[t] - (f - ds.targets[t])).abs() < 1e-6,
+                "residual {t}: {} vs {}",
+                errs[t],
+                f - ds.targets[t]
+            );
+        }
+    }
+
+    #[test]
+    fn oneclass_flags_far_outliers() {
+        let ds = crate::data::synth::generate_outliers(Some(200), 0.1, 5);
+        let nu = 0.15;
+        let problem = OneClassProblem { nu };
+        let mut solver = solver_for(&problem, &ds, Kernel::rbf(1.0), SmoParams::default());
+        let beta0 = problem.initial_alpha(&ds);
+        let r = solver.solve_from(beta0, None);
+        assert!(r.converged);
+        // Σα = ν·n preserved
+        let sum: f64 = r.alpha.iter().sum();
+        assert!(
+            (sum - nu * ds.len() as f64).abs() < 1e-6,
+            "sum alpha {sum} vs nu*n {}",
+            nu * ds.len() as f64
+        );
+        // decision d(x) = Σ αᵢK(xᵢ,x) − ρ: ground-truth outliers score lower
+        let eval = KernelEval::new(ds.clone(), Kernel::rbf(1.0));
+        let dec: Vec<f64> = (0..ds.len())
+            .map(|t| {
+                (0..ds.len())
+                    .map(|j| r.alpha[j] * eval.eval(j, t))
+                    .sum::<f64>()
+                    - r.b
+            })
+            .collect();
+        let mean_of = |label: f64| {
+            let vals: Vec<f64> = dec
+                .iter()
+                .zip(&ds.y)
+                .filter(|(_, &y)| y == label)
+                .map(|(&d, _)| d)
+                .collect();
+            vals.iter().sum::<f64>() / vals.len() as f64
+        };
+        assert!(
+            mean_of(1.0) > mean_of(-1.0),
+            "inliers should score above outliers: {} vs {}",
+            mean_of(1.0),
+            mean_of(-1.0)
+        );
+    }
+
+    #[test]
+    fn oneclass_initial_point_sums_to_nu_n() {
+        for (nu, n) in [(0.1, 50), (0.5, 7), (1.0, 4), (0.3, 1)] {
+            let a = oneclass_initial_alpha(nu, n);
+            assert_eq!(a.len(), n);
+            let sum: f64 = a.iter().sum();
+            assert!((sum - nu * n as f64).abs() < 1e-12, "nu={nu} n={n}");
+            assert!(a.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn expand_collapse_roundtrip() {
+        let delta = vec![0.5, -1.25, 0.0, 2.0];
+        let beta = expand_svr_pairs(&delta);
+        assert_eq!(beta, vec![0.5, 0.0, 0.0, 2.0, 0.0, 1.25, 0.0, 0.0]);
+        assert_eq!(collapse_svr_pairs(&beta), delta);
+    }
+}

@@ -1,5 +1,8 @@
-//! The SMO solver core.
+//! The SMO solver core: the binary C-SVC fast path ([`Solver`]) and the
+//! QP-problem abstraction ([`QpProblem`]/[`QpSpec`]/[`GeneralSolver`])
+//! that extends the same decomposition method to ε-SVR and one-class SVM.
 
+use crate::data::Dataset;
 use crate::kernel::{KernelCache, KernelEval};
 use std::time::Instant;
 
@@ -40,6 +43,7 @@ impl Default for SmoParams {
 }
 
 impl SmoParams {
+    /// Defaults with the given penalty C.
     pub fn with_c(c: f64) -> SmoParams {
         SmoParams {
             c,
@@ -100,20 +104,24 @@ pub struct Solver {
 }
 
 impl Solver {
+    /// Bind a solver to a training set (labels come from `eval.ds.y`).
     pub fn new(eval: KernelEval, params: SmoParams) -> Solver {
         let y = eval.ds.y.clone();
         let cache = KernelCache::with_byte_budget(eval, params.cache_bytes);
         Solver { cache, y, params }
     }
 
+    /// The solver's hyper-parameters.
     pub fn params(&self) -> &SmoParams {
         &self.params
     }
 
+    /// Mutable access to the kernel-row cache (reused across re-solves).
     pub fn cache(&mut self) -> &mut KernelCache {
         &mut self.cache
     }
 
+    /// Number of training instances.
     pub fn n(&self) -> usize {
         self.y.len()
     }
@@ -402,9 +410,12 @@ impl Solver {
             }
             let b_it = gmax - v; // violation margin
             if b_it > 0.0 {
-                // a_it = K_ii + K_tt − 2·y_i·y_t·K_it   (sign folds into Q)
+                // Curvature along the SMO pair direction (Δαᵢ = yᵢ·η,
+                // Δα_t = −y_t·η): dᵀQd/η² = K_ii + K_tt − 2·K_it — raw
+                // kernel values, the label signs cancel (LibSVM's
+                // quad_coef in both label branches).
                 let ktt = self.diag(t);
-                let mut a_it = kii + ktt - 2.0 * self.y[i] * self.y[t] * row_i[t];
+                let mut a_it = kii + ktt - 2.0 * row_i[t];
                 if a_it <= 0.0 {
                     a_it = TAU;
                 }
@@ -541,6 +552,392 @@ impl Solver {
 
 fn active_is_all(active: &[usize], n: usize) -> bool {
     active.len() == n
+}
+
+// ---- the QP-problem abstraction -------------------------------------------
+
+/// Complete description of one SMO-solvable quadratic program
+///
+/// ```text
+///   min  ½ βᵀQβ + pᵀβ     s.t.  0 ≤ βᵢ ≤ C,   Σᵢ signsᵢ·βᵢ = const
+/// ```
+///
+/// with `Q_ij = signsᵢ·signsⱼ·K(map[i], map[j])` over a kernel matrix on
+/// the underlying dataset. The three LibSVM core formulations instantiate
+/// it as:
+///
+/// | problem | variables | signs | p | map |
+/// |---------|-----------|-------|---|-----|
+/// | C-SVC | n | yᵢ | −1 | identity |
+/// | ε-SVR | 2n (α then α*) | +1ⁿ, −1ⁿ | ε−zᵢ, ε+zᵢ | i mod n |
+/// | one-class | n | +1ⁿ | 0 | identity |
+///
+/// The equality constraint's value is whatever the initial β satisfies
+/// (0 for C-SVC/ε-SVR, ν·n for one-class) — the SMO pair updates preserve
+/// it exactly, so the solver never needs to know it.
+#[derive(Debug, Clone)]
+pub struct QpSpec {
+    /// Per-variable sign sᵢ ∈ {+1, −1} in the equality constraint and Q.
+    pub signs: Vec<f64>,
+    /// Linear term pᵢ of the objective (−1 for C-SVC).
+    pub p: Vec<f64>,
+    /// Box upper bound C, uniform over variables.
+    pub c: f64,
+    /// Variable → dataset-row map for kernel lookups (doubles rows for the
+    /// ε-SVR α/α* pairs: variable i reads kernel row `map[i]`).
+    pub map: Vec<usize>,
+}
+
+impl QpSpec {
+    /// Number of QP variables (2n for ε-SVR, n otherwise).
+    pub fn n_var(&self) -> usize {
+        self.signs.len()
+    }
+}
+
+/// One of the three LibSVM training objectives, expressed as a recipe for
+/// building the [`QpSpec`] and the feasible cold-start point over a given
+/// dataset. Implementations live in `smo::problem`
+/// ([`SvcProblem`](super::SvcProblem), [`SvrProblem`](super::SvrProblem),
+/// [`OneClassProblem`](super::OneClassProblem)).
+pub trait QpProblem {
+    /// Short name for tables and reports ("c_svc", "epsilon_svr", ...).
+    fn name(&self) -> &'static str;
+
+    /// Build the QP description over `ds`.
+    fn spec(&self, ds: &Dataset) -> QpSpec;
+
+    /// The feasible cold-start β (all-zero for C-SVC/ε-SVR; the LibSVM
+    /// ν-fraction initial point for one-class, which fixes Σβ = ν·n).
+    fn initial_alpha(&self, ds: &Dataset) -> Vec<f64>;
+}
+
+/// SMO solver over an arbitrary [`QpSpec`] — the engine behind the ε-SVR
+/// and one-class paths. Runs the same second-order working-set selection
+/// (WSS2) and two-variable update as the binary [`Solver`]; it skips
+/// LibSVM-style shrinking (the active set stays full), trading some speed
+/// on large problems for a materially simpler solver that is easy to
+/// verify against the specialised binary path.
+pub struct GeneralSolver {
+    cache: KernelCache,
+    spec: QpSpec,
+    params: SmoParams,
+}
+
+impl GeneralSolver {
+    /// Bind a solver to a kernel evaluator and a QP description. The
+    /// kernel cache is sized by `params.cache_bytes`; `params.c` and
+    /// `params.shrinking` are ignored (the box bound comes from
+    /// `spec.c`, and the general path does not shrink).
+    pub fn new(eval: KernelEval, spec: QpSpec, params: SmoParams) -> GeneralSolver {
+        assert_eq!(spec.signs.len(), spec.p.len(), "signs/p length mismatch");
+        assert_eq!(spec.signs.len(), spec.map.len(), "signs/map length mismatch");
+        let n_data = eval.len();
+        assert!(
+            spec.map.iter().all(|&d| d < n_data),
+            "kernel map references a row outside the dataset"
+        );
+        let cache = KernelCache::with_byte_budget(eval, params.cache_bytes);
+        GeneralSolver {
+            cache,
+            spec,
+            params,
+        }
+    }
+
+    /// The QP description this solver optimises.
+    pub fn spec(&self) -> &QpSpec {
+        &self.spec
+    }
+
+    /// Number of QP variables.
+    pub fn n_var(&self) -> usize {
+        self.spec.n_var()
+    }
+
+    /// Solve from the all-zero start. (For one-class problems pass the
+    /// [`QpProblem::initial_alpha`] point to [`GeneralSolver::solve_from`]
+    /// instead — β = 0 does not satisfy Σβ = ν·n.)
+    pub fn solve(&mut self) -> SmoResult {
+        let m = self.n_var();
+        self.solve_from(vec![0.0; m], None)
+    }
+
+    /// Solve from a feasible β (0 ≤ βᵢ ≤ C; the equality constraint's
+    /// value is taken from β itself and preserved exactly). `initial_g`
+    /// may carry a pre-computed gradient Gᵢ = Σⱼ βⱼQᵢⱼ + pᵢ.
+    pub fn solve_from(&mut self, beta: Vec<f64>, initial_g: Option<Vec<f64>>) -> SmoResult {
+        let m = self.n_var();
+        assert_eq!(beta.len(), m);
+        let c = self.spec.c;
+        debug_assert!(
+            beta.iter().all(|&b| (-1e-9..=c + 1e-9).contains(&b)),
+            "initial beta violates box constraints"
+        );
+
+        let grad_start = Instant::now();
+        let mut g = match initial_g {
+            Some(g) => {
+                assert_eq!(g.len(), m);
+                g
+            }
+            None => self.compute_gradient(&beta),
+        };
+        let grad_init_secs = grad_start.elapsed().as_secs_f64();
+
+        let mut beta = beta;
+        let mut iter: u64 = 0;
+        let mut converged = false;
+
+        loop {
+            if iter >= self.params.max_iter {
+                break;
+            }
+            let (i, j) = match self.select_working_set(&beta, &g) {
+                Some((i, j, _)) => (i, j),
+                None => {
+                    converged = true;
+                    break;
+                }
+            };
+            iter += 1;
+
+            // Two-variable subproblem — the LibSVM update on Q-space
+            // indices, with the data-row map applied at kernel lookups.
+            let (si, sj) = (self.spec.signs[i], self.spec.signs[j]);
+            let (di, dj) = (self.spec.map[i], self.spec.map[j]);
+            let (kii, kjj) = (self.cache.value(di, di), self.cache.value(dj, dj));
+            let kij = self.cache.value(di, dj);
+            let mut quad = kii + kjj - 2.0 * kij;
+            if quad <= 0.0 {
+                quad = TAU;
+            }
+
+            let (old_bi, old_bj) = (beta[i], beta[j]);
+            if si != sj {
+                let delta = (-g[i] - g[j]) / quad;
+                let diff = beta[i] - beta[j];
+                beta[i] += delta;
+                beta[j] += delta;
+                if diff > 0.0 {
+                    if beta[j] < 0.0 {
+                        beta[j] = 0.0;
+                        beta[i] = diff;
+                    }
+                } else if beta[i] < 0.0 {
+                    beta[i] = 0.0;
+                    beta[j] = -diff;
+                }
+                if diff > 0.0 {
+                    if beta[i] > c {
+                        beta[i] = c;
+                        beta[j] = c - diff;
+                    }
+                } else if beta[j] > c {
+                    beta[j] = c;
+                    beta[i] = c + diff;
+                }
+            } else {
+                let delta = (g[i] - g[j]) / quad;
+                let sum = beta[i] + beta[j];
+                beta[i] -= delta;
+                beta[j] += delta;
+                if sum > c {
+                    if beta[i] > c {
+                        beta[i] = c;
+                        beta[j] = sum - c;
+                    }
+                } else if beta[j] < 0.0 {
+                    beta[j] = 0.0;
+                    beta[i] = sum;
+                }
+                if sum > c {
+                    if beta[j] > c {
+                        beta[j] = c;
+                        beta[i] = sum - c;
+                    }
+                } else if beta[i] < 0.0 {
+                    beta[i] = 0.0;
+                    beta[j] = sum;
+                }
+            }
+
+            // Gradient update: G_t += Q_ti·Δβᵢ + Q_tj·Δβⱼ with
+            // Q_ti = s_t·sᵢ·K(map[t], map[i]).
+            let dbi = beta[i] - old_bi;
+            let dbj = beta[j] - old_bj;
+            if dbi != 0.0 || dbj != 0.0 {
+                let ci = si * dbi;
+                let cj = sj * dbj;
+                let (row_i, row_j) = self.cache.row_pair(di, dj);
+                for t in 0..m {
+                    let dt = self.spec.map[t];
+                    g[t] += self.spec.signs[t] * (ci * row_i[dt] + cj * row_j[dt]);
+                }
+            }
+        }
+
+        let b = self.compute_bias(&beta, &g);
+
+        // Dual objective ½·Σᵢ βᵢ(Gᵢ + pᵢ)  (since G = Qβ + p).
+        let objective = 0.5
+            * beta
+                .iter()
+                .zip(&g)
+                .zip(&self.spec.p)
+                .map(|((&bv, &gv), &pv)| bv * (gv + pv))
+                .sum::<f64>();
+
+        let n_sv = beta.iter().filter(|&&b| b > 0.0).count();
+        let n_bsv = beta.iter().filter(|&&b| b >= c).count();
+
+        SmoResult {
+            alpha: beta,
+            b,
+            iterations: iter,
+            objective,
+            n_sv,
+            n_bsv,
+            converged,
+            grad_init_secs,
+            g,
+        }
+    }
+
+    /// Gᵢ = Σⱼ βⱼQᵢⱼ + pᵢ from the non-zero variables. Sequential — the
+    /// general path leaves the parallel blocked sweep to the binary
+    /// solver, whose cache layout it would otherwise duplicate.
+    pub fn compute_gradient(&mut self, beta: &[f64]) -> Vec<f64> {
+        let m = self.n_var();
+        assert_eq!(beta.len(), m);
+        let mut g = self.spec.p.clone();
+        for j in 0..m {
+            if beta[j] > 0.0 {
+                let coef = beta[j] * self.spec.signs[j];
+                let dj = self.spec.map[j];
+                let row = self.cache.row(dj);
+                for t in 0..m {
+                    g[t] += self.spec.signs[t] * coef * row[self.spec.map[t]];
+                }
+            }
+        }
+        g
+    }
+
+    /// WSS2 over the full variable set; `None` when ε-optimal.
+    fn select_working_set(&mut self, beta: &[f64], g: &[f64]) -> Option<(usize, usize, f64)> {
+        let m = beta.len();
+        let c = self.spec.c;
+
+        // i = argmax_{t ∈ I_up} −s_t·G_t
+        let mut gmax = f64::NEG_INFINITY;
+        let mut i = usize::MAX;
+        for t in 0..m {
+            let s = self.spec.signs[t];
+            let in_up = (s > 0.0 && beta[t] < c) || (s < 0.0 && beta[t] > 0.0);
+            if in_up {
+                let v = -s * g[t];
+                if v >= gmax {
+                    gmax = v;
+                    i = t;
+                }
+            }
+        }
+        if i == usize::MAX {
+            return None;
+        }
+
+        let di = self.spec.map[i];
+        // Same raw-slice trick as the binary path: `diag` below only takes
+        // the scalar cache path (never inserts or evicts rows), so the
+        // pinned row stays resident for the whole scan.
+        let row_i = {
+            let r = self.cache.row(di);
+            r.as_ptr()
+        };
+        let n_data = self.cache.n();
+        let row_i: &[f64] = unsafe { std::slice::from_raw_parts(row_i, n_data) };
+        let kii = row_i[di];
+
+        let mut gmin = f64::INFINITY;
+        let mut obj_min = f64::INFINITY;
+        let mut j = usize::MAX;
+        for t in 0..m {
+            let s = self.spec.signs[t];
+            let in_low = (s > 0.0 && beta[t] > 0.0) || (s < 0.0 && beta[t] < c);
+            if !in_low {
+                continue;
+            }
+            let v = -s * g[t];
+            if v < gmin {
+                gmin = v;
+            }
+            let b_it = gmax - v;
+            if b_it > 0.0 {
+                // Curvature along the SMO pair direction (Δβᵢ = sᵢ·η,
+                // Δβ_t = −s_t·η): dᵀQd/η² = K_ii + K_tt − 2·K_it — raw
+                // kernel values, the signs cancel. This matches the
+                // update step's `quad` exactly (LibSVM's quad_coef); an
+                // ε-SVR (αᵢ, α*ᵢ) pair is a flat direction (a = 0 → TAU).
+                let ktt = self.diag(t);
+                let mut a_it = kii + ktt - 2.0 * row_i[self.spec.map[t]];
+                if a_it <= 0.0 {
+                    a_it = TAU;
+                }
+                let dec = -(b_it * b_it) / a_it;
+                if dec <= obj_min {
+                    obj_min = dec;
+                    j = t;
+                }
+            }
+        }
+
+        if gmax - gmin < self.params.eps || j == usize::MAX {
+            return None;
+        }
+        Some((i, j, gmax - gmin))
+    }
+
+    /// K(map[t], map[t]); O(1) for RBF (=1), computed otherwise.
+    #[inline]
+    fn diag(&mut self, t: usize) -> f64 {
+        match self.cache.eval().kernel {
+            crate::kernel::Kernel::Rbf { .. } => 1.0,
+            _ => {
+                let dt = self.spec.map[t];
+                self.cache.value(dt, dt)
+            }
+        }
+    }
+
+    /// ρ from the final gradient — the same free-variable average as the
+    /// binary path, over the problem's signs.
+    fn compute_bias(&self, beta: &[f64], g: &[f64]) -> f64 {
+        let c = self.spec.c;
+        let mut free_sum = 0.0;
+        let mut free_count = 0usize;
+        let (mut ub, mut lb) = (f64::INFINITY, f64::NEG_INFINITY);
+        for t in 0..beta.len() {
+            let s = self.spec.signs[t];
+            let sg = s * g[t];
+            if beta[t] > 0.0 && beta[t] < c {
+                free_sum += sg;
+                free_count += 1;
+            } else {
+                let in_up = (s > 0.0 && beta[t] <= 0.0) || (s < 0.0 && beta[t] >= c);
+                if in_up {
+                    ub = ub.min(sg);
+                } else {
+                    lb = lb.max(sg);
+                }
+            }
+        }
+        if free_count > 0 {
+            free_sum / free_count as f64
+        } else {
+            (ub + lb) / 2.0
+        }
+    }
 }
 
 #[cfg(test)]

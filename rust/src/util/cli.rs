@@ -6,6 +6,44 @@
 
 use std::collections::BTreeMap;
 
+/// Training objective selected by `--task` (the three LibSVM core
+/// formulations this crate trains).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Task {
+    /// Binary C-SVC — the paper's setting (default).
+    #[default]
+    CSvc,
+    /// ε-SVR regression over the doubled α/α* dual.
+    Svr,
+    /// One-class SVM (Schölkopf) for anomaly detection.
+    OneClass,
+}
+
+impl std::str::FromStr for Task {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Task, String> {
+        match s {
+            "csvc" | "c-svc" | "svc" => Ok(Task::CSvc),
+            "svr" | "epsilon-svr" | "eps-svr" => Ok(Task::Svr),
+            "oneclass" | "one-class" | "ocsvm" => Ok(Task::OneClass),
+            other => Err(format!(
+                "unknown task '{other}' (expected csvc|svr|oneclass)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Task::CSvc => "csvc",
+            Task::Svr => "svr",
+            Task::OneClass => "oneclass",
+        })
+    }
+}
+
 /// Parsed command line: one optional subcommand, options, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -247,5 +285,18 @@ mod tests {
         let _ = a.opt_str("dataset");
         let err = a.reject_unknown().unwrap_err();
         assert!(err.to_string().contains("--gama"));
+    }
+
+    #[test]
+    fn task_parses_aliases_and_defaults() {
+        let a = parse("cv --task svr");
+        assert_eq!(a.parse_or::<Task>("task", Task::CSvc).unwrap(), Task::Svr);
+        let b = parse("cv");
+        assert_eq!(b.parse_or::<Task>("task", Task::CSvc).unwrap(), Task::CSvc);
+        assert_eq!("one-class".parse::<Task>().unwrap(), Task::OneClass);
+        assert_eq!("epsilon-svr".parse::<Task>().unwrap(), Task::Svr);
+        assert!("nope".parse::<Task>().is_err());
+        assert_eq!(Task::Svr.to_string(), "svr");
+        assert_eq!(Task::default(), Task::CSvc);
     }
 }

@@ -2,15 +2,19 @@
 //! in-repo `testing::prop` harness (DESIGN.md §6):
 //!
 //!  (a) SMO output satisfies the KKT conditions within tolerance,
-//!  (b) every seeder emits a feasible α (box + Σyα = 0),
+//!  (b) every seeder emits a feasible α (box + Σyα = 0) — across
+//!      randomized fold transitions, for both the C-SVC chain and the
+//!      ε-SVR pair-variable chain (box [−C, C] + Σδ = 0),
 //!  (c) seeded and cold training converge to the same objective,
 //!  (d) the fold partitioner is a permutation-exact cover,
 //!  (e) the kernel cache returns bit-identical rows under eviction.
 
 use alphaseed::data::FoldPlan;
 use alphaseed::kernel::{Kernel, KernelCache, KernelEval};
+use alphaseed::seeding::svr::{check_feasible_delta, svr_seeder_by_name, SvrSeedContext};
 use alphaseed::seeding::{check_feasible, seeder_by_name, SeedContext};
-use alphaseed::smo::{kkt_violation, SmoParams, Solver};
+use alphaseed::smo::problem::{collapse_svr_pairs, svr_errors, SvrProblem};
+use alphaseed::smo::{kkt_violation, GeneralSolver, QpProblem, SmoParams, Solver};
 use alphaseed::testing::{for_all, gen_svm_problem, PropConfig};
 
 #[test]
@@ -115,6 +119,129 @@ fn prop_every_seeder_feasible_and_objective_preserving() {
                         rw.objective, rc.objective
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csvc_seeders_feasible_at_random_transitions() {
+    // (b) with the transition index h randomized, not just h = 0: every
+    // round-to-round handoff of the chain must produce a feasible seed.
+    for_all(
+        PropConfig { cases: 8, seed: 0xB0B },
+        |rng| {
+            let n = 40 + rng.gen_range(40);
+            let k = 3 + rng.gen_range(3); // 3..=5
+            let h = rng.gen_range(k - 1); // 0..k-2
+            let sep = rng.uniform(0.4, 1.5);
+            let p = gen_svm_problem(rng, n, 3, sep);
+            (p, k, h)
+        },
+        |(p, k, h)| {
+            let kernel = Kernel::rbf(p.gamma);
+            let plan = FoldPlan::stratified(&p.ds, *k, 5);
+            let prev_train = plan.train_indices(*h);
+            let train = p.ds.select(&prev_train);
+            let mut s0 =
+                Solver::new(KernelEval::new(train.clone(), kernel), SmoParams::with_c(p.c));
+            let r0 = s0.solve();
+            if !r0.converged {
+                return Err("round h did not converge".into());
+            }
+            let prev_f = r0.f_indicators(&train.y);
+            let trans = plan.transition(*h);
+            let next_train = plan.train_indices(*h + 1);
+            let next_y: Vec<f64> = next_train.iter().map(|&i| p.ds.y[i]).collect();
+            for name in ["cold", "ato", "mir", "sir"] {
+                let seeder = seeder_by_name(name).unwrap();
+                let ctx = SeedContext {
+                    full: &p.ds,
+                    kernel,
+                    c: p.c,
+                    prev_train: &prev_train,
+                    prev_alpha: &r0.alpha,
+                    prev_f: &prev_f,
+                    prev_b: r0.b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &next_train,
+                    rng_seed: 13,
+                };
+                let mut cache = KernelCache::with_byte_budget(
+                    KernelEval::new(p.ds.clone(), kernel),
+                    16 << 20,
+                );
+                let seed = seeder.seed(&ctx, &mut cache);
+                check_feasible(&seed.alpha, &next_y, p.c).map_err(|e| format!("{name} at h={h}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_svr_seeders_feasible_at_random_transitions() {
+    // (b) for the ε-SVR chain: every seeder's δ satisfies the pair-space
+    // invariants (δ ∈ [−C, C], Σδ = 0) across randomized datasets,
+    // hyper-parameters, fold counts and transition indices.
+    for_all(
+        PropConfig { cases: 8, seed: 0x57A },
+        |rng| {
+            let n = 50 + rng.gen_range(50);
+            let k = 3 + rng.gen_range(3); // 3..=5
+            let h = rng.gen_range(k - 1);
+            let name = if rng.bernoulli(0.5) { "sinc" } else { "friedman1" };
+            let c = rng.uniform(1.0, 20.0);
+            let epsilon = rng.uniform(0.01, 0.2);
+            let gamma = rng.uniform(0.2, 1.0);
+            let data_seed = rng.gen_range(1_000_000) as u64;
+            (name, n, k, h, c, epsilon, gamma, data_seed)
+        },
+        |&(name, n, k, h, c, epsilon, gamma, data_seed)| {
+            let full = alphaseed::data::synth::generate_regression(name, Some(n), data_seed);
+            let kernel = Kernel::rbf(gamma);
+            let plan = FoldPlan::random(full.len(), k, 5);
+            let prev_train = plan.train_indices(h);
+            let train = full.select(&prev_train);
+            let problem = SvrProblem { c, epsilon };
+            let mut s0 = GeneralSolver::new(
+                KernelEval::new(train.clone(), kernel),
+                problem.spec(&train),
+                SmoParams::default(),
+            );
+            let r0 = s0.solve();
+            if !r0.converged {
+                return Err("round h did not converge".into());
+            }
+            let prev_delta = collapse_svr_pairs(&r0.alpha);
+            let prev_err = svr_errors(&r0, epsilon);
+            let trans = plan.transition(h);
+            let next_train = plan.train_indices(h + 1);
+            for seeder_name in ["cold", "ato", "mir", "sir"] {
+                let seeder = svr_seeder_by_name(seeder_name).unwrap();
+                let ctx = SvrSeedContext {
+                    full: &full,
+                    kernel,
+                    c,
+                    epsilon,
+                    prev_train: &prev_train,
+                    prev_delta: &prev_delta,
+                    prev_err: &prev_err,
+                    prev_b: r0.b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &next_train,
+                    rng_seed: 13,
+                };
+                let mut cache = KernelCache::with_byte_budget(
+                    KernelEval::new(full.clone(), kernel),
+                    16 << 20,
+                );
+                let seed = seeder.seed(&ctx, &mut cache);
+                check_feasible_delta(&seed.delta, c)
+                    .map_err(|e| format!("{seeder_name} at h={h}: {e}"))?;
             }
             Ok(())
         },

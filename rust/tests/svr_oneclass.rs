@@ -1,0 +1,188 @@
+//! End-to-end suite for the ε-SVR and one-class workloads — the
+//! acceptance contract of the QP generalisation:
+//!
+//! - on a synthetic regression dataset, seeded ε-SVR k-fold CV
+//!   reproduces the cold-start **fold-level** MSE for every seeder (the
+//!   paper's same-result guarantee; continuous metrics agree to the
+//!   solver tolerance, which a tight `eps` pins down — docs/SEEDING.md §3),
+//!   with the init-time fraction exposed on the report;
+//! - the one-class chain reports identical accuracy with and without
+//!   transplant seeding;
+//! - the (C, ε, γ) grid is seeder-invariant on MSE.
+
+use alphaseed::coordinator::{grid_search_svr, GridOptions};
+use alphaseed::cv::{run_kfold_oneclass, run_kfold_svr, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::Kernel;
+use alphaseed::seeding::svr::{svr_seeder_by_name, ALL_SVR_SEEDERS};
+
+fn tight_opts() -> CvOptions<'static> {
+    CvOptions {
+        eps: 1e-6,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn seeded_svr_cv_reproduces_cold_fold_mse_for_every_seeder() {
+    let ds = synth::generate_regression("sinc", Some(140), 42);
+    let (kernel, c, epsilon, k) = (Kernel::rbf(0.5), 10.0, 0.05, 5);
+
+    let cold = run_kfold_svr(
+        &ds,
+        kernel,
+        c,
+        epsilon,
+        k,
+        svr_seeder_by_name("cold").unwrap().as_ref(),
+        tight_opts(),
+    );
+    assert_eq!(cold.rounds.len(), k);
+
+    for name in ALL_SVR_SEEDERS.iter().filter(|&&n| n != "cold") {
+        let seeded = run_kfold_svr(
+            &ds,
+            kernel,
+            c,
+            epsilon,
+            k,
+            svr_seeder_by_name(name).unwrap().as_ref(),
+            tight_opts(),
+        );
+        // identical fold partition → comparable round by round
+        for (rc, rs) in cold.rounds.iter().zip(&seeded.rounds) {
+            assert_eq!(rc.test_total, rs.test_total, "{name}: fold sizes differ");
+            let diff = (rc.sq_err - rs.sq_err).abs();
+            assert!(
+                diff <= 1e-4 * rc.sq_err.max(1.0),
+                "{name}: round {} fold MSE diverged: cold {} vs seeded {}",
+                rc.round,
+                rc.sq_err,
+                rs.sq_err
+            );
+            // the within-tube count is discrete — it must match exactly
+            assert_eq!(
+                rc.test_correct, rs.test_correct,
+                "{name}: round {} tube count diverged",
+                rc.round
+            );
+        }
+        let rel = (seeded.mse() - cold.mse()).abs() / cold.mse().max(1e-12);
+        assert!(
+            rel < 1e-3,
+            "{name}: pooled MSE diverged: cold {} vs seeded {}",
+            cold.mse(),
+            seeded.mse()
+        );
+        // round 0 is always cold → identical iteration count
+        assert_eq!(
+            cold.rounds[0].iterations, seeded.rounds[0].iterations,
+            "{name}: round 0 must train cold"
+        );
+        // the report exposes the paper's init-vs-rest split
+        assert!(seeded.init_fraction() >= 0.0 && seeded.init_fraction() <= 1.0);
+    }
+}
+
+#[test]
+fn seeded_svr_cv_saves_iterations() {
+    let ds = synth::generate_regression("sinc", Some(140), 7);
+    let run = |name: &str| {
+        run_kfold_svr(
+            &ds,
+            Kernel::rbf(0.5),
+            10.0,
+            0.05,
+            5,
+            svr_seeder_by_name(name).unwrap().as_ref(),
+            CvOptions::default(),
+        )
+    };
+    let cold = run("cold");
+    for name in ["sir", "mir"] {
+        let seeded = run(name);
+        assert!(
+            seeded.total_iterations() < cold.total_iterations(),
+            "{name}: {} vs cold {}",
+            seeded.total_iterations(),
+            cold.total_iterations()
+        );
+    }
+}
+
+#[test]
+fn svr_works_on_multivariate_regression() {
+    let ds = synth::generate_regression("friedman1", Some(150), 11);
+    let rep = run_kfold_svr(
+        &ds,
+        Kernel::rbf(0.8),
+        10.0,
+        0.1,
+        4,
+        svr_seeder_by_name("sir").unwrap().as_ref(),
+        CvOptions::default(),
+    );
+    assert_eq!(rep.rounds.len(), 4);
+    // Friedman #1 targets are rescaled to ≈[−1, 1]; the RBF SVR should
+    // beat the trivial predict-the-mean baseline (variance ≈ 0.07)
+    assert!(rep.mse() < 0.07, "CV MSE {}", rep.mse());
+}
+
+#[test]
+fn oneclass_transplant_is_accuracy_neutral_and_cheaper() {
+    let ds = synth::generate_outliers(Some(250), 0.1, 42);
+    let cold = run_kfold_oneclass(&ds, Kernel::rbf(1.0), 0.15, 5, false, tight_opts());
+    let warm = run_kfold_oneclass(&ds, Kernel::rbf(1.0), 0.15, 5, true, tight_opts());
+    assert_eq!(
+        cold.accuracy(),
+        warm.accuracy(),
+        "transplant seeding changed one-class accuracy"
+    );
+    assert!(cold.accuracy() > 0.8, "detector below sanity floor");
+    assert!(
+        warm.total_iterations() <= cold.total_iterations(),
+        "transplant {} vs cold {}",
+        warm.total_iterations(),
+        cold.total_iterations()
+    );
+}
+
+#[test]
+fn svr_grid_is_seeder_invariant_on_mse() {
+    let ds = synth::generate_regression("sinc", Some(80), 3);
+    let run = |seeder: &str| {
+        grid_search_svr(
+            &ds,
+            &[1.0, 10.0],
+            &[0.05],
+            &[0.5],
+            &GridOptions {
+                k: 3,
+                seeder: seeder.into(),
+                threads: 2,
+                rng_seed: 9,
+                ..Default::default()
+            },
+        )
+    };
+    let cold = run("cold");
+    let sir = run("sir");
+    assert_eq!(cold.points.len(), sir.points.len());
+    for (a, b) in cold.points.iter().zip(&sir.points) {
+        assert_eq!((a.c, a.epsilon, a.gamma), (b.c, b.epsilon, b.gamma));
+        // the grid runs each cell at the driver's default solver eps
+        // (1e-3), so cold and seeded fixed points agree only to that
+        // tolerance — the tight-eps identity check lives in
+        // seeded_svr_cv_reproduces_cold_fold_mse_for_every_seeder above
+        let rel = (a.mse - b.mse).abs() / a.mse.max(1e-12);
+        assert!(
+            rel < 1e-2,
+            "grid cell (C={}, eps={}, gamma={}) MSE diverged: {} vs {}",
+            a.c,
+            a.epsilon,
+            a.gamma,
+            a.mse,
+            b.mse
+        );
+    }
+}
