@@ -45,4 +45,11 @@ fn main() {
         }
     }
     println!("shape checks passed: seeded LOO beats cold on iterations");
+
+    // Machine-readable record for the nightly perf-trajectory artifacts.
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_fig2.json".into());
+    match std::fs::write(&out, result.to_json(&cfg).to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

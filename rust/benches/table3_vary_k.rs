@@ -43,4 +43,12 @@ fn main() {
     let (s3, s10, s100) = (speedup(3), speedup(10), speedup(100));
     println!("madelon speedups: k=3 {s3:.2}x, k=10 {s10:.2}x, k=100 {s100:.2}x");
     assert!(s100 > s3, "speedup should grow with k: {s3:.2} → {s100:.2}");
+
+    // Machine-readable record for the nightly perf-trajectory artifacts.
+    let out =
+        std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_table3.json".into());
+    match std::fs::write(&out, result.to_json(&cfg).to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

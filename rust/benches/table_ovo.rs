@@ -1,0 +1,165 @@
+//! Bench: one-vs-one multiclass seeded CV on the shared-kernel substrate.
+//!
+//! Runs the multiclass dataset × {cold, ato, mir, sir} grid at a
+//! bench-friendly scale (`ALPHASEED_BENCH_SCALE`, default 0.25) and prints
+//! the per-pair/per-seeder table. Besides the human-readable output, the
+//! run emits a machine-readable `BENCH_ovo.json` (override the path with
+//! `ALPHASEED_BENCH_OUT`) in the same `per_seeder` shape as
+//! `BENCH_cv.json`, so the CI bench-regression gate
+//! (`alphaseed benchgate`) can hold the seeded-vs-cold iteration ratio
+//! and init fraction against the committed baseline.
+
+use alphaseed::kernel::Kernel;
+use alphaseed::multiclass::{cv_ovo_opts, synth_blobs, synth_rings, MultiDataset, OvoOptions};
+use alphaseed::seeding::{seeder_by_name, ALL_SEEDERS};
+use alphaseed::util::bench::once;
+use alphaseed::util::json::Json;
+use std::collections::BTreeMap;
+
+struct Workload {
+    ds: MultiDataset,
+    c: f64,
+    gamma: f64,
+}
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let k = 5usize;
+    let n_blobs = ((600.0 * scale) as usize).max(120);
+    let n_rings = ((900.0 * scale) as usize).max(150);
+    let workloads = [
+        Workload {
+            ds: synth_blobs(n_blobs, 4, 4, 2.0, 42),
+            c: 10.0,
+            gamma: 0.5,
+        },
+        Workload {
+            ds: synth_rings(n_rings, 3, 0.15, 42),
+            c: 10.0,
+            gamma: 1.0,
+        },
+    ];
+    println!("== table_ovo bench (scale {scale}, k = {k}) ==");
+
+    struct Cell {
+        dataset: String,
+        seeder: String,
+        report: alphaseed::multiclass::OvoCvReport,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let (_, total) = once("table_ovo: 2 datasets x 4 seeders, k=5", || {
+        for w in &workloads {
+            for &seeder_name in ALL_SEEDERS {
+                eprintln!("  … {} / {seeder_name}", w.ds.name);
+                let seeder = seeder_by_name(seeder_name).expect("known seeder");
+                let report = cv_ovo_opts(
+                    &w.ds,
+                    Kernel::rbf(w.gamma),
+                    w.c,
+                    k,
+                    seeder.as_ref(),
+                    &OvoOptions::default(),
+                );
+                cells.push(Cell {
+                    dataset: w.ds.name.clone(),
+                    seeder: seeder_name.to_string(),
+                    report,
+                });
+            }
+        }
+    });
+    for c in &cells {
+        println!(
+            "{:<10} {:<5} iterations {:>9}  init {:>9.4}s  rest {:>9.4}s  accuracy {:.2}%",
+            c.dataset,
+            c.seeder,
+            c.report.total_iterations(),
+            c.report.total_init().as_secs_f64(),
+            c.report.total_rest().as_secs_f64(),
+            c.report.accuracy() * 100.0
+        );
+    }
+    println!("table_ovo bench total: {total:?}");
+
+    // Shape assertions — the paper's guarantees carried to multiclass.
+    for w in &workloads {
+        let get = |s: &str| {
+            cells
+                .iter()
+                .find(|c| c.dataset == w.ds.name && c.seeder == s)
+                .expect("cell")
+        };
+        let cold = get("cold");
+        let sir = get("sir");
+        assert!(
+            sir.report.total_iterations() <= cold.report.total_iterations(),
+            "{}: SIR iterations {} exceed cold {}",
+            w.ds.name,
+            sir.report.total_iterations(),
+            cold.report.total_iterations()
+        );
+        // ensemble votes near zero may flip between ε-optimal solutions;
+        // allow at most 2 instances to differ
+        let slack = 2.0 / w.ds.len() as f64 + 1e-12;
+        let diff = (cold.report.accuracy() - sir.report.accuracy()).abs();
+        assert!(
+            diff <= slack,
+            "{}: ensemble accuracy diverged by {diff}",
+            w.ds.name
+        );
+    }
+    println!("shape checks passed: SIR ≤ cold iterations, ensemble accuracy preserved");
+
+    // Machine-readable record: per-seeder means over the dataset axis,
+    // same shape as BENCH_cv.json (the benchgate contract).
+    let mut seeders: BTreeMap<String, Json> = BTreeMap::new();
+    for &seeder in ALL_SEEDERS {
+        let sel: Vec<_> = cells.iter().filter(|c| c.seeder == seeder).collect();
+        let n = sel.len().max(1) as f64;
+        let mean_init: f64 = sel
+            .iter()
+            .map(|c| c.report.total_init().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_rest: f64 = sel
+            .iter()
+            .map(|c| c.report.total_rest().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_total = mean_init + mean_rest;
+        let iterations: u64 = sel.iter().map(|c| c.report.total_iterations()).sum();
+        seeders.insert(
+            seeder.to_string(),
+            Json::obj(vec![
+                ("mean_total_secs", Json::Num(mean_total)),
+                ("mean_init_secs", Json::Num(mean_init)),
+                ("mean_rest_secs", Json::Num(mean_rest)),
+                (
+                    "init_fraction",
+                    Json::Num(if mean_total > 0.0 {
+                        mean_init / mean_total
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("total_iterations", Json::Num(iterations as f64)),
+                ("cells", Json::Num(sel.len() as f64)),
+            ]),
+        );
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("table_ovo".into())),
+        ("scale", Json::Num(scale)),
+        ("k", Json::Num(k as f64)),
+        ("total_secs", Json::Num(total.as_secs_f64())),
+        ("per_seeder", Json::Obj(seeders)),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_ovo.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

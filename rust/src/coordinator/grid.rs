@@ -1,6 +1,7 @@
 //! Concurrent hyper-parameter grid search, each cell evaluated by seeded
-//! k-fold cross-validation: (C, γ) for C-SVC ([`grid_search_opts`]) and
-//! (C, ε, γ) for ε-SVR ([`grid_search_svr`]).
+//! k-fold cross-validation: (C, γ) for C-SVC ([`grid_search_opts`]),
+//! (C, ε, γ) for ε-SVR ([`grid_search_svr`]), and (C, γ) for one-vs-one
+//! multiclass ensembles ([`grid_search_ovo`]).
 //!
 //! This is the workload that motivates the paper: model selection runs
 //! many cross-validations, so accelerating each one compounds. The
@@ -26,6 +27,9 @@
 use crate::cv::{run_kfold, run_kfold_svr, run_kfold_warm_c, CvOptions, WarmCOptions};
 use crate::data::Dataset;
 use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
+use crate::multiclass::{
+    class_pairs, pair_chain, tally_votes, MultiDataset, OvoOptions, PairChainSpec, PairRun,
+};
 use crate::seeding::seeder_by_name;
 use crate::seeding::svr::svr_seeder_by_name;
 use crate::util::pool::{effective_threads, scoped_map};
@@ -259,6 +263,137 @@ fn warm_c_sweep(
     points
 }
 
+// ---- the one-vs-one multiclass (C, γ) grid --------------------------------
+
+/// Evaluate the (C, γ) grid for a **one-vs-one multiclass** ensemble with
+/// seeder-accelerated k-fold CV per class pair — the multiclass
+/// counterpart of [`grid_search_opts`], reusing both grid-level tricks:
+///
+/// - one shared full-dataset row store per γ column
+///   ([`GridOptions::share_rows`]), which every (cell × pair) reads
+///   through an index-projected pair view — each kernel row is computed
+///   once per γ for the *whole grid*, not once per pair per cell;
+/// - with [`GridOptions::warm_c`], fold h of a pair at C′ seeds from the
+///   same fold of that pair at the previous C via
+///   [`rescale_alpha`](crate::cv::rescale_alpha) — the chain is a
+///   dependency edge inside one (γ, pair) unit, and units fan out
+///   concurrently.
+///
+/// Each cell's accuracy is the ensemble majority-vote CV accuracy over
+/// the shared multiclass-stratified folds. Scheduling never changes what
+/// a unit computes; points come back in C-major order (`c_values` outer,
+/// `gamma_values` inner) regardless of execution order.
+pub fn grid_search_ovo(
+    mds: &MultiDataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> GridResult {
+    assert!(
+        !c_values.is_empty() && !gamma_values.is_empty(),
+        "empty grid"
+    );
+    let classes = mds.classes();
+    assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
+    let pairs = class_pairs(&classes);
+    let folds = mds.stratified_folds(opts.k, opts.rng_seed);
+    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
+        .iter()
+        .map(|&gamma| {
+            opts.share_rows.then(|| {
+                SharedKernelCache::with_byte_budget(
+                    KernelEval::new(mds.kernel_dataset(), Kernel::rbf(gamma)),
+                    opts.seed_cache_bytes,
+                )
+            })
+        })
+        .collect();
+
+    // The C-chain must visit C ascending; remember how to map back.
+    let mut order: Vec<usize> = (0..c_values.len()).collect();
+    order.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
+    let sorted_cs: Vec<f64> = order.iter().map(|&i| c_values[i]).collect();
+
+    let ovo_opts = OvoOptions {
+        rng_seed: opts.rng_seed,
+        ..Default::default()
+    };
+    // One unit per (γ, pair): the pair's C chain runs sequentially inside
+    // the unit while units fan out.
+    let units: Vec<(usize, usize)> = (0..gamma_values.len())
+        .flat_map(|gi| (0..pairs.len()).map(move |pi| (gi, pi)))
+        .collect();
+    let width = effective_threads(opts.threads);
+    let solver_threads = (width / units.len().max(1)).max(1);
+    // per unit: one PairRun per C value, in *caller* c_values order
+    let unit_runs: Vec<Vec<PairRun>> = scoped_map(opts.threads, units.len(), |u| {
+        let (gi, pi) = units[u];
+        let (class_a, class_b) = pairs[pi];
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        let run = |cs: &[f64], chain_c: bool| {
+            pair_chain(
+                &PairChainSpec {
+                    mds,
+                    folds: &folds,
+                    kernel: Kernel::rbf(gamma_values[gi]),
+                    cs,
+                    chain_c,
+                    seeder: seeder.as_ref(),
+                    shared: shares[gi].as_ref(),
+                    opts: &ovo_opts,
+                    solver_threads,
+                    pair_index: pi + gi * pairs.len(),
+                },
+                class_a,
+                class_b,
+            )
+        };
+        if opts.warm_c {
+            let sorted_runs = run(&sorted_cs, true);
+            // reorder from ascending-C back to caller order
+            (0..c_values.len())
+                .map(|ci| {
+                    let pos = order.iter().position(|&o| o == ci).expect("permutation");
+                    sorted_runs[pos].clone()
+                })
+                .collect()
+        } else {
+            // one call over the whole C list: the pair view and its seed
+            // cache are built once and reused across every C
+            run(c_values, false)
+        }
+    });
+
+    // Assemble cells in C-major caller order, merging votes across pairs
+    // in pair order (deterministic tally).
+    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
+    for (ci, &c) in c_values.iter().enumerate() {
+        for (gi, &gamma) in gamma_values.iter().enumerate() {
+            let cell_runs: Vec<&PairRun> = (0..pairs.len())
+                .map(|pi| &unit_runs[gi * pairs.len() + pi][ci])
+                .collect();
+            let votes: Vec<Vec<(usize, u32)>> =
+                cell_runs.iter().map(|r| r.votes.clone()).collect();
+            let confusion = tally_votes(&classes, &mds.labels, &votes);
+            let correct: usize = (0..classes.len()).map(|i| confusion[i][i]).sum();
+            let total: usize = confusion.iter().flatten().sum();
+            points.push(GridPoint {
+                c,
+                gamma,
+                accuracy: if total == 0 {
+                    0.0
+                } else {
+                    correct as f64 / total as f64
+                },
+                iterations: cell_runs.iter().map(|r| r.stat.iterations).sum(),
+                elapsed: cell_runs.iter().map(|r| r.stat.init + r.stat.rest).sum(),
+            });
+        }
+    }
+    GridResult { points }
+}
+
 // ---- the (C, ε, γ) regression grid ----------------------------------------
 
 /// One evaluated ε-SVR grid cell.
@@ -474,6 +609,95 @@ mod tests {
         for (a, b) in with.points.iter().zip(&without.points) {
             assert_eq!(a.accuracy, b.accuracy);
             assert_eq!(a.iterations, b.iterations);
+        }
+    }
+
+    #[test]
+    fn ovo_grid_covers_cells_in_c_major_order() {
+        let mds = crate::multiclass::synth_blobs(90, 3, 3, 2.5, 7);
+        let g = grid_search_ovo(
+            &mds,
+            &[1.0, 10.0],
+            &[0.2, 0.5],
+            &GridOptions {
+                k: 3,
+                seeder: "sir".into(),
+                threads: 2,
+                rng_seed: 11,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.points.len(), 4);
+        assert_eq!((g.points[0].c, g.points[0].gamma), (1.0, 0.2));
+        assert_eq!((g.points[1].c, g.points[1].gamma), (1.0, 0.5));
+        assert_eq!((g.points[2].c, g.points[2].gamma), (10.0, 0.2));
+        assert!(g.total_iterations() > 0);
+        let best = g.best();
+        assert!(g.points.iter().all(|p| p.accuracy <= best.accuracy));
+    }
+
+    #[test]
+    fn ovo_grid_cell_matches_direct_cv() {
+        let mds = crate::multiclass::synth_blobs(75, 3, 3, 2.0, 3);
+        let opts = GridOptions {
+            k: 3,
+            seeder: "sir".into(),
+            threads: 2,
+            rng_seed: 5,
+            ..Default::default()
+        };
+        let g = grid_search_ovo(&mds, &[4.0], &[0.3], &opts);
+        let direct = crate::multiclass::cv_ovo_opts(
+            &mds,
+            Kernel::rbf(0.3),
+            4.0,
+            3,
+            crate::seeding::seeder_by_name("sir").unwrap().as_ref(),
+            &crate::multiclass::OvoOptions {
+                rng_seed: 5,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.points[0].accuracy, direct.accuracy());
+        assert_eq!(g.points[0].iterations, direct.total_iterations());
+    }
+
+    #[test]
+    fn ovo_grid_warm_c_matches_plain_accuracies() {
+        let mds = crate::multiclass::synth_blobs(90, 3, 3, 2.0, 9);
+        let base = GridOptions {
+            k: 3,
+            seeder: "sir".into(),
+            threads: 2,
+            rng_seed: 13,
+            ..Default::default()
+        };
+        let cs = [2.0, 8.0, 32.0];
+        let plain = grid_search_ovo(&mds, &cs, &[0.3], &base);
+        let warm = grid_search_ovo(
+            &mds,
+            &cs,
+            &[0.3],
+            &GridOptions {
+                warm_c: true,
+                ..base
+            },
+        );
+        assert_eq!(plain.points.len(), warm.points.len());
+        for (p, w) in plain.points.iter().zip(&warm.points) {
+            assert_eq!(p.c, w.c);
+            assert_eq!(p.gamma, w.gamma);
+            // the headline guarantee: C-chain reuse never changes the
+            // model (ensemble votes near zero may flip between two
+            // ε-optimal solutions; allow at most 2 of 90 instances)
+            assert!(
+                (p.accuracy - w.accuracy).abs() <= 2.0 / 90.0 + 1e-12,
+                "C={} gamma={}: plain {} vs warm {}",
+                p.c,
+                p.gamma,
+                p.accuracy,
+                w.accuracy
+            );
         }
     }
 

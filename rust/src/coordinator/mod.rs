@@ -22,8 +22,8 @@ mod jobs;
 mod server;
 
 pub use grid::{
-    grid_search, grid_search_opts, grid_search_svr, GridOptions, GridPoint, GridResult,
-    SvrGridPoint, SvrGridResult,
+    grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, GridOptions, GridPoint,
+    GridResult, SvrGridPoint, SvrGridResult,
 };
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use server::PredictServer;

@@ -71,14 +71,40 @@ pub fn parse_libsvm_binarise(
 
 /// Read a LibSVM file from disk.
 pub fn read_libsvm(path: impl AsRef<Path>) -> Result<Dataset, LibsvmError> {
-    let name = path
-        .as_ref()
-        .file_stem()
-        .map(|s| s.to_string_lossy().to_string())
-        .unwrap_or_else(|| "dataset".to_string());
+    let name = file_stem(path.as_ref());
     let file = std::fs::File::open(path.as_ref())?;
     let reader = BufReader::new(file);
     parse_inner(reader.lines(), &name, None)
+}
+
+/// Parse LibSVM text keeping the **raw numeric labels** (no ±1 mapping):
+/// the entry point for consumers with their own label semantics, such as
+/// the one-vs-one multiclass loader
+/// (`multiclass::MultiDataset::read_libsvm`). Returns the feature matrix
+/// and one raw label per instance, plus the 1-based source line of each
+/// instance so label validation can point at the offending line.
+pub fn parse_libsvm_raw(text: &str) -> Result<(DataMatrix, Vec<f64>, Vec<usize>), LibsvmError> {
+    parse_matrix(text.lines().map(|l| Ok(l.to_string())))
+}
+
+/// Read a LibSVM file from disk keeping the raw numeric labels — the
+/// file-backed counterpart of [`parse_libsvm_raw`]. Returns the dataset
+/// name (file stem), features, raw labels, and per-instance line numbers.
+#[allow(clippy::type_complexity)]
+pub fn read_libsvm_raw(
+    path: impl AsRef<Path>,
+) -> Result<(String, DataMatrix, Vec<f64>, Vec<usize>), LibsvmError> {
+    let name = file_stem(path.as_ref());
+    let file = std::fs::File::open(path.as_ref())?;
+    let reader = BufReader::new(file);
+    let (x, labels, lines) = parse_matrix(reader.lines())?;
+    Ok((name, x, labels, lines))
+}
+
+fn file_stem(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "dataset".to_string())
 }
 
 fn parse_inner(
@@ -86,26 +112,10 @@ fn parse_inner(
     name: &str,
     binarise: Option<f64>,
 ) -> Result<Dataset, LibsvmError> {
-    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
-    let mut labels: Vec<f64> = Vec::new();
-    let mut max_col: u32 = 0;
-
-    for (lineno, line) in lines.enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: "missing label".into(),
-        })?;
-        let raw: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: format!("bad label {label_tok:?}"),
-        })?;
-        let label = match binarise {
+    let (x, raw, _) = parse_matrix(lines)?;
+    let labels: Vec<f64> = raw
+        .iter()
+        .map(|&raw| match binarise {
             Some(t) => {
                 if raw <= t {
                     -1.0
@@ -120,7 +130,36 @@ fn parse_inner(
                     -1.0
                 }
             }
-        };
+        })
+        .collect();
+    Ok(Dataset::new(name, x, labels))
+}
+
+/// The shared parsing core: features + raw labels + source line numbers.
+#[allow(clippy::type_complexity)]
+fn parse_matrix(
+    lines: impl Iterator<Item = std::io::Result<String>>,
+) -> Result<(DataMatrix, Vec<f64>, Vec<usize>), LibsvmError> {
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut line_nos: Vec<usize> = Vec::new();
+    let mut max_col: u32 = 0;
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: "missing label".into(),
+        })?;
+        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label {label_tok:?}"),
+        })?;
         let mut row: Vec<(u32, f32)> = Vec::new();
         for tok in parts {
             let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
@@ -151,6 +190,7 @@ fn parse_inner(
         row.dedup_by_key(|&mut (c, _)| c);
         rows.push(row);
         labels.push(label);
+        line_nos.push(lineno + 1);
     }
 
     if rows.is_empty() {
@@ -167,7 +207,7 @@ fn parse_inner(
     } else {
         DataMatrix::Sparse(csr)
     };
-    Ok(Dataset::new(name, x, labels))
+    Ok((x, labels, line_nos))
 }
 
 /// Write a dataset in LibSVM format (sparse lines, 1-based indices).
@@ -273,6 +313,16 @@ mod tests {
         }
         let ds2 = parse_libsvm(&sparse_text, "sp").unwrap();
         assert!(ds2.x.is_sparse());
+    }
+
+    #[test]
+    fn raw_parse_keeps_labels_and_lines() {
+        let text = "# header\n3 1:1\n\n7.5 1:2 # trailing\n-1 2:1\n";
+        let (x, labels, lines) = parse_libsvm_raw(text).unwrap();
+        assert_eq!(x.rows(), 3);
+        assert_eq!(labels, vec![3.0, 7.5, -1.0]);
+        // comments and blanks shift the data lines: 2, 4, 5
+        assert_eq!(lines, vec![2, 4, 5]);
     }
 
     #[test]

@@ -11,6 +11,9 @@ pub mod synth;
 
 pub use dataset::Dataset;
 pub use folds::{FoldPlan, FoldTransition};
-pub use libsvm::{parse_libsvm, parse_libsvm_binarise, read_libsvm, write_libsvm, LibsvmError};
+pub use libsvm::{
+    parse_libsvm, parse_libsvm_binarise, parse_libsvm_raw, read_libsvm, read_libsvm_raw,
+    write_libsvm, LibsvmError,
+};
 pub use matrix::{CsrMatrix, DataMatrix};
 pub use scale::{scale_minmax, ScaleParams};

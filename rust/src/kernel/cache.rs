@@ -14,7 +14,14 @@
 //! - a per-run cache can be backed by a process-wide
 //!   [`SharedKernelCache`](super::SharedKernelCache): a local miss then
 //!   *adopts* the shared row (one Arc clone, no copy, no recompute)
-//!   instead of re-evaluating it.
+//!   instead of re-evaluating it;
+//! - a cache over a *subset view* of a larger dataset can be backed by a
+//!   shared store over the full data through an index projection
+//!   ([`KernelCache::with_projected_backing`]): a local miss fetches the
+//!   full-dataset row once and gathers the view's columns from it. This
+//!   is what lets the one-vs-one multiclass engine compute each kernel
+//!   row once on the full dataset and serve every class pair containing
+//!   the instance from that one row.
 
 use super::function::KernelEval;
 use super::shared::SharedKernelCache;
@@ -60,6 +67,11 @@ pub struct KernelCache {
     /// Optional read-mostly backing store shared across runs; local misses
     /// adopt its rows instead of recomputing.
     shared: Option<Arc<SharedKernelCache>>,
+    /// Optional projection of local row/column indices into the shared
+    /// store's larger dataset: local row `i` is the gather
+    /// `shared.row(proj[i])[proj[..]]`. `None` = the shared store covers
+    /// the same dataset as this cache.
+    proj: Option<Vec<usize>>,
     /// row index -> slot position
     map: HashMap<usize, usize>,
     slots: Vec<Slot>,
@@ -85,6 +97,7 @@ impl KernelCache {
         KernelCache {
             eval,
             shared: None,
+            proj: None,
             map: HashMap::new(),
             slots: Vec::new(),
             head: NIL,
@@ -100,6 +113,40 @@ impl KernelCache {
     pub fn with_shared_backing(shared: Arc<SharedKernelCache>, bytes: usize) -> KernelCache {
         let mut cache = Self::with_byte_budget(shared.eval().clone(), bytes);
         cache.shared = Some(shared);
+        cache
+    }
+
+    /// A cache over a *subset view* of a larger dataset, backed by a
+    /// shared row store over the full data. `local` is the evaluator for
+    /// the view itself (row `i` of the view = row `proj[i]` of the shared
+    /// store's dataset, same kernel); a local miss fetches the full row
+    /// `shared.row(proj[i])` once and gathers the view's columns from it.
+    ///
+    /// The projected row is **bit-identical** to evaluating `local`
+    /// directly: a kernel value depends only on the two instances
+    /// involved, and the projection maps view instances one-to-one onto
+    /// full-dataset instances carrying the exact same feature bits. This
+    /// is the substrate of the one-vs-one multiclass engine — each kernel
+    /// row is computed once on the full dataset and serves every class
+    /// pair that contains the instance.
+    pub fn with_projected_backing(
+        shared: Arc<SharedKernelCache>,
+        proj: Vec<usize>,
+        local: KernelEval,
+        bytes: usize,
+    ) -> KernelCache {
+        assert_eq!(
+            proj.len(),
+            local.len(),
+            "projection length must match the view"
+        );
+        assert!(
+            proj.iter().all(|&g| g < shared.n()),
+            "projection index out of the shared store's range"
+        );
+        let mut cache = Self::with_byte_budget(local, bytes);
+        cache.shared = Some(shared);
+        cache.proj = Some(proj);
         cache
     }
 
@@ -153,12 +200,18 @@ impl KernelCache {
         self.insert_arc(i, data)
     }
 
-    /// Compute row `i` through the shared backing when present, else
-    /// directly. Both paths perform identical arithmetic.
+    /// Compute row `i` through the shared backing when present (gathering
+    /// through the projection for subset views), else directly. All paths
+    /// produce identical bits.
     fn compute_row(&self, i: usize) -> Arc<[f64]> {
-        match &self.shared {
-            Some(shared) => shared.row(i),
-            None => {
+        match (&self.shared, &self.proj) {
+            (Some(shared), Some(proj)) => {
+                let full = shared.row(proj[i]);
+                let data: Vec<f64> = proj.iter().map(|&g| full[g]).collect();
+                data.into()
+            }
+            (Some(shared), None) => shared.row(i),
+            _ => {
                 let mut data = vec![0.0f64; self.eval.len()];
                 self.eval.eval_row(i, &mut data);
                 data.into()
@@ -489,6 +542,100 @@ mod tests {
         c.row(0);
         let s = c.stats();
         assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn projected_backing_matches_direct_view_eval() {
+        // full dataset of 8 rows; view = rows {1, 3, 4, 6}
+        let n = 8;
+        let data: Vec<f32> = (0..n * 3).map(|i| ((i * 5) % 11) as f32 * 0.4).collect();
+        let full = Dataset::new(
+            "full",
+            DataMatrix::dense(n, 3, data),
+            (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+        );
+        let kernel = Kernel::rbf(0.7);
+        let shared = SharedKernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), kernel),
+            1 << 20,
+        );
+        let proj = vec![1usize, 3, 4, 6];
+        let view = full.select(&proj);
+        let view_eval = KernelEval::new(view, kernel);
+        let mut projected = KernelCache::with_projected_backing(
+            Arc::clone(&shared),
+            proj.clone(),
+            view_eval.clone(),
+            1 << 20,
+        );
+        for i in 0..proj.len() {
+            let got = projected.row(i).to_vec();
+            let mut direct = vec![0.0; proj.len()];
+            view_eval.eval_row(i, &mut direct);
+            // bit-identical, not approximately equal
+            for (g, d) in got.iter().zip(&direct) {
+                assert_eq!(g.to_bits(), d.to_bits(), "row {i}");
+            }
+        }
+        // every view miss hit the shared store exactly once per row
+        assert_eq!(shared.stats().misses, proj.len() as u64);
+    }
+
+    #[test]
+    fn projected_backing_shares_rows_across_views() {
+        // two overlapping views of one full dataset: the shared instance's
+        // full row is computed once and serves both
+        let n = 6;
+        let data: Vec<f32> = (0..n * 2).map(|i| (i as f32) * 0.3).collect();
+        let full = Dataset::new(
+            "full",
+            DataMatrix::dense(n, 2, data),
+            vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+        );
+        let shared = SharedKernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), Kernel::rbf(0.5)),
+            1 << 20,
+        );
+        let proj_a = vec![0usize, 2, 4];
+        let proj_b = vec![2usize, 3, 5];
+        let mut a = KernelCache::with_projected_backing(
+            Arc::clone(&shared),
+            proj_a.clone(),
+            KernelEval::new(full.select(&proj_a), Kernel::rbf(0.5)),
+            1 << 20,
+        );
+        let mut b = KernelCache::with_projected_backing(
+            Arc::clone(&shared),
+            proj_b.clone(),
+            KernelEval::new(full.select(&proj_b), Kernel::rbf(0.5)),
+            1 << 20,
+        );
+        a.row(1); // full row 2, first compute
+        b.row(0); // full row 2 again — must be a shared hit
+        assert_eq!(shared.stats().misses, 1);
+        assert!(shared.stats().hits >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "projection length")]
+    fn projected_backing_rejects_length_mismatch() {
+        let n = 4;
+        let full = Dataset::new(
+            "full",
+            DataMatrix::dense(n, 1, vec![0.0; n]),
+            vec![1.0, -1.0, 1.0, -1.0],
+        );
+        let shared = SharedKernelCache::with_byte_budget(
+            KernelEval::new(full.clone(), Kernel::Linear),
+            1 << 20,
+        );
+        let view = full.select(&[0, 1]);
+        KernelCache::with_projected_backing(
+            shared,
+            vec![0, 1, 2],
+            KernelEval::new(view, Kernel::Linear),
+            1 << 20,
+        );
     }
 
     #[test]

@@ -65,6 +65,7 @@ pub mod data;
 pub mod kernel;
 pub mod linalg;
 pub mod metrics;
+#[deny(missing_docs)]
 pub mod multiclass;
 pub mod runtime;
 #[deny(missing_docs)]

@@ -15,9 +15,12 @@ use alphaseed::cv::CvReport;
 use alphaseed::data::{read_libsvm, synth, write_libsvm};
 use alphaseed::kernel::{Kernel, KernelEval};
 use alphaseed::metrics::Table;
+use alphaseed::multiclass::MultiDataset;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
 use alphaseed::smo::{Model, SmoParams, Solver};
+use alphaseed::util::bench::{check_bench_regression, GateTolerance};
 use alphaseed::util::cli::{Args, Task};
+use alphaseed::util::json::Json;
 use alphaseed::util::timing::fmt_secs;
 use anyhow::{bail, Context, Result};
 
@@ -47,6 +50,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
         Some("ovo") => cmd_ovo(args),
+        Some("benchgate") => cmd_benchgate(args),
         Some(other) => bail!("unknown subcommand '{other}' (run with no args for help)"),
         None => {
             print_help();
@@ -59,13 +63,15 @@ fn print_help() {
     println!(
         "alphaseed — SVM k-fold cross-validation with alpha seeding (AAAI'17 reproduction)\n\
          \n\
-         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe> [options]\n\
+         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe|ovo|benchgate> [options]\n\
          \n\
          common options:\n\
-           --task <t>          csvc|svr|oneclass               (default csvc)\n\
+           --task <t>          csvc|svr|oneclass|multiclass    (default csvc)\n\
            --dataset <name>    csvc: adult|heart|madelon|mnist|webdata\n\
                                svr:  sinc|friedman1 (synthetic regression)\n\
+                               multiclass: blobs|rings (synthetic)\n\
            --data <file>       LibSVM-format file instead of a synthetic analogue\n\
+                               (multiclass: integer class labels)\n\
            --n <int>           override analogue cardinality\n\
            --c <f> --gamma <f> hyper-parameters (defaults: paper Table 2)\n\
            --seeder <name>     cold|ato|mir|sir|avg|top        (default sir)\n\
@@ -76,10 +82,19 @@ fn print_help() {
            --epsilon <f>       SVR tube half-width             (default per dataset)\n\
            --nu <f>            one-class outlier-fraction bound (default 0.15)\n\
            --outlier-frac <f>  contamination of the synthetic set (default 0.1)\n\
+         multiclass options (cv/ovo/grid --task multiclass):\n\
+           --classes <int>     synthetic class count              (default 3)\n\
+           --sep/--noise <f>   blobs separation / rings noise\n\
+           --no-share-rows     private per-pair kernel caches (debugging)\n\
          grid options:\n\
            --threads <int>     concurrent cells/chains, 0 = auto (default 0)\n\
            --warm-c            chain ascending C per gamma (Chu et al. reuse)\n\
            --eps-grid <list>   SVR tube-width axis (with --task svr)\n\
+         benchgate options:\n\
+           --current <file>    freshly emitted BENCH_*.json\n\
+           --baseline <file>   committed BENCH_*.baseline.json\n\
+           --iter-tol <f>      relative iteration-ratio tolerance (default 0.05)\n\
+           --init-frac-tol <f> absolute init-fraction tolerance   (default 0.15)\n\
          experiment options:\n\
            --scale <f>         scale dataset sizes (default 1.0)\n\
            --out <dir>         results directory (default results/)\n\
@@ -196,6 +211,7 @@ fn cmd_cv(args: &Args) -> Result<()> {
         Task::CSvc => cmd_cv_csvc(args),
         Task::Svr => cmd_cv_svr(args),
         Task::OneClass => cmd_cv_oneclass(args),
+        Task::Multiclass => cmd_ovo(args),
     }
 }
 
@@ -372,6 +388,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
         Task::CSvc => cmd_grid_csvc(args),
         Task::Svr => cmd_grid_svr(args),
         Task::OneClass => bail!("grid search over one-class runs is not wired yet (use cv --task oneclass)"),
+        Task::Multiclass => cmd_grid_ovo(args),
     }
 }
 
@@ -657,40 +674,222 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One-vs-one multiclass seeded CV on synthetic blobs:
-/// `alphaseed ovo --classes 4 --n 200 --seeder sir`.
-fn cmd_ovo(args: &Args) -> Result<()> {
+/// Load the multiclass dataset an `--task multiclass` command refers to:
+/// a LibSVM file with integer class labels (`--data`), or one of the
+/// synthetic generators (`--dataset blobs|rings`).
+fn load_multiclass(args: &Args) -> Result<MultiDataset> {
+    if let Some(path) = args.opt_str("data") {
+        let ds = MultiDataset::read_libsvm(&path)
+            .with_context(|| format!("loading multiclass LibSVM file {path}"))?;
+        if ds.classes().len() < 2 {
+            bail!(
+                "{path} holds a single class ({}); one-vs-one needs at least 2 distinct labels",
+                ds.classes()[0]
+            );
+        }
+        return Ok(ds);
+    }
+    let seed = args.parse_or::<u64>("seed", 42)?;
     let n = args.parse_or("n", 200usize)?;
     let classes = args.parse_or("classes", 3u32)?;
-    let dim = args.parse_or("dim", 4usize)?;
-    let sep = args.parse_or("sep", 2.0f64)?;
+    if classes < 2 {
+        bail!("--classes {classes}: one-vs-one needs at least 2 classes");
+    }
+    match args.str_or("dataset", "blobs").as_str() {
+        "blobs" => {
+            let dim = args.parse_or("dim", 4usize)?;
+            let sep = args.parse_or("sep", 2.0f64)?;
+            Ok(alphaseed::multiclass::synth_blobs(n, dim, classes, sep, seed))
+        }
+        "rings" => {
+            let noise = args.parse_or("noise", 0.15f64)?;
+            Ok(alphaseed::multiclass::synth_rings(n, classes, noise, seed))
+        }
+        other => bail!(
+            "unknown multiclass dataset '{other}' (blobs|rings, or --data <libsvm file> \
+             with integer labels)"
+        ),
+    }
+}
+
+/// One-vs-one multiclass seeded CV, pairs scheduled in parallel on the
+/// shared-kernel substrate: `alphaseed ovo --classes 4 --n 200 --seeder
+/// sir`, `alphaseed cv --task multiclass --data iris.svm`.
+fn cmd_ovo(args: &Args) -> Result<()> {
+    reject_xla_backend(args, "multiclass")?;
+    let ds = load_multiclass(args)?;
     let c = args.parse_or("c", 10.0f64)?;
     let gamma = args.parse_or("gamma", 0.5f64)?;
     let k = args.parse_or("k", 5usize)?;
+    if k < 2 {
+        bail!("--k {k}: cross-validation needs at least 2 folds");
+    }
     let seeder_name = args.str_or("seeder", "sir");
-    let seed = args.parse_or::<u64>("seed", 42)?;
-    args.reject_unknown()?;
     let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
-    let ds = alphaseed::multiclass::synth_blobs(n, dim, classes, sep, seed);
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    let threads = args.parse_or("threads", 0usize)?;
+    let share_rows = !args.flag("no-share-rows");
+    args.reject_unknown()?;
+
     let started = std::time::Instant::now();
-    let (acc, pairs) =
-        alphaseed::multiclass::cv_ovo(&ds, Kernel::rbf(gamma), c, k, seeder.as_ref(), seed);
+    let rep = alphaseed::multiclass::cv_ovo_opts(
+        &ds,
+        Kernel::rbf(gamma),
+        c,
+        k,
+        seeder.as_ref(),
+        &alphaseed::multiclass::OvoOptions {
+            rng_seed: seed,
+            threads,
+            share_rows,
+            ..Default::default()
+        },
+    );
+    let wall = started.elapsed();
+
     let mut t = Table::new(format!(
-        "OvO {classes}-class CV (n={n}, k={k}, seeder {seeder_name}, {} s)",
-        fmt_secs(started.elapsed())
+        "OvO {}-class CV on {} (n={}, k={k}, seeder {seeder_name}, wall {} s)",
+        rep.classes.len(),
+        rep.dataset,
+        ds.len(),
+        fmt_secs(wall)
     ))
-    .header(&["pair", "iterations", "pair accuracy(%)"]);
-    for p in &pairs {
+    .header(&["pair", "iterations", "init(s)", "rest(s)", "pair accuracy(%)"]);
+    for p in &rep.pairs {
         t.row(vec![
             format!("{} vs {}", p.class_a, p.class_b),
             p.iterations.to_string(),
+            fmt_secs(p.init),
+            fmt_secs(p.rest),
             format!("{:.2}", p.accuracy * 100.0),
         ]);
     }
     print!("{}", t.render());
-    println!("ensemble CV accuracy: {:.2}%", acc * 100.0);
+
+    let mut headers: Vec<String> = vec!["truth \\ pred".into()];
+    headers.extend(rep.classes.iter().map(|c| c.to_string()));
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut cm = Table::new("ensemble confusion matrix (CV test rounds)").header(&header_refs);
+    for (ti, row) in rep.confusion.iter().enumerate() {
+        let mut cells = vec![rep.classes[ti].to_string()];
+        cells.extend(row.iter().map(|n| n.to_string()));
+        cm.row(cells);
+    }
+    print!("{}", cm.render());
+    println!(
+        "ensemble CV accuracy: {:.2}%  ({} iterations, init fraction {:.2}%, {} seed fallbacks)",
+        rep.accuracy() * 100.0,
+        rep.total_iterations(),
+        rep.init_fraction() * 100.0,
+        rep.fallbacks()
+    );
     Ok(())
+}
+
+/// One-vs-one multiclass (C, γ) grid search with per-γ shared row stores
+/// and optional warm-C chains per pair.
+fn cmd_grid_ovo(args: &Args) -> Result<()> {
+    reject_xla_backend(args, "multiclass")?;
+    if args.opt_str("c").is_some() || args.opt_str("gamma").is_some() {
+        bail!("grid --task multiclass sweeps --c-grid/--gamma-grid; point values --c/--gamma apply to single ovo runs");
+    }
+    let ds = load_multiclass(args)?;
+    let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
+    let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
+    let k = args.parse_or("k", 5usize)?;
+    if k < 2 {
+        bail!("--k {k}: cross-validation needs at least 2 folds");
+    }
+    let seeder = args.str_or("seeder", "sir");
+    let threads = args.parse_or("threads", 0usize)?;
+    let seed = args.parse_or::<u64>("seed", 42)?;
+    let warm_c = args.flag("warm-c");
+    let share_rows = !args.flag("no-share-rows");
+    args.reject_unknown()?;
+
+    let started = std::time::Instant::now();
+    let g = alphaseed::coordinator::grid_search_ovo(
+        &ds,
+        &cs,
+        &gammas,
+        &alphaseed::coordinator::GridOptions {
+            k,
+            seeder: seeder.clone(),
+            threads,
+            rng_seed: seed,
+            warm_c,
+            share_rows,
+            ..Default::default()
+        },
+    );
+    let mut t = Table::new(format!(
+        "OvO grid search on {} ({} cells, seeder {seeder}{}, {} s)",
+        ds.name,
+        g.points.len(),
+        if warm_c { ", warm-C chains" } else { "" },
+        fmt_secs(started.elapsed())
+    ))
+    .header(&["C", "gamma", "ensemble accuracy(%)", "iterations", "time(s)"]);
+    for p in &g.points {
+        t.row(vec![
+            format!("{}", p.c),
+            format!("{}", p.gamma),
+            format!("{:.2}", p.accuracy * 100.0),
+            p.iterations.to_string(),
+            fmt_secs(p.elapsed),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = g.best();
+    println!(
+        "best: C={} gamma={} ensemble accuracy={:.2}%",
+        best.c,
+        best.gamma,
+        best.accuracy * 100.0
+    );
+    Ok(())
+}
+
+/// Gate a freshly emitted `BENCH_*.json` against a committed baseline —
+/// the CI regression check: `alphaseed benchgate --current BENCH_cv.json
+/// --baseline BENCH_cv.baseline.json`.
+fn cmd_benchgate(args: &Args) -> Result<()> {
+    let current_path = args.req_str("current")?;
+    let baseline_path = args.req_str("baseline")?;
+    let tol = GateTolerance {
+        iter_ratio: args.parse_or("iter-tol", GateTolerance::default().iter_ratio)?,
+        init_fraction: args.parse_or("init-frac-tol", GateTolerance::default().init_fraction)?,
+    };
+    args.reject_unknown()?;
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench record {path}"))?;
+        Json::parse(&text).with_context(|| format!("parsing bench record {path}"))
+    };
+    let current = read(&current_path)?;
+    let baseline = read(&baseline_path)?;
+    match check_bench_regression(&current, &baseline, &tol) {
+        Ok(passed) => {
+            for p in &passed {
+                println!("PASS {p}");
+            }
+            println!(
+                "bench gate: {} checks passed ({current_path} vs {baseline_path})",
+                passed.len()
+            );
+            Ok(())
+        }
+        Err(failures) => {
+            for f in &failures {
+                eprintln!("FAIL {f}");
+            }
+            bail!(
+                "bench gate: {} regression(s) in {current_path} against {baseline_path}",
+                failures.len()
+            )
+        }
+    }
 }
 
 /// Measure artifact dispatch overhead: single-row PJRT call vs native row —

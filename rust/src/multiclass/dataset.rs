@@ -1,0 +1,218 @@
+//! The multi-class dataset: features + integer class labels, with the
+//! binary pair views the one-vs-one scheme trains on.
+
+use crate::data::{read_libsvm_raw, DataMatrix, Dataset};
+use anyhow::{bail, Result};
+
+/// A labelled multi-class dataset: features + integer class labels.
+#[derive(Debug, Clone)]
+pub struct MultiDataset {
+    /// Feature matrix (dense or CSR sparse), one instance per row.
+    pub x: DataMatrix,
+    /// Integer class label per instance.
+    pub labels: Vec<u32>,
+    /// Human-readable name (used in tables and reports).
+    pub name: String,
+}
+
+impl MultiDataset {
+    /// Build from features and labels (must have matching lengths).
+    pub fn new(name: impl Into<String>, x: DataMatrix, labels: Vec<u32>) -> Self {
+        assert_eq!(x.rows(), labels.len());
+        MultiDataset {
+            x,
+            labels,
+            name: name.into(),
+        }
+    }
+
+    /// View a binary ±1 [`Dataset`] as a 2-class multi-class problem:
+    /// y = −1 becomes class 0, y = +1 becomes class 1. Regression
+    /// datasets have no classes and are rejected.
+    pub fn from_dataset(ds: &Dataset) -> Result<MultiDataset> {
+        if ds.is_regression() {
+            bail!(
+                "dataset '{}' carries regression targets; one-vs-one multiclass needs class labels",
+                ds.name
+            );
+        }
+        let labels = ds.y.iter().map(|&y| u32::from(y > 0.0)).collect();
+        Ok(MultiDataset::new(ds.name.clone(), ds.x.clone(), labels))
+    }
+
+    /// Load a LibSVM-format file with **integer class labels** (the
+    /// multi-class counterpart of [`read_libsvm`](crate::data::read_libsvm),
+    /// which binarises). Non-integer and negative labels are rejected with
+    /// the offending line: binary ±1 files train through the binary paths
+    /// (`--task csvc`) or convert via [`MultiDataset::from_dataset`].
+    pub fn read_libsvm(path: impl AsRef<std::path::Path>) -> Result<MultiDataset> {
+        let (name, x, raw, lines) = read_libsvm_raw(path.as_ref())?;
+        let mut labels = Vec::with_capacity(raw.len());
+        for (&label, &line) in raw.iter().zip(&lines) {
+            if label.fract() != 0.0 || !label.is_finite() {
+                bail!(
+                    "line {line}: label {label} is not an integer \
+                     (one-vs-one multiclass needs integer class labels)"
+                );
+            }
+            if label < 0.0 {
+                bail!(
+                    "line {line}: negative class label {label} \
+                     (binary ±1 files train via --task csvc or \
+                     MultiDataset::from_dataset; multiclass labels must be \
+                     non-negative integers)"
+                );
+            }
+            if label > u32::MAX as f64 {
+                bail!("line {line}: class label {label} exceeds u32::MAX");
+            }
+            labels.push(label as u32);
+        }
+        Ok(MultiDataset::new(name, x, labels))
+    }
+
+    /// Number of instances.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the dataset holds no instances.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Distinct classes, ascending.
+    pub fn classes(&self) -> Vec<u32> {
+        let mut cs: Vec<u32> = self.labels.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    }
+
+    /// Instances per class, aligned with [`MultiDataset::classes`].
+    pub fn class_counts(&self) -> Vec<usize> {
+        let classes = self.classes();
+        classes
+            .iter()
+            .map(|&c| self.labels.iter().filter(|&&l| l == c).count())
+            .collect()
+    }
+
+    /// The features as a label-free binary [`Dataset`] (placeholder +1
+    /// labels) — what kernel evaluation over the *full* multi-class data
+    /// binds to. Kernel values never consult labels, so one shared row
+    /// store over this dataset serves every class pair.
+    pub fn kernel_dataset(&self) -> Dataset {
+        Dataset::new(self.name.clone(), self.x.clone(), vec![1.0; self.len()])
+    }
+
+    /// Binary sub-dataset for the pair (a, b): a → +1, b → −1. Returns the
+    /// view plus the global index of each view row (the projection the
+    /// shared-kernel substrate gathers through).
+    pub fn pair_subset(&self, a: u32, b: u32) -> (Dataset, Vec<usize>) {
+        let idx: Vec<usize> = (0..self.len())
+            .filter(|&i| self.labels[i] == a || self.labels[i] == b)
+            .collect();
+        let x = self.x.select_rows(&idx);
+        let y: Vec<f64> = idx
+            .iter()
+            .map(|&i| if self.labels[i] == a { 1.0 } else { -1.0 })
+            .collect();
+        (
+            Dataset::new(format!("{}[{a}v{b}]", self.name), x, y),
+            idx,
+        )
+    }
+
+    /// Stratified k-fold partition on the **multi-class** labels: each
+    /// class's instances are shuffled (deterministic under `seed`) and
+    /// dealt round-robin, so every fold mirrors the class mix. Folds come
+    /// back sorted; classes with fewer than k instances are simply absent
+    /// from some folds (the per-pair CV skips the degenerate rounds).
+    pub fn stratified_folds(&self, k: usize, seed: u64) -> Vec<Vec<usize>> {
+        assert!(k >= 2, "k must be >= 2, got {k}");
+        let mut rng = crate::util::rng::Pcg32::new(seed, 0x0F0);
+        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for &cl in &self.classes() {
+            let mut idx: Vec<usize> =
+                (0..self.len()).filter(|&i| self.labels[i] == cl).collect();
+            rng.shuffle(&mut idx);
+            for (pos, &i) in idx.iter().enumerate() {
+                folds[pos % k].push(i);
+            }
+        }
+        for f in folds.iter_mut() {
+            f.sort_unstable();
+        }
+        folds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiclass::synth_blobs;
+
+    #[test]
+    fn pair_subset_maps_labels() {
+        let ds = synth_blobs(60, 3, 3, 2.0, 1);
+        let (pair, idx) = ds.pair_subset(0, 2);
+        assert!(pair.len() < ds.len());
+        assert_eq!(pair.len(), idx.len());
+        for (p, &g) in idx.iter().enumerate() {
+            let expect = if ds.labels[g] == 0 { 1.0 } else { -1.0 };
+            assert_eq!(pair.y[p], expect);
+        }
+    }
+
+    #[test]
+    fn classes_enumerated_sorted() {
+        let ds = synth_blobs(30, 2, 4, 1.0, 4);
+        assert_eq!(ds.classes(), vec![0, 1, 2, 3]);
+        assert_eq!(ds.class_counts().iter().sum::<usize>(), 30);
+    }
+
+    #[test]
+    fn from_dataset_maps_binary_labels() {
+        let ds = crate::data::synth::generate("heart", Some(40), 3);
+        let mds = MultiDataset::from_dataset(&ds).unwrap();
+        assert_eq!(mds.classes(), vec![0, 1]);
+        for (i, &y) in ds.y.iter().enumerate() {
+            assert_eq!(mds.labels[i], u32::from(y > 0.0));
+        }
+    }
+
+    #[test]
+    fn from_dataset_rejects_regression() {
+        let reg = crate::data::synth::generate_regression("sinc", Some(20), 3);
+        let err = MultiDataset::from_dataset(&reg).unwrap_err().to_string();
+        assert!(err.contains("regression"), "{err}");
+    }
+
+    #[test]
+    fn stratified_folds_partition_and_balance() {
+        let ds = synth_blobs(90, 3, 3, 2.0, 7);
+        let folds = ds.stratified_folds(5, 42);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..90).collect::<Vec<_>>());
+        // 30 per class over 5 folds → each fold holds 6 of each class
+        for f in &folds {
+            for cl in 0..3u32 {
+                let count = f.iter().filter(|&&i| ds.labels[i] == cl).count();
+                assert_eq!(count, 6);
+            }
+        }
+        // deterministic under seed
+        assert_eq!(folds, ds.stratified_folds(5, 42));
+        assert_ne!(folds, ds.stratified_folds(5, 43));
+    }
+
+    #[test]
+    fn kernel_dataset_is_label_free_view() {
+        let ds = synth_blobs(20, 2, 2, 1.0, 9);
+        let kd = ds.kernel_dataset();
+        assert_eq!(kd.len(), 20);
+        assert!(kd.y.iter().all(|&y| y == 1.0));
+    }
+}

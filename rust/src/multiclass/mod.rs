@@ -1,361 +1,43 @@
-//! One-vs-one multi-class classification (LibSVM's scheme), with
-//! alpha-seeded cross-validation running **per pair**.
+//! One-vs-one multi-class classification (LibSVM's scheme), with the
+//! alpha-seeded cross-validation chain running **per class pair** and the
+//! pairs themselves scheduled in parallel on the shared-kernel substrate.
 //!
 //! The paper studies the binary case; a production SVM library must also
 //! cover multi-class, and the seeding chain applies unchanged inside each
 //! pairwise sub-problem (every pair's k folds overlap exactly as in the
-//! binary case). `cv_ovo` therefore multiplies the paper's savings by the
-//! number of class pairs.
+//! binary case). k-fold CV of an m-class one-vs-one ensemble trains
+//! `k · m(m−1)/2` SVMs, so the reuse opportunity *multiplies*:
+//!
+//! - **across folds** (the paper's chain) — fold h+1 of every pair seeds
+//!   from fold h through any [`Seeder`](crate::seeding::Seeder);
+//! - **across pairs** — the same instance appears in every pair containing
+//!   its class, so its kernel row is computed **once on the full dataset**
+//!   (one [`SharedKernelCache`](crate::kernel::SharedKernelCache)) and
+//!   every pair reads it through an index-projected view
+//!   ([`KernelCache::with_projected_backing`](crate::kernel::KernelCache::with_projected_backing))
+//!   instead of rebuilding a private per-pair cache;
+//! - **across the grid** — [`grid_search_ovo`](crate::coordinator::grid_search_ovo)
+//!   reuses the per-γ row stores over all cells of a γ column and chains
+//!   ascending C values per pair via
+//!   [`rescale_alpha`](crate::cv::rescale_alpha).
+//!
+//! Scheduling changes *when* a pair runs, never what it computes: per-pair
+//! iteration counts and votes are bit-identical to the sequential path for
+//! every thread count (asserted in `tests/multiclass.rs`).
+//!
+//! Module map: [`MultiDataset`] (data + LibSVM integer-label loading) in
+//! `dataset`, the parallel CV engine in `ovo`, per-pair statistics and the
+//! confusion matrix in `report`, synthetic generators in `synth`.
 
-use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelEval};
-use crate::seeding::Seeder;
-use crate::smo::{Model, SmoParams, Solver};
+mod dataset;
+mod ovo;
+mod report;
+mod synth;
 
-/// A labelled multi-class dataset: features + integer class labels.
-#[derive(Debug, Clone)]
-pub struct MultiDataset {
-    pub x: crate::data::DataMatrix,
-    pub labels: Vec<u32>,
-    pub name: String,
-}
+pub use dataset::MultiDataset;
+pub use ovo::{cv_ovo, cv_ovo_opts, OvoModel, OvoOptions};
+pub use report::{OvoCvReport, PairCvStat};
+pub use synth::{synth_blobs, synth_rings};
 
-impl MultiDataset {
-    pub fn new(name: impl Into<String>, x: crate::data::DataMatrix, labels: Vec<u32>) -> Self {
-        assert_eq!(x.rows(), labels.len());
-        MultiDataset {
-            x,
-            labels,
-            name: name.into(),
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.labels.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.labels.is_empty()
-    }
-
-    /// Distinct classes, ascending.
-    pub fn classes(&self) -> Vec<u32> {
-        let mut cs: Vec<u32> = self.labels.clone();
-        cs.sort_unstable();
-        cs.dedup();
-        cs
-    }
-
-    /// Binary sub-dataset for the pair (a, b): a → +1, b → −1.
-    pub fn pair_subset(&self, a: u32, b: u32) -> (Dataset, Vec<usize>) {
-        let idx: Vec<usize> = (0..self.len())
-            .filter(|&i| self.labels[i] == a || self.labels[i] == b)
-            .collect();
-        let x = self.x.select_rows(&idx);
-        let y: Vec<f64> = idx
-            .iter()
-            .map(|&i| if self.labels[i] == a { 1.0 } else { -1.0 })
-            .collect();
-        (
-            Dataset::new(format!("{}[{a}v{b}]", self.name), x, y),
-            idx,
-        )
-    }
-}
-
-/// One-vs-one ensemble: a binary model per class pair, majority vote.
-#[derive(Debug, Clone)]
-pub struct OvoModel {
-    pub classes: Vec<u32>,
-    /// Models in pair order (0,1), (0,2), …, (1,2), … matching LibSVM.
-    pub models: Vec<Model>,
-}
-
-impl OvoModel {
-    /// Train all C(n,2) pairwise models.
-    pub fn train(ds: &MultiDataset, kernel: Kernel, c: f64) -> OvoModel {
-        let classes = ds.classes();
-        let mut models = Vec::new();
-        for i in 0..classes.len() {
-            for j in i + 1..classes.len() {
-                let (pair, _) = ds.pair_subset(classes[i], classes[j]);
-                let mut solver =
-                    Solver::new(KernelEval::new(pair.clone(), kernel), SmoParams::with_c(c));
-                let r = solver.solve();
-                models.push(Model::from_result(&pair, kernel, &r));
-            }
-        }
-        OvoModel { classes, models }
-    }
-
-    /// Majority-vote prediction for every row of `x`.
-    pub fn predict(&self, x: &crate::data::DataMatrix) -> Vec<u32> {
-        let n = x.rows();
-        // evaluate rows through each pairwise model
-        let probe = Dataset::new(
-            "probe",
-            x.clone(),
-            vec![1.0; n], // labels unused for decision values
-        );
-        let mut votes = vec![vec![0u32; self.classes.len()]; n];
-        let mut m = 0;
-        for i in 0..self.classes.len() {
-            for j in i + 1..self.classes.len() {
-                let dec = self.models[m].decision_values(&probe);
-                for (r, &d) in dec.iter().enumerate() {
-                    if d >= 0.0 {
-                        votes[r][i] += 1;
-                    } else {
-                        votes[r][j] += 1;
-                    }
-                }
-                m += 1;
-            }
-        }
-        votes
-            .into_iter()
-            .map(|v| {
-                let best = v
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|&(_, &count)| count)
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                self.classes[best]
-            })
-            .collect()
-    }
-
-    pub fn accuracy(&self, ds: &MultiDataset) -> f64 {
-        let pred = self.predict(&ds.x);
-        let correct = pred
-            .iter()
-            .zip(&ds.labels)
-            .filter(|(p, l)| p == l)
-            .count();
-        correct as f64 / ds.len() as f64
-    }
-}
-
-/// Result of one pairwise CV inside [`cv_ovo`].
-#[derive(Debug, Clone)]
-pub struct PairCvStat {
-    pub class_a: u32,
-    pub class_b: u32,
-    pub iterations: u64,
-    pub accuracy: f64,
-}
-
-/// k-fold CV accuracy of the OvO ensemble, with the binary CV of every
-/// pair alpha-seeded by `seeder`. Returns (overall accuracy, per-pair
-/// stats). Folds are stratified on the *multi-class* labels so each fold
-/// mirrors the class mix.
-pub fn cv_ovo(
-    ds: &MultiDataset,
-    kernel: Kernel,
-    c: f64,
-    k: usize,
-    seeder: &dyn Seeder,
-    rng_seed: u64,
-) -> (f64, Vec<PairCvStat>) {
-    use crate::kernel::KernelCache;
-    use crate::seeding::SeedContext;
-
-    let classes = ds.classes();
-    // Stratify: round-robin within each class (reuse binary plan per class
-    // by dealing indices manually).
-    let mut rng = crate::util::rng::Pcg32::new(rng_seed, 0x0F0);
-    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
-    for &cl in &classes {
-        let mut idx: Vec<usize> = (0..ds.len()).filter(|&i| ds.labels[i] == cl).collect();
-        rng.shuffle(&mut idx);
-        for (pos, &i) in idx.iter().enumerate() {
-            folds[pos % k].push(i);
-        }
-    }
-    for f in folds.iter_mut() {
-        f.sort_unstable();
-    }
-
-    let mut votes = vec![std::collections::HashMap::<u32, u32>::new(); ds.len()];
-    let mut pair_stats = Vec::new();
-
-    for i in 0..classes.len() {
-        for j in i + 1..classes.len() {
-            let (pair_ds, pair_global) = ds.pair_subset(classes[i], classes[j]);
-            // project the global folds onto the pair subset
-            let mut pos_of_global = std::collections::HashMap::new();
-            for (p, &g) in pair_global.iter().enumerate() {
-                pos_of_global.insert(g, p);
-            }
-            let pair_folds: Vec<Vec<usize>> = folds
-                .iter()
-                .map(|f| {
-                    f.iter()
-                        .filter_map(|g| pos_of_global.get(g).copied())
-                        .collect()
-                })
-                .collect();
-            let plan = FoldPlan::from_folds(pair_folds, pair_ds.len());
-
-            let mut seed_cache = KernelCache::with_byte_budget(
-                KernelEval::new(pair_ds.clone(), kernel),
-                32 << 20,
-            );
-            let mut iterations = 0u64;
-            let mut correct = 0usize;
-            let mut prev_alpha: Vec<f64> = Vec::new();
-            let mut prev_f: Vec<f64> = Vec::new();
-            let mut prev_b = 0.0;
-            let mut prev_train: Vec<usize> = Vec::new();
-
-            for h in 0..k {
-                let train_idx = plan.train_indices(h);
-                if train_idx.is_empty() || plan.test_indices(h).is_empty() {
-                    continue;
-                }
-                let train = pair_ds.select(&train_idx);
-                if train.positives() == 0 || train.positives() == train.len() {
-                    continue; // degenerate fold for this pair
-                }
-                let alpha0 = if h == 0 || prev_train.is_empty() {
-                    vec![0.0; train_idx.len()]
-                } else {
-                    let trans = plan.transition(h - 1);
-                    let ctx = SeedContext {
-                        full: &pair_ds,
-                        kernel,
-                        c,
-                        prev_train: &prev_train,
-                        prev_alpha: &prev_alpha,
-                        prev_f: &prev_f,
-                        prev_b,
-                        removed: &trans.removed,
-                        added: &trans.added,
-                        next_train: &train_idx,
-                        rng_seed: rng_seed ^ h as u64,
-                    };
-                    seeder.seed(&ctx, &mut seed_cache).alpha
-                };
-                let mut solver =
-                    Solver::new(KernelEval::new(train.clone(), kernel), SmoParams::with_c(c));
-                let r = solver.solve_from(alpha0, None);
-                iterations += r.iterations;
-                let model = Model::from_result(&train, kernel, &r);
-                let test_idx = plan.test_indices(h);
-                let test = pair_ds.select(test_idx);
-                let dec = model.decision_values(&test);
-                for (pos, &pp) in test_idx.iter().enumerate() {
-                    let g = pair_global[pp];
-                    let winner = if dec[pos] >= 0.0 { classes[i] } else { classes[j] };
-                    *votes[g].entry(winner).or_insert(0) += 1;
-                    let truth = if pair_ds.y[pp] > 0.0 { classes[i] } else { classes[j] };
-                    if winner == truth {
-                        correct += 1;
-                    }
-                }
-                prev_f = r.f_indicators(&train.y);
-                prev_alpha = r.alpha;
-                prev_b = r.b;
-                prev_train = train_idx;
-            }
-            pair_stats.push(PairCvStat {
-                class_a: classes[i],
-                class_b: classes[j],
-                iterations,
-                accuracy: correct as f64 / pair_ds.len().max(1) as f64,
-            });
-        }
-    }
-
-    // ensemble accuracy from accumulated votes
-    let mut right = 0usize;
-    for (g, v) in votes.iter().enumerate() {
-        let pred = v
-            .iter()
-            .max_by_key(|&(_, &count)| count)
-            .map(|(&cl, _)| cl)
-            .unwrap_or(classes[0]);
-        if pred == ds.labels[g] {
-            right += 1;
-        }
-    }
-    (right as f64 / ds.len() as f64, pair_stats)
-}
-
-/// Deterministic synthetic multi-class dataset: `n_classes` Gaussian blobs.
-pub fn synth_blobs(n: usize, dim: usize, n_classes: u32, sep: f64, seed: u64) -> MultiDataset {
-    let mut rng = crate::util::rng::Pcg32::new(seed, 0xB10B5);
-    let mut centers = Vec::new();
-    for _ in 0..n_classes {
-        centers.push((0..dim).map(|_| sep * rng.normal()).collect::<Vec<f64>>());
-    }
-    let mut data = Vec::with_capacity(n * dim);
-    let mut labels = Vec::with_capacity(n);
-    for i in 0..n {
-        let cl = (i as u32) % n_classes; // balanced
-        for j in 0..dim {
-            data.push((centers[cl as usize][j] + rng.normal()) as f32);
-        }
-        labels.push(cl);
-    }
-    MultiDataset::new(
-        format!("blobs{n_classes}"),
-        crate::data::DataMatrix::dense(n, dim, data),
-        labels,
-    )
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::seeding::{ColdStart, Sir};
-
-    #[test]
-    fn pair_subset_maps_labels() {
-        let ds = synth_blobs(60, 3, 3, 2.0, 1);
-        let (pair, idx) = ds.pair_subset(0, 2);
-        assert!(pair.len() < ds.len());
-        assert_eq!(pair.len(), idx.len());
-        for (p, &g) in idx.iter().enumerate() {
-            let expect = if ds.labels[g] == 0 { 1.0 } else { -1.0 };
-            assert_eq!(pair.y[p], expect);
-        }
-    }
-
-    #[test]
-    fn ovo_separable_blobs_high_accuracy() {
-        let ds = synth_blobs(120, 4, 3, 3.0, 2);
-        let model = OvoModel::train(&ds, Kernel::rbf(0.5), 10.0);
-        assert_eq!(model.models.len(), 3); // C(3,2)
-        let acc = model.accuracy(&ds);
-        assert!(acc > 0.9, "train accuracy {acc}");
-    }
-
-    #[test]
-    fn cv_ovo_seeded_matches_cold_accuracy() {
-        let ds = synth_blobs(150, 4, 3, 2.0, 3);
-        let (acc_cold, stats_cold) = cv_ovo(&ds, Kernel::rbf(0.5), 10.0, 5, &ColdStart, 42);
-        let (acc_sir, stats_sir) = cv_ovo(&ds, Kernel::rbf(0.5), 10.0, 5, &Sir, 42);
-        // pairwise decisions near zero can flip between two ε-optimal
-        // solutions; allow at most 2 of 150 instances to differ (the
-        // binary-task accuracy identity is asserted in cv::kfold tests)
-        assert!(
-            (acc_cold - acc_sir).abs() <= 2.0 / ds.len() as f64 + 1e-12,
-            "OvO accuracy: cold {acc_cold} vs sir {acc_sir}"
-        );
-        let cold_iters: u64 = stats_cold.iter().map(|s| s.iterations).sum();
-        let sir_iters: u64 = stats_sir.iter().map(|s| s.iterations).sum();
-        assert!(
-            sir_iters <= cold_iters,
-            "sir {sir_iters} vs cold {cold_iters}"
-        );
-        assert_eq!(stats_cold.len(), 3);
-    }
-
-    #[test]
-    fn classes_enumerated_sorted() {
-        let ds = synth_blobs(30, 2, 4, 1.0, 4);
-        assert_eq!(ds.classes(), vec![0, 1, 2, 3]);
-    }
-}
+pub(crate) use ovo::{class_pairs, pair_chain, PairChainSpec, PairRun};
+pub(crate) use report::tally_votes;

@@ -1,0 +1,518 @@
+//! The one-vs-one training and parallel seeded-CV engine.
+//!
+//! [`cv_ovo_opts`] schedules all `m(m−1)/2` pairwise seeded k-fold CV
+//! chains concurrently on the process pool ([`scoped_map`]), every pair
+//! reading kernel rows through an index-projected view of one shared
+//! full-dataset row store. Each pair's chain is the exact sequential
+//! algorithm of the binary driver — scheduling changes *when* a pair
+//! runs, never what it computes — so per-pair iteration counts and votes
+//! are bit-identical to a sequential sweep for every thread count.
+
+use super::dataset::MultiDataset;
+use super::report::{tally_votes, OvoCvReport, PairCvStat};
+use crate::cv::rescale_alpha;
+use crate::data::{Dataset, FoldPlan};
+use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::seeding::{check_feasible, SeedContext, Seeder};
+use crate::smo::{Model, SmoParams, Solver};
+use crate::util::pool::{effective_threads, scoped_map};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One-vs-one ensemble: a binary model per class pair, majority vote.
+#[derive(Debug, Clone)]
+pub struct OvoModel {
+    /// Distinct classes, ascending.
+    pub classes: Vec<u32>,
+    /// Models in pair order (0,1), (0,2), …, (1,2), … matching LibSVM.
+    pub models: Vec<Model>,
+}
+
+impl OvoModel {
+    /// Train all C(m,2) pairwise models, pairs in parallel on the process
+    /// pool (results are independent per pair, so parallelism cannot
+    /// change them).
+    pub fn train(ds: &MultiDataset, kernel: Kernel, c: f64) -> OvoModel {
+        Self::train_threads(ds, kernel, c, 0)
+    }
+
+    /// [`OvoModel::train`] with an explicit scheduling width (0 = auto,
+    /// 1 = sequential). Never changes results.
+    pub fn train_threads(ds: &MultiDataset, kernel: Kernel, c: f64, threads: usize) -> OvoModel {
+        let classes = ds.classes();
+        let pairs = class_pairs(&classes);
+        let models = scoped_map(threads, pairs.len(), |pi| {
+            let (a, b) = pairs[pi];
+            let (pair, _) = ds.pair_subset(a, b);
+            let mut solver =
+                Solver::new(KernelEval::new(pair.clone(), kernel), SmoParams::with_c(c));
+            let r = solver.solve();
+            Model::from_result(&pair, kernel, &r)
+        });
+        OvoModel { classes, models }
+    }
+
+    /// Majority-vote prediction for every row of `x`. Ties go to the
+    /// first (lowest) class with the maximal count, as in LibSVM.
+    pub fn predict(&self, x: &crate::data::DataMatrix) -> Vec<u32> {
+        let n = x.rows();
+        // evaluate rows through each pairwise model
+        let probe = Dataset::new(
+            "probe",
+            x.clone(),
+            vec![1.0; n], // labels unused for decision values
+        );
+        let mut votes = vec![vec![0u32; self.classes.len()]; n];
+        let mut m = 0;
+        for i in 0..self.classes.len() {
+            for j in i + 1..self.classes.len() {
+                let dec = self.models[m].decision_values(&probe);
+                for (r, &d) in dec.iter().enumerate() {
+                    if d >= 0.0 {
+                        votes[r][i] += 1;
+                    } else {
+                        votes[r][j] += 1;
+                    }
+                }
+                m += 1;
+            }
+        }
+        votes
+            .into_iter()
+            .map(|v| {
+                let mut best = 0usize;
+                for (i, &count) in v.iter().enumerate() {
+                    if count > v[best] {
+                        best = i; // strict '>' keeps the first maximum
+                    }
+                }
+                self.classes[best]
+            })
+            .collect()
+    }
+
+    /// Fraction of `ds` the ensemble classifies correctly.
+    pub fn accuracy(&self, ds: &MultiDataset) -> f64 {
+        let pred = self.predict(&ds.x);
+        let correct = pred
+            .iter()
+            .zip(&ds.labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        correct as f64 / ds.len() as f64
+    }
+}
+
+/// Options for the parallel one-vs-one CV engine.
+#[derive(Debug, Clone)]
+pub struct OvoOptions {
+    /// SMO tolerance (LibSVM default 1e-3).
+    pub eps: f64,
+    /// LibSVM-style shrinking in the per-round solver.
+    pub shrinking: bool,
+    /// Solver kernel-cache budget per round.
+    pub cache_bytes: usize,
+    /// Per-pair seeding-cache budget (LRU over the pair view).
+    pub seed_cache_bytes: usize,
+    /// Byte budget of the shared full-dataset row store (only with
+    /// [`OvoOptions::share_rows`]).
+    pub shared_cache_bytes: usize,
+    /// Fold-partition + seeding determinism.
+    pub rng_seed: u64,
+    /// Concurrent pair chains (0 = auto, 1 = sequential). Scheduling
+    /// width only — never changes any result.
+    pub threads: usize,
+    /// Compute each kernel row once on the full dataset and serve every
+    /// pair through an index-projected view. Pure compute sharing — the
+    /// projected rows are bit-identical to pair-local evaluation.
+    pub share_rows: bool,
+}
+
+impl Default for OvoOptions {
+    fn default() -> Self {
+        OvoOptions {
+            eps: 1e-3,
+            shrinking: true,
+            cache_bytes: 256 << 20,
+            seed_cache_bytes: 32 << 20,
+            shared_cache_bytes: 256 << 20,
+            rng_seed: 42,
+            threads: 0,
+            share_rows: true,
+        }
+    }
+}
+
+/// All class pairs in LibSVM order: (0,1), (0,2), …, (1,2), … — the one
+/// pair enumeration every consumer (ensemble training, CV engine, grid
+/// scheduler) must agree on.
+pub(crate) fn class_pairs(classes: &[u32]) -> Vec<(u32, u32)> {
+    let mut pairs = Vec::with_capacity(classes.len() * (classes.len().saturating_sub(1)) / 2);
+    for i in 0..classes.len() {
+        for j in i + 1..classes.len() {
+            pairs.push((classes[i], classes[j]));
+        }
+    }
+    pairs
+}
+
+/// k-fold CV accuracy of the OvO ensemble with every pair's binary CV
+/// alpha-seeded by `seeder` — the original entry point, kept for callers
+/// that only need the headline numbers. Returns (ensemble accuracy,
+/// per-pair stats). Equivalent to [`cv_ovo_opts`] with default options
+/// (parallel pairs, shared rows) at the given `rng_seed`.
+pub fn cv_ovo(
+    ds: &MultiDataset,
+    kernel: Kernel,
+    c: f64,
+    k: usize,
+    seeder: &dyn Seeder,
+    rng_seed: u64,
+) -> (f64, Vec<PairCvStat>) {
+    let rep = cv_ovo_opts(
+        ds,
+        kernel,
+        c,
+        k,
+        seeder,
+        &OvoOptions {
+            rng_seed,
+            ..Default::default()
+        },
+    );
+    (rep.accuracy(), rep.pairs)
+}
+
+/// Run seeded k-fold CV of the one-vs-one ensemble under explicit
+/// scheduling options. Folds are stratified on the multi-class labels
+/// once and projected onto every pair, so each fold mirrors the class
+/// mix and each instance is tested in exactly one round per pair.
+pub fn cv_ovo_opts(
+    ds: &MultiDataset,
+    kernel: Kernel,
+    c: f64,
+    k: usize,
+    seeder: &dyn Seeder,
+    opts: &OvoOptions,
+) -> OvoCvReport {
+    let classes = ds.classes();
+    assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
+    let folds = ds.stratified_folds(k, opts.rng_seed);
+    let shared = opts.share_rows.then(|| {
+        SharedKernelCache::with_byte_budget(
+            KernelEval::new(ds.kernel_dataset(), kernel),
+            opts.shared_cache_bytes,
+        )
+    });
+    let pairs = class_pairs(&classes);
+    // Split the scheduling width between pair fan-out and the per-round
+    // solver's internal parallelism, never oversubscribing.
+    let width = effective_threads(opts.threads);
+    let solver_threads = (width / pairs.len().max(1)).max(1);
+    let cs = [c];
+    let runs = scoped_map(opts.threads, pairs.len(), |pi| {
+        let spec = PairChainSpec {
+            mds: ds,
+            folds: &folds,
+            kernel,
+            cs: &cs,
+            chain_c: false,
+            seeder,
+            shared: shared.as_ref(),
+            opts,
+            solver_threads,
+            pair_index: pi,
+        };
+        pair_chain(&spec, pairs[pi].0, pairs[pi].1)
+    });
+    let mut pair_stats = Vec::with_capacity(pairs.len());
+    let mut votes = Vec::with_capacity(pairs.len());
+    for mut per_c in runs {
+        let run = per_c.pop().expect("one C value, one run");
+        pair_stats.push(run.stat);
+        votes.push(run.votes);
+    }
+    let confusion = tally_votes(&classes, &ds.labels, &votes);
+    OvoCvReport {
+        dataset: ds.name.clone(),
+        seeder: seeder.name().to_string(),
+        k,
+        classes,
+        pairs: pair_stats,
+        confusion,
+    }
+}
+
+/// One pair × one C value of a chain: statistics plus the pair's votes as
+/// `(global instance index, winning class)`.
+#[derive(Debug, Clone)]
+pub(crate) struct PairRun {
+    pub stat: PairCvStat,
+    pub votes: Vec<(usize, u32)>,
+}
+
+/// Everything one pair chain needs; bundled so [`pair_chain`] stays
+/// callable from both the CV engine and the grid scheduler.
+pub(crate) struct PairChainSpec<'a> {
+    pub mds: &'a MultiDataset,
+    /// Global folds, stratified on the multi-class labels.
+    pub folds: &'a [Vec<usize>],
+    pub kernel: Kernel,
+    /// C values to visit in one call (reusing the pair view and its seed
+    /// cache across all of them).
+    pub cs: &'a [f64],
+    /// Warm-chain the C values (which must then be ascending): fold h at
+    /// C′ seeds from the same fold at the previous C via
+    /// [`rescale_alpha`]. With `false` every C runs independently and
+    /// only the pair view / kernel rows are reused.
+    pub chain_c: bool,
+    pub seeder: &'a dyn Seeder,
+    /// Full-dataset row store backing this pair's seeding cache through
+    /// an index projection; `None` = private per-pair cache.
+    pub shared: Option<&'a Arc<SharedKernelCache>>,
+    pub opts: &'a OvoOptions,
+    /// Threads for the per-round solver's internal (bit-identical)
+    /// parallel paths.
+    pub solver_threads: usize,
+    /// Position of this pair in the pair order (decorrelates the
+    /// deterministic seeding RNG between pairs).
+    pub pair_index: usize,
+}
+
+/// The seeded k-fold chain for one class pair, optionally warm-chained
+/// across an ascending C list. Returns one [`PairRun`] per C value.
+///
+/// Degenerate rounds — an empty training or test split after projection,
+/// or a pair class entirely absent from the training split — are skipped;
+/// the chain then restarts cold at the next solvable round (seeding from
+/// a non-adjacent round would hand the seeder a transition it did not
+/// come from).
+pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Vec<PairRun> {
+    let (pair_ds, pair_global) = spec.mds.pair_subset(class_a, class_b);
+    // project the global folds onto the pair view (pair_global is sorted)
+    let pair_folds: Vec<Vec<usize>> = spec
+        .folds
+        .iter()
+        .map(|f| {
+            f.iter()
+                .filter_map(|g| pair_global.binary_search(g).ok())
+                .collect()
+        })
+        .collect();
+    let k = pair_folds.len();
+    let plan = FoldPlan::from_folds(pair_folds, pair_ds.len());
+    let mut seed_cache = match spec.shared {
+        Some(shared) => KernelCache::with_projected_backing(
+            Arc::clone(shared),
+            pair_global.clone(),
+            KernelEval::new(pair_ds.clone(), spec.kernel),
+            spec.opts.seed_cache_bytes,
+        ),
+        None => KernelCache::with_byte_budget(
+            KernelEval::new(pair_ds.clone(), spec.kernel),
+            spec.opts.seed_cache_bytes,
+        ),
+    };
+
+    // per-fold carried state from the previous C value
+    let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
+    let mut runs = Vec::with_capacity(spec.cs.len());
+
+    for (ci, &c) in spec.cs.iter().enumerate() {
+        let mut votes: Vec<(usize, u32)> = Vec::new();
+        let mut iterations = 0u64;
+        let (mut correct, mut tested) = (0usize, 0usize);
+        let (mut rounds_run, mut fallbacks) = (0usize, 0usize);
+        let mut init_total = Duration::ZERO;
+        let mut rest_total = Duration::ZERO;
+
+        // fold-chain state within this C
+        let mut prev_alpha: Vec<f64> = Vec::new();
+        let mut prev_f: Vec<f64> = Vec::new();
+        let mut prev_b = 0.0f64;
+        let mut prev_train: Vec<usize> = Vec::new();
+        let mut prev_solved: Option<usize> = None;
+
+        for h in 0..k {
+            let train_idx = plan.train_indices(h);
+            let test_idx = plan.test_indices(h);
+            if train_idx.is_empty() || test_idx.is_empty() {
+                prev_c_alpha[h] = None;
+                continue;
+            }
+            let train = pair_ds.select(&train_idx);
+            if train.positives() == 0 || train.positives() == train.len() {
+                // a pair class is absent from this training split
+                prev_c_alpha[h] = None;
+                continue;
+            }
+
+            // ---- init phase: produce the seed α ---------------------------
+            let t_init = Instant::now();
+            let mut seeded = false;
+            let (alpha0, fell_back) = if let Some(prev) =
+                spec.chain_c.then(|| prev_c_alpha[h].take()).flatten()
+            {
+                seeded = true;
+                (rescale_alpha(&prev, &train.y, spec.cs[ci - 1], c), false)
+            } else if h > 0 && prev_solved == Some(h - 1) {
+                let trans = plan.transition(h - 1);
+                let ctx = SeedContext {
+                    full: &pair_ds,
+                    kernel: spec.kernel,
+                    c,
+                    prev_train: &prev_train,
+                    prev_alpha: &prev_alpha,
+                    prev_f: &prev_f,
+                    prev_b,
+                    removed: &trans.removed,
+                    added: &trans.added,
+                    next_train: &train_idx,
+                    rng_seed: spec.opts.rng_seed
+                        ^ (h as u64)
+                        ^ ((spec.pair_index as u64) << 20)
+                        ^ ((ci as u64) << 40),
+                };
+                let seed = spec.seeder.seed(&ctx, &mut seed_cache);
+                debug_assert!(
+                    check_feasible(&seed.alpha, &train.y, c).is_ok(),
+                    "{} produced infeasible seed at pair {class_a}v{class_b} round {h}: {:?}",
+                    spec.seeder.name(),
+                    check_feasible(&seed.alpha, &train.y, c)
+                );
+                seeded = true;
+                (seed.alpha, seed.fell_back)
+            } else {
+                (vec![0.0; train_idx.len()], false)
+            };
+            let init = t_init.elapsed();
+
+            // ---- "the rest": train + classify the test fold ---------------
+            let t_rest = Instant::now();
+            let params = SmoParams {
+                c,
+                eps: spec.opts.eps,
+                shrinking: spec.opts.shrinking,
+                cache_bytes: spec.opts.cache_bytes,
+                threads: spec.solver_threads,
+                ..Default::default()
+            };
+            let mut solver = Solver::new(KernelEval::new(train.clone(), spec.kernel), params);
+            let result = solver.solve_from(alpha0, None);
+            iterations += result.iterations;
+            let model = Model::from_result(&train, spec.kernel, &result);
+            let test = pair_ds.select(test_idx);
+            let dec = model.decision_values(&test);
+            for (pos, &pp) in test_idx.iter().enumerate() {
+                let g = pair_global[pp];
+                let winner = if dec[pos] >= 0.0 { class_a } else { class_b };
+                votes.push((g, winner));
+                let truth = if pair_ds.y[pp] > 0.0 { class_a } else { class_b };
+                if winner == truth {
+                    correct += 1;
+                }
+                tested += 1;
+            }
+            let mut rest = t_rest.elapsed();
+
+            // Warm-start gradient setup inside the solver is init cost,
+            // not training cost (paper accounting).
+            let grad_init = Duration::from_secs_f64(result.grad_init_secs);
+            let init = if seeded { init + grad_init } else { init };
+            if seeded {
+                rest = rest.saturating_sub(grad_init);
+            }
+            init_total += init;
+            rest_total += rest;
+            if fell_back {
+                fallbacks += 1;
+            }
+            rounds_run += 1;
+
+            // carry to the next C for this fold (warm chain only)
+            if spec.chain_c && ci + 1 < spec.cs.len() {
+                prev_c_alpha[h] = Some(result.alpha.clone());
+            }
+            // carry to the next fold within this C
+            prev_f = result.f_indicators(&train.y);
+            prev_alpha = result.alpha;
+            prev_b = result.b;
+            prev_train = train_idx;
+            prev_solved = Some(h);
+        }
+
+        runs.push(PairRun {
+            stat: PairCvStat {
+                class_a,
+                class_b,
+                iterations,
+                accuracy: if tested == 0 {
+                    0.0
+                } else {
+                    correct as f64 / tested as f64
+                },
+                init: init_total,
+                rest: rest_total,
+                rounds_run,
+                fallbacks,
+            },
+            votes,
+        });
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiclass::synth_blobs;
+    use crate::seeding::{ColdStart, Sir};
+
+    #[test]
+    fn ovo_separable_blobs_high_accuracy() {
+        let ds = synth_blobs(120, 4, 3, 3.0, 2);
+        let model = OvoModel::train(&ds, Kernel::rbf(0.5), 10.0);
+        assert_eq!(model.models.len(), 3); // C(3,2)
+        let acc = model.accuracy(&ds);
+        assert!(acc > 0.9, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn cv_ovo_seeded_matches_cold_accuracy() {
+        let ds = synth_blobs(150, 4, 3, 2.0, 3);
+        let (acc_cold, stats_cold) = cv_ovo(&ds, Kernel::rbf(0.5), 10.0, 5, &ColdStart, 42);
+        let (acc_sir, stats_sir) = cv_ovo(&ds, Kernel::rbf(0.5), 10.0, 5, &Sir, 42);
+        // pairwise decisions near zero can flip between two ε-optimal
+        // solutions; allow at most 2 of 150 instances to differ (the
+        // binary-task accuracy identity is asserted in cv::kfold tests)
+        assert!(
+            (acc_cold - acc_sir).abs() <= 2.0 / ds.len() as f64 + 1e-12,
+            "OvO accuracy: cold {acc_cold} vs sir {acc_sir}"
+        );
+        let cold_iters: u64 = stats_cold.iter().map(|s| s.iterations).sum();
+        let sir_iters: u64 = stats_sir.iter().map(|s| s.iterations).sum();
+        assert!(
+            sir_iters <= cold_iters,
+            "sir {sir_iters} vs cold {cold_iters}"
+        );
+        assert_eq!(stats_cold.len(), 3);
+    }
+
+    #[test]
+    fn cv_ovo_report_covers_every_instance_once() {
+        let ds = synth_blobs(90, 3, 3, 2.0, 5);
+        let rep = cv_ovo_opts(
+            &ds,
+            Kernel::rbf(0.5),
+            10.0,
+            3,
+            &Sir,
+            &OvoOptions::default(),
+        );
+        let total: usize = rep.confusion.iter().flatten().sum();
+        assert_eq!(total, ds.len());
+        assert_eq!(rep.pairs.len(), 3);
+        assert!(rep.total_iterations() > 0);
+        assert!(rep.init_fraction() >= 0.0 && rep.init_fraction() <= 1.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-pair statistics and the aggregated one-vs-one CV report — the
+//! multiclass counterpart of [`CvReport`](crate::cv::CvReport), carrying
+//! the paper's init-vs-rest split per class pair plus the ensemble
+//! confusion matrix.
+
+use std::time::Duration;
+
+/// Result of one pairwise seeded CV inside
+/// [`cv_ovo`](crate::multiclass::cv_ovo).
+#[derive(Debug, Clone)]
+pub struct PairCvStat {
+    /// The pair's positive class (mapped to +1 in the binary sub-problem).
+    pub class_a: u32,
+    /// The pair's negative class (mapped to −1).
+    pub class_b: u32,
+    /// Σ SMO iterations across this pair's CV rounds.
+    pub iterations: u64,
+    /// Pairwise test accuracy over the rounds actually voted on.
+    pub accuracy: f64,
+    /// Σ alpha-initialisation time (seeding + warm-start gradient setup).
+    pub init: Duration,
+    /// Σ training + test-fold classification time.
+    pub rest: Duration,
+    /// CV rounds solved (degenerate rounds — a pair class absent from the
+    /// training split — are skipped and not counted).
+    pub rounds_run: usize,
+    /// Rounds where the seeder fell back to the cold start.
+    pub fallbacks: usize,
+}
+
+impl PairCvStat {
+    /// Fraction of this pair's elapsed time spent on alpha initialisation.
+    pub fn init_fraction(&self) -> f64 {
+        let total = (self.init + self.rest).as_secs_f64();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.init.as_secs_f64() / total
+        }
+    }
+}
+
+/// Aggregated result of one one-vs-one k-fold CV run: per-pair statistics
+/// plus the ensemble confusion matrix accumulated from the pairwise votes.
+#[derive(Debug, Clone)]
+pub struct OvoCvReport {
+    /// Dataset name the run was over.
+    pub dataset: String,
+    /// Seeder name every pair's chain used.
+    pub seeder: String,
+    /// Number of folds k.
+    pub k: usize,
+    /// Distinct classes, ascending (row/column order of `confusion`).
+    pub classes: Vec<u32>,
+    /// Per-pair statistics in pair order (0,1), (0,2), …, (1,2), ….
+    pub pairs: Vec<PairCvStat>,
+    /// Ensemble confusion matrix: `confusion[t][p]` counts instances of
+    /// true class `classes[t]` predicted as `classes[p]` by majority vote.
+    /// Every instance appears exactly once (its CV test round).
+    pub confusion: Vec<Vec<usize>>,
+}
+
+impl OvoCvReport {
+    /// Ensemble CV accuracy: trace of the confusion matrix over the total.
+    pub fn accuracy(&self) -> f64 {
+        let correct: usize = (0..self.classes.len()).map(|i| self.confusion[i][i]).sum();
+        let total: usize = self.confusion.iter().flatten().sum();
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Σ SMO iterations over every pair.
+    pub fn total_iterations(&self) -> u64 {
+        self.pairs.iter().map(|p| p.iterations).sum()
+    }
+
+    /// Σ alpha-initialisation time over every pair.
+    pub fn total_init(&self) -> Duration {
+        self.pairs.iter().map(|p| p.init).sum()
+    }
+
+    /// Σ training + classification time over every pair.
+    pub fn total_rest(&self) -> Duration {
+        self.pairs.iter().map(|p| p.rest).sum()
+    }
+
+    /// Total elapsed = init + rest (summed over pairs, not wall clock:
+    /// pairs run concurrently).
+    pub fn total_elapsed(&self) -> Duration {
+        self.total_init() + self.total_rest()
+    }
+
+    /// Fraction of total compute spent on alpha initialisation — the
+    /// paper's "init vs the rest" split over the whole ensemble.
+    pub fn init_fraction(&self) -> f64 {
+        let total = self.total_elapsed().as_secs_f64();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.total_init().as_secs_f64() / total
+        }
+    }
+
+    /// Σ seeder fallbacks over every pair.
+    pub fn fallbacks(&self) -> usize {
+        self.pairs.iter().map(|p| p.fallbacks).sum()
+    }
+}
+
+/// Tally pairwise votes into the ensemble confusion matrix. `votes` holds
+/// one `(global instance, winning class)` list per pair, merged **in pair
+/// order** so the tally is deterministic; the predicted class is the first
+/// class (ascending) with the maximal vote count — LibSVM's tie-break.
+/// Instances no pair voted on (every containing pair was degenerate)
+/// default to the first class, as in LibSVM.
+pub(crate) fn tally_votes(
+    classes: &[u32],
+    labels: &[u32],
+    votes: &[Vec<(usize, u32)>],
+) -> Vec<Vec<usize>> {
+    let m = classes.len();
+    let class_pos = |c: u32| classes.binary_search(&c).expect("vote for unknown class");
+    let mut counts = vec![vec![0u32; m]; labels.len()];
+    for pair_votes in votes {
+        for &(g, winner) in pair_votes {
+            counts[g][class_pos(winner)] += 1;
+        }
+    }
+    let mut confusion = vec![vec![0usize; m]; m];
+    for (g, row) in counts.iter().enumerate() {
+        let mut best = 0usize;
+        for (p, &c) in row.iter().enumerate() {
+            if c > row[best] {
+                best = p; // strict '>' keeps the first maximum (LibSVM)
+            }
+        }
+        let truth = class_pos(labels[g]);
+        confusion[truth][best] += 1;
+    }
+    confusion
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> OvoCvReport {
+        OvoCvReport {
+            dataset: "d".into(),
+            seeder: "sir".into(),
+            k: 3,
+            classes: vec![0, 1, 2],
+            pairs: vec![
+                PairCvStat {
+                    class_a: 0,
+                    class_b: 1,
+                    iterations: 100,
+                    accuracy: 0.9,
+                    init: Duration::from_millis(5),
+                    rest: Duration::from_millis(45),
+                    rounds_run: 3,
+                    fallbacks: 0,
+                },
+                PairCvStat {
+                    class_a: 0,
+                    class_b: 2,
+                    iterations: 200,
+                    accuracy: 0.8,
+                    init: Duration::from_millis(10),
+                    rest: Duration::from_millis(40),
+                    rounds_run: 3,
+                    fallbacks: 1,
+                },
+            ],
+            confusion: vec![vec![8, 1, 1], vec![0, 9, 1], vec![1, 0, 9]],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report();
+        assert_eq!(r.total_iterations(), 300);
+        assert_eq!(r.total_init(), Duration::from_millis(15));
+        assert_eq!(r.total_rest(), Duration::from_millis(85));
+        assert_eq!(r.fallbacks(), 1);
+        // trace 26 of 30
+        assert!((r.accuracy() - 26.0 / 30.0).abs() < 1e-12);
+        assert!((r.init_fraction() - 15.0 / 100.0).abs() < 1e-9);
+        assert!((r.pairs[0].init_fraction() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tally_counts_votes_and_breaks_ties_low() {
+        let classes = [0u32, 1, 2];
+        let labels = [0u32, 1, 2];
+        // instance 0: one vote class 0; instance 1: tie 0 vs 1 → class 0
+        // (first max); instance 2: no votes → class 0 default
+        let votes = vec![vec![(0, 0), (1, 0)], vec![(1, 1)]];
+        let confusion = tally_votes(&classes, &labels, &votes);
+        assert_eq!(confusion[0][0], 1);
+        assert_eq!(confusion[1][0], 1, "tie must go to the first class");
+        assert_eq!(confusion[2][0], 1, "unvoted instance defaults to first");
+        let total: usize = confusion.iter().flatten().sum();
+        assert_eq!(total, 3);
+    }
+}

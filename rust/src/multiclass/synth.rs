@@ -1,0 +1,101 @@
+//! Deterministic synthetic multi-class generators: separable Gaussian
+//! blobs (the easy sanity workload) and concentric rings (a harder,
+//! radially non-linear workload that exercises the RBF kernel).
+
+use super::dataset::MultiDataset;
+use crate::util::rng::Pcg32;
+
+/// Deterministic synthetic multi-class dataset: `n_classes` Gaussian blobs.
+pub fn synth_blobs(n: usize, dim: usize, n_classes: u32, sep: f64, seed: u64) -> MultiDataset {
+    let mut rng = Pcg32::new(seed, 0xB10B5);
+    let mut centers = Vec::new();
+    for _ in 0..n_classes {
+        centers.push((0..dim).map(|_| sep * rng.normal()).collect::<Vec<f64>>());
+    }
+    let mut data = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cl = (i as u32) % n_classes; // balanced
+        for j in 0..dim {
+            data.push((centers[cl as usize][j] + rng.normal()) as f32);
+        }
+        labels.push(cl);
+    }
+    MultiDataset::new(
+        format!("blobs{n_classes}"),
+        crate::data::DataMatrix::dense(n, dim, data),
+        labels,
+    )
+}
+
+/// Deterministic concentric-rings dataset in 2-D: class c lives on a
+/// circle of radius c + 1 with radial Gaussian noise (`noise` standard
+/// deviation). No linear separator exists between any two classes, every
+/// pair's decision boundary is a closed curve, and adjacent rings overlap
+/// once `noise` approaches the 1.0 ring spacing — a substantially harder
+/// one-vs-one workload than [`synth_blobs`].
+pub fn synth_rings(n: usize, n_classes: u32, noise: f64, seed: u64) -> MultiDataset {
+    assert!(n_classes >= 2, "need at least 2 rings");
+    let mut rng = Pcg32::new(seed, 0x1265);
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cl = (i as u32) % n_classes; // balanced
+        let radius = (cl as f64 + 1.0) + noise * rng.normal();
+        let angle = rng.uniform(0.0, std::f64::consts::TAU);
+        data.push((radius * angle.cos()) as f32);
+        data.push((radius * angle.sin()) as f32);
+        labels.push(cl);
+    }
+    MultiDataset::new(
+        format!("rings{n_classes}"),
+        crate::data::DataMatrix::dense(n, 2, data),
+        labels,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_balanced_and_deterministic() {
+        let a = synth_blobs(60, 3, 3, 2.0, 5);
+        let b = synth_blobs(60, 3, 3, 2.0, 5);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.x.to_dense_vec(), b.x.to_dense_vec());
+        assert_eq!(a.class_counts(), vec![20, 20, 20]);
+    }
+
+    #[test]
+    fn rings_have_increasing_radii() {
+        let ds = synth_rings(300, 3, 0.05, 7);
+        assert_eq!(ds.class_counts(), vec![100, 100, 100]);
+        // mean radius per class tracks c + 1
+        for cl in 0..3u32 {
+            let radii: Vec<f64> = (0..ds.len())
+                .filter(|&i| ds.labels[i] == cl)
+                .map(|i| {
+                    let row = ds.x.dense_row(i);
+                    ((row[0] as f64).powi(2) + (row[1] as f64).powi(2)).sqrt()
+                })
+                .collect();
+            let mean = radii.iter().sum::<f64>() / radii.len() as f64;
+            assert!(
+                (mean - (cl as f64 + 1.0)).abs() < 0.1,
+                "class {cl} mean radius {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn rings_deterministic_under_seed() {
+        let a = synth_rings(50, 2, 0.1, 11);
+        let b = synth_rings(50, 2, 0.1, 11);
+        assert_eq!(a.x.to_dense_vec(), b.x.to_dense_vec());
+        assert_ne!(
+            a.x.to_dense_vec(),
+            synth_rings(50, 2, 0.1, 12).x.to_dense_vec()
+        );
+    }
+}

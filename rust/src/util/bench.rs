@@ -85,6 +85,137 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---- the CI bench-regression gate -----------------------------------------
+
+use crate::util::json::Json;
+
+/// Tolerances for [`check_bench_regression`].
+#[derive(Debug, Clone)]
+pub struct GateTolerance {
+    /// Relative slack on the seeded-vs-cold *iteration ratio* (the
+    /// deterministic metric: SMO iteration counts do not depend on the
+    /// runner). 0.05 = a seeder may use at most 5% more iterations
+    /// relative to cold than the baseline recorded.
+    pub iter_ratio: f64,
+    /// Absolute slack on the init-time fraction (wall-clock based, so
+    /// noisy on shared runners — keep this generous).
+    pub init_fraction: f64,
+}
+
+impl Default for GateTolerance {
+    fn default() -> Self {
+        GateTolerance {
+            iter_ratio: 0.05,
+            init_fraction: 0.15,
+        }
+    }
+}
+
+/// Compare a freshly emitted `BENCH_*.json` against a committed baseline
+/// and report regressions — the logic behind the `alphaseed benchgate`
+/// subcommand CI runs after the bench step.
+///
+/// Both documents must carry a `per_seeder` object whose entries hold
+/// `total_iterations` and `init_fraction` (what `table1_efficiency` and
+/// `table_ovo` emit). Two gates per seeded entry of the *baseline*:
+///
+/// 1. **iteration ratio** — `seeder.total_iterations / cold.total_iterations`
+///    must not exceed the baseline's ratio by more than
+///    [`GateTolerance::iter_ratio`] (relative). Iteration counts are
+///    deterministic, so this gate is safe on shared runners.
+/// 2. **init fraction** — must not exceed the baseline's value by more
+///    than [`GateTolerance::init_fraction`] (absolute).
+///
+/// A seeder present in the baseline but missing from the current run is a
+/// failure (coverage loss). Returns the per-check descriptions on
+/// success, the list of failures otherwise.
+pub fn check_bench_regression(
+    current: &Json,
+    baseline: &Json,
+    tol: &GateTolerance,
+) -> Result<Vec<String>, Vec<String>> {
+    let field = |doc: &Json, seeder: &str, key: &str| -> Option<f64> {
+        doc.get("per_seeder")?.get(seeder)?.get(key)?.as_f64()
+    };
+    let base_seeders: Vec<String> = match baseline.get("per_seeder").and_then(Json::as_obj) {
+        Some(map) => map.keys().cloned().collect(),
+        None => return Err(vec!["baseline has no per_seeder object".into()]),
+    };
+    let (Some(cur_cold), Some(base_cold)) = (
+        field(current, "cold", "total_iterations"),
+        field(baseline, "cold", "total_iterations"),
+    ) else {
+        return Err(vec![
+            "both documents need per_seeder.cold.total_iterations".into()
+        ]);
+    };
+    if cur_cold <= 0.0 || base_cold <= 0.0 {
+        return Err(vec![format!(
+            "cold iteration counts must be positive (current {cur_cold}, baseline {base_cold})"
+        )]);
+    }
+
+    let mut passed = Vec::new();
+    let mut failures = Vec::new();
+    for seeder in base_seeders {
+        if seeder != "cold" {
+            let Some(cur_iters) = field(current, &seeder, "total_iterations") else {
+                failures.push(format!("seeder '{seeder}' missing from the current bench"));
+                continue;
+            };
+            let Some(base_iters) = field(baseline, &seeder, "total_iterations") else {
+                failures.push(format!(
+                    "baseline entry for '{seeder}' lacks a numeric total_iterations"
+                ));
+                continue;
+            };
+            let cur_ratio = cur_iters / cur_cold;
+            let base_ratio = base_iters / base_cold;
+            let limit = base_ratio * (1.0 + tol.iter_ratio);
+            if cur_ratio > limit + 1e-12 {
+                failures.push(format!(
+                    "{seeder}: seeded-vs-cold iteration ratio {cur_ratio:.4} exceeds \
+                     baseline {base_ratio:.4} (+{:.0}% tolerance = {limit:.4})",
+                    tol.iter_ratio * 100.0
+                ));
+            } else {
+                passed.push(format!(
+                    "{seeder}: iteration ratio {cur_ratio:.4} ≤ limit {limit:.4}"
+                ));
+            }
+        }
+        // the baseline declares which gates apply: a baseline entry with
+        // init_fraction but no matching field in the current record is a
+        // coverage loss, exactly like a missing seeder
+        if let Some(base_if) = field(baseline, &seeder, "init_fraction") {
+            let Some(cur_if) = field(current, &seeder, "init_fraction") else {
+                failures.push(format!(
+                    "'{seeder}' lacks init_fraction in the current bench \
+                     (baseline gates on it)"
+                ));
+                continue;
+            };
+            let limit = base_if + tol.init_fraction;
+            if cur_if > limit + 1e-12 {
+                failures.push(format!(
+                    "{seeder}: init fraction {cur_if:.4} exceeds baseline {base_if:.4} \
+                     (+{:.2} tolerance = {limit:.4})",
+                    tol.init_fraction
+                ));
+            } else {
+                passed.push(format!(
+                    "{seeder}: init fraction {cur_if:.4} ≤ limit {limit:.4}"
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(passed)
+    } else {
+        Err(failures)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +232,104 @@ mod tests {
         let (v, d) = once("quick", || 7);
         assert_eq!(v, 7);
         assert!(d.as_nanos() > 0);
+    }
+
+    fn bench_doc(cold: f64, sir: f64, sir_if: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"per_seeder": {{
+                "cold": {{"total_iterations": {cold}, "init_fraction": 0.0}},
+                "sir": {{"total_iterations": {sir}, "init_fraction": {sir_if}}}
+            }}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn gate_passes_when_ratio_improves() {
+        let baseline = bench_doc(1000.0, 1000.0, 0.3);
+        let current = bench_doc(2000.0, 900.0, 0.25); // ratio 0.45 < 1.0
+        let passed =
+            check_bench_regression(&current, &baseline, &GateTolerance::default()).unwrap();
+        assert!(passed.iter().any(|p| p.contains("iteration ratio")));
+    }
+
+    #[test]
+    fn gate_fails_on_iteration_ratio_regression() {
+        let baseline = bench_doc(1000.0, 600.0, 0.3); // ratio 0.6
+        let current = bench_doc(1000.0, 700.0, 0.3); // ratio 0.7 > 0.6·1.05
+        let failures =
+            check_bench_regression(&current, &baseline, &GateTolerance::default()).unwrap_err();
+        assert!(failures[0].contains("iteration ratio"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_init_fraction_regression() {
+        let baseline = bench_doc(1000.0, 600.0, 0.2);
+        let current = bench_doc(1000.0, 600.0, 0.5); // 0.5 > 0.2 + 0.15
+        let failures =
+            check_bench_regression(&current, &baseline, &GateTolerance::default()).unwrap_err();
+        assert!(failures[0].contains("init fraction"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_missing_seeder() {
+        let baseline = bench_doc(1000.0, 600.0, 0.2);
+        let current = Json::parse(
+            r#"{"per_seeder": {"cold": {"total_iterations": 1000, "init_fraction": 0.0}}}"#,
+        )
+        .unwrap();
+        let failures =
+            check_bench_regression(&current, &baseline, &GateTolerance::default()).unwrap_err();
+        assert!(failures[0].contains("missing"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_tolerance_is_respected() {
+        let baseline = bench_doc(1000.0, 600.0, 0.2); // ratio 0.6
+        let current = bench_doc(1000.0, 620.0, 0.2); // ratio 0.62 ≤ 0.6·1.05
+        assert!(
+            check_bench_regression(&current, &baseline, &GateTolerance::default()).is_ok()
+        );
+        let tight = GateTolerance {
+            iter_ratio: 0.01,
+            init_fraction: 0.15,
+        };
+        assert!(check_bench_regression(&current, &baseline, &tight).is_err());
+    }
+
+    #[test]
+    fn gate_rejects_malformed_documents() {
+        let ok = bench_doc(1000.0, 600.0, 0.2);
+        let empty = Json::parse("{}").unwrap();
+        assert!(check_bench_regression(&ok, &empty, &GateTolerance::default()).is_err());
+        assert!(check_bench_regression(&empty, &ok, &GateTolerance::default()).is_err());
+        // a baseline entry without total_iterations is a failure, not a panic
+        let partial = Json::parse(
+            r#"{"per_seeder": {
+                "cold": {"total_iterations": 1000, "init_fraction": 0.0},
+                "sir": {"init_fraction": 0.4}
+            }}"#,
+        )
+        .unwrap();
+        let failures =
+            check_bench_regression(&ok, &partial, &GateTolerance::default()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("lacks a numeric")),
+            "{failures:?}"
+        );
+        // current record dropping init_fraction is a coverage loss
+        let no_if = Json::parse(
+            r#"{"per_seeder": {
+                "cold": {"total_iterations": 1000, "init_fraction": 0.0},
+                "sir": {"total_iterations": 600}
+            }}"#,
+        )
+        .unwrap();
+        let failures =
+            check_bench_regression(&no_if, &ok, &GateTolerance::default()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("lacks init_fraction")),
+            "{failures:?}"
+        );
     }
 }

@@ -17,6 +17,9 @@ pub enum Task {
     Svr,
     /// One-class SVM (Schölkopf) for anomaly detection.
     OneClass,
+    /// One-vs-one multiclass classification (LibSVM's scheme) with the
+    /// seeded CV chain per class pair.
+    Multiclass,
 }
 
 impl std::str::FromStr for Task {
@@ -27,8 +30,9 @@ impl std::str::FromStr for Task {
             "csvc" | "c-svc" | "svc" => Ok(Task::CSvc),
             "svr" | "epsilon-svr" | "eps-svr" => Ok(Task::Svr),
             "oneclass" | "one-class" | "ocsvm" => Ok(Task::OneClass),
+            "multiclass" | "multi-class" | "ovo" | "one-vs-one" => Ok(Task::Multiclass),
             other => Err(format!(
-                "unknown task '{other}' (expected csvc|svr|oneclass)"
+                "unknown task '{other}' (expected csvc|svr|oneclass|multiclass)"
             )),
         }
     }
@@ -40,6 +44,7 @@ impl std::fmt::Display for Task {
             Task::CSvc => "csvc",
             Task::Svr => "svr",
             Task::OneClass => "oneclass",
+            Task::Multiclass => "multiclass",
         })
     }
 }
@@ -295,8 +300,11 @@ mod tests {
         assert_eq!(b.parse_or::<Task>("task", Task::CSvc).unwrap(), Task::CSvc);
         assert_eq!("one-class".parse::<Task>().unwrap(), Task::OneClass);
         assert_eq!("epsilon-svr".parse::<Task>().unwrap(), Task::Svr);
+        assert_eq!("multiclass".parse::<Task>().unwrap(), Task::Multiclass);
+        assert_eq!("ovo".parse::<Task>().unwrap(), Task::Multiclass);
         assert!("nope".parse::<Task>().is_err());
         assert_eq!(Task::Svr.to_string(), "svr");
+        assert_eq!(Task::Multiclass.to_string(), "multiclass");
         assert_eq!(Task::default(), Task::CSvc);
     }
 }

@@ -1,0 +1,204 @@
+//! Integration tests for the one-vs-one multiclass engine: parallel /
+//! shared-cache bit-identity, the seeded-vs-cold guarantee per pair,
+//! degenerate class layouts, and the LibSVM integer-label loader.
+
+use alphaseed::kernel::Kernel;
+use alphaseed::multiclass::{cv_ovo_opts, synth_blobs, synth_rings, MultiDataset, OvoOptions};
+use alphaseed::seeding::{seeder_by_name, ColdStart, Sir};
+
+fn opts(threads: usize, share_rows: bool) -> OvoOptions {
+    OvoOptions {
+        threads,
+        share_rows,
+        rng_seed: 42,
+        ..Default::default()
+    }
+}
+
+/// Assert two reports describe the exact same computation (per-pair
+/// iteration counts, votes via the confusion matrix, accuracies).
+fn assert_identical(
+    a: &alphaseed::multiclass::OvoCvReport,
+    b: &alphaseed::multiclass::OvoCvReport,
+) {
+    assert_eq!(a.pairs.len(), b.pairs.len());
+    for (pa, pb) in a.pairs.iter().zip(&b.pairs) {
+        assert_eq!((pa.class_a, pa.class_b), (pb.class_a, pb.class_b));
+        assert_eq!(
+            pa.iterations, pb.iterations,
+            "pair {}v{} iterations differ",
+            pa.class_a, pa.class_b
+        );
+        assert_eq!(pa.rounds_run, pb.rounds_run);
+        assert_eq!(pa.fallbacks, pb.fallbacks);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "pair {}v{} accuracy differs",
+            pa.class_a,
+            pa.class_b
+        );
+    }
+    assert_eq!(a.confusion, b.confusion, "ensemble votes differ");
+    assert_eq!(a.accuracy().to_bits(), b.accuracy().to_bits());
+}
+
+#[test]
+fn parallel_cv_ovo_is_bit_identical_to_sequential() {
+    let ds = synth_blobs(120, 3, 4, 2.0, 7);
+    let sir = Sir;
+    let sequential = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 4, &sir, &opts(1, true));
+    for threads in [2usize, 8] {
+        let parallel = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 4, &sir, &opts(threads, true));
+        assert_identical(&sequential, &parallel);
+    }
+}
+
+#[test]
+fn shared_projected_rows_do_not_change_results() {
+    // the projection substrate is pure compute sharing: identical bits
+    // with private per-pair caches
+    let ds = synth_rings(120, 3, 0.15, 11);
+    let sir = Sir;
+    let shared = cv_ovo_opts(&ds, Kernel::rbf(1.0), 10.0, 3, &sir, &opts(2, true));
+    let private = cv_ovo_opts(&ds, Kernel::rbf(1.0), 10.0, 3, &sir, &opts(2, false));
+    assert_identical(&shared, &private);
+}
+
+#[test]
+fn seeded_matches_cold_accuracy_per_pair_at_tight_eps() {
+    let ds = synth_blobs(120, 4, 3, 2.0, 3);
+    // a tight tolerance pins each pair's fixed point so the discrete
+    // accuracy comparison cannot flip on a boundary-grazing decision
+    let tight = |threads| OvoOptions {
+        eps: 1e-6,
+        threads,
+        rng_seed: 42,
+        ..Default::default()
+    };
+    let cold = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 5, &ColdStart, &tight(0));
+    let sir = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 5, &Sir, &tight(0));
+    for (pc, ps) in cold.pairs.iter().zip(&sir.pairs) {
+        assert_eq!(
+            pc.accuracy, ps.accuracy,
+            "pair {}v{}: seeding changed the pairwise accuracy",
+            pc.class_a, pc.class_b
+        );
+        assert!(
+            ps.iterations <= pc.iterations,
+            "pair {}v{}: sir {} vs cold {}",
+            pc.class_a,
+            pc.class_b,
+            ps.iterations,
+            pc.iterations
+        );
+    }
+    assert_eq!(cold.accuracy(), sir.accuracy(), "ensemble accuracy changed");
+    assert_eq!(cold.confusion, sir.confusion);
+}
+
+#[test]
+fn class_with_fewer_samples_than_folds_is_handled() {
+    // class 2 has only 2 instances but k = 4, so it is absent from two
+    // folds entirely: pair views project to folds of very uneven class
+    // coverage. The two samples land in different folds (round-robin
+    // deal), so every training split still holds the class and all
+    // rounds run — the engine must handle the lopsided folds, not skip.
+    let base = synth_blobs(80, 3, 2, 2.5, 5);
+    let mut labels = base.labels.clone();
+    labels[0] = 2;
+    labels[40] = 2;
+    let ds = MultiDataset::new("tiny-class", base.x.clone(), labels);
+    let sir = Sir;
+    let rep = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 4, &sir, &opts(2, true));
+    assert_eq!(rep.pairs.len(), 3);
+    let total: usize = rep.confusion.iter().flatten().sum();
+    assert_eq!(total, ds.len(), "every instance tallied exactly once");
+    for p in &rep.pairs {
+        assert_eq!(p.rounds_run, 4, "pair {}v{}", p.class_a, p.class_b);
+    }
+    // bit-identical under parallel scheduling even with lopsided folds
+    let seq = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 4, &sir, &opts(1, true));
+    assert_identical(&seq, &rep);
+}
+
+#[test]
+fn single_sample_classes_do_not_panic() {
+    let base = synth_blobs(60, 3, 2, 2.5, 9);
+    let mut labels = base.labels.clone();
+    labels[10] = 2; // singleton class 2
+    labels[11] = 3; // singleton class 3
+    let ds = MultiDataset::new("singletons", base.x.clone(), labels);
+    let sir = Sir;
+    let rep = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 5, &sir, &opts(0, true));
+    assert_eq!(rep.classes, vec![0, 1, 2, 3]);
+    assert_eq!(rep.pairs.len(), 6);
+    let total: usize = rep.confusion.iter().flatten().sum();
+    assert_eq!(total, ds.len());
+    // the singleton-vs-singleton pair can never train: zero rounds
+    let p23 = rep
+        .pairs
+        .iter()
+        .find(|p| p.class_a == 2 && p.class_b == 3)
+        .unwrap();
+    assert_eq!(p23.rounds_run, 0);
+    assert_eq!(p23.iterations, 0);
+}
+
+// ---- LibSVM integer-label loading ------------------------------------------
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("alphaseed-mc-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn libsvm_integer_labels_load() {
+    let path = temp_path("ok.svm");
+    std::fs::write(&path, "0 1:1.0 2:0.5\n2 1:0.25\n1 2:2.0\n0 1:0.5\n").unwrap();
+    let ds = MultiDataset::read_libsvm(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ds.len(), 4);
+    assert_eq!(ds.labels, vec![0, 2, 1, 0]);
+    assert_eq!(ds.classes(), vec![0, 1, 2]);
+}
+
+#[test]
+fn libsvm_non_integer_label_rejected_with_line() {
+    let path = temp_path("frac.svm");
+    std::fs::write(&path, "0 1:1\n1.5 1:2\n").unwrap();
+    let err = MultiDataset::read_libsvm(&path).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("not an integer"), "{err}");
+    assert!(err.contains("line 2"), "{err}");
+}
+
+#[test]
+fn libsvm_negative_label_rejected_with_guidance() {
+    let path = temp_path("neg.svm");
+    std::fs::write(&path, "+1 1:1\n-1 1:2\n").unwrap();
+    let err = MultiDataset::read_libsvm(&path).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("negative"), "{err}");
+    assert!(err.contains("csvc"), "should point at the binary path: {err}");
+    assert!(err.contains("line 2"), "{err}");
+}
+
+#[test]
+fn binary_dataset_converts_and_cross_validates() {
+    let binary = alphaseed::data::synth::generate("heart", Some(80), 13);
+    let ds = MultiDataset::from_dataset(&binary).unwrap();
+    assert_eq!(ds.classes(), vec![0, 1]);
+    let seeder = seeder_by_name("sir").unwrap();
+    let rep = cv_ovo_opts(
+        &ds,
+        Kernel::rbf(0.2),
+        2.0,
+        4,
+        seeder.as_ref(),
+        &opts(0, true),
+    );
+    assert_eq!(rep.pairs.len(), 1);
+    let total: usize = rep.confusion.iter().flatten().sum();
+    assert_eq!(total, ds.len());
+    assert!(rep.accuracy() > 0.5, "accuracy {}", rep.accuracy());
+}
