@@ -1,0 +1,204 @@
+//! Bench: alpha-seeded ε-SVR k-fold CV on the regression workloads.
+//!
+//! Runs the regression dataset × {cold, ato, mir, sir} grid at a
+//! bench-friendly scale (`ALPHASEED_BENCH_SCALE`, default 0.25) with the
+//! active-set carry-over enabled (the production default) and prints the
+//! per-dataset/per-seeder table. Besides the human-readable output, the
+//! run emits a machine-readable `BENCH_svr.json` (override the path with
+//! `ALPHASEED_BENCH_OUT`) in the same `per_seeder` shape as
+//! `BENCH_cv.json`, so the CI bench-regression gate (`alphaseed
+//! benchgate`) can hold the seeded-vs-cold iteration ratio and init
+//! fraction against the committed baseline — SVR workloads were the last
+//! solver path without a regression gate. A `oneclass` side-record
+//! (cold vs transplant, not gated) rides along for the nightly
+//! trajectory.
+
+use alphaseed::cv::{run_kfold_oneclass, run_kfold_svr, CvOptions, CvReport};
+use alphaseed::data::synth;
+use alphaseed::kernel::Kernel;
+use alphaseed::seeding::svr::{svr_seeder_by_name, ALL_SVR_SEEDERS};
+use alphaseed::util::bench::once;
+use alphaseed::util::json::Json;
+use std::collections::BTreeMap;
+
+struct Workload {
+    name: &'static str,
+    n: usize,
+    c: f64,
+    epsilon: f64,
+    gamma: f64,
+}
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let k = 5usize;
+    // Hyper-parameters match the synth registry's per-dataset defaults.
+    let workloads = [
+        Workload {
+            name: "sinc",
+            n: ((400.0 * scale) as usize).max(100),
+            c: 10.0,
+            epsilon: 0.05,
+            gamma: 0.5,
+        },
+        Workload {
+            name: "friedman1",
+            n: ((500.0 * scale) as usize).max(120),
+            c: 10.0,
+            epsilon: 0.1,
+            gamma: 0.8,
+        },
+    ];
+    println!("== table_svr bench (scale {scale}, k = {k}) ==");
+
+    struct Cell {
+        dataset: &'static str,
+        seeder: &'static str,
+        report: CvReport,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let (_, total) = once("table_svr: 2 datasets x 4 seeders, k=5", || {
+        for w in &workloads {
+            let ds = synth::generate_regression(w.name, Some(w.n), 42);
+            for &seeder_name in ALL_SVR_SEEDERS {
+                eprintln!("  … {} / {seeder_name}", w.name);
+                let seeder = svr_seeder_by_name(seeder_name).expect("known SVR seeder");
+                let report = run_kfold_svr(
+                    &ds,
+                    Kernel::rbf(w.gamma),
+                    w.c,
+                    w.epsilon,
+                    k,
+                    seeder.as_ref(),
+                    CvOptions::default(),
+                );
+                cells.push(Cell {
+                    dataset: w.name,
+                    seeder: seeder_name,
+                    report,
+                });
+            }
+        }
+    });
+    for c in &cells {
+        println!(
+            "{:<10} {:<5} iterations {:>9}  init {:>9.4}s  rest {:>9.4}s  mse {:.5}",
+            c.dataset,
+            c.seeder,
+            c.report.total_iterations(),
+            c.report.total_init().as_secs_f64(),
+            c.report.total_rest().as_secs_f64(),
+            c.report.mse()
+        );
+    }
+    println!("table_svr bench total: {total:?}");
+
+    // Shape assertions — the paper's guarantees carried to ε-SVR.
+    for w in &workloads {
+        let get = |s: &str| {
+            cells
+                .iter()
+                .find(|c| c.dataset == w.name && c.seeder == s)
+                .expect("cell")
+        };
+        let cold = get("cold");
+        let sir = get("sir");
+        assert!(
+            sir.report.total_iterations() <= cold.report.total_iterations(),
+            "{}: SIR iterations {} exceed cold {}",
+            w.name,
+            sir.report.total_iterations(),
+            cold.report.total_iterations()
+        );
+        // seeding moves the solver's start, never its fixed point; at the
+        // default tolerance the per-fold MSEs may differ by O(eps) only
+        let rel = (sir.report.mse() - cold.report.mse()).abs() / cold.report.mse().max(1e-12);
+        assert!(
+            rel < 0.05,
+            "{}: CV MSE diverged by {rel}: sir {} vs cold {}",
+            w.name,
+            sir.report.mse(),
+            cold.report.mse()
+        );
+    }
+    println!("shape checks passed: SIR ≤ cold iterations, CV MSE preserved");
+
+    // Machine-readable record: per-seeder sums/means over the dataset
+    // axis, same shape as BENCH_cv.json (the benchgate contract).
+    let mut seeders: BTreeMap<String, Json> = BTreeMap::new();
+    for &seeder in ALL_SVR_SEEDERS {
+        let sel: Vec<_> = cells.iter().filter(|c| c.seeder == seeder).collect();
+        let n = sel.len().max(1) as f64;
+        let mean_init: f64 = sel
+            .iter()
+            .map(|c| c.report.total_init().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_rest: f64 = sel
+            .iter()
+            .map(|c| c.report.total_rest().as_secs_f64())
+            .sum::<f64>()
+            / n;
+        let mean_total = mean_init + mean_rest;
+        let iterations: u64 = sel.iter().map(|c| c.report.total_iterations()).sum();
+        seeders.insert(
+            seeder.to_string(),
+            Json::obj(vec![
+                ("mean_total_secs", Json::Num(mean_total)),
+                ("mean_init_secs", Json::Num(mean_init)),
+                ("mean_rest_secs", Json::Num(mean_rest)),
+                (
+                    "init_fraction",
+                    Json::Num(if mean_total > 0.0 {
+                        mean_init / mean_total
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("total_iterations", Json::Num(iterations as f64)),
+                ("cells", Json::Num(sel.len() as f64)),
+            ]),
+        );
+    }
+
+    // One-class side-record (not consumed by the gate): cold ν-fraction
+    // start vs the SIR-style transplant on the outlier workload.
+    let oc_ds = synth::generate_outliers(Some(((300.0 * scale) as usize).max(120)), 0.1, 42);
+    let oc = |transplant: bool| {
+        run_kfold_oneclass(&oc_ds, Kernel::rbf(1.0), 0.15, k, transplant, CvOptions::default())
+    };
+    let oc_record = |rep: &CvReport| {
+        let init = rep.total_init().as_secs_f64();
+        let rest = rep.total_rest().as_secs_f64();
+        Json::obj(vec![
+            ("total_secs", Json::Num(init + rest)),
+            ("init_secs", Json::Num(init)),
+            ("total_iterations", Json::Num(rep.total_iterations() as f64)),
+            ("accuracy", Json::Num(rep.accuracy())),
+        ])
+    };
+    let (oc_cold, oc_warm) = (oc(false), oc(true));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("table_svr".into())),
+        ("scale", Json::Num(scale)),
+        ("k", Json::Num(k as f64)),
+        ("total_secs", Json::Num(total.as_secs_f64())),
+        ("per_seeder", Json::Obj(seeders)),
+        (
+            "oneclass",
+            Json::obj(vec![
+                ("cold", oc_record(&oc_cold)),
+                ("transplant", oc_record(&oc_warm)),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_svr.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

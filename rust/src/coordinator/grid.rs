@@ -92,6 +92,11 @@ pub struct GridOptions {
     pub share_rows: bool,
     /// Byte budget for each per-γ shared row store.
     pub seed_cache_bytes: usize,
+    /// Thread the cross-fold (and, with `warm_c`, cross-C) active-set
+    /// carry-over into every cell's solver — see
+    /// [`CvOptions::carry_active_set`](crate::cv::CvOptions::carry_active_set).
+    /// Wall-time only; per-cell accuracies are unaffected.
+    pub carry_active_set: bool,
 }
 
 impl Default for GridOptions {
@@ -104,6 +109,7 @@ impl Default for GridOptions {
             warm_c: false,
             share_rows: true,
             seed_cache_bytes: 64 << 20,
+            carry_active_set: true,
         }
     }
 }
@@ -196,6 +202,7 @@ fn independent_cells(
                 rng_seed: opts.rng_seed,
                 threads: intra,
                 shared_seed_cache: shares[gi].clone(),
+                carry_active_set: opts.carry_active_set,
                 ..Default::default()
             },
         );
@@ -240,6 +247,7 @@ fn warm_c_sweep(
                 rng_seed: opts.rng_seed,
                 threads: intra,
                 shared_seed_cache: shares[gi].clone(),
+                carry_active_set: opts.carry_active_set,
                 ..Default::default()
             },
         )
@@ -316,6 +324,7 @@ pub fn grid_search_ovo(
 
     let ovo_opts = OvoOptions {
         rng_seed: opts.rng_seed,
+        carry_active_set: opts.carry_active_set,
         ..Default::default()
     };
     // One unit per (γ, pair): the pair's C chain runs sequentially inside
@@ -496,6 +505,7 @@ pub fn grid_search_svr(
             CvOptions {
                 rng_seed: opts.rng_seed,
                 shared_seed_cache: shares[gi].clone(),
+                carry_active_set: opts.carry_active_set,
                 ..Default::default()
             },
         );

@@ -63,6 +63,14 @@ pub struct CvOptions<'a> {
     /// a compute-sharing device: the adopted rows are the exact bits the
     /// local cache would have produced.
     pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
+    /// Cross-fold **active-set carry-over**: besides the α seed, hand the
+    /// solver the previous round's bounded partition (mapped through the
+    /// seeder's [`seed_active_set`](crate::seeding::Seeder::seed_active_set)
+    /// transfer) as its initial shrink state. The solver validates every
+    /// proposed position against the fresh gradient before trusting it,
+    /// so this only moves wall time, never the converged model. Inert
+    /// when `shrinking` is off or the seeder declines the hook (cold).
+    pub carry_active_set: bool,
 }
 
 impl Default for CvOptions<'_> {
@@ -77,6 +85,7 @@ impl Default for CvOptions<'_> {
             backend: None,
             threads: 0,
             shared_seed_cache: None,
+            carry_active_set: true,
         }
     }
 }
@@ -109,16 +118,17 @@ pub fn run_kfold(
     let mut prev_f: Vec<f64> = Vec::new();
     let mut prev_b = 0.0f64;
     let mut prev_train: Vec<usize> = Vec::new();
+    let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
 
     for h in 0..rounds_to_run {
         let train_idx = plan.train_indices(h);
         let train = full.select(&train_idx);
         let test = full.select(plan.test_indices(h));
 
-        // ---- init phase: produce the seed α ------------------------------
+        // ---- init phase: produce the seed α (and the carried set) --------
         let t_init = Instant::now();
-        let (alpha0, fell_back) = if h == 0 {
-            (vec![0.0; train_idx.len()], false)
+        let (alpha0, fell_back, carried) = if h == 0 {
+            (vec![0.0; train_idx.len()], false, None)
         } else {
             let trans = plan.transition(h - 1);
             let ctx = SeedContext {
@@ -141,7 +151,13 @@ pub fn run_kfold(
                 seeder.name(),
                 check_feasible(&seed.alpha, &train.y, c)
             );
-            (seed.alpha, seed.fell_back)
+            // Active-set carry-over rides the same transition (init cost).
+            let carried = if opts.carry_active_set && opts.shrinking {
+                seeder.seed_active_set(&ctx, &prev_partition)
+            } else {
+                None
+            };
+            (seed.alpha, seed.fell_back, carried)
         };
 
         // Warm-start gradient (part of init time — it only exists because
@@ -195,7 +211,7 @@ pub fn run_kfold(
             ..Default::default()
         };
         let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
-        let result = solver.solve_from(alpha0, initial_g);
+        let result = solver.solve_seeded(alpha0, initial_g, carried.as_deref());
 
         let model = Model::from_result(&train, kernel, &result);
         let correct = match &mut opts.backend {
@@ -240,6 +256,7 @@ pub fn run_kfold(
 
         // Carry state to round h+1.
         prev_f = result.f_indicators(&train.y);
+        prev_partition = result.partition;
         prev_alpha = result.alpha;
         prev_b = result.b;
         prev_train = train_idx;
@@ -289,8 +306,11 @@ fn make_seed_cache(
 /// inside the ε-tube.
 ///
 /// `opts.backend` and `opts.threads` are ignored (the general solver's
-/// gradient path is sequential); `opts.shrinking` is ignored (the general
-/// path does not shrink).
+/// gradient path is sequential); `opts.shrinking` and
+/// `opts.carry_active_set` are honored exactly as in the C-SVC chain —
+/// the general path shrinks through the same shared core, and seeded
+/// rounds carry the previous round's bounded (α, α*) pairs as the initial
+/// shrink state.
 pub fn run_kfold_svr(
     full: &Dataset,
     kernel: Kernel,
@@ -319,6 +339,7 @@ pub fn run_kfold_svr(
     let mut prev_err: Vec<f64> = Vec::new();
     let mut prev_b = 0.0f64;
     let mut prev_train: Vec<usize> = Vec::new();
+    let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
 
     for h in 0..rounds_to_run {
         let train_idx = plan.train_indices(h);
@@ -327,8 +348,8 @@ pub fn run_kfold_svr(
 
         // ---- init phase: produce the seed δ and expand it ---------------
         let t_init = Instant::now();
-        let (delta0, fell_back) = if h == 0 {
-            (vec![0.0; train_idx.len()], false)
+        let (delta0, fell_back, carried) = if h == 0 {
+            (vec![0.0; train_idx.len()], false, None)
         } else {
             let trans = plan.transition(h - 1);
             let ctx = SvrSeedContext {
@@ -352,7 +373,12 @@ pub fn run_kfold_svr(
                 seeder.name(),
                 check_feasible_delta(&seed.delta, c)
             );
-            (seed.delta, seed.fell_back)
+            let carried = if opts.carry_active_set && opts.shrinking {
+                seeder.seed_active_set(&ctx, &prev_partition)
+            } else {
+                None
+            };
+            (seed.delta, seed.fell_back, carried)
         };
         let beta0 = expand_svr_pairs(&delta0);
         let init = t_init.elapsed();
@@ -363,12 +389,13 @@ pub fn run_kfold_svr(
         let params = SmoParams {
             c,
             eps: opts.eps,
+            shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
             ..Default::default()
         };
         let mut solver =
             GeneralSolver::new(KernelEval::new(train.clone(), kernel), problem.spec(&train), params);
-        let result = solver.solve_from(beta0, None);
+        let result = solver.solve_seeded(beta0, None, carried.as_deref());
 
         let model = SvrModel::from_result(&train, kernel, &result);
         let pred = model.predict(&test);
@@ -405,6 +432,7 @@ pub fn run_kfold_svr(
         // Carry state to round h+1.
         prev_err = svr_errors(&result, epsilon);
         prev_delta = collapse_svr_pairs(&result.alpha);
+        prev_partition = result.partition;
         prev_b = result.b;
         prev_train = train_idx;
     }
@@ -427,8 +455,11 @@ pub fn run_kfold_svr(
 /// ν-fraction point. `test_correct` counts agreement of the sign of the
 /// decision function with the ground-truth labels.
 ///
-/// `opts.backend`, `opts.threads` and `opts.shrinking` are ignored, as in
-/// [`run_kfold_svr`].
+/// `opts.backend` and `opts.threads` are ignored, as in
+/// [`run_kfold_svr`]; `opts.shrinking` is honored, and with
+/// `opts.carry_active_set` transplanted rounds carry the previous round's
+/// bounded positions (through the same 𝓢-preserving index transfer the
+/// transplant uses) as the solver's initial shrink state.
 pub fn run_kfold_oneclass(
     full: &Dataset,
     kernel: Kernel,
@@ -450,6 +481,7 @@ pub fn run_kfold_oneclass(
 
     let mut prev_alpha: Vec<f64> = Vec::new();
     let mut prev_train: Vec<usize> = Vec::new();
+    let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
 
     for h in 0..rounds_to_run {
         let train_idx = plan.train_indices(h);
@@ -458,8 +490,8 @@ pub fn run_kfold_oneclass(
 
         // ---- init phase --------------------------------------------------
         let t_init = Instant::now();
-        let (alpha0, fell_back) = if h == 0 || !transplant {
-            (problem.initial_alpha(&train), false)
+        let (alpha0, fell_back, carried) = if h == 0 || !transplant {
+            (problem.initial_alpha(&train), false, None)
         } else {
             let trans = plan.transition(h - 1);
             let ctx = OneClassSeedContext {
@@ -478,7 +510,16 @@ pub fn run_kfold_oneclass(
                 "one-class transplant produced infeasible seed at round {h}: {:?}",
                 check_feasible_oneclass(&seed.alpha, nu)
             );
-            (seed.alpha, seed.fell_back)
+            // The transplant copies α_𝓢 unchanged, so the carried bounded
+            // positions use the same 𝓢-preserving transfer as the α copy.
+            let carried = (opts.carry_active_set && opts.shrinking).then(|| {
+                crate::seeding::carry_bounded_positions(
+                    &prev_train,
+                    &prev_partition,
+                    &train_idx,
+                )
+            });
+            (seed.alpha, seed.fell_back, carried)
         };
         let init = t_init.elapsed();
 
@@ -486,12 +527,13 @@ pub fn run_kfold_oneclass(
         let t_rest = Instant::now();
         let params = SmoParams {
             eps: opts.eps,
+            shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
             ..Default::default()
         };
         let mut solver =
             GeneralSolver::new(KernelEval::new(train.clone(), kernel), problem.spec(&train), params);
-        let result = solver.solve_from(alpha0, None);
+        let result = solver.solve_seeded(alpha0, None, carried.as_deref());
 
         let model = OneClassModel::from_result(&train, kernel, &result);
         let pred = model.predict(&test);
@@ -527,6 +569,7 @@ pub fn run_kfold_oneclass(
             n_sv: result.n_sv,
         });
 
+        prev_partition = result.partition;
         prev_alpha = result.alpha;
         prev_train = train_idx;
     }

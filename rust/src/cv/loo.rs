@@ -76,6 +76,7 @@ pub fn run_loo(
                 backend: None,
                 threads: opts.threads,
                 shared_seed_cache: None,
+                carry_active_set: true,
             };
             let mut rep = run_kfold(full, kernel, c, full.len(), seeder, cv_opts);
             rep.seeder = seeder.name().to_string();

@@ -45,6 +45,13 @@ pub struct WarmCOptions {
     /// the sweep's seeding cache; see
     /// [`CvOptions::shared_seed_cache`](super::CvOptions::shared_seed_cache).
     pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
+    /// Active-set carry-over along **both** reuse dimensions (see
+    /// [`CvOptions::carry_active_set`](super::CvOptions::carry_active_set)):
+    /// a C-chained fold carries the bounded partition of the same fold at
+    /// the previous C (identity index map — the training set is the
+    /// same), a fold-chained round carries it through the seeder's
+    /// transfer. Validated by the solver; inert without `shrinking`.
+    pub carry_active_set: bool,
 }
 
 impl Default for WarmCOptions {
@@ -58,6 +65,7 @@ impl Default for WarmCOptions {
             fold_chain: true,
             threads: 0,
             shared_seed_cache: None,
+            carry_active_set: true,
         }
     }
 }
@@ -123,7 +131,9 @@ pub fn run_kfold_warm_c(
 
     // per-fold carried state from the previous C value
     let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
+    let mut prev_c_partition: Vec<Option<Vec<crate::smo::VarBound>>> = vec![None; k];
     let mut reports = Vec::with_capacity(cs.len());
+    let carry = opts.carry_active_set && opts.shrinking;
 
     for (ci, &c) in cs.iter().enumerate() {
         let mut rounds = Vec::with_capacity(k);
@@ -132,6 +142,7 @@ pub fn run_kfold_warm_c(
         let mut prev_f: Vec<f64> = Vec::new();
         let mut prev_b = 0.0f64;
         let mut prev_train: Vec<usize> = Vec::new();
+        let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
 
         for h in 0..k {
             let train_idx = plan.train_indices(h);
@@ -141,9 +152,14 @@ pub fn run_kfold_warm_c(
             let t_init = Instant::now();
             // Priority: C-chain seed for this fold; else fold-chain seed;
             // else cold.
-            let (alpha0, fell_back) = if let Some(prev) = prev_c_alpha[h].take() {
+            let (alpha0, fell_back, carried) = if let Some(prev) = prev_c_alpha[h].take() {
                 let a = rescale_alpha(&prev, &train.y, cs[ci - 1], c);
-                (a, false)
+                // Same fold, same training set: the bounded partition of
+                // the previous C maps through the identity.
+                let carried = prev_c_partition[h]
+                    .take()
+                    .map(|part| crate::seeding::bounded_positions(&part));
+                (a, false, carried)
             } else if opts.fold_chain && h > 0 {
                 let trans = plan.transition(h - 1);
                 let ctx = SeedContext {
@@ -160,9 +176,14 @@ pub fn run_kfold_warm_c(
                     rng_seed: opts.rng_seed ^ (h as u64) ^ ((ci as u64) << 32),
                 };
                 let seed = seeder.seed(&ctx, &mut seed_cache);
-                (seed.alpha, seed.fell_back)
+                let carried = if carry {
+                    seeder.seed_active_set(&ctx, &prev_partition)
+                } else {
+                    None
+                };
+                (seed.alpha, seed.fell_back, carried)
             } else {
-                (vec![0.0; train_idx.len()], false)
+                (vec![0.0; train_idx.len()], false, None)
             };
             let init = t_init.elapsed();
 
@@ -176,7 +197,7 @@ pub fn run_kfold_warm_c(
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
-            let result = solver.solve_from(alpha0, None);
+            let result = solver.solve_seeded(alpha0, None, carried.as_deref());
             let model = Model::from_result(&train, kernel, &result);
             let pred = model.predict(&test);
             let correct = pred
@@ -202,9 +223,13 @@ pub fn run_kfold_warm_c(
             // carry to the next C for this fold
             if ci + 1 < cs.len() {
                 prev_c_alpha[h] = Some(result.alpha.clone());
+                if carry {
+                    prev_c_partition[h] = Some(result.partition.clone());
+                }
             }
             // carry to the next fold within this C
             prev_f = result.f_indicators(&train.y);
+            prev_partition = result.partition;
             prev_alpha = result.alpha;
             prev_b = result.b;
             prev_train = train_idx;

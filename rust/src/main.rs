@@ -18,7 +18,7 @@ use alphaseed::metrics::Table;
 use alphaseed::multiclass::MultiDataset;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
 use alphaseed::smo::{Model, SmoParams, Solver};
-use alphaseed::util::bench::{check_bench_regression, GateTolerance};
+use alphaseed::util::bench::{check_bench_regression, render_gate_report, GateTolerance};
 use alphaseed::util::cli::{Args, Task};
 use alphaseed::util::json::Json;
 use alphaseed::util::timing::fmt_secs;
@@ -95,6 +95,7 @@ fn print_help() {
            --baseline <file>   committed BENCH_*.baseline.json\n\
            --iter-tol <f>      relative iteration-ratio tolerance (default 0.05)\n\
            --init-frac-tol <f> absolute init-fraction tolerance   (default 0.15)\n\
+           --report <file>     also write a markdown ratio summary (CI artifact)\n\
          experiment options:\n\
            --scale <f>         scale dataset sizes (default 1.0)\n\
            --out <dir>         results directory (default results/)\n\
@@ -853,10 +854,13 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
 
 /// Gate a freshly emitted `BENCH_*.json` against a committed baseline —
 /// the CI regression check: `alphaseed benchgate --current BENCH_cv.json
-/// --baseline BENCH_cv.baseline.json`.
+/// --baseline BENCH_cv.baseline.json [--report BENCHGATE.md]`. With
+/// `--report` a markdown summary of the seeded-vs-cold ratios is written
+/// on pass *and* fail (CI uploads it as a PR artifact either way).
 fn cmd_benchgate(args: &Args) -> Result<()> {
     let current_path = args.req_str("current")?;
     let baseline_path = args.req_str("baseline")?;
+    let report_path = args.opt_str("report");
     let tol = GateTolerance {
         iter_ratio: args.parse_or("iter-tol", GateTolerance::default().iter_ratio)?,
         init_fraction: args.parse_or("init-frac-tol", GateTolerance::default().init_fraction)?,
@@ -869,6 +873,12 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     };
     let current = read(&current_path)?;
     let baseline = read(&baseline_path)?;
+    if let Some(report_path) = &report_path {
+        let md = render_gate_report(&current_path, &baseline_path, &current, &baseline, &tol);
+        std::fs::write(report_path, md)
+            .with_context(|| format!("writing gate report {report_path}"))?;
+        println!("wrote gate report to {report_path}");
+    }
     match check_bench_regression(&current, &baseline, &tol) {
         Ok(passed) => {
             for p in &passed {

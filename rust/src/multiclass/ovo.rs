@@ -126,6 +126,12 @@ pub struct OvoOptions {
     /// pair through an index-projected view. Pure compute sharing — the
     /// projected rows are bit-identical to pair-local evaluation.
     pub share_rows: bool,
+    /// Active-set carry-over inside each pair chain (see
+    /// [`CvOptions::carry_active_set`](crate::cv::CvOptions::carry_active_set)):
+    /// fold-chained rounds carry through the seeder's transfer, C-chained
+    /// rounds through the identity. Validated by the solver; inert
+    /// without `shrinking`.
+    pub carry_active_set: bool,
 }
 
 impl Default for OvoOptions {
@@ -139,6 +145,7 @@ impl Default for OvoOptions {
             rng_seed: 42,
             threads: 0,
             share_rows: true,
+            carry_active_set: true,
         }
     }
 }
@@ -316,6 +323,8 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
 
     // per-fold carried state from the previous C value
     let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
+    let mut prev_c_partition: Vec<Option<Vec<crate::smo::VarBound>>> = vec![None; k];
+    let carry = spec.opts.carry_active_set && spec.opts.shrinking;
     let mut runs = Vec::with_capacity(spec.cs.len());
 
     for (ci, &c) in spec.cs.iter().enumerate() {
@@ -331,6 +340,7 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
         let mut prev_f: Vec<f64> = Vec::new();
         let mut prev_b = 0.0f64;
         let mut prev_train: Vec<usize> = Vec::new();
+        let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
         let mut prev_solved: Option<usize> = None;
 
         for h in 0..k {
@@ -338,23 +348,29 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
             let test_idx = plan.test_indices(h);
             if train_idx.is_empty() || test_idx.is_empty() {
                 prev_c_alpha[h] = None;
+                prev_c_partition[h] = None;
                 continue;
             }
             let train = pair_ds.select(&train_idx);
             if train.positives() == 0 || train.positives() == train.len() {
                 // a pair class is absent from this training split
                 prev_c_alpha[h] = None;
+                prev_c_partition[h] = None;
                 continue;
             }
 
             // ---- init phase: produce the seed α ---------------------------
             let t_init = Instant::now();
             let mut seeded = false;
-            let (alpha0, fell_back) = if let Some(prev) =
+            let (alpha0, fell_back, carried) = if let Some(prev) =
                 spec.chain_c.then(|| prev_c_alpha[h].take()).flatten()
             {
                 seeded = true;
-                (rescale_alpha(&prev, &train.y, spec.cs[ci - 1], c), false)
+                // Same fold at the previous C: identity partition map.
+                let carried = prev_c_partition[h]
+                    .take()
+                    .map(|part| crate::seeding::bounded_positions(&part));
+                (rescale_alpha(&prev, &train.y, spec.cs[ci - 1], c), false, carried)
             } else if h > 0 && prev_solved == Some(h - 1) {
                 let trans = plan.transition(h - 1);
                 let ctx = SeedContext {
@@ -381,9 +397,14 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
                     check_feasible(&seed.alpha, &train.y, c)
                 );
                 seeded = true;
-                (seed.alpha, seed.fell_back)
+                let carried = if carry {
+                    spec.seeder.seed_active_set(&ctx, &prev_partition)
+                } else {
+                    None
+                };
+                (seed.alpha, seed.fell_back, carried)
             } else {
-                (vec![0.0; train_idx.len()], false)
+                (vec![0.0; train_idx.len()], false, None)
             };
             let init = t_init.elapsed();
 
@@ -398,7 +419,7 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), spec.kernel), params);
-            let result = solver.solve_from(alpha0, None);
+            let result = solver.solve_seeded(alpha0, None, carried.as_deref());
             iterations += result.iterations;
             let model = Model::from_result(&train, spec.kernel, &result);
             let test = pair_ds.select(test_idx);
@@ -432,9 +453,13 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
             // carry to the next C for this fold (warm chain only)
             if spec.chain_c && ci + 1 < spec.cs.len() {
                 prev_c_alpha[h] = Some(result.alpha.clone());
+                if carry {
+                    prev_c_partition[h] = Some(result.partition.clone());
+                }
             }
             // carry to the next fold within this C
             prev_f = result.f_indicators(&train.y);
+            prev_partition = result.partition;
             prev_alpha = result.alpha;
             prev_b = result.b;
             prev_train = train_idx;

@@ -334,6 +334,23 @@ impl Seeder for Ato {
 
         SeedResult { alpha, fell_back }
     }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        // ATO's ramp may move shared α through the margin set, so the
+        // carried guess is coarser than SIR/MIR's — but the solver only
+        // accepts positions that are bounded *at the seeded α* and
+        // non-violating under the fresh gradient, so over-proposing here
+        // is harmless.
+        Some(super::carry_bounded_positions(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
+    }
 }
 
 #[cfg(test)]

@@ -130,6 +130,21 @@ impl Seeder for Mir {
             fell_back: false,
         }
     }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        // MIR keeps α_𝓢 fixed by construction, so a shared bounded
+        // instance is the safest possible carry: its indicator is exactly
+        // where round h left it, up to the estimated 𝒯 contribution.
+        Some(super::carry_bounded_positions(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
+    }
 }
 
 #[cfg(test)]

@@ -109,6 +109,63 @@ pub trait Seeder: Send + Sync {
     /// kernel rows over the **full** dataset (global indices), shared
     /// across the whole cross-validation run.
     fn seed(&self, ctx: &SeedContext, cache: &mut KernelCache) -> SeedResult;
+
+    /// Optional **cross-fold active-set carry-over**: map round h's
+    /// terminal bound partition (`prev_partition`, aligned with
+    /// `ctx.prev_train` — see [`SmoResult::partition`](crate::smo::SmoResult))
+    /// onto round h+1's layout and return the positions the solver should
+    /// treat as *initially shrunk*. The default (`None`) starts from the
+    /// full active set; SIR/MIR/ATO override it with
+    /// [`carry_bounded_positions`] — the same 𝓢-preserving index transfer
+    /// they use for the α values, resting on the same paper argument
+    /// (round h's SVM predicts round h+1's support vectors, hence also
+    /// its *non*-support vectors). The guess is only a hint: the solver
+    /// re-validates every proposed position against the current gradient
+    /// ([`ActiveSet::seeded`](crate::smo::ActiveSet::seeded)), so a wrong
+    /// carry can never change the converged model.
+    fn seed_active_set(
+        &self,
+        ctx: &SeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        let _ = (ctx, prev_partition);
+        None
+    }
+}
+
+/// The shared carry-over index transfer: next-round positions of the
+/// instances that stayed in the training set (𝓢) and sat at a box bound
+/// (`Lower`/`Upper`) in round h's solution. Entering 𝒯 instances are
+/// never proposed (their status is unknown before solving). Positions
+/// come back ascending.
+pub fn carry_bounded_positions(
+    prev_train: &[usize],
+    prev_partition: &[crate::smo::VarBound],
+    next_train: &[usize],
+) -> Vec<usize> {
+    debug_assert_eq!(prev_train.len(), prev_partition.len());
+    let mut out = Vec::new();
+    for (p, &gi) in prev_train.iter().enumerate() {
+        if prev_partition[p] != crate::smo::VarBound::Free {
+            if let Some(np) = pos_of(next_train, gi) {
+                out.push(np);
+            }
+        }
+    }
+    out
+}
+
+/// Positions of the bounded (`Lower`/`Upper`) variables of a partition —
+/// the **identity-map** carry used by the warm-C chains, where the
+/// training set (and hence the variable layout) is unchanged between
+/// consecutive solves, so no fold-transition transfer is needed.
+pub fn bounded_positions(partition: &[crate::smo::VarBound]) -> Vec<usize> {
+    partition
+        .iter()
+        .enumerate()
+        .filter(|(_, &vb)| vb != crate::smo::VarBound::Free)
+        .map(|(p, _)| p)
+        .collect()
 }
 
 /// Look up a seeder by canonical name.

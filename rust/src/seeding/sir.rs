@@ -128,6 +128,21 @@ impl Seeder for Sir {
 
         SeedResult { alpha, fell_back }
     }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        // Same 𝓢-preserving transfer as the α copy above: shared bounded
+        // instances are proposed as initially shrunk (Eq. 21's Δf ≈ 0
+        // argument — the transplant barely moves their indicators).
+        Some(super::carry_bounded_positions(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
+    }
 }
 
 #[cfg(test)]

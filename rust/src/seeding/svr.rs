@@ -83,6 +83,56 @@ pub trait SvrSeeder: Send + Sync {
     /// rows over the **full** dataset (global indices), shared across the
     /// whole cross-validation run.
     fn seed(&self, ctx: &SvrSeedContext, cache: &mut KernelCache) -> SvrSeedResult;
+
+    /// Optional cross-fold active-set carry-over for the **doubled**
+    /// (α, α*) variables: map round h's terminal bound partition
+    /// (`prev_partition`, length `2·|prev_train|`, see
+    /// [`SmoResult::partition`](crate::smo::SmoResult)) onto round h+1's
+    /// doubled layout and return the β positions to propose as initially
+    /// shrunk. Default `None` (full active set); the seeded rules
+    /// override it with the δ-pair-aware [`carry_bounded_pairs`]. As in
+    /// the classification chain the solver validates every proposed
+    /// position against the fresh gradient, so the guess can only cost
+    /// time, never correctness.
+    fn seed_active_set(
+        &self,
+        ctx: &SvrSeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        let _ = (ctx, prev_partition);
+        None
+    }
+}
+
+/// The δ-pair-aware carry-over transfer: a shared instance is proposed as
+/// initially shrunk **only when both of its doubled components were
+/// bounded** in round h — |δ| = C (α side at C, α* side at 0, or the
+/// mirror) or δ = 0 off the tube (both sides at 0). A free δ leaves one
+/// component inside the box, and LibSVM's ε-SVR solver keeps such pairs
+/// active as a unit; proposing half a pair would let the shrink criterion
+/// split it. Returned positions are ascending in the doubled layout
+/// (α side `np`, α* side `n_next + np`).
+pub fn carry_bounded_pairs(
+    prev_train: &[usize],
+    prev_partition: &[crate::smo::VarBound],
+    next_train: &[usize],
+) -> Vec<usize> {
+    use crate::smo::VarBound::Free;
+    let n_prev = prev_train.len();
+    debug_assert_eq!(prev_partition.len(), 2 * n_prev);
+    let n_next = next_train.len();
+    let mut shared_np = Vec::new();
+    for (p, &gi) in prev_train.iter().enumerate() {
+        if prev_partition[p] != Free && prev_partition[n_prev + p] != Free {
+            if let Some(np) = pos_of(next_train, gi) {
+                shared_np.push(np);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(2 * shared_np.len());
+    out.extend(shared_np.iter().copied());
+    out.extend(shared_np.iter().map(|&np| n_next + np));
+    out
 }
 
 /// Cold start: δ = 0 (LibSVM semantics for ε-SVR).
@@ -130,6 +180,18 @@ impl SvrSeeder for SvrSir {
             |np, w| delta[np] = w,
         );
         finish_with_added_balance(ctx, delta)
+    }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SvrSeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        Some(carry_bounded_pairs(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
     }
 }
 
@@ -234,6 +296,18 @@ impl SvrSeeder for SvrMir {
             fell_back: false,
         }
     }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SvrSeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        Some(carry_bounded_pairs(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
+    }
 }
 
 /// Adjusting Alpha Towards Optimum in δ-space: drain each removed δ_r to
@@ -312,6 +386,20 @@ impl SvrSeeder for SvrAto {
         }
 
         finish_with_whole_balance(ctx, delta)
+    }
+
+    fn seed_active_set(
+        &self,
+        ctx: &SvrSeedContext,
+        prev_partition: &[crate::smo::VarBound],
+    ) -> Option<Vec<usize>> {
+        // The drain may have moved shared δ; over-proposing is harmless —
+        // the solver only shrinks positions bounded at the seeded β.
+        Some(carry_bounded_pairs(
+            ctx.prev_train,
+            prev_partition,
+            ctx.next_train,
+        ))
     }
 }
 

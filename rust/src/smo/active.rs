@@ -1,0 +1,391 @@
+//! The shared active-set (shrinking) core of the SMO solver family.
+//!
+//! LibSVM's shrinking heuristic removes variables that sit at a box bound
+//! and satisfy their KKT condition with margin from the working set, so
+//! the per-iteration working-set selection and gradient update scan only
+//! the *active* variables. The three QP formulations this crate solves —
+//! binary C-SVC ([`Solver`](super::Solver)), and ε-SVR / one-class through
+//! the [`GeneralSolver`](super::GeneralSolver) — share the exact same
+//! criterion once the C-SVC label yᵢ is read as the general per-variable
+//! constraint sign sᵢ, so the machinery lives here once:
+//!
+//! - [`ActiveSet`] — the membership list plus the shrink cadence
+//!   (one pass every `min(n, 1000)` iterations, LibSVM's schedule);
+//! - the `be_shrunk` criterion (private) — LibSVM's rule verbatim with
+//!   s ↔ y. Extracting it also fixed a latent sign error in the old
+//!   binary-only implementation: for s = −1 variables the old code
+//!   compared the raw gradient instead of its negation, which could
+//!   shrink *violating* variables (correctness was rescued by the final
+//!   unshrink + re-check, but every such mistake cost an extra
+//!   reconstruct-and-resume cycle);
+//! - [`reconstruct_inactive`] (crate-private) — recompute the gradient of
+//!   every shrunk variable from scratch on unshrink;
+//! - [`ActiveSet::seeded`] — the **cross-fold carry-over** entry point:
+//!   a caller-proposed initially-inactive set (e.g. the previous fold's
+//!   bounded variables mapped through a [`Seeder`](crate::seeding::Seeder))
+//!   is validated variable-by-variable against the *current* gradient
+//!   before any of it is trusted, so a wrong guess can only cost time,
+//!   never correctness.
+//!
+//! Correctness contract (all three formulations): whenever the active set
+//! looks ε-optimal the solver reconstructs the gradient of every shrunk
+//! variable, restores the full set and re-checks; it only reports
+//! convergence when the **full** problem satisfies the ε-KKT condition.
+//! The converged model is therefore the same ε-KKT point the unshrunken
+//! path reaches (to solver tolerance — the two paths accumulate floating
+//! point in different orders, so bit-equality is only guaranteed when a
+//! proposed seed is rejected outright; `tests/shrink_identity.rs` pins
+//! both statements).
+
+use std::sync::Arc;
+
+/// Position of one dual variable relative to its box `[0, C]` — the
+/// terminal partition [`SmoResult`](super::SmoResult) exports so the next
+/// cross-validation round can carry the solver's active-set knowledge
+/// forward (the paper's SV-identification argument, applied to the
+/// solver's internal state instead of the α values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarBound {
+    /// At the lower bound: α = 0 (not a support vector).
+    Lower,
+    /// Strictly inside the box: 0 < α < C (a free / margin SV).
+    Free,
+    /// At the upper bound: α = C (a bounded SV).
+    Upper,
+}
+
+/// Classify every variable of a solved α against the box `[0, c]`.
+/// The SMO two-variable update writes exact `0.0` / `c` at the clips, so
+/// the comparison is exact, not a tolerance test.
+pub fn partition_of(alpha: &[f64], c: f64) -> Vec<VarBound> {
+    alpha
+        .iter()
+        .map(|&a| {
+            if a >= c {
+                VarBound::Upper
+            } else if a <= 0.0 {
+                VarBound::Lower
+            } else {
+                VarBound::Free
+            }
+        })
+        .collect()
+}
+
+/// LibSVM `be_shrunk` with the general constraint sign s in place of the
+/// C-SVC label y: a *bounded* variable is shrinkable when it is strictly
+/// non-violating against the current maximal-violation brackets
+/// (`gmax1` = max over I_up of −s·G, `gmax2` = max over I_low of s·G).
+#[inline]
+fn be_shrunk(s: f64, a: f64, g: f64, c: f64, gmax1: f64, gmax2: f64) -> bool {
+    if a >= c {
+        // upper bound
+        if s > 0.0 {
+            -g > gmax1
+        } else {
+            -g > gmax2
+        }
+    } else if a <= 0.0 {
+        // lower bound
+        if s > 0.0 {
+            g > gmax2
+        } else {
+            g > gmax1
+        }
+    } else {
+        false
+    }
+}
+
+/// The maximal-violation brackets over `idx`:
+/// `gmax1 = max_{t ∈ I_up} −s_t·G_t`, `gmax2 = max_{t ∈ I_low} s_t·G_t`.
+/// Their sum is the current KKT violation (LibSVM's stopping quantity).
+fn violation_bounds(
+    idx: impl Iterator<Item = usize>,
+    signs: &[f64],
+    alpha: &[f64],
+    g: &[f64],
+    c: f64,
+) -> (f64, f64) {
+    let (mut gmax1, mut gmax2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+    for t in idx {
+        let (s, a) = (signs[t], alpha[t]);
+        if (s > 0.0 && a < c) || (s < 0.0 && a > 0.0) {
+            gmax1 = gmax1.max(-s * g[t]);
+        }
+        if (s > 0.0 && a > 0.0) || (s < 0.0 && a < c) {
+            gmax2 = gmax2.max(s * g[t]);
+        }
+    }
+    (gmax1, gmax2)
+}
+
+/// The LibSVM shrinking state machine shared by the binary and general
+/// solvers: the active index list, the shrink cadence counter, and the
+/// has-shrunk flag that gates the final unshrink-and-re-check.
+#[derive(Debug, Clone)]
+pub struct ActiveSet {
+    idx: Vec<usize>,
+    n: usize,
+    shrunk: bool,
+    interval: u64,
+    counter: u64,
+    passes: u64,
+}
+
+impl ActiveSet {
+    /// Start with every variable active (the cold active state).
+    pub fn full(n: usize) -> ActiveSet {
+        let interval = n.clamp(1, 1000) as u64;
+        ActiveSet {
+            idx: (0..n).collect(),
+            n,
+            shrunk: false,
+            interval,
+            counter: interval,
+            passes: 0,
+        }
+    }
+
+    /// Start from a carried-over guess: `inactive_guess` holds variable
+    /// indices the caller believes are bounded and non-violating (e.g. the
+    /// previous CV round's bounded partition mapped onto this round's
+    /// layout). Every proposed index is **validated against the current
+    /// gradient** — only variables that are bounded at `alpha` *and* pass
+    /// the LibSVM shrink criterion right now are actually removed, so a
+    /// wrong guess degrades to the full active set instead of corrupting
+    /// the solve. Near the optimum (violation ≤ 10·eps, LibSVM's
+    /// unshrink threshold) the guess is ignored entirely.
+    #[allow(clippy::too_many_arguments)]
+    pub fn seeded(
+        n: usize,
+        signs: &[f64],
+        alpha: &[f64],
+        g: &[f64],
+        c: f64,
+        eps: f64,
+        inactive_guess: &[usize],
+    ) -> ActiveSet {
+        let mut set = ActiveSet::full(n);
+        let (gmax1, gmax2) = violation_bounds(0..n, signs, alpha, g, c);
+        if !(gmax1 + gmax2).is_finite() || gmax1 + gmax2 <= eps * 10.0 {
+            return set;
+        }
+        let mut drop = vec![false; n];
+        for &t in inactive_guess {
+            if t < n && be_shrunk(signs[t], alpha[t], g[t], c, gmax1, gmax2) {
+                drop[t] = true;
+            }
+        }
+        set.idx.retain(|&t| !drop[t]);
+        if set.idx.len() < n {
+            set.shrunk = true;
+            set.passes = 1;
+        }
+        set
+    }
+
+    /// The active variable indices, ascending.
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Whether every variable is currently active.
+    pub fn is_full(&self) -> bool {
+        self.idx.len() == self.n
+    }
+
+    /// Number of shrink passes run so far (periodic scans plus a seeded
+    /// initialisation that removed variables) — a cheap observability
+    /// counter for tests and reports.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Advance the shrink cadence by one iteration; `true` when a shrink
+    /// pass is due (every `min(n, 1000)` iterations, LibSVM's schedule).
+    pub fn tick(&mut self) -> bool {
+        self.counter -= 1;
+        if self.counter == 0 {
+            self.counter = self.interval;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One shrink pass: drop every bounded, strictly non-violating active
+    /// variable. Near the optimum (violation ≤ 10·eps) the pass is a
+    /// no-op, matching LibSVM's guard against shrinking variables the
+    /// final convergence check is about to need.
+    pub fn shrink(&mut self, signs: &[f64], alpha: &[f64], g: &[f64], c: f64, eps: f64) {
+        self.passes += 1;
+        let (gmax1, gmax2) = violation_bounds(self.idx.iter().copied(), signs, alpha, g, c);
+        if gmax1 + gmax2 <= eps * 10.0 {
+            return;
+        }
+        let before = self.idx.len();
+        self.idx
+            .retain(|&t| !be_shrunk(signs[t], alpha[t], g[t], c, gmax1, gmax2));
+        if self.idx.len() < before {
+            self.shrunk = true;
+        }
+    }
+
+    /// Restore the full active set and restart the cadence. The caller
+    /// must reconstruct the gradient of the previously inactive variables
+    /// *before* relying on it (see [`reconstruct_inactive`]).
+    pub fn unshrink(&mut self) {
+        self.idx = (0..self.n).collect();
+        self.shrunk = false;
+        self.counter = self.interval;
+    }
+}
+
+/// Recompute `g[t] = Σⱼ αⱼ·Q_tj + p_t` from scratch for every variable
+/// outside `active` — the unshrink gradient reconstruction shared by both
+/// solvers. `linear` supplies p_t (−1 for C-SVC), `map` the
+/// variable → kernel-row column (identity except for ε-SVR's doubled
+/// variables) and `row` fetches the cached kernel row of variable `j`'s
+/// data instance. Only inactive entries of `g` are touched.
+pub(crate) fn reconstruct_inactive(
+    g: &mut [f64],
+    active: &[usize],
+    linear: impl Fn(usize) -> f64,
+    signs: &[f64],
+    alpha: &[f64],
+    map: impl Fn(usize) -> usize,
+    mut row: impl FnMut(usize) -> Arc<[f64]>,
+) {
+    let n = g.len();
+    let mut is_active = vec![false; n];
+    for &t in active {
+        is_active[t] = true;
+    }
+    if active.len() == n {
+        return;
+    }
+    for (t, slot) in g.iter_mut().enumerate() {
+        if !is_active[t] {
+            *slot = linear(t);
+        }
+    }
+    for j in 0..n {
+        if alpha[j] > 0.0 {
+            let coef = alpha[j] * signs[j];
+            let r = row(j);
+            for (t, slot) in g.iter_mut().enumerate() {
+                if !is_active[t] {
+                    *slot += signs[t] * coef * r[map(t)];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_classifies_exact_bounds() {
+        let p = partition_of(&[0.0, 0.5, 2.0, 1.9999], 2.0);
+        assert_eq!(
+            p,
+            vec![VarBound::Lower, VarBound::Free, VarBound::Upper, VarBound::Free]
+        );
+    }
+
+    #[test]
+    fn full_set_never_reports_shrunk() {
+        let mut a = ActiveSet::full(5);
+        assert!(a.is_full());
+        assert_eq!(a.indices(), &[0, 1, 2, 3, 4]);
+        // tick fires once per interval (= n here)
+        let fires: usize = (0..10).filter(|_| a.tick()).count();
+        assert_eq!(fires, 2);
+    }
+
+    #[test]
+    fn shrink_drops_only_nonviolating_bounded() {
+        // signs all +1 (one-class-like): var 0 free, var 1 upper+violating
+        // (in I_up? no: s>0 upper is I_low-only; violating as j when
+        // gmax1 + g > 0), var 2 upper+non-violating, var 3 lower+non-viol.
+        let signs = [1.0, 1.0, 1.0, 1.0];
+        let alpha = [0.5, 1.0, 1.0, 0.0];
+        // gmax1 = max I_up −g = max(−g0, −g3); gmax2 = max I_low g = g0..g2
+        let g = [0.0, 1.0, -3.0, 2.0];
+        // gmax1 = max(0, −2) = 0; gmax2 = max(0, 1, −3) = 1 → violation 1
+        let mut a = ActiveSet::full(4);
+        a.shrink(&signs, &alpha, &g, 1.0, 1e-3);
+        // upper s>0 shrinks when −g > gmax1: var1 (−1 > 0? no) kept,
+        // var2 (3 > 0 ✓) dropped; lower s>0 shrinks when g > gmax2:
+        // var3 (2 > 1 ✓) dropped.
+        assert_eq!(a.indices(), &[0, 1]);
+        assert!(!a.is_full());
+        assert_eq!(a.passes(), 1);
+        a.unshrink();
+        assert!(a.is_full());
+    }
+
+    #[test]
+    fn seeded_rejects_free_and_violating_guesses() {
+        let signs = [1.0, -1.0, 1.0, -1.0];
+        // var 0 free → must be rejected even if proposed; var 1 upper
+        // (s<0, in I_up) with strongly non-violating gradient → accepted;
+        // var 2 proposed but violating → rejected.
+        let alpha = [0.5, 2.0, 0.0, 0.3];
+        let g = [0.0, 5.0, -4.0, 0.0];
+        // I_up: 0 (s>0,a<C), 1 (s<0,a>0), 2 (s>0,a<C), 3 (s<0,a>0)
+        // gmax1 = max(−g0, g1, −g2, g3) = max(0, 5, 4, 0) = 5
+        // I_low: 0, 3 and (s<0,a<C): 3 → gmax2 = max(g0, −g3) = 0
+        let set = ActiveSet::seeded(4, &signs, &alpha, &g, 2.0, 1e-3, &[0, 1, 2]);
+        // var1: upper s<0 shrinks when −g > gmax2 → −5 > 0 false → kept!
+        // (it is the maximal violator); nothing else shrinkable → full.
+        assert!(set.is_full());
+
+        // flip var1's gradient so it is strictly non-violating
+        let g2 = [0.0, -5.0, -4.0, 0.0];
+        // gmax1 = max(0, −5, 4, 0) = 4 (var2 violates), gmax2 = 0
+        let set = ActiveSet::seeded(4, &signs, &alpha, &g2, 2.0, 1e-3, &[0, 1, 2]);
+        assert_eq!(set.indices(), &[0, 2, 3]);
+        assert!(!set.is_full());
+    }
+
+    #[test]
+    fn seeded_near_optimum_ignores_guess() {
+        let signs = [1.0, 1.0];
+        let alpha = [1.0, 0.0];
+        let g = [0.0, 0.0]; // violation 0 ≤ 10·eps
+        let set = ActiveSet::seeded(2, &signs, &alpha, &g, 1.0, 1e-3, &[0, 1]);
+        assert!(set.is_full());
+    }
+
+    #[test]
+    fn reconstruct_touches_only_inactive() {
+        // 3 variables, identity map, p = −1, signs = +1, row(j) = e_j·2
+        let active = [0usize, 2];
+        let mut g = [7.0, 99.0, 8.0];
+        let alpha = [0.5, 0.0, 1.0];
+        let rows: Vec<Arc<[f64]>> = (0..3)
+            .map(|j| {
+                let mut r = vec![0.0; 3];
+                r[j] = 2.0;
+                Arc::from(r)
+            })
+            .collect();
+        reconstruct_inactive(
+            &mut g,
+            &active,
+            |_| -1.0,
+            &[1.0, 1.0, 1.0],
+            &alpha,
+            |t| t,
+            |j| rows[j].clone(),
+        );
+        assert_eq!(g[0], 7.0);
+        assert_eq!(g[2], 8.0);
+        // g1 = −1 + Σ_j α_j·row_j[1] = −1 (no row has column 1 mass)
+        assert_eq!(g[1], -1.0);
+    }
+}

@@ -13,6 +13,14 @@
 //!   SVM** (Σα = ν·n) run; the [`QpProblem`] trait builds the spec per
 //!   formulation.
 //!
+//! Both paths shrink through the shared [`ActiveSet`] core (the
+//! constraint signs take the role of the labels), accept an optional
+//! **carried active-set guess** from the previous cross-validation round
+//! (`solve_seeded`, validated against the initial gradient before it is
+//! trusted), and export the terminal free/lower/upper partition
+//! ([`SmoResult::partition`], a [`VarBound`] per variable) that the next
+//! round's seeder maps forward.
+//!
 //! Both accept an **arbitrary feasible initial point** (and optionally a
 //! pre-computed gradient) — that is the hook every alpha-seeding algorithm
 //! plugs into; cold start is α = 0 (C-SVC/ε-SVR) or the ν-fraction point
@@ -24,6 +32,7 @@
 //! indicator is the tube residual eᵢ = f(xᵢ) − zᵢ (see
 //! [`problem::svr_errors`]).
 
+mod active;
 mod model;
 mod persist;
 mod platt;
@@ -31,6 +40,7 @@ pub mod problem;
 mod solver;
 mod verify;
 
+pub use active::{partition_of, ActiveSet, VarBound};
 pub use model::{Model, OneClassModel, SvrModel};
 pub use persist::ModelIoError;
 pub use platt::PlattScaler;

@@ -2,6 +2,7 @@
 //! QP-problem abstraction ([`QpProblem`]/[`QpSpec`]/[`GeneralSolver`])
 //! that extends the same decomposition method to ε-SVR and one-class SVM.
 
+use super::active::{partition_of, reconstruct_inactive, ActiveSet, VarBound};
 use crate::data::Dataset;
 use crate::kernel::{KernelCache, KernelEval};
 use std::time::Instant;
@@ -77,6 +78,16 @@ pub struct SmoResult {
     /// Final gradient Gᵢ = Σⱼ αⱼQᵢⱼ − 1. The paper's optimality indicator
     /// is fᵢ = yᵢ·Gᵢ; the seeding algorithms consume it.
     pub g: Vec<f64>,
+    /// Terminal free/lower/upper partition of the dual variables against
+    /// the box — the solver's active-set knowledge, exported so the next
+    /// cross-validation round can carry it forward (see
+    /// [`Seeder::seed_active_set`](crate::seeding::Seeder::seed_active_set)
+    /// and [`ActiveSet::seeded`](super::ActiveSet::seeded)).
+    pub partition: Vec<VarBound>,
+    /// Number of shrink passes the solve ran (periodic scans plus a
+    /// seeded initialisation that removed variables); 0 whenever
+    /// shrinking is disabled. Diagnostic only.
+    pub shrink_passes: u64,
 }
 
 impl SmoResult {
@@ -139,6 +150,24 @@ impl Solver {
     /// The initial α must be feasible: 0 ≤ αᵢ ≤ C. (Σyα = 0 is the seeders'
     /// contract; it is asserted in debug builds.)
     pub fn solve_from(&mut self, alpha: Vec<f64>, initial_g: Option<Vec<f64>>) -> SmoResult {
+        self.solve_seeded(alpha, initial_g, None)
+    }
+
+    /// [`Solver::solve_from`] plus an optional **carried active-set
+    /// guess**: `inactive_seed` lists variable positions believed to be
+    /// bounded and non-violating (typically the previous CV round's
+    /// bounded partition mapped through the fold transition). The guess
+    /// is validated index-by-index against the initial gradient before
+    /// any variable is shrunk ([`ActiveSet::seeded`]), and the usual
+    /// final unshrink + full-KKT re-check still runs, so a wrong guess
+    /// can only cost iterations — the converged model never depends on
+    /// it. Ignored when `params.shrinking` is off.
+    pub fn solve_seeded(
+        &mut self,
+        alpha: Vec<f64>,
+        initial_g: Option<Vec<f64>>,
+        inactive_seed: Option<&[usize]>,
+    ) -> SmoResult {
         let n = self.n();
         assert_eq!(alpha.len(), n);
         let c = self.params.c;
@@ -162,11 +191,22 @@ impl Solver {
         let grad_init_secs = grad_start.elapsed().as_secs_f64();
 
         let mut alpha = alpha;
-        let mut active: Vec<usize> = (0..n).collect();
-        let mut shrunk = false;
+        // The shared active-set core: start from the carried-over guess
+        // when one is provided (validated against the fresh gradient),
+        // from the full set otherwise.
+        let mut active = match inactive_seed {
+            Some(guess) if self.params.shrinking && !guess.is_empty() => ActiveSet::seeded(
+                n,
+                &self.y,
+                &alpha,
+                &g,
+                c,
+                self.params.eps,
+                guess,
+            ),
+            _ => ActiveSet::full(n),
+        };
         let mut iter: u64 = 0;
-        let shrink_interval = n.min(1000).max(1) as u64;
-        let mut counter = shrink_interval;
         let mut converged = false;
 
         loop {
@@ -175,26 +215,21 @@ impl Solver {
             }
 
             // Periodic shrinking.
-            if self.params.shrinking {
-                counter -= 1;
-                if counter == 0 {
-                    counter = shrink_interval;
-                    self.do_shrinking(&mut active, &alpha, &g, &mut shrunk);
-                }
+            if self.params.shrinking && active.tick() {
+                active.shrink(&self.y, &alpha, &g, c, self.params.eps);
             }
 
             // Working-set selection on the active set.
-            let (i, j, m_minus_big_m) = match self.select_working_set(&active, &alpha, &g) {
+            let sel = self.select_working_set(active.indices(), &alpha, &g);
+            let (i, j, m_minus_big_m) = match sel {
                 Some(sel) => sel,
                 None => {
                     // Optimal on the active set. If shrunk, reconstruct and
                     // retry globally once before declaring convergence.
-                    if shrunk && !active_is_all(&active, n) {
-                        self.reconstruct_gradient(&alpha, &mut g, &active);
-                        active = (0..n).collect();
-                        shrunk = false;
-                        counter = shrink_interval;
-                        match self.select_working_set(&active, &alpha, &g) {
+                    if !active.is_full() {
+                        self.reconstruct_gradient(&alpha, &mut g, active.indices());
+                        active.unshrink();
+                        match self.select_working_set(active.indices(), &alpha, &g) {
                             Some(_) => continue,
                             None => {
                                 converged = true;
@@ -276,7 +311,7 @@ impl Solver {
                 let ci = yi * dai;
                 let cj = yj * daj;
                 let (row_i, row_j) = self.cache.row_pair(i, j);
-                for &t in &active {
+                for &t in active.indices() {
                     g[t] += self.y[t] * (ci * row_i[t] + cj * row_j[t]);
                 }
             }
@@ -284,8 +319,8 @@ impl Solver {
 
         // Ensure g is globally consistent (it may be stale for shrunk
         // indices if we stopped at max_iter while shrunk).
-        if !active_is_all(&active, n) {
-            self.reconstruct_gradient(&alpha, &mut g, &active);
+        if !active.is_full() {
+            self.reconstruct_gradient(&alpha, &mut g, active.indices());
         }
 
         // Bias (paper's b = LibSVM ρ) from the final gradient.
@@ -301,6 +336,7 @@ impl Solver {
 
         let n_sv = alpha.iter().filter(|&&a| a > 0.0).count();
         let n_bsv = alpha.iter().filter(|&&a| a >= c).count();
+        let partition = partition_of(&alpha, c);
 
         SmoResult {
             alpha,
@@ -312,6 +348,8 @@ impl Solver {
             converged,
             grad_init_secs,
             g,
+            partition,
+            shrink_passes: active.passes(),
         }
     }
 
@@ -442,82 +480,15 @@ impl Solver {
         }
     }
 
-    /// LibSVM `be_shrunk` + active-set filtering.
-    fn do_shrinking(
-        &mut self,
-        active: &mut Vec<usize>,
-        alpha: &[f64],
-        g: &[f64],
-        shrunk: &mut bool,
-    ) {
-        let c = self.params.c;
-        // Gmax1 = max_{I_up} −yG, Gmax2 = max_{I_low} yG
-        let (mut gmax1, mut gmax2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
-        for &t in active.iter() {
-            let (y, a) = (self.y[t], alpha[t]);
-            if (y > 0.0 && a < c) || (y < 0.0 && a > 0.0) {
-                gmax1 = gmax1.max(-y * g[t]);
-            }
-            if (y > 0.0 && a > 0.0) || (y < 0.0 && a < c) {
-                gmax2 = gmax2.max(y * g[t]);
-            }
-        }
-        // Don't shrink when close to optimal: LibSVM unshrinks at 10·eps.
-        if gmax1 + gmax2 <= self.params.eps * 10.0 {
-            return;
-        }
-        let before = active.len();
-        active.retain(|&t| {
-            let (y, a) = (self.y[t], alpha[t]);
-            let upper = a >= c;
-            let lower = a <= 0.0;
-            if upper {
-                if y > 0.0 {
-                    -g[t] <= gmax1
-                } else {
-                    g[t] <= gmax2
-                }
-            } else if lower {
-                if y > 0.0 {
-                    g[t] <= gmax2
-                } else {
-                    -g[t] <= gmax1
-                }
-            } else {
-                true
-            }
-        });
-        if active.len() < before {
-            *shrunk = true;
-        }
-    }
-
     /// Recompute G for every index outside `active` from scratch (the
     /// LibSVM `reconstruct_gradient`, without the G̅ incremental trick:
-    /// reconstruction is rare — once per unshrink).
+    /// reconstruction is rare — once per unshrink). Delegates to the
+    /// shared [`active`](super::active) core with p = −1, signs = y and
+    /// the identity kernel-row map.
     fn reconstruct_gradient(&mut self, alpha: &[f64], g: &mut [f64], active: &[usize]) {
-        let n = self.n();
-        let mut is_active = vec![false; n];
-        for &t in active {
-            is_active[t] = true;
-        }
-        for t in 0..n {
-            if !is_active[t] {
-                g[t] = -1.0;
-            }
-        }
-        for j in 0..n {
-            if alpha[j] > 0.0 {
-                let coef = alpha[j] * self.y[j];
-                let row_ptr = self.cache.row(j).as_ptr();
-                let row: &[f64] = unsafe { std::slice::from_raw_parts(row_ptr, n) };
-                for t in 0..n {
-                    if !is_active[t] {
-                        g[t] += self.y[t] * coef * row[t];
-                    }
-                }
-            }
-        }
+        let cache = &mut self.cache;
+        let y = &self.y;
+        reconstruct_inactive(g, active, |_| -1.0, y, alpha, |t| t, |j| cache.row_arc(j));
     }
 
     /// ρ/b from the final gradient: average of yᵢGᵢ over free SVs, or the
@@ -548,10 +519,6 @@ impl Solver {
             (ub + lb) / 2.0
         }
     }
-}
-
-fn active_is_all(active: &[usize], n: usize) -> bool {
-    active.len() == n
 }
 
 // ---- the QP-problem abstraction -------------------------------------------
@@ -614,10 +581,11 @@ pub trait QpProblem {
 
 /// SMO solver over an arbitrary [`QpSpec`] — the engine behind the ε-SVR
 /// and one-class paths. Runs the same second-order working-set selection
-/// (WSS2) and two-variable update as the binary [`Solver`]; it skips
-/// LibSVM-style shrinking (the active set stays full), trading some speed
-/// on large problems for a materially simpler solver that is easy to
-/// verify against the specialised binary path.
+/// (WSS2), two-variable update **and LibSVM-style shrinking** as the
+/// binary [`Solver`]: both paths drive the shared
+/// [`ActiveSet`](super::ActiveSet) core (the constraint signs take the
+/// role the labels play in the binary path), including the final
+/// unshrink + full-KKT re-check before convergence is reported.
 pub struct GeneralSolver {
     cache: KernelCache,
     spec: QpSpec,
@@ -626,9 +594,9 @@ pub struct GeneralSolver {
 
 impl GeneralSolver {
     /// Bind a solver to a kernel evaluator and a QP description. The
-    /// kernel cache is sized by `params.cache_bytes`; `params.c` and
-    /// `params.shrinking` are ignored (the box bound comes from
-    /// `spec.c`, and the general path does not shrink).
+    /// kernel cache is sized by `params.cache_bytes`; `params.c` is
+    /// ignored (the box bound comes from `spec.c`), while
+    /// `params.shrinking` is honored exactly as in the binary path.
     pub fn new(eval: KernelEval, spec: QpSpec, params: SmoParams) -> GeneralSolver {
         assert_eq!(spec.signs.len(), spec.p.len(), "signs/p length mismatch");
         assert_eq!(spec.signs.len(), spec.map.len(), "signs/map length mismatch");
@@ -667,6 +635,22 @@ impl GeneralSolver {
     /// value is taken from β itself and preserved exactly). `initial_g`
     /// may carry a pre-computed gradient Gᵢ = Σⱼ βⱼQᵢⱼ + pᵢ.
     pub fn solve_from(&mut self, beta: Vec<f64>, initial_g: Option<Vec<f64>>) -> SmoResult {
+        self.solve_seeded(beta, initial_g, None)
+    }
+
+    /// [`GeneralSolver::solve_from`] plus an optional carried active-set
+    /// guess, with the same contract as [`Solver::solve_seeded`]:
+    /// `inactive_seed` lists β positions (doubled α/α* positions for
+    /// ε-SVR) believed bounded and non-violating; every proposed index is
+    /// validated against the initial gradient before being shrunk, and
+    /// the final unshrink + full-KKT re-check makes the converged model
+    /// independent of the guess. Ignored when `params.shrinking` is off.
+    pub fn solve_seeded(
+        &mut self,
+        beta: Vec<f64>,
+        initial_g: Option<Vec<f64>>,
+        inactive_seed: Option<&[usize]>,
+    ) -> SmoResult {
         let m = self.n_var();
         assert_eq!(beta.len(), m);
         let c = self.spec.c;
@@ -686,6 +670,18 @@ impl GeneralSolver {
         let grad_init_secs = grad_start.elapsed().as_secs_f64();
 
         let mut beta = beta;
+        let mut active = match inactive_seed {
+            Some(guess) if self.params.shrinking && !guess.is_empty() => ActiveSet::seeded(
+                m,
+                &self.spec.signs,
+                &beta,
+                &g,
+                c,
+                self.params.eps,
+                guess,
+            ),
+            _ => ActiveSet::full(m),
+        };
         let mut iter: u64 = 0;
         let mut converged = false;
 
@@ -693,9 +689,30 @@ impl GeneralSolver {
             if iter >= self.params.max_iter {
                 break;
             }
-            let (i, j) = match self.select_working_set(&beta, &g) {
+
+            // Periodic shrinking, same cadence and criterion as the
+            // binary path (signs in place of labels).
+            if self.params.shrinking && active.tick() {
+                active.shrink(&self.spec.signs, &beta, &g, c, self.params.eps);
+            }
+
+            let (i, j) = match self.select_working_set(active.indices(), &beta, &g) {
                 Some((i, j, _)) => (i, j),
                 None => {
+                    // Optimal on the active set: reconstruct the shrunk
+                    // gradients and re-check the full problem before
+                    // declaring convergence.
+                    if !active.is_full() {
+                        self.reconstruct_gradient_inactive(&beta, &mut g, active.indices());
+                        active.unshrink();
+                        match self.select_working_set(active.indices(), &beta, &g) {
+                            Some(_) => continue,
+                            None => {
+                                converged = true;
+                                break;
+                            }
+                        }
+                    }
                     converged = true;
                     break;
                 }
@@ -770,11 +787,16 @@ impl GeneralSolver {
                 let ci = si * dbi;
                 let cj = sj * dbj;
                 let (row_i, row_j) = self.cache.row_pair(di, dj);
-                for t in 0..m {
+                for &t in active.indices() {
                     let dt = self.spec.map[t];
                     g[t] += self.spec.signs[t] * (ci * row_i[dt] + cj * row_j[dt]);
                 }
             }
+        }
+
+        // g may be stale for shrunk indices if we stopped at max_iter.
+        if !active.is_full() {
+            self.reconstruct_gradient_inactive(&beta, &mut g, active.indices());
         }
 
         let b = self.compute_bias(&beta, &g);
@@ -790,6 +812,7 @@ impl GeneralSolver {
 
         let n_sv = beta.iter().filter(|&&b| b > 0.0).count();
         let n_bsv = beta.iter().filter(|&&b| b >= c).count();
+        let partition = partition_of(&beta, c);
 
         SmoResult {
             alpha: beta,
@@ -801,7 +824,27 @@ impl GeneralSolver {
             converged,
             grad_init_secs,
             g,
+            partition,
+            shrink_passes: active.passes(),
         }
+    }
+
+    /// Recompute G for every variable outside `active` from scratch —
+    /// the general-path unshrink reconstruction, sharing the core with
+    /// the binary solver (p from the spec, signs in place of labels,
+    /// kernel rows through the variable → data-row map).
+    fn reconstruct_gradient_inactive(&mut self, beta: &[f64], g: &mut [f64], active: &[usize]) {
+        let cache = &mut self.cache;
+        let spec = &self.spec;
+        reconstruct_inactive(
+            g,
+            active,
+            |t| spec.p[t],
+            &spec.signs,
+            beta,
+            |t| spec.map[t],
+            |j| cache.row_arc(spec.map[j]),
+        );
     }
 
     /// Gᵢ = Σⱼ βⱼQᵢⱼ + pᵢ from the non-zero variables. Sequential — the
@@ -824,15 +867,19 @@ impl GeneralSolver {
         g
     }
 
-    /// WSS2 over the full variable set; `None` when ε-optimal.
-    fn select_working_set(&mut self, beta: &[f64], g: &[f64]) -> Option<(usize, usize, f64)> {
-        let m = beta.len();
+    /// WSS2 over the active variable set; `None` when ε-optimal on it.
+    fn select_working_set(
+        &mut self,
+        active: &[usize],
+        beta: &[f64],
+        g: &[f64],
+    ) -> Option<(usize, usize, f64)> {
         let c = self.spec.c;
 
         // i = argmax_{t ∈ I_up} −s_t·G_t
         let mut gmax = f64::NEG_INFINITY;
         let mut i = usize::MAX;
-        for t in 0..m {
+        for &t in active {
             let s = self.spec.signs[t];
             let in_up = (s > 0.0 && beta[t] < c) || (s < 0.0 && beta[t] > 0.0);
             if in_up {
@@ -862,7 +909,7 @@ impl GeneralSolver {
         let mut gmin = f64::INFINITY;
         let mut obj_min = f64::INFINITY;
         let mut j = usize::MAX;
-        for t in 0..m {
+        for &t in active {
             let s = self.spec.signs[t];
             let in_low = (s > 0.0 && beta[t] > 0.0) || (s < 0.0 && beta[t] < c);
             if !in_low {

@@ -216,6 +216,104 @@ pub fn check_bench_regression(
     }
 }
 
+/// Render a markdown summary of one bench-gate comparison — the
+/// `alphaseed benchgate --report` payload CI uploads as a PR artifact so
+/// a regression is diagnosable from the artifact alone, without rerunning
+/// the benches locally.
+///
+/// One table row per baseline seeder: the current and baseline
+/// seeded-vs-cold iteration ratios with the tolerance-adjusted limit, the
+/// init-time fractions with theirs, and a per-row PASS/FAIL/n-a status.
+/// Ends with the overall verdict. Purely a rendering of the same fields
+/// [`check_bench_regression`] gates on; it never alters the gate outcome.
+pub fn render_gate_report(
+    current_name: &str,
+    baseline_name: &str,
+    current: &Json,
+    baseline: &Json,
+    tol: &GateTolerance,
+) -> String {
+    let field = |doc: &Json, seeder: &str, key: &str| -> Option<f64> {
+        doc.get("per_seeder")?.get(seeder)?.get(key)?.as_f64()
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Bench gate: `{current_name}` vs `{baseline_name}`\n\n"
+    ));
+    let Some(base_map) = baseline.get("per_seeder").and_then(Json::as_obj) else {
+        out.push_str("**FAIL** — baseline has no `per_seeder` object\n");
+        return out;
+    };
+    let (cur_cold, base_cold) = (
+        field(current, "cold", "total_iterations"),
+        field(baseline, "cold", "total_iterations"),
+    );
+    out.push_str(&format!(
+        "| seeder | iter ratio | baseline | limit (+{:.0}%) | init frac | baseline | limit (+{:.2}) | status |\n",
+        tol.iter_ratio * 100.0,
+        tol.init_fraction
+    ));
+    out.push_str(
+        "|--------|-----------:|---------:|------:|----------:|---------:|------:|--------|\n",
+    );
+    for seeder in base_map.keys() {
+        let mut row_ok = true;
+        let (ratio_cells, ratio_ok) = match (
+            field(current, seeder, "total_iterations"),
+            field(baseline, seeder, "total_iterations"),
+            cur_cold,
+            base_cold,
+        ) {
+            _ if seeder == "cold" => ("— | — | —".to_string(), true),
+            (Some(ci), Some(bi), Some(cc), Some(bc)) if cc > 0.0 && bc > 0.0 => {
+                let (cur_ratio, base_ratio) = (ci / cc, bi / bc);
+                let limit = base_ratio * (1.0 + tol.iter_ratio);
+                (
+                    format!("{cur_ratio:.4} | {base_ratio:.4} | {limit:.4}"),
+                    cur_ratio <= limit + 1e-12,
+                )
+            }
+            _ => ("missing | — | —".to_string(), false),
+        };
+        row_ok &= ratio_ok;
+        let (if_cells, if_ok) = match field(baseline, seeder, "init_fraction") {
+            None => ("— | — | —".to_string(), true),
+            Some(bif) => {
+                let limit = bif + tol.init_fraction;
+                match field(current, seeder, "init_fraction") {
+                    Some(cif) => (
+                        format!("{cif:.4} | {bif:.4} | {limit:.4}"),
+                        cif <= limit + 1e-12,
+                    ),
+                    None => (format!("missing | {bif:.4} | {limit:.4}"), false),
+                }
+            }
+        };
+        row_ok &= if_ok;
+        out.push_str(&format!(
+            "| {seeder} | {ratio_cells} | {if_cells} | {} |\n",
+            if row_ok { "PASS" } else { "**FAIL**" }
+        ));
+    }
+    out.push('\n');
+    match check_bench_regression(current, baseline, tol) {
+        Ok(passed) => {
+            out.push_str(&format!("**verdict: PASS** ({} checks)\n", passed.len()));
+        }
+        Err(failures) => {
+            out.push_str(&format!(
+                "**verdict: FAIL** ({} regression{})\n\n",
+                failures.len(),
+                if failures.len() == 1 { "" } else { "s" }
+            ));
+            for f in &failures {
+                out.push_str(&format!("- {f}\n"));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +393,54 @@ mod tests {
             init_fraction: 0.15,
         };
         assert!(check_bench_regression(&current, &baseline, &tight).is_err());
+    }
+
+    #[test]
+    fn report_renders_pass_and_fail() {
+        let baseline = bench_doc(1000.0, 600.0, 0.2); // sir ratio 0.6
+        let good = bench_doc(1000.0, 500.0, 0.2); // ratio 0.5 → pass
+        let md = render_gate_report(
+            "BENCH_cv.json",
+            "BENCH_cv.baseline.json",
+            &good,
+            &baseline,
+            &GateTolerance::default(),
+        );
+        assert!(md.contains("## Bench gate"), "{md}");
+        assert!(md.contains("| sir |"), "{md}");
+        assert!(md.contains("0.5000"), "{md}");
+        assert!(md.contains("**verdict: PASS**"), "{md}");
+        assert!(!md.contains("**FAIL**"), "{md}");
+
+        let bad = bench_doc(1000.0, 700.0, 0.2); // ratio 0.7 > 0.6·1.05
+        let md = render_gate_report(
+            "BENCH_cv.json",
+            "BENCH_cv.baseline.json",
+            &bad,
+            &baseline,
+            &GateTolerance::default(),
+        );
+        assert!(md.contains("**verdict: FAIL**"), "{md}");
+        assert!(md.contains("**FAIL**"), "{md}");
+        assert!(md.contains("iteration ratio"), "{md}");
+    }
+
+    #[test]
+    fn report_marks_missing_seeder() {
+        let baseline = bench_doc(1000.0, 600.0, 0.2);
+        let current = Json::parse(
+            r#"{"per_seeder": {"cold": {"total_iterations": 1000, "init_fraction": 0.0}}}"#,
+        )
+        .unwrap();
+        let md = render_gate_report(
+            "cur",
+            "base",
+            &current,
+            &baseline,
+            &GateTolerance::default(),
+        );
+        assert!(md.contains("missing"), "{md}");
+        assert!(md.contains("**verdict: FAIL**"), "{md}");
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Shrink-path identity suite (ISSUE 4): the shared active-set core and
+//! the cross-fold carry-over must never move a solver's fixed point.
+//!
+//! Two strengths of identity are asserted:
+//!
+//! - **bit identity** where it is rigorously guaranteed: a carried
+//!   active-set guess that the KKT validation rejects in full leaves the
+//!   solver on the exact cold-active arithmetic path, so every output
+//!   bit matches;
+//! - **fixed-point identity at solver tolerance** everywhere else:
+//!   shrinking-on vs shrinking-off (and carry-on vs carry-off) runs
+//!   accumulate floating point in different orders — LibSVM's own `-h
+//!   0/1` paths differ the same way — so the converged ε-KKT points are
+//!   compared through objective / bias / accuracy / MSE at a tolerance
+//!   two orders above the solver ε, with ε pinned tight (1e-6) so the
+//!   fixed point is sharp.
+
+use alphaseed::cv::{run_kfold, run_kfold_oneclass, run_kfold_svr, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::seeding::seeder_by_name;
+use alphaseed::seeding::svr::{carry_bounded_pairs, svr_seeder_by_name};
+use alphaseed::smo::problem::solver_for;
+use alphaseed::smo::{
+    kkt_violation, OneClassProblem, QpProblem, SmoParams, SmoResult, Solver, SvcProblem,
+    SvrProblem, VarBound,
+};
+
+fn params(c: f64, eps: f64, shrinking: bool) -> SmoParams {
+    SmoParams {
+        c,
+        eps,
+        shrinking,
+        ..Default::default()
+    }
+}
+
+fn assert_same_fixed_point(a: &SmoResult, b: &SmoResult, what: &str) {
+    assert!(a.converged && b.converged, "{what}: both runs must converge");
+    let rel = (a.objective - b.objective).abs() / b.objective.abs().max(1.0);
+    assert!(
+        rel < 1e-3,
+        "{what}: objectives diverged ({} vs {}, rel {rel})",
+        a.objective,
+        b.objective
+    );
+    assert!(
+        (a.b - b.b).abs() < 5e-3,
+        "{what}: bias diverged ({} vs {})",
+        a.b,
+        b.b
+    );
+}
+
+// ---- shrinking-on vs shrinking-off, all three formulations ----------------
+
+#[test]
+fn binary_shrinking_on_off_same_model() {
+    let ds = synth::generate("adult", Some(150), 11);
+    let eval = KernelEval::new(ds, Kernel::rbf(0.5));
+    let run = |shrinking| {
+        let mut s = Solver::new(eval.clone(), params(100.0, 1e-6, shrinking));
+        s.solve()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(off.shrink_passes, 0, "disabled shrinking must never scan");
+    assert_same_fixed_point(&on, &off, "binary shrink on/off");
+    // both ends satisfy the *global* KKT condition at tolerance
+    for r in [&on, &off] {
+        let rep = kkt_violation(&eval, &r.alpha, 100.0);
+        assert!(rep.max_violation < 1e-5, "KKT violation {}", rep.max_violation);
+        assert!(rep.sum_y_alpha.abs() < 1e-8);
+    }
+}
+
+#[test]
+fn general_shrinking_on_off_all_formulations() {
+    // C-SVC through the general path
+    let ds = synth::generate("heart", Some(120), 7);
+    let run = |shrinking| {
+        let problem = SvcProblem { c: 10.0 };
+        let mut s = solver_for(&problem, &ds, Kernel::rbf(0.2), params(10.0, 1e-6, shrinking));
+        s.solve()
+    };
+    assert_same_fixed_point(&run(true), &run(false), "general C-SVC shrink on/off");
+
+    // ε-SVR (doubled variables: shrinking works on the (α, α*) layout)
+    let reg = synth::generate_regression("sinc", Some(110), 7);
+    let run = |shrinking| {
+        let problem = SvrProblem { c: 10.0, epsilon: 0.05 };
+        let mut s = solver_for(&problem, &reg, Kernel::rbf(0.5), params(10.0, 1e-6, shrinking));
+        s.solve()
+    };
+    let (on, off) = (run(true), run(false));
+    assert_same_fixed_point(&on, &off, "epsilon-SVR shrink on/off");
+    // the equality constraint Σα − Σα* = 0 survives shrinking exactly
+    let n = reg.len();
+    let sum: f64 = (0..n).map(|i| on.alpha[i] - on.alpha[n + i]).sum();
+    assert!(sum.abs() < 1e-6, "SVR equality constraint drifted: {sum}");
+
+    // one-class (non-zero equality constraint Σα = ν·n)
+    let oc = synth::generate_outliers(Some(160), 0.1, 7);
+    let nu = 0.2;
+    let run = |shrinking| {
+        let problem = OneClassProblem { nu };
+        let beta0 = problem.initial_alpha(&oc);
+        let mut s = solver_for(&problem, &oc, Kernel::rbf(1.0), params(1.0, 1e-6, shrinking));
+        s.solve_from(beta0, None)
+    };
+    let (on, off) = (run(true), run(false));
+    assert_same_fixed_point(&on, &off, "one-class shrink on/off");
+    let sum: f64 = on.alpha.iter().sum();
+    assert!(
+        (sum - nu * oc.len() as f64).abs() < 1e-6,
+        "one-class constraint drifted: {sum}"
+    );
+}
+
+#[test]
+fn general_solver_honors_shrinking_flag() {
+    // Regression guard for the old GeneralSolver, which silently ignored
+    // params.shrinking: the flag must now gate the shrink passes.
+    let ds = synth::generate("heart", Some(150), 3);
+    let run = |shrinking| {
+        let mut s = solver_for(
+            &SvcProblem { c: 100.0 },
+            &ds,
+            Kernel::rbf(0.2),
+            params(100.0, 1e-6, shrinking),
+        );
+        s.solve()
+    };
+    let off = run(false);
+    assert_eq!(off.shrink_passes, 0);
+    let on = run(true);
+    // a shrink pass runs every min(n, 1000) iterations, so any solve that
+    // iterates past the interval must have scanned at least once
+    if on.iterations >= 150 {
+        assert!(on.shrink_passes > 0, "shrinking flag had no effect");
+    }
+}
+
+#[test]
+fn partition_export_matches_alpha() {
+    let ds = synth::generate("heart", Some(100), 5);
+    let mut s = Solver::new(KernelEval::new(ds, Kernel::rbf(0.2)), SmoParams::with_c(2.0));
+    let r = s.solve();
+    assert_eq!(r.partition.len(), r.alpha.len());
+    for (a, vb) in r.alpha.iter().zip(&r.partition) {
+        let expect = if *a >= 2.0 {
+            VarBound::Upper
+        } else if *a <= 0.0 {
+            VarBound::Lower
+        } else {
+            VarBound::Free
+        };
+        assert_eq!(*vb, expect, "partition disagrees with alpha {a}");
+    }
+    let free = r.partition.iter().filter(|&&v| v == VarBound::Free).count();
+    let upper = r.partition.iter().filter(|&&v| v == VarBound::Upper).count();
+    assert_eq!(free + upper + (r.alpha.len() - r.n_sv), r.alpha.len());
+}
+
+// ---- adversarial carried active sets --------------------------------------
+
+#[test]
+fn fully_rejected_carried_set_is_bit_identical() {
+    // From the cold start α = 0 every variable is at its lower bound with
+    // G = −1, which never passes be_shrunk — so proposing *all* variables
+    // as inactive must be rejected in full, leaving the exact cold-active
+    // arithmetic path: every output bit matches the plain solve.
+    let ds = synth::generate("heart", Some(130), 9);
+    let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.2));
+    let n = ds.len();
+    let mut plain = Solver::new(eval.clone(), SmoParams::with_c(5.0));
+    let rp = plain.solve();
+    let guess: Vec<usize> = (0..n).collect();
+    let mut seeded = Solver::new(eval, SmoParams::with_c(5.0));
+    let rs = seeded.solve_seeded(vec![0.0; n], None, Some(&guess));
+    assert_eq!(rp.iterations, rs.iterations);
+    assert_eq!(rp.b.to_bits(), rs.b.to_bits());
+    for (a, b) in rp.alpha.iter().zip(&rs.alpha) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in rp.g.iter().zip(&rs.g) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn adversarial_carried_set_still_converges_to_same_model() {
+    // Seed the solver at C = 8 from the (clipped) C = 1 optimum and
+    // propose EVERY variable as initially inactive. The validation keeps
+    // the currently-violating ones; the rest are deliberately wrong —
+    // bounded variables of the C = 1 solution that must re-enter for
+    // C = 8 — and only the final unshrink + re-check can rescue them.
+    let ds = synth::generate("heart", Some(140), 13);
+    let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.2));
+    let mut low = Solver::new(eval.clone(), params(1.0, 1e-6, true));
+    let r1 = low.solve();
+    assert!(r1.converged);
+    let seed: Vec<f64> = alphaseed::cv::rescale_alpha(&r1.alpha, &ds.y, 1.0, 8.0);
+    let guess: Vec<usize> = (0..ds.len()).collect();
+
+    let mut carried = Solver::new(eval.clone(), params(8.0, 1e-6, true));
+    let rc = carried.solve_seeded(seed.clone(), None, Some(&guess));
+    let mut plain = Solver::new(eval.clone(), params(8.0, 1e-6, true));
+    let rp = plain.solve_from(seed, None);
+    let mut cold = Solver::new(eval.clone(), params(8.0, 1e-6, true));
+    let r0 = cold.solve();
+
+    assert_same_fixed_point(&rc, &rp, "adversarial carry vs plain warm");
+    assert_same_fixed_point(&rc, &r0, "adversarial carry vs cold");
+    let rep = kkt_violation(&eval, &rc.alpha, 8.0);
+    assert!(rep.max_violation < 1e-5, "KKT violation {}", rep.max_violation);
+}
+
+#[test]
+fn svr_carry_helper_is_pair_aware() {
+    // prev round: 3 instances; partitions over the doubled (α, α*) vars.
+    // instance 10: δ = +C  (α Upper, α* Lower)  → both sides carried
+    // instance 20: free δ  (α Free,  α* Lower)  → pair stays active
+    // instance 30: δ = 0   (α Lower, α* Lower)  → both sides carried
+    let prev_train = [10usize, 20, 30];
+    use alphaseed::smo::VarBound::{Free, Lower, Upper};
+    let partition = [Upper, Free, Lower, Lower, Lower, Lower];
+    // next round keeps 10 and 30 (positions 0 and 2 of next_train)
+    let next_train = [10usize, 15, 30];
+    let carried = carry_bounded_pairs(&prev_train, &partition, &next_train);
+    // α sides at next positions {0, 2}, α* sides at {3+0, 3+2}
+    assert_eq!(carried, vec![0, 2, 3, 5]);
+}
+
+// ---- cross-fold carry-over through the CV drivers -------------------------
+
+#[test]
+fn csvc_cv_carry_on_off_identical_accuracy() {
+    let ds = synth::generate("heart", Some(130), 42);
+    for seeder_name in ["ato", "mir", "sir"] {
+        for rng_seed in [1u64, 2] {
+            let run = |carry| {
+                let seeder = seeder_by_name(seeder_name).unwrap();
+                run_kfold(
+                    &ds,
+                    Kernel::rbf(0.2),
+                    2.0,
+                    4,
+                    seeder.as_ref(),
+                    CvOptions {
+                        eps: 1e-6,
+                        rng_seed,
+                        carry_active_set: carry,
+                        ..Default::default()
+                    },
+                )
+            };
+            let with = run(true);
+            let without = run(false);
+            assert!(
+                (with.accuracy() - without.accuracy()).abs() < 1e-12,
+                "{seeder_name}/seed {rng_seed}: carry changed accuracy ({} vs {})",
+                with.accuracy(),
+                without.accuracy()
+            );
+        }
+    }
+}
+
+#[test]
+fn svr_cv_carry_on_off_identical_mse() {
+    let ds = synth::generate_regression("sinc", Some(110), 42);
+    for seeder_name in ["ato", "mir", "sir"] {
+        for rng_seed in [1u64, 2] {
+            let run = |carry| {
+                let seeder = svr_seeder_by_name(seeder_name).unwrap();
+                run_kfold_svr(
+                    &ds,
+                    Kernel::rbf(0.5),
+                    10.0,
+                    0.05,
+                    4,
+                    seeder.as_ref(),
+                    CvOptions {
+                        eps: 1e-6,
+                        rng_seed,
+                        carry_active_set: carry,
+                        ..Default::default()
+                    },
+                )
+            };
+            let with = run(true);
+            let without = run(false);
+            let rel = (with.mse() - without.mse()).abs() / without.mse().max(1e-12);
+            assert!(
+                rel < 1e-4,
+                "{seeder_name}/seed {rng_seed}: carry moved CV MSE by {rel} ({} vs {})",
+                with.mse(),
+                without.mse()
+            );
+        }
+    }
+}
+
+#[test]
+fn oneclass_cv_carry_on_off_identical_accuracy() {
+    let ds = synth::generate_outliers(Some(180), 0.1, 42);
+    let run = |carry| {
+        run_kfold_oneclass(
+            &ds,
+            Kernel::rbf(1.0),
+            0.15,
+            4,
+            true,
+            CvOptions {
+                eps: 1e-6,
+                carry_active_set: carry,
+                ..Default::default()
+            },
+        )
+    };
+    let with = run(true);
+    let without = run(false);
+    assert_eq!(
+        with.accuracy(),
+        without.accuracy(),
+        "one-class carry changed accuracy"
+    );
+}
