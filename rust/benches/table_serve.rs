@@ -1,0 +1,265 @@
+//! Bench: the serving tier — batched vs single-row request throughput
+//! and a TCP saturation run against a p99 latency target.
+//!
+//! For each of the three served model kinds (C-SVC, ε-SVR, one-class) the
+//! bench drives `PredictServer::respond` directly (no socket, so the
+//! numbers isolate the batching substrate): once with one-row requests
+//! and once with 16-row batches covering the same rows. The interesting
+//! metric is the *ratio* `batch_rps / single_rps` — the shape of the
+//! batching advantage, independent of machine speed — which the CI gate
+//! (`alphaseed benchgate`, serve flavour) holds against
+//! `BENCH_serve.baseline.json` with a generous collapse-only tolerance.
+//!
+//! A saturation phase then hammers a real TCP server with concurrent
+//! clients streaming batch requests and reports sustained rows/sec plus
+//! the p99 response latency from the server's own histogram; the gate
+//! checks that p99 against the baseline's `p99_target_us` budget (50 ms —
+//! orders of magnitude above observed latencies, so shared CI runners
+//! cannot trip it, while a pathological stall still fails).
+//!
+//! In-bench shape assertions pin the correctness contract the serving
+//! test suite proves at full depth: batched decisions are bit-identical
+//! to single-row decisions for every model kind.
+
+use alphaseed::coordinator::{ModelRegistry, PredictServer, ServeModel};
+use alphaseed::data::{synth, Dataset};
+use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::smo::problem::solver_for;
+use alphaseed::smo::{
+    Model, OneClassModel, OneClassProblem, QpProblem, SmoParams, Solver, SvrModel, SvrProblem,
+};
+use alphaseed::util::bench::once;
+use alphaseed::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+const BATCH_ROWS: usize = 16;
+const P99_TARGET_US: f64 = 50_000.0;
+
+fn predict_req(ds: &Dataset, idx: &[usize]) -> String {
+    let rows: Vec<Json> = idx
+        .iter()
+        .map(|&i| Json::arr(ds.x.dense_row(i).iter().map(|&v| Json::num(v as f64))))
+        .collect();
+    Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]).to_string()
+}
+
+/// Decisions array of an `ok:true` response.
+fn decisions(resp: &Json) -> Vec<f64> {
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    resp.get("decisions")
+        .and_then(Json::as_arr)
+        .expect("decisions")
+        .iter()
+        .map(|d| d.as_f64().expect("numeric decision"))
+        .collect()
+}
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    println!("== table_serve bench (scale {scale}, batch = {BATCH_ROWS} rows) ==");
+
+    // ---- the three served model kinds (synth registry defaults) -------
+    let heart = synth::generate("heart", Some(((240.0 * scale) as usize).max(80)), 42);
+    let csvc_kernel = Kernel::rbf(0.2);
+    let mut solver = Solver::new(
+        KernelEval::new(heart.clone(), csvc_kernel),
+        SmoParams::with_c(2.0),
+    );
+    let r = solver.solve();
+    let csvc = ServeModel::CSvc {
+        model: Model::from_result(&heart, csvc_kernel, &r),
+        scaler: None,
+    };
+
+    let sinc = synth::generate_regression("sinc", Some(((300.0 * scale) as usize).max(100)), 42);
+    let svr_kernel = Kernel::rbf(0.5);
+    let svr_problem = SvrProblem {
+        c: 10.0,
+        epsilon: 0.05,
+    };
+    let mut solver = solver_for(&svr_problem, &sinc, svr_kernel, SmoParams::with_c(10.0));
+    let r = solver.solve();
+    let svr = ServeModel::Svr {
+        model: SvrModel::from_result(&sinc, svr_kernel, &r),
+    };
+
+    let outliers = synth::generate_outliers(Some(((300.0 * scale) as usize).max(120)), 0.1, 42);
+    let oc_kernel = Kernel::rbf(1.0);
+    let oc_problem = OneClassProblem { nu: 0.15 };
+    let mut solver = solver_for(&oc_problem, &outliers, oc_kernel, SmoParams::default());
+    let beta0 = oc_problem.initial_alpha(&outliers);
+    let r = solver.solve_from(beta0, None);
+    let oneclass = ServeModel::OneClass {
+        model: OneClassModel::from_result(&outliers, oc_kernel, &r),
+    };
+
+    // ---- batched vs single-row throughput through respond() -----------
+    let rows_total = (((2048.0 * scale) as usize).max(256) / BATCH_ROWS) * BATCH_ROWS;
+    let mut serving: BTreeMap<String, Json> = BTreeMap::new();
+    for (kind, model, ds) in [
+        ("csvc", &csvc, &heart),
+        ("svr", &svr, &sinc),
+        ("oneclass", &oneclass, &outliers),
+    ] {
+        let srv = PredictServer::with_registry(Arc::new(ModelRegistry::new(
+            model.clone(),
+            "bench",
+        )));
+        let idx: Vec<usize> = (0..rows_total).map(|i| i % ds.len()).collect();
+        let singles: Vec<String> = idx.iter().map(|&i| predict_req(ds, &[i])).collect();
+        let batches: Vec<String> = idx
+            .chunks(BATCH_ROWS)
+            .map(|chunk| predict_req(ds, chunk))
+            .collect();
+
+        // shape check first: the batched wire path must be bit-identical
+        // to the single-row wire path (the serving tier's contract)
+        let batch_dec = decisions(&srv.respond(&batches[0]));
+        for (j, single) in singles[..BATCH_ROWS].iter().enumerate() {
+            let single_dec = decisions(&srv.respond(single));
+            assert_eq!(
+                batch_dec[j].to_bits(),
+                single_dec[0].to_bits(),
+                "{kind}: batched row {j} diverged from single-row evaluation"
+            );
+        }
+
+        let (_, single_secs) = once(&format!("serve {kind}: {rows_total} single rows"), || {
+            for req in &singles {
+                let resp = srv.respond(req);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            }
+        });
+        let (_, batch_secs) = once(
+            &format!("serve {kind}: {rows_total} rows in {BATCH_ROWS}-row batches"),
+            || {
+                for req in &batches {
+                    let resp = srv.respond(req);
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                }
+            },
+        );
+        let single_rps = rows_total as f64 / single_secs.as_secs_f64().max(1e-9);
+        let batch_rps = rows_total as f64 / batch_secs.as_secs_f64().max(1e-9);
+        println!(
+            "{kind:<9} single {single_rps:>10.0} rows/s  batched {batch_rps:>10.0} rows/s  \
+             ratio {:.2}",
+            batch_rps / single_rps
+        );
+        serving.insert(
+            kind.to_string(),
+            Json::obj(vec![
+                ("single_rps", Json::Num(single_rps)),
+                ("batch_rps", Json::Num(batch_rps)),
+                ("batch_rows", Json::Num(BATCH_ROWS as f64)),
+                ("requests", Json::Num(rows_total as f64)),
+                ("n_sv", Json::Num(model.n_sv() as f64)),
+            ]),
+        );
+    }
+    println!("shape checks passed: batched decisions bit-identical to single-row, all kinds");
+
+    // ---- TCP saturation: concurrent clients vs the p99 budget ----------
+    let clients = 4usize;
+    let reqs_per_client = ((200.0 * scale) as usize).max(40);
+    let srv = Arc::new(PredictServer::with_registry(Arc::new(ModelRegistry::new(
+        csvc.clone(),
+        "bench",
+    ))));
+    let srv_thread = Arc::clone(&srv);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        srv_thread
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .expect("serve");
+    });
+    let addr = rx.recv().expect("bound address");
+    let sat_reqs: Arc<Vec<String>> = Arc::new(
+        (0..reqs_per_client)
+            .map(|r| {
+                let idx: Vec<usize> = (0..BATCH_ROWS)
+                    .map(|j| (r * BATCH_ROWS + j) % heart.len())
+                    .collect();
+                predict_req(&heart, &idx)
+            })
+            .collect(),
+    );
+    let (answered, wall) = once(
+        &format!("serve saturation: {clients} clients x {reqs_per_client} batch requests"),
+        || {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let reqs = Arc::clone(&sat_reqs);
+                    std::thread::spawn(move || {
+                        let mut conn = TcpStream::connect(addr).expect("connect");
+                        let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                        let mut line = String::new();
+                        let mut answered = 0usize;
+                        for req in reqs.iter() {
+                            writeln!(conn, "{req}").expect("send");
+                            line.clear();
+                            reader.read_line(&mut line).expect("recv");
+                            let resp = Json::parse(line.trim()).expect("response parses");
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                            answered += 1;
+                        }
+                        answered
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client"))
+                .sum::<usize>()
+        },
+    );
+    srv.shutdown();
+    server_thread.join().expect("server thread");
+    assert_eq!(answered, clients * reqs_per_client, "saturation dropped responses");
+    let lat = srv.latency.summary();
+    let sat_rows = answered * BATCH_ROWS;
+    let sustained_rps = sat_rows as f64 / wall.as_secs_f64().max(1e-9);
+    let p99_us = lat.p99.as_micros() as f64;
+    println!(
+        "saturation: {sustained_rps:.0} rows/s sustained, p99 {p99_us:.0}µs \
+         (target {P99_TARGET_US:.0}µs), {} responses",
+        lat.count
+    );
+    assert!(
+        p99_us <= P99_TARGET_US,
+        "saturation p99 {p99_us}µs blew the {P99_TARGET_US}µs latency budget"
+    );
+
+    // Machine-readable record for the serve flavour of `alphaseed
+    // benchgate` (keyed on the `serving` object).
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("table_serve".into())),
+        ("scale", Json::Num(scale)),
+        ("p99_target_us", Json::Num(P99_TARGET_US)),
+        ("serving", Json::Obj(serving)),
+        (
+            "saturation",
+            Json::obj(vec![
+                ("clients", Json::Num(clients as f64)),
+                ("requests", Json::Num(answered as f64)),
+                ("rows", Json::Num(sat_rows as f64)),
+                ("wall_secs", Json::Num(wall.as_secs_f64())),
+                ("sustained_rps", Json::Num(sustained_rps)),
+                ("p99_us", Json::Num(p99_us)),
+                ("mean_us", Json::Num(lat.mean.as_micros() as f64)),
+                ("served", Json::Num(srv.served.get() as f64)),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -32,6 +32,8 @@ use crate::multiclass::{
 };
 use crate::seeding::seeder_by_name;
 use crate::seeding::svr::svr_seeder_by_name;
+use crate::smo::problem::{solver_for, SvrProblem};
+use crate::smo::{Model, SmoParams, Solver, SvrModel};
 use crate::util::pool::{effective_threads, scoped_map};
 use std::sync::Arc;
 
@@ -521,6 +523,57 @@ pub fn grid_search_svr(
     SvrGridResult { points }
 }
 
+/// Retrain the winning (C, γ) cell of `result` on the full dataset and
+/// install it into `registry` — the grid→serving promote hook. A
+/// [`PredictServer`](super::PredictServer) sharing the registry keeps
+/// answering from its per-request snapshots while the retrain runs; the
+/// install lands atomically between requests, so promotion never drops
+/// traffic. Returns the version the winner was installed as.
+pub fn promote_best_csvc(
+    ds: &Dataset,
+    result: &GridResult,
+    registry: &super::ModelRegistry,
+) -> u64 {
+    let best = result.best();
+    let kernel = Kernel::rbf(best.gamma);
+    let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(best.c));
+    let r = solver.solve();
+    let model = Model::from_result(ds, kernel, &r);
+    registry.install(
+        super::ServeModel::CSvc {
+            model,
+            scaler: None,
+        },
+        format!("grid-best C={} gamma={}", best.c, best.gamma),
+    )
+}
+
+/// ε-SVR counterpart of [`promote_best_csvc`]: retrain the minimum-MSE
+/// (C, ε, γ) cell on the full dataset and install it into `registry`.
+/// Returns the version the winner was installed as.
+pub fn promote_best_svr(
+    ds: &Dataset,
+    result: &SvrGridResult,
+    registry: &super::ModelRegistry,
+) -> u64 {
+    let best = result.best();
+    let kernel = Kernel::rbf(best.gamma);
+    let problem = SvrProblem {
+        c: best.c,
+        epsilon: best.epsilon,
+    };
+    let mut solver = solver_for(&problem, ds, kernel, SmoParams::with_c(best.c));
+    let r = solver.solve();
+    let model = SvrModel::from_result(ds, kernel, &r);
+    registry.install(
+        super::ServeModel::Svr { model },
+        format!(
+            "grid-best C={} eps={} gamma={}",
+            best.c, best.epsilon, best.gamma
+        ),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -779,5 +832,85 @@ mod tests {
         );
         assert_eq!(g.points[0].c, 8.0);
         assert_eq!(g.points[1].c, 1.0);
+    }
+
+    #[test]
+    fn promote_best_csvc_installs_retrained_winner() {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let opts = GridOptions {
+            k: 3,
+            threads: 2,
+            ..Default::default()
+        };
+        let result = grid_search_opts(&ds, &[0.5, 2.0], &[0.1, 0.3], &opts);
+        // v1 deliberately differs from every grid cell
+        let k1 = Kernel::rbf(0.7);
+        let mut s1 = Solver::new(KernelEval::new(ds.clone(), k1), SmoParams::with_c(1.0));
+        let r1 = s1.solve();
+        let reg = super::super::ModelRegistry::new(
+            super::super::ServeModel::CSvc {
+                model: Model::from_result(&ds, k1, &r1),
+                scaler: None,
+            },
+            "v1",
+        );
+        let version = promote_best_csvc(&ds, &result, &reg);
+        assert_eq!(version, 2);
+        let cur = reg.current();
+        assert!(cur.tag.starts_with("grid-best"), "{}", cur.tag);
+        // the installed model is the winning cell retrained on full data
+        let best = result.best();
+        let kb = Kernel::rbf(best.gamma);
+        let mut sb = Solver::new(KernelEval::new(ds.clone(), kb), SmoParams::with_c(best.c));
+        let rb = sb.solve();
+        let direct = Model::from_result(&ds, kb, &rb);
+        let probe = ds.select(&[0, 1, 2, 3]);
+        let got = cur.model.decision_batch(&probe);
+        for (g, w) in got.iter().zip(&direct.decision_values(&probe)) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn promote_best_svr_installs_retrained_winner() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(80), 3);
+        let opts = GridOptions {
+            k: 3,
+            threads: 2,
+            ..Default::default()
+        };
+        let result = grid_search_svr(&ds, &[1.0, 10.0], &[0.05, 0.2], &[0.5], &opts);
+        let k1 = Kernel::rbf(0.9);
+        let p1 = SvrProblem {
+            c: 2.0,
+            epsilon: 0.1,
+        };
+        let mut s1 = solver_for(&p1, &ds, k1, SmoParams::with_c(2.0));
+        let r1 = s1.solve();
+        let reg = super::super::ModelRegistry::new(
+            super::super::ServeModel::Svr {
+                model: SvrModel::from_result(&ds, k1, &r1),
+            },
+            "v1",
+        );
+        let version = promote_best_svr(&ds, &result, &reg);
+        assert_eq!(version, 2);
+        let cur = reg.current();
+        assert_eq!(cur.model.kind(), "svr");
+        assert!(cur.tag.starts_with("grid-best"), "{}", cur.tag);
+        let best = result.best();
+        let kb = Kernel::rbf(best.gamma);
+        let pb = SvrProblem {
+            c: best.c,
+            epsilon: best.epsilon,
+        };
+        let mut sb = solver_for(&pb, &ds, kb, SmoParams::with_c(best.c));
+        let rb = sb.solve();
+        let direct = SvrModel::from_result(&ds, kb, &rb);
+        let probe = ds.select(&[0, 1, 2, 3]);
+        let got = cur.model.decision_batch(&probe);
+        for (g, w) in got.iter().zip(&direct.predict(&probe)) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 }

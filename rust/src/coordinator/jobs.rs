@@ -98,6 +98,12 @@ impl Coordinator {
             JobOutcome { spec, report, wall }
         })
     }
+
+    /// Snapshot of the per-job latency histogram (count / mean / p50 /
+    /// p99) — same shape the serving tier reports for requests.
+    pub fn latency_summary(&self) -> crate::metrics::HistogramSummary {
+        self.job_latency.summary()
+    }
 }
 
 /// Execute a single job (used directly by the CLI for one-off runs).
@@ -171,6 +177,9 @@ mod tests {
         assert_eq!(out[1].spec.seeder, "sir");
         assert_eq!(coord.jobs_done.get(), 2);
         assert_eq!(coord.job_latency.count(), 2);
+        let lat = coord.latency_summary();
+        assert_eq!(lat.count, 2);
+        assert!(lat.p99 >= lat.p50);
         // identical data/folds → identical accuracy (the paper's claim)
         assert!((out[0].report.accuracy() - out[1].report.accuracy()).abs() < 1e-12);
     }

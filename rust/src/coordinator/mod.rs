@@ -1,5 +1,6 @@
 //! The experiment coordinator: a leader that schedules CV / LOO / grid
-//! jobs over a worker pool and collects their reports.
+//! jobs over a worker pool and collects their reports, plus the serving
+//! tier that puts the resulting models behind a TCP/JSON-lines endpoint.
 //!
 //! The paper's system contribution lives in the *seeding chain* (state
 //! handoff between consecutive folds), which is inherently sequential per
@@ -15,15 +16,24 @@
 //! the same data + γ compute each kernel row once. Scheduling never
 //! changes what a cell computes — per-cell results are identical to a
 //! sequential sweep.
+//!
+//! The serving half closes the train→serve loop: [`ModelRegistry`] holds
+//! the current [`ServeModel`] (C-SVC / ε-SVR / one-class) behind an
+//! atomically hot-swappable version, [`PredictServer`] batches request
+//! rows into bulk decision evaluations against it, and
+//! [`promote_best_csvc`] / [`promote_best_svr`] retrain a grid winner and
+//! install it without dropping traffic.
 
 pub mod experiments;
 mod grid;
 mod jobs;
+mod registry;
 mod server;
 
 pub use grid::{
-    grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, GridOptions, GridPoint,
-    GridResult, SvrGridPoint, SvrGridResult,
+    grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, promote_best_csvc,
+    promote_best_svr, GridOptions, GridPoint, GridResult, SvrGridPoint, SvrGridResult,
 };
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
-pub use server::PredictServer;
+pub use registry::{ModelRegistry, ServeModel, VersionedModel};
+pub use server::{PredictServer, MAX_BATCH};

@@ -1,0 +1,342 @@
+//! Versioned model registry with atomic hot-swap — the serving tier's
+//! source of truth for "which model answers requests right now".
+//!
+//! The paper's workload trains many models cheaply (grid search over
+//! seeded CV); this module closes the loop by letting the winner replace
+//! the serving model **in place**: [`ModelRegistry::install`] publishes a
+//! new [`VersionedModel`] behind an `Arc` swap, so connections that are
+//! mid-request keep the snapshot they already dereferenced and the next
+//! request — on any connection — sees the new version. No request is ever
+//! dropped or answered by a half-installed model, and versions only ever
+//! increase, so every client observes a monotone version sequence
+//! (asserted under concurrent load in `tests/serve_integration.rs`).
+//!
+//! [`ServeModel`] is the dispatch point that lets one server front all
+//! three trained-model kinds (C-SVC with optional Platt calibration,
+//! ε-SVR, one-class) — the serving counterpart of the solver family's
+//! pluggable `QpProblem`.
+
+#![deny(missing_docs)]
+
+use crate::data::Dataset;
+use crate::kernel::Kernel;
+use crate::metrics::Counter;
+use crate::smo::{Model, OneClassModel, PlattScaler, SvrModel};
+use std::sync::{Arc, RwLock};
+
+/// A trained model of any of the three supported kinds, behind one
+/// serving interface. Batched evaluation delegates to the models' bulk
+/// paths, which share the SV-outer kernel-sum loop
+/// (`smo::model::kernel_sums_minus_b`) — one cross kernel-row fill per
+/// support vector per batch, bit-identical to per-row evaluation.
+#[derive(Debug, Clone)]
+pub enum ServeModel {
+    /// Binary C-SVC; decisions, ±1 labels, and (when calibrated)
+    /// Platt-scaled probabilities.
+    CSvc {
+        /// The trained classifier.
+        model: Model,
+        /// Optional Platt calibration (fit on seeded-CV decision values).
+        scaler: Option<PlattScaler>,
+    },
+    /// ε-SVR; the decision value *is* the regression prediction, so no
+    /// labels are emitted.
+    Svr {
+        /// The trained regressor.
+        model: SvrModel,
+    },
+    /// One-class SVM; decision ≥ 0 ⇒ inlier (+1), else outlier (−1).
+    OneClass {
+        /// The trained anomaly detector.
+        model: OneClassModel,
+    },
+}
+
+impl ServeModel {
+    /// Wire name of the model kind ("csvc" | "svr" | "oneclass").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeModel::CSvc { .. } => "csvc",
+            ServeModel::Svr { .. } => "svr",
+            ServeModel::OneClass { .. } => "oneclass",
+        }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        match self {
+            ServeModel::CSvc { model, .. } => model.n_sv(),
+            ServeModel::Svr { model } => model.n_sv(),
+            ServeModel::OneClass { model } => model.n_sv(),
+        }
+    }
+
+    /// Feature dimensionality requests must match.
+    pub fn dim(&self) -> usize {
+        match self {
+            ServeModel::CSvc { model, .. } => model.sv.dim(),
+            ServeModel::Svr { model } => model.sv.dim(),
+            ServeModel::OneClass { model } => model.sv.dim(),
+        }
+    }
+
+    /// The kernel the model was trained with.
+    pub fn kernel(&self) -> Kernel {
+        match self {
+            ServeModel::CSvc { model, .. } => model.kernel,
+            ServeModel::Svr { model } => model.kernel,
+            ServeModel::OneClass { model } => model.kernel,
+        }
+    }
+
+    /// Wire name of the kernel function.
+    pub fn kernel_name(&self) -> &'static str {
+        match self.kernel() {
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Linear => "linear",
+            Kernel::Poly { .. } => "polynomial",
+            Kernel::Sigmoid { .. } => "sigmoid",
+        }
+    }
+
+    /// Whether `probs` will accompany decisions (C-SVC with a fitted
+    /// Platt scaler).
+    pub fn calibrated(&self) -> bool {
+        matches!(self, ServeModel::CSvc { scaler: Some(_), .. })
+    }
+
+    /// Decision values for every row of `batch` — one bulk SV-outer
+    /// kernel pass, bit-identical to per-row `decision_one` /
+    /// `predict_one` evaluation. For ε-SVR the decision value is the
+    /// regression prediction itself.
+    pub fn decision_batch(&self, batch: &Dataset) -> Vec<f64> {
+        match self {
+            ServeModel::CSvc { model, .. } => model.decision_values(batch),
+            ServeModel::Svr { model } => model.predict(batch),
+            ServeModel::OneClass { model } => model.decision_values(batch),
+        }
+    }
+
+    /// ±1 labels derived from decisions (`None` for ε-SVR, whose output
+    /// is continuous).
+    pub fn labels(&self, decisions: &[f64]) -> Option<Vec<f64>> {
+        match self {
+            ServeModel::Svr { .. } => None,
+            ServeModel::CSvc { .. } | ServeModel::OneClass { .. } => Some(
+                decisions
+                    .iter()
+                    .map(|&d| if d >= 0.0 { 1.0 } else { -1.0 })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Platt probabilities of the +1 class (`None` unless a calibrated
+    /// C-SVC).
+    pub fn probs(&self, decisions: &[f64]) -> Option<Vec<f64>> {
+        match self {
+            ServeModel::CSvc {
+                scaler: Some(s), ..
+            } => Some(decisions.iter().map(|&d| s.prob(d)).collect()),
+            _ => None,
+        }
+    }
+}
+
+/// One published registry entry: a model plus the monotonically
+/// increasing version it was installed as and a human-readable tag
+/// ("startup", "grid-best C=10 gamma=0.2", a swap path, …).
+#[derive(Debug)]
+pub struct VersionedModel {
+    /// Monotone install counter (the first installed model is version 1).
+    pub version: u64,
+    /// Where this model came from, for `info` responses and logs.
+    pub tag: String,
+    /// The model itself.
+    pub model: ServeModel,
+}
+
+/// The registry: one current [`VersionedModel`] behind an `Arc`,
+/// replaced atomically by [`install`](ModelRegistry::install).
+///
+/// Readers take a cheap snapshot ([`current`](ModelRegistry::current))
+/// and evaluate against it without holding any lock; an install that
+/// lands mid-request cannot affect the snapshot already taken — the old
+/// `Arc` stays alive until its last reader drops it. This is the
+/// "promote without dropping traffic" half of the serving tier.
+#[derive(Debug)]
+pub struct ModelRegistry {
+    current: RwLock<Arc<VersionedModel>>,
+    /// Completed installs beyond the initial model (telemetry).
+    swaps: Counter,
+}
+
+impl ModelRegistry {
+    /// Create a registry serving `model` as version 1.
+    pub fn new(model: ServeModel, tag: impl Into<String>) -> ModelRegistry {
+        ModelRegistry {
+            current: RwLock::new(Arc::new(VersionedModel {
+                version: 1,
+                tag: tag.into(),
+                model,
+            })),
+            swaps: Counter::new(),
+        }
+    }
+
+    /// Snapshot the currently served model. The returned `Arc` remains
+    /// valid (and its version/tag/model consistent) regardless of later
+    /// installs.
+    pub fn current(&self) -> Arc<VersionedModel> {
+        Arc::clone(&self.current.read().expect("registry lock poisoned"))
+    }
+
+    /// Version of the currently served model.
+    pub fn version(&self) -> u64 {
+        self.current().version
+    }
+
+    /// Atomically publish `model` as the new current version and return
+    /// the version number it was installed as. In-flight requests keep
+    /// the snapshot they already hold; every request that starts after
+    /// this returns sees the new model.
+    pub fn install(&self, model: ServeModel, tag: impl Into<String>) -> u64 {
+        let mut slot = self.current.write().expect("registry lock poisoned");
+        let version = slot.version + 1;
+        *slot = Arc::new(VersionedModel {
+            version,
+            tag: tag.into(),
+            model,
+        });
+        self.swaps.inc();
+        version
+    }
+
+    /// Number of installs performed after the initial model.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelEval;
+    use crate::smo::{SmoParams, Solver};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn csvc(c: f64) -> (Dataset, Model) {
+        let ds = crate::data::synth::generate("heart", Some(60), 3);
+        let kernel = Kernel::rbf(0.2);
+        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
+        let r = solver.solve();
+        let model = Model::from_result(&ds, kernel, &r);
+        (ds, model)
+    }
+
+    #[test]
+    fn serve_model_reports_shape_and_kind() {
+        let (ds, model) = csvc(2.0);
+        let m = ServeModel::CSvc {
+            model,
+            scaler: None,
+        };
+        assert_eq!(m.kind(), "csvc");
+        assert_eq!(m.dim(), ds.dim());
+        assert!(m.n_sv() > 0);
+        assert_eq!(m.kernel_name(), "rbf");
+        assert!(!m.calibrated());
+        let d = m.decision_batch(&ds.select(&[0, 1, 2]));
+        assert_eq!(d.len(), 3);
+        let labels = m.labels(&d).expect("csvc labels");
+        assert!(labels.iter().all(|&l| l == 1.0 || l == -1.0));
+        assert!(m.probs(&d).is_none());
+    }
+
+    #[test]
+    fn calibrated_csvc_emits_probs() {
+        let (ds, model) = csvc(2.0);
+        let m = ServeModel::CSvc {
+            model,
+            scaler: Some(PlattScaler { a: -1.5, b: 0.1 }),
+        };
+        assert!(m.calibrated());
+        let d = m.decision_batch(&ds.select(&[0]));
+        let p = m.probs(&d).expect("calibrated probs");
+        assert!((0.0..=1.0).contains(&p[0]));
+    }
+
+    #[test]
+    fn install_bumps_version_and_keeps_old_snapshot_alive() {
+        let (_, v1) = csvc(1.0);
+        let (_, v2) = csvc(8.0);
+        let reg = ModelRegistry::new(
+            ServeModel::CSvc {
+                model: v1,
+                scaler: None,
+            },
+            "startup",
+        );
+        assert_eq!(reg.version(), 1);
+        assert_eq!(reg.swaps(), 0);
+        let snap = reg.current();
+        let installed = reg.install(
+            ServeModel::CSvc {
+                model: v2,
+                scaler: None,
+            },
+            "v2",
+        );
+        assert_eq!(installed, 2);
+        assert_eq!(reg.version(), 2);
+        assert_eq!(reg.swaps(), 1);
+        // the pre-install snapshot is untouched by the swap
+        assert_eq!(snap.version, 1);
+        assert_eq!(snap.tag, "startup");
+        assert_eq!(reg.current().tag, "v2");
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotone_versions() {
+        let (_, m) = csvc(1.0);
+        let reg = Arc::new(ModelRegistry::new(
+            ServeModel::CSvc {
+                model: m,
+                scaler: None,
+            },
+            "v1",
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let cur = reg.current();
+                        assert!(cur.version >= last, "version went backwards");
+                        // the snapshot is internally consistent
+                        assert_eq!(cur.tag, format!("v{}", cur.version));
+                        last = cur.version;
+                    }
+                    last
+                })
+            })
+            .collect();
+        for i in 2..=20u64 {
+            let (_, m) = csvc(1.0 + (i % 3) as f64);
+            reg.install(
+                ServeModel::CSvc {
+                    model: m,
+                    scaler: None,
+                },
+                format!("v{i}"),
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            assert!(r.join().expect("reader panicked") <= 20);
+        }
+    }
+}

@@ -1,86 +1,229 @@
-//! Prediction server: a minimal TCP/JSON-lines service over a trained
-//! model — the serving half of the L3 coordinator (request routing +
-//! micro-batching, in the spirit of an inference router).
+//! Prediction server: a TCP/JSON-lines serving tier over the versioned
+//! [`ModelRegistry`] — request batching, hot-swap, and clean shutdown on
+//! top of the L3 coordinator.
 //!
-//! Protocol: one JSON object per line.
+//! Protocol: one JSON object per line, one JSON object back.
 //!
 //! ```text
 //! → {"op":"predict","rows":[[0.1,0.2,…],…]}
-//! ← {"ok":true,"decisions":[…],"labels":[…],"probs":[…]?}
+//! ← {"ok":true,"model":"csvc","version":1,"decisions":[…],"labels":[…],"probs":[…]?}
 //! → {"op":"info"}
-//! ← {"ok":true,"n_sv":…,"dim":…,"kernel":"rbf","served":…}
+//! ← {"ok":true,"model":…,"version":…,"tag":…,"n_sv":…,"dim":…,"kernel":"rbf",
+//!    "served":…,"calibrated":…,"swaps":…,"latency_p50_us":…,"latency_p99_us":…}
+//! → {"op":"swap","path":"model.txt","tag":"v2"?}
+//! ← {"ok":true,"version":2}
 //! → {"op":"shutdown"}
 //! ```
 //!
-//! Requests are answered by a worker that batches the rows of each request
-//! into one bulk decision evaluation (native or via the AOT artifacts).
-//! Connections fan out on the process-wide work-stealing pool
-//! (`util::pool::global`), so slow clients and big batches overlap
-//! instead of serialising behind one accept loop.
+//! **Batching.** Each `predict` request's rows become one [`Dataset`] and
+//! go through one bulk decision evaluation ([`ServeModel::decision_batch`]),
+//! which runs the SV-outer kernel-sum loop: one cross kernel-row fill per
+//! support vector per request instead of one dot-product loop per row.
+//! The bulk path is bit-identical to per-row evaluation (asserted in
+//! `tests/serve_protocol.rs`), so batching is purely a throughput lever.
+//!
+//! **Hot swap.** Every request snapshots the registry's current model
+//! once (`registry.current()`), so an [`install`](ModelRegistry::install)
+//! — from the wire `swap` op or an in-process promote hook — lands
+//! between requests, never inside one. Responses carry the version that
+//! answered them; `tests/serve_integration.rs` hammers a swap under
+//! concurrent load and asserts zero dropped responses and per-connection
+//! version monotonicity.
+//!
+//! **Shutdown.** The listener blocks in `accept` (no sleep-poll); a
+//! `shutdown` request sets the stop flag and wakes the acceptor with a
+//! self-connection. The acceptor then stops taking new connections and
+//! *drains*: idle readers are unblocked by shutting the read side of each
+//! tracked connection, and the loop waits (condvar, 10 s deadline) until
+//! every handler has finished writing its in-flight responses.
+//!
+//! Each connection gets a dedicated handler thread: connections block in
+//! reads for their whole lifetime, so parking them on the process-wide
+//! compute pool would let a handful of idle clients starve CV and grid
+//! work (and cap concurrent clients at the worker count). Threads scale
+//! fine at this tier's connection counts; the pool stays reserved for
+//! compute.
 
+#![deny(missing_docs)]
+
+use super::registry::{ModelRegistry, ServeModel};
 use crate::data::{DataMatrix, Dataset};
 use crate::metrics::{Counter, Histogram};
 use crate::smo::{Model, PlattScaler};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Largest number of rows accepted in one `predict` request. Bounds the
+/// per-request kernel-row buffer (`MAX_BATCH × 8` bytes per SV pass) and
+/// keeps one client from wedging a worker with an unbounded allocation.
+pub const MAX_BATCH: usize = 4096;
+
+/// How long [`PredictServer::serve`] waits for in-flight connections to
+/// finish their current responses before giving up the drain.
+const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Server state shared across connections.
 pub struct PredictServer {
-    model: Model,
-    scaler: Option<PlattScaler>,
+    registry: Arc<ModelRegistry>,
+    /// Total rows served across all requests (telemetry; read by benches).
     pub served: Arc<Counter>,
+    /// Per-request response latency (telemetry; `info` reports p50/p99).
     pub latency: Arc<Histogram>,
     stop: Arc<AtomicBool>,
+    bound: Mutex<Option<SocketAddr>>,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_seq: AtomicU64,
+    drained: Condvar,
 }
 
 impl PredictServer {
+    /// Serve a single C-SVC model (with optional Platt calibration) —
+    /// convenience wrapper that wraps it in a fresh registry as version 1.
     pub fn new(model: Model, scaler: Option<PlattScaler>) -> PredictServer {
+        PredictServer::with_registry(Arc::new(ModelRegistry::new(
+            ServeModel::CSvc { model, scaler },
+            "startup",
+        )))
+    }
+
+    /// Serve whatever `registry` currently holds, following hot-swaps.
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> PredictServer {
         PredictServer {
-            model,
-            scaler,
+            registry,
             served: Arc::new(Counter::new()),
             latency: Arc::new(Histogram::new()),
             stop: Arc::new(AtomicBool::new(false)),
+            bound: Mutex::new(None),
+            conns: Mutex::new(HashMap::new()),
+            conn_seq: AtomicU64::new(0),
+            drained: Condvar::new(),
         }
     }
 
-    /// Bind and serve until a `shutdown` request arrives. Returns the
-    /// bound address through `on_ready` (port 0 picks a free port).
-    /// Each accepted connection is handled on the process-wide
-    /// work-stealing pool, so concurrent clients overlap.
-    pub fn serve(
-        self: Arc<Self>,
-        addr: &str,
-        on_ready: impl FnOnce(std::net::SocketAddr),
-    ) -> Result<()> {
+    /// The registry this server reads from — share it with a grid search
+    /// (or any trainer) to hot-swap models while serving.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Bind and serve until a `shutdown` request (or [`shutdown`] call)
+    /// arrives, then drain in-flight connections before returning. The
+    /// bound address is reported through `on_ready` (port 0 picks a free
+    /// port). Each accepted connection is handled on its own thread, so
+    /// concurrent clients overlap regardless of machine width.
+    ///
+    /// [`shutdown`]: PredictServer::shutdown
+    pub fn serve(self: Arc<Self>, addr: &str, on_ready: impl FnOnce(SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr).context("bind")?;
-        listener.set_nonblocking(true)?;
-        on_ready(listener.local_addr()?);
-        while !self.stop.load(Ordering::SeqCst) {
+        let local = listener.local_addr()?;
+        *self.bound.lock().expect("bound lock poisoned") = Some(local);
+        on_ready(local);
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        // the wake self-connection (or a straggler);
+                        // dropping it closes the socket
+                        break;
+                    }
+                    let id = self.conn_seq.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(track) = stream.try_clone() {
+                        self.conns
+                            .lock()
+                            .expect("conns lock poisoned")
+                            .insert(id, track);
+                    }
                     let me = Arc::clone(&self);
-                    crate::util::pool::global().execute(move || {
-                        if let Err(e) = me.handle(stream) {
-                            eprintln!("warning: connection error: {e:#}");
-                        }
-                    });
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("serve-conn-{id}"))
+                        .spawn(move || {
+                            let result = me.handle(stream);
+                            me.release(id);
+                            if let Err(e) = result {
+                                eprintln!("warning: connection error: {e:#}");
+                            }
+                        });
+                    if let Err(e) = spawned {
+                        self.release(id);
+                        return Err(e).context("spawn connection handler");
+                    }
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(e.into());
                 }
-                Err(e) => return Err(e.into()),
             }
         }
+        self.drain();
         Ok(())
     }
 
+    /// Request shutdown from outside a connection: sets the stop flag and
+    /// wakes the blocked acceptor so [`serve`](PredictServer::serve) can
+    /// drain and return.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    /// Unblock the acceptor with a throwaway self-connection (errors are
+    /// irrelevant — if the listener is already gone there is nothing to
+    /// wake).
+    fn wake(&self) {
+        if let Some(addr) = *self.bound.lock().expect("bound lock poisoned") {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Drop a finished connection from the tracked set and signal the
+    /// drain condvar when the set empties.
+    fn release(&self, id: u64) {
+        let mut conns = self.conns.lock().expect("conns lock poisoned");
+        conns.remove(&id);
+        if conns.is_empty() {
+            self.drained.notify_all();
+        }
+    }
+
+    /// Finish in-flight work: shut the read side of every tracked
+    /// connection (idle readers see EOF; requests already received still
+    /// get their responses — only the read half closes), then wait until
+    /// all handlers have released or the deadline passes.
+    fn drain(&self) {
+        let deadline = std::time::Instant::now() + DRAIN_DEADLINE;
+        let mut conns = self.conns.lock().expect("conns lock poisoned");
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        while !conns.is_empty() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                eprintln!(
+                    "warning: shutdown drain timed out with {} connection(s) open",
+                    conns.len()
+                );
+                break;
+            }
+            conns = self
+                .drained
+                .wait_timeout(conns, deadline - now)
+                .expect("conns lock poisoned")
+                .0;
+        }
+    }
+
     fn handle(&self, stream: TcpStream) -> Result<()> {
-        stream.set_nonblocking(false)?;
         let mut writer = stream.try_clone()?;
         let reader = BufReader::new(stream);
         for line in reader.lines() {
@@ -93,13 +236,18 @@ impl PredictServer {
             self.latency.record(started.elapsed());
             writeln!(writer, "{response}")?;
             if self.stop.load(Ordering::SeqCst) {
+                // this connection may have carried the shutdown op — wake
+                // the acceptor so serve() can start the drain
+                self.wake();
                 break;
             }
         }
         Ok(())
     }
 
-    /// Compute the response for one request line (exposed for tests).
+    /// Compute the response for one request line (exposed for tests and
+    /// the serving bench). Malformed input of any kind yields
+    /// `{"ok":false,"error":…}` — never a panic, never a dropped line.
     pub fn respond(&self, line: &str) -> Json {
         match self.respond_inner(line) {
             Ok(j) => j,
@@ -116,30 +264,40 @@ impl PredictServer {
             .get("op")
             .and_then(Json::as_str)
             .context("missing 'op'")?;
+        // one registry snapshot per request: a concurrent install cannot
+        // change the model mid-request, and the response reports exactly
+        // the version that answered it
+        let current = self.registry.current();
         match op {
-            "info" => Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("n_sv", Json::num(self.model.n_sv() as f64)),
-                ("dim", Json::num(self.model.sv.dim() as f64)),
-                (
-                    "kernel",
-                    Json::str(match self.model.kernel {
-                        crate::kernel::Kernel::Rbf { .. } => "rbf",
-                        crate::kernel::Kernel::Linear => "linear",
-                        crate::kernel::Kernel::Poly { .. } => "polynomial",
-                        crate::kernel::Kernel::Sigmoid { .. } => "sigmoid",
-                    }),
-                ),
-                ("served", Json::num(self.served.get() as f64)),
-                ("calibrated", Json::Bool(self.scaler.is_some())),
-            ])),
+            "info" => {
+                let lat = self.latency.summary();
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("model", Json::str(current.model.kind())),
+                    ("version", Json::num(current.version as f64)),
+                    ("tag", Json::str(current.tag.clone())),
+                    ("n_sv", Json::num(current.model.n_sv() as f64)),
+                    ("dim", Json::num(current.model.dim() as f64)),
+                    ("kernel", Json::str(current.model.kernel_name())),
+                    ("served", Json::num(self.served.get() as f64)),
+                    ("calibrated", Json::Bool(current.model.calibrated())),
+                    ("swaps", Json::num(self.registry.swaps() as f64)),
+                    ("latency_p50_us", Json::num(lat.p50.as_micros() as f64)),
+                    ("latency_p99_us", Json::num(lat.p99.as_micros() as f64)),
+                ]))
+            }
             "predict" => {
                 let rows = req
                     .get("rows")
                     .and_then(Json::as_arr)
                     .context("missing 'rows' array")?;
                 anyhow::ensure!(!rows.is_empty(), "empty batch");
-                let dim = self.model.sv.dim();
+                anyhow::ensure!(
+                    rows.len() <= MAX_BATCH,
+                    "batch of {} rows exceeds the {MAX_BATCH}-row limit",
+                    rows.len()
+                );
+                let dim = current.model.dim();
                 let mut data = Vec::with_capacity(rows.len() * dim);
                 for (i, row) in rows.iter().enumerate() {
                     let vals = row
@@ -150,37 +308,62 @@ impl PredictServer {
                         "rows[{i}] has {} features, model expects {dim}",
                         vals.len()
                     );
-                    for v in vals {
-                        data.push(v.as_f64().context("non-numeric feature")? as f32);
+                    for (j, v) in vals.iter().enumerate() {
+                        let f = v
+                            .as_f64()
+                            .with_context(|| format!("rows[{i}][{j}] is not a number"))?;
+                        anyhow::ensure!(f.is_finite(), "rows[{i}][{j}] is not finite");
+                        data.push(f as f32);
                     }
                 }
-                // batch: one bulk decision evaluation for the whole request
+                // batch: one bulk SV-outer evaluation for the whole request
                 let batch = Dataset::new(
                     "request",
                     DataMatrix::dense(rows.len(), dim, data),
                     vec![1.0; rows.len()],
                 );
-                let decisions = self.model.decision_values(&batch);
+                let decisions = current.model.decision_batch(&batch);
                 self.served.add(rows.len() as u64);
-                let labels: Vec<Json> = decisions
-                    .iter()
-                    .map(|&d| Json::num(if d >= 0.0 { 1.0 } else { -1.0 }))
-                    .collect();
                 let mut fields = vec![
                     ("ok", Json::Bool(true)),
+                    ("model", Json::str(current.model.kind())),
+                    ("version", Json::num(current.version as f64)),
                     (
                         "decisions",
                         Json::arr(decisions.iter().map(|&d| Json::num(d))),
                     ),
-                    ("labels", Json::arr(labels)),
                 ];
-                if let Some(s) = &self.scaler {
-                    fields.push((
-                        "probs",
-                        Json::arr(decisions.iter().map(|&d| Json::num(s.prob(d)))),
-                    ));
+                if let Some(labels) = current.model.labels(&decisions) {
+                    fields.push(("labels", Json::arr(labels.into_iter().map(Json::num))));
+                }
+                if let Some(probs) = current.model.probs(&decisions) {
+                    fields.push(("probs", Json::arr(probs.into_iter().map(Json::num))));
                 }
                 Ok(Json::obj(fields))
+            }
+            "swap" => {
+                let path = req
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("missing 'path'")?;
+                let tag = req
+                    .get("tag")
+                    .and_then(Json::as_str)
+                    .unwrap_or(path)
+                    .to_string();
+                let model =
+                    Model::load_file(path).with_context(|| format!("swap: load '{path}'"))?;
+                let version = self.registry.install(
+                    ServeModel::CSvc {
+                        model,
+                        scaler: None,
+                    },
+                    tag,
+                );
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("version", Json::num(version as f64)),
+                ]))
             }
             "shutdown" => {
                 self.stop.store(true, Ordering::SeqCst);
@@ -188,11 +371,6 @@ impl PredictServer {
             }
             other => anyhow::bail!("unknown op '{other}'"),
         }
-    }
-
-    /// Handle for external shutdown (tests).
-    pub fn stop_handle(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
     }
 }
 
@@ -202,59 +380,63 @@ mod tests {
     use crate::kernel::{Kernel, KernelEval};
     use crate::smo::{SmoParams, Solver};
 
-    fn server() -> (PredictServer, Dataset) {
+    fn trained(c: f64) -> (Model, Dataset) {
         let ds = crate::data::synth::generate("heart", Some(60), 3);
         let kernel = Kernel::rbf(0.2);
-        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(2.0));
+        let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
         let r = solver.solve();
-        let model = Model::from_result(&ds, kernel, &r);
+        (Model::from_result(&ds, kernel, &r), ds)
+    }
+
+    fn server() -> (PredictServer, Dataset) {
+        let (model, ds) = trained(2.0);
         (PredictServer::new(model, None), ds)
     }
 
-    #[test]
-    fn info_reports_model() {
-        let (srv, _) = server();
-        let resp = srv.respond(r#"{"op":"info"}"#);
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
-        assert_eq!(resp.get("dim").and_then(Json::as_usize), Some(13));
-        assert!(resp.get("n_sv").and_then(Json::as_usize).unwrap() > 0);
+    fn predict_req(ds: &Dataset, idx: &[usize]) -> String {
+        let rows: Vec<Json> = idx
+            .iter()
+            .map(|&i| Json::arr(ds.x.dense_row(i).iter().map(|&v| Json::num(v as f64))))
+            .collect();
+        Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]).to_string()
     }
 
     #[test]
-    fn predict_batch_matches_model() {
-        let (srv, ds) = server();
-        // request with the first two training rows
-        let rows: Vec<Json> = (0..2)
-            .map(|i| {
-                Json::arr(
-                    ds.x.dense_row(i)
-                        .iter()
-                        .map(|&v| Json::num(v as f64)),
-                )
-            })
-            .collect();
-        let req = Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]);
-        let resp = srv.respond(&req.to_string());
+    fn info_reports_model_and_version() {
+        let (srv, _) = server();
+        let resp = srv.respond(r#"{"op":"info"}"#);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("model").and_then(Json::as_str), Some("csvc"));
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(resp.get("tag").and_then(Json::as_str), Some("startup"));
+        assert_eq!(resp.get("dim").and_then(Json::as_usize), Some(13));
+        assert!(resp.get("n_sv").and_then(Json::as_usize).unwrap() > 0);
+        assert_eq!(resp.get("swaps").and_then(Json::as_usize), Some(0));
+        assert!(resp.get("latency_p99_us").is_some());
+    }
+
+    #[test]
+    fn predict_batch_bit_identical_to_model() {
+        let (srv, ds) = server();
+        let resp = srv.respond(&predict_req(&ds, &[0, 1]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(1));
         let dec = resp.get("decisions").unwrap().as_arr().unwrap();
         assert_eq!(dec.len(), 2);
-        // agree with direct model evaluation
-        let expect = srv.model.decision_values(&ds.select(&[0, 1]));
+        // in-process response holds the exact f64s the model produced
+        let current = srv.registry().current();
+        let expect = current.model.decision_batch(&ds.select(&[0, 1]));
         for (d, e) in dec.iter().zip(&expect) {
-            assert!((d.as_f64().unwrap() - e).abs() < 1e-9);
+            assert_eq!(d.as_f64().unwrap().to_bits(), e.to_bits());
         }
         assert_eq!(srv.served.get(), 2);
     }
 
     #[test]
     fn predict_with_probabilities() {
-        let (mut srv, ds) = server();
-        srv.scaler = Some(crate::smo::PlattScaler { a: -1.5, b: 0.1 });
-        let rows = Json::arr([Json::arr(
-            ds.x.dense_row(0).iter().map(|&v| Json::num(v as f64)),
-        )]);
-        let req = Json::obj(vec![("op", Json::str("predict")), ("rows", rows)]);
-        let resp = srv.respond(&req.to_string());
+        let (model, ds) = trained(2.0);
+        let srv = PredictServer::new(model, Some(PlattScaler { a: -1.5, b: 0.1 }));
+        let resp = srv.respond(&predict_req(&ds, &[0]));
         let probs = resp.get("probs").unwrap().as_arr().unwrap();
         let p = probs[0].as_f64().unwrap();
         assert!((0.0..=1.0).contains(&p));
@@ -267,7 +449,10 @@ mod tests {
             "not json",
             r#"{"op":"nope"}"#,
             r#"{"op":"predict"}"#,
+            r#"{"op":"predict","rows":[]}"#,
             r#"{"op":"predict","rows":[[1.0]]}"#, // wrong dim
+            r#"{"op":"swap"}"#,                   // missing path
+            r#"{"op":"swap","path":"/nonexistent/model.txt"}"#,
         ] {
             let resp = srv.respond(bad);
             assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{bad}");
@@ -276,7 +461,42 @@ mod tests {
     }
 
     #[test]
-    fn tcp_round_trip() {
+    fn swap_over_wire_installs_new_version() {
+        let (srv, _) = server();
+        let (v2, _) = trained(8.0);
+        let path = std::env::temp_dir().join(format!("alphaseed_swap_{}.txt", std::process::id()));
+        v2.save_file(&path).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::str("swap")),
+            ("path", Json::str(path.to_str().unwrap())),
+            ("tag", Json::str("v2")),
+        ]);
+        let resp = srv.respond(&req.to_string());
+        std::fs::remove_file(&path).ok();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(2));
+        let info = srv.respond(r#"{"op":"info"}"#);
+        assert_eq!(info.get("version").and_then(Json::as_usize), Some(2));
+        assert_eq!(info.get("tag").and_then(Json::as_str), Some("v2"));
+        assert_eq!(info.get("swaps").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let (srv, _) = server();
+        let row = format!("[{}]", vec!["0"; 13].join(","));
+        let rows = vec![row; MAX_BATCH + 1].join(",");
+        let resp = srv.respond(&format!(r#"{{"op":"predict","rows":[{rows}]}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("row limit"));
+    }
+
+    #[test]
+    fn tcp_round_trip_and_clean_shutdown() {
         let (srv, ds) = server();
         let srv = Arc::new(srv);
         let srv2 = Arc::clone(&srv);
@@ -287,8 +507,7 @@ mod tests {
         });
         let addr = rx.recv().unwrap();
         let mut conn = TcpStream::connect(addr).unwrap();
-        let row: Vec<String> = ds.x.dense_row(0).iter().map(|v| v.to_string()).collect();
-        writeln!(conn, r#"{{"op":"predict","rows":[[{}]]}}"#, row.join(",")).unwrap();
+        writeln!(conn, "{}", predict_req(&ds, &[0])).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
@@ -296,8 +515,27 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         writeln!(conn, r#"{{"op":"shutdown"}}"#).unwrap();
         line.clear();
-        let _ = reader.read_line(&mut line);
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        // serve() returns only after the drain completes
         handle.join().unwrap();
         assert_eq!(srv.served.get(), 1);
+    }
+
+    #[test]
+    fn shutdown_handle_unblocks_acceptor() {
+        let (srv, _) = server();
+        let srv = Arc::new(srv);
+        let srv2 = Arc::clone(&srv);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            srv2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let _addr = rx.recv().unwrap();
+        // no clients at all: shutdown() must wake the blocking accept
+        srv.shutdown();
+        handle.join().unwrap();
     }
 }

@@ -120,6 +120,24 @@ impl KernelEval {
         self.kernel
             .from_dot(dot, self.ds.sq_norms[i], other.sq_norms[j])
     }
+
+    /// Cross row K(xᵢ, z·) against every row of `other` into `out`
+    /// (len = `other.len()`) — the batched counterpart of [`eval_cross`]:
+    /// one pass over `other` per support vector keeps xᵢ hot instead of
+    /// re-fetching it per query row. Each element is computed by exactly
+    /// the [`eval_cross`] arithmetic, so the fill is bit-identical to the
+    /// pointwise loop (the serving tier's batching guarantee rests on
+    /// this).
+    ///
+    /// [`eval_cross`]: KernelEval::eval_cross
+    pub fn eval_cross_row(&self, i: usize, other: &Dataset, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), other.len());
+        let sq_i = self.ds.sq_norms[i];
+        for (j, o) in out.iter_mut().enumerate() {
+            let dot = self.ds.x.dot_cross(i, &other.x, j);
+            *o = self.kernel.from_dot(dot, sq_i, other.sq_norms[j]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +220,42 @@ mod tests {
         for i in 0..3 {
             for j in 0..3 {
                 assert!((ev.eval_cross(i, &ds, j) - ev.eval(i, j)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_cross_row_bit_identical_to_pointwise() {
+        let ds = toy();
+        let other = Dataset::new(
+            "other",
+            DataMatrix::dense(4, 2, vec![0.5, 0.5, 1.0, 2.0, -0.3, 0.1, 0.0, 0.0]),
+            vec![1.0, -1.0, 1.0, -1.0],
+        );
+        for kernel in [
+            Kernel::rbf(0.7),
+            Kernel::Linear,
+            Kernel::Poly {
+                gamma: 0.5,
+                coef0: 1.0,
+                degree: 3,
+            },
+            Kernel::Sigmoid {
+                gamma: 0.2,
+                coef0: 0.1,
+            },
+        ] {
+            let ev = KernelEval::new(ds.clone(), kernel);
+            let mut row = vec![0.0; other.len()];
+            for i in 0..ds.len() {
+                ev.eval_cross_row(i, &other, &mut row);
+                for j in 0..other.len() {
+                    assert_eq!(
+                        row[j].to_bits(),
+                        ev.eval_cross(i, &other, j).to_bits(),
+                        "kernel {kernel:?} i={i} j={j}"
+                    );
+                }
             }
         }
     }

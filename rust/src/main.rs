@@ -8,17 +8,25 @@
 //!   datagen     write a synthetic analogue as a LibSVM file
 //!   experiment  regenerate the paper's tables/figure (table1|table2|table3|fig2|all)
 //!   probe       measure PJRT artifact dispatch overhead vs native
+//!   serve       batched, hot-swappable TCP/JSON-lines prediction service
+//!   benchgate   CI bench-regression gate over committed baselines
 
 use alphaseed::config::RunConfig;
-use alphaseed::coordinator::experiments;
+use alphaseed::coordinator::{experiments, ModelRegistry, PredictServer, ServeModel};
 use alphaseed::cv::CvReport;
 use alphaseed::data::{read_libsvm, synth, write_libsvm};
 use alphaseed::kernel::{Kernel, KernelEval};
 use alphaseed::metrics::Table;
 use alphaseed::multiclass::MultiDataset;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
-use alphaseed::smo::{Model, SmoParams, Solver};
-use alphaseed::util::bench::{check_bench_regression, render_gate_report, GateTolerance};
+use alphaseed::smo::problem::solver_for;
+use alphaseed::smo::{
+    Model, OneClassModel, OneClassProblem, QpProblem, SmoParams, Solver, SvrModel, SvrProblem,
+};
+use alphaseed::util::bench::{
+    check_bench_regression, check_serve_regression, render_gate_report, render_serve_gate_report,
+    GateTolerance, ServeGateTolerance,
+};
 use alphaseed::util::cli::{Args, Task};
 use alphaseed::util::json::Json;
 use alphaseed::util::timing::fmt_secs;
@@ -63,7 +71,7 @@ fn print_help() {
     println!(
         "alphaseed — SVM k-fold cross-validation with alpha seeding (AAAI'17 reproduction)\n\
          \n\
-         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe|ovo|benchgate> [options]\n\
+         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe|ovo|serve|benchgate> [options]\n\
          \n\
          common options:\n\
            --task <t>          csvc|svr|oneclass|multiclass    (default csvc)\n\
@@ -90,11 +98,16 @@ fn print_help() {
            --threads <int>     concurrent cells/chains, 0 = auto (default 0)\n\
            --warm-c            chain ascending C per gamma (Chu et al. reuse)\n\
            --eps-grid <list>   SVR tube-width axis (with --task svr)\n\
+         serve options:\n\
+           --task <t>          csvc|svr|oneclass model to train and serve\n\
+           --port <int>        TCP port (default 7878; 0 picks a free port)\n\
+           --probs             Platt-calibrate C-SVC probabilities (seeded CV)\n\
          benchgate options:\n\
            --current <file>    freshly emitted BENCH_*.json\n\
            --baseline <file>   committed BENCH_*.baseline.json\n\
            --iter-tol <f>      relative iteration-ratio tolerance (default 0.05)\n\
            --init-frac-tol <f> absolute init-fraction tolerance   (default 0.15)\n\
+           --speedup-tol <f>   relative serve batching-ratio slack (default 0.5)\n\
            --report <file>     also write a markdown ratio summary (CI artifact)\n\
          experiment options:\n\
            --scale <f>         scale dataset sizes (default 1.0)\n\
@@ -638,37 +651,81 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Train (+ optionally calibrate) a model and serve predictions over
-/// TCP/JSON lines: `alphaseed serve --dataset heart --port 7878 --probs`.
+/// Train the requested `--task` model (C-SVC with optional Platt
+/// calibration, ε-SVR, or one-class), install it as version 1 of a
+/// [`ModelRegistry`], and serve batched predictions over TCP/JSON lines:
+/// `alphaseed serve --dataset heart --port 7878 --probs`,
+/// `alphaseed serve --task svr --dataset sinc`,
+/// `alphaseed serve --task oneclass --nu 0.1`. A live
+/// `{"op":"swap","path":…}` request hot-swaps the served model without
+/// dropping connections.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (ds, c, gamma) = load_dataset(args)?;
+    let task = args.parse_or("task", Task::CSvc)?;
+    if args.flag("probs") && task != Task::CSvc {
+        bail!("--probs calibrates C-SVC decision values; --task {task} serves raw decisions");
+    }
+    let model = match task {
+        Task::CSvc => {
+            let (ds, c, gamma) = load_dataset(args)?;
+            let kernel = Kernel::rbf(gamma);
+            let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
+            let r = solver.solve();
+            let model = Model::from_result(&ds, kernel, &r);
+            let scaler = if args.flag("probs") {
+                println!("calibrating probabilities via SIR-seeded 5-fold CV…");
+                Some(alphaseed::smo::PlattScaler::fit_from_cv(
+                    &ds,
+                    kernel,
+                    c,
+                    5,
+                    &alphaseed::seeding::Sir,
+                    42,
+                ))
+            } else {
+                None
+            };
+            ServeModel::CSvc { model, scaler }
+        }
+        Task::Svr => {
+            let (ds, c, gamma, epsilon) = load_regression_dataset(args)?;
+            let kernel = Kernel::rbf(gamma);
+            let problem = SvrProblem { c, epsilon };
+            let mut solver = solver_for(&problem, &ds, kernel, SmoParams::with_c(c));
+            let r = solver.solve();
+            ServeModel::Svr {
+                model: SvrModel::from_result(&ds, kernel, &r),
+            }
+        }
+        Task::OneClass => {
+            let seed = args.parse_or::<u64>("seed", 42)?;
+            let n = args.opt_parse::<usize>("n")?;
+            let outlier_frac = args.parse_or("outlier-frac", 0.1f64)?;
+            let ds = synth::generate_outliers(n, outlier_frac, seed);
+            let nu = args.parse_or("nu", 0.15f64)?;
+            let kernel = Kernel::rbf(args.parse_or("gamma", 1.0f64)?);
+            let problem = OneClassProblem { nu };
+            let mut solver = solver_for(&problem, &ds, kernel, SmoParams::default());
+            let beta0 = problem.initial_alpha(&ds);
+            let r = solver.solve_from(beta0, None);
+            ServeModel::OneClass {
+                model: OneClassModel::from_result(&ds, kernel, &r),
+            }
+        }
+        Task::Multiclass => {
+            bail!("serve supports --task csvc|svr|oneclass; one-vs-one ensembles are not wired yet")
+        }
+    };
     let port = args.parse_or("port", 7878u16)?;
-    let want_probs = args.flag("probs");
     args.reject_unknown()?;
 
-    let kernel = Kernel::rbf(gamma);
-    let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
-    let r = solver.solve();
-    let model = Model::from_result(&ds, kernel, &r);
-    let scaler = if want_probs {
-        println!("calibrating probabilities via SIR-seeded 5-fold CV…");
-        Some(alphaseed::smo::PlattScaler::fit_from_cv(
-            &ds,
-            kernel,
-            c,
-            5,
-            &alphaseed::seeding::Sir,
-            42,
-        ))
-    } else {
-        None
-    };
     println!(
-        "model trained: {} SVs, b = {:.4}; serving on 127.0.0.1:{port}",
+        "{} model trained: {} SVs ({}-d); serving on 127.0.0.1:{port}",
+        model.kind(),
         model.n_sv(),
-        model.b
+        model.dim()
     );
-    let server = std::sync::Arc::new(alphaseed::coordinator::PredictServer::new(model, scaler));
+    let registry = std::sync::Arc::new(ModelRegistry::new(model, "startup"));
+    let server = std::sync::Arc::new(PredictServer::with_registry(registry));
     server.serve(&format!("127.0.0.1:{port}"), |addr| {
         println!("listening on {addr} — send {{\"op\":\"predict\",\"rows\":[[…]]}} lines");
     })?;
@@ -854,9 +911,12 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
 
 /// Gate a freshly emitted `BENCH_*.json` against a committed baseline —
 /// the CI regression check: `alphaseed benchgate --current BENCH_cv.json
-/// --baseline BENCH_cv.baseline.json [--report BENCHGATE.md]`. With
-/// `--report` a markdown summary of the seeded-vs-cold ratios is written
-/// on pass *and* fail (CI uploads it as a PR artifact either way).
+/// --baseline BENCH_cv.baseline.json [--report BENCHGATE.md]`. The record
+/// shape picks the gate: documents with a `serving` object (what
+/// `table_serve` emits) go through the batching-ratio + p99 serve gate,
+/// everything else through the seeded-vs-cold iteration gate. With
+/// `--report` a markdown summary is written on pass *and* fail (CI
+/// uploads it as a PR artifact either way).
 fn cmd_benchgate(args: &Args) -> Result<()> {
     let current_path = args.req_str("current")?;
     let baseline_path = args.req_str("baseline")?;
@@ -864,6 +924,9 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     let tol = GateTolerance {
         iter_ratio: args.parse_or("iter-tol", GateTolerance::default().iter_ratio)?,
         init_fraction: args.parse_or("init-frac-tol", GateTolerance::default().init_fraction)?,
+    };
+    let serve_tol = ServeGateTolerance {
+        speedup: args.parse_or("speedup-tol", ServeGateTolerance::default().speedup)?,
     };
     args.reject_unknown()?;
     let read = |path: &str| -> Result<Json> {
@@ -873,13 +936,23 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     };
     let current = read(&current_path)?;
     let baseline = read(&baseline_path)?;
+    let is_serve = baseline.get("serving").is_some() || current.get("serving").is_some();
     if let Some(report_path) = &report_path {
-        let md = render_gate_report(&current_path, &baseline_path, &current, &baseline, &tol);
+        let md = if is_serve {
+            render_serve_gate_report(&current_path, &baseline_path, &current, &baseline, &serve_tol)
+        } else {
+            render_gate_report(&current_path, &baseline_path, &current, &baseline, &tol)
+        };
         std::fs::write(report_path, md)
             .with_context(|| format!("writing gate report {report_path}"))?;
         println!("wrote gate report to {report_path}");
     }
-    match check_bench_regression(&current, &baseline, &tol) {
+    let outcome = if is_serve {
+        check_serve_regression(&current, &baseline, &serve_tol)
+    } else {
+        check_bench_regression(&current, &baseline, &tol)
+    };
+    match outcome {
         Ok(passed) => {
             for p in &passed {
                 println!("PASS {p}");

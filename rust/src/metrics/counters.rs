@@ -72,6 +72,18 @@ impl Histogram {
         std::time::Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
     }
 
+    /// Point-in-time snapshot (count / mean / p50 / p99) — the summary
+    /// the predict server reports over the wire and the saturation bench
+    /// gates its latency target on.
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+        }
+    }
+
     /// Approximate quantile from bucket boundaries (upper edge).
     pub fn quantile(&self, q: f64) -> std::time::Duration {
         let total = self.count();
@@ -88,6 +100,20 @@ impl Histogram {
         }
         std::time::Duration::from_micros(1u64 << N_BUCKETS)
     }
+}
+
+/// One [`Histogram::summary`] snapshot. Quantiles carry the histogram's
+/// bucket granularity (power-of-two microsecond upper edges).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSummary {
+    /// Samples recorded so far.
+    pub count: u64,
+    /// Mean of the recorded durations.
+    pub mean: std::time::Duration,
+    /// Median (bucket upper edge).
+    pub p50: std::time::Duration,
+    /// 99th percentile (bucket upper edge).
+    pub p99: std::time::Duration,
 }
 
 #[cfg(test)]
@@ -121,5 +147,21 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn summary_matches_accessors() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.summary();
+        assert_eq!(s.count, h.count());
+        assert_eq!(s.mean, h.mean());
+        assert_eq!(s.p50, h.quantile(0.5));
+        assert_eq!(s.p99, h.quantile(0.99));
+        let empty = Histogram::new().summary();
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99, Duration::ZERO);
     }
 }

@@ -5,5 +5,5 @@
 mod counters;
 mod table;
 
-pub use counters::{Counter, Histogram};
+pub use counters::{Counter, Histogram, HistogramSummary};
 pub use table::Table;

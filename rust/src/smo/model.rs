@@ -23,7 +23,18 @@ pub struct Model {
 }
 
 /// Σᵢ coefᵢ·K(svᵢ, xⱼ) − b for every row of `data` — the one kernel-sum
-/// loop all three model kinds share.
+/// loop all three model kinds share, and the batching layer the serving
+/// tier rides on: the outer loop walks the *support vectors* and fills
+/// one cross kernel row over the whole batch per SV
+/// ([`KernelEval::eval_cross_row`]), so each SV row is fetched once per
+/// batch instead of once per query row.
+///
+/// Swapping the loop nesting never changes results: for every output j
+/// the terms `coefᵢ·K(svᵢ, xⱼ)` are still accumulated in ascending-i
+/// order with the bias subtracted last — the exact operation sequence of
+/// the per-row path ([`Model::decision_one`]) — so batched decisions are
+/// bit-identical to per-row evaluation (pinned in the tests below and in
+/// `tests/serve_protocol.rs`).
 fn kernel_sums_minus_b(
     sv: &Dataset,
     coef: &[f64],
@@ -32,15 +43,18 @@ fn kernel_sums_minus_b(
     data: &Dataset,
 ) -> Vec<f64> {
     let ev = KernelEval::new(sv.clone(), kernel);
-    (0..data.len())
-        .map(|j| {
-            let mut acc = 0.0;
-            for (i, &c) in coef.iter().enumerate() {
-                acc += c * ev.eval_cross(i, data, j);
-            }
-            acc - b
-        })
-        .collect()
+    let mut acc = vec![0.0; data.len()];
+    let mut krow = vec![0.0; data.len()];
+    for (i, &c) in coef.iter().enumerate() {
+        ev.eval_cross_row(i, data, &mut krow);
+        for (a, &k) in acc.iter_mut().zip(&krow) {
+            *a += c * k;
+        }
+    }
+    for a in &mut acc {
+        *a -= b;
+    }
+    acc
 }
 
 impl Model {
@@ -136,6 +150,17 @@ impl SvrModel {
         self.coef.len()
     }
 
+    /// Predicted regression value for row `j` of `data` — the per-row
+    /// reference path batched prediction must match bit-for-bit.
+    pub fn predict_one(&self, data: &Dataset, j: usize) -> f64 {
+        let ev = KernelEval::new(self.sv.clone(), self.kernel);
+        let mut acc = 0.0;
+        for (i, &c) in self.coef.iter().enumerate() {
+            acc += c * ev.eval_cross(i, data, j);
+        }
+        acc - self.b
+    }
+
     /// Predicted regression values for every row of `data`.
     pub fn predict(&self, data: &Dataset) -> Vec<f64> {
         kernel_sums_minus_b(&self.sv, &self.coef, self.b, self.kernel, data)
@@ -189,6 +214,17 @@ impl OneClassModel {
         self.coef.len()
     }
 
+    /// Decision value for row `j` of `data` — the per-row reference path
+    /// batched evaluation must match bit-for-bit.
+    pub fn decision_one(&self, data: &Dataset, j: usize) -> f64 {
+        let ev = KernelEval::new(self.sv.clone(), self.kernel);
+        let mut acc = 0.0;
+        for (i, &c) in self.coef.iter().enumerate() {
+            acc += c * ev.eval_cross(i, data, j);
+        }
+        acc - self.b
+    }
+
     /// Decision values for every row of `data` (≥ 0 ⇒ inlier).
     pub fn decision_values(&self, data: &Dataset) -> Vec<f64> {
         kernel_sums_minus_b(&self.sv, &self.coef, self.b, self.kernel, data)
@@ -238,9 +274,11 @@ mod tests {
     #[test]
     fn decision_one_matches_bulk() {
         let (ds, model) = train_simple();
+        // the batched (SV-outer) pass is bit-identical to the per-row
+        // reference, not merely close — the serving tier's contract
         let bulk = model.decision_values(&ds);
-        for j in [0usize, 7, 23, 39] {
-            assert!((model.decision_one(&ds, j) - bulk[j]).abs() < 1e-12);
+        for (j, d) in bulk.iter().enumerate() {
+            assert_eq!(d.to_bits(), model.decision_one(&ds, j).to_bits(), "row {j}");
         }
     }
 
@@ -279,6 +317,11 @@ mod tests {
         // training MSE should be small for a smooth 1-d function
         let mse = model.mse(&ds);
         assert!(mse < 0.05, "training MSE {mse}");
+        // batched prediction is bit-identical to the per-row path
+        let bulk = model.predict(&ds);
+        for (j, p) in bulk.iter().enumerate() {
+            assert_eq!(p.to_bits(), model.predict_one(&ds, j).to_bits(), "row {j}");
+        }
     }
 
     #[test]
@@ -298,6 +341,11 @@ mod tests {
         assert!(frac >= 0.2 - 0.05, "SV fraction {frac} below nu");
         for p in model.predict(&ds) {
             assert!(p == 1.0 || p == -1.0);
+        }
+        // batched decisions are bit-identical to the per-row path
+        let bulk = model.decision_values(&ds);
+        for (j, d) in bulk.iter().enumerate() {
+            assert_eq!(d.to_bits(), model.decision_one(&ds, j).to_bits(), "row {j}");
         }
     }
 }

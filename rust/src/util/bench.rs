@@ -314,6 +314,217 @@ pub fn render_gate_report(
     out
 }
 
+// ---- the serving bench gate ------------------------------------------------
+
+/// Tolerances for [`check_serve_regression`].
+#[derive(Debug, Clone)]
+pub struct ServeGateTolerance {
+    /// Relative slack on the *batched-vs-single throughput ratio*
+    /// (`batch_rps / single_rps`) per model kind. Throughputs are
+    /// wall-clock based and noisy on shared runners, so the default is
+    /// deliberately generous: 0.5 means the gate only fires when the
+    /// batching advantage collapses below half the baseline's ratio — a
+    /// structural regression (e.g. batching silently degrading to a
+    /// per-row loop), not scheduler jitter.
+    pub speedup: f64,
+}
+
+impl Default for ServeGateTolerance {
+    fn default() -> Self {
+        ServeGateTolerance { speedup: 0.5 }
+    }
+}
+
+/// Compare a `BENCH_serve.json` against its committed baseline — the
+/// serving counterpart of [`check_bench_regression`], keyed on the record
+/// shape (`serving` object) rather than `per_seeder`.
+///
+/// Gates, all driven by what the *baseline* declares:
+///
+/// 1. **coverage** — every model kind in the baseline's `serving` object
+///    must appear in the current run with numeric `single_rps` and
+///    `batch_rps` (a vanished kind is a coverage loss, exactly like a
+///    missing seeder in the CV gate).
+/// 2. **batching ratio** — per kind, `batch_rps / single_rps` must stay
+///    above the baseline's ratio minus [`ServeGateTolerance::speedup`]
+///    (relative). The ratio divides out machine speed, so only the
+///    *shape* of the batching advantage is gated.
+/// 3. **saturation p99** — the current `saturation.p99_us` must not
+///    exceed the baseline's `p99_target_us` latency budget (absolute; the
+///    committed target leaves orders-of-magnitude headroom over observed
+///    latencies precisely so shared runners cannot trip it).
+pub fn check_serve_regression(
+    current: &Json,
+    baseline: &Json,
+    tol: &ServeGateTolerance,
+) -> Result<Vec<String>, Vec<String>> {
+    let field = |doc: &Json, kind: &str, key: &str| -> Option<f64> {
+        doc.get("serving")?.get(kind)?.get(key)?.as_f64()
+    };
+    let base_kinds: Vec<String> = match baseline.get("serving").and_then(Json::as_obj) {
+        Some(map) => map.keys().cloned().collect(),
+        None => return Err(vec!["baseline has no serving object".into()]),
+    };
+
+    let mut passed = Vec::new();
+    let mut failures = Vec::new();
+    for kind in base_kinds {
+        let (Some(base_single), Some(base_batch)) = (
+            field(baseline, &kind, "single_rps"),
+            field(baseline, &kind, "batch_rps"),
+        ) else {
+            failures.push(format!(
+                "baseline entry for '{kind}' lacks numeric single_rps/batch_rps"
+            ));
+            continue;
+        };
+        let (Some(cur_single), Some(cur_batch)) = (
+            field(current, &kind, "single_rps"),
+            field(current, &kind, "batch_rps"),
+        ) else {
+            failures.push(format!("kind '{kind}' missing from the current bench"));
+            continue;
+        };
+        if base_single <= 0.0 || cur_single <= 0.0 {
+            failures.push(format!(
+                "'{kind}' single_rps must be positive (current {cur_single}, \
+                 baseline {base_single})"
+            ));
+            continue;
+        }
+        let cur_ratio = cur_batch / cur_single;
+        let base_ratio = base_batch / base_single;
+        let limit = base_ratio * (1.0 - tol.speedup);
+        if cur_ratio < limit - 1e-12 {
+            failures.push(format!(
+                "{kind}: batched-vs-single throughput ratio {cur_ratio:.3} fell below \
+                 baseline {base_ratio:.3} (−{:.0}% tolerance = {limit:.3})",
+                tol.speedup * 100.0
+            ));
+        } else {
+            passed.push(format!(
+                "{kind}: batching ratio {cur_ratio:.3} ≥ limit {limit:.3}"
+            ));
+        }
+    }
+
+    if let Some(target) = baseline.get("p99_target_us").and_then(Json::as_f64) {
+        match current
+            .get("saturation")
+            .and_then(|s| s.get("p99_us"))
+            .and_then(Json::as_f64)
+        {
+            Some(p99) if p99 <= target + 1e-12 => {
+                passed.push(format!("saturation p99 {p99:.0}µs ≤ target {target:.0}µs"));
+            }
+            Some(p99) => {
+                failures.push(format!(
+                    "saturation p99 {p99:.0}µs exceeds the {target:.0}µs latency target"
+                ));
+            }
+            None => {
+                failures.push(
+                    "current bench lacks saturation.p99_us (baseline gates on it)".into(),
+                );
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        Ok(passed)
+    } else {
+        Err(failures)
+    }
+}
+
+/// Markdown rendering of one [`check_serve_regression`] comparison — the
+/// `BENCHGATE_serve.md` artifact CI uploads. One row per baseline model
+/// kind (current vs baseline batching ratio and the tolerance-adjusted
+/// floor), a saturation-latency line, and the overall verdict. Purely a
+/// rendering of the gated fields; it never alters the gate outcome.
+pub fn render_serve_gate_report(
+    current_name: &str,
+    baseline_name: &str,
+    current: &Json,
+    baseline: &Json,
+    tol: &ServeGateTolerance,
+) -> String {
+    let field = |doc: &Json, kind: &str, key: &str| -> Option<f64> {
+        doc.get("serving")?.get(kind)?.get(key)?.as_f64()
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Serve gate: `{current_name}` vs `{baseline_name}`\n\n"
+    ));
+    let Some(base_map) = baseline.get("serving").and_then(Json::as_obj) else {
+        out.push_str("**FAIL** — baseline has no `serving` object\n");
+        return out;
+    };
+    out.push_str(&format!(
+        "| kind | batch/single | baseline | floor (−{:.0}%) | status |\n",
+        tol.speedup * 100.0
+    ));
+    out.push_str("|------|-------------:|---------:|------:|--------|\n");
+    for kind in base_map.keys() {
+        let (cells, ok) = match (
+            field(current, kind, "single_rps"),
+            field(current, kind, "batch_rps"),
+            field(baseline, kind, "single_rps"),
+            field(baseline, kind, "batch_rps"),
+        ) {
+            (Some(cs), Some(cb), Some(bs), Some(bb)) if cs > 0.0 && bs > 0.0 => {
+                let (cur_ratio, base_ratio) = (cb / cs, bb / bs);
+                let limit = base_ratio * (1.0 - tol.speedup);
+                (
+                    format!("{cur_ratio:.3} | {base_ratio:.3} | {limit:.3}"),
+                    cur_ratio >= limit - 1e-12,
+                )
+            }
+            _ => ("missing | — | —".to_string(), false),
+        };
+        out.push_str(&format!(
+            "| {kind} | {cells} | {} |\n",
+            if ok { "PASS" } else { "**FAIL**" }
+        ));
+    }
+    out.push('\n');
+    if let Some(target) = baseline.get("p99_target_us").and_then(Json::as_f64) {
+        match current
+            .get("saturation")
+            .and_then(|s| s.get("p99_us"))
+            .and_then(Json::as_f64)
+        {
+            Some(p99) => out.push_str(&format!(
+                "saturation p99: {p99:.0}µs (target {target:.0}µs) — {}\n\n",
+                if p99 <= target + 1e-12 {
+                    "PASS"
+                } else {
+                    "**FAIL**"
+                }
+            )),
+            None => out.push_str(&format!(
+                "saturation p99: missing (target {target:.0}µs) — **FAIL**\n\n"
+            )),
+        }
+    }
+    match check_serve_regression(current, baseline, tol) {
+        Ok(passed) => {
+            out.push_str(&format!("**verdict: PASS** ({} checks)\n", passed.len()));
+        }
+        Err(failures) => {
+            out.push_str(&format!(
+                "**verdict: FAIL** ({} regression{})\n\n",
+                failures.len(),
+                if failures.len() == 1 { "" } else { "s" }
+            ));
+            for f in &failures {
+                out.push_str(&format!("- {f}\n"));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,5 +688,103 @@ mod tests {
             failures.iter().any(|f| f.contains("lacks init_fraction")),
             "{failures:?}"
         );
+    }
+
+    fn serve_doc(batch_rps: f64, p99_us: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"p99_target_us": 50000,
+                "serving": {{
+                    "csvc": {{"single_rps": 1000.0, "batch_rps": {batch_rps}}},
+                    "svr": {{"single_rps": 800.0, "batch_rps": 1200.0}}
+                }},
+                "saturation": {{"p99_us": {p99_us}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_gate_passes_within_tolerance() {
+        let baseline = serve_doc(2000.0, 400.0); // csvc ratio 2.0
+        let current = serve_doc(1500.0, 900.0); // ratio 1.5 ≥ 2.0·0.5
+        let passed =
+            check_serve_regression(&current, &baseline, &ServeGateTolerance::default()).unwrap();
+        assert!(passed.iter().any(|p| p.contains("batching ratio")));
+        assert!(passed.iter().any(|p| p.contains("saturation p99")));
+    }
+
+    #[test]
+    fn serve_gate_fails_when_batching_collapses() {
+        let baseline = serve_doc(2000.0, 400.0); // csvc ratio 2.0
+        let current = serve_doc(800.0, 400.0); // ratio 0.8 < 1.0 floor
+        let failures =
+            check_serve_regression(&current, &baseline, &ServeGateTolerance::default())
+                .unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("throughput ratio")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn serve_gate_fails_on_latency_target() {
+        let baseline = serve_doc(2000.0, 400.0);
+        let current = serve_doc(2000.0, 60000.0); // p99 over the 50ms target
+        let failures =
+            check_serve_regression(&current, &baseline, &ServeGateTolerance::default())
+                .unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("latency target")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn serve_gate_fails_on_missing_kind() {
+        let baseline = serve_doc(2000.0, 400.0);
+        let current = Json::parse(
+            r#"{"serving": {"csvc": {"single_rps": 1000.0, "batch_rps": 2000.0}},
+                "saturation": {"p99_us": 400.0}}"#,
+        )
+        .unwrap();
+        let failures =
+            check_serve_regression(&current, &baseline, &ServeGateTolerance::default())
+                .unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("'svr' missing")),
+            "{failures:?}"
+        );
+        // and a malformed baseline is an error, not a panic
+        let empty = Json::parse("{}").unwrap();
+        assert!(
+            check_serve_regression(&current, &empty, &ServeGateTolerance::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn serve_report_renders_pass_and_fail() {
+        let baseline = serve_doc(2000.0, 400.0);
+        let good = serve_doc(1900.0, 500.0);
+        let md = render_serve_gate_report(
+            "BENCH_serve.json",
+            "BENCH_serve.baseline.json",
+            &good,
+            &baseline,
+            &ServeGateTolerance::default(),
+        );
+        assert!(md.contains("## Serve gate"), "{md}");
+        assert!(md.contains("| csvc |"), "{md}");
+        assert!(md.contains("**verdict: PASS**"), "{md}");
+        assert!(!md.contains("**FAIL**"), "{md}");
+
+        let bad = serve_doc(500.0, 60000.0);
+        let md = render_serve_gate_report(
+            "BENCH_serve.json",
+            "BENCH_serve.baseline.json",
+            &bad,
+            &baseline,
+            &ServeGateTolerance::default(),
+        );
+        assert!(md.contains("**verdict: FAIL**"), "{md}");
+        assert!(md.contains("latency target"), "{md}");
     }
 }

@@ -1,0 +1,240 @@
+//! Serving-tier integration: hot-swap under sustained concurrent load,
+//! clean shutdown while clients are streaming, and the grid→serving
+//! promote hook — all over real TCP connections.
+//!
+//! The protocol is strict ping-pong per client (send one request, read
+//! its response before sending the next), which is also what makes the
+//! shutdown test deterministic: a ping-pong client never has an unread
+//! response in flight when it sends, so every response the server wrote
+//! is provably received — "zero dropped responses" is an equality against
+//! the server's own `served` counter, not a heuristic.
+
+use alphaseed::coordinator::{grid_search, promote_best_csvc, ModelRegistry, PredictServer};
+use alphaseed::data::{synth, Dataset};
+use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::smo::{Model, SmoParams, Solver};
+use alphaseed::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::Duration;
+
+fn train(ds: &Dataset, c: f64, gamma: f64) -> Model {
+    let kernel = Kernel::rbf(gamma);
+    let mut solver = Solver::new(KernelEval::new(ds.clone(), kernel), SmoParams::with_c(c));
+    let r = solver.solve();
+    Model::from_result(ds, kernel, &r)
+}
+
+fn predict_req(ds: &Dataset, idx: &[usize]) -> String {
+    let rows: Vec<Json> = idx
+        .iter()
+        .map(|&i| Json::arr(ds.x.dense_row(i).iter().map(|&v| Json::num(v as f64))))
+        .collect();
+    Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]).to_string()
+}
+
+/// Start `srv` on an ephemeral port; returns the address and a receiver
+/// that yields once `serve` has returned (i.e. the drain completed).
+fn spawn_server(srv: &Arc<PredictServer>) -> (std::net::SocketAddr, mpsc::Receiver<()>) {
+    let me = Arc::clone(srv);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        me.serve("127.0.0.1:0", move |addr| addr_tx.send(addr).unwrap())
+            .expect("serve failed");
+        done_tx.send(()).ok();
+    });
+    (addr_rx.recv().expect("server never bound"), done_rx)
+}
+
+/// Read one response line. `None` means the connection ended (EOF or
+/// reset after shutdown) — a *partial* line still parses or panics, so a
+/// torn response can never be silently counted.
+fn read_json(reader: &mut BufReader<TcpStream>, line: &mut String) -> Option<Json> {
+    line.clear();
+    match reader.read_line(line) {
+        Ok(0) | Err(_) => None,
+        Ok(_) => Some(Json::parse(line.trim()).expect("response is complete JSON")),
+    }
+}
+
+#[test]
+fn hot_swap_under_sustained_load() {
+    const CLIENTS: usize = 4;
+    const PHASE1: usize = 30;
+    const PHASE2: usize = 10;
+    let ds = Arc::new(synth::generate("heart", Some(60), 3));
+    let v1 = train(&ds, 2.0, 0.2);
+    let v2 = train(&ds, 8.0, 0.2);
+    // expected post-swap decisions, straight from the v2 model (the wire
+    // carries shortest-round-trip f64s, so bit equality survives the text)
+    let expect_v2: Arc<Vec<u64>> =
+        Arc::new((0..PHASE2).map(|r| v2.decision_one(&ds, r).to_bits()).collect());
+
+    let registry = Arc::new(ModelRegistry::new(
+        alphaseed::coordinator::ServeModel::CSvc {
+            model: v1,
+            scaler: None,
+        },
+        "v1",
+    ));
+    let srv = Arc::new(PredictServer::with_registry(Arc::clone(&registry)));
+    let (addr, done) = spawn_server(&srv);
+
+    // barrier parties: all clients (after phase 1) + main (after install)
+    let swapped = Arc::new(Barrier::new(CLIENTS + 1));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let ds = Arc::clone(&ds);
+            let expect_v2 = Arc::clone(&expect_v2);
+            let swapped = Arc::clone(&swapped);
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                let mut line = String::new();
+                // phase 1: stream while the install happens concurrently —
+                // responses may carry v1 or v2, but never fail, and the
+                // version a connection observes only moves forward
+                let mut last = 0u64;
+                for r in 0..PHASE1 {
+                    writeln!(conn, "{}", predict_req(&ds, &[r % ds.len()])).expect("send");
+                    let resp = read_json(&mut reader, &mut line).expect("response");
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                    let version = resp.get("version").and_then(Json::as_usize).unwrap() as u64;
+                    assert!((1..=2).contains(&version), "unexpected version {version}");
+                    assert!(version >= last, "version went backwards: {last} -> {version}");
+                    last = version;
+                }
+                swapped.wait();
+                // phase 2: the install has landed — every response must
+                // report v2 and match the v2 model bit-for-bit
+                for r in 0..PHASE2 {
+                    writeln!(conn, "{}", predict_req(&ds, &[r])).expect("send");
+                    let resp = read_json(&mut reader, &mut line).expect("response");
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                    assert_eq!(resp.get("version").and_then(Json::as_usize), Some(2));
+                    let dec = resp.get("decisions").unwrap().as_arr().unwrap();
+                    let d0 = dec[0].as_f64().unwrap();
+                    assert_eq!(
+                        d0.to_bits(),
+                        expect_v2[r],
+                        "post-swap decision for row {r} diverged from v2"
+                    );
+                }
+            })
+        })
+        .collect();
+
+    // promote v2 while phase-1 traffic is in full flight
+    std::thread::sleep(Duration::from_millis(20));
+    let version = registry.install(
+        alphaseed::coordinator::ServeModel::CSvc {
+            model: v2,
+            scaler: None,
+        },
+        "v2",
+    );
+    assert_eq!(version, 2);
+    swapped.wait();
+
+    for c in clients {
+        c.join().expect("client panicked");
+    }
+    // zero dropped: every request of every phase got an ok response
+    assert_eq!(srv.served.get(), (CLIENTS * (PHASE1 + PHASE2)) as u64);
+    srv.shutdown();
+    done.recv_timeout(Duration::from_secs(10))
+        .expect("serve did not return after shutdown");
+}
+
+#[test]
+fn shutdown_under_load_drains_in_flight_responses() {
+    const CLIENTS: usize = 3;
+    let ds = Arc::new(synth::generate("heart", Some(60), 3));
+    let srv = Arc::new(PredictServer::new(train(&ds, 2.0, 0.2), None));
+    let (addr, done) = spawn_server(&srv);
+
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let ds = Arc::clone(&ds);
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                let mut line = String::new();
+                let mut answered = 0usize;
+                // stream until the drain cuts the connection; ping-pong, so
+                // a send error or EOF can never strand an unread response
+                for r in 0.. {
+                    if writeln!(conn, "{}", predict_req(&ds, &[r % ds.len()])).is_err() {
+                        break;
+                    }
+                    match read_json(&mut reader, &mut line) {
+                        Some(resp) => {
+                            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                            answered += 1;
+                        }
+                        None => break,
+                    }
+                }
+                answered
+            })
+        })
+        .collect();
+
+    // let the load ramp, then shut down from outside any connection
+    std::thread::sleep(Duration::from_millis(80));
+    srv.shutdown();
+    done.recv_timeout(Duration::from_secs(10))
+        .expect("serve did not drain within the deadline");
+
+    let answered: usize = clients.into_iter().map(|c| c.join().expect("client")).sum();
+    // every response the server wrote was received and parsed complete —
+    // shutdown dropped nothing that was already answered
+    assert_eq!(answered as u64, srv.served.get());
+    assert!(answered > 0, "no requests were served before shutdown");
+}
+
+#[test]
+fn grid_promote_while_serving() {
+    let ds = synth::generate("heart", Some(70), 3);
+    let srv = Arc::new(PredictServer::new(train(&ds, 1.0, 0.7), None));
+    let (addr, done) = spawn_server(&srv);
+
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+    let mut line = String::new();
+    writeln!(conn, "{}", predict_req(&ds, &[0])).unwrap();
+    let resp = read_json(&mut reader, &mut line).expect("response");
+    assert_eq!(resp.get("version").and_then(Json::as_usize), Some(1));
+
+    // grid-search and promote the winner into the live server's registry
+    let g = grid_search(&ds, &[0.5, 2.0], &[0.1, 0.3], 3, "sir", 2, 7);
+    let version = promote_best_csvc(&ds, &g, &srv.registry());
+    assert_eq!(version, 2);
+
+    // the connection opened before the promote now answers from v2
+    writeln!(conn, "{}", predict_req(&ds, &[0, 1, 2])).unwrap();
+    let resp = read_json(&mut reader, &mut line).expect("response");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    assert_eq!(resp.get("version").and_then(Json::as_usize), Some(2));
+    // bit-identical to retraining the winning cell directly
+    let best = g.best();
+    let direct = train(&ds, best.c, best.gamma).decision_values(&ds.select(&[0, 1, 2]));
+    let dec = resp.get("decisions").unwrap().as_arr().unwrap();
+    for (d, e) in dec.iter().zip(&direct) {
+        assert_eq!(d.as_f64().unwrap().to_bits(), e.to_bits());
+    }
+    let info = srv.respond(r#"{"op":"info"}"#);
+    assert!(info
+        .get("tag")
+        .and_then(Json::as_str)
+        .unwrap()
+        .starts_with("grid-best"));
+
+    writeln!(conn, r#"{{"op":"shutdown"}}"#).unwrap();
+    let resp = read_json(&mut reader, &mut line).expect("shutdown ack");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    done.recv_timeout(Duration::from_secs(10))
+        .expect("serve did not return after wire shutdown");
+}

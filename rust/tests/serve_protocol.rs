@@ -1,0 +1,237 @@
+//! Serving-protocol robustness: property-style fuzzing over malformed
+//! request lines, wire survival after garbage input, and the batching
+//! contract — batched decisions bit-identical to single-row decisions —
+//! for all three served model kinds.
+//!
+//! The invariant under fuzz is total: for ANY input line, `respond()`
+//! returns a JSON object carrying an `ok` bool, and when `ok` is false a
+//! targeted `error` string — never a panic, never a dropped line. A TCP
+//! connection that sends garbage keeps working for the next valid
+//! request.
+
+use alphaseed::coordinator::{ModelRegistry, PredictServer, ServeModel};
+use alphaseed::data::{synth, Dataset};
+use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::smo::problem::solver_for;
+use alphaseed::smo::{
+    Model, OneClassModel, OneClassProblem, QpProblem, SmoParams, Solver, SvrModel, SvrProblem,
+};
+use alphaseed::util::json::Json;
+use alphaseed::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// One server of each kind, with its training set (the request source).
+fn servers() -> Vec<(&'static str, PredictServer, Dataset)> {
+    let heart = synth::generate("heart", Some(60), 3);
+    let csvc_kernel = Kernel::rbf(0.2);
+    let mut solver = Solver::new(
+        KernelEval::new(heart.clone(), csvc_kernel),
+        SmoParams::with_c(2.0),
+    );
+    let r = solver.solve();
+    let csvc = ServeModel::CSvc {
+        model: Model::from_result(&heart, csvc_kernel, &r),
+        scaler: None,
+    };
+
+    let sinc = synth::generate_regression("sinc", Some(80), 7);
+    let svr_kernel = Kernel::rbf(0.5);
+    let problem = SvrProblem {
+        c: 10.0,
+        epsilon: 0.1,
+    };
+    let mut solver = solver_for(&problem, &sinc, svr_kernel, SmoParams::with_c(10.0));
+    let r = solver.solve();
+    let svr = ServeModel::Svr {
+        model: SvrModel::from_result(&sinc, svr_kernel, &r),
+    };
+
+    let out = synth::generate_outliers(Some(120), 0.1, 5);
+    let oc_kernel = Kernel::rbf(1.0);
+    let problem = OneClassProblem { nu: 0.15 };
+    let mut solver = solver_for(&problem, &out, oc_kernel, SmoParams::default());
+    let beta0 = problem.initial_alpha(&out);
+    let r = solver.solve_from(beta0, None);
+    let oneclass = ServeModel::OneClass {
+        model: OneClassModel::from_result(&out, oc_kernel, &r),
+    };
+
+    [("csvc", csvc, heart), ("svr", svr, sinc), ("oneclass", oneclass, out)]
+        .into_iter()
+        .map(|(kind, model, ds)| {
+            let srv = PredictServer::with_registry(Arc::new(ModelRegistry::new(model, "fuzz")));
+            (kind, srv, ds)
+        })
+        .collect()
+}
+
+fn predict_req(ds: &Dataset, idx: &[usize]) -> String {
+    let rows: Vec<Json> = idx
+        .iter()
+        .map(|&i| Json::arr(ds.x.dense_row(i).iter().map(|&v| Json::num(v as f64))))
+        .collect();
+    Json::obj(vec![("op", Json::str("predict")), ("rows", Json::Arr(rows))]).to_string()
+}
+
+/// The total invariant: whatever `line` is, the response is an object
+/// with an `ok` bool; `ok:false` comes with a non-empty `error`.
+fn assert_total(srv: &PredictServer, line: &str) {
+    let resp = srv.respond(line);
+    match resp.get("ok") {
+        Some(&Json::Bool(true)) => {}
+        Some(&Json::Bool(false)) => {
+            let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+            assert!(!err.is_empty(), "ok:false without error for input: {line}");
+        }
+        other => panic!("response has no ok bool ({other:?}) for input: {line}"),
+    }
+}
+
+/// Like [`assert_total`] but for inputs known to be invalid.
+fn assert_rejected(srv: &PredictServer, line: &str, why: &str) {
+    let resp = srv.respond(line);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{why}: {line}");
+    let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(!err.is_empty(), "{why}: empty error for {line}");
+}
+
+#[test]
+fn structured_malformed_requests_always_rejected() {
+    for (kind, srv, ds) in servers() {
+        let dim = ds.dim();
+        let row = vec!["0.5"; dim].join(",");
+        let cases: Vec<(String, &str)> = vec![
+            ("".into(), "empty line"),
+            ("not json at all".into(), "non-JSON"),
+            ("[1,2,3]".into(), "array, not object"),
+            (r#"{"rows":[[1.0]]}"#.into(), "missing op"),
+            (r#"{"op":5}"#.into(), "op is not a string"),
+            (r#"{"op":"frobnicate"}"#.into(), "unknown op"),
+            (r#"{"op":"predict"}"#.into(), "predict without rows"),
+            (r#"{"op":"predict","rows":7}"#.into(), "rows is not an array"),
+            (r#"{"op":"predict","rows":[]}"#.into(), "empty batch"),
+            (r#"{"op":"predict","rows":["zap"]}"#.into(), "row is not an array"),
+            (format!(r#"{{"op":"predict","rows":[[{row},0.5]]}}"#), "too many features"),
+            (r#"{"op":"predict","rows":[[]]}"#.into(), "too few features"),
+            (
+                format!(r#"{{"op":"predict","rows":[[{}]]}}"#, vec!["\"x\""; dim].join(",")),
+                "non-numeric feature",
+            ),
+            (
+                format!(r#"{{"op":"predict","rows":[[{}]]}}"#, vec!["1e999"; dim].join(",")),
+                "non-finite feature",
+            ),
+            (r#"{"op":"swap"}"#.into(), "swap without path"),
+            (r#"{"op":"swap","path":"/nonexistent/fuzz.txt"}"#.into(), "swap with bad path"),
+        ];
+        for (line, why) in &cases {
+            assert_rejected(&srv, line, &format!("{kind}: {why}"));
+        }
+        // after all that abuse, a well-formed request still succeeds
+        let resp = srv.respond(&predict_req(&ds, &[0]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{kind}: {resp}");
+    }
+}
+
+#[test]
+fn fuzzed_requests_never_panic_or_drop() {
+    let mut rng = Pcg32::seed_from_u64(0xf022);
+    for (_, srv, ds) in servers() {
+        let valid = predict_req(&ds, &[0, 1]);
+        // truncations: every proper prefix is unterminated JSON
+        for _ in 0..120 {
+            let cut = 1 + rng.gen_range(valid.len() - 1);
+            assert_rejected(&srv, &valid[..cut], "truncated request");
+        }
+        // single-byte corruptions: may or may not stay valid — the
+        // invariant is totality, not rejection
+        let bytes: Vec<u8> = valid.bytes().collect();
+        for _ in 0..300 {
+            let mut b = bytes.clone();
+            let pos = rng.gen_range(b.len());
+            b[pos] = (0x20 + rng.gen_range(0x5f)) as u8; // printable ASCII
+            let line = String::from_utf8(b).expect("ascii stays utf8");
+            assert_total(&srv, &line);
+        }
+        // random printable-ASCII noise lines
+        for _ in 0..120 {
+            let len = rng.gen_range(64);
+            let line: String =
+                (0..len).map(|_| (0x20 + rng.gen_range(0x5f)) as u8 as char).collect();
+            assert_total(&srv, &line);
+        }
+    }
+}
+
+#[test]
+fn connection_survives_garbage_lines() {
+    let (_, srv, ds) = servers().remove(0);
+    let srv = Arc::new(srv);
+    let srv2 = Arc::clone(&srv);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        srv2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    for garbage in ["}{", "\"", "{\"op\":\"predict\",\"rows\":[[", "total nonsense"] {
+        writeln!(conn, "{garbage}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).expect("error response is complete JSON");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{garbage}");
+    }
+    // same connection, next line: a valid request is served normally
+    writeln!(conn, "{}", predict_req(&ds, &[0])).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    writeln!(conn, r#"{{"op":"shutdown"}}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn batched_decisions_bit_identical_to_single_rows_all_kinds() {
+    const ROWS: usize = 8;
+    for (kind, srv, ds) in servers() {
+        let idx: Vec<usize> = (0..ROWS).collect();
+        let batch = srv.respond(&predict_req(&ds, &idx));
+        assert_eq!(batch.get("ok"), Some(&Json::Bool(true)), "{kind}: {batch}");
+        let batch_dec = batch.get("decisions").unwrap().as_arr().unwrap();
+        assert_eq!(batch_dec.len(), ROWS);
+
+        // direct per-row evaluation on the underlying model
+        let current = srv.registry().current();
+        let direct: Vec<f64> = match &current.model {
+            ServeModel::CSvc { model, .. } => {
+                idx.iter().map(|&j| model.decision_one(&ds, j)).collect()
+            }
+            ServeModel::Svr { model } => idx.iter().map(|&j| model.predict_one(&ds, j)).collect(),
+            ServeModel::OneClass { model } => {
+                idx.iter().map(|&j| model.decision_one(&ds, j)).collect()
+            }
+        };
+
+        for (j, (wire, d)) in batch_dec.iter().zip(&direct).enumerate() {
+            // one-row request through the same wire path
+            let single = srv.respond(&predict_req(&ds, &[j]));
+            let single_dec = single.get("decisions").unwrap().as_arr().unwrap();
+            let w = wire.as_f64().unwrap();
+            let s = single_dec[0].as_f64().unwrap();
+            assert_eq!(w.to_bits(), s.to_bits(), "{kind}: batched row {j} != single-row request");
+            assert_eq!(
+                w.to_bits(),
+                d.to_bits(),
+                "{kind}: batched row {j} != direct per-row evaluation"
+            );
+        }
+    }
+}
