@@ -1,24 +1,151 @@
 //! Micro-benchmarks of the hot paths (§Perf, EXPERIMENTS.md):
 //!
+//! - vectorized row fills vs the retained naive reference (the gated set)
 //! - kernel row evaluation (dense vs sparse, cached vs cold)
 //! - one SMO iteration (WSS2 select + update + gradient sweep)
 //! - seeding initialisation per algorithm
 //! - warm-start gradient init, sequential vs thread-pooled
 //! - PJRT artifact dispatch vs native for bulk kernel blocks
+//!
+//! The row-fill section emits a machine-readable `BENCH_kernel.json`
+//! (`$ALPHASEED_BENCH_OUT` overrides the path) for the kernel flavour of
+//! `alphaseed benchgate`: per scenario the naive and simd minimum times,
+//! whose ratio the gate holds against `BENCH_kernel.baseline.json`.
+//! `$ALPHASEED_BENCH_SCALE` scales the row-fill dataset sizes (default
+//! 0.25 — the CI size; nightly runs 1.0).
 
 use alphaseed::data::synth;
 use alphaseed::kernel::{Kernel, KernelCache, KernelEval};
 use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
 use alphaseed::seeding::{seeder_by_name, SeedContext};
 use alphaseed::smo::{SmoParams, Solver};
-use alphaseed::util::bench::{bench, black_box};
+use alphaseed::util::bench::{bench, black_box, BenchStats};
+use alphaseed::util::json::Json;
+use std::collections::BTreeMap;
 
 fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let kernel_record = row_fill_benches(scale);
     kernel_row_benches();
     smo_iteration_bench();
     seeding_benches();
     parallel_gradient_bench();
     backend_benches();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("micro_hotpath".into())),
+        ("scale", Json::Num(scale)),
+        ("kernel", Json::Obj(kernel_record)),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernel.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}
+
+/// The tentpole measurement: chunked flat-slice row fills ([`KernelEval::
+/// eval_row`] / [`eval_cross_row`]) against the retained per-element
+/// references. Both paths produce bit-identical rows (pinned by
+/// `tests/kernel_identity.rs`); only the wall clock may differ, and the
+/// speedup `naive_min / simd_min` is what `alphaseed benchgate` holds
+/// against the committed floor.
+fn row_fill_benches(scale: f64) -> BTreeMap<String, Json> {
+    println!("\n-- vectorized row fills vs naive reference (scale {scale}) --");
+    let mut record = BTreeMap::new();
+
+    // dense: d=13 rows, scaled count
+    let n_dense = ((1080.0 * scale) as usize).max(270);
+    let dense = synth::generate("heart", Some(n_dense), 1);
+    let eval = KernelEval::new(dense.clone(), Kernel::rbf(0.2));
+    let mut row = vec![0.0f64; dense.len()];
+    let naive = bench(
+        &format!("dense row fill, naive (n={n_dense} d={})", dense.dim()),
+        10,
+        150,
+        || eval.eval_row_reference(black_box(7), &mut row),
+    );
+    let simd = bench(
+        &format!("dense row fill, simd  (n={n_dense} d={})", dense.dim()),
+        10,
+        150,
+        || eval.eval_row(black_box(7), &mut row),
+    );
+    push_row_fill(&mut record, "dense_row", &naive, &simd, n_dense, dense.dim());
+
+    // sparse: merge-join path with the query slices hoisted
+    let n_sparse = ((8000.0 * scale) as usize).max(2000);
+    let sparse = synth::generate("adult", Some(n_sparse), 1);
+    let eval_sp = KernelEval::new(sparse.clone(), Kernel::rbf(0.5));
+    let mut row_sp = vec![0.0f64; sparse.len()];
+    let naive = bench(
+        &format!("sparse row fill, naive (n={n_sparse} d={})", sparse.dim()),
+        3,
+        30,
+        || eval_sp.eval_row_reference(black_box(7), &mut row_sp),
+    );
+    let simd = bench(
+        &format!("sparse row fill, simd  (n={n_sparse} d={})", sparse.dim()),
+        3,
+        30,
+        || eval_sp.eval_row(black_box(7), &mut row_sp),
+    );
+    push_row_fill(&mut record, "sparse_row", &naive, &simd, n_sparse, sparse.dim());
+
+    // cross rows: the serving tier's batched primitive (dense × dense)
+    let other = synth::generate("heart", Some(n_dense), 9);
+    let mut crow = vec![0.0f64; other.len()];
+    let naive = bench(
+        &format!("cross row fill, naive (n={n_dense} d={})", dense.dim()),
+        10,
+        150,
+        || eval.eval_cross_row_reference(black_box(7), &other, &mut crow),
+    );
+    let simd = bench(
+        &format!("cross row fill, simd  (n={n_dense} d={})", dense.dim()),
+        10,
+        150,
+        || eval.eval_cross_row(black_box(7), &other, &mut crow),
+    );
+    push_row_fill(&mut record, "cross_row", &naive, &simd, n_dense, dense.dim());
+    record
+}
+
+/// Record one row-fill scenario and pin the dispatch hoist: the vectorized
+/// fill must never be *structurally* slower than the retained naive loop.
+/// The ×0.5 in-bench floor is deliberately far below the committed
+/// benchgate floor — it catches a hoist regression even in runs that never
+/// reach the gate (local `cargo bench`), without flaking on jitter.
+fn push_row_fill(
+    record: &mut BTreeMap<String, Json>,
+    name: &str,
+    naive: &BenchStats,
+    simd: &BenchStats,
+    n: usize,
+    d: usize,
+) {
+    let naive_ns = naive.min().as_nanos() as f64;
+    let simd_ns = (simd.min().as_nanos() as f64).max(1.0);
+    let speedup = naive_ns / simd_ns;
+    println!("   {name}: speedup ×{speedup:.2} (naive min / simd min)");
+    assert!(
+        speedup >= 0.5,
+        "{name}: vectorized fill 2x slower than the naive reference \
+         (×{speedup:.2}) — kernel dispatch hoist regressed?"
+    );
+    record.insert(
+        name.to_string(),
+        Json::obj(vec![
+            ("naive_min_ns", Json::Num(naive_ns)),
+            ("simd_min_ns", Json::Num(simd_ns)),
+            ("speedup", Json::Num(speedup)),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(d as f64)),
+        ]),
+    );
 }
 
 /// The tentpole hot path: warm-start gradient initialisation (kernel-row
@@ -74,7 +201,7 @@ fn kernel_row_benches() {
     let mut cache = KernelCache::with_byte_budget(eval_sp.clone(), 64 << 20);
     cache.row(7);
     bench("rbf row, sparse n=2000 (LRU hit)", 100, 2000, || {
-        black_box(cache.row(7)[13]);
+        black_box(cache.row(7).get(13));
     });
 }
 

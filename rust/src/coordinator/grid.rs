@@ -26,7 +26,7 @@
 
 use crate::cv::{run_kfold, run_kfold_svr, run_kfold_warm_c, CvOptions, WarmCOptions};
 use crate::data::Dataset;
-use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
+use crate::kernel::{CacheDtype, Kernel, KernelEval, SharedKernelCache};
 use crate::multiclass::{
     class_pairs, pair_chain, tally_votes, MultiDataset, OvoOptions, PairChainSpec, PairRun,
 };
@@ -99,6 +99,12 @@ pub struct GridOptions {
     /// [`CvOptions::carry_active_set`](crate::cv::CvOptions::carry_active_set).
     /// Wall-time only; per-cell accuracies are unaffected.
     pub carry_active_set: bool,
+    /// Storage precision for every kernel-row store the grid builds (the
+    /// per-γ shared stores and each cell's private caches) — see
+    /// [`CvOptions::cache_dtype`](crate::cv::CvOptions::cache_dtype) for
+    /// the accuracy contract. `F32` doubles row capacity per byte budget,
+    /// which compounds across a grid's many cells.
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for GridOptions {
@@ -112,6 +118,7 @@ impl Default for GridOptions {
             share_rows: true,
             seed_cache_bytes: 64 << 20,
             carry_active_set: true,
+            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -157,9 +164,10 @@ pub fn grid_search_opts(
         .iter()
         .map(|&gamma| {
             opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget(
+                SharedKernelCache::with_byte_budget_dtype(
                     KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
                     opts.seed_cache_bytes,
+                    opts.cache_dtype,
                 )
             })
         })
@@ -205,6 +213,7 @@ fn independent_cells(
                 threads: intra,
                 shared_seed_cache: shares[gi].clone(),
                 carry_active_set: opts.carry_active_set,
+                cache_dtype: opts.cache_dtype,
                 ..Default::default()
             },
         );
@@ -250,6 +259,7 @@ fn warm_c_sweep(
                 threads: intra,
                 shared_seed_cache: shares[gi].clone(),
                 carry_active_set: opts.carry_active_set,
+                cache_dtype: opts.cache_dtype,
                 ..Default::default()
             },
         )
@@ -311,9 +321,10 @@ pub fn grid_search_ovo(
         .iter()
         .map(|&gamma| {
             opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget(
+                SharedKernelCache::with_byte_budget_dtype(
                     KernelEval::new(mds.kernel_dataset(), Kernel::rbf(gamma)),
                     opts.seed_cache_bytes,
+                    opts.cache_dtype,
                 )
             })
         })
@@ -327,6 +338,7 @@ pub fn grid_search_ovo(
     let ovo_opts = OvoOptions {
         rng_seed: opts.rng_seed,
         carry_active_set: opts.carry_active_set,
+        cache_dtype: opts.cache_dtype,
         ..Default::default()
     };
     // One unit per (γ, pair): the pair's C chain runs sequentially inside
@@ -477,9 +489,10 @@ pub fn grid_search_svr(
         .iter()
         .map(|&gamma| {
             opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget(
+                SharedKernelCache::with_byte_budget_dtype(
                     KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
                     opts.seed_cache_bytes,
+                    opts.cache_dtype,
                 )
             })
         })
@@ -508,6 +521,7 @@ pub fn grid_search_svr(
                 rng_seed: opts.rng_seed,
                 shared_seed_cache: shares[gi].clone(),
                 carry_active_set: opts.carry_active_set,
+                cache_dtype: opts.cache_dtype,
                 ..Default::default()
             },
         );

@@ -117,6 +117,30 @@ impl ServeModel {
         }
     }
 
+    /// [`decision_batch`](ServeModel::decision_batch) routed through a
+    /// [`ComputeBackend`](crate::runtime::ComputeBackend): one bulk matvec
+    /// (Σᵢ coefᵢ·K(svᵢ, xⱼ) − b) per request. Non-RBF kernels take the
+    /// native path unconditionally (the backend trait is RBF-only — the
+    /// paper's kernel). With the native backend this is bit-identical to
+    /// [`decision_batch`](ServeModel::decision_batch); with the XLA
+    /// backend it is epsilon-close per the f32-artifact contract
+    /// (`docs/ARCHITECTURE.md` §3.7).
+    pub fn decision_batch_via(
+        &self,
+        batch: &Dataset,
+        backend: &mut dyn crate::runtime::ComputeBackend,
+    ) -> anyhow::Result<Vec<f64>> {
+        let Kernel::Rbf { gamma } = self.kernel() else {
+            return Ok(self.decision_batch(batch));
+        };
+        let (sv, coef, b) = match self {
+            ServeModel::CSvc { model, .. } => (&model.sv, &model.coef, model.b),
+            ServeModel::Svr { model } => (&model.sv, &model.coef, model.b),
+            ServeModel::OneClass { model } => (&model.sv, &model.coef, model.b),
+        };
+        crate::runtime::decision_values_via(backend, sv, coef, b, gamma, batch)
+    }
+
     /// ±1 labels derived from decisions (`None` for ε-SVR, whose output
     /// is continuous).
     pub fn labels(&self, decisions: &[f64]) -> Option<Vec<f64>> {
@@ -251,6 +275,25 @@ mod tests {
         let labels = m.labels(&d).expect("csvc labels");
         assert!(labels.iter().all(|&l| l == 1.0 || l == -1.0));
         assert!(m.probs(&d).is_none());
+    }
+
+    #[test]
+    fn decision_batch_via_native_matches_direct() {
+        let (ds, model) = csvc(2.0);
+        let m = ServeModel::CSvc {
+            model,
+            scaler: None,
+        };
+        let probe = ds.select(&[0, 1, 2, 3, 4]);
+        let direct = m.decision_batch(&probe);
+        let mut backend = crate::runtime::NativeBackend;
+        let via = m.decision_batch_via(&probe, &mut backend).unwrap();
+        assert_eq!(via.len(), direct.len());
+        // the native backend's SV-outer matvec runs the same operation
+        // sequence as the models' bulk path — identical bits
+        for (a, b) in via.iter().zip(&direct) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -49,9 +49,11 @@
 use super::registry::{ModelRegistry, ServeModel};
 use crate::data::{DataMatrix, Dataset};
 use crate::metrics::{Counter, Histogram};
+use crate::runtime::{BackendChoice, XlaBackend};
 use crate::smo::{Model, PlattScaler};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -70,6 +72,12 @@ const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 /// Server state shared across connections.
 pub struct PredictServer {
     registry: Arc<ModelRegistry>,
+    /// Bulk-evaluation backend for `predict` batches. `Native` (default)
+    /// calls [`ServeModel::decision_batch`] directly — the bit-identity
+    /// path. `Xla` routes RBF batches through per-thread PJRT artifact
+    /// backends ([`ServeModel::decision_batch_via`]), falling back to
+    /// native per request when artifacts are unavailable.
+    backend: BackendChoice,
     /// Total rows served across all requests (telemetry; read by benches).
     pub served: Arc<Counter>,
     /// Per-request response latency (telemetry; `info` reports p50/p99).
@@ -93,8 +101,18 @@ impl PredictServer {
 
     /// Serve whatever `registry` currently holds, following hot-swaps.
     pub fn with_registry(registry: Arc<ModelRegistry>) -> PredictServer {
+        PredictServer::with_registry_backend(registry, BackendChoice::Native)
+    }
+
+    /// [`with_registry`](PredictServer::with_registry) with an explicit
+    /// bulk-evaluation backend for `predict` batches.
+    pub fn with_registry_backend(
+        registry: Arc<ModelRegistry>,
+        backend: BackendChoice,
+    ) -> PredictServer {
         PredictServer {
             registry,
+            backend,
             served: Arc::new(Counter::new()),
             latency: Arc::new(Histogram::new()),
             stop: Arc::new(AtomicBool::new(false)),
@@ -322,7 +340,7 @@ impl PredictServer {
                     DataMatrix::dense(rows.len(), dim, data),
                     vec![1.0; rows.len()],
                 );
-                let decisions = current.model.decision_batch(&batch);
+                let decisions = self.batch_decisions(&current.model, &batch);
                 self.served.add(rows.len() as u64);
                 let mut fields = vec![
                     ("ok", Json::Bool(true)),
@@ -372,6 +390,50 @@ impl PredictServer {
             other => anyhow::bail!("unknown op '{other}'"),
         }
     }
+
+    /// One bulk decision evaluation for a request batch, honouring the
+    /// server's [`BackendChoice`]. The XLA route degrades to native per
+    /// request (never an error response): artifacts that fail to load or
+    /// execute only cost the compiled fast path, not availability.
+    fn batch_decisions(&self, model: &ServeModel, batch: &Dataset) -> Vec<f64> {
+        if self.backend == BackendChoice::Xla {
+            if let Some(d) = xla_batch_decisions(model, batch) {
+                return d;
+            }
+        }
+        model.decision_batch(batch)
+    }
+}
+
+thread_local! {
+    // One PJRT backend per handler thread — the client handle is not
+    // `Send`, and connections each own a thread anyway. Outer `None` =
+    // not yet attempted; inner `None` = load failed (don't retry per
+    // request).
+    static SERVE_XLA: RefCell<Option<Option<XlaBackend>>> = const { RefCell::new(None) };
+}
+
+/// Evaluate a batch through this thread's XLA backend, or `None` to fall
+/// back to the native path.
+fn xla_batch_decisions(model: &ServeModel, batch: &Dataset) -> Option<Vec<f64>> {
+    SERVE_XLA.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let entry = slot.get_or_insert_with(|| match XlaBackend::load(XlaBackend::default_dir()) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("warning: serve --backend xla unavailable, using native: {e:#}");
+                None
+            }
+        });
+        let backend = entry.as_mut()?;
+        match model.decision_batch_via(batch, backend) {
+            Ok(d) => Some(d),
+            Err(e) => {
+                eprintln!("warning: xla batch evaluation failed, using native: {e:#}");
+                None
+            }
+        }
+    })
 }
 
 #[cfg(test)]

@@ -11,7 +11,7 @@
 
 use super::report::{CvReport, RoundStat};
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::runtime::ComputeBackend;
 use crate::seeding::oneclass::{check_feasible_oneclass, seed_oneclass, OneClassSeedContext};
 use crate::seeding::svr::{check_feasible_delta, SvrSeedContext, SvrSeeder};
@@ -71,6 +71,15 @@ pub struct CvOptions<'a> {
     /// so this only moves wall time, never the converged model. Inert
     /// when `shrinking` is off or the seeder declines the hook (cold).
     pub carry_active_set: bool,
+    /// Storage precision of cached kernel rows (solver cache and the
+    /// full-dataset seeding cache). [`CacheDtype::F64`] (default) keeps
+    /// the historical bit-identical arithmetic; [`CacheDtype::F32`]
+    /// halves cache memory — rows are still *computed* in f64 and every
+    /// gradient accumulates in f64, so fold accuracy/MSE is unchanged and
+    /// decision values stay within the documented epsilon contract
+    /// (docs/ARCHITECTURE.md §3.7). Ignored by a shared-backed seeding
+    /// cache, which inherits the shared store's dtype.
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for CvOptions<'_> {
@@ -86,6 +95,7 @@ impl Default for CvOptions<'_> {
             threads: 0,
             shared_seed_cache: None,
             carry_active_set: true,
+            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -107,8 +117,13 @@ pub fn run_kfold(
     // Kernel-row cache over the full dataset for the seeders — backed by
     // the process-wide shared store when the caller provides one (grid
     // cells with the same dataset + γ then compute each row only once).
-    let mut seed_cache =
-        make_seed_cache(full, kernel, &opts.shared_seed_cache, opts.seed_cache_bytes);
+    let mut seed_cache = make_seed_cache(
+        full,
+        kernel,
+        &opts.shared_seed_cache,
+        opts.seed_cache_bytes,
+        opts.cache_dtype,
+    );
 
     let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
     let mut rounds = Vec::with_capacity(rounds_to_run);
@@ -208,6 +223,7 @@ pub fn run_kfold(
             shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
             threads: opts.threads,
+            cache_dtype: opts.cache_dtype,
             ..Default::default()
         };
         let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
@@ -278,6 +294,7 @@ fn make_seed_cache(
     kernel: Kernel,
     shared: &Option<Arc<SharedKernelCache>>,
     bytes: usize,
+    dtype: CacheDtype,
 ) -> KernelCache {
     match shared {
         Some(shared) => {
@@ -288,9 +305,15 @@ fn make_seed_cache(
                 shared.n() == full.len() && shared.eval().kernel == kernel,
                 "shared seed cache bound to a different dataset or kernel"
             );
+            // dtype is inherited from the shared store (adopted rows keep
+            // their storage precision)
             KernelCache::with_shared_backing(Arc::clone(shared), bytes)
         }
-        None => KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), bytes),
+        None => KernelCache::with_byte_budget_dtype(
+            KernelEval::new(full.clone(), kernel),
+            bytes,
+            dtype,
+        ),
     }
 }
 
@@ -328,8 +351,13 @@ pub fn run_kfold_svr(
     let plan = FoldPlan::random(full.len(), k, opts.rng_seed);
     let partition = t_part.elapsed();
 
-    let mut seed_cache =
-        make_seed_cache(full, kernel, &opts.shared_seed_cache, opts.seed_cache_bytes);
+    let mut seed_cache = make_seed_cache(
+        full,
+        kernel,
+        &opts.shared_seed_cache,
+        opts.seed_cache_bytes,
+        opts.cache_dtype,
+    );
 
     let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
     let mut rounds = Vec::with_capacity(rounds_to_run);
@@ -391,6 +419,7 @@ pub fn run_kfold_svr(
             eps: opts.eps,
             shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
+            cache_dtype: opts.cache_dtype,
             ..Default::default()
         };
         let mut solver =
@@ -472,8 +501,13 @@ pub fn run_kfold_oneclass(
     let plan = FoldPlan::stratified(full, k, opts.rng_seed);
     let partition = t_part.elapsed();
 
-    let mut seed_cache =
-        make_seed_cache(full, kernel, &opts.shared_seed_cache, opts.seed_cache_bytes);
+    let mut seed_cache = make_seed_cache(
+        full,
+        kernel,
+        &opts.shared_seed_cache,
+        opts.seed_cache_bytes,
+        opts.cache_dtype,
+    );
 
     let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
     let mut rounds = Vec::with_capacity(rounds_to_run);
@@ -529,6 +563,7 @@ pub fn run_kfold_oneclass(
             eps: opts.eps,
             shrinking: opts.shrinking,
             cache_bytes: opts.cache_bytes,
+            cache_dtype: opts.cache_dtype,
             ..Default::default()
         };
         let mut solver =
@@ -611,8 +646,19 @@ fn gradient_via_cache(
             let gj = train_idx[j];
             let coef = alpha[j] * full.y[gj];
             let row = cache.row(gj);
-            for (t, &gt) in train_idx.iter().enumerate() {
-                g[t] += train_y[t] * coef * row[gt];
+            // hoist the dtype match: the f64 tier runs the exact
+            // historical slice loop (bit-identity pin)
+            match row.as_f64() {
+                Some(r) => {
+                    for (t, &gt) in train_idx.iter().enumerate() {
+                        g[t] += train_y[t] * coef * r[gt];
+                    }
+                }
+                None => {
+                    for (t, &gt) in train_idx.iter().enumerate() {
+                        g[t] += train_y[t] * coef * row.get(gt);
+                    }
+                }
             }
         }
         return g;
@@ -628,7 +674,7 @@ fn gradient_via_cache(
                 let mut acc = *slot;
                 for (b, &j) in block.iter().enumerate() {
                     let coef = alpha[j] * full.y[train_idx[j]];
-                    acc += train_y[t] * coef * rows[b][gt];
+                    acc += train_y[t] * coef * rows[b].get(gt);
                 }
                 *slot = acc;
             }
@@ -733,7 +779,7 @@ fn warm_gradient(
                     let mut acc = *slot;
                     for (b, &(_, dc)) in dblock.iter().enumerate() {
                         // fresh rows get the full sum below instead
-                        acc += next_y[t] * dc * rows[b][gt];
+                        acc += next_y[t] * dc * rows[b].get(gt);
                     }
                     *slot = acc;
                 }
@@ -742,9 +788,18 @@ fn warm_gradient(
     } else {
         for &(gj, dc) in &delta {
             let row = cache.row(gj);
-            for (t, &gt) in next_train.iter().enumerate() {
-                // fresh rows get the full sum below instead
-                g[t] += next_y[t] * dc * row[gt];
+            match row.as_f64() {
+                Some(r) => {
+                    for (t, &gt) in next_train.iter().enumerate() {
+                        // fresh rows get the full sum below instead
+                        g[t] += next_y[t] * dc * r[gt];
+                    }
+                }
+                None => {
+                    for (t, &gt) in next_train.iter().enumerate() {
+                        g[t] += next_y[t] * dc * row.get(gt);
+                    }
+                }
             }
         }
     }
@@ -761,7 +816,7 @@ fn warm_gradient(
                 let mut acc = -1.0f64;
                 for (j, &gj) in next_train.iter().enumerate() {
                     if alpha0[j] > 0.0 {
-                        acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+                        acc += next_y[t] * alpha0[j] * full.y[gj] * row.get(gj);
                     }
                 }
                 acc
@@ -777,7 +832,7 @@ fn warm_gradient(
             let mut acc = -1.0f64;
             for (j, &gj) in next_train.iter().enumerate() {
                 if alpha0[j] > 0.0 {
-                    acc += next_y[t] * alpha0[j] * full.y[gj] * row[gj];
+                    acc += next_y[t] * alpha0[j] * full.y[gj] * row.get(gj);
                 }
             }
             g[t] = acc;

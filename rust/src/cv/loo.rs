@@ -77,6 +77,7 @@ pub fn run_loo(
                 threads: opts.threads,
                 shared_seed_cache: None,
                 carry_active_set: true,
+                cache_dtype: Default::default(),
             };
             let mut rep = run_kfold(full, kernel, c, full.len(), seeder, cv_opts);
             rep.seeder = seeder.name().to_string();

@@ -15,7 +15,7 @@
 
 use super::report::{CvReport, RoundStat};
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::seeding::{balance_to_target, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
 use std::sync::Arc;
@@ -52,6 +52,9 @@ pub struct WarmCOptions {
     /// same), a fold-chained round carries it through the seeder's
     /// transfer. Validated by the solver; inert without `shrinking`.
     pub carry_active_set: bool,
+    /// Storage precision of cached kernel rows; see
+    /// [`CvOptions::cache_dtype`](super::CvOptions::cache_dtype).
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for WarmCOptions {
@@ -66,6 +69,7 @@ impl Default for WarmCOptions {
             threads: 0,
             shared_seed_cache: None,
             carry_active_set: true,
+            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -123,9 +127,10 @@ pub fn run_kfold_warm_c(
             );
             KernelCache::with_shared_backing(Arc::clone(shared), opts.seed_cache_bytes)
         }
-        None => KernelCache::with_byte_budget(
+        None => KernelCache::with_byte_budget_dtype(
             KernelEval::new(full.clone(), kernel),
             opts.seed_cache_bytes,
+            opts.cache_dtype,
         ),
     };
 
@@ -194,6 +199,7 @@ pub fn run_kfold_warm_c(
                 shrinking: opts.shrinking,
                 cache_bytes: opts.cache_bytes,
                 threads: opts.threads,
+                cache_dtype: opts.cache_dtype,
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);

@@ -259,23 +259,12 @@ impl DataMatrix {
 }
 
 /// f32 slices, f64 accumulation (matches LibSVM's double kernel math).
+/// Delegates to the canonical chunked primitive in
+/// [`kernel::simd`](crate::kernel::simd) — one accumulation order for the
+/// whole crate, so every bit-identity pin rests on a single loop.
 #[inline]
 pub fn dense_dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] as f64 * b[i] as f64;
-        acc[1] += a[i + 1] as f64 * b[i + 1] as f64;
-        acc[2] += a[i + 2] as f64 * b[i + 2] as f64;
-        acc[3] += a[i + 3] as f64 * b[i + 3] as f64;
-    }
-    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        sum += a[i] as f64 * b[i] as f64;
-    }
-    sum
+    crate::kernel::simd::dot(a, b)
 }
 
 #[cfg(test)]

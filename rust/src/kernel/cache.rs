@@ -5,7 +5,8 @@
 //! LRU over full rows captures most reuse. All bookkeeping is O(1) via an
 //! intrusive doubly-linked list over slot indices.
 //!
-//! Rows are stored as `Arc<[f64]>` so that
+//! Rows are stored as refcounted [`KernelRow`]s (f64 by default, or the
+//! half-footprint f32 tier via [`CacheDtype::F32`]) so that
 //!
 //! - a caller can pin a set of rows ([`KernelCache::row_arc`],
 //!   [`KernelCache::rows_block`]) and read them after later fetches have
@@ -23,6 +24,7 @@
 //!   row once on the full dataset and serve every class pair containing
 //!   the instance from that one row.
 
+use super::dtype::{CacheDtype, KernelRow, RowView};
 use super::function::KernelEval;
 use super::shared::SharedKernelCache;
 use crate::util::pool::scoped_map;
@@ -56,7 +58,7 @@ const NIL: usize = usize::MAX;
 
 struct Slot {
     row_index: usize,
-    data: Arc<[f64]>,
+    data: KernelRow,
     prev: usize,
     next: usize,
 }
@@ -72,6 +74,8 @@ pub struct KernelCache {
     /// `shared.row(proj[i])[proj[..]]`. `None` = the shared store covers
     /// the same dataset as this cache.
     proj: Option<Vec<usize>>,
+    /// Storage precision of cached rows (accumulation stays f64).
+    dtype: CacheDtype,
     /// row index -> slot position
     map: HashMap<usize, usize>,
     slots: Vec<Slot>,
@@ -83,21 +87,43 @@ pub struct KernelCache {
 }
 
 impl KernelCache {
-    /// Cache sized in bytes (row = n·8 bytes); always at least 2 rows so
-    /// one SMO iteration's pair fits.
+    /// Cache sized in bytes (row = n · element size, 8 for the default f64
+    /// tier); always at least 2 rows so one SMO iteration's pair fits.
     pub fn with_byte_budget(eval: KernelEval, bytes: usize) -> KernelCache {
+        Self::with_byte_budget_dtype(eval, bytes, CacheDtype::F64)
+    }
+
+    /// Like [`with_byte_budget`](Self::with_byte_budget) with an explicit
+    /// row-storage precision; the f32 tier fits twice the rows in the same
+    /// budget.
+    pub fn with_byte_budget_dtype(
+        eval: KernelEval,
+        bytes: usize,
+        dtype: CacheDtype,
+    ) -> KernelCache {
         let n = eval.len().max(1);
-        let rows = (bytes / (n * std::mem::size_of::<f64>())).max(2);
-        Self::with_row_capacity(eval, rows)
+        let rows = (bytes / (n * dtype.element_bytes())).max(2);
+        Self::with_row_capacity_dtype(eval, rows, dtype)
     }
 
     /// Cache holding at most `capacity_rows` rows (minimum 2, so one SMO
-    /// iteration's pair always fits).
+    /// iteration's pair always fits), f64 storage.
     pub fn with_row_capacity(eval: KernelEval, capacity_rows: usize) -> KernelCache {
+        Self::with_row_capacity_dtype(eval, capacity_rows, CacheDtype::F64)
+    }
+
+    /// Like [`with_row_capacity`](Self::with_row_capacity) with an explicit
+    /// row-storage precision.
+    pub fn with_row_capacity_dtype(
+        eval: KernelEval,
+        capacity_rows: usize,
+        dtype: CacheDtype,
+    ) -> KernelCache {
         KernelCache {
             eval,
             shared: None,
             proj: None,
+            dtype,
             map: HashMap::new(),
             slots: Vec::new(),
             head: NIL,
@@ -108,10 +134,13 @@ impl KernelCache {
     }
 
     /// A cache backed by a shared row store (same dataset + kernel): local
-    /// misses first consult `shared` and adopt its `Arc` rows, so parallel
-    /// runs over the same data compute each row once process-wide.
+    /// misses first consult `shared` and adopt its refcounted rows, so
+    /// parallel runs over the same data compute each row once process-wide.
+    /// The local cache inherits the shared store's storage precision, so
+    /// adoption is a plain `Arc` clone at either tier.
     pub fn with_shared_backing(shared: Arc<SharedKernelCache>, bytes: usize) -> KernelCache {
-        let mut cache = Self::with_byte_budget(shared.eval().clone(), bytes);
+        let mut cache =
+            Self::with_byte_budget_dtype(shared.eval().clone(), bytes, shared.dtype());
         cache.shared = Some(shared);
         cache
     }
@@ -144,7 +173,7 @@ impl KernelCache {
             proj.iter().all(|&g| g < shared.n()),
             "projection index out of the shared store's range"
         );
-        let mut cache = Self::with_byte_budget(local, bytes);
+        let mut cache = Self::with_byte_budget_dtype(local, bytes, shared.dtype());
         cache.shared = Some(shared);
         cache.proj = Some(proj);
         cache
@@ -175,19 +204,25 @@ impl KernelCache {
         self.map.len()
     }
 
-    /// Kernel row K(xᵢ, ·), computing (or adopting from the shared
-    /// backing) and caching on miss.
-    pub fn row(&mut self, i: usize) -> &[f64] {
-        let slot = self.row_slot(i);
-        &self.slots[slot].data
+    /// Storage precision of cached rows.
+    pub fn dtype(&self) -> CacheDtype {
+        self.dtype
     }
 
-    /// Like [`row`](Self::row) but returns the refcounted row itself. The
-    /// Arc stays valid after eviction, which lets callers pin a whole
-    /// block of rows and read them concurrently.
-    pub fn row_arc(&mut self, i: usize) -> Arc<[f64]> {
+    /// Kernel row K(xᵢ, ·), computing (or adopting from the shared
+    /// backing) and caching on miss. The view borrows the resident slot;
+    /// use [`row_arc`](Self::row_arc) to pin the row past later fetches.
+    pub fn row(&mut self, i: usize) -> RowView<'_> {
         let slot = self.row_slot(i);
-        Arc::clone(&self.slots[slot].data)
+        self.slots[slot].data.view()
+    }
+
+    /// Like [`row`](Self::row) but returns the refcounted row itself. It
+    /// stays valid after eviction, which lets callers pin a whole block of
+    /// rows and read them concurrently.
+    pub fn row_arc(&mut self, i: usize) -> KernelRow {
+        let slot = self.row_slot(i);
+        self.slots[slot].data.clone()
     }
 
     fn row_slot(&mut self, i: usize) -> usize {
@@ -201,27 +236,29 @@ impl KernelCache {
     }
 
     /// Compute row `i` through the shared backing when present (gathering
-    /// through the projection for subset views), else directly. All paths
-    /// produce identical bits.
-    fn compute_row(&self, i: usize) -> Arc<[f64]> {
+    /// through the projection for subset views), else directly. Within one
+    /// dtype tier all paths produce identical bits: the f64 tier stores
+    /// `eval_row`'s output verbatim, and an f32 gather re-narrows values
+    /// that were already narrowed once (an exact round trip).
+    fn compute_row(&self, i: usize) -> KernelRow {
         match (&self.shared, &self.proj) {
             (Some(shared), Some(proj)) => {
                 let full = shared.row(proj[i]);
-                let data: Vec<f64> = proj.iter().map(|&g| full[g]).collect();
-                data.into()
+                let data: Vec<f64> = proj.iter().map(|&g| full.get(g)).collect();
+                KernelRow::from_f64(data, self.dtype)
             }
             (Some(shared), None) => shared.row(i),
             _ => {
                 let mut data = vec![0.0f64; self.eval.len()];
                 self.eval.eval_row(i, &mut data);
-                data.into()
+                KernelRow::from_f64(data, self.dtype)
             }
         }
     }
 
     /// Insert an already-computed row, evicting the LRU tail when full.
     /// Counted as a miss (the row was not resident).
-    fn insert_arc(&mut self, i: usize, data: Arc<[f64]>) -> usize {
+    fn insert_arc(&mut self, i: usize, data: KernelRow) -> usize {
         self.stats.misses += 1;
         let slot = if self.slots.len() < self.capacity_rows {
             self.slots.push(Slot {
@@ -255,12 +292,12 @@ impl KernelCache {
     /// `idxs` order, so the cache state after the call is independent of
     /// the thread count. This is the kernel-row-block primitive behind
     /// the parallel warm-start gradient paths.
-    pub fn rows_block(&mut self, idxs: &[usize], threads: usize) -> Vec<Arc<[f64]>> {
-        let mut out: Vec<Option<Arc<[f64]>>> = vec![None; idxs.len()];
+    pub fn rows_block(&mut self, idxs: &[usize], threads: usize) -> Vec<KernelRow> {
+        let mut out: Vec<Option<KernelRow>> = vec![None; idxs.len()];
         // rows pinned during this call — duplicates are served from here,
         // not from the LRU map (a large block can evict its own earlier
         // rows when it exceeds the capacity)
-        let mut pinned: HashMap<usize, Arc<[f64]>> = HashMap::new();
+        let mut pinned: HashMap<usize, KernelRow> = HashMap::new();
         // (position in idxs, row index) for first occurrences not resident
         let mut missing: Vec<(usize, usize)> = Vec::new();
         for (p, &i) in idxs.iter().enumerate() {
@@ -270,66 +307,57 @@ impl KernelCache {
             if let Some(&slot) = self.map.get(&i) {
                 self.stats.hits += 1;
                 self.touch(slot);
-                let arc = Arc::clone(&self.slots[slot].data);
-                pinned.insert(i, Arc::clone(&arc));
-                out[p] = Some(arc);
+                let row = self.slots[slot].data.clone();
+                pinned.insert(i, row.clone());
+                out[p] = Some(row);
             } else if !missing.iter().any(|&(_, m)| m == i) {
                 missing.push((p, i));
             }
         }
         if !missing.is_empty() {
-            let computed: Vec<Arc<[f64]>> = {
+            let computed: Vec<KernelRow> = {
                 let this = &*self;
                 let missing = &missing;
                 scoped_map(threads, missing.len(), move |m| this.compute_row(missing[m].1))
             };
-            for (&(p, i), arc) in missing.iter().zip(computed) {
-                self.insert_arc(i, Arc::clone(&arc));
-                pinned.insert(i, Arc::clone(&arc));
-                out[p] = Some(arc);
+            for (&(p, i), row) in missing.iter().zip(computed) {
+                self.insert_arc(i, row.clone());
+                pinned.insert(i, row.clone());
+                out[p] = Some(row);
             }
         }
         // duplicate positions: serve from the pinned set
         for (p, &i) in idxs.iter().enumerate() {
             if out[p].is_none() {
-                out[p] = Some(Arc::clone(&pinned[&i]));
+                out[p] = Some(pinned[&i].clone());
             }
         }
         out.into_iter().map(|o| o.expect("row filled")).collect()
     }
 
     /// Two rows at once — the SMO per-iteration access pattern. Fetches
-    /// both through the LRU (capacity ≥ 2 guarantees fetching j cannot
-    /// evict the just-fetched i, which sits at the MRU head) and returns
-    /// both borrows.
-    pub fn row_pair(&mut self, i: usize, j: usize) -> (&[f64], &[f64]) {
-        self.row(i);
-        self.row(j);
-        let si = self.map[&i];
-        let sj = self.map[&j];
-        debug_assert!(i == j || si != sj);
-        // SAFETY: `si`/`sj` index disjoint slots (or identical for i == j,
-        // where two shared borrows alias harmlessly); both live as long as
-        // &self and nothing else mutates while the shared borrows exist.
-        unsafe {
-            let a = std::slice::from_raw_parts(self.slots[si].data.as_ptr(), self.slots[si].data.len());
-            let b = std::slice::from_raw_parts(self.slots[sj].data.as_ptr(), self.slots[sj].data.len());
-            (a, b)
-        }
+    /// both through the LRU and returns the refcounted rows (owned, so no
+    /// aliasing games: this replaced an `unsafe` double-borrow).
+    pub fn row_pair(&mut self, i: usize, j: usize) -> (KernelRow, KernelRow) {
+        let a = self.row_arc(i);
+        let b = self.row_arc(j);
+        (a, b)
     }
 
     /// Single kernel value; uses a cached row when present, else computes
-    /// the scalar directly (does not pollute the cache).
+    /// the scalar directly (does not pollute the cache). On the f32 tier a
+    /// cached-row hit returns the narrowed value (consistent with what row
+    /// consumers read); the scalar path is always full precision.
     pub fn value(&mut self, i: usize, j: usize) -> f64 {
         if let Some(&slot) = self.map.get(&i) {
             self.stats.hits += 1;
             self.touch(slot);
-            return self.slots[slot].data[j];
+            return self.slots[slot].data.get(j);
         }
         if let Some(&slot) = self.map.get(&j) {
             self.stats.hits += 1;
             self.touch(slot);
-            return self.slots[slot].data[i];
+            return self.slots[slot].data.get(i);
         }
         self.eval.eval(i, j)
     }
@@ -404,9 +432,9 @@ mod tests {
             c.eval().eval_row(2, &mut row);
             row
         };
-        assert_eq!(c.row(2), &expect[..]);
+        assert_eq!(c.row(2).to_f64_vec(), expect);
         assert_eq!(c.stats().misses, 1);
-        assert_eq!(c.row(2), &expect[..]);
+        assert_eq!(c.row(2).to_f64_vec(), expect);
         assert_eq!(c.stats().hits, 1);
     }
 
@@ -428,12 +456,12 @@ mod tests {
     #[test]
     fn eviction_preserves_row_values() {
         let mut c = cache(2);
-        let r0: Vec<f64> = c.row(0).to_vec();
+        let r0: Vec<f64> = c.row(0).to_f64_vec();
         c.row(1);
         c.row(2); // evict row 0's slot
         c.row(3); // evict row 1's slot
         // re-fetch 0 and verify identical values after slot reuse
-        let r0_again: Vec<f64> = c.row(0).to_vec();
+        let r0_again: Vec<f64> = c.row(0).to_f64_vec();
         assert_eq!(r0, r0_again);
     }
 
@@ -441,11 +469,15 @@ mod tests {
     fn row_arc_survives_eviction() {
         let mut c = cache(2);
         let pinned = c.row_arc(0);
-        let expect: Vec<f64> = pinned.to_vec();
+        let expect: Vec<f64> = pinned.to_f64_vec();
         c.row(1);
         c.row(2); // 0 falls out of the LRU
         c.row(3);
-        assert_eq!(&pinned[..], &expect[..], "pinned Arc row must stay intact");
+        assert_eq!(
+            pinned.to_f64_vec(),
+            expect,
+            "pinned refcounted row must stay intact"
+        );
         assert!(!c.map.contains_key(&0));
     }
 
@@ -454,13 +486,13 @@ mod tests {
         let mut seq = cache(6);
         let mut blk = cache(6);
         let idxs = [3usize, 1, 3, 5];
-        let expect: Vec<Vec<f64>> = idxs.iter().map(|&i| seq.row(i).to_vec()).collect();
+        let expect: Vec<Vec<f64>> = idxs.iter().map(|&i| seq.row(i).to_f64_vec()).collect();
         for threads in [1usize, 4] {
             blk.clear();
             let got = blk.rows_block(&idxs, threads);
             assert_eq!(got.len(), idxs.len());
             for (g, e) in got.iter().zip(&expect) {
-                assert_eq!(&g[..], &e[..], "threads={threads}");
+                assert_eq!(&g.to_f64_vec(), e, "threads={threads}");
             }
         }
         // 3 unique rows resident afterwards
@@ -477,7 +509,7 @@ mod tests {
         let got = c.rows_block(&idxs, 2);
         let mut reference = cache(6);
         for (g, &i) in got.iter().zip(&idxs) {
-            assert_eq!(&g[..], reference.row(i), "row {i}");
+            assert_eq!(g.to_f64_vec(), reference.row(i).to_f64_vec(), "row {i}");
         }
     }
 
@@ -512,6 +544,64 @@ mod tests {
         let misses = c.stats().misses;
         c.row(0);
         assert_eq!(c.stats().misses, misses + 1);
+    }
+
+    #[test]
+    fn f32_tier_rows_are_narrowed_f64_rows() {
+        let n = 6;
+        let data: Vec<f32> = (0..n * 2).map(|i| (i as f32) * 0.5).collect();
+        let ds = Dataset::new(
+            "f32",
+            DataMatrix::dense(n, 2, data),
+            vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+        );
+        let eval = KernelEval::new(ds, Kernel::rbf(0.3));
+        let mut c = KernelCache::with_row_capacity_dtype(eval.clone(), 4, super::CacheDtype::F32);
+        assert_eq!(c.dtype(), super::CacheDtype::F32);
+        let mut direct = vec![0.0f64; n];
+        eval.eval_row(2, &mut direct);
+        let row = c.row_arc(2);
+        assert!(row.as_f64().is_none());
+        for j in 0..n {
+            let narrowed = (direct[j] as f32) as f64;
+            assert_eq!(row.get(j).to_bits(), narrowed.to_bits(), "j={j}");
+            assert!((row.get(j) - direct[j]).abs() <= 1e-6);
+        }
+        // value() served from the cached row returns the narrowed value
+        assert_eq!(c.value(2, 3).to_bits(), ((direct[3] as f32) as f64).to_bits());
+    }
+
+    #[test]
+    fn f32_byte_budget_fits_twice_the_rows() {
+        let n = 6;
+        let ds = Dataset::new(
+            "b32",
+            DataMatrix::dense(n, 1, vec![0.0; n]),
+            vec![1., -1., 1., -1., 1., -1.],
+        );
+        let eval = KernelEval::new(ds, Kernel::Linear);
+        let bytes = 6 * 8 * 3;
+        let c64 = KernelCache::with_byte_budget_dtype(eval.clone(), bytes, super::CacheDtype::F64);
+        let c32 = KernelCache::with_byte_budget_dtype(eval, bytes, super::CacheDtype::F32);
+        assert_eq!(c64.capacity_rows(), 3);
+        assert_eq!(c32.capacity_rows(), 6);
+    }
+
+    #[test]
+    fn row_pair_returns_owned_rows() {
+        let mut c = cache(2);
+        let (a, b) = c.row_pair(1, 4);
+        let mut ea = vec![0.0; c.n()];
+        let mut eb = vec![0.0; c.n()];
+        c.eval().eval_row(1, &mut ea);
+        c.eval().eval_row(4, &mut eb);
+        assert_eq!(a.to_f64_vec(), ea);
+        assert_eq!(b.to_f64_vec(), eb);
+        // owned rows survive subsequent evictions
+        c.row(0);
+        c.row(2);
+        c.row(3);
+        assert_eq!(a.to_f64_vec(), ea);
     }
 
     #[test]
@@ -569,7 +659,7 @@ mod tests {
             1 << 20,
         );
         for i in 0..proj.len() {
-            let got = projected.row(i).to_vec();
+            let got = projected.row(i).to_f64_vec();
             let mut direct = vec![0.0; proj.len()];
             view_eval.eval_row(i, &mut direct);
             // bit-identical, not approximately equal
@@ -651,8 +741,8 @@ mod tests {
         let shared = SharedKernelCache::with_byte_budget(eval.clone(), 1 << 20);
         let mut a = KernelCache::with_shared_backing(Arc::clone(&shared), 1 << 20);
         let mut b = KernelCache::with_shared_backing(Arc::clone(&shared), 1 << 20);
-        let ra = a.row(2).to_vec();
-        let rb = b.row(2).to_vec();
+        let ra = a.row(2).to_f64_vec();
+        let rb = b.row(2).to_f64_vec();
         assert_eq!(ra, rb);
         // second local cache adopted the shared row: one shared miss total
         assert_eq!(shared.stats().misses, 1);

@@ -1,0 +1,239 @@
+//! Storage precision of cached kernel rows: the f64 identity tier and the
+//! half-footprint f32 tier.
+//!
+//! Kernel rows are always *computed* in f64 (`KernelEval`'s LibSVM-style
+//! double math) and every gradient/objective accumulation that consumes
+//! them stays f64. The dtype here governs only what the caches *store*:
+//!
+//! - [`CacheDtype::F64`] (default) keeps the computed bits verbatim —
+//!   every existing bit-identity pin holds unchanged.
+//! - [`CacheDtype::F32`] narrows each element with `as f32` on insert and
+//!   widens with `as f64` on read, halving cache footprint (twice the
+//!   resident rows per byte budget) at ~1e-7 relative row error. End-to-end
+//!   results are epsilon-close, not bit-identical; the contract is pinned
+//!   by `tests/kernel_identity.rs`.
+//!
+//! [`KernelRow`] (owned, refcounted) and [`RowView`] (borrowed) make the
+//! precision explicit at every consumer, so a hot loop can match once on
+//! the variant and run a full-speed f64 fast path.
+
+use std::sync::Arc;
+
+/// Storage precision for cached kernel rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CacheDtype {
+    /// 8 bytes/element; cached rows are bit-identical to direct evaluation.
+    #[default]
+    F64,
+    /// 4 bytes/element; rows round through f32, halving cache footprint.
+    F32,
+}
+
+impl CacheDtype {
+    /// Bytes per stored row element (sizes cache byte budgets).
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            CacheDtype::F64 => std::mem::size_of::<f64>(),
+            CacheDtype::F32 => std::mem::size_of::<f32>(),
+        }
+    }
+}
+
+/// A refcounted kernel row in either storage precision. Cheap to clone
+/// (one `Arc` bump); stays valid after the owning cache evicts the slot,
+/// which is what lets callers pin row blocks for parallel sweeps.
+#[derive(Debug, Clone)]
+pub enum KernelRow {
+    /// Full-precision storage (the bit-identity tier).
+    F64(Arc<[f64]>),
+    /// Narrowed storage (the f32 cache tier).
+    F32(Arc<[f32]>),
+}
+
+impl KernelRow {
+    /// Store a freshly computed f64 row at the given precision. F32 narrows
+    /// each element with `as f32` (round-to-nearest-even).
+    pub fn from_f64(data: Vec<f64>, dtype: CacheDtype) -> KernelRow {
+        match dtype {
+            CacheDtype::F64 => KernelRow::F64(data.into()),
+            CacheDtype::F32 => {
+                let narrowed: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+                KernelRow::F32(narrowed.into())
+            }
+        }
+    }
+
+    /// The storage precision of this row.
+    pub fn dtype(&self) -> CacheDtype {
+        match self {
+            KernelRow::F64(_) => CacheDtype::F64,
+            KernelRow::F32(_) => CacheDtype::F32,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            KernelRow::F64(v) => v.len(),
+            KernelRow::F32(v) => v.len(),
+        }
+    }
+
+    /// True when the row has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element `j` widened to f64 (a plain load on the F64 tier).
+    #[inline]
+    pub fn get(&self, j: usize) -> f64 {
+        match self {
+            KernelRow::F64(v) => v[j],
+            KernelRow::F32(v) => v[j] as f64,
+        }
+    }
+
+    /// Borrowed view of the row.
+    #[inline]
+    pub fn view(&self) -> RowView<'_> {
+        match self {
+            KernelRow::F64(v) => RowView::F64(v),
+            KernelRow::F32(v) => RowView::F32(v),
+        }
+    }
+
+    /// The full-precision slice when this is an F64 row — the hot loops'
+    /// match-once fast path.
+    #[inline]
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            KernelRow::F64(v) => Some(v),
+            KernelRow::F32(_) => None,
+        }
+    }
+
+    /// Copy out as f64 (widening the F32 tier).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            KernelRow::F64(v) => v.to_vec(),
+            KernelRow::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// True when both rows share the same allocation (same residency).
+    pub fn ptr_eq(a: &KernelRow, b: &KernelRow) -> bool {
+        match (a, b) {
+            (KernelRow::F64(x), KernelRow::F64(y)) => Arc::ptr_eq(x, y),
+            (KernelRow::F32(x), KernelRow::F32(y)) => Arc::ptr_eq(x, y),
+            _ => false,
+        }
+    }
+}
+
+/// A borrowed kernel row in either storage precision (what
+/// `KernelCache::row` hands out).
+#[derive(Debug, Clone, Copy)]
+pub enum RowView<'a> {
+    /// Full-precision storage (the bit-identity tier).
+    F64(&'a [f64]),
+    /// Narrowed storage (the f32 cache tier).
+    F32(&'a [f32]),
+}
+
+impl<'a> RowView<'a> {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            RowView::F64(v) => v.len(),
+            RowView::F32(v) => v.len(),
+        }
+    }
+
+    /// True when the row has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element `j` widened to f64 (a plain load on the F64 tier).
+    #[inline]
+    pub fn get(&self, j: usize) -> f64 {
+        match self {
+            RowView::F64(v) => v[j],
+            RowView::F32(v) => v[j] as f64,
+        }
+    }
+
+    /// The full-precision slice when this is an F64 view.
+    #[inline]
+    pub fn as_f64(&self) -> Option<&'a [f64]> {
+        match self {
+            RowView::F64(v) => Some(v),
+            RowView::F32(_) => None,
+        }
+    }
+
+    /// Copy out as f64 (widening the F32 tier).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            RowView::F64(v) => v.to_vec(),
+            RowView::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_tier_preserves_bits() {
+        let data = vec![0.1, -2.5e300, 3.0f64.exp(), 0.0];
+        let row = KernelRow::from_f64(data.clone(), CacheDtype::F64);
+        assert_eq!(row.dtype(), CacheDtype::F64);
+        for (j, &d) in data.iter().enumerate() {
+            assert_eq!(row.get(j).to_bits(), d.to_bits());
+            assert_eq!(row.view().get(j).to_bits(), d.to_bits());
+        }
+        assert_eq!(row.to_f64_vec(), data);
+        assert!(row.as_f64().is_some());
+    }
+
+    #[test]
+    fn f32_tier_rounds_through_f32() {
+        let data = vec![0.1f64, 1.0, -3.25, 1e-9];
+        let row = KernelRow::from_f64(data.clone(), CacheDtype::F32);
+        assert_eq!(row.dtype(), CacheDtype::F32);
+        assert!(row.as_f64().is_none());
+        for (j, &d) in data.iter().enumerate() {
+            assert_eq!(row.get(j).to_bits(), ((d as f32) as f64).to_bits());
+        }
+        // exactly-representable values survive the round trip
+        assert_eq!(row.get(1), 1.0);
+        assert_eq!(row.get(2), -3.25);
+    }
+
+    #[test]
+    fn element_bytes_sizes() {
+        assert_eq!(CacheDtype::F64.element_bytes(), 8);
+        assert_eq!(CacheDtype::F32.element_bytes(), 4);
+    }
+
+    #[test]
+    fn ptr_eq_tracks_allocation() {
+        let a = KernelRow::from_f64(vec![1.0, 2.0], CacheDtype::F64);
+        let b = a.clone();
+        let c = KernelRow::from_f64(vec![1.0, 2.0], CacheDtype::F64);
+        let d = KernelRow::from_f64(vec![1.0, 2.0], CacheDtype::F32);
+        assert!(KernelRow::ptr_eq(&a, &b));
+        assert!(!KernelRow::ptr_eq(&a, &c));
+        assert!(!KernelRow::ptr_eq(&a, &d));
+    }
+
+    #[test]
+    fn empty_rows() {
+        let row = KernelRow::from_f64(vec![], CacheDtype::F32);
+        assert!(row.is_empty());
+        assert!(row.view().is_empty());
+        assert_eq!(row.to_f64_vec(), Vec::<f64>::new());
+    }
+}

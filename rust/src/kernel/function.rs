@@ -57,6 +57,40 @@ impl Kernel {
         }
     }
 
+    /// Finish a whole kernel row in place: `out` arrives holding raw dot
+    /// products and leaves holding kernel values. The kernel-variant
+    /// dispatch and the invariant operands (γ, coef0, `sq_i`) are hoisted
+    /// out of the element loop — the per-element arithmetic is exactly
+    /// [`from_dot`](Kernel::from_dot)'s, so the transformed row is
+    /// bit-identical to calling `from_dot` per element (pinned by
+    /// `tests/kernel_identity.rs`).
+    pub fn apply_row(&self, out: &mut [f64], sq_i: f64, sq_js: &[f64]) {
+        debug_assert_eq!(out.len(), sq_js.len());
+        match *self {
+            Kernel::Rbf { gamma } => {
+                for (o, &sq_j) in out.iter_mut().zip(sq_js) {
+                    let d2 = (sq_i + sq_j - 2.0 * *o).max(0.0);
+                    *o = (-gamma * d2).exp();
+                }
+            }
+            Kernel::Linear => {}
+            Kernel::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => {
+                for o in out.iter_mut() {
+                    *o = (gamma * *o + coef0).powi(degree as i32);
+                }
+            }
+            Kernel::Sigmoid { gamma, coef0 } => {
+                for o in out.iter_mut() {
+                    *o = (gamma * *o + coef0).tanh();
+                }
+            }
+        }
+    }
+
     /// γ when the kernel has one (used by the XLA artifact dispatch, which
     /// only supports RBF — the paper's kernel).
     pub fn gamma(&self) -> Option<f64> {
@@ -104,7 +138,39 @@ impl KernelEval {
     }
 
     /// Full kernel row K(xᵢ, ·) into `out` (len = n).
+    ///
+    /// Dense data takes the vectorizable fast path: one
+    /// [`simd::row_dots_dense`](super::simd::row_dots_dense) sweep fills
+    /// the raw dot products, then [`Kernel::apply_row`] finishes them with
+    /// the kernel dispatch hoisted out of the loop. Sparse data hoists the
+    /// query row's index/value slices and merge-joins per element. Both
+    /// paths are bit-identical to [`eval_row_reference`] (the retained
+    /// naive loop) — pinned by `tests/kernel_identity.rs`.
+    ///
+    /// [`eval_row_reference`]: KernelEval::eval_row_reference
     pub fn eval_row(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.len());
+        let sq_i = self.ds.sq_norms[i];
+        match &self.ds.x {
+            crate::data::DataMatrix::Dense { cols, data, .. } => {
+                let q = &data[i * cols..(i + 1) * cols];
+                super::simd::row_dots_dense(q, data, *cols, out);
+            }
+            crate::data::DataMatrix::Sparse(m) => {
+                let (qi, qv) = m.row(i);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = m.dot_row_with(j, qi, qv);
+                }
+            }
+        }
+        self.kernel.apply_row(out, sq_i, &self.ds.sq_norms);
+    }
+
+    /// The pre-vectorization row fill: per-element dot + full
+    /// [`Kernel::from_dot`] dispatch inside the loop. Retained as the
+    /// differential-testing and benchmarking reference for
+    /// [`eval_row`](KernelEval::eval_row); not used on any hot path.
+    pub fn eval_row_reference(&self, i: usize, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.len());
         let sq_i = self.ds.sq_norms[i];
         for (j, o) in out.iter_mut().enumerate() {
@@ -131,6 +197,35 @@ impl KernelEval {
     ///
     /// [`eval_cross`]: KernelEval::eval_cross
     pub fn eval_cross_row(&self, i: usize, other: &Dataset, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), other.len());
+        let sq_i = self.ds.sq_norms[i];
+        match (&self.ds.x, &other.x) {
+            (
+                crate::data::DataMatrix::Dense { cols, data, .. },
+                crate::data::DataMatrix::Dense {
+                    cols: ocols,
+                    data: odata,
+                    ..
+                },
+            ) => {
+                debug_assert_eq!(cols, ocols);
+                let q = &data[i * cols..(i + 1) * cols];
+                super::simd::row_dots_dense(q, odata, *ocols, out);
+            }
+            _ => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.ds.x.dot_cross(i, &other.x, j);
+                }
+            }
+        }
+        self.kernel.apply_row(out, sq_i, &other.sq_norms);
+    }
+
+    /// The pre-vectorization cross-row fill (per-element
+    /// [`eval_cross`](KernelEval::eval_cross)). Retained as the
+    /// differential-testing and benchmarking reference for
+    /// [`eval_cross_row`](KernelEval::eval_cross_row).
+    pub fn eval_cross_row_reference(&self, i: usize, other: &Dataset, out: &mut [f64]) {
         debug_assert_eq!(out.len(), other.len());
         let sq_i = self.ds.sq_norms[i];
         for (j, o) in out.iter_mut().enumerate() {
@@ -255,6 +350,54 @@ mod tests {
                         ev.eval_cross(i, &other, j).to_bits(),
                         "kernel {kernel:?} i={i} j={j}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_row_bit_identical_to_reference_dense_and_sparse() {
+        use crate::data::CsrMatrix;
+        let dense = toy();
+        let sparse = Dataset::new(
+            "sp",
+            DataMatrix::Sparse(CsrMatrix::from_rows(
+                3,
+                &[
+                    vec![(0, 1.0), (2, 2.0)],
+                    vec![(1, 3.0)],
+                    vec![(0, 4.0), (1, 5.0), (2, 6.0)],
+                ],
+            )),
+            vec![1.0, -1.0, 1.0],
+        );
+        for ds in [dense, sparse] {
+            for kernel in [
+                Kernel::rbf(0.7),
+                Kernel::Linear,
+                Kernel::Poly {
+                    gamma: 0.5,
+                    coef0: 1.0,
+                    degree: 3,
+                },
+                Kernel::Sigmoid {
+                    gamma: 0.2,
+                    coef0: 0.1,
+                },
+            ] {
+                let ev = KernelEval::new(ds.clone(), kernel);
+                let n = ev.len();
+                let (mut fast, mut naive) = (vec![0.0; n], vec![0.0; n]);
+                for i in 0..n {
+                    ev.eval_row(i, &mut fast);
+                    ev.eval_row_reference(i, &mut naive);
+                    for j in 0..n {
+                        assert_eq!(
+                            fast[j].to_bits(),
+                            naive[j].to_bits(),
+                            "{kernel:?} i={i} j={j}"
+                        );
+                    }
                 }
             }
         }

@@ -10,9 +10,12 @@
 //! any number of per-run [`KernelCache`]s over the same dataset.
 
 mod cache;
+mod dtype;
 mod function;
 mod shared;
+pub mod simd;
 
 pub use cache::{CacheStats, KernelCache};
+pub use dtype::{CacheDtype, KernelRow, RowView};
 pub use function::{Kernel, KernelEval};
 pub use shared::SharedKernelCache;

@@ -4,8 +4,9 @@
 //! *same* dataset at once. Every chain with the same γ needs the same RBF
 //! rows for seeding and warm-start gradients (rows depend on the data and
 //! γ, **not** on C), so recomputing them per chain is pure waste. This
-//! store computes each row once process-wide and hands out `Arc<[f64]>`
-//! clones.
+//! store computes each row once process-wide and hands out refcounted
+//! [`KernelRow`] clones (f64 by default; the f32 tier halves the
+//! footprint).
 //!
 //! Design:
 //!
@@ -22,6 +23,7 @@
 //! - **FIFO eviction** per shard under a byte budget. Evicting drops the
 //!   shard's `Arc`; readers holding clones are unaffected.
 
+use super::dtype::{CacheDtype, KernelRow};
 use super::function::KernelEval;
 use crate::kernel::CacheStats;
 use std::collections::{HashMap, VecDeque};
@@ -32,7 +34,7 @@ use std::sync::{Arc, Mutex, RwLock};
 const DEFAULT_SHARDS: usize = 16;
 
 struct Shard {
-    rows: RwLock<HashMap<usize, Arc<[f64]>>>,
+    rows: RwLock<HashMap<usize, KernelRow>>,
     /// Insertion order for FIFO eviction. Locked only on insert.
     order: Mutex<VecDeque<usize>>,
 }
@@ -46,14 +48,28 @@ pub struct SharedKernelCache {
     eval: KernelEval,
     shards: Vec<Shard>,
     capacity_rows_per_shard: usize,
+    dtype: CacheDtype,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
 }
 
 impl SharedKernelCache {
-    /// Store with an explicit total row capacity split over `shards`.
+    /// Store with an explicit total row capacity split over `shards`,
+    /// f64 storage.
     pub fn new(eval: KernelEval, shards: usize, capacity_rows: usize) -> Arc<SharedKernelCache> {
+        Self::new_dtype(eval, shards, capacity_rows, CacheDtype::F64)
+    }
+
+    /// Like [`new`](Self::new) with an explicit row-storage precision.
+    /// Rows are still *computed* in f64; [`CacheDtype::F32`] narrows them
+    /// on insert, halving the store's footprint.
+    pub fn new_dtype(
+        eval: KernelEval,
+        shards: usize,
+        capacity_rows: usize,
+        dtype: CacheDtype,
+    ) -> Arc<SharedKernelCache> {
         let shards = shards.max(1);
         let per_shard = (capacity_rows / shards).max(1);
         Arc::new(SharedKernelCache {
@@ -65,18 +81,30 @@ impl SharedKernelCache {
                 })
                 .collect(),
             capacity_rows_per_shard: per_shard,
+            dtype,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         })
     }
 
-    /// Store sized in bytes (row = n·8 bytes) with the default shard
-    /// count; always at least one row per shard.
+    /// Store sized in bytes (row = n · element size) with the default
+    /// shard count; always at least one row per shard.
     pub fn with_byte_budget(eval: KernelEval, bytes: usize) -> Arc<SharedKernelCache> {
+        Self::with_byte_budget_dtype(eval, bytes, CacheDtype::F64)
+    }
+
+    /// Like [`with_byte_budget`](Self::with_byte_budget) with an explicit
+    /// row-storage precision; the f32 tier fits twice the rows in the same
+    /// budget.
+    pub fn with_byte_budget_dtype(
+        eval: KernelEval,
+        bytes: usize,
+        dtype: CacheDtype,
+    ) -> Arc<SharedKernelCache> {
         let n = eval.len().max(1);
-        let rows = (bytes / (n * std::mem::size_of::<f64>())).max(DEFAULT_SHARDS);
-        Self::new(eval, DEFAULT_SHARDS, rows)
+        let rows = (bytes / (n * dtype.element_bytes())).max(DEFAULT_SHARDS);
+        Self::new_dtype(eval, DEFAULT_SHARDS, rows, dtype)
     }
 
     /// The bound evaluator (dataset + kernel).
@@ -89,26 +117,31 @@ impl SharedKernelCache {
         self.eval.len()
     }
 
+    /// Storage precision of resident rows.
+    pub fn dtype(&self) -> CacheDtype {
+        self.dtype
+    }
+
     /// Kernel row K(xᵢ, ·), computed at most once per residency.
-    pub fn row(&self, i: usize) -> Arc<[f64]> {
+    pub fn row(&self, i: usize) -> KernelRow {
         let shard = &self.shards[i % self.shards.len()];
         if let Some(row) = shard.rows.read().expect("shared cache poisoned").get(&i) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(row);
+            return row.clone();
         }
         // Miss: evaluate with no lock held.
         let mut data = vec![0.0f64; self.eval.len()];
         self.eval.eval_row(i, &mut data);
-        let arc: Arc<[f64]> = data.into();
+        let arc = KernelRow::from_f64(data, self.dtype);
 
         let mut rows = shard.rows.write().expect("shared cache poisoned");
         if let Some(existing) = rows.get(&i) {
             // Lost the compute race; adopt the winner (identical bits).
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(existing);
+            return existing.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        rows.insert(i, Arc::clone(&arc));
+        rows.insert(i, arc.clone());
         let mut order = shard.order.lock().expect("shared cache poisoned");
         order.push_back(i);
         while rows.len() > self.capacity_rows_per_shard {
@@ -166,7 +199,7 @@ mod tests {
             let row = cache.row(i);
             let mut direct = vec![0.0; 10];
             ev.eval_row(i, &mut direct);
-            assert_eq!(&row[..], &direct[..]);
+            assert_eq!(row.to_f64_vec(), direct);
         }
         let s = cache.stats();
         assert_eq!(s.misses, 10);
@@ -177,7 +210,10 @@ mod tests {
         let cache = SharedKernelCache::new(eval(8), 2, 32);
         let a = cache.row(3);
         let b = cache.row(3);
-        assert!(Arc::ptr_eq(&a, &b), "same residency must share one Arc");
+        assert!(
+            KernelRow::ptr_eq(&a, &b),
+            "same residency must share one allocation"
+        );
         assert_eq!(cache.stats().hits, 1);
         assert_eq!(cache.stats().misses, 1);
     }
@@ -195,7 +231,7 @@ mod tests {
         for (i, row) in rows {
             let mut direct = vec![0.0; n];
             ev.eval_row(i, &mut direct);
-            assert_eq!(&row[..], &direct[..]);
+            assert_eq!(row.to_f64_vec(), direct);
         }
         // each row computed at most... once per race window; at least all misses counted
         assert!(cache.stats().misses >= n as u64);
@@ -223,5 +259,35 @@ mod tests {
         let cache = SharedKernelCache::with_byte_budget(eval(6), 1);
         // min one row per shard
         assert!(cache.capacity_rows_per_shard >= 1);
+    }
+
+    #[test]
+    fn f32_tier_rows_are_narrowed() {
+        let n = 10;
+        let ev = eval(n);
+        let cache = SharedKernelCache::new_dtype(ev.clone(), 2, 64, CacheDtype::F32);
+        assert_eq!(cache.dtype(), CacheDtype::F32);
+        for i in 0..n {
+            let row = cache.row(i);
+            assert!(row.as_f64().is_none());
+            let mut direct = vec![0.0; n];
+            ev.eval_row(i, &mut direct);
+            for j in 0..n {
+                let narrowed = (direct[j] as f32) as f64;
+                assert_eq!(row.get(j).to_bits(), narrowed.to_bits(), "({i},{j})");
+                assert!((row.get(j) - direct[j]).abs() <= 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_byte_budget_doubles_capacity() {
+        let ev = eval(8);
+        let c64 = SharedKernelCache::with_byte_budget_dtype(ev.clone(), 8 * 8 * 64, CacheDtype::F64);
+        let c32 = SharedKernelCache::with_byte_budget_dtype(ev, 8 * 8 * 64, CacheDtype::F32);
+        assert_eq!(
+            c32.capacity_rows_per_shard,
+            c64.capacity_rows_per_shard * 2
+        );
     }
 }

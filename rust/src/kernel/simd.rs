@@ -1,0 +1,149 @@
+//! Chunked flat-slice arithmetic primitives for the kernel hot path.
+//!
+//! Every workload in this repo — alpha-seeded k-fold CV, one-vs-one
+//! multiclass, and the serving tier — bottoms out in the same row fill:
+//! dot products of one query row against a contiguous block of rows. The
+//! loops here are written the way rustc's auto-vectorizer likes them:
+//! flat slices, a fixed unroll of [`LANES`] independent accumulators, no
+//! bounds checks in the steady state (`chunks_exact`), and a scalar tail.
+//! No `unsafe`, no intrinsics — the codegen win comes purely from loop
+//! shape.
+//!
+//! **Accumulation order is a contract.** [`dot`] reproduces the exact
+//! floating-point order the repo has always used (`data::matrix::dense_dot`
+//! now delegates here): four independent f64 lanes over chunks of four
+//! elements, lanes reduced as `acc[0] + acc[1] + acc[2] + acc[3]`, then
+//! the remainder appended sequentially. Every bit-identity pin in the test
+//! suite (parallel-vs-sequential, batched-vs-pointwise, projected-vs-direct)
+//! rests on this order never changing; `tests/kernel_identity.rs` checks it
+//! against a retained naive reference across chunk-remainder edge dims.
+
+/// Unroll factor of the chunked loops — one accumulator per lane.
+pub const LANES: usize = 4;
+
+/// Dot product of two f32 slices with f64 accumulation (LibSVM's double
+/// kernel math). Bit-identical to the historical `dense_dot`: chunked
+/// 4-lane partial sums reduced left-to-right, sequential scalar tail.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc[0] += xa[0] as f64 * xb[0] as f64;
+        acc[1] += xa[1] as f64 * xb[1] as f64;
+        acc[2] += xa[2] as f64 * xb[2] as f64;
+        acc[3] += xa[3] as f64 * xb[3] as f64;
+    }
+    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        sum += *x as f64 * *y as f64;
+    }
+    sum
+}
+
+/// Squared Euclidean norm ‖a‖² with the same lane structure (and therefore
+/// the same bits) as `dot(a, a)`.
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// Dot products of query row `q` (len = `cols`) against every row of a
+/// row-major dense block `data` (len = `out.len() * cols`), one result per
+/// row. This is the vectorizable inner loop of the kernel row fill: the
+/// query slice stays hot in registers/L1 while the block streams through.
+/// Each element is exactly `dot(q, row_j)`, so the fill is bit-identical
+/// to the pointwise loop.
+pub fn row_dots_dense(q: &[f32], data: &[f32], cols: usize, out: &mut [f64]) {
+    debug_assert_eq!(q.len(), cols);
+    debug_assert_eq!(data.len(), out.len() * cols);
+    if cols == 0 {
+        out.fill(0.0);
+        return;
+    }
+    for (o, row) in out.iter_mut().zip(data.chunks_exact(cols)) {
+        *o = dot(q, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The historical accumulation order, spelled out index-by-index.
+    fn dot_reference(a: &[f32], b: &[f32]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += a[i] as f64 * b[i] as f64;
+            acc[1] += a[i + 1] as f64 * b[i + 1] as f64;
+            acc[2] += a[i + 2] as f64 * b[i + 2] as f64;
+            acc[3] += a[i + 3] as f64 * b[i + 3] as f64;
+        }
+        let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..a.len() {
+            sum += a[i] as f64 * b[i] as f64;
+        }
+        sum
+    }
+
+    fn pseudo(len: usize, salt: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let h = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+                (h % 1000) as f32 / 500.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot_bit_identical_to_reference_across_remainders() {
+        for len in 0..=19 {
+            let a = pseudo(len, 1);
+            let b = pseudo(len, 7);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                dot_reference(&a, &b).to_bits(),
+                "len={len}"
+            );
+        }
+        for len in [31usize, 64, 97, 123, 256] {
+            let a = pseudo(len, 3);
+            let b = pseudo(len, 11);
+            assert_eq!(dot(&a, &b).to_bits(), dot_reference(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn sq_norm_is_self_dot() {
+        for len in [0usize, 1, 4, 5, 13] {
+            let a = pseudo(len, 5);
+            assert_eq!(sq_norm(&a).to_bits(), dot(&a, &a).to_bits());
+        }
+    }
+
+    #[test]
+    fn row_dots_matches_pointwise() {
+        for cols in [1usize, 3, 4, 8, 13] {
+            let rows = 6;
+            let data = pseudo(rows * cols, 9);
+            let q = pseudo(cols, 2);
+            let mut out = vec![0.0; rows];
+            row_dots_dense(&q, &data, cols, &mut out);
+            for j in 0..rows {
+                let row = &data[j * cols..(j + 1) * cols];
+                assert_eq!(out[j].to_bits(), dot(&q, row).to_bits(), "cols={cols} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_width_rows_dot_to_zero() {
+        let mut out = vec![9.0; 4];
+        row_dots_dense(&[], &[], 0, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

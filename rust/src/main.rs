@@ -15,7 +15,7 @@ use alphaseed::config::RunConfig;
 use alphaseed::coordinator::{experiments, ModelRegistry, PredictServer, ServeModel};
 use alphaseed::cv::CvReport;
 use alphaseed::data::{read_libsvm, synth, write_libsvm};
-use alphaseed::kernel::{Kernel, KernelEval};
+use alphaseed::kernel::{CacheDtype, Kernel, KernelEval};
 use alphaseed::metrics::Table;
 use alphaseed::multiclass::MultiDataset;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
@@ -24,8 +24,8 @@ use alphaseed::smo::{
     Model, OneClassModel, OneClassProblem, QpProblem, SmoParams, Solver, SvrModel, SvrProblem,
 };
 use alphaseed::util::bench::{
-    check_bench_regression, check_serve_regression, render_gate_report, render_serve_gate_report,
-    GateTolerance, ServeGateTolerance,
+    check_bench_regression, check_kernel_regression, check_serve_regression, render_gate_report,
+    render_kernel_gate_report, render_serve_gate_report, GateTolerance, ServeGateTolerance,
 };
 use alphaseed::util::cli::{Args, Task};
 use alphaseed::util::json::Json;
@@ -85,6 +85,8 @@ fn print_help() {
            --seeder <name>     cold|ato|mir|sir|avg|top        (default sir)\n\
            --k <int>           folds                           (default 10)\n\
            --backend <b>       native|xla                      (default native)\n\
+           --cache-f32         store kernel-cache rows as f32 (2x row capacity;\n\
+                               accumulation stays f64 — see docs/ARCHITECTURE.md §3.7)\n\
            --seed <int>        RNG seed                        (default 42)\n\
          svr / oneclass options:\n\
            --epsilon <f>       SVR tube half-width             (default per dataset)\n\
@@ -102,6 +104,8 @@ fn print_help() {
            --task <t>          csvc|svr|oneclass model to train and serve\n\
            --port <int>        TCP port (default 7878; 0 picks a free port)\n\
            --probs             Platt-calibrate C-SVC probabilities (seeded CV)\n\
+           --backend <b>       native|xla batched decision fills (default native;\n\
+                               xla falls back to native per request if unavailable)\n\
          benchgate options:\n\
            --current <file>    freshly emitted BENCH_*.json\n\
            --baseline <file>   committed BENCH_*.baseline.json\n\
@@ -149,6 +153,17 @@ fn make_backend(args: &Args) -> Result<Option<XlaBackend>> {
             Ok(Some(b))
         }
         Err(e) => bail!(e),
+    }
+}
+
+/// `--cache-f32` stores kernel rows as f32 (half the bytes, twice the
+/// cached rows per budget); accumulation stays f64. Default f64 keeps the
+/// bit-identity pins.
+fn cache_dtype_arg(args: &Args) -> CacheDtype {
+    if args.flag("cache-f32") {
+        CacheDtype::F32
+    } else {
+        CacheDtype::F64
     }
 }
 
@@ -248,6 +263,7 @@ fn cmd_cv_svr(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown SVR seeder '{seeder_name}' (cold|ato|mir|sir)"))?;
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
     let seed = args.parse_or::<u64>("seed", 42)?;
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let rep = alphaseed::cv::run_kfold_svr(
@@ -260,6 +276,7 @@ fn cmd_cv_svr(args: &Args) -> Result<()> {
         alphaseed::cv::CvOptions {
             rng_seed: seed,
             max_rounds,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -297,6 +314,7 @@ fn cmd_cv_oneclass(args: &Args) -> Result<()> {
         other => bail!("unknown one-class seeder '{other}' (cold|sir)"),
     };
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let rep = alphaseed::cv::run_kfold_oneclass(
@@ -308,6 +326,7 @@ fn cmd_cv_oneclass(args: &Args) -> Result<()> {
         alphaseed::cv::CvOptions {
             rng_seed: seed,
             max_rounds,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -324,11 +343,13 @@ fn cmd_cv_csvc(args: &Args) -> Result<()> {
     let mut backend = make_backend(args)?;
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
     let seed = args.parse_or::<u64>("seed", 42)?;
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let opts = alphaseed::cv::CvOptions {
         rng_seed: seed,
         max_rounds,
+        cache_dtype,
         backend: backend
             .as_mut()
             .map(|b| b as &mut dyn ComputeBackend),
@@ -427,6 +448,7 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
     let seeder = args.str_or("seeder", "sir");
     let threads = args.parse_or("threads", 0usize)?;
     let seed = args.parse_or::<u64>("seed", 42)?;
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -440,6 +462,7 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
             seeder: seeder.clone(),
             threads,
             rng_seed: seed,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -479,6 +502,7 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
     let threads = args.parse_or("threads", 0usize)?;
     let seed = args.parse_or::<u64>("seed", 42)?;
     let warm_c = args.flag("warm-c");
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -492,6 +516,7 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
             threads,
             rng_seed: seed,
             warm_c,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -620,6 +645,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
     let seed = args.parse_or::<u64>("seed", 42)?;
     let fold_chain = !args.flag("no-fold-chain");
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let reports = alphaseed::cv::run_kfold_warm_c(
@@ -631,6 +657,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         alphaseed::cv::WarmCOptions {
             rng_seed: seed,
             fold_chain,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -716,6 +743,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     let port = args.parse_or("port", 7878u16)?;
+    // Serve routes batched decision fills through a per-handler-thread
+    // backend; xla degrades to native per request if artifacts are absent.
+    let backend = args
+        .str_or("backend", "native")
+        .parse::<BackendChoice>()
+        .map_err(anyhow::Error::msg)?;
     args.reject_unknown()?;
 
     println!(
@@ -725,7 +758,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.dim()
     );
     let registry = std::sync::Arc::new(ModelRegistry::new(model, "startup"));
-    let server = std::sync::Arc::new(PredictServer::with_registry(registry));
+    let server = std::sync::Arc::new(PredictServer::with_registry_backend(registry, backend));
     server.serve(&format!("127.0.0.1:{port}"), |addr| {
         println!("listening on {addr} — send {{\"op\":\"predict\",\"rows\":[[…]]}} lines");
     })?;
@@ -788,6 +821,7 @@ fn cmd_ovo(args: &Args) -> Result<()> {
     let seed = args.parse_or::<u64>("seed", 42)?;
     let threads = args.parse_or("threads", 0usize)?;
     let share_rows = !args.flag("no-share-rows");
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -801,6 +835,7 @@ fn cmd_ovo(args: &Args) -> Result<()> {
             rng_seed: seed,
             threads,
             share_rows,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -864,6 +899,7 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
     let seed = args.parse_or::<u64>("seed", 42)?;
     let warm_c = args.flag("warm-c");
     let share_rows = !args.flag("no-share-rows");
+    let cache_dtype = cache_dtype_arg(args);
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -878,6 +914,7 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
             rng_seed: seed,
             warm_c,
             share_rows,
+            cache_dtype,
             ..Default::default()
         },
     );
@@ -914,7 +951,9 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
 /// --baseline BENCH_cv.baseline.json [--report BENCHGATE.md]`. The record
 /// shape picks the gate: documents with a `serving` object (what
 /// `table_serve` emits) go through the batching-ratio + p99 serve gate,
-/// everything else through the seeded-vs-cold iteration gate. With
+/// documents with a `kernel` object (what `micro_hotpath` emits) through
+/// the naive-vs-simd row-fill speedup gate, everything else through the
+/// seeded-vs-cold iteration gate. With
 /// `--report` a markdown summary is written on pass *and* fail (CI
 /// uploads it as a PR artifact either way).
 fn cmd_benchgate(args: &Args) -> Result<()> {
@@ -937,9 +976,12 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     let current = read(&current_path)?;
     let baseline = read(&baseline_path)?;
     let is_serve = baseline.get("serving").is_some() || current.get("serving").is_some();
+    let is_kernel = baseline.get("kernel").is_some() || current.get("kernel").is_some();
     if let Some(report_path) = &report_path {
         let md = if is_serve {
             render_serve_gate_report(&current_path, &baseline_path, &current, &baseline, &serve_tol)
+        } else if is_kernel {
+            render_kernel_gate_report(&current_path, &baseline_path, &current, &baseline)
         } else {
             render_gate_report(&current_path, &baseline_path, &current, &baseline, &tol)
         };
@@ -949,6 +991,8 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     }
     let outcome = if is_serve {
         check_serve_regression(&current, &baseline, &serve_tol)
+    } else if is_kernel {
+        check_kernel_regression(&current, &baseline)
     } else {
         check_bench_regression(&current, &baseline, &tol)
     };

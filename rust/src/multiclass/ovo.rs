@@ -12,7 +12,7 @@ use super::dataset::MultiDataset;
 use super::report::{tally_votes, OvoCvReport, PairCvStat};
 use crate::cv::rescale_alpha;
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::seeding::{check_feasible, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
 use crate::util::pool::{effective_threads, scoped_map};
@@ -132,6 +132,10 @@ pub struct OvoOptions {
     /// rounds through the identity. Validated by the solver; inert
     /// without `shrinking`.
     pub carry_active_set: bool,
+    /// Storage precision of cached kernel rows (solver caches, per-pair
+    /// seed caches, and the shared full-dataset row store); see
+    /// [`CvOptions::cache_dtype`](crate::cv::CvOptions::cache_dtype).
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for OvoOptions {
@@ -146,6 +150,7 @@ impl Default for OvoOptions {
             threads: 0,
             share_rows: true,
             carry_active_set: true,
+            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -206,9 +211,10 @@ pub fn cv_ovo_opts(
     assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
     let folds = ds.stratified_folds(k, opts.rng_seed);
     let shared = opts.share_rows.then(|| {
-        SharedKernelCache::with_byte_budget(
+        SharedKernelCache::with_byte_budget_dtype(
             KernelEval::new(ds.kernel_dataset(), kernel),
             opts.shared_cache_bytes,
+            opts.cache_dtype,
         )
     });
     let pairs = class_pairs(&classes);
@@ -315,9 +321,10 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
             KernelEval::new(pair_ds.clone(), spec.kernel),
             spec.opts.seed_cache_bytes,
         ),
-        None => KernelCache::with_byte_budget(
+        None => KernelCache::with_byte_budget_dtype(
             KernelEval::new(pair_ds.clone(), spec.kernel),
             spec.opts.seed_cache_bytes,
+            spec.opts.cache_dtype,
         ),
     };
 
@@ -416,6 +423,7 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
                 shrinking: spec.opts.shrinking,
                 cache_bytes: spec.opts.cache_bytes,
                 threads: spec.solver_threads,
+                cache_dtype: spec.opts.cache_dtype,
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), spec.kernel), params);

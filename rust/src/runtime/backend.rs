@@ -39,6 +39,17 @@ pub trait ComputeBackend {
     /// K(q, j) = exp(−γ‖x_q − x_j‖²). Returns one `ds.len()` row per query.
     fn kernel_rows(&mut self, ds: &Dataset, gamma: f64, queries: &[usize]) -> Result<Vec<Vec<f64>>>;
 
+    /// Cross rows K(svᵩ, ·) over `data` for each query index into `sv` —
+    /// the serving tier's batched primitive (one row per support vector
+    /// per request batch). Returns one `data.len()` row per query.
+    fn kernel_cross_rows(
+        &mut self,
+        sv: &Dataset,
+        gamma: f64,
+        data: &Dataset,
+        queries: &[usize],
+    ) -> Result<Vec<Vec<f64>>>;
+
     /// fⱼ = Σᵢ coefᵢ·K(wᵢ, xⱼ) for all rows xⱼ of `x` — the decision /
     /// gradient-init bulk primitive.
     fn kernel_matvec(&mut self, x: &Dataset, w: &Dataset, coef: &[f64], gamma: f64)
@@ -65,6 +76,24 @@ impl ComputeBackend for NativeBackend {
         Ok(out)
     }
 
+    fn kernel_cross_rows(
+        &mut self,
+        sv: &Dataset,
+        gamma: f64,
+        data: &Dataset,
+        queries: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(sv.dim() == data.dim(), "SV/data width mismatch");
+        let eval = KernelEval::new(sv.clone(), Kernel::rbf(gamma));
+        let mut out = Vec::with_capacity(queries.len());
+        for &q in queries {
+            let mut row = vec![0.0f64; data.len()];
+            eval.eval_cross_row(q, data, &mut row);
+            out.push(row);
+        }
+        Ok(out)
+    }
+
     fn kernel_matvec(
         &mut self,
         x: &Dataset,
@@ -73,18 +102,19 @@ impl ComputeBackend for NativeBackend {
         gamma: f64,
     ) -> Result<Vec<f64>> {
         anyhow::ensure!(w.len() == coef.len(), "coef/W length mismatch");
+        // SV-outer accumulation over vectorized cross-row fills; for each
+        // output j the terms land in ascending-i order, the same operation
+        // sequence as the models' bulk path (`kernel_sums_minus_b`).
         let eval = KernelEval::new(w.clone(), Kernel::rbf(gamma));
-        Ok((0..x.len())
-            .map(|j| {
-                let mut acc = 0.0;
-                for i in 0..w.len() {
-                    if coef[i] != 0.0 {
-                        acc += coef[i] * eval.eval_cross(i, x, j);
-                    }
-                }
-                acc
-            })
-            .collect())
+        let mut acc = vec![0.0f64; x.len()];
+        let mut krow = vec![0.0f64; x.len()];
+        for (i, &c) in coef.iter().enumerate() {
+            eval.eval_cross_row(i, x, &mut krow);
+            for (a, &k) in acc.iter_mut().zip(&krow) {
+                *a += c * k;
+            }
+        }
+        Ok(acc)
     }
 }
 
@@ -106,6 +136,25 @@ mod tests {
         for (qi, &q) in [0usize, 5, 29].iter().enumerate() {
             for j in 0..d.len() {
                 assert!((rows[qi][j] - eval.eval(q, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_rows_match_pointwise_eval() {
+        let d = ds();
+        let sv = d.select(&[2, 9, 17]);
+        let mut b = NativeBackend;
+        let rows = b.kernel_cross_rows(&sv, 0.2, &d, &[0, 2]).unwrap();
+        let eval = KernelEval::new(sv.clone(), Kernel::rbf(0.2));
+        for (qi, &q) in [0usize, 2].iter().enumerate() {
+            assert_eq!(rows[qi].len(), d.len());
+            for j in 0..d.len() {
+                assert_eq!(
+                    rows[qi][j].to_bits(),
+                    eval.eval_cross(q, &d, j).to_bits(),
+                    "query {q} col {j}"
+                );
             }
         }
     }

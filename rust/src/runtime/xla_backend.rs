@@ -161,6 +161,49 @@ impl ComputeBackend for XlaBackend {
         Ok(out)
     }
 
+    fn kernel_cross_rows(
+        &mut self,
+        sv: &Dataset,
+        gamma: f64,
+        data: &Dataset,
+        queries: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(sv.dim() == data.dim(), "SV/data width mismatch");
+        let (n, d) = (data.len(), data.dim());
+        // Same artifact as kernel_rows — rbf_rows computes K(Q, X) for an
+        // arbitrary padded query block, so cross rows just pass `data` as X
+        // and the support vectors as queries.
+        let Some(op) = self.manifest.find_bucket("rbf_rows", 1, n, d).cloned() else {
+            self.stats.native_fallbacks += 1;
+            return self.fallback.kernel_cross_rows(sv, gamma, data, queries);
+        };
+        let x_pad = self.padded_features(data, op.n, op.d);
+        let x_lit = xla::Literal::vec1(&x_pad).reshape(&[op.n as i64, op.d as i64])?;
+        let gamma_lit = xla::Literal::vec1(&[gamma as f32]);
+
+        let sv_dense = sv.x.to_dense_vec();
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(op.b) {
+            let mut q_pad = vec![0.0f32; op.b * op.d];
+            for (qi, &gq) in chunk.iter().enumerate() {
+                q_pad[qi * op.d..qi * op.d + d].copy_from_slice(&sv_dense[gq * d..(gq + 1) * d]);
+            }
+            let q_lit = xla::Literal::vec1(&q_pad).reshape(&[op.b as i64, op.d as i64])?;
+            let flat = self.run(&op, &[x_lit.clone(), q_lit, gamma_lit.clone()])?;
+            anyhow::ensure!(flat.len() == op.b * op.n, "artifact output shape mismatch");
+            self.stats.artifact_calls += 1;
+            for qi in 0..chunk.len() {
+                out.push(
+                    flat[qi * op.n..qi * op.n + n]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect(),
+                );
+            }
+        }
+        Ok(out)
+    }
+
     fn kernel_matvec(
         &mut self,
         x: &Dataset,

@@ -59,6 +59,16 @@ impl ComputeBackend for XlaBackend {
         bail!("XLA backend disabled (built without the `xla` feature)")
     }
 
+    fn kernel_cross_rows(
+        &mut self,
+        _sv: &Dataset,
+        _gamma: f64,
+        _data: &Dataset,
+        _queries: &[usize],
+    ) -> Result<Vec<Vec<f64>>> {
+        bail!("XLA backend disabled (built without the `xla` feature)")
+    }
+
     fn kernel_matvec(
         &mut self,
         _x: &Dataset,

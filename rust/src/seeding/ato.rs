@@ -73,7 +73,7 @@ impl Seeder for Ato {
                 let coef = a_prev[j] * y[gj];
                 let row = cache.row(gj);
                 for (ti, &gt) in added.iter().enumerate() {
-                    f_t[ti] += coef * row[gt];
+                    f_t[ti] += coef * row.get(gt);
                 }
             }
         }
@@ -163,7 +163,7 @@ impl Seeder for Ato {
                     let row = cache.row(gt);
                     for (mi, &p) in m_set.iter().enumerate() {
                         let gp = prev[p];
-                        rhs[mi + 1] += y[gp] * coef * row[gp];
+                        rhs[mi + 1] += y[gp] * coef * row.get(gp);
                     }
                 }
                 for (k, &p) in r_active.iter().enumerate() {
@@ -172,7 +172,7 @@ impl Seeder for Ato {
                     let row = cache.row(gr);
                     for (mi, &pm) in m_set.iter().enumerate() {
                         let gm = prev[pm];
-                        rhs[mi + 1] += y[gm] * coef * row[gm];
+                        rhs[mi + 1] += y[gm] * coef * row.get(gm);
                     }
                 }
                 if cached_pinv.is_none() || cached_m != m_set {
@@ -183,7 +183,7 @@ impl Seeder for Ato {
                         let row = cache.row(gj);
                         for (mi, &pi) in m_set.iter().enumerate() {
                             let gi = prev[pi];
-                            bmat[(mi + 1, mj)] = y[gi] * y[gj] * row[gi];
+                            bmat[(mi + 1, mj)] = y[gi] * y[gj] * row.get(gi);
                         }
                     }
                     cached_pinv = Some(bmat.pinv());
@@ -204,10 +204,10 @@ impl Seeder for Ato {
                                    cache: &mut KernelCache| {
                 let row = cache.row(g_src);
                 for (i, &gi) in prev.iter().enumerate() {
-                    w_prev[i] += y[gi] * coef * row[gi];
+                    w_prev[i] += y[gi] * coef * row.get(gi);
                 }
                 for (ti, &gt) in added.iter().enumerate() {
-                    w_t[ti] += y[gt] * coef * row[gt];
+                    w_t[ti] += y[gt] * coef * row.get(gt);
                 }
             };
             for (mj, &pj) in m_set.iter().enumerate() {

@@ -85,7 +85,7 @@ impl Seeder for Mir {
             let coef = ar * y[gr];
             let row = cache.row(gr);
             for (i, &gi) in ctx.prev_train.iter().enumerate() {
-                rhs[i] += y[gi] * coef * row[gi];
+                rhs[i] += y[gi] * coef * row.get(gi);
             }
         }
         rhs[n] = target;
@@ -96,7 +96,7 @@ impl Seeder for Mir {
             let yt = y[gt];
             let row = cache.row(gt);
             for (i, &gi) in ctx.prev_train.iter().enumerate() {
-                a_mat[(i, t)] = y[gi] * yt * row[gi];
+                a_mat[(i, t)] = y[gi] * yt * row.get(gi);
             }
             a_mat[(n, t)] = yt;
         }

@@ -224,7 +224,7 @@ pub(crate) fn transplant_by_similarity(
             if used[ti] {
                 continue;
             }
-            let k = row[gt];
+            let k = row.get(gt);
             if best.map(|(_, bk)| k > bk).unwrap_or(true) {
                 best = Some((ti, k));
             }

@@ -68,7 +68,7 @@ impl Seeder for Sir {
                 if used[ti] || ctx.full.y[gt] != yp {
                     continue;
                 }
-                let k = row_p[gt];
+                let k = row_p.get(gt);
                 if best.map(|(_, bk)| k > bk).unwrap_or(true) {
                     best = Some((ti, k));
                 }

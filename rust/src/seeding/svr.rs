@@ -256,7 +256,7 @@ impl SvrSeeder for SvrMir {
             }
             let row = cache.row(gr);
             for (i, &gi) in ctx.prev_train.iter().enumerate() {
-                rhs[i] += dr * row[gi];
+                rhs[i] += dr * row.get(gi);
             }
         }
         rhs[n] = target;
@@ -266,7 +266,7 @@ impl SvrSeeder for SvrMir {
         for (t, &gt) in ctx.added.iter().enumerate() {
             let row = cache.row(gt);
             for (i, &gi) in ctx.prev_train.iter().enumerate() {
-                a_mat[(i, t)] = row[gi];
+                a_mat[(i, t)] = row.get(gi);
             }
             a_mat[(n, t)] = 1.0;
         }
@@ -364,7 +364,7 @@ impl SvrSeeder for SvrAto {
                 .iter()
                 .filter_map(|&np| {
                     let head = if dp > 0.0 { c - delta[np] } else { delta[np] + c };
-                    (head > self.drain_tol).then(|| (np, row_p[next[np]]))
+                    (head > self.drain_tol).then(|| (np, row_p.get(next[np])))
                 })
                 .collect();
             cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());

@@ -45,8 +45,8 @@ impl Seeder for Top {
             let row_t = cache.row(gt);
             let mut order: Vec<usize> = (0..next.len()).collect();
             order.sort_by(|&a, &b| {
-                row_t[next[b]]
-                    .partial_cmp(&row_t[next[a]])
+                row_t.get(next[b])
+                    .partial_cmp(&row_t.get(next[a]))
                     .unwrap_or(std::cmp::Ordering::Equal)
             });
 

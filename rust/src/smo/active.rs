@@ -37,7 +37,7 @@
 //! proposed seed is rejected outright; `tests/shrink_identity.rs` pins
 //! both statements).
 
-use std::sync::Arc;
+use crate::kernel::KernelRow;
 
 /// Position of one dual variable relative to its box `[0, C]` — the
 /// terminal partition [`SmoResult`](super::SmoResult) exports so the next
@@ -255,7 +255,7 @@ pub(crate) fn reconstruct_inactive(
     signs: &[f64],
     alpha: &[f64],
     map: impl Fn(usize) -> usize,
-    mut row: impl FnMut(usize) -> Arc<[f64]>,
+    mut row: impl FnMut(usize) -> KernelRow,
 ) {
     let n = g.len();
     let mut is_active = vec![false; n];
@@ -274,9 +274,20 @@ pub(crate) fn reconstruct_inactive(
         if alpha[j] > 0.0 {
             let coef = alpha[j] * signs[j];
             let r = row(j);
-            for (t, slot) in g.iter_mut().enumerate() {
-                if !is_active[t] {
-                    *slot += signs[t] * coef * r[map(t)];
+            match r.as_f64() {
+                Some(rf) => {
+                    for (t, slot) in g.iter_mut().enumerate() {
+                        if !is_active[t] {
+                            *slot += signs[t] * coef * rf[map(t)];
+                        }
+                    }
+                }
+                None => {
+                    for (t, slot) in g.iter_mut().enumerate() {
+                        if !is_active[t] {
+                            *slot += signs[t] * coef * r.get(map(t));
+                        }
+                    }
                 }
             }
         }
@@ -367,11 +378,11 @@ mod tests {
         let active = [0usize, 2];
         let mut g = [7.0, 99.0, 8.0];
         let alpha = [0.5, 0.0, 1.0];
-        let rows: Vec<Arc<[f64]>> = (0..3)
+        let rows: Vec<KernelRow> = (0..3)
             .map(|j| {
                 let mut r = vec![0.0; 3];
                 r[j] = 2.0;
-                Arc::from(r)
+                KernelRow::from_f64(r, crate::kernel::CacheDtype::F64)
             })
             .collect();
         reconstruct_inactive(

@@ -4,7 +4,7 @@
 
 use super::active::{partition_of, reconstruct_inactive, ActiveSet, VarBound};
 use crate::data::Dataset;
-use crate::kernel::{KernelCache, KernelEval};
+use crate::kernel::{CacheDtype, KernelCache, KernelEval};
 use std::time::Instant;
 
 /// Solver hyper-parameters.
@@ -28,6 +28,13 @@ pub struct SmoParams {
     /// stays sequential (it is an inherently sequential coordinate
     /// method).
     pub threads: usize,
+    /// Storage precision of cached kernel rows. The default
+    /// [`CacheDtype::F64`] keeps every bit-identity guarantee;
+    /// [`CacheDtype::F32`] halves the cache footprint (rows round through
+    /// f32 while all gradient/objective accumulation stays f64), trading
+    /// exactness for capacity — results are epsilon-close, as pinned by
+    /// `tests/kernel_identity.rs`.
+    pub cache_dtype: CacheDtype,
 }
 
 impl Default for SmoParams {
@@ -39,6 +46,7 @@ impl Default for SmoParams {
             shrinking: true,
             cache_bytes: 256 << 20,
             threads: 0,
+            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -118,7 +126,8 @@ impl Solver {
     /// Bind a solver to a training set (labels come from `eval.ds.y`).
     pub fn new(eval: KernelEval, params: SmoParams) -> Solver {
         let y = eval.ds.y.clone();
-        let cache = KernelCache::with_byte_budget(eval, params.cache_bytes);
+        let cache =
+            KernelCache::with_byte_budget_dtype(eval, params.cache_bytes, params.cache_dtype);
         Solver { cache, y, params }
     }
 
@@ -311,8 +320,19 @@ impl Solver {
                 let ci = yi * dai;
                 let cj = yj * daj;
                 let (row_i, row_j) = self.cache.row_pair(i, j);
-                for &t in active.indices() {
-                    g[t] += self.y[t] * (ci * row_i[t] + cj * row_j[t]);
+                // Hoist the dtype match out of the sweep: the f64 tier runs
+                // the exact historical arithmetic (bit-identity pin).
+                match (row_i.as_f64(), row_j.as_f64()) {
+                    (Some(ri), Some(rj)) => {
+                        for &t in active.indices() {
+                            g[t] += self.y[t] * (ci * ri[t] + cj * rj[t]);
+                        }
+                    }
+                    _ => {
+                        for &t in active.indices() {
+                            g[t] += self.y[t] * (ci * row_i.get(t) + cj * row_j.get(t));
+                        }
+                    }
                 }
             }
         }
@@ -369,11 +389,18 @@ impl Solver {
         if threads <= 1 || n < PAR_MIN_N || svs.len() < 2 {
             for &j in &svs {
                 let coef = alpha[j] * self.y[j];
-                let row = self.cache.row(j);
-                // SAFETY-free split: copy row borrow is fine here (cold path)
-                let row: &[f64] = row;
-                for t in 0..n {
-                    g[t] += self.y[t] * coef * row[t];
+                let row = self.cache.row_arc(j);
+                match row.as_f64() {
+                    Some(r) => {
+                        for t in 0..n {
+                            g[t] += self.y[t] * coef * r[t];
+                        }
+                    }
+                    None => {
+                        for t in 0..n {
+                            g[t] += self.y[t] * coef * row.get(t);
+                        }
+                    }
                 }
             }
             return g;
@@ -388,7 +415,7 @@ impl Solver {
                     let mut acc = *gt;
                     for (bj, &j) in block.iter().enumerate() {
                         let coef = alpha[j] * y[j];
-                        acc += y[t] * coef * rows[bj][t];
+                        acc += y[t] * coef * rows[bj].get(t);
                     }
                     *gt = acc;
                 }
@@ -422,17 +449,12 @@ impl Solver {
             return None;
         }
 
-        // j: second-order selection over I_low with violation.
-        let row_i = {
-            // borrow ends before second cache use below (value() for Ktt
-            // uses the row cache too, so copy K_ii and the needed entries
-            // lazily via the row reference held in a raw slice)
-            let r = self.cache.row(i);
-            r.as_ptr()
-        };
-        let n_total = self.cache.n();
-        let row_i: &[f64] = unsafe { std::slice::from_raw_parts(row_i, n_total) };
-        let kii = row_i[i];
+        // j: second-order selection over I_low with violation. The row is
+        // pinned as an owned refcounted row, so `diag` below (which may
+        // touch the cache) can't invalidate it — this replaced an `unsafe`
+        // raw-slice borrow.
+        let row_i = self.cache.row_arc(i);
+        let kii = row_i.get(i);
 
         let mut gmin = f64::INFINITY; // M(α)
         let mut obj_min = f64::INFINITY;
@@ -453,7 +475,7 @@ impl Solver {
                 // kernel values, the label signs cancel (LibSVM's
                 // quad_coef in both label branches).
                 let ktt = self.diag(t);
-                let mut a_it = kii + ktt - 2.0 * row_i[t];
+                let mut a_it = kii + ktt - 2.0 * row_i.get(t);
                 if a_it <= 0.0 {
                     a_it = TAU;
                 }
@@ -605,7 +627,8 @@ impl GeneralSolver {
             spec.map.iter().all(|&d| d < n_data),
             "kernel map references a row outside the dataset"
         );
-        let cache = KernelCache::with_byte_budget(eval, params.cache_bytes);
+        let cache =
+            KernelCache::with_byte_budget_dtype(eval, params.cache_bytes, params.cache_dtype);
         GeneralSolver {
             cache,
             spec,
@@ -787,9 +810,22 @@ impl GeneralSolver {
                 let ci = si * dbi;
                 let cj = sj * dbj;
                 let (row_i, row_j) = self.cache.row_pair(di, dj);
-                for &t in active.indices() {
-                    let dt = self.spec.map[t];
-                    g[t] += self.spec.signs[t] * (ci * row_i[dt] + cj * row_j[dt]);
+                // Hoisted dtype match: the f64 tier keeps the historical
+                // arithmetic bit-for-bit.
+                match (row_i.as_f64(), row_j.as_f64()) {
+                    (Some(ri), Some(rj)) => {
+                        for &t in active.indices() {
+                            let dt = self.spec.map[t];
+                            g[t] += self.spec.signs[t] * (ci * ri[dt] + cj * rj[dt]);
+                        }
+                    }
+                    _ => {
+                        for &t in active.indices() {
+                            let dt = self.spec.map[t];
+                            g[t] +=
+                                self.spec.signs[t] * (ci * row_i.get(dt) + cj * row_j.get(dt));
+                        }
+                    }
                 }
             }
         }
@@ -858,9 +894,18 @@ impl GeneralSolver {
             if beta[j] > 0.0 {
                 let coef = beta[j] * self.spec.signs[j];
                 let dj = self.spec.map[j];
-                let row = self.cache.row(dj);
-                for t in 0..m {
-                    g[t] += self.spec.signs[t] * coef * row[self.spec.map[t]];
+                let row = self.cache.row_arc(dj);
+                match row.as_f64() {
+                    Some(r) => {
+                        for t in 0..m {
+                            g[t] += self.spec.signs[t] * coef * r[self.spec.map[t]];
+                        }
+                    }
+                    None => {
+                        for t in 0..m {
+                            g[t] += self.spec.signs[t] * coef * row.get(self.spec.map[t]);
+                        }
+                    }
                 }
             }
         }
@@ -895,16 +940,11 @@ impl GeneralSolver {
         }
 
         let di = self.spec.map[i];
-        // Same raw-slice trick as the binary path: `diag` below only takes
-        // the scalar cache path (never inserts or evicts rows), so the
-        // pinned row stays resident for the whole scan.
-        let row_i = {
-            let r = self.cache.row(di);
-            r.as_ptr()
-        };
-        let n_data = self.cache.n();
-        let row_i: &[f64] = unsafe { std::slice::from_raw_parts(row_i, n_data) };
-        let kii = row_i[di];
+        // The scan pins row i as an owned refcounted row (replacing an
+        // `unsafe` raw-slice borrow), so `diag` below may touch the cache
+        // freely.
+        let row_i = self.cache.row_arc(di);
+        let kii = row_i.get(di);
 
         let mut gmin = f64::INFINITY;
         let mut obj_min = f64::INFINITY;
@@ -927,7 +967,7 @@ impl GeneralSolver {
                 // update step's `quad` exactly (LibSVM's quad_coef); an
                 // ε-SVR (αᵢ, α*ᵢ) pair is a flat direction (a = 0 → TAU).
                 let ktt = self.diag(t);
-                let mut a_it = kii + ktt - 2.0 * row_i[self.spec.map[t]];
+                let mut a_it = kii + ktt - 2.0 * row_i.get(self.spec.map[t]);
                 if a_it <= 0.0 {
                     a_it = TAU;
                 }

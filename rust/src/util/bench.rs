@@ -525,6 +525,140 @@ pub fn render_serve_gate_report(
     out
 }
 
+// ---- the kernel hot-path bench gate ----------------------------------------
+
+/// Compare a `BENCH_kernel.json` against its committed baseline — the
+/// kernel-hot-path counterpart of [`check_bench_regression`], keyed on the
+/// record shape (`kernel` object).
+///
+/// Per scenario the *baseline* declares a `min_speedup` floor on the
+/// naive-vs-simd row-fill speedup `naive_min_ns / simd_min_ns` (what
+/// `benches/micro_hotpath.rs` emits). Both sides of the ratio are measured
+/// in the same process on the same machine, so machine speed divides out —
+/// the gate only fires on a *structural* regression, e.g. the kernel
+/// dispatch hoist sliding back into the element loop. The committed floors
+/// carry their own headroom, so there is no extra tolerance knob; a
+/// scenario present in the baseline but missing from the current run is a
+/// coverage loss, exactly like a missing seeder in the CV gate.
+pub fn check_kernel_regression(
+    current: &Json,
+    baseline: &Json,
+) -> Result<Vec<String>, Vec<String>> {
+    let field = |doc: &Json, scenario: &str, key: &str| -> Option<f64> {
+        doc.get("kernel")?.get(scenario)?.get(key)?.as_f64()
+    };
+    let base_scenarios: Vec<String> = match baseline.get("kernel").and_then(Json::as_obj) {
+        Some(map) => map.keys().cloned().collect(),
+        None => return Err(vec!["baseline has no kernel object".into()]),
+    };
+
+    let mut passed = Vec::new();
+    let mut failures = Vec::new();
+    for scenario in base_scenarios {
+        let Some(floor) = field(baseline, &scenario, "min_speedup") else {
+            failures.push(format!(
+                "baseline entry for '{scenario}' lacks a numeric min_speedup"
+            ));
+            continue;
+        };
+        let (Some(naive), Some(simd)) = (
+            field(current, &scenario, "naive_min_ns"),
+            field(current, &scenario, "simd_min_ns"),
+        ) else {
+            failures.push(format!("scenario '{scenario}' missing from the current bench"));
+            continue;
+        };
+        if naive <= 0.0 || simd <= 0.0 {
+            failures.push(format!(
+                "'{scenario}' timings must be positive (naive {naive}ns, simd {simd}ns)"
+            ));
+            continue;
+        }
+        let speedup = naive / simd;
+        if speedup < floor - 1e-12 {
+            failures.push(format!(
+                "{scenario}: naive-vs-simd row-fill speedup ×{speedup:.2} fell below \
+                 the baseline floor ×{floor:.2}"
+            ));
+        } else {
+            passed.push(format!(
+                "{scenario}: row-fill speedup ×{speedup:.2} ≥ floor ×{floor:.2}"
+            ));
+        }
+    }
+
+    if failures.is_empty() {
+        Ok(passed)
+    } else {
+        Err(failures)
+    }
+}
+
+/// Markdown rendering of one [`check_kernel_regression`] comparison — the
+/// `BENCHGATE_kernel.md` artifact CI uploads. One row per baseline
+/// scenario (current naive/simd minima, the speedup and its floor) and the
+/// overall verdict. Purely a rendering of the gated fields; it never
+/// alters the gate outcome.
+pub fn render_kernel_gate_report(
+    current_name: &str,
+    baseline_name: &str,
+    current: &Json,
+    baseline: &Json,
+) -> String {
+    let field = |doc: &Json, scenario: &str, key: &str| -> Option<f64> {
+        doc.get("kernel")?.get(scenario)?.get(key)?.as_f64()
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Kernel gate: `{current_name}` vs `{baseline_name}`\n\n"
+    ));
+    let Some(base_map) = baseline.get("kernel").and_then(Json::as_obj) else {
+        out.push_str("**FAIL** — baseline has no `kernel` object\n");
+        return out;
+    };
+    out.push_str("| scenario | naive min | simd min | speedup | floor | status |\n");
+    out.push_str("|----------|----------:|---------:|--------:|------:|--------|\n");
+    for scenario in base_map.keys() {
+        let floor = field(baseline, scenario, "min_speedup");
+        let (cells, ok) = match (
+            field(current, scenario, "naive_min_ns"),
+            field(current, scenario, "simd_min_ns"),
+            floor,
+        ) {
+            (Some(naive), Some(simd), Some(floor)) if naive > 0.0 && simd > 0.0 => {
+                let speedup = naive / simd;
+                (
+                    format!("{naive:.0}ns | {simd:.0}ns | ×{speedup:.2} | ×{floor:.2}"),
+                    speedup >= floor - 1e-12,
+                )
+            }
+            (_, _, Some(floor)) => (format!("missing | — | — | ×{floor:.2}"), false),
+            _ => ("— | — | — | missing".to_string(), false),
+        };
+        out.push_str(&format!(
+            "| {scenario} | {cells} | {} |\n",
+            if ok { "PASS" } else { "**FAIL**" }
+        ));
+    }
+    out.push('\n');
+    match check_kernel_regression(current, baseline) {
+        Ok(passed) => {
+            out.push_str(&format!("**verdict: PASS** ({} checks)\n", passed.len()));
+        }
+        Err(failures) => {
+            out.push_str(&format!(
+                "**verdict: FAIL** ({} regression{})\n\n",
+                failures.len(),
+                if failures.len() == 1 { "" } else { "s" }
+            ));
+            for f in &failures {
+                out.push_str(&format!("- {f}\n"));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -758,6 +892,96 @@ mod tests {
         assert!(
             check_serve_regression(&current, &empty, &ServeGateTolerance::default()).is_err()
         );
+    }
+
+    fn kernel_doc(dense_simd_ns: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"kernel": {{
+                "dense_row": {{"naive_min_ns": 1000.0, "simd_min_ns": {dense_simd_ns}}},
+                "cross_row": {{"naive_min_ns": 2000.0, "simd_min_ns": 1000.0}}
+            }}}}"#
+        ))
+        .unwrap()
+    }
+
+    fn kernel_baseline() -> Json {
+        Json::parse(
+            r#"{"kernel": {
+                "dense_row": {"min_speedup": 0.8},
+                "cross_row": {"min_speedup": 0.8}
+            }}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_gate_passes_above_floor() {
+        // dense speedup 1000/800 = 1.25 ≥ 0.8; cross 2.0 ≥ 0.8
+        let passed = check_kernel_regression(&kernel_doc(800.0), &kernel_baseline()).unwrap();
+        assert_eq!(passed.len(), 2, "{passed:?}");
+        assert!(passed.iter().all(|p| p.contains("speedup")));
+    }
+
+    #[test]
+    fn kernel_gate_fails_below_floor() {
+        // dense speedup 1000/2000 = 0.5 < 0.8
+        let failures =
+            check_kernel_regression(&kernel_doc(2000.0), &kernel_baseline()).unwrap_err();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("dense_row"), "{failures:?}");
+        assert!(failures[0].contains("fell below"), "{failures:?}");
+    }
+
+    #[test]
+    fn kernel_gate_fails_on_missing_scenario_or_malformed_docs() {
+        let partial =
+            Json::parse(r#"{"kernel": {"dense_row": {"naive_min_ns": 1000.0, "simd_min_ns": 500.0}}}"#)
+                .unwrap();
+        let failures = check_kernel_regression(&partial, &kernel_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("'cross_row' missing")),
+            "{failures:?}"
+        );
+        let empty = Json::parse("{}").unwrap();
+        assert!(check_kernel_regression(&kernel_doc(800.0), &empty).is_err());
+        // a baseline entry without min_speedup is a failure, not a panic
+        let no_floor = Json::parse(r#"{"kernel": {"dense_row": {}}}"#).unwrap();
+        let failures = check_kernel_regression(&kernel_doc(800.0), &no_floor).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("lacks a numeric min_speedup")),
+            "{failures:?}"
+        );
+        // zero timings are rejected rather than dividing
+        let zero =
+            Json::parse(r#"{"kernel": {"dense_row": {"naive_min_ns": 0.0, "simd_min_ns": 0.0},
+                "cross_row": {"naive_min_ns": 2000.0, "simd_min_ns": 1000.0}}}"#)
+                .unwrap();
+        let failures = check_kernel_regression(&zero, &kernel_baseline()).unwrap_err();
+        assert!(failures.iter().any(|f| f.contains("positive")), "{failures:?}");
+    }
+
+    #[test]
+    fn kernel_report_renders_pass_and_fail() {
+        let md = render_kernel_gate_report(
+            "BENCH_kernel.json",
+            "BENCH_kernel.baseline.json",
+            &kernel_doc(800.0),
+            &kernel_baseline(),
+        );
+        assert!(md.contains("## Kernel gate"), "{md}");
+        assert!(md.contains("| dense_row |"), "{md}");
+        assert!(md.contains("×1.25"), "{md}");
+        assert!(md.contains("**verdict: PASS**"), "{md}");
+        assert!(!md.contains("**FAIL**"), "{md}");
+
+        let md = render_kernel_gate_report(
+            "BENCH_kernel.json",
+            "BENCH_kernel.baseline.json",
+            &kernel_doc(2000.0),
+            &kernel_baseline(),
+        );
+        assert!(md.contains("**verdict: FAIL**"), "{md}");
+        assert!(md.contains("fell below"), "{md}");
     }
 
     #[test]

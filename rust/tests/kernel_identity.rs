@@ -1,0 +1,424 @@
+//! Differential test layer for the vectorized kernel hot path: exactly
+//! where **bit-identity** holds and where only **epsilon-closeness** is
+//! promised (docs/ARCHITECTURE.md §3.7 carries the same contract table).
+//!
+//! | surface                                        | contract            |
+//! |------------------------------------------------|---------------------|
+//! | `eval_row` vs `eval_row_reference` (f64)       | bit-identical       |
+//! | `eval_cross_row` vs reference / pointwise (f64)| bit-identical       |
+//! | f64 cache rows (default dtype)                 | bit-identical       |
+//! | f32 cache rows vs f64                          | ≤ f32 rounding      |
+//! | f32-tier CV / grid accuracy, labels            | identical           |
+//! | f32-tier SVR CV MSE                            | relative ≤ 1e-4     |
+//! | f32-tier decision values                       | absolute ≤ 1e-4     |
+//! | XLA backend vs native (f32 artifacts)          | absolute ≤ 5e-3     |
+//!
+//! The f32 tier stores cached kernel rows as `f32` but *computes* them in
+//! f64 and accumulates every gradient/objective sum in f64, so each cached
+//! entry carries at most one f32 rounding (relative ~1.2e-7). SMO stops on
+//! a 1e-3 gradient tolerance, so the perturbed solve lands on an
+//! epsilon-close model: decision values move by ≪ 1e-4 in practice (1e-4
+//! is the *documented* ceiling), discrete outcomes (labels, fold accuracy
+//! counts) do not move at all on the synthetic suites, and continuous
+//! aggregates (SVR MSE) move relatively by ≪ 1e-4. The XLA backend
+//! additionally computes *in* f32 (dots, exp) over zero-padded buckets,
+//! hence its looser absolute band.
+
+use alphaseed::coordinator::{grid_search_opts, GridOptions, ServeModel};
+use alphaseed::cv::{run_kfold, run_kfold_svr, CvOptions};
+use alphaseed::data::{synth, CsrMatrix, DataMatrix, Dataset};
+use alphaseed::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
+use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use alphaseed::seeding::Sir;
+use alphaseed::smo::{Model, SmoParams, Solver};
+use alphaseed::util::rng::Pcg32;
+
+/// One kernel of every supported variant.
+fn all_kernels() -> [Kernel; 4] {
+    [
+        Kernel::rbf(0.7),
+        Kernel::Linear,
+        Kernel::Poly {
+            gamma: 0.5,
+            coef0: 1.0,
+            degree: 3,
+        },
+        Kernel::Sigmoid {
+            gamma: 0.3,
+            coef0: -0.5,
+        },
+    ]
+}
+
+/// Deterministic dense dataset; row 3 (when present) is all-zero to cover
+/// the zero-row edge.
+fn dense_ds(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let mut data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+    if n > 3 {
+        data[3 * d..4 * d].fill(0.0);
+    }
+    let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    Dataset::new(format!("dense{n}x{d}"), DataMatrix::dense(n, d, data), y)
+}
+
+/// Deterministic sparse dataset with ~half the entries present; row 2
+/// (when present) is entirely empty.
+fn sparse_ds(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|i| {
+            if i == 2 {
+                return Vec::new();
+            }
+            (0..d as u32)
+                .filter(|_| rng.bernoulli(0.5))
+                .map(|j| (j, rng.uniform(-2.0, 2.0) as f32))
+                .collect()
+        })
+        .collect();
+    let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    Dataset::new(
+        format!("sparse{n}x{d}"),
+        DataMatrix::Sparse(CsrMatrix::from_rows(d, &rows)),
+        y,
+    )
+}
+
+// ---- bit-identity: simd row fills vs the retained naive reference ----------
+
+/// Every feature width 1..=97 crosses the 4-lane chunk boundaries of
+/// `kernel::simd` in every phase (remainders 0..3), for all four kernel
+/// variants, dense storage. The fills must match the naive per-element
+/// reference bit for bit.
+#[test]
+fn dense_row_fill_bit_identical_dims_1_to_97() {
+    for d in 1..=97usize {
+        let ds = dense_ds(9, d, 0xD0 + d as u64);
+        let other = dense_ds(7, d, 0x0D + d as u64);
+        for kernel in all_kernels() {
+            let eval = KernelEval::new(ds.clone(), kernel);
+            let mut fast = vec![0.0f64; ds.len()];
+            let mut naive = vec![0.0f64; ds.len()];
+            for i in [0, 3, ds.len() - 1] {
+                eval.eval_row(i, &mut fast);
+                eval.eval_row_reference(i, &mut naive);
+                for (j, (a, b)) in fast.iter().zip(&naive).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{kernel:?} d={d} row {i} col {j}: {a} vs {b}"
+                    );
+                }
+            }
+            let mut fast_x = vec![0.0f64; other.len()];
+            let mut naive_x = vec![0.0f64; other.len()];
+            for i in [0, 3] {
+                eval.eval_cross_row(i, &other, &mut fast_x);
+                eval.eval_cross_row_reference(i, &other, &mut naive_x);
+                for (j, (a, b)) in fast_x.iter().zip(&naive_x).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?} d={d} cross {i},{j}");
+                    // and the reference itself is the pointwise eval_cross
+                    assert_eq!(b.to_bits(), eval.eval_cross(i, &other, j).to_bits());
+                }
+            }
+        }
+    }
+}
+
+/// The sparse merge-join path (query slices hoisted) against the naive
+/// per-element loop, including an entirely empty row, across chunk-edge
+/// widths.
+#[test]
+fn sparse_row_fill_bit_identical() {
+    for d in [1usize, 2, 3, 4, 5, 8, 13, 31, 32, 33, 64, 65, 96, 97] {
+        let ds = sparse_ds(11, d, 0x5A + d as u64);
+        for kernel in all_kernels() {
+            let eval = KernelEval::new(ds.clone(), kernel);
+            let mut fast = vec![0.0f64; ds.len()];
+            let mut naive = vec![0.0f64; ds.len()];
+            for i in [0, 2, ds.len() - 1] {
+                eval.eval_row(i, &mut fast);
+                eval.eval_row_reference(i, &mut naive);
+                for (j, (a, b)) in fast.iter().zip(&naive).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{kernel:?} sparse d={d} row {i} col {j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Cross rows against an *empty* dataset are a no-op, not a panic, on both
+/// the vectorized and reference paths.
+#[test]
+fn cross_row_against_empty_dataset() {
+    let ds = dense_ds(6, 5, 1);
+    let empty = Dataset::new("empty", DataMatrix::dense(0, 5, Vec::new()), Vec::new());
+    for kernel in all_kernels() {
+        let eval = KernelEval::new(ds.clone(), kernel);
+        let mut out: Vec<f64> = Vec::new();
+        eval.eval_cross_row(0, &empty, &mut out);
+        eval.eval_cross_row_reference(0, &empty, &mut out);
+    }
+}
+
+// ---- the f32 cache tier -----------------------------------------------------
+
+/// An f32-stored cache row is the f64 row with one rounding per entry —
+/// nothing else moves. The f64 dtype stays bit-identical to the direct
+/// fill (the historical pin).
+#[test]
+fn f32_cache_rows_are_single_rounding_of_f64() {
+    let ds = dense_ds(40, 13, 7);
+    let eval = KernelEval::new(ds.clone(), Kernel::rbf(0.4));
+    let mut f64_cache =
+        KernelCache::with_byte_budget_dtype(eval.clone(), 1 << 20, CacheDtype::F64);
+    let mut f32_cache =
+        KernelCache::with_byte_budget_dtype(eval.clone(), 1 << 20, CacheDtype::F32);
+    assert_eq!(f64_cache.dtype(), CacheDtype::F64);
+    assert_eq!(f32_cache.dtype(), CacheDtype::F32);
+    let mut direct = vec![0.0f64; ds.len()];
+    for i in [0usize, 7, 39] {
+        eval.eval_row(i, &mut direct);
+        let wide = f64_cache.row(i).to_f64_vec();
+        let narrow = f32_cache.row(i).to_f64_vec();
+        for j in 0..ds.len() {
+            assert_eq!(wide[j].to_bits(), direct[j].to_bits(), "f64 row {i} col {j}");
+            assert_eq!(
+                narrow[j],
+                direct[j] as f32 as f64,
+                "f32 row {i} col {j} is not the rounded f64 value"
+            );
+        }
+    }
+
+    // the shared (cross-run) store honours the same contract
+    let shared = SharedKernelCache::with_byte_budget_dtype(eval.clone(), 1 << 20, CacheDtype::F32);
+    assert_eq!(shared.dtype(), CacheDtype::F32);
+    eval.eval_row(5, &mut direct);
+    for (j, v) in shared.row(5).to_f64_vec().iter().enumerate() {
+        assert_eq!(*v, direct[j] as f32 as f64, "shared f32 row col {j}");
+    }
+}
+
+/// End-to-end solver contract for the f32 tier: identical labels and
+/// accuracy, decision values within the documented 1e-4 band — through the
+/// serving tier's batched path as well (ServeModel::decision_batch).
+#[test]
+fn f32_tier_solver_and_serve_decisions_within_band() {
+    let ds = synth::generate("heart", Some(120), 17);
+    let kernel = Kernel::rbf(0.2);
+    let solve = |dtype: CacheDtype| {
+        let mut s = Solver::new(
+            KernelEval::new(ds.clone(), kernel),
+            SmoParams {
+                c: 2.0,
+                cache_dtype: dtype,
+                ..Default::default()
+            },
+        );
+        let r = s.solve();
+        assert!(r.converged);
+        Model::from_result(&ds, kernel, &r)
+    };
+    let m64 = solve(CacheDtype::F64);
+    let m32 = solve(CacheDtype::F32);
+    assert_eq!(m64.accuracy(&ds), m32.accuracy(&ds));
+    for j in 0..ds.len() {
+        let (a, b) = (m64.decision_one(&ds, j), m32.decision_one(&ds, j));
+        assert!(
+            (a - b).abs() <= 1e-4,
+            "decision {j}: f64 {a} vs f32-tier {b} (band 1e-4)"
+        );
+        assert_eq!(a.signum(), b.signum(), "label flip at {j}");
+    }
+
+    let s64 = ServeModel::CSvc {
+        model: m64,
+        scaler: None,
+    };
+    let s32 = ServeModel::CSvc {
+        model: m32,
+        scaler: None,
+    };
+    for (a, b) in s64.decision_batch(&ds).iter().zip(s32.decision_batch(&ds)) {
+        assert!((a - b).abs() <= 1e-4, "serve batch: {a} vs {b}");
+    }
+}
+
+/// f32-tier k-fold CV: identical per-round correctness counts (hence
+/// identical accuracy) and a same-ballpark iteration count.
+#[test]
+fn f32_tier_cv_accuracy_identical() {
+    let ds = synth::generate("heart", Some(150), 23);
+    let run = |dtype: CacheDtype| {
+        run_kfold(
+            &ds,
+            Kernel::rbf(0.2),
+            2.0,
+            5,
+            &Sir,
+            CvOptions {
+                cache_dtype: dtype,
+                ..Default::default()
+            },
+        )
+    };
+    let r64 = run(CacheDtype::F64);
+    let r32 = run(CacheDtype::F32);
+    assert_eq!(r64.rounds.len(), r32.rounds.len());
+    for (a, b) in r64.rounds.iter().zip(&r32.rounds) {
+        assert_eq!(
+            (a.test_correct, a.test_total),
+            (b.test_correct, b.test_total),
+            "round {} fold accuracy moved under the f32 tier",
+            a.round
+        );
+    }
+    assert_eq!(r64.accuracy(), r32.accuracy());
+    let (a, b) = (r64.total_iterations(), r32.total_iterations());
+    let ratio = a.max(b) as f64 / a.min(b).max(1) as f64;
+    assert!(ratio < 1.5, "iteration counts diverged: {a} vs {b}");
+}
+
+/// f32-tier ε-SVR CV: the continuous aggregate (MSE) moves by at most
+/// 1e-4 *relative* — the documented band; observed drift is orders of
+/// magnitude smaller.
+#[test]
+fn f32_tier_svr_cv_mse_epsilon_close() {
+    let ds = synth::generate_regression("sinc", Some(120), 11);
+    let seeder = alphaseed::seeding::svr::svr_seeder_by_name("sir").unwrap();
+    let run = |dtype: CacheDtype| {
+        run_kfold_svr(
+            &ds,
+            Kernel::rbf(0.5),
+            10.0,
+            0.05,
+            5,
+            seeder.as_ref(),
+            CvOptions {
+                cache_dtype: dtype,
+                ..Default::default()
+            },
+        )
+    };
+    let r64 = run(CacheDtype::F64);
+    let r32 = run(CacheDtype::F32);
+    let (a, b) = (r64.mse(), r32.mse());
+    assert!(
+        (a - b).abs() <= 1e-4 * a.abs().max(1e-12),
+        "SVR CV MSE drifted past the relative 1e-4 band: f64 {a} vs f32-tier {b}"
+    );
+}
+
+/// f32-tier grid search: every cell's CV accuracy is identical to the f64
+/// grid (discrete outcomes don't move), cell for cell.
+#[test]
+fn f32_tier_grid_accuracy_identical() {
+    let ds = synth::generate("heart", Some(100), 31);
+    let run = |dtype: CacheDtype| {
+        grid_search_opts(
+            &ds,
+            &[1.0, 10.0],
+            &[0.2, 0.8],
+            &GridOptions {
+                k: 3,
+                cache_dtype: dtype,
+                ..Default::default()
+            },
+        )
+    };
+    let g64 = run(CacheDtype::F64);
+    let g32 = run(CacheDtype::F32);
+    assert_eq!(g64.points.len(), g32.points.len());
+    for (a, b) in g64.points.iter().zip(&g32.points) {
+        assert_eq!((a.c, a.gamma), (b.c, b.gamma));
+        assert_eq!(
+            a.accuracy, b.accuracy,
+            "grid cell C={} gamma={} accuracy moved under the f32 tier",
+            a.c, a.gamma
+        );
+    }
+}
+
+// ---- backend vs native ------------------------------------------------------
+
+/// Every `rbf_rows` manifest bucket: artifact rows and cross rows agree
+/// with the native f64 backend within the f32-compute band; every
+/// `rbf_matvec` bucket likewise for the accumulated matvec. Skips cleanly
+/// when no artifacts are installed (`make artifacts`).
+#[test]
+fn backend_vs_native_close_for_every_bucket() {
+    let dir = XlaBackend::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return;
+    }
+    let mut xb = XlaBackend::load(&dir).expect("loading artifacts");
+    let mut nb = NativeBackend;
+    let ops = alphaseed::runtime::ArtifactManifest::load(&dir).expect("manifest").ops;
+    for op in &ops {
+        // exact-fit shapes select exactly this bucket (smallest-fit rule)
+        let ds = {
+            let mut rng = Pcg32::seed_from_u64((op.n as u64) ^ ((op.d as u64) << 8));
+            let data: Vec<f32> = (0..op.n * op.d)
+                .map(|_| rng.uniform(-0.5, 0.5) as f32)
+                .collect();
+            let y = (0..op.n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            Dataset::new(
+                format!("bucket{}x{}", op.n, op.d),
+                DataMatrix::dense(op.n, op.d, data),
+                y,
+            )
+        };
+        match op.op.as_str() {
+            "rbf_rows" => {
+                let queries = [0usize, op.n / 2, op.n - 1];
+                let calls_before = xb.stats.artifact_calls;
+                let a = xb.kernel_rows(&ds, 0.2, &queries).unwrap();
+                let b = nb.kernel_rows(&ds, 0.2, &queries).unwrap();
+                for (ra, rb) in a.iter().zip(&b) {
+                    for (va, vb) in ra.iter().zip(rb) {
+                        assert!(
+                            (va - vb).abs() < 5e-3,
+                            "bucket ({},{},{}): artifact {va} vs native {vb}",
+                            op.b, op.n, op.d
+                        );
+                    }
+                }
+                assert!(xb.stats.artifact_calls > calls_before, "bucket not exercised");
+
+                // the serving tier's cross-row primitive through the same bucket
+                let sv = ds.select(&[1, op.n / 3]);
+                let ax = xb.kernel_cross_rows(&sv, 0.2, &ds, &[0, 1]).unwrap();
+                let bx = nb.kernel_cross_rows(&sv, 0.2, &ds, &[0, 1]).unwrap();
+                for (ra, rb) in ax.iter().zip(&bx) {
+                    for (va, vb) in ra.iter().zip(rb) {
+                        assert!((va - vb).abs() < 5e-3, "cross rows: {va} vs {vb}");
+                    }
+                }
+            }
+            "rbf_matvec" => {
+                let m = op.b.min(8);
+                let idx: Vec<usize> = (0..m).map(|i| i * (op.n / m).max(1)).collect();
+                let w = ds.select(&idx);
+                let coef: Vec<f64> = (0..m).map(|i| if i % 2 == 0 { 0.5 } else { -1.0 }).collect();
+                let a = xb.kernel_matvec(&ds, &w, &coef, 0.2).unwrap();
+                let b = nb.kernel_matvec(&ds, &w, &coef, 0.2).unwrap();
+                for (va, vb) in a.iter().zip(&b) {
+                    assert!(
+                        (va - vb).abs() < 5e-3,
+                        "matvec bucket ({},{},{}): {va} vs {vb}",
+                        op.b, op.n, op.d
+                    );
+                }
+            }
+            other => panic!("unknown manifest op '{other}'"),
+        }
+    }
+    assert_eq!(xb.stats.native_fallbacks, 0, "exact-fit shapes must not fall back");
+}

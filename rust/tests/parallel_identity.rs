@@ -167,7 +167,7 @@ fn shared_rows_exact_under_concurrency() {
     let n = eval.len();
     let rows = alphaseed::util::pool::scoped_map(8, 4 * n, |t| {
         let i = t % n;
-        (i, shared.row(i))
+        (i, shared.row(i).to_f64_vec())
     });
     for (i, row) in rows {
         let mut direct = vec![0.0f64; n];

@@ -7,10 +7,15 @@
 //!      ε-SVR pair-variable chain (box [−C, C] + Σδ = 0),
 //!  (c) seeded and cold training converge to the same objective,
 //!  (d) the fold partitioner is a permutation-exact cover,
-//!  (e) the kernel cache returns bit-identical rows under eviction.
+//!  (e) the kernel cache returns bit-identical rows under eviction,
+//!  (f) kernel-function invariants hold under the vectorized row fills:
+//!      symmetry K(i,j) = K(j,i), RBF diagonal exactly 1.0, cross-row
+//!      fills identical to per-element evaluation — across both cache
+//!      dtypes and both compute backends.
 
 use alphaseed::data::FoldPlan;
-use alphaseed::kernel::{Kernel, KernelCache, KernelEval};
+use alphaseed::kernel::{CacheDtype, Kernel, KernelCache, KernelEval};
+use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
 use alphaseed::seeding::svr::{check_feasible_delta, svr_seeder_by_name, SvrSeedContext};
 use alphaseed::seeding::{check_feasible, seeder_by_name, SeedContext};
 use alphaseed::smo::problem::{collapse_svr_pairs, svr_errors, SvrProblem};
@@ -302,8 +307,8 @@ fn prop_cache_rows_bit_identical_under_eviction() {
             let mut small = KernelCache::with_row_capacity(eval.clone(), *cap);
             let mut big = KernelCache::with_row_capacity(eval, 1000);
             for &i in accesses {
-                let a = small.row(i).to_vec();
-                let b = big.row(i).to_vec();
+                let a = small.row(i).to_f64_vec();
+                let b = big.row(i).to_f64_vec();
                 if a != b {
                     return Err(format!("row {i} differs under eviction"));
                 }
@@ -311,6 +316,182 @@ fn prop_cache_rows_bit_identical_under_eviction() {
             let distinct: std::collections::HashSet<_> = accesses.iter().collect();
             if small.stats().evictions == 0 && distinct.len() > *cap {
                 return Err("no evictions despite cache pressure".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Draw one of the four kernel variants with parameters in a sane range.
+fn random_kernel(rng: &mut alphaseed::util::rng::Pcg32) -> Kernel {
+    let gamma = rng.uniform(0.1, 1.5);
+    match rng.gen_range(4) {
+        0 => Kernel::rbf(gamma),
+        1 => Kernel::Linear,
+        2 => Kernel::Poly {
+            gamma,
+            coef0: rng.uniform(-1.0, 1.0),
+            degree: 2 + rng.gen_range(3) as u32,
+        },
+        _ => Kernel::Sigmoid {
+            gamma,
+            coef0: rng.uniform(-1.0, 1.0),
+        },
+    }
+}
+
+#[test]
+fn prop_kernel_symmetric_and_rbf_diagonal_one() {
+    // (f) K(i,j) = K(j,i) bit for bit through the vectorized row fill (the
+    // dot is commutative and sq-norms enter symmetrically), and the RBF
+    // diagonal is exp(−γ·0) = exactly 1.0, never 1±ulp.
+    for_all(
+        PropConfig { cases: 25, seed: 0x5E1F },
+        |rng| {
+            let n = 4 + rng.gen_range(30);
+            let d = 1 + rng.gen_range(12);
+            let p = gen_svm_problem(rng, n, d, rng.uniform(0.0, 2.0));
+            let kernel = random_kernel(rng);
+            let pairs: Vec<(usize, usize)> = (0..12)
+                .map(|_| (rng.gen_range(n), rng.gen_range(n)))
+                .collect();
+            (p, kernel, pairs)
+        },
+        |(p, kernel, pairs)| {
+            let n = p.ds.len();
+            let eval = KernelEval::new(p.ds.clone(), *kernel);
+            let mut row_i = vec![0.0f64; n];
+            let mut row_j = vec![0.0f64; n];
+            for &(i, j) in pairs {
+                eval.eval_row(i, &mut row_i);
+                eval.eval_row(j, &mut row_j);
+                if row_i[j].to_bits() != row_j[i].to_bits() {
+                    return Err(format!(
+                        "{kernel:?}: K({i},{j})={} != K({j},{i})={}",
+                        row_i[j], row_j[i]
+                    ));
+                }
+                if row_i[j].to_bits() != eval.eval(i, j).to_bits() {
+                    return Err(format!("{kernel:?}: row fill != eval at ({i},{j})"));
+                }
+            }
+            if let Kernel::Rbf { .. } = kernel {
+                for i in 0..n {
+                    eval.eval_row(i, &mut row_i);
+                    if row_i[i] != 1.0 {
+                        return Err(format!("RBF diagonal K({i},{i}) = {}", row_i[i]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cross_row_matches_pointwise_both_dtypes() {
+    // (f) the vectorized cross-row fill equals per-element eval_cross bit
+    // for bit, and the two cache tiers honour their contracts on the same
+    // rows: f64 stores the computed bits verbatim, f32 stores exactly the
+    // `as f32` rounding of them.
+    for_all(
+        PropConfig { cases: 20, seed: 0xC105 },
+        |rng| {
+            let n = 6 + rng.gen_range(24);
+            let m = 1 + rng.gen_range(12);
+            let d = 1 + rng.gen_range(9);
+            let p = gen_svm_problem(rng, n, d, 1.0);
+            let q = gen_svm_problem(rng, m, d, 1.0);
+            let kernel = random_kernel(rng);
+            let queries: Vec<usize> = (0..5).map(|_| rng.gen_range(n)).collect();
+            (p, q, kernel, queries)
+        },
+        |(p, q, kernel, queries)| {
+            let eval = KernelEval::new(p.ds.clone(), *kernel);
+            let mut filled = vec![0.0f64; q.ds.len()];
+            for &i in queries {
+                eval.eval_cross_row(i, &q.ds, &mut filled);
+                for (j, &v) in filled.iter().enumerate() {
+                    let pointwise = eval.eval_cross(i, &q.ds, j);
+                    if v.to_bits() != pointwise.to_bits() {
+                        return Err(format!(
+                            "{kernel:?}: cross row ({i},{j}) {v} != pointwise {pointwise}"
+                        ));
+                    }
+                }
+            }
+            let mut wide =
+                KernelCache::with_byte_budget_dtype(eval.clone(), 16 << 20, CacheDtype::F64);
+            let mut narrow =
+                KernelCache::with_byte_budget_dtype(eval.clone(), 16 << 20, CacheDtype::F32);
+            let mut direct = vec![0.0f64; p.ds.len()];
+            for &i in queries {
+                eval.eval_row(i, &mut direct);
+                let w = wide.row(i).to_f64_vec();
+                let nr = narrow.row(i).to_f64_vec();
+                for j in 0..p.ds.len() {
+                    if w[j].to_bits() != direct[j].to_bits() {
+                        return Err(format!("f64 tier row {i} col {j} not bit-identical"));
+                    }
+                    if nr[j] != direct[j] as f32 as f64 {
+                        return Err(format!("f32 tier row {i} col {j} not the f32 rounding"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_backends_agree_on_rbf_rows() {
+    // (f) across backends: NativeBackend row fills are bit-identical to the
+    // evaluator (same code path), and the XLA backend — artifact bucket or
+    // native fallback, whichever a random shape lands on — stays within its
+    // f32-compute band. Without installed artifacts the XLA leg loads
+    // nothing and is skipped per case.
+    let xla_dir = XlaBackend::default_dir();
+    let has_artifacts = xla_dir.join("manifest.json").exists();
+    for_all(
+        PropConfig { cases: 12, seed: 0xBAC4 },
+        |rng| {
+            let n = 8 + rng.gen_range(40);
+            let d = 1 + rng.gen_range(8);
+            let p = gen_svm_problem(rng, n, d, 1.0);
+            let gamma = rng.uniform(0.1, 1.0);
+            let queries: Vec<usize> = (0..4).map(|_| rng.gen_range(n)).collect();
+            (p, gamma, queries)
+        },
+        |(p, gamma, queries)| {
+            let eval = KernelEval::new(p.ds.clone(), Kernel::rbf(*gamma));
+            let mut nb = NativeBackend;
+            let rows = nb
+                .kernel_rows(&p.ds, *gamma, queries)
+                .map_err(|e| e.to_string())?;
+            let mut direct = vec![0.0f64; p.ds.len()];
+            for (row, &i) in rows.iter().zip(queries.iter()) {
+                eval.eval_row(i, &mut direct);
+                for j in 0..p.ds.len() {
+                    if row[j].to_bits() != direct[j].to_bits() {
+                        return Err(format!("native backend row {i} col {j} differs"));
+                    }
+                }
+            }
+            // load-failure (e.g. a non-`xla` build) skips the leg, it is
+            // not a property violation
+            if has_artifacts {
+                if let Ok(mut xb) = XlaBackend::load(&xla_dir) {
+                    let xrows = xb
+                        .kernel_rows(&p.ds, *gamma, queries)
+                        .map_err(|e| e.to_string())?;
+                    for (xrow, row) in xrows.iter().zip(&rows) {
+                        for (a, b) in xrow.iter().zip(row) {
+                            if (a - b).abs() >= 5e-3 {
+                                return Err(format!("xla row element {a} vs native {b}"));
+                            }
+                        }
+                    }
+                }
             }
             Ok(())
         },

@@ -1,8 +1,11 @@
 //! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
-//! agree with the native f64 backend. Requires `make artifacts`.
+//! agree with the native f64 backend. Requires `make artifacts` — every
+//! artifact-touching test skips cleanly without it. The manifest-parsing
+//! error tests at the bottom run everywhere (no artifacts, no `xla`
+//! feature needed).
 
 use alphaseed::data::synth;
-use alphaseed::runtime::{ComputeBackend, NativeBackend, XlaBackend};
+use alphaseed::runtime::{ArtifactManifest, ComputeBackend, NativeBackend, XlaBackend};
 
 fn xla() -> Option<XlaBackend> {
     let dir = XlaBackend::default_dir();
@@ -78,6 +81,56 @@ fn batched_queries_chunk_correctly() {
 }
 
 #[test]
+fn kernel_cross_rows_artifact_matches_native() {
+    let Some(mut xb) = xla() else { return };
+    let mut nb = NativeBackend;
+    // SV set and request batch both fit the (512, 16) rbf_rows bucket,
+    // which the cross-row path reuses (queries become the padded block)
+    let ds = synth::generate("heart", Some(180), 31);
+    let sv = ds.select(&[2, 9, 50, 133]);
+    let batch = ds.select(&(100..160).collect::<Vec<_>>());
+    let queries = [0usize, 1, 3];
+    let calls_before = xb.stats.artifact_calls;
+    let a = xb.kernel_cross_rows(&sv, 0.2, &batch, &queries).unwrap();
+    let b = nb.kernel_cross_rows(&sv, 0.2, &batch, &queries).unwrap();
+    assert_eq!(a.len(), queries.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.len(), batch.len());
+        for (va, vb) in ra.iter().zip(rb) {
+            assert!((va - vb).abs() < 1e-4, "artifact {va} vs native {vb}");
+        }
+    }
+    assert!(
+        xb.stats.artifact_calls > calls_before,
+        "cross rows did not route through an artifact bucket"
+    );
+    assert_eq!(xb.stats.native_fallbacks, 0);
+}
+
+#[test]
+fn oversize_cross_rows_fall_back_to_native() {
+    let Some(mut xb) = xla() else { return };
+    let mut nb = NativeBackend;
+    // 3000 batch rows exceed every rbf_rows bucket → the cross-row path
+    // must degrade to the native fill and say so in the stats, not error
+    let ds = synth::generate("heart", Some(3000), 7);
+    let sv = ds.select(&[1, 17, 2999]);
+    let fallbacks_before = xb.stats.native_fallbacks;
+    let a = xb.kernel_cross_rows(&sv, 0.3, &ds, &[0, 2]).unwrap();
+    let b = nb.kernel_cross_rows(&sv, 0.3, &ds, &[0, 2]).unwrap();
+    assert!(
+        xb.stats.native_fallbacks > fallbacks_before,
+        "oversize shape should have been recorded as a miss"
+    );
+    // the fallback IS the native path, so the values are bit-identical
+    for (ra, rb) in a.iter().zip(&b) {
+        for (va, vb) in ra.iter().zip(rb) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "fallback diverged from native");
+        }
+    }
+}
+
+#[test]
 fn full_cv_with_xla_backend_matches_native_accuracy() {
     let Some(mut xb) = xla() else { return };
     use alphaseed::cv::{run_kfold, CvOptions};
@@ -104,4 +157,50 @@ fn full_cv_with_xla_backend_matches_native_accuracy() {
     let (a, b) = (native.total_iterations(), with_xla.total_iterations());
     let ratio = a.max(b) as f64 / a.min(b).max(1) as f64;
     assert!(ratio < 1.5, "iteration counts diverged: {a} vs {b}");
+}
+
+// ---- manifest corruption: exact diagnostics, no artifacts needed ----------
+//
+// `ArtifactManifest::parse` is the first thing a user hits when `make
+// artifacts` goes wrong; the messages below are the contract the docs
+// point at, so pin them verbatim.
+
+#[test]
+fn corrupt_manifest_invalid_json_names_the_file() {
+    let err = ArtifactManifest::parse("{not json", std::path::PathBuf::new())
+        .expect_err("garbage must not parse");
+    assert!(
+        err.to_string().contains("manifest.json is not valid JSON"),
+        "unhelpful error: {err:#}"
+    );
+}
+
+#[test]
+fn corrupt_manifest_missing_ops_array() {
+    for doc in ["{}", r#"{"ops": 42}"#, r#"{"ops": {"op": "rbf_rows"}}"#] {
+        let err = ArtifactManifest::parse(doc, std::path::PathBuf::new())
+            .expect_err("ops-less manifest must not parse");
+        assert!(
+            err.to_string().contains("manifest missing 'ops' array"),
+            "unhelpful error for {doc}: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn corrupt_manifest_incomplete_op_names_index_and_key() {
+    // drop one required key at a time; the message must name both the
+    // entry index and the missing key
+    let err = ArtifactManifest::parse(
+        r#"{"ops": [
+            {"op": "rbf_rows", "b": 128, "n": 512, "d": 16, "file": "a.hlo.txt"},
+            {"op": "rbf_rows", "b": 128, "n": 512, "file": "b.hlo.txt"}
+        ]}"#,
+        std::path::PathBuf::new(),
+    )
+    .expect_err("incomplete op must not parse");
+    assert!(
+        err.to_string().contains("ops[1] missing 'd'"),
+        "unhelpful error: {err:#}"
+    );
 }
