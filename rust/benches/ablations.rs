@@ -7,6 +7,7 @@
 //! - A4: SIR with vs without similarity matching (random transplant) —
 //!   isolates how much of SIR's win comes from the kernel-similarity rule.
 
+use alphaseed::config::RunProfile;
 use alphaseed::cv::{run_kfold, CvOptions};
 use alphaseed::data::synth;
 use alphaseed::kernel::Kernel;
@@ -60,7 +61,7 @@ fn a2_cache_size() {
                 5,
                 &Sir,
                 CvOptions {
-                    cache_bytes: mb << 20,
+                    profile: RunProfile::default().with_cache_bytes(mb << 20),
                     ..Default::default()
                 },
             )

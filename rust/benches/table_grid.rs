@@ -1,0 +1,173 @@
+//! Bench: the budget-scheduled grid search (docs/ARCHITECTURE.md §3.8).
+//!
+//! Runs the (C, γ) classification grid three ways at a bench-friendly
+//! scale (`ALPHASEED_BENCH_SCALE`, default 0.25): the uniform full sweep,
+//! successive halving (`BudgetPolicy::SuccessiveHalving`), and the
+//! cross-γ-seeded uniform sweep (docs/SEEDING.md §8) — plus the
+//! regression grid's cross-γ variant as an ungated side-record. Besides
+//! the human-readable tables, the run emits a machine-readable
+//! `BENCH_grid.json` (override the path with `ALPHASEED_BENCH_OUT`) whose
+//! `grid` object carries what the CI gate (`alphaseed benchgate`) holds
+//! against the committed baseline's ceilings:
+//!
+//! * `halving_iter_fraction` — halving total SMO iterations over the
+//!   uniform sweep's (must stay under `max_halving_fraction`; halving
+//!   runs a prefix of every cell's fold chain, so < 1.0 by construction
+//!   and well under it once elimination bites),
+//! * `gamma_seeded_ratio` — γ-seeded grid iterations over the cold
+//!   grid's (must stay under `max_gamma_ratio`),
+//! * `gamma_accuracy_identical` — cross-γ seeding may move iteration
+//!   counts, never a selected cell's accuracy (must be `true`).
+
+use alphaseed::coordinator::{
+    grid_search_opts, grid_search_svr, BudgetPolicy, GridOptions, GridResult,
+};
+use alphaseed::data::synth;
+use alphaseed::util::bench::once;
+use alphaseed::util::json::Json;
+
+const CS: [f64; 4] = [0.5, 2.0, 8.0, 32.0];
+const GAMMAS: [f64; 3] = [0.1, 0.2, 0.4];
+
+fn total_iterations(g: &GridResult) -> u64 {
+    g.points.iter().map(|p| p.iterations).sum()
+}
+
+fn main() {
+    let scale: f64 = std::env::var("ALPHASEED_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let k = 5usize;
+    let n = ((270.0 * scale) as usize).max(100);
+    let ds = synth::generate("heart", Some(n), 42);
+    let opts = |policy, seed_gamma| GridOptions {
+        k,
+        seeder: "sir".into(),
+        policy,
+        seed_gamma,
+        ..Default::default()
+    };
+    println!(
+        "== table_grid bench (scale {scale}, heart n={n}, {}x{} cells, k = {k}) ==",
+        CS.len(),
+        GAMMAS.len()
+    );
+
+    let (uniform, uniform_t) = once("uniform full sweep", || {
+        grid_search_opts(&ds, &CS, &GAMMAS, &opts(BudgetPolicy::Uniform, false))
+    });
+    let (halved, halved_t) = once("successive halving (eta 2)", || {
+        grid_search_opts(
+            &ds,
+            &CS,
+            &GAMMAS,
+            &opts(
+                BudgetPolicy::SuccessiveHalving {
+                    eta: 2,
+                    min_rounds: 1,
+                },
+                false,
+            ),
+        )
+    });
+    let (seeded, seeded_t) = once("cross-γ seeded sweep", || {
+        grid_search_opts(&ds, &CS, &GAMMAS, &opts(BudgetPolicy::Uniform, true))
+    });
+
+    let (u_iters, h_iters, g_iters) = (
+        total_iterations(&uniform),
+        total_iterations(&halved),
+        total_iterations(&seeded),
+    );
+    let halving_fraction = h_iters as f64 / u_iters.max(1) as f64;
+    let gamma_ratio = g_iters as f64 / u_iters.max(1) as f64;
+    let accuracy_identical = uniform
+        .points
+        .iter()
+        .zip(&seeded.points)
+        .all(|(a, b)| a.accuracy.to_bits() == b.accuracy.to_bits());
+
+    println!(
+        "uniform   {u_iters:>9} iterations  {:.3}s  best C={} γ={}",
+        uniform_t.as_secs_f64(),
+        uniform.best().c,
+        uniform.best().gamma
+    );
+    println!(
+        "halving   {h_iters:>9} iterations  {:.3}s  fraction {halving_fraction:.4}  \
+         winner C={} γ={} ({} full rounds)",
+        halved_t.as_secs_f64(),
+        halved.best().c,
+        halved.best().gamma,
+        halved.best().rounds
+    );
+    println!(
+        "γ-seeded  {g_iters:>9} iterations  {:.3}s  ratio {gamma_ratio:.4}  \
+         accuracy identical: {accuracy_identical}",
+        seeded_t.as_secs_f64()
+    );
+
+    // Regression-grid side-record (informational, not gated).
+    let svr_n = ((300.0 * scale) as usize).max(80);
+    let svr_ds = synth::generate_regression("sinc", Some(svr_n), 42);
+    let svr_run = |seed_gamma| {
+        grid_search_svr(
+            &svr_ds,
+            &[1.0, 10.0],
+            &[0.05],
+            &GAMMAS,
+            &opts(BudgetPolicy::Uniform, seed_gamma),
+        )
+    };
+    let (svr_cold, svr_seeded) = (svr_run(false), svr_run(true));
+    let svr_iters = |g: &alphaseed::coordinator::SvrGridResult| {
+        g.points.iter().map(|p| p.iterations).sum::<u64>()
+    };
+    let svr_ratio = svr_iters(&svr_seeded) as f64 / svr_iters(&svr_cold).max(1) as f64;
+    println!("SVR γ-seeded ratio (sinc n={svr_n}): {svr_ratio:.4}");
+
+    // Shape checks — the scheduler's hard guarantees, asserted here so a
+    // broken bench never silently writes a green-looking record.
+    assert!(
+        halving_fraction <= 1.0,
+        "halving ran more iterations ({h_iters}) than the uniform sweep ({u_iters})"
+    );
+    assert_eq!(
+        halved.best().rounds,
+        k,
+        "the halving winner must be promoted to all {k} folds"
+    );
+    assert!(
+        accuracy_identical,
+        "cross-γ seeding changed a cell's accuracy"
+    );
+    println!("shape checks passed: halving ≤ uniform, winner full-k, γ accuracy identical");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("table_grid".into())),
+        ("scale", Json::Num(scale)),
+        ("k", Json::Num(k as f64)),
+        ("cells", Json::Num((CS.len() * GAMMAS.len()) as f64)),
+        (
+            "grid",
+            Json::obj(vec![
+                ("uniform_iterations", Json::Num(u_iters as f64)),
+                ("halving_iterations", Json::Num(h_iters as f64)),
+                ("gamma_seeded_iterations", Json::Num(g_iters as f64)),
+                ("halving_iter_fraction", Json::Num(halving_fraction)),
+                ("gamma_seeded_ratio", Json::Num(gamma_ratio)),
+                ("gamma_accuracy_identical", Json::Bool(accuracy_identical)),
+                ("svr_gamma_seeded_ratio", Json::Num(svr_ratio)),
+                ("uniform_secs", Json::Num(uniform_t.as_secs_f64())),
+                ("halving_secs", Json::Num(halved_t.as_secs_f64())),
+                ("gamma_seeded_secs", Json::Num(seeded_t.as_secs_f64())),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("ALPHASEED_BENCH_OUT").unwrap_or_else(|_| "BENCH_grid.json".into());
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote machine-readable record to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -1,9 +1,14 @@
-//! Experiment configuration: JSON config files + CLI overrides.
+//! Experiment configuration: JSON config files + CLI overrides, plus the
+//! [`RunProfile`] shared by every CV-style driver.
 //!
 //! A config file fixes a whole experiment suite (which datasets, sizes,
 //! hyper-parameters, seeders, k values); the CLI can override any scalar.
 //! JSON is used because the in-repo parser (`util::json`) already exists —
 //! see DESIGN.md §4 on the offline-registry substitutions.
+
+mod profile;
+
+pub use profile::RunProfile;
 
 use crate::data::synth::{paper_datasets, Hyper};
 use crate::util::json::Json;

@@ -1,0 +1,178 @@
+//! [`RunProfile`] — the solver/runtime knobs shared by every CV-style
+//! driver.
+//!
+//! Before this module existed, `CvOptions`, `WarmCOptions`, `OvoOptions`
+//! and `GridOptions` each hand-copied the same nine fields (solver
+//! tolerance, shrinking, cache budgets, RNG seed, threads, row sharing,
+//! active-set carry-over, cache dtype), and `main.rs` plumbed CLI flags
+//! into them through four separate code paths. The profile collects the
+//! shared surface once; each options struct embeds it and keeps only its
+//! task-specific fields (fold chains, budget policy, backends, …).
+//!
+//! Drivers read the knobs that apply to them and ignore the rest — e.g.
+//! the SVR fold driver is single-threaded per solve and never looks at
+//! [`threads`](RunProfile::threads), and [`share_rows`](RunProfile::share_rows)
+//! only matters where a per-γ shared row store exists (grid search,
+//! one-vs-one). The CLI layer rejects flags that would be silent no-ops
+//! for a given subcommand (see `util::cli::run_profile`).
+
+use crate::kernel::CacheDtype;
+
+/// Solver and runtime configuration shared by all CV-style drivers.
+///
+/// `Default` matches LibSVM conventions: tolerance 1e-3, shrinking on,
+/// 256 MB solver cache, 128 MB seeding cache, seed 42, auto threads,
+/// shared rows, active-set carry-over on, f64 cache rows. Options
+/// structs that historically defaulted to a different seeding-cache
+/// budget (grid: 64 MB, one-vs-one pairs: 32 MB) override that one field
+/// in their own `Default` impls.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunProfile {
+    /// SMO stopping tolerance (LibSVM default 1e-3).
+    pub eps: f64,
+    /// LibSVM-style shrinking in the solver.
+    pub shrinking: bool,
+    /// Per-solve kernel-cache byte budget.
+    pub cache_bytes: usize,
+    /// Seeding-cache byte budget (rows over the full dataset, reused
+    /// across fold transitions; also sizes per-γ shared row stores).
+    pub seed_cache_bytes: usize,
+    /// Fold-partition and seeding determinism.
+    pub rng_seed: u64,
+    /// Worker threads for concurrent units; 0 = machine parallelism.
+    pub threads: usize,
+    /// Share one per-γ kernel row store across all cells/pairs of that γ
+    /// (grid search, one-vs-one). `false` gives every unit a private
+    /// cache — same results (cache invariant), more row fills.
+    pub share_rows: bool,
+    /// Carry the previous round's bounded-variable set into the next
+    /// solve's initial active set (validated against the fresh gradient,
+    /// so a wrong carry costs time, never the model).
+    pub carry_active_set: bool,
+    /// Kernel-cache row storage precision (f64 default; f32 halves the
+    /// resident bytes per row, accumulation stays f64).
+    pub cache_dtype: CacheDtype,
+}
+
+impl Default for RunProfile {
+    fn default() -> Self {
+        RunProfile {
+            eps: 1e-3,
+            shrinking: true,
+            cache_bytes: 256 << 20,
+            seed_cache_bytes: 128 << 20,
+            rng_seed: 42,
+            threads: 0,
+            share_rows: true,
+            carry_active_set: true,
+            cache_dtype: CacheDtype::F64,
+        }
+    }
+}
+
+impl RunProfile {
+    /// Builder: set the SMO stopping tolerance.
+    #[must_use]
+    pub fn with_eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Builder: enable/disable solver shrinking.
+    #[must_use]
+    pub fn with_shrinking(mut self, shrinking: bool) -> Self {
+        self.shrinking = shrinking;
+        self
+    }
+
+    /// Builder: set the per-solve kernel-cache byte budget.
+    #[must_use]
+    pub fn with_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = bytes;
+        self
+    }
+
+    /// Builder: set the seeding-cache byte budget.
+    #[must_use]
+    pub fn with_seed_cache_bytes(mut self, bytes: usize) -> Self {
+        self.seed_cache_bytes = bytes;
+        self
+    }
+
+    /// Builder: set the RNG seed for fold partitions and seeding.
+    #[must_use]
+    pub fn with_rng_seed(mut self, rng_seed: u64) -> Self {
+        self.rng_seed = rng_seed;
+        self
+    }
+
+    /// Builder: set the worker-thread count (0 = machine parallelism).
+    #[must_use]
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Builder: enable/disable per-γ shared row stores.
+    #[must_use]
+    pub fn with_share_rows(mut self, share_rows: bool) -> Self {
+        self.share_rows = share_rows;
+        self
+    }
+
+    /// Builder: enable/disable cross-round active-set carry-over.
+    #[must_use]
+    pub fn with_carry_active_set(mut self, carry: bool) -> Self {
+        self.carry_active_set = carry;
+        self
+    }
+
+    /// Builder: set the kernel-cache row storage precision.
+    #[must_use]
+    pub fn with_cache_dtype(mut self, dtype: CacheDtype) -> Self {
+        self.cache_dtype = dtype;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_libsvm_conventions() {
+        let p = RunProfile::default();
+        assert_eq!(p.eps, 1e-3);
+        assert!(p.shrinking);
+        assert_eq!(p.cache_bytes, 256 << 20);
+        assert_eq!(p.seed_cache_bytes, 128 << 20);
+        assert_eq!(p.rng_seed, 42);
+        assert_eq!(p.threads, 0);
+        assert!(p.share_rows);
+        assert!(p.carry_active_set);
+        assert_eq!(p.cache_dtype, CacheDtype::F64);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let p = RunProfile::default()
+            .with_eps(1e-6)
+            .with_shrinking(false)
+            .with_cache_bytes(1 << 20)
+            .with_seed_cache_bytes(2 << 20)
+            .with_rng_seed(7)
+            .with_threads(3)
+            .with_share_rows(false)
+            .with_carry_active_set(false)
+            .with_cache_dtype(CacheDtype::F32);
+        assert_eq!(p.eps, 1e-6);
+        assert!(!p.shrinking);
+        assert_eq!(p.cache_bytes, 1 << 20);
+        assert_eq!(p.seed_cache_bytes, 2 << 20);
+        assert_eq!(p.rng_seed, 7);
+        assert_eq!(p.threads, 3);
+        assert!(!p.share_rows);
+        assert!(!p.carry_active_set);
+        assert_eq!(p.cache_dtype, CacheDtype::F32);
+    }
+}

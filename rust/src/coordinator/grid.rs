@@ -1,131 +1,141 @@
-//! Concurrent hyper-parameter grid search, each cell evaluated by seeded
-//! k-fold cross-validation: (C, γ) for C-SVC ([`grid_search_opts`]),
-//! (C, ε, γ) for ε-SVR ([`grid_search_svr`]), and (C, γ) for one-vs-one
-//! multiclass ensembles ([`grid_search_ovo`]).
+//! Hyper-parameter grid search, each cell evaluated by seeded k-fold
+//! cross-validation: (C, γ) for C-SVC ([`grid_search_opts`]), (C, ε, γ)
+//! for ε-SVR ([`grid_search_svr`]), and (C, γ) for one-vs-one multiclass
+//! ensembles ([`grid_search_ovo`]).
 //!
 //! This is the workload that motivates the paper: model selection runs
-//! many cross-validations, so accelerating each one compounds. The
-//! scheduler layers three kinds of reuse / parallelism:
-//!
-//! 1. **Across cells** — independent units fan out over scoped worker
-//!    threads ([`scoped_map`]); each unit is either one (C, γ) cell or,
-//!    with [`GridOptions::warm_c`], one whole ascending-C chain.
-//! 2. **Across C within a γ** (`warm_c`) — Chu et al.'s warm start: fold
-//!    h of the run at C′ seeds from the same fold at the previous C via
-//!    [`rescale_alpha`](crate::cv::rescale_alpha). The chain is a
-//!    *dependency edge* between cells, so it runs sequentially inside one
-//!    unit while different γ chains run concurrently.
-//! 3. **Across everything sharing a γ** — RBF rows depend on the data and
-//!    γ, not on C, so all cells of one γ column share a read-mostly
-//!    [`SharedKernelCache`] and compute each seeding row once.
+//! many cross-validations, so accelerating each one compounds. All three
+//! entry points validate their inputs and route through the scheduler in
+//! [`schedule`](super::schedule), which makes the grid's structure
+//! explicit: cells are nodes of a [`ScheduleGraph`](super::ScheduleGraph)
+//! whose edges are the reuse dependencies (the fold chain inside each
+//! cell, [`GridOptions::warm_c`]'s ascending-C chain within a γ column,
+//! [`GridOptions::seed_gamma`]'s cross-γ alpha transfer within a C row),
+//! and a [`BudgetPolicy`] decides how many CV rounds each cell receives —
+//! [`BudgetPolicy::Uniform`] reproduces the historical full sweep
+//! bit-for-bit, [`BudgetPolicy::SuccessiveHalving`] eliminates weak cells
+//! early on a partial metric while survivors resume their seeded chains.
 //!
 //! Within every cell the fold-to-fold seeding chain runs exactly as in
-//! the sequential driver — scheduling changes *when* a cell runs, never
-//! what it computes — so per-cell accuracies and iteration counts are
-//! identical to a sequential sweep (asserted in `tests/parallel_identity.rs`).
+//! the sequential driver — scheduling changes *when* a cell's rounds run,
+//! never what a round computes — so per-cell accuracies and iteration
+//! counts are identical to a sequential sweep (asserted in
+//! `tests/parallel_identity.rs` and `tests/budget_grid.rs`).
 
-use crate::cv::{run_kfold, run_kfold_svr, run_kfold_warm_c, CvOptions, WarmCOptions};
+use super::schedule::{run_csvc_grid, run_ovo_grid, run_svr_grid, BudgetPolicy};
+use crate::config::RunProfile;
 use crate::data::Dataset;
-use crate::kernel::{CacheDtype, Kernel, KernelEval, SharedKernelCache};
-use crate::multiclass::{
-    class_pairs, pair_chain, tally_votes, MultiDataset, OvoOptions, PairChainSpec, PairRun,
-};
-use crate::seeding::seeder_by_name;
-use crate::seeding::svr::svr_seeder_by_name;
+use crate::kernel::{Kernel, KernelEval};
+use crate::multiclass::MultiDataset;
 use crate::smo::problem::{solver_for, SvrProblem};
 use crate::smo::{Model, SmoParams, Solver, SvrModel};
-use crate::util::pool::{effective_threads, scoped_map};
-use std::sync::Arc;
 
 /// One evaluated grid cell.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
+    /// Penalty C of this cell.
     pub c: f64,
+    /// RBF kernel width γ of this cell.
     pub gamma: f64,
+    /// CV accuracy pooled over the rounds that ran.
     pub accuracy: f64,
+    /// Σ SMO iterations across the cell's CV rounds.
     pub iterations: u64,
+    /// CV rounds this cell actually ran: k under
+    /// [`BudgetPolicy::Uniform`]; possibly fewer for cells that
+    /// [`BudgetPolicy::SuccessiveHalving`] eliminated early, whose
+    /// `accuracy` is then a partial metric.
+    pub rounds: usize,
+    /// Wall time of the cell's CV run.
     pub elapsed: std::time::Duration,
 }
 
 /// Result of a grid search.
 #[derive(Debug, Clone)]
 pub struct GridResult {
+    /// Evaluated cells in C-major order (`c_values` outer, `gamma_values`
+    /// inner).
     pub points: Vec<GridPoint>,
 }
 
 impl GridResult {
     /// The cell with the highest CV accuracy (ties → smaller C, then γ:
-    /// prefer the simpler model).
+    /// prefer the simpler model). Cells with more completed rounds win
+    /// before accuracies are compared, so a partially-run cell that
+    /// successive halving eliminated can never displace the fully
+    /// cross-validated winner.
     pub fn best(&self) -> &GridPoint {
         self.points
             .iter()
             .min_by(|a, b| {
-                b.accuracy
-                    .total_cmp(&a.accuracy)
+                b.rounds
+                    .cmp(&a.rounds)
+                    .then(b.accuracy.total_cmp(&a.accuracy))
                     .then(a.c.total_cmp(&b.c))
                     .then(a.gamma.total_cmp(&b.gamma))
             })
             .expect("empty grid")
     }
 
+    /// Σ iterations over every cell.
     pub fn total_iterations(&self) -> u64 {
         self.points.iter().map(|p| p.iterations).sum()
     }
 }
 
-/// Scheduling options for [`grid_search_opts`].
+/// Scheduling options for [`grid_search_opts`], [`grid_search_svr`] and
+/// [`grid_search_ovo`].
 #[derive(Debug, Clone)]
 pub struct GridOptions {
+    /// Shared solver/runtime knobs for every cell (tolerance, caches,
+    /// seed, threads, …). `profile.threads` is the concurrent scheduling
+    /// width (0 = auto) and never changes results; `profile.share_rows`
+    /// shares one kernel-row store per γ across that γ's cells (pure
+    /// compute sharing — adopted rows are bit-identical to locally
+    /// computed ones) with `profile.seed_cache_bytes` as each store's
+    /// budget; `profile.carry_active_set` threads the cross-fold (and,
+    /// with `warm_c`, cross-C) shrinking carry-over into every cell's
+    /// solver (wall-time only).
+    pub profile: RunProfile,
     /// Folds per cell.
     pub k: usize,
     /// Seeder name ("cold", "ato", "mir", "sir").
     pub seeder: String,
-    /// Concurrent scheduling width (0 = auto). Never changes results.
-    pub threads: usize,
-    /// Fold-partition + seeding determinism.
-    pub rng_seed: u64,
     /// Chain ascending C values within each γ through
     /// [`rescale_alpha`](crate::cv::rescale_alpha) (Chu et al. reuse).
     /// Changes iteration counts (that is the point) but not accuracies.
+    /// Mutually exclusive with `seed_gamma` and non-uniform `policy`.
     pub warm_c: bool,
-    /// Share one kernel-row store per γ across that γ's cells. Pure
-    /// compute sharing — adopted rows are bit-identical to locally
-    /// computed ones.
-    pub share_rows: bool,
-    /// Byte budget for each per-γ shared row store.
-    pub seed_cache_bytes: usize,
-    /// Thread the cross-fold (and, with `warm_c`, cross-C) active-set
-    /// carry-over into every cell's solver — see
-    /// [`CvOptions::carry_active_set`](crate::cv::CvOptions::carry_active_set).
-    /// Wall-time only; per-cell accuracies are unaffected.
-    pub carry_active_set: bool,
-    /// Storage precision for every kernel-row store the grid builds (the
-    /// per-γ shared stores and each cell's private caches) — see
-    /// [`CvOptions::cache_dtype`](crate::cv::CvOptions::cache_dtype) for
-    /// the accuracy contract. `F32` doubles row capacity per byte budget,
-    /// which compounds across a grid's many cells.
-    pub cache_dtype: CacheDtype,
+    /// How the round budget is spread over the cells; see
+    /// [`BudgetPolicy`].
+    pub policy: BudgetPolicy,
+    /// Chain adjacent γ cells within each C row: a cell's round 0 starts
+    /// from the previous γ's round-0 α, projected back to feasibility by
+    /// the same clip-and-rebalance machinery as the fold transfer
+    /// ([`seeding::gamma`](crate::seeding::gamma)). Changes iteration
+    /// counts only, never a cell's accuracy. Mutually exclusive with
+    /// `warm_c`; unsupported for the multiclass grid.
+    pub seed_gamma: bool,
 }
 
 impl Default for GridOptions {
     fn default() -> Self {
         GridOptions {
+            // Grid cells each hold a fraction of the machine: the per-γ
+            // shared store budget defaults smaller than a lone CV run's.
+            profile: RunProfile::default().with_seed_cache_bytes(64 << 20),
             k: 5,
             seeder: "sir".into(),
-            threads: 0,
-            rng_seed: 42,
             warm_c: false,
-            share_rows: true,
-            seed_cache_bytes: 64 << 20,
-            carry_active_set: true,
-            cache_dtype: CacheDtype::F64,
+            policy: BudgetPolicy::Uniform,
+            seed_gamma: false,
         }
     }
 }
 
 /// Evaluate the (C, γ) grid with `seeder`-accelerated k-fold CV — the
 /// original entry point, scheduling independent cells concurrently.
-/// Equivalent to [`grid_search_opts`] with `warm_c = false`.
+/// Equivalent to [`grid_search_opts`] with default [`GridOptions`].
 pub fn grid_search(
     ds: &Dataset,
     c_values: &[f64],
@@ -140,10 +150,12 @@ pub fn grid_search(
         c_values,
         gamma_values,
         &GridOptions {
+            profile: GridOptions::default()
+                .profile
+                .with_threads(threads)
+                .with_rng_seed(rng_seed),
             k,
             seeder: seeder.to_string(),
-            threads,
-            rng_seed,
             ..Default::default()
         },
     )
@@ -151,7 +163,7 @@ pub fn grid_search(
 
 /// Evaluate the (C, γ) grid under explicit scheduling options. Points come
 /// back in C-major order (`c_values` outer, `gamma_values` inner)
-/// regardless of execution order.
+/// regardless of execution order or budget policy.
 pub fn grid_search_opts(
     ds: &Dataset,
     c_values: &[f64],
@@ -159,128 +171,9 @@ pub fn grid_search_opts(
     opts: &GridOptions,
 ) -> GridResult {
     assert!(!c_values.is_empty() && !gamma_values.is_empty(), "empty grid");
-    // One shared row store per γ column (rows depend on γ, never on C).
-    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
-        .iter()
-        .map(|&gamma| {
-            opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget_dtype(
-                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
-                    opts.seed_cache_bytes,
-                    opts.cache_dtype,
-                )
-            })
-        })
-        .collect();
-
-    let points = if opts.warm_c {
-        warm_c_sweep(ds, c_values, gamma_values, &shares, opts)
-    } else {
-        independent_cells(ds, c_values, gamma_values, &shares, opts)
-    };
-    GridResult { points }
-}
-
-/// Every (C, γ) cell is an independent unit; fan all of them out.
-fn independent_cells(
-    ds: &Dataset,
-    c_values: &[f64],
-    gamma_values: &[f64],
-    shares: &[Option<Arc<SharedKernelCache>>],
-    opts: &GridOptions,
-) -> Vec<GridPoint> {
-    let cells: Vec<(usize, usize)> = (0..c_values.len())
-        .flat_map(|ci| (0..gamma_values.len()).map(move |gi| (ci, gi)))
-        .collect();
-    // Split the scheduling width between fan-out and intra-cell
-    // parallelism: cells.len() × intra ≈ width, never oversubscribing.
-    let width = effective_threads(opts.threads);
-    let intra = (width / cells.len().max(1)).max(1);
-    scoped_map(opts.threads, cells.len(), |i| {
-        let (ci, gi) = cells[i];
-        let (c, gamma) = (c_values[ci], gamma_values[gi]);
-        let seeder = seeder_by_name(&opts.seeder)
-            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
-        let started = std::time::Instant::now();
-        let report = run_kfold(
-            ds,
-            Kernel::rbf(gamma),
-            c,
-            opts.k,
-            seeder.as_ref(),
-            CvOptions {
-                rng_seed: opts.rng_seed,
-                threads: intra,
-                shared_seed_cache: shares[gi].clone(),
-                carry_active_set: opts.carry_active_set,
-                cache_dtype: opts.cache_dtype,
-                ..Default::default()
-            },
-        );
-        GridPoint {
-            c,
-            gamma,
-            accuracy: report.accuracy(),
-            iterations: report.total_iterations(),
-            elapsed: started.elapsed(),
-        }
-    })
-}
-
-/// One unit per γ: the ascending-C chain (each C seeds the next via
-/// `rescale_alpha`) runs sequentially inside the unit; units run
-/// concurrently.
-fn warm_c_sweep(
-    ds: &Dataset,
-    c_values: &[f64],
-    gamma_values: &[f64],
-    shares: &[Option<Arc<SharedKernelCache>>],
-    opts: &GridOptions,
-) -> Vec<GridPoint> {
-    // The chain must visit C ascending; remember how to map back.
-    let mut order: Vec<usize> = (0..c_values.len()).collect();
-    order.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
-    let sorted_cs: Vec<f64> = order.iter().map(|&i| c_values[i]).collect();
-
-    let width = effective_threads(opts.threads);
-    let intra = (width / gamma_values.len().max(1)).max(1);
-    let per_gamma = scoped_map(opts.threads, gamma_values.len(), |gi| {
-        let gamma = gamma_values[gi];
-        let seeder = seeder_by_name(&opts.seeder)
-            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
-        run_kfold_warm_c(
-            ds,
-            Kernel::rbf(gamma),
-            &sorted_cs,
-            opts.k,
-            seeder.as_ref(),
-            WarmCOptions {
-                rng_seed: opts.rng_seed,
-                threads: intra,
-                shared_seed_cache: shares[gi].clone(),
-                carry_active_set: opts.carry_active_set,
-                cache_dtype: opts.cache_dtype,
-                ..Default::default()
-            },
-        )
-    });
-
-    // Assemble in C-major caller order.
-    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
-    for (ci, &c) in c_values.iter().enumerate() {
-        let sorted_pos = order.iter().position(|&o| o == ci).expect("order is a permutation");
-        for (gi, &gamma) in gamma_values.iter().enumerate() {
-            let report = &per_gamma[gi][sorted_pos];
-            points.push(GridPoint {
-                c,
-                gamma,
-                accuracy: report.accuracy(),
-                iterations: report.total_iterations(),
-                elapsed: report.total_elapsed(),
-            });
-        }
+    GridResult {
+        points: run_csvc_grid(ds, c_values, gamma_values, opts),
     }
-    points
 }
 
 // ---- the one-vs-one multiclass (C, γ) grid --------------------------------
@@ -290,9 +183,9 @@ fn warm_c_sweep(
 /// counterpart of [`grid_search_opts`], reusing both grid-level tricks:
 ///
 /// - one shared full-dataset row store per γ column
-///   ([`GridOptions::share_rows`]), which every (cell × pair) reads
-///   through an index-projected pair view — each kernel row is computed
-///   once per γ for the *whole grid*, not once per pair per cell;
+///   (`opts.profile.share_rows`), which every (cell × pair) reads through
+///   an index-projected pair view — each kernel row is computed once per
+///   γ for the *whole grid*, not once per pair per cell;
 /// - with [`GridOptions::warm_c`], fold h of a pair at C′ seeds from the
 ///   same fold of that pair at the previous C via
 ///   [`rescale_alpha`](crate::cv::rescale_alpha) — the chain is a
@@ -302,7 +195,9 @@ fn warm_c_sweep(
 /// Each cell's accuracy is the ensemble majority-vote CV accuracy over
 /// the shared multiclass-stratified folds. Scheduling never changes what
 /// a unit computes; points come back in C-major order (`c_values` outer,
-/// `gamma_values` inner) regardless of execution order.
+/// `gamma_values` inner) regardless of execution order. The budget policy
+/// must be [`BudgetPolicy::Uniform`] and `seed_gamma` is unsupported
+/// here (a cell's metric pools all pair chains).
 pub fn grid_search_ovo(
     mds: &MultiDataset,
     c_values: &[f64],
@@ -313,108 +208,9 @@ pub fn grid_search_ovo(
         !c_values.is_empty() && !gamma_values.is_empty(),
         "empty grid"
     );
-    let classes = mds.classes();
-    assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
-    let pairs = class_pairs(&classes);
-    let folds = mds.stratified_folds(opts.k, opts.rng_seed);
-    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
-        .iter()
-        .map(|&gamma| {
-            opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget_dtype(
-                    KernelEval::new(mds.kernel_dataset(), Kernel::rbf(gamma)),
-                    opts.seed_cache_bytes,
-                    opts.cache_dtype,
-                )
-            })
-        })
-        .collect();
-
-    // The C-chain must visit C ascending; remember how to map back.
-    let mut order: Vec<usize> = (0..c_values.len()).collect();
-    order.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
-    let sorted_cs: Vec<f64> = order.iter().map(|&i| c_values[i]).collect();
-
-    let ovo_opts = OvoOptions {
-        rng_seed: opts.rng_seed,
-        carry_active_set: opts.carry_active_set,
-        cache_dtype: opts.cache_dtype,
-        ..Default::default()
-    };
-    // One unit per (γ, pair): the pair's C chain runs sequentially inside
-    // the unit while units fan out.
-    let units: Vec<(usize, usize)> = (0..gamma_values.len())
-        .flat_map(|gi| (0..pairs.len()).map(move |pi| (gi, pi)))
-        .collect();
-    let width = effective_threads(opts.threads);
-    let solver_threads = (width / units.len().max(1)).max(1);
-    // per unit: one PairRun per C value, in *caller* c_values order
-    let unit_runs: Vec<Vec<PairRun>> = scoped_map(opts.threads, units.len(), |u| {
-        let (gi, pi) = units[u];
-        let (class_a, class_b) = pairs[pi];
-        let seeder = seeder_by_name(&opts.seeder)
-            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
-        let run = |cs: &[f64], chain_c: bool| {
-            pair_chain(
-                &PairChainSpec {
-                    mds,
-                    folds: &folds,
-                    kernel: Kernel::rbf(gamma_values[gi]),
-                    cs,
-                    chain_c,
-                    seeder: seeder.as_ref(),
-                    shared: shares[gi].as_ref(),
-                    opts: &ovo_opts,
-                    solver_threads,
-                    pair_index: pi + gi * pairs.len(),
-                },
-                class_a,
-                class_b,
-            )
-        };
-        if opts.warm_c {
-            let sorted_runs = run(&sorted_cs, true);
-            // reorder from ascending-C back to caller order
-            (0..c_values.len())
-                .map(|ci| {
-                    let pos = order.iter().position(|&o| o == ci).expect("permutation");
-                    sorted_runs[pos].clone()
-                })
-                .collect()
-        } else {
-            // one call over the whole C list: the pair view and its seed
-            // cache are built once and reused across every C
-            run(c_values, false)
-        }
-    });
-
-    // Assemble cells in C-major caller order, merging votes across pairs
-    // in pair order (deterministic tally).
-    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
-    for (ci, &c) in c_values.iter().enumerate() {
-        for (gi, &gamma) in gamma_values.iter().enumerate() {
-            let cell_runs: Vec<&PairRun> = (0..pairs.len())
-                .map(|pi| &unit_runs[gi * pairs.len() + pi][ci])
-                .collect();
-            let votes: Vec<Vec<(usize, u32)>> =
-                cell_runs.iter().map(|r| r.votes.clone()).collect();
-            let confusion = tally_votes(&classes, &mds.labels, &votes);
-            let correct: usize = (0..classes.len()).map(|i| confusion[i][i]).sum();
-            let total: usize = confusion.iter().flatten().sum();
-            points.push(GridPoint {
-                c,
-                gamma,
-                accuracy: if total == 0 {
-                    0.0
-                } else {
-                    correct as f64 / total as f64
-                },
-                iterations: cell_runs.iter().map(|r| r.stat.iterations).sum(),
-                elapsed: cell_runs.iter().map(|r| r.stat.init + r.stat.rest).sum(),
-            });
-        }
+    GridResult {
+        points: run_ovo_grid(mds, c_values, gamma_values, opts),
     }
-    GridResult { points }
 }
 
 // ---- the (C, ε, γ) regression grid ----------------------------------------
@@ -428,10 +224,12 @@ pub struct SvrGridPoint {
     pub epsilon: f64,
     /// RBF kernel width γ of this cell.
     pub gamma: f64,
-    /// Cross-validated mean squared error.
+    /// Cross-validated mean squared error pooled over the rounds that ran.
     pub mse: f64,
     /// Σ SMO iterations across the cell's CV rounds.
     pub iterations: u64,
+    /// CV rounds this cell actually ran (see [`GridPoint::rounds`]).
+    pub rounds: usize,
     /// Wall time of the cell's CV run.
     pub elapsed: std::time::Duration,
 }
@@ -445,13 +243,16 @@ pub struct SvrGridResult {
 
 impl SvrGridResult {
     /// The cell with the lowest CV MSE (ties → smaller C, then wider ε,
-    /// then smaller γ: prefer the flatter model).
+    /// then smaller γ: prefer the flatter model). As in
+    /// [`GridResult::best`], cells with more completed rounds win before
+    /// metrics are compared.
     pub fn best(&self) -> &SvrGridPoint {
         self.points
             .iter()
             .min_by(|a, b| {
-                a.mse
-                    .total_cmp(&b.mse)
+                b.rounds
+                    .cmp(&a.rounds)
+                    .then(a.mse.total_cmp(&b.mse))
                     .then(a.c.total_cmp(&b.c))
                     .then(b.epsilon.total_cmp(&a.epsilon))
                     .then(a.gamma.total_cmp(&b.gamma))
@@ -468,11 +269,11 @@ impl SvrGridResult {
 /// Evaluate the (C, ε, γ) grid with seeded ε-SVR k-fold CV — the
 /// regression counterpart of [`grid_search_opts`], with the tube width as
 /// a third axis (ε changes the dual's linear term, so unlike C it cannot
-/// be warm-chained by rescaling; cells are independent units). Per-γ
-/// [`SharedKernelCache`]s are shared across all (C, ε) cells of that γ
-/// when `opts.share_rows` is set, exactly as in the classification grid.
-/// `opts.warm_c` is ignored. Points come back in C-major, then ε, then γ
-/// order regardless of execution order.
+/// be warm-chained by rescaling; `opts.warm_c` is ignored). Per-γ shared
+/// row stores, `opts.seed_gamma`'s cross-γ transfer (in δ-space, along
+/// each (C, ε) row) and `opts.policy` compose exactly as in the
+/// classification grid. Points come back in C-major, then ε, then γ order
+/// regardless of execution order.
 pub fn grid_search_svr(
     ds: &Dataset,
     c_values: &[f64],
@@ -485,56 +286,9 @@ pub fn grid_search_svr(
         "empty grid"
     );
     assert!(ds.is_regression(), "grid_search_svr needs a regression dataset");
-    let shares: Vec<Option<Arc<SharedKernelCache>>> = gamma_values
-        .iter()
-        .map(|&gamma| {
-            opts.share_rows.then(|| {
-                SharedKernelCache::with_byte_budget_dtype(
-                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
-                    opts.seed_cache_bytes,
-                    opts.cache_dtype,
-                )
-            })
-        })
-        .collect();
-
-    let cells: Vec<(usize, usize, usize)> = (0..c_values.len())
-        .flat_map(|ci| {
-            (0..eps_values.len())
-                .flat_map(move |ei| (0..gamma_values.len()).map(move |gi| (ci, ei, gi)))
-        })
-        .collect();
-    let points = scoped_map(opts.threads, cells.len(), |i| {
-        let (ci, ei, gi) = cells[i];
-        let (c, epsilon, gamma) = (c_values[ci], eps_values[ei], gamma_values[gi]);
-        let seeder = svr_seeder_by_name(&opts.seeder)
-            .unwrap_or_else(|| panic!("unknown SVR seeder '{}'", opts.seeder));
-        let started = std::time::Instant::now();
-        let report = run_kfold_svr(
-            ds,
-            Kernel::rbf(gamma),
-            c,
-            epsilon,
-            opts.k,
-            seeder.as_ref(),
-            CvOptions {
-                rng_seed: opts.rng_seed,
-                shared_seed_cache: shares[gi].clone(),
-                carry_active_set: opts.carry_active_set,
-                cache_dtype: opts.cache_dtype,
-                ..Default::default()
-            },
-        );
-        SvrGridPoint {
-            c,
-            epsilon,
-            gamma,
-            mse: report.mse(),
-            iterations: report.total_iterations(),
-            elapsed: started.elapsed(),
-        }
-    });
-    SvrGridResult { points }
+    SvrGridResult {
+        points: run_svr_grid(ds, c_values, eps_values, gamma_values, opts),
+    }
 }
 
 /// Retrain the winning (C, γ) cell of `result` on the full dataset and
@@ -599,6 +353,7 @@ mod tests {
         assert_eq!(g.points.len(), 6);
         let best = g.best();
         assert!(g.points.iter().all(|p| p.accuracy <= best.accuracy));
+        assert!(g.points.iter().all(|p| p.rounds == 3));
         assert!(g.total_iterations() > 0);
     }
 
@@ -611,6 +366,7 @@ mod tests {
                     gamma: 0.1,
                     accuracy: 0.9,
                     iterations: 1,
+                    rounds: 3,
                     elapsed: Default::default(),
                 },
                 GridPoint {
@@ -618,6 +374,7 @@ mod tests {
                     gamma: 0.1,
                     accuracy: 0.9,
                     iterations: 1,
+                    rounds: 3,
                     elapsed: Default::default(),
                 },
             ],
@@ -626,15 +383,44 @@ mod tests {
     }
 
     #[test]
+    fn best_prefers_full_rounds_over_partial_accuracy() {
+        // an eliminated cell's lucky partial metric must not displace the
+        // fully cross-validated winner
+        let g = GridResult {
+            points: vec![
+                GridPoint {
+                    c: 1.0,
+                    gamma: 0.1,
+                    accuracy: 1.0, // perfect — but on 1 of 3 rounds
+                    iterations: 1,
+                    rounds: 1,
+                    elapsed: Default::default(),
+                },
+                GridPoint {
+                    c: 2.0,
+                    gamma: 0.1,
+                    accuracy: 0.8,
+                    iterations: 1,
+                    rounds: 3,
+                    elapsed: Default::default(),
+                },
+            ],
+        };
+        assert_eq!(g.best().c, 2.0);
+    }
+
+    #[test]
     fn warm_c_matches_plain_accuracies() {
         let ds = crate::data::synth::generate("heart", Some(120), 5);
         let cs = [16.0, 64.0, 256.0];
         let gammas = [0.1, 0.3];
         let base = GridOptions {
+            profile: GridOptions::default()
+                .profile
+                .with_threads(4)
+                .with_rng_seed(11),
             k: 3,
             seeder: "sir".into(),
-            threads: 4,
-            rng_seed: 11,
             ..Default::default()
         };
         let plain = grid_search_opts(&ds, &cs, &gammas, &base);
@@ -657,32 +443,86 @@ mod tests {
     }
 
     #[test]
+    fn seed_gamma_matches_plain_accuracies() {
+        let ds = crate::data::synth::generate("heart", Some(120), 5);
+        let cs = [1.0, 16.0];
+        let gammas = [0.1, 0.2, 0.4];
+        let base = GridOptions {
+            profile: GridOptions::default()
+                .profile
+                .with_threads(4)
+                .with_rng_seed(11),
+            k: 3,
+            seeder: "sir".into(),
+            ..Default::default()
+        };
+        let plain = grid_search_opts(&ds, &cs, &gammas, &base);
+        let seeded = grid_search_opts(
+            &ds,
+            &cs,
+            &gammas,
+            &GridOptions {
+                seed_gamma: true,
+                ..base
+            },
+        );
+        assert_eq!(plain.points.len(), seeded.points.len());
+        for (p, s) in plain.points.iter().zip(&seeded.points) {
+            assert_eq!(p.c, s.c);
+            assert_eq!(p.gamma, s.gamma);
+            assert_eq!(p.rounds, s.rounds);
+            // cross-γ transfer moves the solver's start, never its fixed
+            // point — same guarantee as the fold chain
+            assert_eq!(p.accuracy, s.accuracy, "C={} gamma={}", p.c, p.gamma);
+        }
+    }
+
+    #[test]
+    fn halving_promotes_a_full_k_winner() {
+        let ds = crate::data::synth::generate("heart", Some(90), 3);
+        let g = grid_search_opts(
+            &ds,
+            &[0.5, 2.0, 8.0],
+            &[0.1, 0.3],
+            &GridOptions {
+                profile: GridOptions::default().profile.with_threads(2),
+                k: 3,
+                policy: BudgetPolicy::SuccessiveHalving {
+                    eta: 2,
+                    min_rounds: 1,
+                },
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.points.len(), 6);
+        // the winner ran every fold; eliminated cells report fewer rounds
+        assert_eq!(g.best().rounds, 3);
+        assert!(g.points.iter().all(|p| (1..=3).contains(&p.rounds)));
+        assert!(g.points.iter().any(|p| p.rounds < 3));
+    }
+
+    #[test]
     fn shared_rows_do_not_change_results() {
         let ds = crate::data::synth::generate("heart", Some(80), 9);
         let cs = [1.0, 8.0];
         let gammas = [0.2];
-        let with = grid_search_opts(
-            &ds,
-            &cs,
-            &gammas,
-            &GridOptions {
-                k: 3,
-                threads: 2,
-                share_rows: true,
-                ..Default::default()
-            },
-        );
-        let without = grid_search_opts(
-            &ds,
-            &cs,
-            &gammas,
-            &GridOptions {
-                k: 3,
-                threads: 2,
-                share_rows: false,
-                ..Default::default()
-            },
-        );
+        let run = |share_rows: bool| {
+            grid_search_opts(
+                &ds,
+                &cs,
+                &gammas,
+                &GridOptions {
+                    profile: GridOptions::default()
+                        .profile
+                        .with_threads(2)
+                        .with_share_rows(share_rows),
+                    k: 3,
+                    ..Default::default()
+                },
+            )
+        };
+        let with = run(true);
+        let without = run(false);
         for (a, b) in with.points.iter().zip(&without.points) {
             assert_eq!(a.accuracy, b.accuracy);
             assert_eq!(a.iterations, b.iterations);
@@ -697,10 +537,12 @@ mod tests {
             &[1.0, 10.0],
             &[0.2, 0.5],
             &GridOptions {
+                profile: GridOptions::default()
+                    .profile
+                    .with_threads(2)
+                    .with_rng_seed(11),
                 k: 3,
                 seeder: "sir".into(),
-                threads: 2,
-                rng_seed: 11,
                 ..Default::default()
             },
         );
@@ -717,10 +559,12 @@ mod tests {
     fn ovo_grid_cell_matches_direct_cv() {
         let mds = crate::multiclass::synth_blobs(75, 3, 3, 2.0, 3);
         let opts = GridOptions {
+            profile: GridOptions::default()
+                .profile
+                .with_threads(2)
+                .with_rng_seed(5),
             k: 3,
             seeder: "sir".into(),
-            threads: 2,
-            rng_seed: 5,
             ..Default::default()
         };
         let g = grid_search_ovo(&mds, &[4.0], &[0.3], &opts);
@@ -731,7 +575,9 @@ mod tests {
             3,
             crate::seeding::seeder_by_name("sir").unwrap().as_ref(),
             &crate::multiclass::OvoOptions {
-                rng_seed: 5,
+                profile: crate::multiclass::OvoOptions::default()
+                    .profile
+                    .with_rng_seed(5),
                 ..Default::default()
             },
         );
@@ -743,10 +589,12 @@ mod tests {
     fn ovo_grid_warm_c_matches_plain_accuracies() {
         let mds = crate::multiclass::synth_blobs(90, 3, 3, 2.0, 9);
         let base = GridOptions {
+            profile: GridOptions::default()
+                .profile
+                .with_threads(2)
+                .with_rng_seed(13),
             k: 3,
             seeder: "sir".into(),
-            threads: 2,
-            rng_seed: 13,
             ..Default::default()
         };
         let cs = [2.0, 8.0, 32.0];
@@ -787,9 +635,9 @@ mod tests {
             &[0.05, 0.2],
             &[0.5],
             &GridOptions {
+                profile: GridOptions::default().profile.with_threads(2),
                 k: 3,
                 seeder: "sir".into(),
-                threads: 2,
                 ..Default::default()
             },
         );
@@ -813,10 +661,12 @@ mod tests {
                 &[0.05],
                 &[0.3, 0.6],
                 &GridOptions {
+                    profile: GridOptions::default()
+                        .profile
+                        .with_threads(2)
+                        .with_share_rows(share_rows),
                     k: 3,
                     seeder: "sir".into(),
-                    threads: 2,
-                    share_rows,
                     ..Default::default()
                 },
             )
@@ -830,6 +680,42 @@ mod tests {
     }
 
     #[test]
+    fn svr_seed_gamma_matches_plain_mse() {
+        let ds = crate::data::synth::generate_regression("sinc", Some(70), 5);
+        let base = GridOptions {
+            profile: GridOptions::default().profile.with_threads(2),
+            k: 3,
+            seeder: "sir".into(),
+            ..Default::default()
+        };
+        let plain = grid_search_svr(&ds, &[2.0], &[0.05, 0.1], &[0.3, 0.6], &base);
+        let seeded = grid_search_svr(
+            &ds,
+            &[2.0],
+            &[0.05, 0.1],
+            &[0.3, 0.6],
+            &GridOptions {
+                seed_gamma: true,
+                ..base
+            },
+        );
+        for (p, s) in plain.points.iter().zip(&seeded.points) {
+            assert_eq!((p.c, p.epsilon, p.gamma), (s.c, s.epsilon, s.gamma));
+            // δ-space transfer agrees to the solver's tolerance; at the
+            // default eps the pooled MSE stays this close
+            assert!(
+                (p.mse - s.mse).abs() < 1e-6,
+                "C={} eps={} gamma={}: plain {} vs seeded {}",
+                p.c,
+                p.epsilon,
+                p.gamma,
+                p.mse,
+                s.mse
+            );
+        }
+    }
+
+    #[test]
     fn warm_c_unsorted_c_grid_keeps_caller_order() {
         let ds = crate::data::synth::generate("heart", Some(60), 2);
         let cs = [8.0, 1.0]; // deliberately descending
@@ -838,9 +724,9 @@ mod tests {
             &cs,
             &[0.2],
             &GridOptions {
+                profile: GridOptions::default().profile.with_threads(2),
                 k: 3,
                 warm_c: true,
-                threads: 2,
                 ..Default::default()
             },
         );
@@ -852,8 +738,8 @@ mod tests {
     fn promote_best_csvc_installs_retrained_winner() {
         let ds = crate::data::synth::generate("heart", Some(60), 3);
         let opts = GridOptions {
+            profile: GridOptions::default().profile.with_threads(2),
             k: 3,
-            threads: 2,
             ..Default::default()
         };
         let result = grid_search_opts(&ds, &[0.5, 2.0], &[0.1, 0.3], &opts);
@@ -889,8 +775,8 @@ mod tests {
     fn promote_best_svr_installs_retrained_winner() {
         let ds = crate::data::synth::generate_regression("sinc", Some(80), 3);
         let opts = GridOptions {
+            profile: GridOptions::default().profile.with_threads(2),
             k: 3,
-            threads: 2,
             ..Default::default()
         };
         let result = grid_search_svr(&ds, &[1.0, 10.0], &[0.05, 0.2], &[0.5], &opts);

@@ -141,9 +141,10 @@ fn run_one_with_threads(spec: &JobSpec, shared: Option<&Dataset>, threads: usize
             spec.k,
             seeder.as_ref(),
             CvOptions {
+                profile: crate::config::RunProfile::default()
+                    .with_rng_seed(spec.rng_seed)
+                    .with_threads(threads),
                 max_rounds: spec.max_rounds,
-                rng_seed: spec.rng_seed,
-                threads,
                 ..Default::default()
             },
         )

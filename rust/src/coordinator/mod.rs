@@ -8,14 +8,18 @@
 //! hyper-parameter grids are embarrassingly parallel across runs, and
 //! that's what the coordinator fans out.
 //!
-//! The grid scheduler ([`grid_search_opts`]) additionally understands two
-//! reuse dimensions: Chu et al.'s warm start across ascending C values
-//! (a dependency chain per γ, cells within a chain run in order while
-//! chains run concurrently) and a per-γ
+//! The grid scheduler ([`grid_search_opts`] routing through
+//! [`schedule`]) makes that structure explicit: cells are nodes of a
+//! [`ScheduleGraph`] whose edges are the reuse dependencies — Chu et
+//! al.'s warm start across ascending C values, the cross-γ alpha
+//! transfer along each C row, and a per-γ
 //! [`SharedKernelCache`](crate::kernel::SharedKernelCache) so cells over
-//! the same data + γ compute each kernel row once. Scheduling never
-//! changes what a cell computes — per-cell results are identical to a
-//! sequential sweep.
+//! the same data + γ compute each kernel row once — and a
+//! [`BudgetPolicy`] decides how many CV rounds each cell receives
+//! (uniform full sweeps, or successive halving that eliminates weak
+//! cells on a partial metric while survivors resume their seeded
+//! chains). Scheduling never changes what a round computes — per-cell
+//! results are identical to a sequential sweep.
 //!
 //! The serving half closes the train→serve loop: [`ModelRegistry`] holds
 //! the current [`ServeModel`] (C-SVC / ε-SVR / one-class) behind an
@@ -28,12 +32,14 @@ pub mod experiments;
 mod grid;
 mod jobs;
 mod registry;
+pub mod schedule;
 mod server;
 
 pub use grid::{
     grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, promote_best_csvc,
     promote_best_svr, GridOptions, GridPoint, GridResult, SvrGridPoint, SvrGridResult,
 };
+pub use schedule::{BudgetPolicy, GridNode, ScheduleGraph};
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use registry::{ModelRegistry, ServeModel, VersionedModel};
 pub use server::{PredictServer, MAX_BATCH};

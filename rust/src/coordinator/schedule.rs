@@ -1,0 +1,1011 @@
+//! The grid scheduler: an explicit dependency graph over grid cells plus
+//! a budget policy deciding how many CV rounds each cell receives.
+//!
+//! Earlier revisions hard-wired the grid's execution shapes into the
+//! three `grid_search*` entry points (independent fan-out, warm-C
+//! columns, per-γ shared row stores). This module makes the structure
+//! first-class:
+//!
+//! * [`ScheduleGraph`] — grid cells as nodes with the reuse edges drawn
+//!   explicitly: the fold chain lives *inside* each node (the resumable
+//!   [`KfoldChain`]/[`SvrKfoldChain`]), a [`warm_c`](GridNode::warm_c_parent)
+//!   edge couples ascending-C cells of one γ column (Chu et al.), and a
+//!   [`gamma`](GridNode::gamma_parent) edge couples adjacent-γ cells of
+//!   one C row (cross-γ alpha transfer through
+//!   [`seeding::gamma`](crate::seeding::gamma)). [`units`](ScheduleGraph::units)
+//!   partitions the nodes into dependency chains: every unit runs
+//!   sequentially (its edges demand it), units fan out concurrently.
+//! * [`BudgetPolicy`] — how rounds are allotted. [`Uniform`](BudgetPolicy::Uniform)
+//!   gives every cell all k folds and reproduces the historical grid
+//!   bit-for-bit. [`SuccessiveHalving`](BudgetPolicy::SuccessiveHalving)
+//!   runs every cell for `min_rounds` folds, keeps the best `1/eta`
+//!   fraction by partial CV metric, and re-promotes the survivors — with
+//!   their seeded chains resuming in place, not restarting — until the
+//!   winner has the full k folds.
+//!
+//! Both levers move *which rounds run*, never what a round computes: a
+//! cell's round h is bit-identical under every policy (the chains are
+//! pure resume), so the halving winner's full-k metric equals the full
+//! sweep's metric for that cell, and cross-γ seeding changes iteration
+//! counts only (`tests/budget_grid.rs` pins both).
+#![deny(missing_docs)]
+
+use super::grid::{GridOptions, GridPoint, SvrGridPoint};
+use crate::config::RunProfile;
+use crate::cv::{
+    run_kfold_warm_c, CvOptions, KfoldChain, RoundStat, SvrKfoldChain, WarmCOptions,
+};
+use crate::data::Dataset;
+use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
+use crate::multiclass::{
+    class_pairs, pair_chain, tally_votes, MultiDataset, OvoOptions, PairChainSpec, PairRun,
+};
+use crate::seeding::seeder_by_name;
+use crate::seeding::svr::{svr_seeder_by_name, SvrSeeder};
+use crate::seeding::Seeder;
+use crate::util::pool::{effective_threads, scoped_map};
+use std::sync::{Arc, Mutex};
+
+/// How the round budget is spread over the grid's cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BudgetPolicy {
+    /// Every cell receives all k folds — the historical behavior, cell
+    /// results bit-identical to the pre-scheduler grid.
+    #[default]
+    Uniform,
+    /// Successive halving on the *fold axis*: every cell runs
+    /// `min_rounds` folds, the best `1/eta` fraction (by partial CV
+    /// metric, never fewer than one cell) is promoted to `eta×` the
+    /// rounds, and the elimination repeats until the surviving cell has
+    /// all k folds. Promoted cells *resume* their seeded chains — round h
+    /// of a cell is bit-identical under halving and uniform — so the
+    /// winner's full-k metric equals what the full sweep reports for that
+    /// cell; eliminated cells report the rounds they ran
+    /// ([`GridPoint::rounds`]), and the winner selection prefers full-k
+    /// cells before comparing metrics.
+    SuccessiveHalving {
+        /// Elimination factor (≥ 2): keep `⌈alive/eta⌉ ≥ 1` cells per
+        /// level and multiply the round target by `eta`.
+        eta: usize,
+        /// Rounds every cell receives before the first elimination
+        /// (clamped into `1..=k`).
+        min_rounds: usize,
+    },
+}
+
+/// One grid cell as a node in the [`ScheduleGraph`], with its axis
+/// indices and incoming reuse edges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridNode {
+    /// Index into the caller's C list.
+    pub c_index: usize,
+    /// Index into the caller's ε list (ε-SVR grids only).
+    pub eps_index: Option<usize>,
+    /// Index into the caller's γ list.
+    pub gamma_index: usize,
+    /// Warm-C edge: the node whose solved per-fold α seeds every fold of
+    /// this cell via C-rescaling (the next-smaller C of the same γ
+    /// column). `None` without `warm_c` or at the column's smallest C.
+    pub warm_c_parent: Option<usize>,
+    /// Cross-γ edge: the node whose round-0 α seeds this cell's round 0
+    /// through the clip-and-rebalance projection (the previous γ of the
+    /// same C row). `None` without `seed_gamma` or at the row's first γ.
+    pub gamma_parent: Option<usize>,
+}
+
+/// The grid's cells and reuse edges, in C-major node order (C outer,
+/// then ε for SVR grids, γ innermost — the order results are reported
+/// in).
+#[derive(Debug, Clone)]
+pub struct ScheduleGraph {
+    /// All cells, index = C-major position.
+    pub nodes: Vec<GridNode>,
+}
+
+impl ScheduleGraph {
+    /// Build the (C, γ) classification graph. `warm_c` draws ascending-C
+    /// edges within each γ column (`c_values` need not be sorted — edges
+    /// follow ascending *value* order); `seed_gamma` draws adjacent-γ
+    /// edges within each C row. The two chain kinds would couple every
+    /// cell into one sequential blob, so composing them is rejected.
+    pub fn build_csvc(
+        c_values: &[f64],
+        gamma_values: &[f64],
+        warm_c: bool,
+        seed_gamma: bool,
+    ) -> ScheduleGraph {
+        assert!(
+            !(warm_c && seed_gamma),
+            "warm-C chains and cross-γ seeding cannot compose: together they serialize the \
+             whole grid into one chain; pick one reuse direction"
+        );
+        let n_gamma = gamma_values.len();
+        // ascending-C rank -> caller index, for warm-C edge direction
+        let mut by_c: Vec<usize> = (0..c_values.len()).collect();
+        by_c.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
+        let mut nodes = Vec::with_capacity(c_values.len() * n_gamma);
+        for ci in 0..c_values.len() {
+            for gi in 0..n_gamma {
+                let warm_c_parent = warm_c
+                    .then(|| {
+                        let rank = by_c.iter().position(|&i| i == ci).expect("permutation");
+                        (rank > 0).then(|| by_c[rank - 1] * n_gamma + gi)
+                    })
+                    .flatten();
+                let gamma_parent =
+                    (seed_gamma && gi > 0).then(|| ci * n_gamma + (gi - 1));
+                nodes.push(GridNode {
+                    c_index: ci,
+                    eps_index: None,
+                    gamma_index: gi,
+                    warm_c_parent,
+                    gamma_parent,
+                });
+            }
+        }
+        ScheduleGraph { nodes }
+    }
+
+    /// Build the (C, ε, γ) regression graph. ε changes the dual's linear
+    /// term, so there is no warm-ε edge; `seed_gamma` draws adjacent-γ
+    /// edges within each (C, ε) row.
+    pub fn build_svr(
+        c_values: &[f64],
+        eps_values: &[f64],
+        gamma_values: &[f64],
+        seed_gamma: bool,
+    ) -> ScheduleGraph {
+        let n_gamma = gamma_values.len();
+        let mut nodes = Vec::with_capacity(c_values.len() * eps_values.len() * n_gamma);
+        for ci in 0..c_values.len() {
+            for ei in 0..eps_values.len() {
+                for gi in 0..n_gamma {
+                    let row_base = (ci * eps_values.len() + ei) * n_gamma;
+                    nodes.push(GridNode {
+                        c_index: ci,
+                        eps_index: Some(ei),
+                        gamma_index: gi,
+                        warm_c_parent: None,
+                        gamma_parent: (seed_gamma && gi > 0).then(|| row_base + gi - 1),
+                    });
+                }
+            }
+        }
+        ScheduleGraph { nodes }
+    }
+
+    /// Partition the nodes into schedulable units: each unit is a maximal
+    /// dependency chain (parent before child) and runs sequentially;
+    /// different units share no edges and fan out concurrently. With no
+    /// edges every unit is a single cell, in C-major order.
+    pub fn units(&self) -> Vec<Vec<usize>> {
+        let has_parent: Vec<bool> = self
+            .nodes
+            .iter()
+            .map(|n| n.warm_c_parent.is_some() || n.gamma_parent.is_some())
+            .collect();
+        // child lookup: edges are in-edges, invert once
+        let mut child: Vec<Option<usize>> = vec![None; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Some(p) = n.warm_c_parent.or(n.gamma_parent) {
+                child[p] = Some(i);
+            }
+        }
+        let mut units = Vec::new();
+        for root in 0..self.nodes.len() {
+            if has_parent[root] {
+                continue;
+            }
+            let mut chain = vec![root];
+            let mut cur = root;
+            while let Some(next) = child[cur] {
+                chain.push(next);
+                cur = next;
+            }
+            units.push(chain);
+        }
+        units
+    }
+}
+
+/// Build the per-γ shared kernel-row stores every grid flavor shares:
+/// RBF rows depend on the data and γ, never on C (or ε), so all cells of
+/// one γ column read through one store and each seeding row is computed
+/// once per γ for the whole grid. `None` entries (profile.share_rows
+/// off) give every cell a private cache — same results, more row fills.
+pub(crate) fn build_gamma_shares(
+    ds: &Dataset,
+    gamma_values: &[f64],
+    profile: &RunProfile,
+) -> Vec<Option<Arc<SharedKernelCache>>> {
+    gamma_values
+        .iter()
+        .map(|&gamma| {
+            profile.share_rows.then(|| {
+                SharedKernelCache::with_byte_budget_dtype(
+                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
+                    profile.seed_cache_bytes,
+                    profile.cache_dtype,
+                )
+            })
+        })
+        .collect()
+}
+
+/// Pooled partial accuracy over the rounds a chain has run so far.
+fn partial_accuracy(rounds: &[RoundStat]) -> f64 {
+    let correct: usize = rounds.iter().map(|r| r.test_correct).sum();
+    let total: usize = rounds.iter().map(|r| r.test_total).sum();
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Pooled partial MSE over the rounds a chain has run so far.
+fn partial_mse(rounds: &[RoundStat]) -> f64 {
+    let sq: f64 = rounds.iter().map(|r| r.sq_err).sum();
+    let total: usize = rounds.iter().map(|r| r.test_total).sum();
+    if total == 0 {
+        f64::INFINITY
+    } else {
+        sq / total as f64
+    }
+}
+
+/// The successive-halving round targets: start at `min_rounds`, multiply
+/// by `eta` per level, cap at `k`. Shared by both task executors so the
+/// elimination schedule cannot drift between them.
+fn halving_params(policy: &BudgetPolicy, k: usize) -> (usize, usize) {
+    match *policy {
+        BudgetPolicy::SuccessiveHalving { eta, min_rounds } => {
+            assert!(eta >= 2, "successive halving needs eta >= 2, got {eta}");
+            (eta, min_rounds.clamp(1, k))
+        }
+        BudgetPolicy::Uniform => unreachable!("halving_params on Uniform policy"),
+    }
+}
+
+// ---- C-SVC executor -------------------------------------------------------
+
+/// Run the classification grid under `opts`' policy and edges. Returns
+/// points in C-major order.
+pub(crate) fn run_csvc_grid(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    if opts.policy != BudgetPolicy::Uniform {
+        assert!(
+            !opts.warm_c,
+            "--budget-policy halving cannot compose with --warm-c: the C-chain couples cells \
+             that halving must keep or drop independently"
+        );
+    }
+    let graph = ScheduleGraph::build_csvc(c_values, gamma_values, opts.warm_c, opts.seed_gamma);
+    let shares = build_gamma_shares(ds, gamma_values, &opts.profile);
+    match opts.policy {
+        BudgetPolicy::Uniform if opts.warm_c => {
+            warm_c_sweep(ds, c_values, gamma_values, &graph, &shares, opts)
+        }
+        BudgetPolicy::Uniform if opts.seed_gamma => {
+            gamma_rows_csvc(ds, c_values, gamma_values, &graph, &shares, opts)
+        }
+        BudgetPolicy::Uniform => {
+            independent_cells(ds, c_values, gamma_values, &graph, &shares, opts)
+        }
+        BudgetPolicy::SuccessiveHalving { .. } => {
+            halving_csvc(ds, c_values, gamma_values, &graph, &shares, opts)
+        }
+    }
+}
+
+/// Every cell is its own unit; fan all of them out. This is the
+/// historical grid path moved behind the graph — cell results are
+/// bit-identical to the pre-scheduler code.
+fn independent_cells(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    let units = graph.units();
+    // Split the scheduling width between fan-out and intra-cell
+    // parallelism: units.len() × intra ≈ width, never oversubscribing.
+    let width = effective_threads(opts.profile.threads);
+    let intra = (width / units.len().max(1)).max(1);
+    scoped_map(opts.profile.threads, units.len(), |i| {
+        let node = &graph.nodes[units[i][0]];
+        let (c, gamma) = (c_values[node.c_index], gamma_values[node.gamma_index]);
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        let started = std::time::Instant::now();
+        let report = crate::cv::run_kfold(
+            ds,
+            Kernel::rbf(gamma),
+            c,
+            opts.k,
+            seeder.as_ref(),
+            CvOptions {
+                profile: opts.profile.with_threads(intra),
+                shared_seed_cache: shares[node.gamma_index].clone(),
+                ..Default::default()
+            },
+        );
+        GridPoint {
+            c,
+            gamma,
+            accuracy: report.accuracy(),
+            iterations: report.total_iterations(),
+            rounds: report.rounds.len(),
+            elapsed: started.elapsed(),
+        }
+    })
+}
+
+/// One unit per γ column: the ascending-C chain (each C seeds the next
+/// via `rescale_alpha`) runs sequentially inside the unit; units run
+/// concurrently.
+fn warm_c_sweep(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    // Each unit is one γ column in ascending-C order (the graph's warm-C
+    // edges); the C list the chain visits is the same for every column.
+    let units = graph.units();
+    let first = &units[0];
+    let sorted_cs: Vec<f64> = first
+        .iter()
+        .map(|&n| c_values[graph.nodes[n].c_index])
+        .collect();
+    // caller C index -> position in the ascending chain
+    let chain_rank: Vec<usize> = {
+        let mut rank = vec![0usize; c_values.len()];
+        for (pos, &n) in first.iter().enumerate() {
+            rank[graph.nodes[n].c_index] = pos;
+        }
+        rank
+    };
+
+    let width = effective_threads(opts.profile.threads);
+    let intra = (width / units.len().max(1)).max(1);
+    let per_unit = scoped_map(opts.profile.threads, units.len(), |u| {
+        let gi = graph.nodes[units[u][0]].gamma_index;
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        (
+            gi,
+            run_kfold_warm_c(
+                ds,
+                Kernel::rbf(gamma_values[gi]),
+                &sorted_cs,
+                opts.k,
+                seeder.as_ref(),
+                WarmCOptions {
+                    profile: opts.profile.with_threads(intra),
+                    shared_seed_cache: shares[gi].clone(),
+                    ..Default::default()
+                },
+            ),
+        )
+    });
+    // gi -> reports in ascending-C order
+    let mut per_gamma: Vec<Option<Vec<crate::cv::CvReport>>> =
+        (0..gamma_values.len()).map(|_| None).collect();
+    for (gi, reports) in per_unit {
+        per_gamma[gi] = Some(reports);
+    }
+
+    // Assemble in C-major caller order.
+    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
+    for (ci, &c) in c_values.iter().enumerate() {
+        let sorted_pos = chain_rank[ci];
+        for (gi, &gamma) in gamma_values.iter().enumerate() {
+            let report = &per_gamma[gi].as_ref().expect("one chain per γ")[sorted_pos];
+            points.push(GridPoint {
+                c,
+                gamma,
+                accuracy: report.accuracy(),
+                iterations: report.total_iterations(),
+                rounds: report.rounds.len(),
+                elapsed: report.total_elapsed(),
+            });
+        }
+    }
+    points
+}
+
+/// One unit per C row: cells run along ascending γ index, each seeding
+/// the next cell's round 0 from its own round-0 α (the graph's cross-γ
+/// edges). Rows fan out concurrently.
+fn gamma_rows_csvc(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    let units = graph.units();
+    let width = effective_threads(opts.profile.threads);
+    let intra = (width / units.len().max(1)).max(1);
+    let rows = scoped_map(opts.profile.threads, units.len(), |u| {
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        let mut donor: Option<Vec<f64>> = None;
+        let mut row = Vec::with_capacity(units[u].len());
+        for &n in &units[u] {
+            let node = &graph.nodes[n];
+            let (c, gamma) = (c_values[node.c_index], gamma_values[node.gamma_index]);
+            let mut chain = KfoldChain::new(
+                ds,
+                Kernel::rbf(gamma),
+                c,
+                opts.k,
+                seeder.as_ref(),
+                CvOptions {
+                    profile: opts.profile.with_threads(intra),
+                    shared_seed_cache: shares[node.gamma_index].clone(),
+                    round0_seed: donor.take(),
+                    ..Default::default()
+                },
+            );
+            while chain.step(None) {}
+            donor = chain.first_round_alpha().map(<[f64]>::to_vec);
+            let report = chain.into_report();
+            row.push((
+                n,
+                GridPoint {
+                    c,
+                    gamma,
+                    accuracy: report.accuracy(),
+                    iterations: report.total_iterations(),
+                    rounds: report.rounds.len(),
+                    elapsed: report.total_elapsed(),
+                },
+            ));
+        }
+        row
+    });
+    // node index == C-major position, so placing by node restores order
+    let mut points: Vec<Option<GridPoint>> = vec![None; graph.nodes.len()];
+    for row in rows {
+        for (n, p) in row {
+            points[n] = Some(p);
+        }
+    }
+    points.into_iter().map(|p| p.expect("every node ran")).collect()
+}
+
+/// Successive halving over the classification cells (optionally with
+/// cross-γ seeded level-0 rows). Chains park in mutex slots between
+/// levels so survivors resume — never restart — when promoted.
+fn halving_csvc(
+    ds: &Dataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    let (eta, min_rounds) = halving_params(&opts.policy, opts.k);
+    let n_cells = graph.nodes.len();
+    let seeders: Vec<Box<dyn Seeder>> = (0..n_cells)
+        .map(|_| {
+            seeder_by_name(&opts.seeder)
+                .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder))
+        })
+        .collect();
+    let width = effective_threads(opts.profile.threads);
+    let intra = (width / n_cells.max(1)).max(1);
+    let cell_opts = |gi: usize, donor: Option<Vec<f64>>| CvOptions {
+        profile: opts.profile.with_threads(intra),
+        shared_seed_cache: shares[gi].clone(),
+        round0_seed: donor,
+        ..Default::default()
+    };
+
+    // Level 0: every cell runs min_rounds folds. With seed_gamma the
+    // level runs as sequential C rows so the cross-γ donors flow; without
+    // it every cell is independent.
+    let units = graph.units();
+    let slots: Vec<Mutex<KfoldChain>> = {
+        let rows = scoped_map(opts.profile.threads, units.len(), |u| {
+            let mut donor: Option<Vec<f64>> = None;
+            let mut row = Vec::with_capacity(units[u].len());
+            for &n in &units[u] {
+                let node = &graph.nodes[n];
+                let mut chain = KfoldChain::new(
+                    ds,
+                    Kernel::rbf(gamma_values[node.gamma_index]),
+                    c_values[node.c_index],
+                    opts.k,
+                    seeders[n].as_ref(),
+                    cell_opts(node.gamma_index, donor.take()),
+                );
+                while chain.rounds_run() < min_rounds && chain.step(None) {}
+                if opts.seed_gamma {
+                    donor = chain.first_round_alpha().map(<[f64]>::to_vec);
+                }
+                row.push((n, chain));
+            }
+            row
+        });
+        let mut slots: Vec<Option<Mutex<KfoldChain>>> = (0..n_cells).map(|_| None).collect();
+        for row in rows {
+            for (n, chain) in row {
+                slots[n] = Some(Mutex::new(chain));
+            }
+        }
+        slots.into_iter().map(|s| s.expect("every cell ran level 0")).collect()
+    };
+
+    // Elimination levels: keep the best 1/eta by partial accuracy (ties
+    // broken like GridResult::best — smaller C, then smaller γ), promote
+    // the survivors' round target by eta, and resume their chains.
+    let mut alive: Vec<usize> = (0..n_cells).collect();
+    let mut rounds_target = min_rounds;
+    while rounds_target < opts.k && !alive.is_empty() {
+        let mut scored: Vec<(usize, f64)> = alive
+            .iter()
+            .map(|&n| {
+                let chain = slots[n].lock().expect("poisoned slot");
+                (n, partial_accuracy(chain.rounds()))
+            })
+            .collect();
+        scored.sort_by(|&(a, acc_a), &(b, acc_b)| {
+            let (na, nb) = (&graph.nodes[a], &graph.nodes[b]);
+            acc_b
+                .total_cmp(&acc_a)
+                .then(c_values[na.c_index].total_cmp(&c_values[nb.c_index]))
+                .then(
+                    gamma_values[na.gamma_index].total_cmp(&gamma_values[nb.gamma_index]),
+                )
+        });
+        alive = scored
+            .into_iter()
+            .take((alive.len() / eta).max(1))
+            .map(|(n, _)| n)
+            .collect();
+        rounds_target = if alive.len() == 1 {
+            opts.k
+        } else {
+            (rounds_target * eta).min(opts.k)
+        };
+        let target = rounds_target;
+        scoped_map(opts.profile.threads, alive.len(), |i| {
+            let mut chain = slots[alive[i]].lock().expect("poisoned slot");
+            while chain.rounds_run() < target && chain.step(None) {}
+        });
+    }
+
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(n, slot)| {
+            let node = &graph.nodes[n];
+            let report = slot.into_inner().expect("poisoned slot").into_report();
+            GridPoint {
+                c: c_values[node.c_index],
+                gamma: gamma_values[node.gamma_index],
+                accuracy: report.accuracy(),
+                iterations: report.total_iterations(),
+                rounds: report.rounds.len(),
+                elapsed: report.total_elapsed(),
+            }
+        })
+        .collect()
+}
+
+// ---- ε-SVR executor -------------------------------------------------------
+
+/// Run the regression grid under `opts`' policy and edges. Returns points
+/// in C-major, then ε, then γ order.
+pub(crate) fn run_svr_grid(
+    ds: &Dataset,
+    c_values: &[f64],
+    eps_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> Vec<SvrGridPoint> {
+    let graph = ScheduleGraph::build_svr(c_values, eps_values, gamma_values, opts.seed_gamma);
+    let shares = build_gamma_shares(ds, gamma_values, &opts.profile);
+    match opts.policy {
+        BudgetPolicy::Uniform => {
+            svr_units(ds, c_values, eps_values, gamma_values, &graph, &shares, opts)
+        }
+        BudgetPolicy::SuccessiveHalving { .. } => {
+            halving_svr(ds, c_values, eps_values, gamma_values, &graph, &shares, opts)
+        }
+    }
+}
+
+/// Uniform SVR execution over the graph's units: singleton cells without
+/// edges (the historical independent fan-out, bit-identical), (C, ε)
+/// rows along γ with `seed_gamma`.
+fn svr_units(
+    ds: &Dataset,
+    c_values: &[f64],
+    eps_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<SvrGridPoint> {
+    let units = graph.units();
+    let rows = scoped_map(opts.profile.threads, units.len(), |u| {
+        let seeder = svr_seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown SVR seeder '{}'", opts.seeder));
+        let mut donor: Option<Vec<f64>> = None;
+        let mut row = Vec::with_capacity(units[u].len());
+        for &n in &units[u] {
+            let node = &graph.nodes[n];
+            let (c, epsilon, gamma) = (
+                c_values[node.c_index],
+                eps_values[node.eps_index.expect("SVR node")],
+                gamma_values[node.gamma_index],
+            );
+            let started = std::time::Instant::now();
+            let mut chain = SvrKfoldChain::new(
+                ds,
+                Kernel::rbf(gamma),
+                c,
+                epsilon,
+                opts.k,
+                seeder.as_ref(),
+                CvOptions {
+                    profile: opts.profile,
+                    shared_seed_cache: shares[node.gamma_index].clone(),
+                    round0_seed: donor.take(),
+                    ..Default::default()
+                },
+            );
+            while chain.step() {}
+            if opts.seed_gamma {
+                donor = chain.first_round_delta().map(<[f64]>::to_vec);
+            }
+            let report = chain.into_report();
+            row.push((
+                n,
+                SvrGridPoint {
+                    c,
+                    epsilon,
+                    gamma,
+                    mse: report.mse(),
+                    iterations: report.total_iterations(),
+                    rounds: report.rounds.len(),
+                    elapsed: started.elapsed(),
+                },
+            ));
+        }
+        row
+    });
+    let mut points: Vec<Option<SvrGridPoint>> = vec![None; graph.nodes.len()];
+    for row in rows {
+        for (n, p) in row {
+            points[n] = Some(p);
+        }
+    }
+    points.into_iter().map(|p| p.expect("every node ran")).collect()
+}
+
+/// Successive halving over the regression cells (lowest partial MSE
+/// survives), with the same resume-in-place chain slots as the
+/// classification executor.
+fn halving_svr(
+    ds: &Dataset,
+    c_values: &[f64],
+    eps_values: &[f64],
+    gamma_values: &[f64],
+    graph: &ScheduleGraph,
+    shares: &[Option<Arc<SharedKernelCache>>],
+    opts: &GridOptions,
+) -> Vec<SvrGridPoint> {
+    let (eta, min_rounds) = halving_params(&opts.policy, opts.k);
+    let n_cells = graph.nodes.len();
+    let seeders: Vec<Box<dyn SvrSeeder>> = (0..n_cells)
+        .map(|_| {
+            svr_seeder_by_name(&opts.seeder)
+                .unwrap_or_else(|| panic!("unknown SVR seeder '{}'", opts.seeder))
+        })
+        .collect();
+
+    let units = graph.units();
+    let slots: Vec<Mutex<SvrKfoldChain>> = {
+        let rows = scoped_map(opts.profile.threads, units.len(), |u| {
+            let mut donor: Option<Vec<f64>> = None;
+            let mut row = Vec::with_capacity(units[u].len());
+            for &n in &units[u] {
+                let node = &graph.nodes[n];
+                let mut chain = SvrKfoldChain::new(
+                    ds,
+                    Kernel::rbf(gamma_values[node.gamma_index]),
+                    c_values[node.c_index],
+                    eps_values[node.eps_index.expect("SVR node")],
+                    opts.k,
+                    seeders[n].as_ref(),
+                    CvOptions {
+                        profile: opts.profile,
+                        shared_seed_cache: shares[node.gamma_index].clone(),
+                        round0_seed: donor.take(),
+                        ..Default::default()
+                    },
+                );
+                while chain.rounds_run() < min_rounds && chain.step() {}
+                if opts.seed_gamma {
+                    donor = chain.first_round_delta().map(<[f64]>::to_vec);
+                }
+                row.push((n, chain));
+            }
+            row
+        });
+        let mut slots: Vec<Option<Mutex<SvrKfoldChain>>> =
+            (0..n_cells).map(|_| None).collect();
+        for row in rows {
+            for (n, chain) in row {
+                slots[n] = Some(Mutex::new(chain));
+            }
+        }
+        slots.into_iter().map(|s| s.expect("every cell ran level 0")).collect()
+    };
+
+    let mut alive: Vec<usize> = (0..n_cells).collect();
+    let mut rounds_target = min_rounds;
+    while rounds_target < opts.k && !alive.is_empty() {
+        let mut scored: Vec<(usize, f64)> = alive
+            .iter()
+            .map(|&n| {
+                let chain = slots[n].lock().expect("poisoned slot");
+                (n, partial_mse(chain.rounds()))
+            })
+            .collect();
+        scored.sort_by(|&(a, mse_a), &(b, mse_b)| {
+            let (na, nb) = (&graph.nodes[a], &graph.nodes[b]);
+            mse_a
+                .total_cmp(&mse_b)
+                .then(c_values[na.c_index].total_cmp(&c_values[nb.c_index]))
+                .then(
+                    eps_values[nb.eps_index.expect("SVR node")]
+                        .total_cmp(&eps_values[na.eps_index.expect("SVR node")]),
+                )
+                .then(
+                    gamma_values[na.gamma_index].total_cmp(&gamma_values[nb.gamma_index]),
+                )
+        });
+        alive = scored
+            .into_iter()
+            .take((alive.len() / eta).max(1))
+            .map(|(n, _)| n)
+            .collect();
+        rounds_target = if alive.len() == 1 {
+            opts.k
+        } else {
+            (rounds_target * eta).min(opts.k)
+        };
+        let target = rounds_target;
+        scoped_map(opts.profile.threads, alive.len(), |i| {
+            let mut chain = slots[alive[i]].lock().expect("poisoned slot");
+            while chain.rounds_run() < target && chain.step() {}
+        });
+    }
+
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(n, slot)| {
+            let node = &graph.nodes[n];
+            let report = slot.into_inner().expect("poisoned slot").into_report();
+            SvrGridPoint {
+                c: c_values[node.c_index],
+                epsilon: eps_values[node.eps_index.expect("SVR node")],
+                gamma: gamma_values[node.gamma_index],
+                mse: report.mse(),
+                iterations: report.total_iterations(),
+                rounds: report.rounds.len(),
+                elapsed: report.total_elapsed(),
+            }
+        })
+        .collect()
+}
+
+// ---- one-vs-one executor --------------------------------------------------
+
+/// Run the one-vs-one multiclass grid. The per-pair chains are not
+/// resumable cells (a cell's metric pools m(m−1)/2 pair chains), so the
+/// budget policy must be [`BudgetPolicy::Uniform`] and cross-γ seeding is
+/// not drawn — the CLI rejects both combinations up front, and this
+/// executor asserts them for library callers.
+pub(crate) fn run_ovo_grid(
+    mds: &MultiDataset,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+) -> Vec<GridPoint> {
+    assert!(
+        opts.policy == BudgetPolicy::Uniform,
+        "--budget-policy halving is not supported for multiclass grids: a cell's metric \
+         pools all pair chains, which cannot pause at a fold boundary"
+    );
+    assert!(
+        !opts.seed_gamma,
+        "--seed-gamma is not supported for multiclass grids: pair chains restart cold on \
+         degenerate folds, so a cross-γ donor is not always defined"
+    );
+    let classes = mds.classes();
+    assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
+    let pairs = class_pairs(&classes);
+    let folds = mds.stratified_folds(opts.k, opts.profile.rng_seed);
+    let shares = build_gamma_shares(&mds.kernel_dataset(), gamma_values, &opts.profile);
+
+    // The C-chain must visit C ascending; remember how to map back.
+    let mut order: Vec<usize> = (0..c_values.len()).collect();
+    order.sort_by(|&a, &b| c_values[a].total_cmp(&c_values[b]));
+    let sorted_cs: Vec<f64> = order.iter().map(|&i| c_values[i]).collect();
+
+    let ovo_opts = OvoOptions {
+        profile: OvoOptions::default()
+            .profile
+            .with_rng_seed(opts.profile.rng_seed)
+            .with_carry_active_set(opts.profile.carry_active_set)
+            .with_cache_dtype(opts.profile.cache_dtype),
+        ..Default::default()
+    };
+    // One unit per (γ, pair): the pair's C chain runs sequentially inside
+    // the unit while units fan out.
+    let units: Vec<(usize, usize)> = (0..gamma_values.len())
+        .flat_map(|gi| (0..pairs.len()).map(move |pi| (gi, pi)))
+        .collect();
+    let width = effective_threads(opts.profile.threads);
+    let solver_threads = (width / units.len().max(1)).max(1);
+    // per unit: one PairRun per C value, in *caller* c_values order
+    let unit_runs: Vec<Vec<PairRun>> = scoped_map(opts.profile.threads, units.len(), |u| {
+        let (gi, pi) = units[u];
+        let (class_a, class_b) = pairs[pi];
+        let seeder = seeder_by_name(&opts.seeder)
+            .unwrap_or_else(|| panic!("unknown seeder '{}'", opts.seeder));
+        let run = |cs: &[f64], chain_c: bool| {
+            pair_chain(
+                &PairChainSpec {
+                    mds,
+                    folds: &folds,
+                    kernel: Kernel::rbf(gamma_values[gi]),
+                    cs,
+                    chain_c,
+                    seeder: seeder.as_ref(),
+                    shared: shares[gi].as_ref(),
+                    opts: &ovo_opts,
+                    solver_threads,
+                    pair_index: pi + gi * pairs.len(),
+                },
+                class_a,
+                class_b,
+            )
+        };
+        if opts.warm_c {
+            let sorted_runs = run(&sorted_cs, true);
+            // reorder from ascending-C back to caller order
+            (0..c_values.len())
+                .map(|ci| {
+                    let pos = order.iter().position(|&o| o == ci).expect("permutation");
+                    sorted_runs[pos].clone()
+                })
+                .collect()
+        } else {
+            // one call over the whole C list: the pair view and its seed
+            // cache are built once and reused across every C
+            run(c_values, false)
+        }
+    });
+
+    // Assemble cells in C-major caller order, merging votes across pairs
+    // in pair order (deterministic tally).
+    let mut points = Vec::with_capacity(c_values.len() * gamma_values.len());
+    for (ci, &c) in c_values.iter().enumerate() {
+        for (gi, &gamma) in gamma_values.iter().enumerate() {
+            let cell_runs: Vec<&PairRun> = (0..pairs.len())
+                .map(|pi| &unit_runs[gi * pairs.len() + pi][ci])
+                .collect();
+            let votes: Vec<Vec<(usize, u32)>> =
+                cell_runs.iter().map(|r| r.votes.clone()).collect();
+            let confusion = tally_votes(&classes, &mds.labels, &votes);
+            let correct: usize = (0..classes.len()).map(|i| confusion[i][i]).sum();
+            let total: usize = confusion.iter().flatten().sum();
+            points.push(GridPoint {
+                c,
+                gamma,
+                accuracy: if total == 0 {
+                    0.0
+                } else {
+                    correct as f64 / total as f64
+                },
+                iterations: cell_runs.iter().map(|r| r.stat.iterations).sum(),
+                rounds: opts.k,
+                elapsed: cell_runs.iter().map(|r| r.stat.init + r.stat.rest).sum(),
+            });
+        }
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csvc_graph_units_are_singletons_without_edges() {
+        let g = ScheduleGraph::build_csvc(&[1.0, 10.0], &[0.1, 0.2, 0.4], false, false);
+        assert_eq!(g.nodes.len(), 6);
+        let units = g.units();
+        assert_eq!(units.len(), 6);
+        // C-major order preserved
+        assert_eq!(units[0], vec![0]);
+        assert_eq!(g.nodes[1].gamma_index, 1);
+        assert_eq!(g.nodes[3].c_index, 1);
+        assert!(g.nodes.iter().all(|n| n.warm_c_parent.is_none()));
+        assert!(g.nodes.iter().all(|n| n.gamma_parent.is_none()));
+    }
+
+    #[test]
+    fn warm_c_edges_follow_ascending_value_order() {
+        // caller order deliberately descending: edges must still point
+        // from the smaller C to the larger
+        let g = ScheduleGraph::build_csvc(&[8.0, 1.0], &[0.2], true, false);
+        // node 0 = C=8 (child), node 1 = C=1 (root)
+        assert_eq!(g.nodes[0].warm_c_parent, Some(1));
+        assert_eq!(g.nodes[1].warm_c_parent, None);
+        let units = g.units();
+        assert_eq!(units, vec![vec![1, 0]]);
+    }
+
+    #[test]
+    fn gamma_edges_chain_rows() {
+        let g = ScheduleGraph::build_csvc(&[1.0, 10.0], &[0.1, 0.2, 0.4], false, true);
+        assert_eq!(g.nodes[0].gamma_parent, None);
+        assert_eq!(g.nodes[1].gamma_parent, Some(0));
+        assert_eq!(g.nodes[2].gamma_parent, Some(1));
+        assert_eq!(g.nodes[3].gamma_parent, None); // next C row restarts
+        let units = g.units();
+        assert_eq!(units, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn svr_graph_rows_span_c_eps_pairs() {
+        let g = ScheduleGraph::build_svr(&[1.0, 10.0], &[0.05, 0.2], &[0.1, 0.5], true);
+        assert_eq!(g.nodes.len(), 8);
+        // each (C, ε) row is its own chain along γ
+        assert_eq!(g.units().len(), 4);
+        assert_eq!(g.nodes[1].gamma_parent, Some(0));
+        assert_eq!(g.nodes[2].gamma_parent, None);
+        assert_eq!(g.nodes[2].eps_index, Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot compose")]
+    fn warm_c_and_seed_gamma_reject() {
+        ScheduleGraph::build_csvc(&[1.0], &[0.1], true, true);
+    }
+
+    #[test]
+    fn halving_params_clamp() {
+        let (eta, min_rounds) =
+            halving_params(&BudgetPolicy::SuccessiveHalving { eta: 3, min_rounds: 0 }, 5);
+        assert_eq!((eta, min_rounds), (3, 1));
+        let (_, clamped) =
+            halving_params(&BudgetPolicy::SuccessiveHalving { eta: 2, min_rounds: 9 }, 5);
+        assert_eq!(clamped, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "eta >= 2")]
+    fn halving_params_reject_eta_one() {
+        halving_params(&BudgetPolicy::SuccessiveHalving { eta: 1, min_rounds: 1 }, 5);
+    }
+}

@@ -3,16 +3,29 @@
 //! ([`run_kfold_svr`]) and one-class ([`run_kfold_oneclass`]) chains over
 //! the same 𝓡/𝒯 fold transitions.
 //!
-//! Round 0 always trains cold (there is no previous SVM); rounds 1..k seed
-//! from round h−1's solution through the configured [`Seeder`] (or its
-//! SVR/one-class counterpart). The paper's time accounting is kept
-//! exactly: *init* = seeding computation + warm-start gradient setup;
-//! *the rest* = partitioning + SMO + test-fold evaluation.
+//! Round 0 always trains cold (there is no previous SVM) unless the
+//! caller provides a cross-γ donor ([`CvOptions::round0_seed`]); rounds
+//! 1..k seed from round h−1's solution through the configured [`Seeder`]
+//! (or its SVR/one-class counterpart). The paper's time accounting is
+//! kept exactly: *init* = seeding computation + warm-start gradient
+//! setup; *the rest* = partitioning + SMO + test-fold evaluation.
+//!
+//! The C-SVC and SVR chains are materialised as resumable state machines
+//! ([`KfoldChain`], [`SvrKfoldChain`]): one [`step`](KfoldChain::step)
+//! call runs exactly one round, so a scheduler can pause a cell after a
+//! few folds, compare partial metrics across cells, and later resume the
+//! survivors with all seeded state intact (the budget scheduler in
+//! `coordinator/schedule.rs` does exactly this). [`run_kfold`] /
+//! [`run_kfold_svr`] are thin drive-to-completion loops over the chains,
+//! so a paused-and-resumed cell computes bit-for-bit the same rounds as
+//! an uninterrupted run.
 
 use super::report::{CvReport, RoundStat};
+use crate::config::RunProfile;
 use crate::data::{Dataset, FoldPlan};
 use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::runtime::ComputeBackend;
+use crate::seeding::gamma::{project_alpha_csvc, project_delta_svr};
 use crate::seeding::oneclass::{check_feasible_oneclass, seed_oneclass, OneClassSeedContext};
 use crate::seeding::svr::{check_feasible_delta, SvrSeedContext, SvrSeeder};
 use crate::seeding::{check_feasible, SeedContext, Seeder};
@@ -23,7 +36,7 @@ use crate::smo::{
 };
 use crate::util::pool::{effective_threads, par_chunks_mut};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Kernel rows per parallel block in the warm-gradient sweeps (bounds
 /// pinned-row memory at `ROW_BLOCK·n·8` bytes).
@@ -33,69 +46,47 @@ const ROW_BLOCK: usize = 64;
 /// identical arithmetic, so the cutoff never changes results.
 const PAR_MIN_N: usize = 256;
 
-/// Options for a CV run.
+/// Options for a CV run. The solver/runtime knobs every driver shares
+/// live in [`profile`](CvOptions::profile); the fields here are specific
+/// to a single k-fold chain.
 pub struct CvOptions<'a> {
-    /// SMO tolerance (LibSVM default 1e-3).
-    pub eps: f64,
-    /// LibSVM-style shrinking in the solver.
-    pub shrinking: bool,
-    /// Solver kernel-cache budget per round.
-    pub cache_bytes: usize,
-    /// Shared seeding-cache budget (rows over the full dataset).
-    pub seed_cache_bytes: usize,
-    /// Fold-partition + seeding determinism.
-    pub rng_seed: u64,
+    /// Shared solver/runtime knobs (tolerance, caches, seed, threads, …).
+    /// `profile.share_rows` is ignored by the fold drivers — row sharing
+    /// is decided by whoever hands in
+    /// [`shared_seed_cache`](CvOptions::shared_seed_cache).
+    pub profile: RunProfile,
     /// Run only the first `max_rounds` rounds (paper's estimation protocol
     /// for the expensive configurations); `None` = all k.
     pub max_rounds: Option<usize>,
     /// Bulk backend for warm-start gradient init and test-fold decision
     /// values; `None` = native in-process math.
     pub backend: Option<&'a mut dyn ComputeBackend>,
-    /// Worker threads for the intra-run parallel paths (kernel-row blocks
-    /// and warm-start gradient sweeps): 0 = auto, 1 = sequential. The
-    /// fold-to-fold seeding chain itself stays sequential by design — its
-    /// order is the paper's contribution — and the thread count never
-    /// changes any result (the parallel sweeps are bit-identical).
-    pub threads: usize,
     /// Optional process-wide row store (same dataset + kernel) backing
     /// this run's seeding cache, so concurrent runs over the same data —
     /// e.g. grid cells sharing a γ — compute each kernel row once. Purely
     /// a compute-sharing device: the adopted rows are the exact bits the
     /// local cache would have produced.
     pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
-    /// Cross-fold **active-set carry-over**: besides the α seed, hand the
-    /// solver the previous round's bounded partition (mapped through the
-    /// seeder's [`seed_active_set`](crate::seeding::Seeder::seed_active_set)
-    /// transfer) as its initial shrink state. The solver validates every
-    /// proposed position against the fresh gradient before trusting it,
-    /// so this only moves wall time, never the converged model. Inert
-    /// when `shrinking` is off or the seeder declines the hook (cold).
-    pub carry_active_set: bool,
-    /// Storage precision of cached kernel rows (solver cache and the
-    /// full-dataset seeding cache). [`CacheDtype::F64`] (default) keeps
-    /// the historical bit-identical arithmetic; [`CacheDtype::F32`]
-    /// halves cache memory — rows are still *computed* in f64 and every
-    /// gradient accumulates in f64, so fold accuracy/MSE is unchanged and
-    /// decision values stay within the documented epsilon contract
-    /// (docs/ARCHITECTURE.md §3.7). Ignored by a shared-backed seeding
-    /// cache, which inherits the shared store's dtype.
-    pub cache_dtype: CacheDtype,
+    /// Cross-γ warm start for round 0 (the chain's only cold solve): the
+    /// *donor* vector from an adjacent-γ cell's round-0 solve over the
+    /// **same fold partition** — final α for C-SVC, final pair
+    /// differences δ for ε-SVR. The driver projects it onto this cell's
+    /// feasible set through [`seeding::gamma`](crate::seeding::gamma)
+    /// (clip + rebalance) before use; an infeasible projection falls back
+    /// to a cold start with `fell_back` recorded. Ignored by the
+    /// one-class driver. Like every seeding transfer this moves the
+    /// solver's starting point, never its fixed point.
+    pub round0_seed: Option<Vec<f64>>,
 }
 
 impl Default for CvOptions<'_> {
     fn default() -> Self {
         CvOptions {
-            eps: 1e-3,
-            shrinking: true,
-            cache_bytes: 256 << 20,
-            seed_cache_bytes: 128 << 20,
-            rng_seed: 42,
+            profile: RunProfile::default(),
             max_rounds: None,
             backend: None,
-            threads: 0,
             shared_seed_cache: None,
-            carry_active_set: true,
-            cache_dtype: CacheDtype::F64,
+            round0_seed: None,
         }
     }
 }
@@ -110,65 +101,179 @@ pub fn run_kfold(
     seeder: &dyn Seeder,
     mut opts: CvOptions,
 ) -> CvReport {
-    let t_part = Instant::now();
-    let plan = FoldPlan::stratified(full, k, opts.rng_seed);
-    let partition = t_part.elapsed();
+    let mut backend = opts.backend.take();
+    let mut chain = KfoldChain::new(full, kernel, c, k, seeder, opts);
+    while chain.step(backend.as_deref_mut()) {}
+    chain.into_report()
+}
 
-    // Kernel-row cache over the full dataset for the seeders — backed by
-    // the process-wide shared store when the caller provides one (grid
-    // cells with the same dataset + γ then compute each row only once).
-    let mut seed_cache = make_seed_cache(
-        full,
-        kernel,
-        &opts.shared_seed_cache,
-        opts.seed_cache_bytes,
-        opts.cache_dtype,
-    );
-
-    let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
-    let mut rounds = Vec::with_capacity(rounds_to_run);
-
+/// A resumable C-SVC k-fold chain: each [`step`](KfoldChain::step) runs
+/// one round (fold), carrying the previous round's α/gradient/partition
+/// exactly as the one-shot driver does. Pausing between steps and
+/// resuming later computes bit-for-bit the same rounds — the substrate
+/// for budget-scheduled grid search.
+pub struct KfoldChain<'a> {
+    full: &'a Dataset,
+    kernel: Kernel,
+    c: f64,
+    k: usize,
+    seeder: &'a dyn Seeder,
+    profile: RunProfile,
+    round0_seed: Option<Vec<f64>>,
+    plan: FoldPlan,
+    partition: Duration,
+    seed_cache: KernelCache,
+    rounds_to_run: usize,
+    rounds: Vec<RoundStat>,
     // Carried state from round h−1.
-    let mut prev_alpha: Vec<f64> = Vec::new();
-    let mut prev_f: Vec<f64> = Vec::new();
-    let mut prev_b = 0.0f64;
-    let mut prev_train: Vec<usize> = Vec::new();
-    let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
+    prev_alpha: Vec<f64>,
+    prev_f: Vec<f64>,
+    prev_b: f64,
+    prev_train: Vec<usize>,
+    prev_partition: Vec<crate::smo::VarBound>,
+    first_round_alpha: Option<Vec<f64>>,
+}
 
-    for h in 0..rounds_to_run {
-        let train_idx = plan.train_indices(h);
+impl<'a> KfoldChain<'a> {
+    /// Build the chain: fold partition + (possibly shared-backed) seeding
+    /// cache. No round runs yet. `opts.backend` is ignored here — the
+    /// backend is handed to each [`step`](KfoldChain::step) call instead,
+    /// so chains stay `Send` and can hop between scheduler workers.
+    pub fn new(
+        full: &'a Dataset,
+        kernel: Kernel,
+        c: f64,
+        k: usize,
+        seeder: &'a dyn Seeder,
+        opts: CvOptions,
+    ) -> KfoldChain<'a> {
+        let t_part = Instant::now();
+        let plan = FoldPlan::stratified(full, k, opts.profile.rng_seed);
+        let partition = t_part.elapsed();
+
+        // Kernel-row cache over the full dataset for the seeders — backed
+        // by the process-wide shared store when the caller provides one
+        // (grid cells with the same dataset + γ then compute each row
+        // only once).
+        let seed_cache = make_seed_cache(
+            full,
+            kernel,
+            &opts.shared_seed_cache,
+            opts.profile.seed_cache_bytes,
+            opts.profile.cache_dtype,
+        );
+
+        let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
+        KfoldChain {
+            full,
+            kernel,
+            c,
+            k,
+            seeder,
+            profile: opts.profile,
+            round0_seed: opts.round0_seed,
+            plan,
+            partition,
+            seed_cache,
+            rounds_to_run,
+            rounds: Vec::with_capacity(rounds_to_run),
+            prev_alpha: Vec::new(),
+            prev_f: Vec::new(),
+            prev_b: 0.0,
+            prev_train: Vec::new(),
+            prev_partition: Vec::new(),
+            first_round_alpha: None,
+        }
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_run(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Per-round statistics of the rounds completed so far.
+    pub fn rounds(&self) -> &[RoundStat] {
+        &self.rounds
+    }
+
+    /// True once every scheduled round has run.
+    pub fn is_done(&self) -> bool {
+        self.rounds.len() >= self.rounds_to_run
+    }
+
+    /// Round 0's converged α (aligned with round 0's training set) — the
+    /// donor a cross-γ neighbour projects from. `None` until round 0 has
+    /// run.
+    pub fn first_round_alpha(&self) -> Option<&[f64]> {
+        self.first_round_alpha.as_deref()
+    }
+
+    /// Run one round. Returns `false` (without running anything) once the
+    /// chain is complete. `backend` routes the warm-start gradient and
+    /// test-fold decision values through a bulk [`ComputeBackend`];
+    /// `None` = native in-process math.
+    pub fn step(&mut self, mut backend: Option<&mut dyn ComputeBackend>) -> bool {
+        if self.is_done() {
+            return false;
+        }
+        let h = self.rounds.len();
+        let (full, kernel, c) = (self.full, self.kernel, self.c);
+        let train_idx = self.plan.train_indices(h);
         let train = full.select(&train_idx);
-        let test = full.select(plan.test_indices(h));
+        let test = full.select(self.plan.test_indices(h));
 
         // ---- init phase: produce the seed α (and the carried set) --------
         let t_init = Instant::now();
+        let mut gamma_seeded = false;
         let (alpha0, fell_back, carried) = if h == 0 {
-            (vec![0.0; train_idx.len()], false, None)
+            match self.round0_seed.take() {
+                // Cross-γ transfer: project the adjacent cell's donor α
+                // onto this cell's feasible set (clip + rebalance); an
+                // unreachable projection is a recorded fallback to cold.
+                Some(donor) => {
+                    assert_eq!(
+                        donor.len(),
+                        train_idx.len(),
+                        "cross-γ round0_seed length {} does not match round 0's training set {} \
+                         (donor must come from the same fold partition)",
+                        donor.len(),
+                        train_idx.len()
+                    );
+                    match project_alpha_csvc(&donor, &train.y, c) {
+                        Some(alpha) => {
+                            gamma_seeded = true;
+                            (alpha, false, None)
+                        }
+                        None => (vec![0.0; train_idx.len()], true, None),
+                    }
+                }
+                None => (vec![0.0; train_idx.len()], false, None),
+            }
         } else {
-            let trans = plan.transition(h - 1);
+            let trans = self.plan.transition(h - 1);
             let ctx = SeedContext {
                 full,
                 kernel,
                 c,
-                prev_train: &prev_train,
-                prev_alpha: &prev_alpha,
-                prev_f: &prev_f,
-                prev_b,
+                prev_train: &self.prev_train,
+                prev_alpha: &self.prev_alpha,
+                prev_f: &self.prev_f,
+                prev_b: self.prev_b,
                 removed: &trans.removed,
                 added: &trans.added,
                 next_train: &train_idx,
-                rng_seed: opts.rng_seed ^ (h as u64),
+                rng_seed: self.profile.rng_seed ^ (h as u64),
             };
-            let seed = seeder.seed(&ctx, &mut seed_cache);
+            let seed = self.seeder.seed(&ctx, &mut self.seed_cache);
             debug_assert!(
                 check_feasible(&seed.alpha, &train.y, c).is_ok(),
                 "{} produced infeasible seed at round {h}: {:?}",
-                seeder.name(),
+                self.seeder.name(),
                 check_feasible(&seed.alpha, &train.y, c)
             );
             // Active-set carry-over rides the same transition (init cost).
-            let carried = if opts.carry_active_set && opts.shrinking {
-                seeder.seed_active_set(&ctx, &prev_partition)
+            let carried = if self.profile.carry_active_set && self.profile.shrinking {
+                self.seeder.seed_active_set(&ctx, &self.prev_partition)
             } else {
                 None
             };
@@ -179,8 +284,10 @@ pub fn run_kfold(
         // of seeding): through the bulk artifact backend when wired, else
         // through the shared seed cache, whose full-dataset rows are
         // already hot from the seeding computation and previous rounds.
+        // Cross-γ-seeded round 0 has no previous-round state to reuse, so
+        // its gradient is built inside the solver (charged to init below).
         let initial_g = if h > 0 && alpha0.iter().any(|&a| a > 0.0) {
-            match &mut opts.backend {
+            match backend.as_deref_mut() {
                 Some(backend) => {
                     let sv_idx: Vec<usize> =
                         (0..train.len()).filter(|&i| alpha0[i] > 0.0).collect();
@@ -199,15 +306,15 @@ pub fn run_kfold(
                     }
                 }
                 None => Some(warm_gradient(
-                    &mut seed_cache,
+                    &mut self.seed_cache,
                     full,
-                    &prev_train,
-                    &prev_alpha,
-                    &prev_f,
+                    &self.prev_train,
+                    &self.prev_alpha,
+                    &self.prev_f,
                     &train_idx,
                     &train.y,
                     &alpha0,
-                    opts.threads,
+                    self.profile.threads,
                 )),
             }
         } else {
@@ -219,21 +326,21 @@ pub fn run_kfold(
         let t_rest = Instant::now();
         let params = SmoParams {
             c,
-            eps: opts.eps,
-            shrinking: opts.shrinking,
-            cache_bytes: opts.cache_bytes,
-            threads: opts.threads,
-            cache_dtype: opts.cache_dtype,
+            eps: self.profile.eps,
+            shrinking: self.profile.shrinking,
+            cache_bytes: self.profile.cache_bytes,
+            threads: self.profile.threads,
+            cache_dtype: self.profile.cache_dtype,
             ..Default::default()
         };
         let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);
         let result = solver.solve_seeded(alpha0, initial_g, carried.as_deref());
 
         let model = Model::from_result(&train, kernel, &result);
-        let correct = match &mut opts.backend {
+        let correct = match backend.as_deref_mut() {
             Some(backend) => {
                 match crate::runtime::decision_values_via(
-                    *backend,
+                    backend,
                     &model.sv,
                     &model.coef,
                     model.b,
@@ -253,12 +360,18 @@ pub fn run_kfold(
         let mut rest = t_rest.elapsed();
 
         // Warm-start gradient setup that happened *inside* the solver is
-        // init cost, not training cost (paper accounting).
-        let grad_init = std::time::Duration::from_secs_f64(result.grad_init_secs);
-        let init = if h > 0 { init + grad_init } else { init };
-        rest = rest.saturating_sub(if h > 0 { grad_init } else { Default::default() });
+        // init cost, not training cost (paper accounting). A cross-γ
+        // seeded round 0 is a warm start too.
+        let seeded_round = h > 0 || gamma_seeded;
+        let grad_init = Duration::from_secs_f64(result.grad_init_secs);
+        let init = if seeded_round { init + grad_init } else { init };
+        rest = rest.saturating_sub(if seeded_round {
+            grad_init
+        } else {
+            Default::default()
+        });
 
-        rounds.push(RoundStat {
+        self.rounds.push(RoundStat {
             round: h,
             init,
             rest,
@@ -271,25 +384,32 @@ pub fn run_kfold(
         });
 
         // Carry state to round h+1.
-        prev_f = result.f_indicators(&train.y);
-        prev_partition = result.partition;
-        prev_alpha = result.alpha;
-        prev_b = result.b;
-        prev_train = train_idx;
+        self.prev_f = result.f_indicators(&train.y);
+        self.prev_partition = result.partition;
+        self.prev_alpha = result.alpha;
+        self.prev_b = result.b;
+        self.prev_train = train_idx;
+        if h == 0 {
+            self.first_round_alpha = Some(self.prev_alpha.clone());
+        }
+        true
     }
 
-    CvReport {
-        dataset: full.name.clone(),
-        seeder: seeder.name().to_string(),
-        k,
-        rounds,
-        partition,
+    /// Finish the chain into a [`CvReport`] over the rounds run so far.
+    pub fn into_report(self) -> CvReport {
+        CvReport {
+            dataset: self.full.name.clone(),
+            seeder: self.seeder.name().to_string(),
+            k: self.k,
+            rounds: self.rounds,
+            partition: self.partition,
+        }
     }
 }
 
 /// Build the (possibly shared-backed) full-dataset seeding cache — the
-/// common preamble of all three k-fold drivers.
-fn make_seed_cache(
+/// common preamble of all k-fold drivers (fold chains and warm-C sweeps).
+pub(crate) fn make_seed_cache(
     full: &Dataset,
     kernel: Kernel,
     shared: &Option<Arc<SharedKernelCache>>,
@@ -328,12 +448,12 @@ fn make_seed_cache(
 /// ([`CvReport::init_fraction`]); `test_correct` counts predictions
 /// inside the ε-tube.
 ///
-/// `opts.backend` and `opts.threads` are ignored (the general solver's
-/// gradient path is sequential); `opts.shrinking` and
-/// `opts.carry_active_set` are honored exactly as in the C-SVC chain —
-/// the general path shrinks through the same shared core, and seeded
-/// rounds carry the previous round's bounded (α, α*) pairs as the initial
-/// shrink state.
+/// `opts.backend` and `opts.profile.threads` are ignored (the general
+/// solver's gradient path is sequential); `opts.profile.shrinking` and
+/// `opts.profile.carry_active_set` are honored exactly as in the C-SVC
+/// chain — the general path shrinks through the same shared core, and
+/// seeded rounds carry the previous round's bounded (α, α*) pairs as the
+/// initial shrink state.
 pub fn run_kfold_svr(
     full: &Dataset,
     kernel: Kernel,
@@ -343,66 +463,171 @@ pub fn run_kfold_svr(
     seeder: &dyn SvrSeeder,
     opts: CvOptions,
 ) -> CvReport {
-    assert!(
-        full.is_regression(),
-        "run_kfold_svr needs a regression dataset (Dataset::regression)"
-    );
-    let t_part = Instant::now();
-    let plan = FoldPlan::random(full.len(), k, opts.rng_seed);
-    let partition = t_part.elapsed();
+    let mut chain = SvrKfoldChain::new(full, kernel, c, epsilon, k, seeder, opts);
+    while chain.step() {}
+    chain.into_report()
+}
 
-    let mut seed_cache = make_seed_cache(
-        full,
-        kernel,
-        &opts.shared_seed_cache,
-        opts.seed_cache_bytes,
-        opts.cache_dtype,
-    );
-
-    let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
-    let mut rounds = Vec::with_capacity(rounds_to_run);
-
+/// A resumable ε-SVR k-fold chain — [`KfoldChain`]'s counterpart over the
+/// pair differences δ = α − α*. Each [`step`](SvrKfoldChain::step) runs
+/// one round; pausing and resuming computes bit-for-bit the same rounds
+/// as a one-shot [`run_kfold_svr`] call.
+pub struct SvrKfoldChain<'a> {
+    full: &'a Dataset,
+    kernel: Kernel,
+    c: f64,
+    epsilon: f64,
+    k: usize,
+    seeder: &'a dyn SvrSeeder,
+    profile: RunProfile,
+    round0_seed: Option<Vec<f64>>,
+    plan: FoldPlan,
+    partition: Duration,
+    seed_cache: KernelCache,
+    rounds_to_run: usize,
+    rounds: Vec<RoundStat>,
     // Carried state from round h−1 (pair differences + tube residuals).
-    let mut prev_delta: Vec<f64> = Vec::new();
-    let mut prev_err: Vec<f64> = Vec::new();
-    let mut prev_b = 0.0f64;
-    let mut prev_train: Vec<usize> = Vec::new();
-    let mut prev_partition: Vec<crate::smo::VarBound> = Vec::new();
+    prev_delta: Vec<f64>,
+    prev_err: Vec<f64>,
+    prev_b: f64,
+    prev_train: Vec<usize>,
+    prev_partition: Vec<crate::smo::VarBound>,
+    first_round_delta: Option<Vec<f64>>,
+}
 
-    for h in 0..rounds_to_run {
-        let train_idx = plan.train_indices(h);
+impl<'a> SvrKfoldChain<'a> {
+    /// Build the chain (fold partition + seeding cache); no round runs
+    /// yet. Panics unless `full` is a regression dataset.
+    pub fn new(
+        full: &'a Dataset,
+        kernel: Kernel,
+        c: f64,
+        epsilon: f64,
+        k: usize,
+        seeder: &'a dyn SvrSeeder,
+        opts: CvOptions,
+    ) -> SvrKfoldChain<'a> {
+        assert!(
+            full.is_regression(),
+            "run_kfold_svr needs a regression dataset (Dataset::regression)"
+        );
+        let t_part = Instant::now();
+        let plan = FoldPlan::random(full.len(), k, opts.profile.rng_seed);
+        let partition = t_part.elapsed();
+
+        let seed_cache = make_seed_cache(
+            full,
+            kernel,
+            &opts.shared_seed_cache,
+            opts.profile.seed_cache_bytes,
+            opts.profile.cache_dtype,
+        );
+
+        let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
+        SvrKfoldChain {
+            full,
+            kernel,
+            c,
+            epsilon,
+            k,
+            seeder,
+            profile: opts.profile,
+            round0_seed: opts.round0_seed,
+            plan,
+            partition,
+            seed_cache,
+            rounds_to_run,
+            rounds: Vec::with_capacity(rounds_to_run),
+            prev_delta: Vec::new(),
+            prev_err: Vec::new(),
+            prev_b: 0.0,
+            prev_train: Vec::new(),
+            prev_partition: Vec::new(),
+            first_round_delta: None,
+        }
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_run(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Per-round statistics of the rounds completed so far.
+    pub fn rounds(&self) -> &[RoundStat] {
+        &self.rounds
+    }
+
+    /// True once every scheduled round has run.
+    pub fn is_done(&self) -> bool {
+        self.rounds.len() >= self.rounds_to_run
+    }
+
+    /// Round 0's converged pair differences δ — the donor a cross-γ
+    /// neighbour projects from. `None` until round 0 has run.
+    pub fn first_round_delta(&self) -> Option<&[f64]> {
+        self.first_round_delta.as_deref()
+    }
+
+    /// Run one round; `false` (and no work) once the chain is complete.
+    pub fn step(&mut self) -> bool {
+        if self.is_done() {
+            return false;
+        }
+        let h = self.rounds.len();
+        let (full, kernel, c, epsilon) = (self.full, self.kernel, self.c, self.epsilon);
+        let train_idx = self.plan.train_indices(h);
         let train = full.select(&train_idx);
-        let test = full.select(plan.test_indices(h));
+        let test = full.select(self.plan.test_indices(h));
 
         // ---- init phase: produce the seed δ and expand it ---------------
         let t_init = Instant::now();
+        let mut gamma_seeded = false;
         let (delta0, fell_back, carried) = if h == 0 {
-            (vec![0.0; train_idx.len()], false, None)
+            match self.round0_seed.take() {
+                Some(donor) => {
+                    assert_eq!(
+                        donor.len(),
+                        train_idx.len(),
+                        "cross-γ round0_seed length {} does not match round 0's training set {} \
+                         (donor must come from the same fold partition)",
+                        donor.len(),
+                        train_idx.len()
+                    );
+                    match project_delta_svr(&donor, c) {
+                        Some(delta) => {
+                            gamma_seeded = true;
+                            (delta, false, None)
+                        }
+                        None => (vec![0.0; train_idx.len()], true, None),
+                    }
+                }
+                None => (vec![0.0; train_idx.len()], false, None),
+            }
         } else {
-            let trans = plan.transition(h - 1);
+            let trans = self.plan.transition(h - 1);
             let ctx = SvrSeedContext {
                 full,
                 kernel,
                 c,
                 epsilon,
-                prev_train: &prev_train,
-                prev_delta: &prev_delta,
-                prev_err: &prev_err,
-                prev_b,
+                prev_train: &self.prev_train,
+                prev_delta: &self.prev_delta,
+                prev_err: &self.prev_err,
+                prev_b: self.prev_b,
                 removed: &trans.removed,
                 added: &trans.added,
                 next_train: &train_idx,
-                rng_seed: opts.rng_seed ^ (h as u64),
+                rng_seed: self.profile.rng_seed ^ (h as u64),
             };
-            let seed = seeder.seed(&ctx, &mut seed_cache);
+            let seed = self.seeder.seed(&ctx, &mut self.seed_cache);
             debug_assert!(
                 check_feasible_delta(&seed.delta, c).is_ok(),
                 "{} produced infeasible SVR seed at round {h}: {:?}",
-                seeder.name(),
+                self.seeder.name(),
                 check_feasible_delta(&seed.delta, c)
             );
-            let carried = if opts.carry_active_set && opts.shrinking {
-                seeder.seed_active_set(&ctx, &prev_partition)
+            let carried = if self.profile.carry_active_set && self.profile.shrinking {
+                self.seeder.seed_active_set(&ctx, &self.prev_partition)
             } else {
                 None
             };
@@ -416,10 +641,10 @@ pub fn run_kfold_svr(
         let problem = SvrProblem { c, epsilon };
         let params = SmoParams {
             c,
-            eps: opts.eps,
-            shrinking: opts.shrinking,
-            cache_bytes: opts.cache_bytes,
-            cache_dtype: opts.cache_dtype,
+            eps: self.profile.eps,
+            shrinking: self.profile.shrinking,
+            cache_bytes: self.profile.cache_bytes,
+            cache_dtype: self.profile.cache_dtype,
             ..Default::default()
         };
         let mut solver =
@@ -441,12 +666,18 @@ pub fn run_kfold_svr(
         let mut rest = t_rest.elapsed();
 
         // Warm-start gradient setup inside the solver is init cost, not
-        // training cost (paper accounting), exactly as in the C-SVC chain.
-        let grad_init = std::time::Duration::from_secs_f64(result.grad_init_secs);
-        let init = if h > 0 { init + grad_init } else { init };
-        rest = rest.saturating_sub(if h > 0 { grad_init } else { Default::default() });
+        // training cost (paper accounting), exactly as in the C-SVC chain;
+        // a cross-γ seeded round 0 is a warm start too.
+        let seeded_round = h > 0 || gamma_seeded;
+        let grad_init = Duration::from_secs_f64(result.grad_init_secs);
+        let init = if seeded_round { init + grad_init } else { init };
+        rest = rest.saturating_sub(if seeded_round {
+            grad_init
+        } else {
+            Default::default()
+        });
 
-        rounds.push(RoundStat {
+        self.rounds.push(RoundStat {
             round: h,
             init,
             rest,
@@ -459,19 +690,26 @@ pub fn run_kfold_svr(
         });
 
         // Carry state to round h+1.
-        prev_err = svr_errors(&result, epsilon);
-        prev_delta = collapse_svr_pairs(&result.alpha);
-        prev_partition = result.partition;
-        prev_b = result.b;
-        prev_train = train_idx;
+        self.prev_err = svr_errors(&result, epsilon);
+        self.prev_delta = collapse_svr_pairs(&result.alpha);
+        self.prev_partition = result.partition;
+        self.prev_b = result.b;
+        self.prev_train = train_idx;
+        if h == 0 {
+            self.first_round_delta = Some(self.prev_delta.clone());
+        }
+        true
     }
 
-    CvReport {
-        dataset: full.name.clone(),
-        seeder: seeder.name().to_string(),
-        k,
-        rounds,
-        partition,
+    /// Finish the chain into a [`CvReport`] over the rounds run so far.
+    pub fn into_report(self) -> CvReport {
+        CvReport {
+            dataset: self.full.name.clone(),
+            seeder: self.seeder.name().to_string(),
+            k: self.k,
+            rounds: self.rounds,
+            partition: self.partition,
+        }
     }
 }
 
@@ -484,11 +722,12 @@ pub fn run_kfold_svr(
 /// ν-fraction point. `test_correct` counts agreement of the sign of the
 /// decision function with the ground-truth labels.
 ///
-/// `opts.backend` and `opts.threads` are ignored, as in
-/// [`run_kfold_svr`]; `opts.shrinking` is honored, and with
-/// `opts.carry_active_set` transplanted rounds carry the previous round's
-/// bounded positions (through the same 𝓢-preserving index transfer the
-/// transplant uses) as the solver's initial shrink state.
+/// `opts.backend`, `opts.profile.threads` and `opts.round0_seed` are
+/// ignored, as in [`run_kfold_svr`]; `opts.profile.shrinking` is honored,
+/// and with `opts.profile.carry_active_set` transplanted rounds carry the
+/// previous round's bounded positions (through the same 𝓢-preserving
+/// index transfer the transplant uses) as the solver's initial shrink
+/// state.
 pub fn run_kfold_oneclass(
     full: &Dataset,
     kernel: Kernel,
@@ -498,15 +737,15 @@ pub fn run_kfold_oneclass(
     opts: CvOptions,
 ) -> CvReport {
     let t_part = Instant::now();
-    let plan = FoldPlan::stratified(full, k, opts.rng_seed);
+    let plan = FoldPlan::stratified(full, k, opts.profile.rng_seed);
     let partition = t_part.elapsed();
 
     let mut seed_cache = make_seed_cache(
         full,
         kernel,
         &opts.shared_seed_cache,
-        opts.seed_cache_bytes,
-        opts.cache_dtype,
+        opts.profile.seed_cache_bytes,
+        opts.profile.cache_dtype,
     );
 
     let rounds_to_run = opts.max_rounds.unwrap_or(k).min(k);
@@ -546,7 +785,7 @@ pub fn run_kfold_oneclass(
             );
             // The transplant copies α_𝓢 unchanged, so the carried bounded
             // positions use the same 𝓢-preserving transfer as the α copy.
-            let carried = (opts.carry_active_set && opts.shrinking).then(|| {
+            let carried = (opts.profile.carry_active_set && opts.profile.shrinking).then(|| {
                 crate::seeding::carry_bounded_positions(
                     &prev_train,
                     &prev_partition,
@@ -560,10 +799,10 @@ pub fn run_kfold_oneclass(
         // ---- "the rest" --------------------------------------------------
         let t_rest = Instant::now();
         let params = SmoParams {
-            eps: opts.eps,
-            shrinking: opts.shrinking,
-            cache_bytes: opts.cache_bytes,
-            cache_dtype: opts.cache_dtype,
+            eps: opts.profile.eps,
+            shrinking: opts.profile.shrinking,
+            cache_bytes: opts.profile.cache_bytes,
+            cache_dtype: opts.profile.cache_dtype,
             ..Default::default()
         };
         let mut solver =
@@ -583,7 +822,7 @@ pub fn run_kfold_oneclass(
         // training cost (it exists with or without seeding, unlike the
         // C-SVC α = 0 start), so only *transplanted* rounds move the
         // solver's gradient setup into the init column.
-        let grad_init = std::time::Duration::from_secs_f64(result.grad_init_secs);
+        let grad_init = Duration::from_secs_f64(result.grad_init_secs);
         let seeded_round = h > 0 && transplant;
         let init = if seeded_round { init + grad_init } else { init };
         rest = rest.saturating_sub(if seeded_round {
@@ -929,6 +1168,65 @@ mod tests {
     }
 
     #[test]
+    fn stepped_chain_bit_identical_to_one_shot_run() {
+        // Pause/resume is the halving scheduler's substrate: stepping a
+        // chain one round at a time must reproduce the one-shot driver
+        // exactly (iterations, accuracy, fold sizes).
+        let ds = heart();
+        let whole = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &Sir, CvOptions::default());
+        let mut chain = KfoldChain::new(&ds, Kernel::rbf(0.2), 2.0, 5, &Sir, CvOptions::default());
+        // run 2 rounds, "pause", inspect, then resume to completion
+        assert!(chain.step(None));
+        assert!(chain.step(None));
+        assert_eq!(chain.rounds_run(), 2);
+        assert!(chain.first_round_alpha().is_some());
+        while chain.step(None) {}
+        let stepped = chain.into_report();
+        assert_eq!(whole.rounds.len(), stepped.rounds.len());
+        for (a, b) in whole.rounds.iter().zip(&stepped.rounds) {
+            assert_eq!(a.iterations, b.iterations, "round {}", a.round);
+            assert_eq!(a.test_correct, b.test_correct, "round {}", a.round);
+            assert_eq!(a.test_total, b.test_total, "round {}", a.round);
+        }
+    }
+
+    #[test]
+    fn gamma_seeded_round0_preserves_results() {
+        // Seed round 0 from an adjacent γ's round-0 solution: the chain
+        // must converge to the same fold accuracies as a cold start (the
+        // projection moves the starting point, never the fixed point).
+        let ds = heart();
+        let tight = || CvOptions {
+            profile: RunProfile::default().with_eps(1e-6),
+            ..Default::default()
+        };
+        let mut donor_chain = KfoldChain::new(&ds, Kernel::rbf(0.25), 2.0, 5, &Sir, tight());
+        assert!(donor_chain.step(None));
+        let donor = donor_chain.first_round_alpha().unwrap().to_vec();
+
+        let cold = run_kfold(&ds, Kernel::rbf(0.2), 2.0, 5, &Sir, tight());
+        let seeded = run_kfold(
+            &ds,
+            Kernel::rbf(0.2),
+            2.0,
+            5,
+            &Sir,
+            CvOptions {
+                round0_seed: Some(donor),
+                ..tight()
+            },
+        );
+        assert_eq!(cold.rounds.len(), seeded.rounds.len());
+        for (a, b) in cold.rounds.iter().zip(&seeded.rounds) {
+            assert_eq!(
+                a.test_correct, b.test_correct,
+                "round {}: cross-γ seed changed a fold accuracy",
+                a.round
+            );
+        }
+    }
+
+    #[test]
     fn svr_cv_runs_all_rounds_and_fits() {
         let ds = crate::data::synth::generate_regression("sinc", Some(100), 42);
         let rep = run_kfold_svr(
@@ -963,7 +1261,7 @@ mod tests {
                     // a tight tolerance pins the fixed point so the
                     // same-result guarantee is visible on a continuous
                     // metric (see docs/SEEDING.md §3)
-                    eps: 1e-6,
+                    profile: RunProfile::default().with_eps(1e-6),
                     ..Default::default()
                 },
             )
@@ -996,7 +1294,7 @@ mod tests {
         // tight solver eps pins the fixed point so the discrete accuracy
         // comparison cannot flip on a boundary-grazing decision value
         let opts = || CvOptions {
-            eps: 1e-6,
+            profile: RunProfile::default().with_eps(1e-6),
             ..Default::default()
         };
         let cold = run_kfold_oneclass(&ds, Kernel::rbf(1.0), 0.15, 5, false, opts());

@@ -67,17 +67,15 @@ pub fn run_loo(
         "avg" | "top" => run_loo_from_full(full, kernel, c, seeder, opts),
         _ => {
             let cv_opts = CvOptions {
-                eps: opts.eps,
-                shrinking: opts.shrinking,
-                cache_bytes: opts.cache_bytes,
-                seed_cache_bytes: opts.seed_cache_bytes,
-                rng_seed: opts.rng_seed,
+                profile: crate::config::RunProfile::default()
+                    .with_eps(opts.eps)
+                    .with_shrinking(opts.shrinking)
+                    .with_cache_bytes(opts.cache_bytes)
+                    .with_seed_cache_bytes(opts.seed_cache_bytes)
+                    .with_rng_seed(opts.rng_seed)
+                    .with_threads(opts.threads),
                 max_rounds: opts.max_rounds,
-                backend: None,
-                threads: opts.threads,
-                shared_seed_cache: None,
-                carry_active_set: true,
-                cache_dtype: Default::default(),
+                ..Default::default()
             };
             let mut rep = run_kfold(full, kernel, c, full.len(), seeder, cv_opts);
             rep.seeder = seeder.name().to_string();

@@ -15,13 +15,22 @@
 //! warm-start gradient sweeps; `threads` option) additionally perform
 //! bit-identical arithmetic for every thread count, so parallelism never
 //! changes a result.
+//!
+//! The shared solver/runtime knobs of every driver live in one
+//! [`RunProfile`](crate::config::RunProfile) embedded in each options
+//! struct. The C-SVC and ε-SVR drivers are exposed both as one-shot
+//! functions and as resumable chains ([`KfoldChain`], [`SvrKfoldChain`])
+//! whose per-round stepping is what the budget-scheduled grid search
+//! pauses and resumes.
 
 mod kfold;
 mod loo;
 mod report;
 mod warmc;
 
-pub use kfold::{run_kfold, run_kfold_oneclass, run_kfold_svr, CvOptions};
+pub use kfold::{
+    run_kfold, run_kfold_oneclass, run_kfold_svr, CvOptions, KfoldChain, SvrKfoldChain,
+};
 pub use loo::{run_loo, LooOptions};
 pub use report::{CvReport, RoundStat};
 pub use warmc::{rescale_alpha, run_kfold_warm_c, WarmCOptions};

@@ -13,9 +13,11 @@
 //! fold chain by the savings of the C chain — the model-selection workload
 //! the paper's introduction motivates.
 
+use super::kfold::make_seed_cache;
 use super::report::{CvReport, RoundStat};
+use crate::config::RunProfile;
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::kernel::{Kernel, KernelEval, SharedKernelCache};
 use crate::seeding::{balance_to_target, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
 use std::sync::Arc;
@@ -23,53 +25,31 @@ use std::time::Instant;
 
 /// Options for the warm-C sweep.
 pub struct WarmCOptions {
-    /// SMO tolerance (LibSVM default 1e-3).
-    pub eps: f64,
-    /// LibSVM-style shrinking in the solver.
-    pub shrinking: bool,
-    /// Solver kernel-cache budget per round.
-    pub cache_bytes: usize,
-    /// Shared seeding-cache budget (rows over the full dataset).
-    pub seed_cache_bytes: usize,
-    /// Fold-partition + seeding determinism.
-    pub rng_seed: u64,
+    /// Shared solver/runtime knobs (tolerance, caches, seed, threads, …).
+    /// With `profile.carry_active_set`, the carry-over rides **both**
+    /// reuse dimensions: a C-chained fold carries the bounded partition
+    /// of the same fold at the previous C (identity index map — the
+    /// training set is the same), a fold-chained round carries it through
+    /// the seeder's transfer. Validated by the solver; inert without
+    /// `profile.shrinking`. `profile.share_rows` is ignored here — row
+    /// sharing is decided by whoever hands in
+    /// [`shared_seed_cache`](WarmCOptions::shared_seed_cache).
+    pub profile: RunProfile,
     /// Also seed fold-to-fold within each C (the paper's chain). When
     /// false only the C-chain reuse is active (pure Chu et al.).
     pub fold_chain: bool,
-    /// Worker threads for the intra-run parallel paths (0 = auto,
-    /// 1 = sequential); bit-identical results for any value. The C-chain
-    /// itself is a dependency chain and stays sequential — the concurrent
-    /// grid scheduler parallelises *across* chains instead.
-    pub threads: usize,
     /// Optional process-wide row store (same dataset + kernel) backing
     /// the sweep's seeding cache; see
     /// [`CvOptions::shared_seed_cache`](super::CvOptions::shared_seed_cache).
     pub shared_seed_cache: Option<Arc<SharedKernelCache>>,
-    /// Active-set carry-over along **both** reuse dimensions (see
-    /// [`CvOptions::carry_active_set`](super::CvOptions::carry_active_set)):
-    /// a C-chained fold carries the bounded partition of the same fold at
-    /// the previous C (identity index map — the training set is the
-    /// same), a fold-chained round carries it through the seeder's
-    /// transfer. Validated by the solver; inert without `shrinking`.
-    pub carry_active_set: bool,
-    /// Storage precision of cached kernel rows; see
-    /// [`CvOptions::cache_dtype`](super::CvOptions::cache_dtype).
-    pub cache_dtype: CacheDtype,
 }
 
 impl Default for WarmCOptions {
     fn default() -> Self {
         WarmCOptions {
-            eps: 1e-3,
-            shrinking: true,
-            cache_bytes: 256 << 20,
-            seed_cache_bytes: 128 << 20,
-            rng_seed: 42,
+            profile: RunProfile::default(),
             fold_chain: true,
-            threads: 0,
             shared_seed_cache: None,
-            carry_active_set: true,
-            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -116,29 +96,22 @@ pub fn run_kfold_warm_c(
 ) -> Vec<CvReport> {
     assert!(!cs.is_empty());
     let t_part = Instant::now();
-    let plan = FoldPlan::stratified(full, k, opts.rng_seed);
+    let plan = FoldPlan::stratified(full, k, opts.profile.rng_seed);
     let partition = t_part.elapsed();
 
-    let mut seed_cache = match &opts.shared_seed_cache {
-        Some(shared) => {
-            assert!(
-                shared.n() == full.len() && shared.eval().kernel == kernel,
-                "shared seed cache bound to a different dataset or kernel"
-            );
-            KernelCache::with_shared_backing(Arc::clone(shared), opts.seed_cache_bytes)
-        }
-        None => KernelCache::with_byte_budget_dtype(
-            KernelEval::new(full.clone(), kernel),
-            opts.seed_cache_bytes,
-            opts.cache_dtype,
-        ),
-    };
+    let mut seed_cache = make_seed_cache(
+        full,
+        kernel,
+        &opts.shared_seed_cache,
+        opts.profile.seed_cache_bytes,
+        opts.profile.cache_dtype,
+    );
 
     // per-fold carried state from the previous C value
     let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
     let mut prev_c_partition: Vec<Option<Vec<crate::smo::VarBound>>> = vec![None; k];
     let mut reports = Vec::with_capacity(cs.len());
-    let carry = opts.carry_active_set && opts.shrinking;
+    let carry = opts.profile.carry_active_set && opts.profile.shrinking;
 
     for (ci, &c) in cs.iter().enumerate() {
         let mut rounds = Vec::with_capacity(k);
@@ -178,7 +151,7 @@ pub fn run_kfold_warm_c(
                     removed: &trans.removed,
                     added: &trans.added,
                     next_train: &train_idx,
-                    rng_seed: opts.rng_seed ^ (h as u64) ^ ((ci as u64) << 32),
+                    rng_seed: opts.profile.rng_seed ^ (h as u64) ^ ((ci as u64) << 32),
                 };
                 let seed = seeder.seed(&ctx, &mut seed_cache);
                 let carried = if carry {
@@ -195,11 +168,11 @@ pub fn run_kfold_warm_c(
             let t_rest = Instant::now();
             let params = SmoParams {
                 c,
-                eps: opts.eps,
-                shrinking: opts.shrinking,
-                cache_bytes: opts.cache_bytes,
-                threads: opts.threads,
-                cache_dtype: opts.cache_dtype,
+                eps: opts.profile.eps,
+                shrinking: opts.profile.shrinking,
+                cache_bytes: opts.profile.cache_bytes,
+                threads: opts.profile.threads,
+                cache_dtype: opts.profile.cache_dtype,
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), kernel), params);

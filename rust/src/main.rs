@@ -11,11 +11,13 @@
 //!   serve       batched, hot-swappable TCP/JSON-lines prediction service
 //!   benchgate   CI bench-regression gate over committed baselines
 
-use alphaseed::config::RunConfig;
-use alphaseed::coordinator::{experiments, ModelRegistry, PredictServer, ServeModel};
+use alphaseed::config::{RunConfig, RunProfile};
+use alphaseed::coordinator::{
+    experiments, BudgetPolicy, ModelRegistry, PredictServer, ServeModel,
+};
 use alphaseed::cv::CvReport;
 use alphaseed::data::{read_libsvm, synth, write_libsvm};
-use alphaseed::kernel::{CacheDtype, Kernel, KernelEval};
+use alphaseed::kernel::{Kernel, KernelEval};
 use alphaseed::metrics::Table;
 use alphaseed::multiclass::MultiDataset;
 use alphaseed::runtime::{BackendChoice, ComputeBackend, NativeBackend, XlaBackend};
@@ -24,10 +26,11 @@ use alphaseed::smo::{
     Model, OneClassModel, OneClassProblem, QpProblem, SmoParams, Solver, SvrModel, SvrProblem,
 };
 use alphaseed::util::bench::{
-    check_bench_regression, check_kernel_regression, check_serve_regression, render_gate_report,
+    check_bench_regression, check_grid_regression, check_kernel_regression,
+    check_serve_regression, render_gate_report, render_grid_gate_report,
     render_kernel_gate_report, render_serve_gate_report, GateTolerance, ServeGateTolerance,
 };
-use alphaseed::util::cli::{Args, Task};
+use alphaseed::util::cli::{run_profile, Args, Task};
 use alphaseed::util::json::Json;
 use alphaseed::util::timing::fmt_secs;
 use anyhow::{bail, Context, Result};
@@ -88,6 +91,13 @@ fn print_help() {
            --cache-f32         store kernel-cache rows as f32 (2x row capacity;\n\
                                accumulation stays f64 — see docs/ARCHITECTURE.md §3.7)\n\
            --seed <int>        RNG seed                        (default 42)\n\
+           --solver-eps <f>    SMO KKT tolerance               (default 1e-3)\n\
+           --no-shrinking      disable the shrinking heuristic\n\
+           --no-carry          disable cross-fold active-set carry-over\n\
+           --cache-mb <int>    solver kernel-cache budget       (default 256)\n\
+           --seed-cache-mb <int> seeding-cache budget (default 128; grids 64)\n\
+           --threads <int>     worker threads, 0 = auto        (default 0)\n\
+           --no-share-rows     private per-cell kernel caches (grids/ovo only)\n\
          svr / oneclass options:\n\
            --epsilon <f>       SVR tube half-width             (default per dataset)\n\
            --nu <f>            one-class outlier-fraction bound (default 0.15)\n\
@@ -95,10 +105,12 @@ fn print_help() {
          multiclass options (cv/ovo/grid --task multiclass):\n\
            --classes <int>     synthetic class count              (default 3)\n\
            --sep/--noise <f>   blobs separation / rings noise\n\
-           --no-share-rows     private per-pair kernel caches (debugging)\n\
          grid options:\n\
-           --threads <int>     concurrent cells/chains, 0 = auto (default 0)\n\
            --warm-c            chain ascending C per gamma (Chu et al. reuse)\n\
+           --seed-gamma        seed round 0 from the adjacent-γ cell's alphas\n\
+           --budget-policy <p> uniform|halving                 (default uniform)\n\
+           --eta <int>         halving keep fraction 1/eta     (default 3)\n\
+           --min-rounds <int>  halving round-0 folds per cell  (default 1)\n\
            --eps-grid <list>   SVR tube-width axis (with --task svr)\n\
          serve options:\n\
            --task <t>          csvc|svr|oneclass model to train and serve\n\
@@ -156,15 +168,70 @@ fn make_backend(args: &Args) -> Result<Option<XlaBackend>> {
     }
 }
 
-/// `--cache-f32` stores kernel rows as f32 (half the bytes, twice the
-/// cached rows per budget); accumulation stays f64. Default f64 keeps the
-/// bit-identity pins.
-fn cache_dtype_arg(args: &Args) -> CacheDtype {
-    if args.flag("cache-f32") {
-        CacheDtype::F32
-    } else {
-        CacheDtype::F64
+/// Reject an option or flag that doesn't apply to this subcommand with a
+/// targeted message (instead of the generic "unknown option" the
+/// consumed-keys check would give).
+fn reject_opt(args: &Args, key: &str, msg: &str) -> Result<()> {
+    if args.opt_str(key).is_some() || args.flag(key) {
+        bail!("--{key}: {msg}");
     }
+    Ok(())
+}
+
+/// Parse `--budget-policy`, `--eta`, `--min-rounds` and `--seed-gamma`
+/// for the grid subcommands, rejecting the combinations the scheduler
+/// does not support with targeted messages.
+fn grid_policy_args(args: &Args, warm_c: bool, multiclass: bool) -> Result<(BudgetPolicy, bool)> {
+    let policy_name = args.str_or("budget-policy", "uniform");
+    let eta = args.opt_parse::<usize>("eta")?;
+    let min_rounds = args.opt_parse::<usize>("min-rounds")?;
+    let seed_gamma = args.flag("seed-gamma");
+    let policy = match policy_name.as_str() {
+        "uniform" => {
+            if eta.is_some() || min_rounds.is_some() {
+                bail!("--eta/--min-rounds tune successive halving; add --budget-policy halving");
+            }
+            BudgetPolicy::Uniform
+        }
+        "halving" | "successive-halving" => {
+            if multiclass {
+                bail!(
+                    "--budget-policy halving is not supported for multiclass grids: a cell's \
+                     metric pools all pair chains, which cannot pause at a fold boundary"
+                );
+            }
+            if warm_c {
+                bail!(
+                    "--budget-policy halving cannot compose with --warm-c: the C-chain couples \
+                     cells that halving must keep or drop independently"
+                );
+            }
+            let eta = eta.unwrap_or(3);
+            if eta < 2 {
+                bail!("--eta {eta}: successive halving needs eta >= 2");
+            }
+            BudgetPolicy::SuccessiveHalving {
+                eta,
+                min_rounds: min_rounds.unwrap_or(1),
+            }
+        }
+        other => bail!("unknown --budget-policy '{other}' (uniform|halving)"),
+    };
+    if seed_gamma {
+        if multiclass {
+            bail!(
+                "--seed-gamma is not supported for multiclass grids: pair chains restart cold \
+                 on degenerate folds, so a cross-γ donor is not always defined"
+            );
+        }
+        if warm_c {
+            bail!(
+                "--seed-gamma cannot compose with --warm-c: pick one reuse direction \
+                 (cross-γ rows or ascending-C columns)"
+            );
+        }
+    }
+    Ok((policy, seed_gamma))
 }
 
 fn print_report(rep: &CvReport) {
@@ -256,14 +323,23 @@ fn reject_xla_backend(args: &Args, task: &str) -> Result<()> {
 
 fn cmd_cv_svr(args: &Args) -> Result<()> {
     reject_xla_backend(args, "svr")?;
+    reject_opt(
+        args,
+        "threads",
+        "the ε-SVR chain is sequential per fold; --threads applies to csvc runs and grids",
+    )?;
+    reject_opt(
+        args,
+        "no-share-rows",
+        "row sharing is a grid-level concern; a single CV run builds one seeding cache",
+    )?;
     let (ds, c, gamma, epsilon) = load_regression_dataset(args)?;
     let k = args.parse_or("k", 10usize)?;
     let seeder_name = args.str_or("seeder", "sir");
     let seeder = alphaseed::seeding::svr::svr_seeder_by_name(&seeder_name)
         .with_context(|| format!("unknown SVR seeder '{seeder_name}' (cold|ato|mir|sir)"))?;
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
-    let cache_dtype = cache_dtype_arg(args);
+    let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
     let rep = alphaseed::cv::run_kfold_svr(
@@ -274,9 +350,8 @@ fn cmd_cv_svr(args: &Args) -> Result<()> {
         k,
         seeder.as_ref(),
         alphaseed::cv::CvOptions {
-            rng_seed: seed,
+            profile,
             max_rounds,
-            cache_dtype,
             ..Default::default()
         },
     );
@@ -314,7 +389,17 @@ fn cmd_cv_oneclass(args: &Args) -> Result<()> {
         other => bail!("unknown one-class seeder '{other}' (cold|sir)"),
     };
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
-    let cache_dtype = cache_dtype_arg(args);
+    reject_opt(
+        args,
+        "threads",
+        "the one-class chain is sequential per fold; --threads applies to csvc runs and grids",
+    )?;
+    reject_opt(
+        args,
+        "no-share-rows",
+        "row sharing is a grid-level concern; a single CV run builds one seeding cache",
+    )?;
+    let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
     let rep = alphaseed::cv::run_kfold_oneclass(
@@ -324,9 +409,8 @@ fn cmd_cv_oneclass(args: &Args) -> Result<()> {
         k,
         transplant,
         alphaseed::cv::CvOptions {
-            rng_seed: seed,
+            profile,
             max_rounds,
-            cache_dtype,
             ..Default::default()
         },
     );
@@ -342,14 +426,17 @@ fn cmd_cv_csvc(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
     let mut backend = make_backend(args)?;
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
-    let cache_dtype = cache_dtype_arg(args);
+    reject_opt(
+        args,
+        "no-share-rows",
+        "row sharing is a grid-level concern; a single CV run builds one seeding cache",
+    )?;
+    let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
     let opts = alphaseed::cv::CvOptions {
-        rng_seed: seed,
+        profile,
         max_rounds,
-        cache_dtype,
         backend: backend
             .as_mut()
             .map(|b| b as &mut dyn ComputeBackend),
@@ -366,7 +453,22 @@ fn cmd_loo(args: &Args) -> Result<()> {
     let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
     let max_rounds = args.opt_parse::<usize>("max-rounds")?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
+    reject_opt(
+        args,
+        "cache-f32",
+        "the LOO chain reuses the CV seeding cache at its fixed dtype; f32 tiers apply to cv and grid runs",
+    )?;
+    reject_opt(
+        args,
+        "no-carry",
+        "active-set carry-over is a k-fold chain optimisation; LOO rounds drop a single row each",
+    )?;
+    reject_opt(
+        args,
+        "no-share-rows",
+        "row sharing is a grid-level concern; a LOO run builds one seeding cache",
+    )?;
+    let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
     let rep = alphaseed::cv::run_loo(
@@ -375,9 +477,13 @@ fn cmd_loo(args: &Args) -> Result<()> {
         c,
         seeder.as_ref(),
         alphaseed::cv::LooOptions {
+            eps: profile.eps,
+            shrinking: profile.shrinking,
+            cache_bytes: profile.cache_bytes,
+            seed_cache_bytes: profile.seed_cache_bytes,
+            rng_seed: profile.rng_seed,
+            threads: profile.threads,
             max_rounds,
-            rng_seed: seed,
-            ..Default::default()
         },
     );
     print_report(&rep);
@@ -446,9 +552,11 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
     let gammas = args.list_or("gamma-grid", &[0.1, 0.5, 1.0])?;
     let k = args.parse_or("k", 5usize)?;
     let seeder = args.str_or("seeder", "sir");
-    let threads = args.parse_or("threads", 0usize)?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
-    let cache_dtype = cache_dtype_arg(args);
+    let (policy, seed_gamma) = grid_policy_args(args, false, false)?;
+    let profile = run_profile(
+        args,
+        alphaseed::coordinator::GridOptions::default().profile,
+    )?;
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -458,12 +566,12 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
         &epss,
         &gammas,
         &alphaseed::coordinator::GridOptions {
+            profile,
             k,
             seeder: seeder.clone(),
-            threads,
-            rng_seed: seed,
-            cache_dtype,
-            ..Default::default()
+            warm_c: false,
+            policy,
+            seed_gamma,
         },
     );
     let mut t = Table::new(format!(
@@ -472,13 +580,14 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
         g.points.len(),
         fmt_secs(started.elapsed())
     ))
-    .header(&["C", "epsilon", "gamma", "CV MSE", "iterations", "time(s)"]);
+    .header(&["C", "epsilon", "gamma", "CV MSE", "rounds", "iterations", "time(s)"]);
     for p in &g.points {
         t.row(vec![
             format!("{}", p.c),
             format!("{}", p.epsilon),
             format!("{}", p.gamma),
             format!("{:.6}", p.mse),
+            p.rounds.to_string(),
             p.iterations.to_string(),
             fmt_secs(p.elapsed),
         ]);
@@ -498,11 +607,12 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
     let k = args.parse_or("k", 5usize)?;
     let seeder = args.str_or("seeder", "sir");
-    // 0 = auto (machine parallelism); cells run concurrently either way
-    let threads = args.parse_or("threads", 0usize)?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
     let warm_c = args.flag("warm-c");
-    let cache_dtype = cache_dtype_arg(args);
+    let (policy, seed_gamma) = grid_policy_args(args, warm_c, false)?;
+    let profile = run_profile(
+        args,
+        alphaseed::coordinator::GridOptions::default().profile,
+    )?;
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -511,13 +621,12 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
         &cs,
         &gammas,
         &alphaseed::coordinator::GridOptions {
+            profile,
             k,
             seeder: seeder.clone(),
-            threads,
-            rng_seed: seed,
             warm_c,
-            cache_dtype,
-            ..Default::default()
+            policy,
+            seed_gamma,
         },
     );
     let mut t = Table::new(format!(
@@ -527,12 +636,13 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
         if warm_c { ", warm-C chains" } else { "" },
         fmt_secs(started.elapsed())
     ))
-    .header(&["C", "gamma", "accuracy(%)", "iterations", "time(s)"]);
+    .header(&["C", "gamma", "accuracy(%)", "rounds", "iterations", "time(s)"]);
     for p in &g.points {
         t.row(vec![
             format!("{}", p.c),
             format!("{}", p.gamma),
             format!("{:.2}", p.accuracy * 100.0),
+            p.rounds.to_string(),
             p.iterations.to_string(),
             fmt_secs(p.elapsed),
         ]);
@@ -643,9 +753,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let seeder_name = args.str_or("seeder", "sir");
     let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
     let fold_chain = !args.flag("no-fold-chain");
-    let cache_dtype = cache_dtype_arg(args);
+    reject_opt(
+        args,
+        "no-share-rows",
+        "row sharing is a grid-level concern; a single warm-C sweep builds one seeding cache",
+    )?;
+    let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
     let reports = alphaseed::cv::run_kfold_warm_c(
@@ -655,9 +769,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         k,
         seeder.as_ref(),
         alphaseed::cv::WarmCOptions {
-            rng_seed: seed,
+            profile,
             fold_chain,
-            cache_dtype,
             ..Default::default()
         },
     );
@@ -818,10 +931,10 @@ fn cmd_ovo(args: &Args) -> Result<()> {
     let seeder_name = args.str_or("seeder", "sir");
     let seeder = alphaseed::seeding::seeder_by_name(&seeder_name)
         .with_context(|| format!("unknown seeder '{seeder_name}'"))?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
-    let threads = args.parse_or("threads", 0usize)?;
-    let share_rows = !args.flag("no-share-rows");
-    let cache_dtype = cache_dtype_arg(args);
+    let profile = run_profile(
+        args,
+        alphaseed::multiclass::OvoOptions::default().profile,
+    )?;
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -832,10 +945,7 @@ fn cmd_ovo(args: &Args) -> Result<()> {
         k,
         seeder.as_ref(),
         &alphaseed::multiclass::OvoOptions {
-            rng_seed: seed,
-            threads,
-            share_rows,
-            cache_dtype,
+            profile,
             ..Default::default()
         },
     );
@@ -895,11 +1005,12 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
         bail!("--k {k}: cross-validation needs at least 2 folds");
     }
     let seeder = args.str_or("seeder", "sir");
-    let threads = args.parse_or("threads", 0usize)?;
-    let seed = args.parse_or::<u64>("seed", 42)?;
     let warm_c = args.flag("warm-c");
-    let share_rows = !args.flag("no-share-rows");
-    let cache_dtype = cache_dtype_arg(args);
+    let (policy, seed_gamma) = grid_policy_args(args, warm_c, true)?;
+    let profile = run_profile(
+        args,
+        alphaseed::coordinator::GridOptions::default().profile,
+    )?;
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
@@ -908,14 +1019,12 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
         &cs,
         &gammas,
         &alphaseed::coordinator::GridOptions {
+            profile,
             k,
             seeder: seeder.clone(),
-            threads,
-            rng_seed: seed,
             warm_c,
-            share_rows,
-            cache_dtype,
-            ..Default::default()
+            policy,
+            seed_gamma,
         },
     );
     let mut t = Table::new(format!(
@@ -925,12 +1034,13 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
         if warm_c { ", warm-C chains" } else { "" },
         fmt_secs(started.elapsed())
     ))
-    .header(&["C", "gamma", "ensemble accuracy(%)", "iterations", "time(s)"]);
+    .header(&["C", "gamma", "ensemble accuracy(%)", "rounds", "iterations", "time(s)"]);
     for p in &g.points {
         t.row(vec![
             format!("{}", p.c),
             format!("{}", p.gamma),
             format!("{:.2}", p.accuracy * 100.0),
+            p.rounds.to_string(),
             p.iterations.to_string(),
             fmt_secs(p.elapsed),
         ]);
@@ -952,7 +1062,10 @@ fn cmd_grid_ovo(args: &Args) -> Result<()> {
 /// shape picks the gate: documents with a `serving` object (what
 /// `table_serve` emits) go through the batching-ratio + p99 serve gate,
 /// documents with a `kernel` object (what `micro_hotpath` emits) through
-/// the naive-vs-simd row-fill speedup gate, everything else through the
+/// the naive-vs-simd row-fill speedup gate, documents with a `grid`
+/// object (what `table_grid` emits) through the budget-scheduler gate
+/// (halving iteration fraction, cross-γ seeding ratio, accuracy
+/// identity), everything else through the
 /// seeded-vs-cold iteration gate. With
 /// `--report` a markdown summary is written on pass *and* fail (CI
 /// uploads it as a PR artifact either way).
@@ -977,11 +1090,14 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
     let baseline = read(&baseline_path)?;
     let is_serve = baseline.get("serving").is_some() || current.get("serving").is_some();
     let is_kernel = baseline.get("kernel").is_some() || current.get("kernel").is_some();
+    let is_grid = baseline.get("grid").is_some() || current.get("grid").is_some();
     if let Some(report_path) = &report_path {
         let md = if is_serve {
             render_serve_gate_report(&current_path, &baseline_path, &current, &baseline, &serve_tol)
         } else if is_kernel {
             render_kernel_gate_report(&current_path, &baseline_path, &current, &baseline)
+        } else if is_grid {
+            render_grid_gate_report(&current_path, &baseline_path, &current, &baseline)
         } else {
             render_gate_report(&current_path, &baseline_path, &current, &baseline, &tol)
         };
@@ -993,6 +1109,8 @@ fn cmd_benchgate(args: &Args) -> Result<()> {
         check_serve_regression(&current, &baseline, &serve_tol)
     } else if is_kernel {
         check_kernel_regression(&current, &baseline)
+    } else if is_grid {
+        check_grid_regression(&current, &baseline)
     } else {
         check_bench_regression(&current, &baseline, &tol)
     };

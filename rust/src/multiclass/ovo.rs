@@ -10,9 +10,10 @@
 
 use super::dataset::MultiDataset;
 use super::report::{tally_votes, OvoCvReport, PairCvStat};
+use crate::config::RunProfile;
 use crate::cv::rescale_alpha;
 use crate::data::{Dataset, FoldPlan};
-use crate::kernel::{CacheDtype, Kernel, KernelCache, KernelEval, SharedKernelCache};
+use crate::kernel::{Kernel, KernelCache, KernelEval, SharedKernelCache};
 use crate::seeding::{check_feasible, SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
 use crate::util::pool::{effective_threads, scoped_map};
@@ -106,51 +107,30 @@ impl OvoModel {
 /// Options for the parallel one-vs-one CV engine.
 #[derive(Debug, Clone)]
 pub struct OvoOptions {
-    /// SMO tolerance (LibSVM default 1e-3).
-    pub eps: f64,
-    /// LibSVM-style shrinking in the per-round solver.
-    pub shrinking: bool,
-    /// Solver kernel-cache budget per round.
-    pub cache_bytes: usize,
-    /// Per-pair seeding-cache budget (LRU over the pair view).
-    pub seed_cache_bytes: usize,
+    /// Shared solver/runtime knobs (tolerance, caches, seed, threads, …).
+    /// `profile.seed_cache_bytes` is the *per-pair* seeding-cache budget
+    /// (LRU over the pair view; default lowered to 32 MB since a run
+    /// holds one per pair); `profile.threads` is the concurrent pair
+    /// fan-out (scheduling width only — never changes any result);
+    /// `profile.share_rows` routes every pair's rows through one shared
+    /// full-dataset store via index projection (pure compute sharing —
+    /// projected rows are bit-identical to pair-local evaluation); and
+    /// `profile.carry_active_set` rides inside each pair chain exactly as
+    /// in [`CvOptions`](crate::cv::CvOptions) (fold-chained rounds carry
+    /// through the seeder's transfer, C-chained rounds through the
+    /// identity; validated by the solver, inert without shrinking).
+    pub profile: RunProfile,
     /// Byte budget of the shared full-dataset row store (only with
-    /// [`OvoOptions::share_rows`]).
+    /// `profile.share_rows`).
     pub shared_cache_bytes: usize,
-    /// Fold-partition + seeding determinism.
-    pub rng_seed: u64,
-    /// Concurrent pair chains (0 = auto, 1 = sequential). Scheduling
-    /// width only — never changes any result.
-    pub threads: usize,
-    /// Compute each kernel row once on the full dataset and serve every
-    /// pair through an index-projected view. Pure compute sharing — the
-    /// projected rows are bit-identical to pair-local evaluation.
-    pub share_rows: bool,
-    /// Active-set carry-over inside each pair chain (see
-    /// [`CvOptions::carry_active_set`](crate::cv::CvOptions::carry_active_set)):
-    /// fold-chained rounds carry through the seeder's transfer, C-chained
-    /// rounds through the identity. Validated by the solver; inert
-    /// without `shrinking`.
-    pub carry_active_set: bool,
-    /// Storage precision of cached kernel rows (solver caches, per-pair
-    /// seed caches, and the shared full-dataset row store); see
-    /// [`CvOptions::cache_dtype`](crate::cv::CvOptions::cache_dtype).
-    pub cache_dtype: CacheDtype,
 }
 
 impl Default for OvoOptions {
     fn default() -> Self {
         OvoOptions {
-            eps: 1e-3,
-            shrinking: true,
-            cache_bytes: 256 << 20,
-            seed_cache_bytes: 32 << 20,
+            // one seed cache per pair, so the per-cache default shrinks
+            profile: RunProfile::default().with_seed_cache_bytes(32 << 20),
             shared_cache_bytes: 256 << 20,
-            rng_seed: 42,
-            threads: 0,
-            share_rows: true,
-            carry_active_set: true,
-            cache_dtype: CacheDtype::F64,
         }
     }
 }
@@ -188,7 +168,7 @@ pub fn cv_ovo(
         k,
         seeder,
         &OvoOptions {
-            rng_seed,
+            profile: OvoOptions::default().profile.with_rng_seed(rng_seed),
             ..Default::default()
         },
     );
@@ -209,21 +189,21 @@ pub fn cv_ovo_opts(
 ) -> OvoCvReport {
     let classes = ds.classes();
     assert!(classes.len() >= 2, "one-vs-one needs at least 2 classes");
-    let folds = ds.stratified_folds(k, opts.rng_seed);
-    let shared = opts.share_rows.then(|| {
+    let folds = ds.stratified_folds(k, opts.profile.rng_seed);
+    let shared = opts.profile.share_rows.then(|| {
         SharedKernelCache::with_byte_budget_dtype(
             KernelEval::new(ds.kernel_dataset(), kernel),
             opts.shared_cache_bytes,
-            opts.cache_dtype,
+            opts.profile.cache_dtype,
         )
     });
     let pairs = class_pairs(&classes);
     // Split the scheduling width between pair fan-out and the per-round
     // solver's internal parallelism, never oversubscribing.
-    let width = effective_threads(opts.threads);
+    let width = effective_threads(opts.profile.threads);
     let solver_threads = (width / pairs.len().max(1)).max(1);
     let cs = [c];
-    let runs = scoped_map(opts.threads, pairs.len(), |pi| {
+    let runs = scoped_map(opts.profile.threads, pairs.len(), |pi| {
         let spec = PairChainSpec {
             mds: ds,
             folds: &folds,
@@ -319,19 +299,19 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
             Arc::clone(shared),
             pair_global.clone(),
             KernelEval::new(pair_ds.clone(), spec.kernel),
-            spec.opts.seed_cache_bytes,
+            spec.opts.profile.seed_cache_bytes,
         ),
         None => KernelCache::with_byte_budget_dtype(
             KernelEval::new(pair_ds.clone(), spec.kernel),
-            spec.opts.seed_cache_bytes,
-            spec.opts.cache_dtype,
+            spec.opts.profile.seed_cache_bytes,
+            spec.opts.profile.cache_dtype,
         ),
     };
 
     // per-fold carried state from the previous C value
     let mut prev_c_alpha: Vec<Option<Vec<f64>>> = vec![None; k];
     let mut prev_c_partition: Vec<Option<Vec<crate::smo::VarBound>>> = vec![None; k];
-    let carry = spec.opts.carry_active_set && spec.opts.shrinking;
+    let carry = spec.opts.profile.carry_active_set && spec.opts.profile.shrinking;
     let mut runs = Vec::with_capacity(spec.cs.len());
 
     for (ci, &c) in spec.cs.iter().enumerate() {
@@ -391,7 +371,7 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
                     removed: &trans.removed,
                     added: &trans.added,
                     next_train: &train_idx,
-                    rng_seed: spec.opts.rng_seed
+                    rng_seed: spec.opts.profile.rng_seed
                         ^ (h as u64)
                         ^ ((spec.pair_index as u64) << 20)
                         ^ ((ci as u64) << 40),
@@ -419,11 +399,11 @@ pub(crate) fn pair_chain(spec: &PairChainSpec, class_a: u32, class_b: u32) -> Ve
             let t_rest = Instant::now();
             let params = SmoParams {
                 c,
-                eps: spec.opts.eps,
-                shrinking: spec.opts.shrinking,
-                cache_bytes: spec.opts.cache_bytes,
+                eps: spec.opts.profile.eps,
+                shrinking: spec.opts.profile.shrinking,
+                cache_bytes: spec.opts.profile.cache_bytes,
                 threads: spec.solver_threads,
-                cache_dtype: spec.opts.cache_dtype,
+                cache_dtype: spec.opts.profile.cache_dtype,
                 ..Default::default()
             };
             let mut solver = Solver::new(KernelEval::new(train.clone(), spec.kernel), params);

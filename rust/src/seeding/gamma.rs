@@ -1,0 +1,117 @@
+//! Cross-γ alpha transfer — seeding a grid cell's first round from the
+//! adjacent γ's solved model (docs/SEEDING.md §8).
+//!
+//! The paper seeds across *folds* (the training sets overlap by (k−2)/k),
+//! warm-C chains seed across *C* (same training set, rescaled box). A γ
+//! step is the remaining cold edge in a (C, γ) grid: the training set is
+//! unchanged — fold partitions depend only on (n, k, seed), never on the
+//! hyper-parameters — and only the kernel matrix moves. For nearby γ the
+//! RBF matrices are close, so the previous γ's optimum is a good starting
+//! point for the new QP. The dual constraints do not mention γ at all, so
+//! the transfer reduces to the same clip-and-rebalance feasibility
+//! machinery as the fold transfer:
+//!
+//! * **C-SVC** ([`project_alpha_csvc`]): clip the donor α into \[0, C\],
+//!   then restore Σyᵢαᵢ = 0 with [`balance_to_target`] (the paper's
+//!   AdjustAlpha). When donor and recipient share C — the grid's cross-γ
+//!   edge always does — the clip is a no-op and the balance only absorbs
+//!   solver round-off; the general form also projects across a C change.
+//! * **ε-SVR** ([`project_delta_svr`]): identical in δ = α − α* space —
+//!   clip into \[−C, C\], restore Σδ = 0 via [`balance_delta`]'s
+//!   u = δ + C shift.
+//!
+//! Both return `None` when the balance pass cannot reach the equality
+//! target inside the box (possible only when projecting onto a much
+//! smaller C); callers then fall back to a cold start. Like every seeding
+//! transfer in this crate, the projection moves the solver's *starting
+//! point*, never its fixed point: the recipient cell's converged model —
+//! and therefore its CV accuracy/MSE — is unchanged, only iteration
+//! counts move (pinned by `tests/budget_grid.rs`).
+#![deny(missing_docs)]
+
+use super::balance_to_target;
+use super::svr::balance_delta;
+
+/// Project a solved C-SVC α from an adjacent-γ cell onto the recipient
+/// cell's feasible set: clip into `[0, c]`, then rebalance Σyᵢαᵢ back to
+/// 0 over the entries with box headroom.
+///
+/// `prev_alpha` and `y` are aligned with the (shared) training set of the
+/// round being seeded. Returns `None` when the equality target is
+/// unreachable inside the box — the caller starts cold.
+pub fn project_alpha_csvc(prev_alpha: &[f64], y: &[f64], c: f64) -> Option<Vec<f64>> {
+    debug_assert_eq!(prev_alpha.len(), y.len());
+    let mut out: Vec<f64> = prev_alpha.iter().map(|&a| a.clamp(0.0, c)).collect();
+    if balance_to_target(&mut out, y, c, 0.0) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// Project solved ε-SVR pair differences δ = α − α* from an adjacent-γ
+/// cell onto the recipient's feasible set: clip into `[-c, c]`, then
+/// rebalance Σδ back to 0.
+///
+/// Returns `None` when the equality target is unreachable inside the box
+/// — the caller starts cold.
+pub fn project_delta_svr(prev_delta: &[f64], c: f64) -> Option<Vec<f64>> {
+    let mut out: Vec<f64> = prev_delta.iter().map(|&d| d.clamp(-c, c)).collect();
+    if balance_delta(&mut out, c, 0.0) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::seeding::check_feasible;
+    use crate::seeding::svr::check_feasible_delta;
+
+    #[test]
+    fn same_c_projection_is_identity_up_to_roundoff() {
+        // A feasible donor with the same C projects to itself.
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let alpha = [0.5, 0.5, 1.25, 1.25];
+        let p = project_alpha_csvc(&alpha, &y, 2.0).expect("feasible donor");
+        assert_eq!(p, alpha.to_vec());
+        check_feasible(&p, &y, 2.0).unwrap();
+    }
+
+    #[test]
+    fn shrinking_c_clips_and_rebalances() {
+        let y = [1.0, -1.0, 1.0, -1.0];
+        // Feasible at C=4; entries above the new C=1 box must clip and
+        // the y-weighted sum must be restored on the remaining headroom.
+        let alpha = [4.0, 3.0, 0.0, 1.0];
+        let p = project_alpha_csvc(&alpha, &y, 1.0).expect("target reachable");
+        for &a in &p {
+            assert!((0.0..=1.0 + 1e-12).contains(&a));
+        }
+        check_feasible(&p, &y, 1.0).unwrap();
+    }
+
+    #[test]
+    fn degenerate_single_label_donor_stays_feasible() {
+        // All-positive labels force the balance pass to drain everything
+        // back to α = 0 (the only point with Σyα = 0); whatever the
+        // projection returns must satisfy the contract.
+        let y = [1.0, 1.0];
+        let alpha = [3.0, 3.0];
+        if let Some(p) = project_alpha_csvc(&alpha, &y, 0.5) {
+            check_feasible(&p, &y, 0.5).unwrap();
+        }
+    }
+
+    #[test]
+    fn svr_projection_restores_pair_feasibility() {
+        let delta = [2.0, -1.5, 0.25, -0.25];
+        let p = project_delta_svr(&delta, 1.0).expect("target reachable");
+        check_feasible_delta(&p, 1.0).unwrap();
+        // Entries inside the box that the balance pass did not need stay
+        // put: the projection is minimal, not a re-solve.
+        assert!(p.iter().all(|&d| (-1.0..=1.0).contains(&d)));
+    }
+}

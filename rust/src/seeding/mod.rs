@@ -19,13 +19,17 @@
 //! formulations, whose duals share the box + single-equality structure:
 //! [`svr`] carries ATO/MIR/SIR over to the ε-SVR pair variables
 //! δ = α − α* (box \[−C, C\], Σδ = 0) and [`oneclass`] to the one-class
-//! constraint Σα = ν·n. docs/SEEDING.md maps every rule to its paper
-//! section and derives the transfers.
+//! constraint Σα = ν·n. The reuse argument also extends beyond the fold
+//! axis: [`gamma`] projects a solved cell's α across a γ step in grid
+//! search through the same clip-and-rebalance machinery, so adjacent-γ
+//! cells seed warm instead of cold. docs/SEEDING.md maps every rule to
+//! its paper section and derives the transfers.
 
 mod ato;
 mod avg;
 mod balance;
 mod cold;
+pub mod gamma;
 mod mir;
 pub mod oneclass;
 mod sir;

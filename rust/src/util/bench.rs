@@ -659,6 +659,165 @@ pub fn render_kernel_gate_report(
     out
 }
 
+// ---- the grid budget-scheduler bench gate ----------------------------------
+
+/// Compare a `BENCH_grid.json` against its committed baseline — the
+/// budget-scheduler counterpart of [`check_bench_regression`], keyed on
+/// the record shape (`grid` object, what `benches/table_grid.rs` emits).
+///
+/// The baseline declares ceilings; there is no extra tolerance knob
+/// because both gated quantities are iteration *ratios* measured in one
+/// process, so machine speed divides out (same argument as the kernel
+/// gate's speedup floors):
+///
+/// 1. **halving fraction** — `halving_iter_fraction` (successive-halving
+///    total SMO iterations over the uniform sweep's) must stay at or
+///    below the baseline's `max_halving_fraction` ceiling. Fires when
+///    halving stops eliminating cells early, i.e. the budget scheduler
+///    degrades to a full sweep plus overhead.
+/// 2. **cross-γ ratio** — `gamma_seeded_ratio` (γ-seeded grid iterations
+///    over the cold grid's) must stay at or below `max_gamma_ratio`.
+///    Fires when the cross-γ projection stops helping (or starts
+///    hurting) the solver's start.
+/// 3. **accuracy identity** — the current record's
+///    `gamma_accuracy_identical` must be `true`: cross-γ seeding may move
+///    iteration counts, never a selected cell's accuracy. A missing or
+///    false field is a failure.
+pub fn check_grid_regression(current: &Json, baseline: &Json) -> Result<Vec<String>, Vec<String>> {
+    let field = |doc: &Json, key: &str| -> Option<f64> { doc.get("grid")?.get(key)?.as_f64() };
+    if baseline.get("grid").and_then(Json::as_obj).is_none() {
+        return Err(vec!["baseline has no grid object".into()]);
+    }
+
+    let mut passed = Vec::new();
+    let mut failures = Vec::new();
+
+    let gates = [
+        (
+            "max_halving_fraction",
+            "halving_iter_fraction",
+            "halving-vs-uniform iteration fraction",
+        ),
+        (
+            "max_gamma_ratio",
+            "gamma_seeded_ratio",
+            "γ-seeded-vs-cold iteration ratio",
+        ),
+    ];
+    for (ceiling_key, value_key, what) in gates {
+        let Some(ceiling) = field(baseline, ceiling_key) else {
+            failures.push(format!("baseline grid object lacks a numeric {ceiling_key}"));
+            continue;
+        };
+        let Some(value) = field(current, value_key) else {
+            failures.push(format!(
+                "current bench lacks grid.{value_key} (baseline gates on it)"
+            ));
+            continue;
+        };
+        if value > ceiling + 1e-12 {
+            failures.push(format!(
+                "{what} {value:.4} exceeds the baseline ceiling {ceiling:.4}"
+            ));
+        } else {
+            passed.push(format!("{what} {value:.4} ≤ ceiling {ceiling:.4}"));
+        }
+    }
+
+    match current
+        .get("grid")
+        .and_then(|g| g.get("gamma_accuracy_identical"))
+        .and_then(Json::as_bool)
+    {
+        Some(true) => passed.push("cross-γ seeding left every cell's accuracy unchanged".into()),
+        Some(false) => failures.push(
+            "gamma_accuracy_identical is false: cross-γ seeding changed a cell's accuracy".into(),
+        ),
+        None => failures.push("current bench lacks a boolean grid.gamma_accuracy_identical".into()),
+    }
+
+    if failures.is_empty() {
+        Ok(passed)
+    } else {
+        Err(failures)
+    }
+}
+
+/// Markdown rendering of one [`check_grid_regression`] comparison — the
+/// `BENCHGATE_grid.md` artifact CI uploads. One row per gated ratio
+/// (current value and the baseline ceiling), the accuracy-identity line,
+/// and the overall verdict. Purely a rendering of the gated fields; it
+/// never alters the gate outcome.
+pub fn render_grid_gate_report(
+    current_name: &str,
+    baseline_name: &str,
+    current: &Json,
+    baseline: &Json,
+) -> String {
+    let field = |doc: &Json, key: &str| -> Option<f64> { doc.get("grid")?.get(key)?.as_f64() };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Grid gate: `{current_name}` vs `{baseline_name}`\n\n"
+    ));
+    if baseline.get("grid").and_then(Json::as_obj).is_none() {
+        out.push_str("**FAIL** — baseline has no `grid` object\n");
+        return out;
+    }
+    out.push_str("| check | current | ceiling | status |\n");
+    out.push_str("|-------|--------:|--------:|--------|\n");
+    for (label, ceiling_key, value_key) in [
+        (
+            "halving iter fraction",
+            "max_halving_fraction",
+            "halving_iter_fraction",
+        ),
+        ("γ-seeded ratio", "max_gamma_ratio", "gamma_seeded_ratio"),
+    ] {
+        let (cells, ok) = match (field(current, value_key), field(baseline, ceiling_key)) {
+            (Some(v), Some(c)) => (format!("{v:.4} | {c:.4}"), v <= c + 1e-12),
+            (None, Some(c)) => (format!("missing | {c:.4}"), false),
+            (_, None) => ("— | missing".to_string(), false),
+        };
+        out.push_str(&format!(
+            "| {label} | {cells} | {} |\n",
+            if ok { "PASS" } else { "**FAIL**" }
+        ));
+    }
+    let identity = current
+        .get("grid")
+        .and_then(|g| g.get("gamma_accuracy_identical"))
+        .and_then(Json::as_bool);
+    out.push_str(&format!(
+        "| γ-seeding accuracy identity | {} | true | {} |\n",
+        match identity {
+            Some(b) => b.to_string(),
+            None => "missing".into(),
+        },
+        if identity == Some(true) {
+            "PASS"
+        } else {
+            "**FAIL**"
+        }
+    ));
+    out.push('\n');
+    match check_grid_regression(current, baseline) {
+        Ok(passed) => {
+            out.push_str(&format!("**verdict: PASS** ({} checks)\n", passed.len()));
+        }
+        Err(failures) => {
+            out.push_str(&format!(
+                "**verdict: FAIL** ({} regression{})\n\n",
+                failures.len(),
+                if failures.len() == 1 { "" } else { "s" }
+            ));
+            for f in &failures {
+                out.push_str(&format!("- {f}\n"));
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1010,5 +1169,111 @@ mod tests {
         );
         assert!(md.contains("**verdict: FAIL**"), "{md}");
         assert!(md.contains("latency target"), "{md}");
+    }
+
+    fn grid_doc(halving: f64, gamma: f64, identical: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{"grid": {{
+                "halving_iter_fraction": {halving},
+                "gamma_seeded_ratio": {gamma},
+                "gamma_accuracy_identical": {identical}
+            }}}}"#
+        ))
+        .unwrap()
+    }
+
+    fn grid_baseline() -> Json {
+        Json::parse(
+            r#"{"grid": {"max_halving_fraction": 0.95, "max_gamma_ratio": 1.25}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn grid_gate_passes_under_ceilings() {
+        let passed =
+            check_grid_regression(&grid_doc(0.6, 1.0, true), &grid_baseline()).unwrap();
+        assert_eq!(passed.len(), 3, "{passed:?}");
+        assert!(passed.iter().any(|p| p.contains("halving")));
+        assert!(passed.iter().any(|p| p.contains("accuracy")));
+    }
+
+    #[test]
+    fn grid_gate_fails_over_either_ceiling() {
+        let failures =
+            check_grid_regression(&grid_doc(0.99, 1.0, true), &grid_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("halving-vs-uniform")),
+            "{failures:?}"
+        );
+        let failures =
+            check_grid_regression(&grid_doc(0.6, 1.5, true), &grid_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("γ-seeded-vs-cold")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn grid_gate_requires_accuracy_identity() {
+        let failures =
+            check_grid_regression(&grid_doc(0.6, 1.0, false), &grid_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("changed a cell's accuracy")),
+            "{failures:?}"
+        );
+        // missing field is a coverage loss, not a pass
+        let no_flag = Json::parse(
+            r#"{"grid": {"halving_iter_fraction": 0.6, "gamma_seeded_ratio": 1.0}}"#,
+        )
+        .unwrap();
+        let failures = check_grid_regression(&no_flag, &grid_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("gamma_accuracy_identical")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn grid_gate_rejects_malformed_documents() {
+        let empty = Json::parse("{}").unwrap();
+        assert!(check_grid_regression(&grid_doc(0.6, 1.0, true), &empty).is_err());
+        let no_ceiling = Json::parse(r#"{"grid": {"max_halving_fraction": 0.95}}"#).unwrap();
+        let failures =
+            check_grid_regression(&grid_doc(0.6, 1.0, true), &no_ceiling).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("max_gamma_ratio")),
+            "{failures:?}"
+        );
+        let missing_value = Json::parse(r#"{"grid": {"gamma_accuracy_identical": true}}"#).unwrap();
+        let failures = check_grid_regression(&missing_value, &grid_baseline()).unwrap_err();
+        assert!(
+            failures.iter().any(|f| f.contains("halving_iter_fraction")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn grid_report_renders_pass_and_fail() {
+        let md = render_grid_gate_report(
+            "BENCH_grid.json",
+            "BENCH_grid.baseline.json",
+            &grid_doc(0.6, 1.0, true),
+            &grid_baseline(),
+        );
+        assert!(md.contains("## Grid gate"), "{md}");
+        assert!(md.contains("halving iter fraction"), "{md}");
+        assert!(md.contains("0.6000"), "{md}");
+        assert!(md.contains("**verdict: PASS**"), "{md}");
+        assert!(!md.contains("**FAIL**"), "{md}");
+
+        let md = render_grid_gate_report(
+            "BENCH_grid.json",
+            "BENCH_grid.baseline.json",
+            &grid_doc(0.99, 1.5, false),
+            &grid_baseline(),
+        );
+        assert!(md.contains("**verdict: FAIL**"), "{md}");
+        assert!(md.contains("exceeds the baseline ceiling"), "{md}");
     }
 }

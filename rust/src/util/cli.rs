@@ -4,6 +4,8 @@
 //! `--flag`, `--key value`, and `--key=value` options plus positional
 //! arguments, with typed accessors and "unknown flag" diagnostics.
 
+use crate::config::RunProfile;
+use crate::kernel::CacheDtype;
 use std::collections::BTreeMap;
 
 /// Training objective selected by `--task` (the three LibSVM core
@@ -223,6 +225,50 @@ impl Args {
     }
 }
 
+/// Parse the shared solver/runtime flags into a [`RunProfile`] — the one
+/// place the CLI surface for these knobs is defined, so every subcommand
+/// accepts the same spelling:
+///
+/// ```text
+/// --solver-eps <f>     SMO stopping tolerance
+/// --no-shrinking       disable LibSVM-style shrinking
+/// --cache-mb <int>     solver kernel-cache budget (MiB)
+/// --seed-cache-mb <int> seeding-cache / shared-row-store budget (MiB)
+/// --seed <int>         fold-partition + seeding RNG seed
+/// --threads <int>      worker threads (0 = auto); never changes results
+/// --no-carry           disable the cross-fold active-set carry-over
+/// --cache-f32          store kernel-cache rows as f32
+/// --no-share-rows      private kernel caches instead of per-γ sharing
+/// ```
+///
+/// Flags left unset keep `defaults`' values, so each subcommand passes
+/// the profile its driver historically defaulted to.
+pub fn run_profile(args: &Args, defaults: RunProfile) -> Result<RunProfile, CliError> {
+    let mut p = defaults;
+    p = p.with_eps(args.parse_or("solver-eps", p.eps)?);
+    if args.flag("no-shrinking") {
+        p = p.with_shrinking(false);
+    }
+    if let Some(mb) = args.opt_parse::<usize>("cache-mb")? {
+        p = p.with_cache_bytes(mb << 20);
+    }
+    if let Some(mb) = args.opt_parse::<usize>("seed-cache-mb")? {
+        p = p.with_seed_cache_bytes(mb << 20);
+    }
+    p = p.with_rng_seed(args.parse_or("seed", p.rng_seed)?);
+    p = p.with_threads(args.parse_or("threads", p.threads)?);
+    if args.flag("no-carry") {
+        p = p.with_carry_active_set(false);
+    }
+    if args.flag("cache-f32") {
+        p = p.with_cache_dtype(CacheDtype::F32);
+    }
+    if args.flag("no-share-rows") {
+        p = p.with_share_rows(false);
+    }
+    Ok(p)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +336,44 @@ mod tests {
         let _ = a.opt_str("dataset");
         let err = a.reject_unknown().unwrap_err();
         assert!(err.to_string().contains("--gama"));
+    }
+
+    #[test]
+    fn run_profile_defaults_pass_through() {
+        let a = parse("cv --dataset heart");
+        let p = run_profile(&a, RunProfile::default()).unwrap();
+        assert_eq!(p, RunProfile::default());
+        // subcommand-specific defaults survive unset flags
+        let grid_default = RunProfile::default().with_seed_cache_bytes(64 << 20);
+        let q = run_profile(&a, grid_default).unwrap();
+        assert_eq!(q.seed_cache_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn run_profile_parses_every_flag() {
+        let a = parse(
+            "grid --solver-eps 1e-6 --no-shrinking --cache-mb 32 --seed-cache-mb 16 \
+             --seed 7 --threads 3 --no-carry --cache-f32 --no-share-rows",
+        );
+        let p = run_profile(&a, RunProfile::default()).unwrap();
+        assert_eq!(p.eps, 1e-6);
+        assert!(!p.shrinking);
+        assert_eq!(p.cache_bytes, 32 << 20);
+        assert_eq!(p.seed_cache_bytes, 16 << 20);
+        assert_eq!(p.rng_seed, 7);
+        assert_eq!(p.threads, 3);
+        assert!(!p.carry_active_set);
+        assert_eq!(p.cache_dtype, CacheDtype::F32);
+        assert!(!p.share_rows);
+    }
+
+    #[test]
+    fn run_profile_bad_value_diagnostic() {
+        let a = parse("cv --cache-mb lots");
+        assert!(matches!(
+            run_profile(&a, RunProfile::default()),
+            Err(CliError::BadValue { .. })
+        ));
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! The budget scheduler's contract (docs/ARCHITECTURE.md §3.8):
+//!
+//! * `BudgetPolicy::Uniform` is a pure refactor — every cell matches a
+//!   direct per-cell CV run bit-for-bit, for both tasks and across
+//!   seeders.
+//! * Successive halving reallocates *rounds*, never changes what a round
+//!   computes: the promoted winner's full-k metrics equal the uniform
+//!   sweep's for that cell, and the sweep as a whole spends fewer
+//!   iterations.
+//! * Cross-γ seeding (docs/SEEDING.md §8) moves iteration counts only —
+//!   per-cell accuracy/MSE are unchanged — and its projection always
+//!   lands on the dual-feasible set.
+//! * The unsupported policy/edge compositions are rejected loudly.
+
+use alphaseed::config::RunProfile;
+use alphaseed::coordinator::{
+    grid_search_opts, grid_search_svr, BudgetPolicy, GridOptions,
+};
+use alphaseed::cv::{run_kfold, run_kfold_svr, CvOptions};
+use alphaseed::data::synth;
+use alphaseed::kernel::Kernel;
+use alphaseed::multiclass::synth_blobs;
+use alphaseed::seeding::gamma::{project_alpha_csvc, project_delta_svr};
+use alphaseed::seeding::svr::{check_feasible_delta, svr_seeder_by_name};
+use alphaseed::seeding::{check_feasible, seeder_by_name};
+
+const CS: [f64; 2] = [1.0, 8.0];
+const GAMMAS: [f64; 2] = [0.1, 0.3];
+
+fn grid_opts(seeder: &str) -> GridOptions {
+    GridOptions {
+        k: 3,
+        seeder: seeder.into(),
+        ..Default::default()
+    }
+}
+
+/// Uniform policy, C-SVC: every grid cell is bit-identical to a direct
+/// `run_kfold` with the same profile — across cold and seeded chains.
+#[test]
+fn uniform_csvc_grid_matches_direct_per_cell_runs() {
+    let ds = synth::generate("heart", Some(110), 7);
+    for seeder_name in ["cold", "sir"] {
+        let g = grid_search_opts(&ds, &CS, &GAMMAS, &grid_opts(seeder_name));
+        assert_eq!(g.points.len(), CS.len() * GAMMAS.len());
+        for p in &g.points {
+            let seeder = seeder_by_name(seeder_name).unwrap();
+            let direct = run_kfold(
+                &ds,
+                Kernel::rbf(p.gamma),
+                p.c,
+                3,
+                seeder.as_ref(),
+                CvOptions {
+                    profile: GridOptions::default().profile,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(
+                p.accuracy.to_bits(),
+                direct.accuracy().to_bits(),
+                "{seeder_name} C={} γ={}",
+                p.c,
+                p.gamma
+            );
+            assert_eq!(p.iterations, direct.total_iterations());
+            assert_eq!(p.rounds, direct.rounds.len());
+        }
+    }
+}
+
+/// Uniform policy, ε-SVR: same per-cell identity on MSE and iterations.
+#[test]
+fn uniform_svr_grid_matches_direct_per_cell_runs() {
+    let ds = synth::generate_regression("sinc", Some(80), 7);
+    let g = grid_search_svr(&ds, &[1.0, 10.0], &[0.05], &[0.3, 0.6], &grid_opts("sir"));
+    assert_eq!(g.points.len(), 4);
+    for p in &g.points {
+        let seeder = svr_seeder_by_name("sir").unwrap();
+        let direct = run_kfold_svr(
+            &ds,
+            Kernel::rbf(p.gamma),
+            p.c,
+            p.epsilon,
+            3,
+            seeder.as_ref(),
+            CvOptions {
+                profile: GridOptions::default().profile,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.mse.to_bits(), direct.mse().to_bits());
+        assert_eq!(p.iterations, direct.total_iterations());
+    }
+}
+
+/// Successive halving promotes exactly one cell to all k folds, and that
+/// winner's full-k metrics are the uniform sweep's for the same cell —
+/// pausing and resuming a chain never changes what its rounds compute.
+/// The eliminated cells make the halving sweep cheaper overall.
+#[test]
+fn halving_winner_matches_the_uniform_sweep_cell() {
+    let ds = synth::generate("heart", Some(100), 11);
+    let cs = [0.5, 2.0, 8.0];
+    let uniform = grid_search_opts(&ds, &cs, &GAMMAS, &grid_opts("sir"));
+    let halved = grid_search_opts(
+        &ds,
+        &cs,
+        &GAMMAS,
+        &GridOptions {
+            policy: BudgetPolicy::SuccessiveHalving {
+                eta: 2,
+                min_rounds: 1,
+            },
+            ..grid_opts("sir")
+        },
+    );
+    let winner = halved.best();
+    assert_eq!(winner.rounds, 3, "the winner must hold the full k folds");
+    assert!(
+        halved.points.iter().any(|p| p.rounds < 3),
+        "halving must actually eliminate cells early"
+    );
+    let full = uniform
+        .points
+        .iter()
+        .find(|p| p.c == winner.c && p.gamma == winner.gamma)
+        .expect("winner cell exists in the uniform sweep");
+    assert_eq!(winner.accuracy.to_bits(), full.accuracy.to_bits());
+    assert_eq!(winner.iterations, full.iterations);
+    let total = |points: &[alphaseed::coordinator::GridPoint]| {
+        points.iter().map(|p| p.iterations).sum::<u64>()
+    };
+    assert!(
+        total(&halved.points) <= total(&uniform.points),
+        "halving spent more iterations than the uniform sweep"
+    );
+}
+
+/// Cross-γ seeding at a tight solver tolerance: per-cell accuracy is
+/// exactly the cold grid's — the projection moves the solver's start,
+/// never its fixed point.
+#[test]
+fn cross_gamma_seeding_preserves_csvc_accuracy_at_tight_eps() {
+    let ds = synth::generate("heart", Some(100), 5);
+    let opts = |seed_gamma| GridOptions {
+        profile: GridOptions::default().profile.with_eps(1e-6),
+        seed_gamma,
+        ..grid_opts("sir")
+    };
+    let cold = grid_search_opts(&ds, &CS, &[0.1, 0.2, 0.4], &opts(false));
+    let seeded = grid_search_opts(&ds, &CS, &[0.1, 0.2, 0.4], &opts(true));
+    for (a, b) in cold.points.iter().zip(&seeded.points) {
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.gamma, b.gamma);
+        assert_eq!(
+            a.accuracy, b.accuracy,
+            "γ-seeding changed accuracy at C={} γ={}",
+            a.c, a.gamma
+        );
+    }
+    assert_eq!(cold.best().c, seeded.best().c);
+    assert_eq!(cold.best().gamma, seeded.best().gamma);
+}
+
+/// Same contract on the regression grid, on CV MSE.
+#[test]
+fn cross_gamma_seeding_preserves_svr_mse_at_tight_eps() {
+    let ds = synth::generate_regression("sinc", Some(70), 5);
+    let opts = |seed_gamma| GridOptions {
+        profile: GridOptions::default().profile.with_eps(1e-6),
+        seed_gamma,
+        ..grid_opts("sir")
+    };
+    let cold = grid_search_svr(&ds, &[1.0, 10.0], &[0.05], &[0.3, 0.5, 0.8], &opts(false));
+    let seeded = grid_search_svr(&ds, &[1.0, 10.0], &[0.05], &[0.3, 0.5, 0.8], &opts(true));
+    for (a, b) in cold.points.iter().zip(&seeded.points) {
+        assert!(
+            (a.mse - b.mse).abs() < 1e-6,
+            "γ-seeding moved MSE at C={} ε={} γ={}: {} vs {}",
+            a.c,
+            a.epsilon,
+            a.gamma,
+            a.mse,
+            b.mse
+        );
+    }
+}
+
+/// Property: the cross-γ projections land on the dual-feasible set for
+/// arbitrary donors — random alphas (not even feasible at the donor's
+/// C), random labels, shrinking and growing boxes.
+#[test]
+fn gamma_projection_is_always_feasible() {
+    // xorshift64* — deterministic, no external crates
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut next = move || {
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        state = state.wrapping_mul(0x2545f4914f6cdd1d);
+        (state >> 11) as f64 / (1u64 << 53) as f64
+    };
+    for trial in 0..60 {
+        let n = 8 + (trial % 24);
+        let c_donor = [0.5, 2.0, 16.0][trial % 3];
+        let c_new = [0.25, 1.0, 4.0][(trial / 3) % 3];
+        let y: Vec<f64> = (0..n)
+            .map(|_| if next() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let alpha: Vec<f64> = (0..n).map(|_| next() * c_donor * 1.2).collect();
+        if let Some(p) = project_alpha_csvc(&alpha, &y, c_new) {
+            check_feasible(&p, &y, c_new)
+                .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        } else {
+            // `None` is only legitimate when the box genuinely cannot
+            // reach Σyα = 0, i.e. one label class is absent.
+            assert!(
+                y.iter().all(|&l| l == y[0]),
+                "trial {trial}: projection gave up on a balanced-label donor"
+            );
+        }
+        let delta: Vec<f64> = (0..n).map(|_| (next() * 2.0 - 1.0) * c_donor * 1.2).collect();
+        let p = project_delta_svr(&delta, c_new)
+            .unwrap_or_else(|| panic!("trial {trial}: δ target 0 is always reachable"));
+        check_feasible_delta(&p, c_new).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+    }
+}
+
+#[test]
+#[should_panic(expected = "cannot compose")]
+fn warm_c_and_seed_gamma_are_rejected() {
+    let ds = synth::generate("heart", Some(60), 1);
+    let _ = grid_search_opts(
+        &ds,
+        &CS,
+        &GAMMAS,
+        &GridOptions {
+            warm_c: true,
+            seed_gamma: true,
+            ..grid_opts("sir")
+        },
+    );
+}
+
+#[test]
+#[should_panic(expected = "cannot compose")]
+fn halving_with_warm_c_is_rejected() {
+    let ds = synth::generate("heart", Some(60), 1);
+    let _ = grid_search_opts(
+        &ds,
+        &CS,
+        &GAMMAS,
+        &GridOptions {
+            warm_c: true,
+            policy: BudgetPolicy::SuccessiveHalving {
+                eta: 2,
+                min_rounds: 1,
+            },
+            ..grid_opts("sir")
+        },
+    );
+}
+
+#[test]
+#[should_panic(expected = "not supported for multiclass")]
+fn ovo_grid_rejects_halving() {
+    let mds = synth_blobs(60, 3, 3, 2.0, 1);
+    let _ = alphaseed::coordinator::grid_search_ovo(
+        &mds,
+        &CS,
+        &GAMMAS,
+        &GridOptions {
+            policy: BudgetPolicy::SuccessiveHalving {
+                eta: 2,
+                min_rounds: 1,
+            },
+            ..grid_opts("sir")
+        },
+    );
+}
+
+/// The CLI-visible profile plumbing composes with the scheduler: a grid
+/// run under a custom profile (tight eps, f32 rows off, explicit seed)
+/// stays deterministic run to run.
+#[test]
+fn grid_is_deterministic_under_a_custom_profile() {
+    let ds = synth::generate("heart", Some(90), 2);
+    let run = || {
+        grid_search_opts(
+            &ds,
+            &CS,
+            &GAMMAS,
+            &GridOptions {
+                profile: RunProfile::default()
+                    .with_seed_cache_bytes(8 << 20)
+                    .with_rng_seed(23)
+                    .with_share_rows(false),
+                ..grid_opts("sir")
+            },
+        )
+    };
+    let (a, b) = (run(), run());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.accuracy.to_bits(), pb.accuracy.to_bits());
+        assert_eq!(pa.iterations, pb.iterations);
+    }
+}

@@ -100,7 +100,7 @@ fn cv_deterministic_under_seed() {
             5,
             &Sir,
             CvOptions {
-                rng_seed: seed,
+                profile: alphaseed::config::RunProfile::default().with_rng_seed(seed),
                 ..Default::default()
             },
         )

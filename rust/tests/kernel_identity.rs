@@ -263,7 +263,7 @@ fn f32_tier_cv_accuracy_identical() {
             5,
             &Sir,
             CvOptions {
-                cache_dtype: dtype,
+                profile: alphaseed::config::RunProfile::default().with_cache_dtype(dtype),
                 ..Default::default()
             },
         )
@@ -301,7 +301,7 @@ fn f32_tier_svr_cv_mse_epsilon_close() {
             5,
             seeder.as_ref(),
             CvOptions {
-                cache_dtype: dtype,
+                profile: alphaseed::config::RunProfile::default().with_cache_dtype(dtype),
                 ..Default::default()
             },
         )
@@ -326,8 +326,8 @@ fn f32_tier_grid_accuracy_identical() {
             &[1.0, 10.0],
             &[0.2, 0.8],
             &GridOptions {
+                profile: GridOptions::default().profile.with_cache_dtype(dtype),
                 k: 3,
-                cache_dtype: dtype,
                 ..Default::default()
             },
         )

@@ -8,9 +8,11 @@ use alphaseed::seeding::{seeder_by_name, ColdStart, Sir};
 
 fn opts(threads: usize, share_rows: bool) -> OvoOptions {
     OvoOptions {
-        threads,
-        share_rows,
-        rng_seed: 42,
+        profile: OvoOptions::default()
+            .profile
+            .with_threads(threads)
+            .with_share_rows(share_rows)
+            .with_rng_seed(42),
         ..Default::default()
     }
 }
@@ -71,9 +73,11 @@ fn seeded_matches_cold_accuracy_per_pair_at_tight_eps() {
     // a tight tolerance pins each pair's fixed point so the discrete
     // accuracy comparison cannot flip on a boundary-grazing decision
     let tight = |threads| OvoOptions {
-        eps: 1e-6,
-        threads,
-        rng_seed: 42,
+        profile: OvoOptions::default()
+            .profile
+            .with_eps(1e-6)
+            .with_threads(threads)
+            .with_rng_seed(42),
         ..Default::default()
     };
     let cold = cv_ovo_opts(&ds, Kernel::rbf(0.5), 10.0, 5, &ColdStart, &tight(0));

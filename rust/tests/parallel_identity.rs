@@ -35,9 +35,9 @@ fn facts(points: &[alphaseed::coordinator::GridPoint]) -> Vec<(u64, u64, u64, u6
 fn parallel_grid_sweep_is_bit_identical_to_sequential() {
     let ds = synth::generate("heart", Some(150), 21);
     let base = GridOptions {
+        profile: GridOptions::default().profile.with_rng_seed(13),
         k: 4,
         seeder: "sir".into(),
-        rng_seed: 13,
         ..Default::default()
     };
     let sequential = grid_search_opts(
@@ -45,8 +45,7 @@ fn parallel_grid_sweep_is_bit_identical_to_sequential() {
         &CS,
         &GAMMAS,
         &GridOptions {
-            threads: 1,
-            share_rows: false,
+            profile: base.profile.with_threads(1).with_share_rows(false),
             ..base.clone()
         },
     );
@@ -55,8 +54,7 @@ fn parallel_grid_sweep_is_bit_identical_to_sequential() {
         &CS,
         &GAMMAS,
         &GridOptions {
-            threads: 8,
-            share_rows: true,
+            profile: base.profile.with_threads(8).with_share_rows(true),
             ..base
         },
     );
@@ -78,11 +76,13 @@ fn warm_c_grid_is_bit_identical_across_thread_counts() {
             &CS,
             &GAMMAS,
             &GridOptions {
+                profile: GridOptions::default()
+                    .profile
+                    .with_rng_seed(7)
+                    .with_threads(threads),
                 k: 3,
                 seeder: "sir".into(),
-                rng_seed: 7,
                 warm_c: true,
-                threads,
                 ..Default::default()
             },
         )
@@ -106,8 +106,9 @@ fn seeded_cv_rounds_identical_across_thread_counts() {
             4,
             &Sir,
             CvOptions {
-                rng_seed: 19,
-                threads,
+                profile: alphaseed::config::RunProfile::default()
+                    .with_rng_seed(19)
+                    .with_threads(threads),
                 ..Default::default()
             },
         )

@@ -248,9 +248,10 @@ fn csvc_cv_carry_on_off_identical_accuracy() {
                     4,
                     seeder.as_ref(),
                     CvOptions {
-                        eps: 1e-6,
-                        rng_seed,
-                        carry_active_set: carry,
+                        profile: alphaseed::config::RunProfile::default()
+                            .with_eps(1e-6)
+                            .with_rng_seed(rng_seed)
+                            .with_carry_active_set(carry),
                         ..Default::default()
                     },
                 )
@@ -282,9 +283,10 @@ fn svr_cv_carry_on_off_identical_mse() {
                     4,
                     seeder.as_ref(),
                     CvOptions {
-                        eps: 1e-6,
-                        rng_seed,
-                        carry_active_set: carry,
+                        profile: alphaseed::config::RunProfile::default()
+                            .with_eps(1e-6)
+                            .with_rng_seed(rng_seed)
+                            .with_carry_active_set(carry),
                         ..Default::default()
                     },
                 )
@@ -313,8 +315,9 @@ fn oneclass_cv_carry_on_off_identical_accuracy() {
             4,
             true,
             CvOptions {
-                eps: 1e-6,
-                carry_active_set: carry,
+                profile: alphaseed::config::RunProfile::default()
+                    .with_eps(1e-6)
+                    .with_carry_active_set(carry),
                 ..Default::default()
             },
         )

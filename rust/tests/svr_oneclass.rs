@@ -18,7 +18,7 @@ use alphaseed::seeding::svr::{svr_seeder_by_name, ALL_SVR_SEEDERS};
 
 fn tight_opts() -> CvOptions<'static> {
     CvOptions {
-        eps: 1e-6,
+        profile: alphaseed::config::RunProfile::default().with_eps(1e-6),
         ..Default::default()
     }
 }
@@ -157,10 +157,12 @@ fn svr_grid_is_seeder_invariant_on_mse() {
             &[0.05],
             &[0.5],
             &GridOptions {
+                profile: GridOptions::default()
+                    .profile
+                    .with_threads(2)
+                    .with_rng_seed(9),
                 k: 3,
                 seeder: seeder.into(),
-                threads: 2,
-                rng_seed: 9,
                 ..Default::default()
             },
         )
