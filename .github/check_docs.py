@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Docs consistency gate.
+
+Two checks, run from the repo root:
+
+1. every relative markdown link in README.md and docs/*.md resolves to a
+   file that exists;
+2. every "FOO.md §N[.M]" citation — in the markdown docs *and* in the
+   Rust sources' rustdoc/comments/error strings — names a numbered
+   heading that actually exists in docs/FOO.md, so renumbering a section
+   without chasing its references fails CI instead of rotting silently.
+"""
+
+import pathlib
+import re
+import sys
+
+errors = []
+
+markdown = [pathlib.Path("README.md"), *sorted(pathlib.Path("docs").glob("*.md"))]
+
+# 1. relative links: [text](target) with URLs and pure anchors skipped
+link = re.compile(r"\]\(([^)#\s]+)(?:#[^)]*)?\)")
+for md in markdown:
+    for m in link.finditer(md.read_text()):
+        target = m.group(1)
+        if "://" in target:
+            continue
+        if not (md.parent / target).exists():
+            errors.append(f"{md}: broken link {target}")
+
+# 2. numbered headings per doc: "## 3. Title" / "### 3.9 Title" -> "3"/"3.9"
+heading = re.compile(r"^#+\s+(\d+(?:\.\d+)*)", re.M)
+headings = {
+    md.name: set(heading.findall(md.read_text()))
+    for md in pathlib.Path("docs").glob("*.md")
+}
+
+# citations: the doc name with at most a few punctuation chars before the §
+cite = re.compile(r"([A-Z][A-Z_]*\.md)[^\n§]{0,20}§\s*(\d+(?:\.\d+)*)")
+sources = markdown + [
+    *sorted(pathlib.Path("rust/src").rglob("*.rs")),
+    *sorted(pathlib.Path("rust/tests").rglob("*.rs")),
+]
+for f in sources:
+    for name, sec in cite.findall(f.read_text()):
+        if name not in headings:
+            errors.append(f"{f}: cites {name}, which is not in docs/")
+        elif sec not in headings[name]:
+            errors.append(f"{f}: cites {name} §{sec}, but that heading does not exist")
+
+if errors:
+    print("\n".join(errors))
+    sys.exit(1)
+count = sum(len(s) for s in headings.values())
+print(f"docs check clean ({len(markdown)} markdown files, {count} numbered headings)")

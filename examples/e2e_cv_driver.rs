@@ -8,7 +8,7 @@
 //! d=123, C=100, γ=0.5 — Table 2's row) twice: cold-start (the LibSVM
 //! baseline) and SIR-seeded, with the warm-start gradient and test-fold
 //! decision values served by the AOT artifacts when present, and prints
-//! the paper-style comparison. Recorded in EXPERIMENTS.md §E2E.
+//! the paper-style comparison.
 //!
 //!     make artifacts && cargo run --release --example e2e_cv_driver
 

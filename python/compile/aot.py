@@ -7,7 +7,7 @@ which `rust/src/runtime/manifest.rs` consumes. HLO **text** (never
 `.serialize()`): jax >= 0.5 writes HloModuleProto with 64-bit instruction
 ids that the rust crate's xla_extension 0.5.1 rejects; the text parser
 reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
-DESIGN.md §2).
+docs/ARCHITECTURE.md §4).
 
 Python runs only here, at build time. The output directory is the entire
 interface to the rust runtime.

@@ -7,8 +7,8 @@ HBM -- only the [TILE_N] partial result leaves VMEM per step.
 
 VMEM at the largest bucket (n=2048, m=2048, d=784, TILE_N=512):
 W 2048*784*4 = 6.4 MiB resident + X tile 1.6 MiB + K tile 512*2048*4 =
-4 MiB intermediate -- ~12 MiB, inside the 16 MiB budget (documented in
-DESIGN.md; larger m would need an m-tiled accumulation loop).
+4 MiB intermediate -- ~12 MiB, inside the 16 MiB budget (larger m
+would need an m-tiled accumulation loop).
 """
 
 import functools

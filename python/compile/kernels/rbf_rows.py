@@ -1,6 +1,6 @@
 """Layer-1 Pallas kernel: a block of Gaussian-kernel rows K(Q, X).
 
-TPU mapping of the paper's hot spot (DESIGN.md §Hardware-Adaptation):
+TPU mapping of the paper's hot spot:
 the paper's C++ solver computes kernel rows on a CPU with cache blocking;
 here the same computation is tiled for VMEM with the -2*Q@X^T inner
 product on the MXU (jnp.dot with f32 accumulation) and the norm/exp

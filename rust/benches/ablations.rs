@@ -1,4 +1,4 @@
-//! Ablation benches (DESIGN.md experiment index A1–A3):
+//! Ablation benches (A1–A3):
 //!
 //! - A1: backend routing — bulk block size where the PJRT artifact
 //!   overtakes the native path.

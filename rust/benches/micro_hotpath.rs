@@ -1,4 +1,4 @@
-//! Micro-benchmarks of the hot paths (§Perf, EXPERIMENTS.md):
+//! Micro-benchmarks of the hot paths:
 //!
 //! - vectorized row fills vs the retained naive reference (the gated set)
 //! - kernel row evaluation (dense vs sparse, cached vs cold)
@@ -213,7 +213,7 @@ fn smo_iteration_bench() {
         let mut solver = Solver::new(eval.clone(), SmoParams::with_c(2182.0));
         solver.solve().iterations
     });
-    // per-iteration figure for EXPERIMENTS.md
+    // per-iteration figure for the perf record
     let mut solver = Solver::new(eval.clone(), SmoParams::with_c(2182.0));
     let iters = solver.solve().iterations;
     println!(

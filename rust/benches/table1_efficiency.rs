@@ -3,7 +3,7 @@
 //! Runs the full dataset × {cold, ato, mir, sir} grid at a bench-friendly
 //! scale and prints the paper-shaped table. Scale via
 //! `ALPHASEED_BENCH_SCALE` (default 0.25 of the sandbox defaults; the
-//! EXPERIMENTS.md record uses `alphaseed experiment table1` at scale 1.0).
+//! full-scale record comes from `alphaseed experiment table1`).
 //!
 //! Besides the human-readable table, the run emits a machine-readable
 //! `BENCH_cv.json` (override the path with `ALPHASEED_BENCH_OUT`): per

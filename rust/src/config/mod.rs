@@ -3,8 +3,9 @@
 //!
 //! A config file fixes a whole experiment suite (which datasets, sizes,
 //! hyper-parameters, seeders, k values); the CLI can override any scalar.
-//! JSON is used because the in-repo parser (`util::json`) already exists —
-//! see DESIGN.md §4 on the offline-registry substitutions.
+//! JSON is used because the in-repo parser (`util::json`) already exists
+//! (a documented offline-registry substitution — README.md "Offline-build
+//! notes").
 
 mod profile;
 

@@ -17,6 +17,7 @@
 //! for a given subcommand (see `util::cli::run_profile`).
 
 use crate::kernel::CacheDtype;
+use crate::util::json::Json;
 
 /// Solver and runtime configuration shared by all CV-style drivers.
 ///
@@ -133,6 +134,69 @@ impl RunProfile {
         self.cache_dtype = dtype;
         self
     }
+
+    /// Serialize for the worker wire protocol (docs/DISTRIBUTED.md §3).
+    ///
+    /// `rng_seed` crosses as a **decimal string**, not a JSON number: the
+    /// hand-rolled JSON layer stores numbers as `f64`, which silently
+    /// rounds integers above 2⁵³ — and a rounded seed would desync fold
+    /// partitions between driver and worker without any error.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("eps", Json::num(self.eps)),
+            ("shrinking", Json::Bool(self.shrinking)),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("seed_cache_bytes", Json::num(self.seed_cache_bytes as f64)),
+            ("rng_seed", Json::str(self.rng_seed.to_string())),
+            ("threads", Json::num(self.threads as f64)),
+            ("share_rows", Json::Bool(self.share_rows)),
+            ("carry_active_set", Json::Bool(self.carry_active_set)),
+            (
+                "cache_dtype",
+                Json::str(match self.cache_dtype {
+                    CacheDtype::F64 => "f64",
+                    CacheDtype::F32 => "f32",
+                }),
+            ),
+        ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); every field is required.
+    pub fn from_json(v: &Json) -> Result<RunProfile, String> {
+        let f = |k: &str| v.get(k).ok_or_else(|| format!("profile: missing '{k}'"));
+        let num = |k: &str| {
+            f(k)?
+                .as_usize()
+                .ok_or_else(|| format!("profile: '{k}' must be a non-negative integer"))
+        };
+        let flag = |k: &str| {
+            f(k)?
+                .as_bool()
+                .ok_or_else(|| format!("profile: '{k}' must be a boolean"))
+        };
+        Ok(RunProfile {
+            eps: f("eps")?
+                .as_f64()
+                .ok_or_else(|| "profile: 'eps' must be a number".to_string())?,
+            shrinking: flag("shrinking")?,
+            cache_bytes: num("cache_bytes")?,
+            seed_cache_bytes: num("seed_cache_bytes")?,
+            rng_seed: f("rng_seed")?
+                .as_str()
+                .and_then(|s| s.parse::<u64>().ok())
+                .ok_or_else(|| {
+                    "profile: 'rng_seed' must be a decimal string (u64)".to_string()
+                })?,
+            threads: num("threads")?,
+            share_rows: flag("share_rows")?,
+            carry_active_set: flag("carry_active_set")?,
+            cache_dtype: match f("cache_dtype")?.as_str() {
+                Some("f64") => CacheDtype::F64,
+                Some("f32") => CacheDtype::F32,
+                _ => return Err("profile: 'cache_dtype' must be \"f64\" or \"f32\"".to_string()),
+            },
+        })
+    }
 }
 
 #[cfg(test)]
@@ -174,5 +238,31 @@ mod tests {
         assert!(!p.share_rows);
         assert!(!p.carry_active_set);
         assert_eq!(p.cache_dtype, CacheDtype::F32);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_large_seed() {
+        // 2^53 + 1 is not representable as f64 — the decimal-string wire
+        // format must carry it exactly
+        let p = RunProfile::default()
+            .with_rng_seed((1u64 << 53) + 1)
+            .with_eps(1e-6)
+            .with_threads(3)
+            .with_cache_dtype(CacheDtype::F32)
+            .with_share_rows(false);
+        let text = p.to_json().to_string();
+        let back = RunProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn json_missing_field_is_an_error() {
+        let mut obj = match RunProfile::default().to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("rng_seed");
+        let err = RunProfile::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(err.contains("rng_seed"), "{err}");
     }
 }

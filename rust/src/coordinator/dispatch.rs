@@ -1,0 +1,972 @@
+//! Multi-process grid dispatch: a TCP/JSON-lines worker that evaluates
+//! assigned grid cells, and a driver that partitions a uniform (C, γ)
+//! grid across a worker pool and collects the rows back
+//! (docs/DISTRIBUTED.md §3–§4).
+//!
+//! Protocol: one JSON object per line, one JSON object back.
+//!
+//! ```text
+//! → {"op":"ping"}
+//! ← {"ok":true,"role":"grid-worker"}
+//! → {"op":"grid","schedule":{"nodes":[…]},"c_values":[…],"gamma_values":[…],
+//!    "k":5,"seeder":"sir","profile":{…},"dataset":{"kind":"file","path":…},
+//!    "nodes":[0,3,6]}
+//! ← {"ok":true,"rows":[{"node":0,"c":…,"gamma":…,"accuracy":…,
+//!    "iterations":"1234","rounds":5,"elapsed_us":…},…]}
+//! → {"op":"shutdown"}
+//! ← {"ok":true}
+//! ```
+//!
+//! **Determinism.** A cell's CV result depends only on (dataset, C, γ, k,
+//! seeder, profile) — threads, row sharing, shard backing and process
+//! placement are pure compute levers. The driver therefore collects a
+//! grid that is bit-identical per cell to the single-process
+//! [`BudgetPolicy::Uniform`] sweep with the same profile
+//! (`tests/stream_shard.rs` pins it over live localhost workers). Both
+//! sides run the *same* [`ScheduleGraph`]: the driver serializes the
+//! graph it built and a worker never rebuilds edges from axis lists.
+//!
+//! Large integers cross the wire as decimal strings (`rng_seed` inside
+//! the profile, per-cell `iterations`): the hand-rolled JSON layer stores
+//! numbers as `f64`, which silently rounds above 2⁵³.
+//!
+//! **Failure semantics** (docs/DISTRIBUTED.md §4). A worker that cannot
+//! be reached, dies mid-request, or answers `{"ok":false}` forfeits its
+//! node groups; the driver reassigns them to surviving workers and, if
+//! none remain, computes the remainder in-process. A cell is never
+//! silently dropped — [`run_sharded_grid`] either returns every cell of
+//! the grid or an error.
+
+#![deny(missing_docs)]
+
+use super::grid::{GridOptions, GridPoint, GridResult};
+use super::schedule::{BudgetPolicy, ScheduleGraph};
+use crate::config::RunProfile;
+use crate::cv::CvOptions;
+use crate::data::{read_libsvm, synth, Dataset, ShardedDataset};
+use crate::kernel::{
+    Kernel, KernelEval, ShardRowSource, SharedKernelCache, DEFAULT_RESIDENT_SHARDS,
+};
+use crate::seeding::seeder_by_name;
+use crate::util::json::Json;
+use crate::util::pool::{effective_threads, scoped_map};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// How long [`GridWorker::serve`] waits for in-flight connections to
+/// finish their current responses before giving up the drain.
+const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Where a grid worker (or the driver's in-process fallback) gets its
+/// dataset. The spec crosses the wire, so it names *sources*, not
+/// in-memory data: a LibSVM file on storage every process can reach, or
+/// a synthetic generator that is deterministic in (name, n, seed).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    /// LibSVM file readable by every worker. With `shard_bytes` set, the
+    /// worker builds its per-γ row stores over a [`ShardedDataset`] of
+    /// roughly that many bytes per shard instead of an in-RAM evaluator —
+    /// bit-identical rows, bounded kernel-tier residency.
+    File {
+        /// Path as the workers see it.
+        path: String,
+        /// Shard byte target for the kernel row stores; `None` keeps the
+        /// in-RAM evaluator route.
+        shard_bytes: Option<usize>,
+    },
+    /// Synthetic analogue: `synth::generate(name, n, seed)`.
+    Synth {
+        /// Generator name (`heart`, `adult`, …).
+        name: String,
+        /// Cardinality override; `None` uses the spec default.
+        n: Option<usize>,
+        /// Generator RNG seed.
+        seed: u64,
+    },
+}
+
+impl DatasetSpec {
+    /// Serialize for the worker wire protocol. `seed` crosses as a
+    /// decimal string for the same 2⁵³ reason as
+    /// [`RunProfile::to_json`].
+    pub fn to_json(&self) -> Json {
+        match self {
+            DatasetSpec::File { path, shard_bytes } => {
+                let mut fields = vec![
+                    ("kind", Json::str("file")),
+                    ("path", Json::str(path.clone())),
+                ];
+                if let Some(b) = shard_bytes {
+                    fields.push(("shard_bytes", Json::num(*b as f64)));
+                }
+                Json::obj(fields)
+            }
+            DatasetSpec::Synth { name, n, seed } => {
+                let mut fields = vec![
+                    ("kind", Json::str("synth")),
+                    ("name", Json::str(name.clone())),
+                    ("seed", Json::str(seed.to_string())),
+                ];
+                if let Some(n) = n {
+                    fields.push(("n", Json::num(*n as f64)));
+                }
+                Json::obj(fields)
+            }
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Result<DatasetSpec, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "dataset: missing 'kind'".to_string())?;
+        match kind {
+            "file" => Ok(DatasetSpec::File {
+                path: v
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "dataset: missing 'path'".to_string())?
+                    .to_string(),
+                shard_bytes: match v.get("shard_bytes") {
+                    None | Some(Json::Null) => None,
+                    Some(b) => Some(b.as_usize().ok_or_else(|| {
+                        "dataset: 'shard_bytes' must be a non-negative integer".to_string()
+                    })?),
+                },
+            }),
+            "synth" => Ok(DatasetSpec::Synth {
+                name: v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "dataset: missing 'name'".to_string())?
+                    .to_string(),
+                n: match v.get("n") {
+                    None | Some(Json::Null) => None,
+                    Some(n) => Some(n.as_usize().ok_or_else(|| {
+                        "dataset: 'n' must be a non-negative integer".to_string()
+                    })?),
+                },
+                seed: v
+                    .get("seed")
+                    .and_then(Json::as_str)
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        "dataset: 'seed' must be a decimal string (u64)".to_string()
+                    })?,
+            }),
+            other => Err(format!("dataset: unknown kind '{other}' (file|synth)")),
+        }
+    }
+
+    /// Materialize the dataset this spec names.
+    pub fn load(&self) -> Result<Dataset> {
+        match self {
+            DatasetSpec::File { path, .. } => {
+                read_libsvm(path).with_context(|| format!("loading LibSVM file {path}"))
+            }
+            DatasetSpec::Synth { name, n, seed } => {
+                synth::spec(name).with_context(|| format!("unknown dataset '{name}'"))?;
+                Ok(synth::generate(name, *n, *seed))
+            }
+        }
+    }
+}
+
+/// Build the per-γ shared row stores for the γ columns `used` marks. A
+/// file spec with `shard_bytes` backs each store with a
+/// [`ShardRowSource`] over one shared [`ShardedDataset`] (bounded
+/// kernel-tier residency); everything else gets the in-RAM evaluator
+/// stores the single-process grid uses. Both variants produce
+/// bit-identical rows, so results cannot depend on the choice — and
+/// `profile.share_rows` off (all `None`) only costs repeated row fills.
+fn build_shares(
+    spec: &DatasetSpec,
+    ds: &Dataset,
+    gamma_values: &[f64],
+    used: &[bool],
+    profile: &RunProfile,
+) -> Result<Vec<Option<Arc<SharedKernelCache>>>> {
+    let sharded = match spec {
+        DatasetSpec::File {
+            path,
+            shard_bytes: Some(bytes),
+        } => Some(Arc::new(
+            ShardedDataset::shard_file(path, *bytes)
+                .with_context(|| format!("sharding LibSVM file {path}"))?,
+        )),
+        _ => None,
+    };
+    Ok(gamma_values
+        .iter()
+        .enumerate()
+        .map(|(gi, &gamma)| {
+            (profile.share_rows && used[gi]).then(|| match &sharded {
+                Some(sh) => SharedKernelCache::with_byte_budget_sharded_dtype(
+                    Arc::new(ShardRowSource::new(
+                        Arc::clone(sh),
+                        Kernel::rbf(gamma),
+                        DEFAULT_RESIDENT_SHARDS,
+                    )),
+                    profile.seed_cache_bytes,
+                    profile.cache_dtype,
+                ),
+                None => SharedKernelCache::with_byte_budget_dtype(
+                    KernelEval::new(ds.clone(), Kernel::rbf(gamma)),
+                    profile.seed_cache_bytes,
+                    profile.cache_dtype,
+                ),
+            })
+        })
+        .collect())
+}
+
+/// Evaluate the grid cells `nodes` indexes into `graph`, fanning them out
+/// on the process pool. The per-cell computation is exactly the
+/// single-process uniform grid's (same `run_kfold` call, same options),
+/// which is what makes distributed collection bit-identical.
+fn run_cells(
+    ds: &Dataset,
+    graph: &ScheduleGraph,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    shares: &[Option<Arc<SharedKernelCache>>],
+    k: usize,
+    seeder_name: &str,
+    profile: &RunProfile,
+    nodes: &[usize],
+) -> Result<Vec<(usize, GridPoint)>> {
+    // resolve once up front so an unknown seeder is a wire error, not a
+    // worker-thread panic
+    seeder_by_name(seeder_name).with_context(|| format!("unknown seeder '{seeder_name}'"))?;
+    let width = effective_threads(profile.threads);
+    let intra = (width / nodes.len().max(1)).max(1);
+    Ok(scoped_map(profile.threads, nodes.len(), |i| {
+        let node = &graph.nodes[nodes[i]];
+        let (c, gamma) = (c_values[node.c_index], gamma_values[node.gamma_index]);
+        let seeder = seeder_by_name(seeder_name).expect("seeder validated above");
+        let started = std::time::Instant::now();
+        let report = crate::cv::run_kfold(
+            ds,
+            Kernel::rbf(gamma),
+            c,
+            k,
+            seeder.as_ref(),
+            CvOptions {
+                profile: profile.with_threads(intra),
+                shared_seed_cache: shares[node.gamma_index].clone(),
+                ..Default::default()
+            },
+        );
+        (
+            nodes[i],
+            GridPoint {
+                c,
+                gamma,
+                accuracy: report.accuracy(),
+                iterations: report.total_iterations(),
+                rounds: report.rounds.len(),
+                elapsed: started.elapsed(),
+            },
+        )
+    }))
+}
+
+/// One result row for the wire: `iterations` as a decimal string (u64
+/// can exceed 2⁵³), everything else as numbers (Rust's shortest
+/// round-trip float formatting makes `c`/`gamma`/`accuracy` bit-exact
+/// through parse).
+fn row_to_json(node: usize, p: &GridPoint) -> Json {
+    Json::obj(vec![
+        ("node", Json::num(node as f64)),
+        ("c", Json::num(p.c)),
+        ("gamma", Json::num(p.gamma)),
+        ("accuracy", Json::num(p.accuracy)),
+        ("iterations", Json::str(p.iterations.to_string())),
+        ("rounds", Json::num(p.rounds as f64)),
+        ("elapsed_us", Json::num(p.elapsed.as_micros() as f64)),
+    ])
+}
+
+/// Inverse of [`row_to_json`].
+fn row_from_json(v: &Json) -> Result<(usize, GridPoint)> {
+    let num = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("row: missing number '{k}'"))
+    };
+    let node = v
+        .get("node")
+        .and_then(Json::as_usize)
+        .context("row: missing 'node'")?;
+    let iterations = v
+        .get("iterations")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .context("row: 'iterations' must be a decimal string (u64)")?;
+    let rounds = v
+        .get("rounds")
+        .and_then(Json::as_usize)
+        .context("row: missing 'rounds'")?;
+    let elapsed_us = num("elapsed_us")?.max(0.0) as u64;
+    Ok((
+        node,
+        GridPoint {
+            c: num("c")?,
+            gamma: num("gamma")?,
+            accuracy: num("accuracy")?,
+            iterations,
+            rounds,
+            elapsed: std::time::Duration::from_micros(elapsed_us),
+        },
+    ))
+}
+
+/// A grid worker: serves `ping` / `grid` / `shutdown` over TCP/JSON
+/// lines. Start one per process with `alphaseed worker --port N`; the
+/// driver ([`run_sharded_grid`]) connects, sends one `grid` request per
+/// assigned node group, and reads the rows back.
+///
+/// Lifecycle (bind, accept, per-connection handler threads, self-connect
+/// wake on shutdown, read-side drain with a 10 s deadline) matches
+/// [`PredictServer`](super::PredictServer) — the two tiers fail and stop
+/// the same way.
+pub struct GridWorker {
+    stop: Arc<AtomicBool>,
+    bound: Mutex<Option<SocketAddr>>,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_seq: AtomicU64,
+    drained: Condvar,
+}
+
+impl Default for GridWorker {
+    fn default() -> Self {
+        GridWorker::new()
+    }
+}
+
+impl GridWorker {
+    /// A worker with no state beyond its connection bookkeeping — every
+    /// `grid` request is self-contained (dataset spec, schedule, axes,
+    /// profile all arrive on the wire).
+    pub fn new() -> GridWorker {
+        GridWorker {
+            stop: Arc::new(AtomicBool::new(false)),
+            bound: Mutex::new(None),
+            conns: Mutex::new(HashMap::new()),
+            conn_seq: AtomicU64::new(0),
+            drained: Condvar::new(),
+        }
+    }
+
+    /// Bind and serve until a `shutdown` request (or [`shutdown`] call)
+    /// arrives, then drain in-flight connections before returning. The
+    /// bound address is reported through `on_ready` (port 0 picks a free
+    /// port).
+    ///
+    /// [`shutdown`]: GridWorker::shutdown
+    pub fn serve(self: Arc<Self>, addr: &str, on_ready: impl FnOnce(SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr).context("bind")?;
+        let local = listener.local_addr()?;
+        *self.bound.lock().expect("bound lock poisoned") = Some(local);
+        on_ready(local);
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        // the wake self-connection (or a straggler);
+                        // dropping it closes the socket
+                        break;
+                    }
+                    let id = self.conn_seq.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(track) = stream.try_clone() {
+                        self.conns
+                            .lock()
+                            .expect("conns lock poisoned")
+                            .insert(id, track);
+                    }
+                    let me = Arc::clone(&self);
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("grid-conn-{id}"))
+                        .spawn(move || {
+                            let result = me.handle(stream);
+                            me.release(id);
+                            if let Err(e) = result {
+                                eprintln!("warning: worker connection error: {e:#}");
+                            }
+                        });
+                    if let Err(e) = spawned {
+                        self.release(id);
+                        return Err(e).context("spawn connection handler");
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        self.drain();
+        Ok(())
+    }
+
+    /// Request shutdown from outside a connection: sets the stop flag and
+    /// wakes the blocked acceptor so [`serve`](GridWorker::serve) can
+    /// drain and return.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    /// Unblock the acceptor with a throwaway self-connection (errors are
+    /// irrelevant — if the listener is already gone there is nothing to
+    /// wake).
+    fn wake(&self) {
+        if let Some(addr) = *self.bound.lock().expect("bound lock poisoned") {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Drop a finished connection from the tracked set and signal the
+    /// drain condvar when the set empties.
+    fn release(&self, id: u64) {
+        let mut conns = self.conns.lock().expect("conns lock poisoned");
+        conns.remove(&id);
+        if conns.is_empty() {
+            self.drained.notify_all();
+        }
+    }
+
+    /// Finish in-flight work: shut the read side of every tracked
+    /// connection (idle readers see EOF; requests already received still
+    /// get their responses), then wait until all handlers have released
+    /// or the deadline passes.
+    fn drain(&self) {
+        let deadline = std::time::Instant::now() + DRAIN_DEADLINE;
+        let mut conns = self.conns.lock().expect("conns lock poisoned");
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        while !conns.is_empty() {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                eprintln!(
+                    "warning: shutdown drain timed out with {} connection(s) open",
+                    conns.len()
+                );
+                break;
+            }
+            conns = self
+                .drained
+                .wait_timeout(conns, deadline - now)
+                .expect("conns lock poisoned")
+                .0;
+        }
+    }
+
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let response = self.respond(&line);
+            writeln!(writer, "{response}")?;
+            if self.stop.load(Ordering::SeqCst) {
+                // this connection may have carried the shutdown op — wake
+                // the acceptor so serve() can start the drain
+                self.wake();
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute the response for one request line (exposed for tests).
+    /// Malformed input of any kind yields `{"ok":false,"error":…}` —
+    /// never a panic, never a dropped line.
+    pub fn respond(&self, line: &str) -> Json {
+        match self.respond_inner(line) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+        }
+    }
+
+    fn respond_inner(&self, line: &str) -> Result<Json> {
+        let req = Json::parse(line).context("request is not valid JSON")?;
+        let op = req
+            .get("op")
+            .and_then(Json::as_str)
+            .context("missing 'op'")?;
+        match op {
+            "ping" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("role", Json::str("grid-worker")),
+            ])),
+            "grid" => self.respond_grid(&req),
+            "shutdown" => {
+                self.stop.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            other => bail!("unknown op '{other}'"),
+        }
+    }
+
+    /// Evaluate one `grid` request: validate the shipped schedule against
+    /// the axes, reconstruct the dataset from its spec, and run exactly
+    /// the assigned cells.
+    fn respond_grid(&self, req: &Json) -> Result<Json> {
+        let graph = ScheduleGraph::from_json(req.get("schedule").context("missing 'schedule'")?)
+            .map_err(anyhow::Error::msg)?;
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            req.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("missing '{key}' array"))?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    v.as_f64()
+                        .with_context(|| format!("{key}[{i}] is not a number"))
+                })
+                .collect()
+        };
+        let c_values = floats("c_values")?;
+        let gamma_values = floats("gamma_values")?;
+        ensure!(
+            !c_values.is_empty() && !gamma_values.is_empty(),
+            "grid axes must be non-empty"
+        );
+        let k = req
+            .get("k")
+            .and_then(Json::as_usize)
+            .context("missing 'k'")?;
+        ensure!(k >= 2, "k = {k}: cross-validation needs at least 2 folds");
+        let seeder = req
+            .get("seeder")
+            .and_then(Json::as_str)
+            .context("missing 'seeder'")?
+            .to_string();
+        let profile = RunProfile::from_json(req.get("profile").context("missing 'profile'")?)
+            .map_err(anyhow::Error::msg)?;
+        let spec = DatasetSpec::from_json(req.get("dataset").context("missing 'dataset'")?)
+            .map_err(anyhow::Error::msg)?;
+        let nodes: Vec<usize> = req
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .context("missing 'nodes' array")?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_usize()
+                    .with_context(|| format!("nodes[{i}] is not a node index"))
+            })
+            .collect::<Result<_>>()?;
+        ensure!(!nodes.is_empty(), "empty node assignment");
+        let mut used = vec![false; gamma_values.len()];
+        for &n in &nodes {
+            let node = graph
+                .nodes
+                .get(n)
+                .with_context(|| format!("node {n} out of range (schedule has {})", graph.nodes.len()))?;
+            ensure!(
+                node.c_index < c_values.len() && node.gamma_index < gamma_values.len(),
+                "node {n} indexes outside the shipped axes"
+            );
+            ensure!(
+                node.eps_index.is_none(),
+                "node {n} carries an ε index: sharded dispatch serves classification grids"
+            );
+            ensure!(
+                node.warm_c_parent.is_none() && node.gamma_parent.is_none(),
+                "node {n} has reuse edges: workers evaluate independent cells only"
+            );
+            used[node.gamma_index] = true;
+        }
+        let ds = spec.load()?;
+        let shares = build_shares(&spec, &ds, &gamma_values, &used, &profile)?;
+        let rows = run_cells(
+            &ds,
+            &graph,
+            &c_values,
+            &gamma_values,
+            &shares,
+            k,
+            &seeder,
+            &profile,
+            &nodes,
+        )?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "rows",
+                Json::arr(rows.iter().map(|(n, p)| row_to_json(*n, p))),
+            ),
+        ]))
+    }
+}
+
+/// Build the one-line `grid` request for a node assignment.
+fn grid_request(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    graph: &ScheduleGraph,
+    nodes: &[usize],
+) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("grid")),
+        ("schedule", graph.to_json()),
+        ("c_values", Json::arr(c_values.iter().map(|&c| Json::num(c)))),
+        (
+            "gamma_values",
+            Json::arr(gamma_values.iter().map(|&g| Json::num(g))),
+        ),
+        ("k", Json::num(opts.k as f64)),
+        ("seeder", Json::str(opts.seeder.clone())),
+        ("profile", opts.profile.to_json()),
+        ("dataset", spec.to_json()),
+        (
+            "nodes",
+            Json::arr(nodes.iter().map(|&n| Json::num(n as f64))),
+        ),
+    ])
+}
+
+/// Send one request line to `addr` and parse the result rows back.
+fn dispatch_to(addr: &str, request: &Json) -> Result<Vec<(usize, GridPoint)>> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to worker {addr}"))?;
+    let mut writer = stream.try_clone()?;
+    writeln!(writer, "{request}")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader
+        .read_line(&mut line)
+        .with_context(|| format!("reading from worker {addr}"))?;
+    ensure!(
+        !line.trim().is_empty(),
+        "worker {addr} closed the connection without replying"
+    );
+    let resp =
+        Json::parse(line.trim()).with_context(|| format!("parsing worker {addr} response"))?;
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        bail!(
+            "worker {addr} rejected the request: {}",
+            resp.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+        );
+    }
+    resp.get("rows")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("worker {addr} response missing 'rows'"))?
+        .iter()
+        .map(row_from_json)
+        .collect()
+}
+
+/// Run a uniform (C, γ) grid across `workers` (TCP addresses of
+/// [`GridWorker`] processes) and collect the cells back in C-major
+/// order — bit-identical per cell to the single-process
+/// [`grid_search_opts`](super::grid_search_opts) sweep with the same
+/// options.
+///
+/// The unit of assignment is a γ column (so one worker fills one shared
+/// row store per owned γ), columns round-robined over the pool. Reuse
+/// shapes that couple cells across that boundary are rejected: `warm_c`,
+/// `seed_gamma` and non-[`Uniform`](BudgetPolicy::Uniform) policies need
+/// the single-process scheduler.
+///
+/// Worker failure is recovered, never ignored: a failed worker's cells
+/// are re-sent to each surviving worker in turn, and whatever still
+/// remains is computed in-process, so the returned grid is always
+/// complete (docs/DISTRIBUTED.md §4).
+pub fn run_sharded_grid(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    workers: &[String],
+) -> Result<GridResult> {
+    ensure!(
+        !c_values.is_empty() && !gamma_values.is_empty(),
+        "grid axes must be non-empty"
+    );
+    ensure!(
+        !workers.is_empty(),
+        "sharded grid dispatch needs at least one worker address"
+    );
+    if opts.warm_c || opts.seed_gamma || opts.policy != BudgetPolicy::Uniform {
+        bail!(
+            "sharded dispatch runs independent cells only: warm-C chains, cross-γ seeding and \
+             successive halving couple cells across the worker boundary (run single-process)"
+        );
+    }
+    let graph = ScheduleGraph::build_csvc(c_values, gamma_values, false, false);
+
+    // γ columns are the assignment unit (a worker fills one shared row
+    // store per γ it owns), round-robined over the pool; node order
+    // within a column stays C-major.
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        assignment[node.gamma_index % workers.len()].push(i);
+    }
+
+    // one request per worker, in flight concurrently
+    let outcomes: Vec<Result<Vec<(usize, GridPoint)>>> = std::thread::scope(|s| {
+        let graph = &graph;
+        let handles: Vec<_> = assignment
+            .iter()
+            .enumerate()
+            .map(|(w, nodes)| {
+                s.spawn(move || {
+                    if nodes.is_empty() {
+                        return Ok(Vec::new());
+                    }
+                    let req = grid_request(spec, c_values, gamma_values, opts, graph, nodes);
+                    dispatch_to(&workers[w], &req)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("dispatch thread panicked"))
+            .collect()
+    });
+
+    fn place(points: &mut [Option<GridPoint>], rows: Vec<(usize, GridPoint)>) -> Result<()> {
+        for (node, p) in rows {
+            ensure!(
+                node < points.len(),
+                "worker returned out-of-range node {node}"
+            );
+            points[node] = Some(p);
+        }
+        Ok(())
+    }
+    fn missing(points: &[Option<GridPoint>]) -> Vec<usize> {
+        points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    let mut points: Vec<Option<GridPoint>> = vec![None; graph.nodes.len()];
+    let mut alive: Vec<usize> = Vec::new();
+    for (w, outcome) in outcomes.into_iter().enumerate() {
+        match outcome {
+            Ok(rows) => {
+                place(&mut points, rows)?;
+                alive.push(w);
+            }
+            Err(e) => eprintln!(
+                "warning: worker {} failed ({e:#}); reassigning its cells",
+                workers[w]
+            ),
+        }
+    }
+
+    // recovery: re-send whatever is missing to each survivor in turn,
+    // then compute the rest in-process — a cell is never dropped
+    let mut todo = missing(&points);
+    for &w in &alive {
+        if todo.is_empty() {
+            break;
+        }
+        let req = grid_request(spec, c_values, gamma_values, opts, &graph, &todo);
+        match dispatch_to(&workers[w], &req) {
+            Ok(rows) => {
+                place(&mut points, rows)?;
+                todo = missing(&points);
+            }
+            Err(e) => eprintln!(
+                "warning: reassignment to worker {} failed ({e:#})",
+                workers[w]
+            ),
+        }
+    }
+    if !todo.is_empty() {
+        eprintln!(
+            "warning: no worker could run {} cell(s); computing them in-process",
+            todo.len()
+        );
+        let ds = spec.load()?;
+        let mut used = vec![false; gamma_values.len()];
+        for &n in &todo {
+            used[graph.nodes[n].gamma_index] = true;
+        }
+        let shares = build_shares(spec, &ds, gamma_values, &used, &opts.profile)?;
+        let rows = run_cells(
+            &ds,
+            &graph,
+            c_values,
+            gamma_values,
+            &shares,
+            opts.k,
+            &opts.seeder,
+            &opts.profile,
+            &todo,
+        )?;
+        place(&mut points, rows)?;
+    }
+    Ok(GridResult {
+        points: points
+            .into_iter()
+            .map(|p| p.expect("every node placed by workers or fallback"))
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_spec_json_roundtrip() {
+        for spec in [
+            DatasetSpec::File {
+                path: "/tmp/a.svm".into(),
+                shard_bytes: Some(4096),
+            },
+            DatasetSpec::File {
+                path: "b.svm".into(),
+                shard_bytes: None,
+            },
+            DatasetSpec::Synth {
+                name: "heart".into(),
+                n: Some(60),
+                // 2^53 + 1: only the decimal-string route carries it
+                seed: (1u64 << 53) + 1,
+            },
+            DatasetSpec::Synth {
+                name: "adult".into(),
+                n: None,
+                seed: 7,
+            },
+        ] {
+            let text = spec.to_json().to_string();
+            let back = DatasetSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn result_row_roundtrip_preserves_bits() {
+        let p = GridPoint {
+            c: 0.1 + 0.2, // not exactly representable — exercises float round-trip
+            gamma: 1.0 / 3.0,
+            accuracy: 2.0 / 3.0,
+            iterations: (1u64 << 53) + 3,
+            rounds: 5,
+            elapsed: std::time::Duration::from_micros(12_345),
+        };
+        let (node, back) = row_from_json(&Json::parse(&row_to_json(9, &p).to_string()).unwrap())
+            .expect("roundtrip");
+        assert_eq!(node, 9);
+        assert_eq!(back.c.to_bits(), p.c.to_bits());
+        assert_eq!(back.gamma.to_bits(), p.gamma.to_bits());
+        assert_eq!(back.accuracy.to_bits(), p.accuracy.to_bits());
+        assert_eq!(back.iterations, p.iterations);
+        assert_eq!(back.rounds, p.rounds);
+        assert_eq!(back.elapsed, p.elapsed);
+    }
+
+    #[test]
+    fn ping_reports_role() {
+        let w = GridWorker::new();
+        let resp = w.respond(r#"{"op":"ping"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("role").and_then(Json::as_str), Some("grid-worker"));
+    }
+
+    #[test]
+    fn malformed_requests_reported() {
+        let w = GridWorker::new();
+        let synth = r#"{"kind":"synth","name":"heart","n":30,"seed":"3"}"#;
+        let profile = RunProfile::default().to_json().to_string();
+        let edged = ScheduleGraph::build_csvc(&[1.0, 4.0], &[0.2], true, false)
+            .to_json()
+            .to_string();
+        let flat = ScheduleGraph::build_csvc(&[1.0], &[0.2], false, false)
+            .to_json()
+            .to_string();
+        for bad in [
+            "not json".to_string(),
+            r#"{"op":"nope"}"#.to_string(),
+            r#"{"op":"grid"}"#.to_string(),
+            // node out of range
+            format!(
+                r#"{{"op":"grid","schedule":{flat},"c_values":[1.0],"gamma_values":[0.2],"k":2,"seeder":"sir","profile":{profile},"dataset":{synth},"nodes":[5]}}"#
+            ),
+            // reuse edges rejected at the worker boundary
+            format!(
+                r#"{{"op":"grid","schedule":{edged},"c_values":[1.0,4.0],"gamma_values":[0.2],"k":2,"seeder":"sir","profile":{profile},"dataset":{synth},"nodes":[0,1]}}"#
+            ),
+            // unknown seeder is a wire error, not a panic
+            format!(
+                r#"{{"op":"grid","schedule":{flat},"c_values":[1.0],"gamma_values":[0.2],"k":2,"seeder":"bogus","profile":{profile},"dataset":{synth},"nodes":[0]}}"#
+            ),
+        ] {
+            let resp = w.respond(&bad);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{bad}");
+            assert!(resp.get("error").is_some(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn grid_op_matches_in_process_run() {
+        let w = GridWorker::new();
+        let spec = DatasetSpec::Synth {
+            name: "heart".into(),
+            n: Some(40),
+            seed: 3,
+        };
+        let opts = GridOptions {
+            k: 2,
+            ..Default::default()
+        };
+        let graph = ScheduleGraph::build_csvc(&[1.0], &[0.2], false, false);
+        let req = grid_request(&spec, &[1.0], &[0.2], &opts, &graph, &[0]);
+        let resp = w.respond(&req.to_string());
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let rows = resp.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        let (node, p) = row_from_json(&rows[0]).unwrap();
+        assert_eq!(node, 0);
+
+        let ds = spec.load().unwrap();
+        let seeder = seeder_by_name(&opts.seeder).unwrap();
+        let expect = crate::cv::run_kfold(
+            &ds,
+            Kernel::rbf(0.2),
+            1.0,
+            2,
+            seeder.as_ref(),
+            CvOptions {
+                profile: opts.profile,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.accuracy.to_bits(), expect.accuracy().to_bits());
+        assert_eq!(p.iterations, expect.total_iterations());
+        assert_eq!(p.rounds, 2);
+    }
+}

@@ -10,7 +10,7 @@
 //! | [`fig2`]   | Figure 2 — LOO elapsed time relative to SIR |
 
 use super::jobs::{run_one, JobSpec};
-use crate::config::RunConfig;
+use crate::config::{RunConfig, RunProfile};
 use crate::cv::CvReport;
 use crate::metrics::Table;
 use crate::util::json::Json;
@@ -19,9 +19,13 @@ use crate::util::timing::fmt_secs;
 /// One (dataset × seeder) cell of an experiment, with its full report.
 #[derive(Debug, Clone)]
 pub struct Cell {
+    /// Dataset name the cell ran on.
     pub dataset: String,
+    /// Seeder name the cell ran with.
     pub seeder: String,
+    /// Effective fold count (n for LOO cells).
     pub k: usize,
+    /// The full CV/LOO report.
     pub report: CvReport,
 }
 
@@ -39,7 +43,7 @@ fn run_cell(cfg: &RunConfig, di: usize, seeder: &str, k: usize, max_rounds: Opti
         seeder: seeder.to_string(),
         k,
         max_rounds,
-        rng_seed: cfg.rng_seed,
+        profile: RunProfile::default().with_rng_seed(cfg.rng_seed),
     };
     let report = run_one(&spec, None);
     Cell {
@@ -52,7 +56,10 @@ fn run_cell(cfg: &RunConfig, di: usize, seeder: &str, k: usize, max_rounds: Opti
 
 /// Experiment output: rendered table + machine-readable cells.
 pub struct ExperimentResult {
+    /// The rendered table, ready to print.
     pub table: Table,
+    /// Every cell that ran, with its full report (empty for inventory
+    /// tables that train nothing).
     pub cells: Vec<Cell>,
 }
 
@@ -258,7 +265,7 @@ pub fn fig2(
                 seeder: s.to_string(),
                 k: 0, // LOO
                 max_rounds: Some(rounds),
-                rng_seed: cfg.rng_seed,
+                profile: RunProfile::default().with_rng_seed(cfg.rng_seed),
             };
             let report = run_one(&spec, None);
             times.push(report.extrapolated_elapsed(n).as_secs_f64());

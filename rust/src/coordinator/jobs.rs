@@ -1,5 +1,6 @@
 //! Job descriptions and the leader loop.
 
+use crate::config::RunProfile;
 use crate::cv::{run_kfold, run_loo, CvOptions, CvReport, LooOptions};
 use crate::data::Dataset;
 use crate::kernel::Kernel;
@@ -18,17 +19,24 @@ pub struct JobSpec {
     pub dataset: String,
     /// Override the analogue's default cardinality.
     pub n: Option<usize>,
+    /// Penalty C.
     pub c: f64,
+    /// RBF kernel width γ.
     pub gamma: f64,
     /// Seeder name ("cold", "ato", "mir", "sir", "avg", "top").
     pub seeder: String,
     /// k = 0 means leave-one-out.
     pub k: usize,
+    /// Run only the first `max_rounds` CV/LOO rounds (the paper's
+    /// estimation prefix for quadratic LOO).
     pub max_rounds: Option<usize>,
-    pub rng_seed: u64,
+    /// Shared solver/runtime knobs; `profile.rng_seed` also seeds the
+    /// synthetic dataset generator when no shared dataset is supplied.
+    pub profile: RunProfile,
 }
 
 impl JobSpec {
+    /// True when this spec runs leave-one-out (`k == 0`).
     pub fn is_loo(&self) -> bool {
         self.k == 0
     }
@@ -46,8 +54,11 @@ impl JobSpec {
 /// A finished job.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
+    /// The spec this outcome answers.
     pub spec: JobSpec,
+    /// The CV/LOO report the job produced.
     pub report: CvReport,
+    /// Wall time of the whole job (dataset generation included).
     pub wall: std::time::Duration,
 }
 
@@ -55,11 +66,15 @@ pub struct JobOutcome {
 /// shared datasets are borrowed, not copied per job) and keeps telemetry.
 pub struct Coordinator {
     threads: usize,
+    /// Jobs completed so far (telemetry; read by benches and tests).
     pub jobs_done: Arc<Counter>,
+    /// Per-job wall-time histogram (telemetry; see
+    /// [`latency_summary`](Coordinator::latency_summary)).
     pub job_latency: Arc<Histogram>,
 }
 
 impl Coordinator {
+    /// A leader scheduling over `threads` workers (0 or 1 = sequential).
     pub fn new(threads: usize) -> Coordinator {
         Coordinator {
             threads: threads.max(1),
@@ -115,11 +130,18 @@ pub fn run_one(spec: &JobSpec, shared: Option<&Dataset>) -> CvReport {
 fn run_one_with_threads(spec: &JobSpec, shared: Option<&Dataset>, threads: usize) -> CvReport {
     let ds = match shared {
         Some(d) => d.clone(),
-        None => crate::data::synth::generate(&spec.dataset, spec.n, spec.rng_seed),
+        None => crate::data::synth::generate(&spec.dataset, spec.n, spec.profile.rng_seed),
     };
     let kernel = Kernel::rbf(spec.gamma);
     let seeder = seeder_by_name(&spec.seeder)
         .unwrap_or_else(|| panic!("unknown seeder '{}'", spec.seeder));
+    // the coordinator owns the fan-out/intra split in batch mode; a
+    // one-off run (threads = 0) keeps the spec's own thread setting
+    let profile = if threads == 0 {
+        spec.profile
+    } else {
+        spec.profile.with_threads(threads)
+    };
     if spec.is_loo() {
         run_loo(
             &ds,
@@ -127,10 +149,8 @@ fn run_one_with_threads(spec: &JobSpec, shared: Option<&Dataset>, threads: usize
             spec.c,
             seeder.as_ref(),
             LooOptions {
+                profile,
                 max_rounds: spec.max_rounds,
-                rng_seed: spec.rng_seed,
-                threads,
-                ..Default::default()
             },
         )
     } else {
@@ -141,9 +161,7 @@ fn run_one_with_threads(spec: &JobSpec, shared: Option<&Dataset>, threads: usize
             spec.k,
             seeder.as_ref(),
             CvOptions {
-                profile: crate::config::RunProfile::default()
-                    .with_rng_seed(spec.rng_seed)
-                    .with_threads(threads),
+                profile,
                 max_rounds: spec.max_rounds,
                 ..Default::default()
             },
@@ -164,7 +182,7 @@ mod tests {
             seeder: seeder.into(),
             k: 4,
             max_rounds: None,
-            rng_seed: 5,
+            profile: RunProfile::default().with_rng_seed(5),
         }
     }
 

@@ -27,7 +27,16 @@
 //! rows into bulk decision evaluations against it, and
 //! [`promote_best_csvc`] / [`promote_best_svr`] retrain a grid winner and
 //! install it without dropping traffic.
+//!
+//! Grids that outgrow one process scale out through the same graph:
+//! [`run_sharded_grid`] serializes the [`ScheduleGraph`] and ships per-γ
+//! node groups to [`GridWorker`] processes over a TCP/JSON-lines wire
+//! protocol, collecting per-cell rows that are bit-identical to the
+//! single-process uniform sweep; a [`DatasetSpec`] names the data by
+//! source (file or synthetic generator) so nothing heavier than the
+//! schedule crosses the wire (docs/DISTRIBUTED.md §3–§4).
 
+mod dispatch;
 pub mod experiments;
 mod grid;
 mod jobs;
@@ -39,6 +48,7 @@ pub use grid::{
     grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, promote_best_csvc,
     promote_best_svr, GridOptions, GridPoint, GridResult, SvrGridPoint, SvrGridResult,
 };
+pub use dispatch::{run_sharded_grid, DatasetSpec, GridWorker};
 pub use schedule::{BudgetPolicy, GridNode, ScheduleGraph};
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use registry::{ModelRegistry, ServeModel, VersionedModel};

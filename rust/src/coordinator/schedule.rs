@@ -43,6 +43,7 @@ use crate::multiclass::{
 use crate::seeding::seeder_by_name;
 use crate::seeding::svr::{svr_seeder_by_name, SvrSeeder};
 use crate::seeding::Seeder;
+use crate::util::json::Json;
 use crate::util::pool::{effective_threads, scoped_map};
 use std::sync::{Arc, Mutex};
 
@@ -205,6 +206,65 @@ impl ScheduleGraph {
             units.push(chain);
         }
         units
+    }
+
+    /// Serialize for the worker wire protocol (docs/DISTRIBUTED.md §3):
+    /// the node list verbatim, index fields as plain JSON numbers
+    /// (axis/node indices are far below the f64-exact 2⁵³ ceiling) and
+    /// absent edges as `null`.
+    pub fn to_json(&self) -> Json {
+        let opt = |o: Option<usize>| match o {
+            Some(v) => Json::num(v as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![(
+            "nodes",
+            Json::arr(self.nodes.iter().map(|n| {
+                Json::obj(vec![
+                    ("c_index", Json::num(n.c_index as f64)),
+                    ("eps_index", opt(n.eps_index)),
+                    ("gamma_index", Json::num(n.gamma_index as f64)),
+                    ("warm_c_parent", opt(n.warm_c_parent)),
+                    ("gamma_parent", opt(n.gamma_parent)),
+                ])
+            })),
+        )])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json). The driver re-sends the
+    /// graph it built, so a worker never rebuilds edges from axis lists —
+    /// both sides run the *same* graph by construction.
+    pub fn from_json(v: &Json) -> Result<ScheduleGraph, String> {
+        let nodes = v
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "schedule: missing 'nodes' array".to_string())?;
+        let req = |n: &Json, i: usize, k: &str| {
+            n.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("schedule: node {i} missing '{k}'"))
+        };
+        let opt = |n: &Json, i: usize, k: &str| match n.get(k) {
+            None | Some(Json::Null) => Ok(None),
+            Some(field) => field
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| format!("schedule: node {i} has non-integer '{k}'")),
+        };
+        let nodes = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                Ok(GridNode {
+                    c_index: req(n, i, "c_index")?,
+                    eps_index: opt(n, i, "eps_index")?,
+                    gamma_index: req(n, i, "gamma_index")?,
+                    warm_c_parent: opt(n, i, "warm_c_parent")?,
+                    gamma_parent: opt(n, i, "gamma_parent")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ScheduleGraph { nodes })
     }
 }
 
@@ -1007,5 +1067,26 @@ mod tests {
     #[should_panic(expected = "eta >= 2")]
     fn halving_params_reject_eta_one() {
         halving_params(&BudgetPolicy::SuccessiveHalving { eta: 1, min_rounds: 1 }, 5);
+    }
+
+    #[test]
+    fn graph_json_roundtrip() {
+        for g in [
+            ScheduleGraph::build_csvc(&[8.0, 1.0], &[0.1, 0.2], true, false),
+            ScheduleGraph::build_csvc(&[1.0, 10.0], &[0.1, 0.2, 0.4], false, true),
+            ScheduleGraph::build_svr(&[1.0, 10.0], &[0.05, 0.2], &[0.1, 0.5], true),
+        ] {
+            let text = g.to_json().to_string();
+            let back = ScheduleGraph::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.nodes, g.nodes);
+        }
+    }
+
+    #[test]
+    fn graph_json_rejects_malformed_node() {
+        let v = Json::parse(r#"{"nodes":[{"c_index":0}]}"#).unwrap();
+        let err = ScheduleGraph::from_json(&v).unwrap_err();
+        assert!(err.contains("gamma_index"), "{err}");
+        assert!(ScheduleGraph::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 }

@@ -422,7 +422,7 @@ pub(crate) fn make_seed_cache(
             // built for different data or kernel would silently corrupt
             // every warm-start gradient
             assert!(
-                shared.n() == full.len() && shared.eval().kernel == kernel,
+                shared.n() == full.len() && shared.kernel() == kernel,
                 "shared seed cache bound to a different dataset or kernel"
             );
             // dtype is inherited from the shared store (adopted rows keep
@@ -922,8 +922,7 @@ fn gradient_via_cache(
     g
 }
 
-/// Warm-start gradient, picking between two strategies (§Perf,
-/// EXPERIMENTS.md):
+/// Warm-start gradient, picking between two strategies:
 ///
 /// - **delta** — SIR/MIR keep α_𝓢 unchanged, so for a carried-over
 ///   instance t the new gradient is the old one plus the contribution of

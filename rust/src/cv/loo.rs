@@ -15,43 +15,26 @@
 
 use super::kfold::{run_kfold, CvOptions};
 use super::report::{CvReport, RoundStat};
+use crate::config::RunProfile;
 use crate::data::{Dataset, FoldPlan};
 use crate::kernel::{Kernel, KernelCache, KernelEval};
 use crate::seeding::{SeedContext, Seeder};
 use crate::smo::{Model, SmoParams, Solver};
 use std::time::Instant;
 
-/// Options for a leave-one-out run.
+/// Options for a leave-one-out run: the shared [`RunProfile`] knobs plus
+/// the one LOO-specific field. (Earlier revisions hand-copied six profile
+/// fields here; they now flow through the profile like every other
+/// CV-style driver. LOO ignores the profile's grid-only knobs —
+/// `share_rows`, `carry_active_set`, `cache_dtype` — which the CLI layer
+/// rejects with targeted messages.)
+#[derive(Debug, Clone, Default)]
 pub struct LooOptions {
-    /// SMO tolerance (LibSVM default 1e-3).
-    pub eps: f64,
-    /// LibSVM-style shrinking in the solver.
-    pub shrinking: bool,
-    /// Solver kernel-cache budget per round.
-    pub cache_bytes: usize,
-    /// Shared seeding-cache budget (rows over the full dataset).
-    pub seed_cache_bytes: usize,
-    /// Fold-partition + seeding determinism.
-    pub rng_seed: u64,
+    /// Shared solver/runtime knobs (tolerance, shrinking, cache budgets,
+    /// RNG seed, threads).
+    pub profile: RunProfile,
     /// Evaluate only the first `max_rounds` held-out instances.
     pub max_rounds: Option<usize>,
-    /// Worker threads for the intra-run parallel paths (0 = auto,
-    /// 1 = sequential); bit-identical results for any value.
-    pub threads: usize,
-}
-
-impl Default for LooOptions {
-    fn default() -> Self {
-        LooOptions {
-            eps: 1e-3,
-            shrinking: true,
-            cache_bytes: 256 << 20,
-            seed_cache_bytes: 128 << 20,
-            rng_seed: 42,
-            max_rounds: None,
-            threads: 0,
-        }
-    }
 }
 
 /// Run leave-one-out CV with the given seeder, dispatching on protocol:
@@ -67,13 +50,7 @@ pub fn run_loo(
         "avg" | "top" => run_loo_from_full(full, kernel, c, seeder, opts),
         _ => {
             let cv_opts = CvOptions {
-                profile: crate::config::RunProfile::default()
-                    .with_eps(opts.eps)
-                    .with_shrinking(opts.shrinking)
-                    .with_cache_bytes(opts.cache_bytes)
-                    .with_seed_cache_bytes(opts.seed_cache_bytes)
-                    .with_rng_seed(opts.rng_seed)
-                    .with_threads(opts.threads),
+                profile: opts.profile,
                 max_rounds: opts.max_rounds,
                 ..Default::default()
             };
@@ -100,10 +77,10 @@ fn run_loo_from_full(
     let t_full = Instant::now();
     let params = SmoParams {
         c,
-        eps: opts.eps,
-        shrinking: opts.shrinking,
-        cache_bytes: opts.cache_bytes,
-        threads: opts.threads,
+        eps: opts.profile.eps,
+        shrinking: opts.profile.shrinking,
+        cache_bytes: opts.profile.cache_bytes,
+        threads: opts.profile.threads,
         ..Default::default()
     };
     let mut full_solver = Solver::new(KernelEval::new(full.clone(), kernel), params.clone());
@@ -112,8 +89,10 @@ fn run_loo_from_full(
     let full_f = full_result.f_indicators(&full.y);
     let prev_train: Vec<usize> = (0..n).collect();
 
-    let mut seed_cache =
-        KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), opts.seed_cache_bytes);
+    let mut seed_cache = KernelCache::with_byte_budget(
+        KernelEval::new(full.clone(), kernel),
+        opts.profile.seed_cache_bytes,
+    );
 
     let mut rounds = Vec::with_capacity(rounds_to_run);
     for h in 0..rounds_to_run {
@@ -134,7 +113,7 @@ fn run_loo_from_full(
             removed: &removed,
             added: &[],
             next_train: &train_idx,
-            rng_seed: opts.rng_seed ^ (h as u64),
+            rng_seed: opts.profile.rng_seed ^ (h as u64),
         };
         let seed = seeder.seed(&ctx, &mut seed_cache);
         let init = t_init.elapsed();

@@ -101,10 +101,32 @@ pub fn read_libsvm_raw(
     Ok((name, x, labels, lines))
 }
 
-fn file_stem(path: &Path) -> String {
+pub(crate) fn file_stem(path: &Path) -> String {
     path.file_stem()
         .map(|s| s.to_string_lossy().to_string())
         .unwrap_or_else(|| "dataset".to_string())
+}
+
+/// The classification label mapping shared by every loader: with a
+/// binarisation threshold, `raw <= t` → −1 else +1; without one, `raw > 0`
+/// → +1 else −1.
+pub(crate) fn map_label(raw: f64, binarise: Option<f64>) -> f64 {
+    match binarise {
+        Some(t) => {
+            if raw <= t {
+                -1.0
+            } else {
+                1.0
+            }
+        }
+        None => {
+            if raw > 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+    }
 }
 
 fn parse_inner(
@@ -113,26 +135,91 @@ fn parse_inner(
     binarise: Option<f64>,
 ) -> Result<Dataset, LibsvmError> {
     let (x, raw, _) = parse_matrix(lines)?;
-    let labels: Vec<f64> = raw
-        .iter()
-        .map(|&raw| match binarise {
-            Some(t) => {
-                if raw <= t {
-                    -1.0
-                } else {
-                    1.0
-                }
-            }
-            None => {
-                if raw > 0.0 {
-                    1.0
-                } else {
-                    -1.0
-                }
-            }
-        })
-        .collect();
+    let labels: Vec<f64> = raw.iter().map(|&raw| map_label(raw, binarise)).collect();
     Ok(Dataset::new(name, x, labels))
+}
+
+/// Parse one LibSVM text line: `Ok(None)` for blank/comment-only lines,
+/// else the raw label and the sorted, first-occurrence-deduped
+/// `(column, value)` pairs. `lineno` is the 1-based source line used in
+/// error messages — the streaming reader calls this with file-global line
+/// numbers, so its errors are identical to the in-RAM loader's.
+#[allow(clippy::type_complexity)]
+pub(crate) fn parse_data_line(
+    line: &str,
+    lineno: usize,
+) -> Result<Option<(f64, Vec<(u32, f32)>)>, LibsvmError> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+        line: lineno,
+        msg: "missing label".into(),
+    })?;
+    let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+        line: lineno,
+        msg: format!("bad label {label_tok:?}"),
+    })?;
+    let mut row: Vec<(u32, f32)> = Vec::new();
+    for tok in parts {
+        let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad feature token {tok:?}"),
+        })?;
+        let idx: u32 = idx_s.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad feature index {idx_s:?}"),
+        })?;
+        if idx == 0 {
+            return Err(LibsvmError::Parse {
+                line: lineno,
+                msg: "libsvm indices are 1-based, got 0".into(),
+            });
+        }
+        let val: f32 = val_s.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad feature value {val_s:?}"),
+        })?;
+        row.push((idx - 1, val));
+    }
+    row.sort_by_key(|&(c, _)| c);
+    // LibSVM files occasionally repeat an index; keep the first
+    // occurrence (Vec::dedup semantics), matching sort stability.
+    row.dedup_by_key(|&mut (c, _)| c);
+    Ok(Some((label, row)))
+}
+
+/// Assemble parsed rows into a [`DataMatrix`] with the automatic storage
+/// decision: densify when the data is mostly non-zero (dense row access
+/// is faster and the storage smaller than CSR at >50% density).
+pub(crate) fn assemble_matrix(cols: usize, rows: &[Vec<(u32, f32)>]) -> DataMatrix {
+    let csr = CsrMatrix::from_rows(cols, rows);
+    let density = csr.nnz() as f64 / (csr.rows * csr.cols) as f64;
+    assemble_storage(csr, density > 0.5)
+}
+
+/// Assemble parsed rows with a **forced** storage kind. Shard loading uses
+/// this with the manifest's *global* density decision: the dense and
+/// sparse dot products have different accumulation orders, so a shard
+/// whose local density differs from the whole file's must still store its
+/// rows the way the full-file load would.
+pub(crate) fn assemble_matrix_forced(
+    cols: usize,
+    rows: &[Vec<(u32, f32)>],
+    dense: bool,
+) -> DataMatrix {
+    assemble_storage(CsrMatrix::from_rows(cols, rows), dense)
+}
+
+fn assemble_storage(csr: CsrMatrix, dense: bool) -> DataMatrix {
+    if dense {
+        let (rows, cols) = (csr.rows, csr.cols);
+        DataMatrix::dense(rows, cols, DataMatrix::Sparse(csr).to_dense_vec())
+    } else {
+        DataMatrix::Sparse(csr)
+    }
 }
 
 /// The shared parsing core: features + raw labels + source line numbers.
@@ -147,67 +234,21 @@ fn parse_matrix(
 
     for (lineno, line) in lines.enumerate() {
         let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: "missing label".into(),
-        })?;
-        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: format!("bad label {label_tok:?}"),
-        })?;
-        let mut row: Vec<(u32, f32)> = Vec::new();
-        for tok in parts {
-            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("bad feature token {tok:?}"),
-            })?;
-            let idx: u32 = idx_s.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("bad feature index {idx_s:?}"),
-            })?;
-            if idx == 0 {
-                return Err(LibsvmError::Parse {
-                    line: lineno + 1,
-                    msg: "libsvm indices are 1-based, got 0".into(),
-                });
+        if let Some((label, row)) = parse_data_line(&line, lineno + 1)? {
+            if let Some(&(col, _)) = row.last() {
+                max_col = max_col.max(col);
             }
-            let val: f32 = val_s.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("bad feature value {val_s:?}"),
-            })?;
-            let col = idx - 1;
-            max_col = max_col.max(col);
-            row.push((col, val));
+            rows.push(row);
+            labels.push(label);
+            line_nos.push(lineno + 1);
         }
-        row.sort_by_key(|&(c, _)| c);
-        // LibSVM files occasionally repeat an index; keep the first
-        // occurrence (Vec::dedup semantics), matching sort stability.
-        row.dedup_by_key(|&mut (c, _)| c);
-        rows.push(row);
-        labels.push(label);
-        line_nos.push(lineno + 1);
     }
 
     if rows.is_empty() {
         return Err(LibsvmError::Empty);
     }
     let cols = max_col as usize + 1;
-    let csr = CsrMatrix::from_rows(cols, &rows);
-
-    // Densify automatically when the data is mostly non-zero: dense row
-    // access is faster and the storage smaller than CSR at >50% density.
-    let density = csr.nnz() as f64 / (csr.rows * csr.cols) as f64;
-    let x = if density > 0.5 {
-        DataMatrix::dense(csr.rows, csr.cols, DataMatrix::Sparse(csr).to_dense_vec())
-    } else {
-        DataMatrix::Sparse(csr)
-    };
-    Ok((x, labels, line_nos))
+    Ok((assemble_matrix(cols, &rows), labels, line_nos))
 }
 
 /// Write a dataset in LibSVM format (sparse lines, 1-based indices).

@@ -1,12 +1,14 @@
-//! Dataset substrate: storage (dense + CSR sparse), LibSVM-format I/O,
-//! feature scaling, stratified fold partitioning, and the synthetic
-//! analogues of the paper's five benchmark datasets.
+//! Dataset substrate: storage (dense + CSR sparse), LibSVM-format I/O
+//! (in-RAM and out-of-core streaming/sharded), feature scaling, stratified
+//! fold partitioning, and the synthetic analogues of the paper's five
+//! benchmark datasets.
 
 mod dataset;
 mod folds;
 mod libsvm;
 mod matrix;
 mod scale;
+mod stream;
 pub mod synth;
 
 pub use dataset::Dataset;
@@ -17,3 +19,6 @@ pub use libsvm::{
 };
 pub use matrix::{CsrMatrix, DataMatrix};
 pub use scale::{scale_minmax, ScaleParams};
+pub use stream::{
+    read_libsvm_streamed, LibsvmStream, ShardManifest, ShardMeta, ShardedDataset, StreamChunk,
+};

@@ -1,0 +1,702 @@
+//! Out-of-core LibSVM loading: a bounded-memory chunk iterator and a
+//! row-sharded dataset representation (docs/DISTRIBUTED.md §1–§2).
+//!
+//! [`LibsvmStream`] reads a LibSVM file front to back in chunks of roughly
+//! `chunk_bytes` of source text, never holding more than one chunk's rows
+//! (plus one line buffer) in memory. Chunks always end on a line boundary,
+//! so a record can never straddle two chunks, and every line is parsed by
+//! the same [`parse_data_line`] core as the in-RAM loader with its
+//! file-global line number — malformed input produces the *identical*
+//! `LibsvmError::Parse` the in-RAM loader would raise.
+//!
+//! [`ShardedDataset`] turns one streaming pass into a persistent shard
+//! layout: a [`ShardManifest`] records each shard's byte range, row count
+//! and starting row/line, plus the file-global column count and storage
+//! decision. Any shard can then be loaded independently by seeking to its
+//! byte range — the substrate for kernel row stores that never need the
+//! full dataset resident ([`ShardRowSource`](crate::kernel::ShardRowSource))
+//! and for multi-process grid workers.
+//!
+//! **Bit-identity contract:** concatenating all shards (or all stream
+//! chunks) and assembling with the manifest's global column count and
+//! storage kind reproduces the exact `Dataset` of
+//! [`read_libsvm`](super::read_libsvm) — same feature bits, labels,
+//! `sq_norms` and dense/sparse storage. Pinned by `tests/stream_shard.rs`.
+
+use super::dataset::Dataset;
+use super::libsvm::{
+    assemble_matrix, assemble_matrix_forced, file_stem, map_label, parse_data_line, LibsvmError,
+};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// One bounded chunk of a LibSVM file: the parsed records of roughly
+/// `chunk_bytes` of source text, ending on a line boundary.
+#[derive(Debug, Clone)]
+pub struct StreamChunk {
+    /// Index of this chunk's first record within the whole file.
+    pub start_row: usize,
+    /// 1-based file line number of the first *line* covered by the chunk
+    /// (comments and blanks included — this is a byte-range property).
+    pub start_line: usize,
+    /// Raw numeric labels, one per record (no ±1 mapping).
+    pub labels: Vec<f64>,
+    /// Sorted, deduped `(column, value)` feature pairs, one row per record.
+    pub rows: Vec<Vec<(u32, f32)>>,
+    /// 1-based source line of each record (for error reporting parity).
+    pub line_nos: Vec<usize>,
+    /// Largest 0-based column index seen in this chunk (0 when every row
+    /// is empty).
+    pub max_col: u32,
+    /// Byte offset of the chunk's first line in the file.
+    pub byte_start: u64,
+    /// Byte offset one past the chunk's last line (start of the next).
+    pub byte_end: u64,
+}
+
+impl StreamChunk {
+    /// Number of records in the chunk.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the chunk holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Bounded-memory chunk iterator over a LibSVM file.
+///
+/// Each [`next`](Iterator::next) reads whole lines until at least
+/// `chunk_bytes` of source text *and* at least one record have been
+/// consumed, then yields the parsed [`StreamChunk`]. Peak resident state
+/// is one chunk's rows plus a single line buffer — the file itself is
+/// never materialised. A parse error ends the stream with the same
+/// `LibsvmError::Parse { line, .. }` the in-RAM loader reports.
+pub struct LibsvmStream {
+    reader: BufReader<std::fs::File>,
+    chunk_bytes: usize,
+    /// Lines consumed so far (the next line read is number `lines_read + 1`).
+    lines_read: usize,
+    /// Records yielded so far (the next record's file-global row index).
+    rows_read: usize,
+    byte_pos: u64,
+    done: bool,
+}
+
+impl LibsvmStream {
+    /// Open `path` for streaming in chunks of roughly `chunk_bytes` of
+    /// source text (minimum one line per chunk).
+    pub fn open(path: impl AsRef<Path>, chunk_bytes: usize) -> Result<LibsvmStream, LibsvmError> {
+        let file = std::fs::File::open(path.as_ref())?;
+        Ok(LibsvmStream {
+            reader: BufReader::new(file),
+            chunk_bytes: chunk_bytes.max(1),
+            lines_read: 0,
+            rows_read: 0,
+            byte_pos: 0,
+            done: false,
+        })
+    }
+}
+
+impl Iterator for LibsvmStream {
+    type Item = Result<StreamChunk, LibsvmError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut chunk = StreamChunk {
+            start_row: self.rows_read,
+            start_line: self.lines_read + 1,
+            labels: Vec::new(),
+            rows: Vec::new(),
+            line_nos: Vec::new(),
+            max_col: 0,
+            byte_start: self.byte_pos,
+            byte_end: self.byte_pos,
+        };
+        let mut consumed = 0usize;
+        let mut buf = String::new();
+        // Keep reading whole lines until the byte budget is met and the
+        // chunk holds at least one record (so an all-comment prefix merges
+        // into the first data chunk instead of yielding empty chunks).
+        while consumed < self.chunk_bytes || chunk.rows.is_empty() {
+            buf.clear();
+            let n = match self.reader.read_line(&mut buf) {
+                Ok(n) => n,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e.into()));
+                }
+            };
+            if n == 0 {
+                self.done = true;
+                break;
+            }
+            consumed += n;
+            self.byte_pos += n as u64;
+            self.lines_read += 1;
+            match parse_data_line(&buf, self.lines_read) {
+                Ok(None) => {}
+                Ok(Some((label, row))) => {
+                    if let Some(&(col, _)) = row.last() {
+                        chunk.max_col = chunk.max_col.max(col);
+                    }
+                    chunk.labels.push(label);
+                    chunk.line_nos.push(self.lines_read);
+                    chunk.rows.push(row);
+                    self.rows_read += 1;
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            }
+        }
+        chunk.byte_end = self.byte_pos;
+        if chunk.rows.is_empty() {
+            // trailing comments/blanks only
+            return None;
+        }
+        Some(Ok(chunk))
+    }
+}
+
+/// Read a LibSVM classification file through the streaming chunk iterator.
+///
+/// Parsing memory is bounded by `chunk_bytes` of source text at a time;
+/// the parsed rows are accumulated and assembled exactly once with the
+/// file-global column count and automatic storage decision, so the result
+/// is **byte-identical** to [`read_libsvm`](super::read_libsvm) — same
+/// feature bits, ±1 labels, `sq_norms` and dense/sparse storage (pinned by
+/// `tests/stream_shard.rs`).
+pub fn read_libsvm_streamed(
+    path: impl AsRef<Path>,
+    chunk_bytes: usize,
+) -> Result<Dataset, LibsvmError> {
+    let name = file_stem(path.as_ref());
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+    let mut raw: Vec<f64> = Vec::new();
+    let mut max_col = 0u32;
+    for chunk in LibsvmStream::open(path, chunk_bytes)? {
+        let mut chunk = chunk?;
+        max_col = max_col.max(chunk.max_col);
+        raw.append(&mut chunk.labels);
+        rows.append(&mut chunk.rows);
+    }
+    if rows.is_empty() {
+        return Err(LibsvmError::Empty);
+    }
+    let cols = max_col as usize + 1;
+    let x = assemble_matrix(cols, &rows);
+    let labels: Vec<f64> = raw.iter().map(|&r| map_label(r, None)).collect();
+    Ok(Dataset::new(name, x, labels))
+}
+
+/// One shard's entry in a [`ShardManifest`]: a byte range of the source
+/// file plus the row/line bookkeeping needed to load it independently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// Byte offset of the shard's first line in the source file.
+    pub byte_start: u64,
+    /// Byte offset one past the shard's last line.
+    pub byte_end: u64,
+    /// Number of data records in the shard.
+    pub rows: usize,
+    /// File-global index of the shard's first record.
+    pub start_row: usize,
+    /// 1-based file line number of the first line in the byte range
+    /// (restores file-global line numbers in shard-load error messages).
+    pub start_line: usize,
+}
+
+/// The persistent description of a row-sharded LibSVM file
+/// (docs/DISTRIBUTED.md §1): shard byte ranges and row counts plus the
+/// two **file-global** parsing decisions every shard must agree on — the
+/// column count (from the global max feature index) and the dense/sparse
+/// storage kind (from the global density). Serialises to JSON via
+/// [`to_json`](ShardManifest::to_json) / [`save`](ShardManifest::save).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    /// Path of the source LibSVM file the byte ranges index into.
+    pub path: PathBuf,
+    /// File-global column count (max 1-based feature index).
+    pub cols: usize,
+    /// Total data records across all shards.
+    pub total_rows: usize,
+    /// File-global storage decision: true when the whole file densifies
+    /// (global density > 0.5). Every shard load forces this kind so shard
+    /// dot products accumulate in the same order as a full-file load.
+    pub dense: bool,
+    /// The shards, in file order (consecutive row ranges).
+    pub shards: Vec<ShardMeta>,
+}
+
+impl ShardManifest {
+    /// Serialise to the JSON document format of docs/DISTRIBUTED.md §1.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.path.to_string_lossy())),
+            ("cols", Json::num(self.cols as f64)),
+            ("total_rows", Json::num(self.total_rows as f64)),
+            ("dense", Json::Bool(self.dense)),
+            (
+                "shards",
+                Json::arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("byte_start", Json::num(s.byte_start as f64)),
+                                ("byte_end", Json::num(s.byte_end as f64)),
+                                ("rows", Json::num(s.rows as f64)),
+                                ("start_row", Json::num(s.start_row as f64)),
+                                ("start_line", Json::num(s.start_line as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a manifest back from [`to_json`](ShardManifest::to_json)'s
+    /// document shape.
+    pub fn from_json(j: &Json) -> Result<ShardManifest, String> {
+        let path = j
+            .get("path")
+            .and_then(Json::as_str)
+            .ok_or("manifest: missing 'path'")?;
+        let cols = j
+            .get("cols")
+            .and_then(Json::as_usize)
+            .ok_or("manifest: missing 'cols'")?;
+        let total_rows = j
+            .get("total_rows")
+            .and_then(Json::as_usize)
+            .ok_or("manifest: missing 'total_rows'")?;
+        let dense = j
+            .get("dense")
+            .and_then(Json::as_bool)
+            .ok_or("manifest: missing 'dense'")?;
+        let shards_json = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing 'shards'")?;
+        let mut shards = Vec::with_capacity(shards_json.len());
+        for (i, s) in shards_json.iter().enumerate() {
+            let field = |k: &str| -> Result<usize, String> {
+                s.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or(format!("manifest: shard {i} missing '{k}'"))
+            };
+            shards.push(ShardMeta {
+                byte_start: field("byte_start")? as u64,
+                byte_end: field("byte_end")? as u64,
+                rows: field("rows")?,
+                start_row: field("start_row")?,
+                start_line: field("start_line")?,
+            });
+        }
+        Ok(ShardManifest {
+            path: PathBuf::from(path),
+            cols,
+            total_rows,
+            dense,
+            shards,
+        })
+    }
+
+    /// Write the manifest as pretty-printed JSON to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string_pretty().as_bytes())
+    }
+
+    /// Load a manifest written by [`save`](ShardManifest::save).
+    pub fn load(path: impl AsRef<Path>) -> Result<ShardManifest, LibsvmError> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| LibsvmError::Parse {
+            line: 0,
+            msg: format!("manifest: {e}"),
+        })?;
+        ShardManifest::from_json(&j).map_err(|msg| LibsvmError::Parse { line: 0, msg })
+    }
+}
+
+/// A LibSVM file split into independently loadable row shards.
+///
+/// Built by one bounded-memory streaming pass ([`shard_file`]
+/// (ShardedDataset::shard_file)) that records byte ranges and the two
+/// file-global parsing decisions (column count, storage kind) in a
+/// [`ShardManifest`]. [`load_shard`](ShardedDataset::load_shard) then
+/// seeks straight to a shard's byte range and parses only those lines —
+/// the loaded shard's feature bits, labels and `sq_norms` are exactly the
+/// corresponding row slice of a full [`read_libsvm`](super::read_libsvm)
+/// load (pinned by `tests/stream_shard.rs`).
+#[derive(Debug, Clone)]
+pub struct ShardedDataset {
+    manifest: ShardManifest,
+    name: String,
+}
+
+impl ShardedDataset {
+    /// Shard `path` into byte ranges of roughly `shard_bytes` of source
+    /// text each, computing the global column count and storage decision
+    /// in the same single bounded-memory pass.
+    pub fn shard_file(
+        path: impl AsRef<Path>,
+        shard_bytes: usize,
+    ) -> Result<ShardedDataset, LibsvmError> {
+        let path = path.as_ref();
+        let name = file_stem(path);
+        let mut shards: Vec<ShardMeta> = Vec::new();
+        let mut max_col = 0u32;
+        let mut total_rows = 0usize;
+        let mut nnz = 0u64;
+        for chunk in LibsvmStream::open(path, shard_bytes)? {
+            let chunk = chunk?;
+            max_col = max_col.max(chunk.max_col);
+            // count like CsrMatrix::from_rows: explicit zeros are dropped
+            nnz += chunk
+                .rows
+                .iter()
+                .flat_map(|r| r.iter())
+                .filter(|&&(_, v)| v != 0.0)
+                .count() as u64;
+            total_rows += chunk.rows.len();
+            shards.push(ShardMeta {
+                byte_start: chunk.byte_start,
+                byte_end: chunk.byte_end,
+                rows: chunk.rows.len(),
+                start_row: chunk.start_row,
+                start_line: chunk.start_line,
+            });
+        }
+        if total_rows == 0 {
+            return Err(LibsvmError::Empty);
+        }
+        let cols = max_col as usize + 1;
+        // the exact density expression of the in-RAM loader, over the
+        // whole file — the storage decision every shard will be forced to
+        let density = nnz as f64 / (total_rows * cols) as f64;
+        Ok(ShardedDataset {
+            manifest: ShardManifest {
+                path: path.to_path_buf(),
+                cols,
+                total_rows,
+                dense: density > 0.5,
+                shards,
+            },
+            name,
+        })
+    }
+
+    /// Rehydrate from a saved [`ShardManifest`] (the worker side of the
+    /// dispatch protocol; the source file must be reachable at
+    /// `manifest.path`).
+    pub fn from_manifest(manifest: ShardManifest) -> ShardedDataset {
+        let name = file_stem(&manifest.path);
+        ShardedDataset { manifest, name }
+    }
+
+    /// The manifest describing this sharding.
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    /// Dataset name (source file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.manifest.shards.len()
+    }
+
+    /// Total data records across all shards.
+    pub fn total_rows(&self) -> usize {
+        self.manifest.total_rows
+    }
+
+    /// File-global column count.
+    pub fn cols(&self) -> usize {
+        self.manifest.cols
+    }
+
+    /// File-global row index of shard `s`'s first record.
+    pub fn shard_start_row(&self, s: usize) -> usize {
+        self.manifest.shards[s].start_row
+    }
+
+    /// Map a file-global row index to `(shard, row-within-shard)`.
+    pub fn shard_of_row(&self, row: usize) -> (usize, usize) {
+        assert!(
+            row < self.manifest.total_rows,
+            "row {row} out of range ({} total)",
+            self.manifest.total_rows
+        );
+        // shards hold consecutive row ranges in file order
+        let s = self
+            .manifest
+            .shards
+            .partition_point(|m| m.start_row <= row)
+            - 1;
+        (s, row - self.manifest.shards[s].start_row)
+    }
+
+    /// Parse one shard's byte range into raw rows + ±1 labels.
+    #[allow(clippy::type_complexity)]
+    fn parse_shard(&self, s: usize) -> Result<(Vec<Vec<(u32, f32)>>, Vec<f64>), LibsvmError> {
+        let meta = &self.manifest.shards[s];
+        let mut file = std::fs::File::open(&self.manifest.path)?;
+        file.seek(SeekFrom::Start(meta.byte_start))?;
+        let mut buf = vec![0u8; (meta.byte_end - meta.byte_start) as usize];
+        file.read_exact(&mut buf)?;
+        let text = String::from_utf8_lossy(&buf);
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(meta.rows);
+        let mut labels: Vec<f64> = Vec::with_capacity(meta.rows);
+        for (offset, line) in text.lines().enumerate() {
+            if let Some((raw, row)) = parse_data_line(line, meta.start_line + offset)? {
+                labels.push(map_label(raw, None));
+                rows.push(row);
+            }
+        }
+        if rows.len() != meta.rows {
+            return Err(LibsvmError::Parse {
+                line: meta.start_line,
+                msg: format!(
+                    "shard {s}: manifest says {} rows, byte range parsed {} (file changed since sharding?)",
+                    meta.rows,
+                    rows.len()
+                ),
+            });
+        }
+        Ok((rows, labels))
+    }
+
+    /// Load shard `s` as a standalone [`Dataset`] with the manifest's
+    /// global column count and storage kind. Row `i` of the result carries
+    /// the exact bits (features, label, `sq_norm`) of file-global row
+    /// `start_row + i` in a full in-RAM load.
+    pub fn load_shard(&self, s: usize) -> Result<Dataset, LibsvmError> {
+        let (rows, labels) = self.parse_shard(s)?;
+        let x = assemble_matrix_forced(self.manifest.cols, &rows, self.manifest.dense);
+        Ok(Dataset::new(
+            format!("{}[shard{}]", self.name, s),
+            x,
+            labels,
+        ))
+    }
+
+    /// Load the whole file by concatenating shard parses — bit-identical
+    /// to [`read_libsvm`](super::read_libsvm) (global column count +
+    /// global storage decision, pinned by `tests/stream_shard.rs`).
+    pub fn load_full(&self) -> Result<Dataset, LibsvmError> {
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(self.manifest.total_rows);
+        let mut labels: Vec<f64> = Vec::with_capacity(self.manifest.total_rows);
+        for s in 0..self.n_shards() {
+            let (mut r, mut l) = self.parse_shard(s)?;
+            rows.append(&mut r);
+            labels.append(&mut l);
+        }
+        let x = assemble_matrix_forced(self.manifest.cols, &rows, self.manifest.dense);
+        Ok(Dataset::new(self.name.clone(), x, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::libsvm::{read_libsvm, write_libsvm};
+    use super::*;
+
+    fn write_temp(name: &str, text: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(format!("alphaseed_stream_{name}_{}", text.len()));
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    const SAMPLE: &str = "\
+# header comment
++1 1:0.5 3:1.0
+-1 2:2.0
+
++1 1:1.0 2:1.0 3:1.0 # trailing
+-1 3:0.25
+";
+
+    #[test]
+    fn streamed_read_matches_in_ram() {
+        let path = write_temp("match", SAMPLE);
+        let in_ram = read_libsvm(&path).unwrap();
+        for chunk_bytes in [1usize, 7, 64, 1 << 20] {
+            let streamed = read_libsvm_streamed(&path, chunk_bytes).unwrap();
+            assert_eq!(streamed.y, in_ram.y, "chunk_bytes={chunk_bytes}");
+            assert_eq!(
+                streamed.x.to_dense_vec(),
+                in_ram.x.to_dense_vec(),
+                "chunk_bytes={chunk_bytes}"
+            );
+            assert_eq!(streamed.sq_norms, in_ram.sq_norms);
+            assert_eq!(streamed.x.is_sparse(), in_ram.x.is_sparse());
+        }
+    }
+
+    #[test]
+    fn chunks_cover_file_without_overlap() {
+        let path = write_temp("cover", SAMPLE);
+        let chunks: Vec<StreamChunk> = LibsvmStream::open(&path, 8)
+            .unwrap()
+            .map(|c| c.unwrap())
+            .collect();
+        assert!(chunks.len() > 1, "tiny chunks must split the file");
+        assert_eq!(chunks[0].byte_start, 0);
+        for pair in chunks.windows(2) {
+            assert_eq!(pair[0].byte_end, pair[1].byte_start);
+            assert_eq!(
+                pair[0].start_row + pair[0].len(),
+                pair[1].start_row,
+                "row ranges must be consecutive"
+            );
+        }
+        let total: usize = chunks.iter().map(StreamChunk::len).sum();
+        assert_eq!(total, 4);
+        assert_eq!(
+            chunks.last().unwrap().byte_end,
+            SAMPLE.len() as u64,
+            "last chunk ends at EOF"
+        );
+    }
+
+    #[test]
+    fn malformed_line_error_parity() {
+        let bad = "+1 1:0.5\n-1 2:oops\n";
+        let path = write_temp("bad", bad);
+        let in_ram_err = read_libsvm(&path).unwrap_err().to_string();
+        let streamed_err = read_libsvm_streamed(&path, 4).unwrap_err().to_string();
+        assert_eq!(streamed_err, in_ram_err);
+        assert!(streamed_err.contains("line 2"), "{streamed_err}");
+    }
+
+    #[test]
+    fn empty_file_is_empty_error() {
+        let path = write_temp("empty", "# only comments\n\n");
+        assert!(matches!(
+            read_libsvm_streamed(&path, 16),
+            Err(LibsvmError::Empty)
+        ));
+        assert!(matches!(
+            ShardedDataset::shard_file(&path, 16),
+            Err(LibsvmError::Empty)
+        ));
+    }
+
+    #[test]
+    fn shard_load_full_matches_read_libsvm() {
+        let path = write_temp("shards", SAMPLE);
+        let in_ram = read_libsvm(&path).unwrap();
+        let sharded = ShardedDataset::shard_file(&path, 10).unwrap();
+        assert!(sharded.n_shards() > 1);
+        assert_eq!(sharded.total_rows(), in_ram.len());
+        let full = sharded.load_full().unwrap();
+        assert_eq!(full.y, in_ram.y);
+        assert_eq!(full.x.to_dense_vec(), in_ram.x.to_dense_vec());
+        assert_eq!(full.sq_norms, in_ram.sq_norms);
+        assert_eq!(full.x.is_sparse(), in_ram.x.is_sparse());
+    }
+
+    #[test]
+    fn shard_rows_match_full_rows() {
+        let path = write_temp("rows", SAMPLE);
+        let in_ram = read_libsvm(&path).unwrap();
+        let sharded = ShardedDataset::shard_file(&path, 10).unwrap();
+        for g in 0..sharded.total_rows() {
+            let (s, local) = sharded.shard_of_row(g);
+            let shard = sharded.load_shard(s).unwrap();
+            assert_eq!(shard.y[local], in_ram.y[g], "row {g}");
+            assert_eq!(
+                shard.sq_norms[local].to_bits(),
+                in_ram.sq_norms[g].to_bits(),
+                "row {g}"
+            );
+            assert_eq!(
+                shard.x.is_sparse(),
+                in_ram.x.is_sparse(),
+                "shard storage kind must follow the global decision"
+            );
+        }
+    }
+
+    #[test]
+    fn global_storage_decision_overrides_local_density() {
+        // Global density < 0.5 (sparse), but the first rows are 100% dense:
+        // a shard holding only them must still be stored sparse.
+        let mut text = String::from("+1 1:1 2:1\n-1 1:2 2:2\n");
+        for i in 0..30 {
+            text.push_str(&format!("+1 {}:1\n", (i % 12) + 1));
+        }
+        let path = write_temp("globalkind", &text);
+        let in_ram = read_libsvm(&path).unwrap();
+        assert!(in_ram.x.is_sparse());
+        let sharded = ShardedDataset::shard_file(&path, 12).unwrap();
+        assert!(!sharded.manifest().dense);
+        let first = sharded.load_shard(0).unwrap();
+        assert!(
+            first.x.is_sparse(),
+            "locally dense shard must keep the global sparse storage"
+        );
+        assert_eq!(first.dim(), in_ram.dim(), "global column count");
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let path = write_temp("manifest", SAMPLE);
+        let sharded = ShardedDataset::shard_file(&path, 10).unwrap();
+        let j = sharded.manifest().to_json();
+        let back = ShardManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(&back, sharded.manifest());
+        let mpath = write_temp("manifest_file", "x");
+        sharded.manifest().save(&mpath).unwrap();
+        let loaded = ShardManifest::load(&mpath).unwrap();
+        assert_eq!(&loaded, sharded.manifest());
+        let rehydrated = ShardedDataset::from_manifest(loaded);
+        let full = rehydrated.load_full().unwrap();
+        assert_eq!(full.y, read_libsvm(&path).unwrap().y);
+    }
+
+    #[test]
+    fn shard_error_reports_file_global_line() {
+        let bad = "+1 1:0.5\n+1 1:0.5\n+1 1:0.5\n-1 2:oops\n";
+        let path = write_temp("shard_err", bad);
+        let sharded_err = {
+            // shard small enough that the bad line is not in shard 0
+            let sharded = ShardedDataset::shard_file(&path, 9);
+            match sharded {
+                Err(e) => e.to_string(),
+                Ok(s) => {
+                    let last = s.n_shards() - 1;
+                    s.load_shard(last).unwrap_err().to_string()
+                }
+            }
+        };
+        assert!(sharded_err.contains("line 4"), "{sharded_err}");
+    }
+
+    #[test]
+    fn roundtrip_through_write_libsvm() {
+        let ds = crate::data::synth::generate("heart", Some(40), 7);
+        let path = std::env::temp_dir().join("alphaseed_stream_roundtrip");
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        std::fs::write(&path, &buf).unwrap();
+        let a = read_libsvm(&path).unwrap();
+        let b = read_libsvm_streamed(&path, 64).unwrap();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.to_dense_vec(), b.x.to_dense_vec());
+    }
+}

@@ -5,7 +5,7 @@
 //! generator matching its **dimensionality, feature sparsity type, class
 //! balance, and qualitative hardness** — the properties the alpha-seeding
 //! effect actually depends on (fold-to-fold overlap and support-vector
-//! structure stability), per DESIGN.md §4. Cardinalities of the large sets
+//! structure stability). Cardinalities of the large sets
 //! are scaled to a 1-core sandbox; `heart` keeps its true size. A real
 //! LibSVM file can replace any analogue via `data::read_libsvm`.
 //!

@@ -25,8 +25,9 @@
 //!   the instance from that one row.
 
 use super::dtype::{CacheDtype, KernelRow, RowView};
-use super::function::KernelEval;
+use super::function::{Kernel, KernelEval};
 use super::shared::SharedKernelCache;
+use super::sharded::ShardRowSource;
 use crate::util::pool::scoped_map;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -63,9 +64,49 @@ struct Slot {
     next: usize,
 }
 
-/// LRU kernel-row cache bound to a [`KernelEval`].
+/// Where this cache computes rows it cannot adopt from a shared backing:
+/// an in-RAM [`KernelEval`] or an out-of-core [`ShardRowSource`]. Both
+/// produce bit-identical rows (the shard source's contract), so cache
+/// behaviour is independent of the variant.
+enum LocalSource {
+    Eval(KernelEval),
+    Sharded(Arc<ShardRowSource>),
+}
+
+impl LocalSource {
+    fn len(&self) -> usize {
+        match self {
+            LocalSource::Eval(e) => e.len(),
+            LocalSource::Sharded(s) => s.n(),
+        }
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        match self {
+            LocalSource::Eval(e) => e.eval_row(i, out),
+            LocalSource::Sharded(s) => s.fill_row(i, out),
+        }
+    }
+
+    fn value(&self, i: usize, j: usize) -> f64 {
+        match self {
+            LocalSource::Eval(e) => e.eval(i, j),
+            LocalSource::Sharded(s) => s.value(i, j),
+        }
+    }
+
+    fn kernel(&self) -> Kernel {
+        match self {
+            LocalSource::Eval(e) => e.kernel,
+            LocalSource::Sharded(s) => s.kernel(),
+        }
+    }
+}
+
+/// LRU kernel-row cache bound to a [`KernelEval`] (or, out-of-core, a
+/// [`ShardRowSource`]).
 pub struct KernelCache {
-    eval: KernelEval,
+    source: LocalSource,
     /// Optional read-mostly backing store shared across runs; local misses
     /// adopt its rows instead of recomputing.
     shared: Option<Arc<SharedKernelCache>>,
@@ -119,8 +160,24 @@ impl KernelCache {
         capacity_rows: usize,
         dtype: CacheDtype,
     ) -> KernelCache {
+        Self::from_source(LocalSource::Eval(eval), capacity_rows, dtype)
+    }
+
+    /// Cache filling rows from an out-of-core [`ShardRowSource`] (sized in
+    /// bytes like [`with_byte_budget`](Self::with_byte_budget)): the full
+    /// dataset is never resident, and cached rows carry the exact bits the
+    /// in-RAM constructors would produce. [`eval`](Self::eval) panics in
+    /// this mode — row/value/block consumers (seeding, warm-start
+    /// gradients, the SMO diagonal) all go through mode-agnostic paths.
+    pub fn with_sharded_source(source: Arc<ShardRowSource>, bytes: usize) -> KernelCache {
+        let n = source.n().max(1);
+        let rows = (bytes / (n * CacheDtype::F64.element_bytes())).max(2);
+        Self::from_source(LocalSource::Sharded(source), rows, CacheDtype::F64)
+    }
+
+    fn from_source(source: LocalSource, capacity_rows: usize, dtype: CacheDtype) -> KernelCache {
         KernelCache {
-            eval,
+            source,
             shared: None,
             proj: None,
             dtype,
@@ -137,10 +194,19 @@ impl KernelCache {
     /// misses first consult `shared` and adopt its refcounted rows, so
     /// parallel runs over the same data compute each row once process-wide.
     /// The local cache inherits the shared store's storage precision, so
-    /// adoption is a plain `Arc` clone at either tier.
+    /// adoption is a plain `Arc` clone at either tier. Works for both
+    /// in-RAM and shard-backed shared stores; in the latter case this
+    /// cache is shard-backed too (same caveats as
+    /// [`with_sharded_source`](Self::with_sharded_source)).
     pub fn with_shared_backing(shared: Arc<SharedKernelCache>, bytes: usize) -> KernelCache {
-        let mut cache =
-            Self::with_byte_budget_dtype(shared.eval().clone(), bytes, shared.dtype());
+        let n = shared.n().max(1);
+        let dtype = shared.dtype();
+        let rows = (bytes / (n * dtype.element_bytes())).max(2);
+        let source = match shared.shard_source() {
+            Some(src) => LocalSource::Sharded(Arc::clone(src)),
+            None => LocalSource::Eval(shared.eval().clone()),
+        };
+        let mut cache = Self::from_source(source, rows, dtype);
         cache.shared = Some(shared);
         cache
     }
@@ -179,14 +245,39 @@ impl KernelCache {
         cache
     }
 
-    /// The bound evaluator (dataset + kernel).
+    /// The bound in-RAM evaluator (dataset + kernel).
+    ///
+    /// # Panics
+    /// For a shard-backed cache, which has no in-RAM evaluator — use
+    /// [`try_eval`](Self::try_eval) or [`kernel`](Self::kernel) when the
+    /// cache may be out-of-core.
     pub fn eval(&self) -> &KernelEval {
-        &self.eval
+        self.try_eval()
+            .expect("kernel cache is shard-backed; it has no in-RAM evaluator (use try_eval)")
+    }
+
+    /// The in-RAM evaluator when this cache has one (`None` when
+    /// shard-backed).
+    pub fn try_eval(&self) -> Option<&KernelEval> {
+        match &self.source {
+            LocalSource::Eval(e) => Some(e),
+            LocalSource::Sharded(_) => None,
+        }
+    }
+
+    /// True when rows fill from an out-of-core shard source.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.source, LocalSource::Sharded(_))
+    }
+
+    /// The kernel function rows are computed with (works in both modes).
+    pub fn kernel(&self) -> Kernel {
+        self.source.kernel()
     }
 
     /// Number of instances (row length).
     pub fn n(&self) -> usize {
-        self.eval.len()
+        self.source.len()
     }
 
     /// Snapshot of the hit/miss/eviction counters.
@@ -249,8 +340,8 @@ impl KernelCache {
             }
             (Some(shared), None) => shared.row(i),
             _ => {
-                let mut data = vec![0.0f64; self.eval.len()];
-                self.eval.eval_row(i, &mut data);
+                let mut data = vec![0.0f64; self.source.len()];
+                self.source.fill_row(i, &mut data);
                 KernelRow::from_f64(data, self.dtype)
             }
         }
@@ -359,7 +450,7 @@ impl KernelCache {
             self.touch(slot);
             return self.slots[slot].data.get(i);
         }
-        self.eval.eval(i, j)
+        self.source.value(i, j)
     }
 
     /// Drop all cached rows (e.g. when the training set changes).
@@ -726,6 +817,45 @@ mod tests {
             KernelEval::new(view, Kernel::Linear),
             1 << 20,
         );
+    }
+
+    #[test]
+    fn sharded_source_rows_bit_identical_to_in_ram() {
+        use crate::data::{read_libsvm, write_libsvm, ShardedDataset};
+        use crate::kernel::ShardRowSource;
+        let n = 18;
+        let data: Vec<f32> = (0..n * 3).map(|i| ((i * 7) % 13) as f32 * 0.25).collect();
+        let ds = Dataset::new(
+            "shard_local",
+            DataMatrix::dense(n, 3, data),
+            (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+        );
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        let path = std::env::temp_dir().join("alphaseed_cache_sharded.svm");
+        std::fs::write(&path, &buf).unwrap();
+        let kernel = Kernel::rbf(0.3);
+        let in_ram = KernelEval::new(read_libsvm(&path).unwrap(), kernel);
+        let sharded = Arc::new(ShardedDataset::shard_file(&path, 150).unwrap());
+        assert!(sharded.n_shards() > 1);
+        let source = Arc::new(ShardRowSource::new(sharded, kernel, 2));
+        let mut c = KernelCache::with_sharded_source(source, 1 << 20);
+        assert!(c.is_sharded());
+        assert!(c.try_eval().is_none());
+        assert_eq!(c.kernel(), kernel);
+        assert_eq!(c.n(), n);
+        let mut direct = vec![0.0; n];
+        for i in 0..n {
+            in_ram.eval_row(i, &mut direct);
+            let got = c.row(i).to_f64_vec();
+            for j in 0..n {
+                assert_eq!(got[j].to_bits(), direct[j].to_bits(), "({i},{j})");
+            }
+        }
+        // scalar fallback goes through ShardRowSource::value
+        c.clear();
+        in_ram.eval_row(4, &mut direct);
+        assert_eq!(c.value(4, 9).to_bits(), direct[9].to_bits());
     }
 
     #[test]

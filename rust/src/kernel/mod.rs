@@ -8,14 +8,21 @@
 //! For concurrent workloads (the parallel grid scheduler), a sharded
 //! read-mostly [`SharedKernelCache`] holds rows once per process and backs
 //! any number of per-run [`KernelCache`]s over the same dataset.
+//!
+//! For out-of-core datasets, a [`ShardRowSource`] fills the same caches
+//! from an on-disk [`ShardedDataset`](crate::data::ShardedDataset) with a
+//! bounded number of shards resident, producing bit-identical rows
+//! (docs/DISTRIBUTED.md §2).
 
 mod cache;
 mod dtype;
 mod function;
 mod shared;
+mod sharded;
 pub mod simd;
 
 pub use cache::{CacheStats, KernelCache};
 pub use dtype::{CacheDtype, KernelRow, RowView};
 pub use function::{Kernel, KernelEval};
 pub use shared::SharedKernelCache;
+pub use sharded::{ShardRowSource, DEFAULT_RESIDENT_SHARDS};

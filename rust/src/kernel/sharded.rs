@@ -1,0 +1,247 @@
+//! Shard-backed kernel row source: full-dataset kernel rows computed from
+//! an out-of-core [`ShardedDataset`] without the full dataset resident
+//! (docs/DISTRIBUTED.md §2).
+//!
+//! A [`ShardRowSource`] keeps a bounded FIFO of loaded shards and fills a
+//! kernel row K(xᵢ, ·) shard-slice by shard-slice: the query row comes
+//! from row `i`'s home shard, each output slice is the dot-product sweep
+//! against one resident shard, and [`Kernel::apply_row`] finishes the
+//! slice with that shard's cached `sq_norms`.
+//!
+//! **Bit-identity:** every element of the assembled row carries the exact
+//! bits an in-RAM [`KernelEval::eval_row`](super::KernelEval::eval_row)
+//! over the full dataset would produce, because each primitive is
+//! per-element over the same operand bits — `row_dots_dense` computes each
+//! output independently as `dot(q, rowⱼ)`, the sparse merge-join dot is
+//! symmetric, `apply_row` is element-wise, and the manifest forces every
+//! shard onto the file-global storage kind so the accumulation order
+//! cannot diverge. Pinned by `tests/stream_shard.rs` and the module tests
+//! below.
+//!
+//! **Failure semantics:** shard loads happen lazily inside row fills,
+//! which have no error channel; an I/O or parse failure here panics with
+//! the shard index and source path. The grid worker catches the panic at
+//! its job boundary and reports an error frame (docs/DISTRIBUTED.md §4).
+
+use super::function::Kernel;
+use crate::data::{DataMatrix, Dataset, ShardedDataset};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// How many loaded shards a [`ShardRowSource`] keeps resident by default.
+pub const DEFAULT_RESIDENT_SHARDS: usize = 4;
+
+#[derive(Debug)]
+struct Resident {
+    map: HashMap<usize, Arc<Dataset>>,
+    /// FIFO of resident shard indices (matching the shared cache's
+    /// deterministic eviction style).
+    order: VecDeque<usize>,
+}
+
+/// A kernel row source over a [`ShardedDataset`]: computes full-length
+/// rows K(xᵢ, ·) while holding at most `max_resident` shards in memory.
+///
+/// Thread-safe: concurrent fills share the resident-shard FIFO behind a
+/// mutex; a shard raced by two threads is loaded by both and the first
+/// insert wins (same adopt-the-winner policy as
+/// [`SharedKernelCache`](super::SharedKernelCache)).
+#[derive(Debug)]
+pub struct ShardRowSource {
+    shards: Arc<ShardedDataset>,
+    kernel: Kernel,
+    resident: Mutex<Resident>,
+    max_resident: usize,
+}
+
+impl ShardRowSource {
+    /// Bind `kernel` to a sharded dataset, keeping at most `max_resident`
+    /// shards loaded (minimum 2: a query's home shard plus the shard
+    /// being swept).
+    pub fn new(shards: Arc<ShardedDataset>, kernel: Kernel, max_resident: usize) -> ShardRowSource {
+        ShardRowSource {
+            shards,
+            kernel,
+            resident: Mutex::new(Resident {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            max_resident: max_resident.max(2),
+        }
+    }
+
+    /// Total rows (the length of every filled kernel row).
+    pub fn n(&self) -> usize {
+        self.shards.total_rows()
+    }
+
+    /// The kernel function rows are computed with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The underlying sharded dataset.
+    pub fn shards(&self) -> &Arc<ShardedDataset> {
+        &self.shards
+    }
+
+    /// Shards currently resident (telemetry/tests).
+    pub fn resident_shards(&self) -> usize {
+        self.resident.lock().expect("shard source lock poisoned").map.len()
+    }
+
+    /// Fetch shard `s`, loading it outside the lock on a miss (a racing
+    /// loader's insert wins; the loser adopts it).
+    fn shard(&self, s: usize) -> Arc<Dataset> {
+        {
+            let res = self.resident.lock().expect("shard source lock poisoned");
+            if let Some(d) = res.map.get(&s) {
+                return Arc::clone(d);
+            }
+        }
+        let loaded = Arc::new(self.shards.load_shard(s).unwrap_or_else(|e| {
+            panic!(
+                "loading shard {s} of {}: {e}",
+                self.shards.manifest().path.display()
+            )
+        }));
+        let mut res = self.resident.lock().expect("shard source lock poisoned");
+        if let Some(d) = res.map.get(&s) {
+            return Arc::clone(d);
+        }
+        while res.order.len() >= self.max_resident {
+            if let Some(old) = res.order.pop_front() {
+                res.map.remove(&old);
+            }
+        }
+        res.order.push_back(s);
+        res.map.insert(s, Arc::clone(&loaded));
+        loaded
+    }
+
+    /// Fill the full kernel row K(xᵢ, ·) into `out` (len = [`n`]
+    /// (ShardRowSource::n)), shard slice by shard slice — bit-identical to
+    /// an in-RAM `KernelEval::eval_row` over the full dataset.
+    pub fn fill_row(&self, i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.n());
+        let (home_shard, local) = self.shards.shard_of_row(i);
+        let home = self.shard(home_shard);
+        let sq_i = home.sq_norms[local];
+        for s in 0..self.shards.n_shards() {
+            let other = if s == home_shard {
+                Arc::clone(&home)
+            } else {
+                self.shard(s)
+            };
+            let start = self.shards.shard_start_row(s);
+            let slice = &mut out[start..start + other.len()];
+            match (&home.x, &other.x) {
+                (
+                    DataMatrix::Dense { cols, data, .. },
+                    DataMatrix::Dense {
+                        cols: ocols,
+                        data: odata,
+                        ..
+                    },
+                ) => {
+                    debug_assert_eq!(cols, ocols);
+                    let q = &data[local * cols..(local + 1) * cols];
+                    super::simd::row_dots_dense(q, odata, *ocols, slice);
+                }
+                _ => {
+                    for (j, o) in slice.iter_mut().enumerate() {
+                        *o = home.x.dot_cross(local, &other.x, j);
+                    }
+                }
+            }
+            self.kernel.apply_row(slice, sq_i, &other.sq_norms);
+        }
+    }
+
+    /// Single kernel value K(xᵢ, xⱼ) — the scalar counterpart of
+    /// [`fill_row`](ShardRowSource::fill_row), bit-identical to an in-RAM
+    /// `KernelEval::eval`.
+    pub fn value(&self, i: usize, j: usize) -> f64 {
+        let (si, li) = self.shards.shard_of_row(i);
+        let (sj, lj) = self.shards.shard_of_row(j);
+        let a = self.shard(si);
+        let b = if sj == si { Arc::clone(&a) } else { self.shard(sj) };
+        let dot = a.x.dot_cross(li, &b.x, lj);
+        self.kernel.from_dot(dot, a.sq_norms[li], b.sq_norms[lj])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::function::KernelEval;
+    use super::*;
+    use crate::data::{read_libsvm, write_libsvm};
+    use std::path::PathBuf;
+
+    fn dense_file() -> PathBuf {
+        let ds = crate::data::synth::generate("heart", Some(30), 11);
+        let mut buf = Vec::new();
+        write_libsvm(&ds, &mut buf).unwrap();
+        let path = std::env::temp_dir().join("alphaseed_sharded_dense.svm");
+        std::fs::write(&path, &buf).unwrap();
+        path
+    }
+
+    fn sparse_file() -> PathBuf {
+        let mut text = String::new();
+        for i in 0..24 {
+            let a = (i % 9) + 1;
+            let b = ((i * 5) % 11) + 2;
+            text.push_str(&format!(
+                "{} {}:{} {}:0.5\n",
+                if i % 2 == 0 { 1 } else { -1 },
+                a.min(b),
+                (i + 1) as f64 * 0.25,
+                a.max(b) + 1
+            ));
+        }
+        let path = std::env::temp_dir().join("alphaseed_sharded_sparse.svm");
+        std::fs::write(&path, &text).unwrap();
+        path
+    }
+
+    fn assert_rows_match(path: &PathBuf, shard_bytes: usize, kernel: Kernel) {
+        let full = read_libsvm(path).unwrap();
+        let eval = KernelEval::new(full.clone(), kernel);
+        let sharded = Arc::new(ShardedDataset::shard_file(path, shard_bytes).unwrap());
+        assert!(sharded.n_shards() > 1, "test must exercise multiple shards");
+        let source = ShardRowSource::new(Arc::clone(&sharded), kernel, 2);
+        let n = full.len();
+        let (mut got, mut expect) = (vec![0.0; n], vec![0.0; n]);
+        for i in 0..n {
+            source.fill_row(i, &mut got);
+            eval.eval_row(i, &mut expect);
+            for j in 0..n {
+                assert_eq!(
+                    got[j].to_bits(),
+                    expect[j].to_bits(),
+                    "{kernel:?} i={i} j={j}"
+                );
+            }
+            assert_eq!(source.value(i, (i * 7) % n).to_bits(), expect[(i * 7) % n].to_bits());
+        }
+        assert!(
+            source.resident_shards() <= 2,
+            "residency must stay bounded (got {})",
+            source.resident_shards()
+        );
+    }
+
+    #[test]
+    fn dense_rows_bit_identical_to_in_ram() {
+        let path = dense_file();
+        assert_rows_match(&path, 200, Kernel::rbf(0.2));
+        assert_rows_match(&path, 200, Kernel::Linear);
+    }
+
+    #[test]
+    fn sparse_rows_bit_identical_to_in_ram() {
+        let path = sparse_file();
+        assert_rows_match(&path, 60, Kernel::rbf(0.7));
+    }
+}

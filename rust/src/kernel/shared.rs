@@ -24,7 +24,8 @@
 //!   shard's `Arc`; readers holding clones are unaffected.
 
 use super::dtype::{CacheDtype, KernelRow};
-use super::function::KernelEval;
+use super::function::{Kernel, KernelEval};
+use super::sharded::ShardRowSource;
 use crate::kernel::CacheStats;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -39,13 +40,52 @@ struct Shard {
     order: Mutex<VecDeque<usize>>,
 }
 
+/// Where a [`SharedKernelCache`] miss computes its rows from: an in-RAM
+/// evaluator over the full dataset, or an out-of-core
+/// [`ShardRowSource`] that never holds the full dataset resident. Both
+/// produce bit-identical rows (the shard source's contract), so the cache
+/// above cannot tell them apart.
+enum RowSource {
+    InRam(KernelEval),
+    Shards(Arc<ShardRowSource>),
+}
+
+impl RowSource {
+    fn len(&self) -> usize {
+        match self {
+            RowSource::InRam(e) => e.len(),
+            RowSource::Shards(s) => s.n(),
+        }
+    }
+
+    fn fill_row(&self, i: usize, out: &mut [f64]) {
+        match self {
+            RowSource::InRam(e) => e.eval_row(i, out),
+            RowSource::Shards(s) => s.fill_row(i, out),
+        }
+    }
+
+    fn kernel(&self) -> Kernel {
+        match self {
+            RowSource::InRam(e) => e.kernel,
+            RowSource::Shards(s) => s.kernel(),
+        }
+    }
+}
+
 /// Concurrent kernel-row store over one (dataset, kernel) pair. Safe to
 /// share behind an `Arc` between any number of threads; typically one per
 /// γ value of a grid sweep, backing each cell's
 /// [`KernelCache`](super::KernelCache) via
 /// [`KernelCache::with_shared_backing`](super::KernelCache::with_shared_backing).
+///
+/// Rows can come from an in-RAM [`KernelEval`] (the default constructors)
+/// or from an out-of-core [`ShardRowSource`]
+/// ([`with_byte_budget_sharded`](SharedKernelCache::with_byte_budget_sharded)),
+/// in which case a full-dataset row store runs without the full dataset
+/// ever resident — only the cached rows and a bounded set of shards.
 pub struct SharedKernelCache {
-    eval: KernelEval,
+    source: RowSource,
     shards: Vec<Shard>,
     capacity_rows_per_shard: usize,
     dtype: CacheDtype,
@@ -70,10 +110,19 @@ impl SharedKernelCache {
         capacity_rows: usize,
         dtype: CacheDtype,
     ) -> Arc<SharedKernelCache> {
+        Self::from_source(RowSource::InRam(eval), shards, capacity_rows, dtype)
+    }
+
+    fn from_source(
+        source: RowSource,
+        shards: usize,
+        capacity_rows: usize,
+        dtype: CacheDtype,
+    ) -> Arc<SharedKernelCache> {
         let shards = shards.max(1);
         let per_shard = (capacity_rows / shards).max(1);
         Arc::new(SharedKernelCache {
-            eval,
+            source,
             shards: (0..shards)
                 .map(|_| Shard {
                     rows: RwLock::new(HashMap::new()),
@@ -107,14 +156,72 @@ impl SharedKernelCache {
         Self::new_dtype(eval, DEFAULT_SHARDS, rows, dtype)
     }
 
-    /// The bound evaluator (dataset + kernel).
+    /// Store backed by an out-of-core [`ShardRowSource`] instead of an
+    /// in-RAM evaluator, sized in bytes with the default shard count and
+    /// f64 storage. Misses fill rows shard-slice by shard-slice; the full
+    /// dataset is never resident. Cached rows are bit-identical to the
+    /// in-RAM constructors' (the shard source's contract, pinned by
+    /// `tests/stream_shard.rs`).
+    pub fn with_byte_budget_sharded(
+        source: Arc<ShardRowSource>,
+        bytes: usize,
+    ) -> Arc<SharedKernelCache> {
+        Self::with_byte_budget_sharded_dtype(source, bytes, CacheDtype::F64)
+    }
+
+    /// Like [`with_byte_budget_sharded`](Self::with_byte_budget_sharded)
+    /// with an explicit row-storage precision.
+    pub fn with_byte_budget_sharded_dtype(
+        source: Arc<ShardRowSource>,
+        bytes: usize,
+        dtype: CacheDtype,
+    ) -> Arc<SharedKernelCache> {
+        let n = source.n().max(1);
+        let rows = (bytes / (n * dtype.element_bytes())).max(DEFAULT_SHARDS);
+        Self::from_source(RowSource::Shards(source), DEFAULT_SHARDS, rows, dtype)
+    }
+
+    /// The bound in-RAM evaluator (dataset + kernel).
+    ///
+    /// # Panics
+    /// For a shard-backed store, which has no in-RAM evaluator — use
+    /// [`try_eval`](Self::try_eval) or [`kernel`](Self::kernel) when the
+    /// store may be out-of-core.
     pub fn eval(&self) -> &KernelEval {
-        &self.eval
+        self.try_eval()
+            .expect("shared cache is shard-backed; it has no in-RAM evaluator (use try_eval)")
+    }
+
+    /// The in-RAM evaluator when this store has one (`None` when
+    /// shard-backed).
+    pub fn try_eval(&self) -> Option<&KernelEval> {
+        match &self.source {
+            RowSource::InRam(e) => Some(e),
+            RowSource::Shards(_) => None,
+        }
+    }
+
+    /// The shard source when this store is shard-backed.
+    pub fn shard_source(&self) -> Option<&Arc<ShardRowSource>> {
+        match &self.source {
+            RowSource::InRam(_) => None,
+            RowSource::Shards(s) => Some(s),
+        }
+    }
+
+    /// True when rows fill from an out-of-core shard source.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.source, RowSource::Shards(_))
+    }
+
+    /// The kernel function rows are computed with (works in both modes).
+    pub fn kernel(&self) -> Kernel {
+        self.source.kernel()
     }
 
     /// Number of instances (row length).
     pub fn n(&self) -> usize {
-        self.eval.len()
+        self.source.len()
     }
 
     /// Storage precision of resident rows.
@@ -130,8 +237,8 @@ impl SharedKernelCache {
             return row.clone();
         }
         // Miss: evaluate with no lock held.
-        let mut data = vec![0.0f64; self.eval.len()];
-        self.eval.eval_row(i, &mut data);
+        let mut data = vec![0.0f64; self.source.len()];
+        self.source.fill_row(i, &mut data);
         let arc = KernelRow::from_f64(data, self.dtype);
 
         let mut rows = shard.rows.write().expect("shared cache poisoned");
@@ -276,6 +383,36 @@ mod tests {
                 let narrowed = (direct[j] as f32) as f64;
                 assert_eq!(row.get(j).to_bits(), narrowed.to_bits(), "({i},{j})");
                 assert!((row.get(j) - direct[j]).abs() <= 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_backing_rows_bit_identical_to_in_ram() {
+        use crate::data::{write_libsvm, ShardedDataset};
+        use crate::kernel::ShardRowSource;
+        let n = 20;
+        let ev = eval(n);
+        let mut buf = Vec::new();
+        write_libsvm(&ev.ds, &mut buf).unwrap();
+        let path = std::env::temp_dir().join("alphaseed_shared_sharded.svm");
+        std::fs::write(&path, &buf).unwrap();
+        let full = crate::data::read_libsvm(&path).unwrap();
+        let in_ram = KernelEval::new(full, ev.kernel);
+        let sharded = Arc::new(ShardedDataset::shard_file(&path, 120).unwrap());
+        assert!(sharded.n_shards() > 1);
+        let source = ShardRowSource::new(sharded, ev.kernel, 2);
+        let cache = SharedKernelCache::with_byte_budget_sharded(Arc::new(source), 1 << 20);
+        assert!(cache.is_sharded());
+        assert!(cache.try_eval().is_none());
+        assert_eq!(cache.kernel(), in_ram.kernel);
+        assert_eq!(cache.n(), n);
+        for i in 0..n {
+            let row = cache.row(i).to_f64_vec();
+            let mut direct = vec![0.0; n];
+            in_ram.eval_row(i, &mut direct);
+            for j in 0..n {
+                assert_eq!(row[j].to_bits(), direct[j].to_bits(), "({i},{j})");
             }
         }
     }

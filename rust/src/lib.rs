@@ -25,8 +25,8 @@
 //! Python never runs at request time: `runtime::XlaBackend` loads the AOT
 //! artifacts through PJRT and serves bulk kernel evaluations to the solver.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `docs/ARCHITECTURE.md` for the load-bearing design notes and
+//! `docs/DISTRIBUTED.md` for the out-of-core / multi-process tier.
 //!
 //! ## Quickstart
 //!
@@ -51,8 +51,36 @@
 //! assert_eq!(svr.rounds.len(), 3);
 //! assert!(svr.mse().is_finite());
 //! ```
+//!
+//! ## Out-of-core streaming
+//!
+//! Datasets larger than RAM stream through `data::LibsvmStream` in
+//! bounded-memory chunks, or are sharded on disk and served to the kernel
+//! caches a few shards at a time (`kernel::ShardRowSource`); grids scale
+//! past one process via `coordinator::run_sharded_grid`. Every tier is
+//! bit-identical to the in-RAM path — see `docs/DISTRIBUTED.md`:
+//!
+//! ```
+//! use alphaseed::data::{read_libsvm, read_libsvm_streamed};
+//! use std::io::Write;
+//!
+//! let path = std::env::temp_dir().join(format!("alphaseed-doc-{}.svm", std::process::id()));
+//! let mut f = std::fs::File::create(&path).unwrap();
+//! writeln!(f, "+1 1:0.5 3:1.25").unwrap();
+//! writeln!(f, "-1 2:-0.75").unwrap();
+//! drop(f);
+//!
+//! // 8-byte chunks force records to straddle chunk boundaries; the
+//! // streamed load is still identical to the in-RAM one.
+//! let full = read_libsvm(&path).unwrap();
+//! let streamed = read_libsvm_streamed(&path, 8).unwrap();
+//! assert_eq!(streamed.y, full.y);
+//! assert_eq!(streamed.len(), full.len());
+//! std::fs::remove_file(&path).unwrap();
+//! ```
 
 pub mod config;
+#[deny(missing_docs)]
 pub mod coordinator;
 // The paper-facing API layers keep their rustdoc complete (`cargo doc`
 // fails the build on a bare item): the CV drivers and seeding algorithms,

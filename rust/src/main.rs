@@ -9,6 +9,7 @@
 //!   experiment  regenerate the paper's tables/figure (table1|table2|table3|fig2|all)
 //!   probe       measure PJRT artifact dispatch overhead vs native
 //!   serve       batched, hot-swappable TCP/JSON-lines prediction service
+//!   worker      grid-worker process for sharded multi-process grid search
 //!   benchgate   CI bench-regression gate over committed baselines
 
 use alphaseed::config::{RunConfig, RunProfile};
@@ -60,6 +61,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("probe") => cmd_probe(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
+        Some("worker") => cmd_worker(args),
         Some("ovo") => cmd_ovo(args),
         Some("benchgate") => cmd_benchgate(args),
         Some(other) => bail!("unknown subcommand '{other}' (run with no args for help)"),
@@ -74,7 +76,7 @@ fn print_help() {
     println!(
         "alphaseed — SVM k-fold cross-validation with alpha seeding (AAAI'17 reproduction)\n\
          \n\
-         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe|ovo|serve|benchgate> [options]\n\
+         USAGE: alphaseed <cv|loo|train|grid|datagen|experiment|probe|ovo|serve|worker|benchgate> [options]\n\
          \n\
          common options:\n\
            --task <t>          csvc|svr|oneclass|multiclass    (default csvc)\n\
@@ -112,6 +114,17 @@ fn print_help() {
            --eta <int>         halving keep fraction 1/eta     (default 3)\n\
            --min-rounds <int>  halving round-0 folds per cell  (default 1)\n\
            --eps-grid <list>   SVR tube-width axis (with --task svr)\n\
+           --workers <list>    host:port grid-worker addresses; ships per-γ\n\
+                               node groups to worker processes (csvc only;\n\
+                               bit-identical to the single-process run —\n\
+                               docs/DISTRIBUTED.md §3)\n\
+           --shard-bytes <int> shard the --data file on disk and fill worker\n\
+                               kernel caches from resident shards (§2)\n\
+           --points-out <file> write the evaluated cells as deterministic\n\
+                               JSON (wall times excluded; CI diffs sharded\n\
+                               vs single-process dumps byte-for-byte)\n\
+         worker options:\n\
+           --port <int>        TCP port (default 7879; 0 picks a free port)\n\
          serve options:\n\
            --task <t>          csvc|svr|oneclass model to train and serve\n\
            --port <int>        TCP port (default 7878; 0 picks a free port)\n\
@@ -431,6 +444,11 @@ fn cmd_cv_csvc(args: &Args) -> Result<()> {
         "no-share-rows",
         "row sharing is a grid-level concern; a single CV run builds one seeding cache",
     )?;
+    reject_opt(
+        args,
+        "shard-bytes",
+        "shard-backed row stores apply to grid runs; a single CV run keeps its dataset resident",
+    )?;
     let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
@@ -468,6 +486,11 @@ fn cmd_loo(args: &Args) -> Result<()> {
         "no-share-rows",
         "row sharing is a grid-level concern; a LOO run builds one seeding cache",
     )?;
+    reject_opt(
+        args,
+        "shard-bytes",
+        "shard-backed row stores apply to grid runs; a LOO chain keeps its dataset resident",
+    )?;
     let profile = run_profile(args, RunProfile::default())?;
     args.reject_unknown()?;
 
@@ -477,12 +500,7 @@ fn cmd_loo(args: &Args) -> Result<()> {
         c,
         seeder.as_ref(),
         alphaseed::cv::LooOptions {
-            eps: profile.eps,
-            shrinking: profile.shrinking,
-            cache_bytes: profile.cache_bytes,
-            seed_cache_bytes: profile.seed_cache_bytes,
-            rng_seed: profile.rng_seed,
-            threads: profile.threads,
+            profile,
             max_rounds,
         },
     );
@@ -601,7 +619,65 @@ fn cmd_grid_svr(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Print the evaluated C-SVC grid and its winner (shared by the
+/// single-process and `--workers` paths, whose cells are bit-identical).
+fn print_csvc_grid(g: &alphaseed::coordinator::GridResult, title: String) {
+    let mut t = Table::new(title)
+        .header(&["C", "gamma", "accuracy(%)", "rounds", "iterations", "time(s)"]);
+    for p in &g.points {
+        t.row(vec![
+            format!("{}", p.c),
+            format!("{}", p.gamma),
+            format!("{:.2}", p.accuracy * 100.0),
+            p.rounds.to_string(),
+            p.iterations.to_string(),
+            fmt_secs(p.elapsed),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = g.best();
+    println!(
+        "best: C={} gamma={} accuracy={:.2}%",
+        best.c,
+        best.gamma,
+        best.accuracy * 100.0
+    );
+}
+
+/// Write the evaluated cells as deterministic JSON: only seed-determined
+/// fields (C, γ, accuracy, iterations, rounds) — wall times are excluded
+/// so a sharded run's dump diffs byte-for-byte against a single-process
+/// run on the same seed (the CI smoke test does exactly that).
+fn write_grid_points(g: &alphaseed::coordinator::GridResult, path: &str) -> Result<()> {
+    let rows = Json::arr(g.points.iter().map(|p| {
+        Json::obj(vec![
+            ("c", Json::num(p.c)),
+            ("gamma", Json::num(p.gamma)),
+            ("accuracy", Json::num(p.accuracy)),
+            // u64 iteration counts can exceed 2^53; decimal strings cross
+            // the JSON boundary losslessly (same rule as the wire frames)
+            ("iterations", Json::str(p.iterations.to_string())),
+            ("rounds", Json::num(p.rounds as f64)),
+        ])
+    }));
+    let doc = Json::obj(vec![("points", rows)]);
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing grid points to {path}"))?;
+    println!("(cells written to {path})");
+    Ok(())
+}
+
 fn cmd_grid_csvc(args: &Args) -> Result<()> {
+    let points_out = args.opt_str("points-out");
+    if let Some(workers) = alphaseed::util::cli::worker_addrs(args)? {
+        return cmd_grid_csvc_sharded(args, &workers, points_out);
+    }
+    reject_opt(
+        args,
+        "shard-bytes",
+        "shard-backed row stores are wired through the distributed path; add --workers \
+         (docs/DISTRIBUTED.md §2)",
+    )?;
     let (ds, _, _) = load_dataset(args)?;
     let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
@@ -629,32 +705,123 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
             seed_gamma,
         },
     );
-    let mut t = Table::new(format!(
-        "grid search on {} ({} cells, seeder {seeder}{}, {} s)",
-        ds.name,
-        g.points.len(),
-        if warm_c { ", warm-C chains" } else { "" },
-        fmt_secs(started.elapsed())
-    ))
-    .header(&["C", "gamma", "accuracy(%)", "rounds", "iterations", "time(s)"]);
-    for p in &g.points {
-        t.row(vec![
-            format!("{}", p.c),
-            format!("{}", p.gamma),
-            format!("{:.2}", p.accuracy * 100.0),
-            p.rounds.to_string(),
-            p.iterations.to_string(),
-            fmt_secs(p.elapsed),
-        ]);
-    }
-    print!("{}", t.render());
-    let best = g.best();
-    println!(
-        "best: C={} gamma={} accuracy={:.2}%",
-        best.c,
-        best.gamma,
-        best.accuracy * 100.0
+    print_csvc_grid(
+        &g,
+        format!(
+            "grid search on {} ({} cells, seeder {seeder}{}, {} s)",
+            ds.name,
+            g.points.len(),
+            if warm_c { ", warm-C chains" } else { "" },
+            fmt_secs(started.elapsed())
+        ),
     );
+    if let Some(path) = points_out {
+        write_grid_points(&g, &path)?;
+    }
+    Ok(())
+}
+
+/// `grid --workers a:p,b:p`: ship per-γ node groups to grid-worker
+/// processes and reassemble the table. Workers evaluate independent cells
+/// only, so the reuse/budget knobs that couple cells are rejected here
+/// with targeted messages (docs/DISTRIBUTED.md §3–§4).
+fn cmd_grid_csvc_sharded(
+    args: &Args,
+    workers: &[String],
+    points_out: Option<String>,
+) -> Result<()> {
+    if args.flag("warm-c") {
+        bail!(
+            "--warm-c chains ascending C within a column; sharded dispatch runs independent \
+             cells only (run without --workers to chain)"
+        );
+    }
+    let (policy, seed_gamma) = grid_policy_args(args, false, false)?;
+    if seed_gamma {
+        bail!(
+            "--seed-gamma seeds across adjacent γ cells; sharded dispatch runs independent \
+             cells only (run without --workers to chain)"
+        );
+    }
+    if !matches!(policy, BudgetPolicy::Uniform) {
+        bail!(
+            "--budget-policy halving pauses cells at fold boundaries, which needs the \
+             in-process scheduler; sharded dispatch runs the uniform budget"
+        );
+    }
+    let shard_bytes = args.opt_parse::<usize>("shard-bytes")?;
+    // Name the dataset instead of loading it: each worker loads its own
+    // copy (or fills kernel caches from disk shards) from the spec.
+    let spec = if let Some(path) = args.opt_str("data") {
+        alphaseed::coordinator::DatasetSpec::File { path, shard_bytes }
+    } else {
+        if shard_bytes.is_some() {
+            bail!(
+                "--shard-bytes shards a LibSVM file on disk; synthetic analogues are \
+                 generated in memory (point --data at a file, e.g. via `alphaseed datagen`)"
+            );
+        }
+        let name = args.str_or("dataset", "heart");
+        if synth::spec(&name).is_none() {
+            bail!("unknown dataset '{name}'");
+        }
+        alphaseed::coordinator::DatasetSpec::Synth {
+            name,
+            n: args.opt_parse::<usize>("n")?,
+            seed: args.parse_or::<u64>("seed", 42)?,
+        }
+    };
+    let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
+    let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
+    let k = args.parse_or("k", 5usize)?;
+    let seeder = args.str_or("seeder", "sir");
+    let profile = run_profile(
+        args,
+        alphaseed::coordinator::GridOptions::default().profile,
+    )?;
+    args.reject_unknown()?;
+
+    let started = std::time::Instant::now();
+    let g = alphaseed::coordinator::run_sharded_grid(
+        &spec,
+        &cs,
+        &gammas,
+        &alphaseed::coordinator::GridOptions {
+            profile,
+            k,
+            seeder: seeder.clone(),
+            warm_c: false,
+            policy: BudgetPolicy::Uniform,
+            seed_gamma: false,
+        },
+        workers,
+    )?;
+    print_csvc_grid(
+        &g,
+        format!(
+            "sharded grid search ({} cells, seeder {seeder}, {} workers, {} s)",
+            g.points.len(),
+            workers.len(),
+            fmt_secs(started.elapsed())
+        ),
+    );
+    if let Some(path) = points_out {
+        write_grid_points(&g, &path)?;
+    }
+    Ok(())
+}
+
+/// Run a grid-worker process: `alphaseed worker --port 7879`. A driver
+/// running `grid --workers host:port,…` ships it per-γ node groups over
+/// TCP/JSON lines and collects the evaluated cells back; the worker holds
+/// no state between requests (docs/DISTRIBUTED.md §3).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let port = args.parse_or("port", 7879u16)?;
+    args.reject_unknown()?;
+    let worker = std::sync::Arc::new(alphaseed::coordinator::GridWorker::new());
+    worker.serve(&format!("127.0.0.1:{port}"), |addr| {
+        println!("grid worker listening on {addr} — send {{\"op\":\"grid\",…}} lines");
+    })?;
     Ok(())
 }
 

@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Call accounting (exposed for the ablation bench and EXPERIMENTS.md).
+/// Call accounting (exposed for the ablation bench).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct XlaStats {
     pub artifact_calls: u64,

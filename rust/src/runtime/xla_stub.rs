@@ -13,7 +13,7 @@ use crate::data::Dataset;
 use anyhow::{bail, Result};
 use std::path::Path;
 
-/// Call accounting (exposed for the ablation bench and EXPERIMENTS.md).
+/// Call accounting (exposed for the ablation bench).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct XlaStats {
     pub artifact_calls: u64,

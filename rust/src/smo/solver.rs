@@ -496,7 +496,7 @@ impl Solver {
     /// K(t,t); O(1) for RBF (=1), computed otherwise.
     #[inline]
     fn diag(&mut self, t: usize) -> f64 {
-        match self.cache.eval().kernel {
+        match self.cache.kernel() {
             crate::kernel::Kernel::Rbf { .. } => 1.0,
             _ => self.cache.value(t, t),
         }
@@ -988,7 +988,7 @@ impl GeneralSolver {
     /// K(map[t], map[t]); O(1) for RBF (=1), computed otherwise.
     #[inline]
     fn diag(&mut self, t: usize) -> f64 {
-        match self.cache.eval().kernel {
+        match self.cache.kernel() {
             crate::kernel::Kernel::Rbf { .. } => 1.0,
             _ => {
                 let dt = self.spec.map[t];

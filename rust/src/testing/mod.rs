@@ -4,7 +4,8 @@
 //! provides the minimal machinery the invariant suites need: a seeded
 //! case runner with failure reporting and first-failure shrinking over a
 //! numeric size parameter, plus generators for random SVM problems.
-//! (Documented substitution — DESIGN.md §4.)
+//! (A documented offline-registry substitution — README.md "Offline-build
+//! notes".)
 
 use crate::data::{DataMatrix, Dataset};
 use crate::util::rng::Pcg32;

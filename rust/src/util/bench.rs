@@ -1,5 +1,6 @@
 //! Minimal benchmarking harness for the `cargo bench` targets (the offline
-//! registry has no criterion — documented substitution, DESIGN.md §4).
+//! registry has no criterion — a documented substitution, README.md
+//! "Offline-build notes").
 //!
 //! Measures wall time over warmup + sample iterations and prints
 //! mean / stddev / min, plus named one-shot experiment timings for the

@@ -269,6 +269,32 @@ pub fn run_profile(args: &Args, defaults: RunProfile) -> Result<RunProfile, CliE
     Ok(p)
 }
 
+/// Parse the `--workers host:port,host:port` list for the sharded grid
+/// dispatcher. Returns `None` when the flag is absent (single-process
+/// run); rejects an empty list so `--workers ""` can't silently degrade
+/// to local execution.
+pub fn worker_addrs(args: &Args) -> Result<Option<Vec<String>>, CliError> {
+    match args.opt_str("workers") {
+        None => Ok(None),
+        Some(v) => {
+            let addrs: Vec<String> = v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if addrs.is_empty() {
+                return Err(CliError::BadValue {
+                    key: "workers".to_string(),
+                    value: v,
+                    expected: "comma-separated host:port list",
+                });
+            }
+            Ok(Some(addrs))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +398,29 @@ mod tests {
         let a = parse("cv --cache-mb lots");
         assert!(matches!(
             run_profile(&a, RunProfile::default()),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn worker_addrs_parsing() {
+        let a = parse("grid --workers 127.0.0.1:7879,127.0.0.1:7880");
+        assert_eq!(
+            worker_addrs(&a).unwrap(),
+            Some(vec!["127.0.0.1:7879".to_string(), "127.0.0.1:7880".to_string()])
+        );
+        let b = parse("grid");
+        assert_eq!(worker_addrs(&b).unwrap(), None);
+        // stray whitespace and trailing commas are tolerated
+        let c = Args::parse(["grid", "--workers", " a:1 , b:2 ,"]).unwrap();
+        assert_eq!(
+            worker_addrs(&c).unwrap(),
+            Some(vec!["a:1".to_string(), "b:2".to_string()])
+        );
+        // an all-empty list is an error, not a silent local run
+        let d = Args::parse(["grid", "--workers", " , "]).unwrap();
+        assert!(matches!(
+            worker_addrs(&d),
             Err(CliError::BadValue { .. })
         ));
     }

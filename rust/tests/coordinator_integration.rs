@@ -1,7 +1,7 @@
 //! Coordinator integration: job batches, grid search, and experiment
 //! drivers produce consistent, complete results.
 
-use alphaseed::config::{DatasetConfig, RunConfig};
+use alphaseed::config::{DatasetConfig, RunConfig, RunProfile};
 use alphaseed::coordinator::experiments;
 use alphaseed::coordinator::{grid_search, Coordinator, JobSpec};
 use alphaseed::data::synth::Hyper;
@@ -15,7 +15,7 @@ fn heart_spec(seeder: &str, k: usize) -> JobSpec {
         seeder: seeder.into(),
         k,
         max_rounds: None,
-        rng_seed: 17,
+        profile: RunProfile::default().with_rng_seed(17),
     }
 }
 

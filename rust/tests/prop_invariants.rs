@@ -1,5 +1,5 @@
 //! Property-based invariant suites over random SVM problems, driven by the
-//! in-repo `testing::prop` harness (DESIGN.md §6):
+//! in-repo `testing::prop` harness (`alphaseed::testing`):
 //!
 //!  (a) SMO output satisfies the KKT conditions within tolerance,
 //!  (b) every seeder emits a feasible α (box + Σyα = 0) — across

@@ -1,0 +1,221 @@
+//! Out-of-core tier contracts (docs/DISTRIBUTED.md):
+//!
+//! 1. the streaming LibSVM reader is **bit-identical** to the in-RAM
+//!    loader at any chunk size — including records that straddle chunk
+//!    boundaries — and reports malformed lines with the same message;
+//! 2. kernel caches filled from disk shards hand out rows whose bits
+//!    equal the in-RAM caches' rows;
+//! 3. a two-worker sharded grid search over real TCP returns every cell
+//!    bit-identical to the single-process uniform run on the same seed,
+//!    and a dead worker's cells are recovered, never dropped.
+
+use alphaseed::coordinator::{
+    grid_search_opts, run_sharded_grid, DatasetSpec, GridOptions, GridResult, GridWorker,
+};
+use alphaseed::data::{
+    read_libsvm, read_libsvm_streamed, synth, write_libsvm, Dataset, ShardedDataset,
+};
+use alphaseed::kernel::{Kernel, KernelCache, KernelEval, ShardRowSource, SharedKernelCache};
+use std::io::Write;
+use std::sync::{mpsc, Arc};
+
+/// Unique temp-file path per test (tests run concurrently in one process).
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("alphaseed-{}-{}.svm", tag, std::process::id()))
+}
+
+/// Write the heart analogue out as a LibSVM file and return (path, data).
+fn heart_file(tag: &str, n: usize, seed: u64) -> (std::path::PathBuf, Dataset) {
+    let ds = synth::generate("heart", Some(n), seed);
+    let path = temp_path(tag);
+    let file = std::fs::File::create(&path).expect("create temp file");
+    write_libsvm(&ds, std::io::BufWriter::new(file)).expect("write libsvm");
+    (path, ds)
+}
+
+fn assert_datasets_bit_identical(a: &Dataset, b: &Dataset, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: row count");
+    assert_eq!(a.dim(), b.dim(), "{what}: column count");
+    assert_eq!(a.x.is_sparse(), b.x.is_sparse(), "{what}: storage kind");
+    assert_eq!(a.name, b.name, "{what}: name");
+    for i in 0..a.len() {
+        assert_eq!(a.y[i].to_bits(), b.y[i].to_bits(), "{what}: label {i}");
+        assert_eq!(
+            a.sq_norms[i].to_bits(),
+            b.sq_norms[i].to_bits(),
+            "{what}: sq_norm {i}"
+        );
+    }
+    let (da, db) = (a.x.to_dense_vec(), b.x.to_dense_vec());
+    assert_eq!(da.len(), db.len(), "{what}: dense length");
+    for (j, (va, vb)) in da.iter().zip(&db).enumerate() {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{what}: feature element {j}");
+    }
+}
+
+#[test]
+fn streamed_load_matches_in_ram_at_any_chunk_size() {
+    let (path, _) = heart_file("stream", 60, 11);
+    let full = read_libsvm(&path).expect("in-RAM load");
+    // 7-byte chunks guarantee every record straddles a chunk boundary;
+    // the larger sizes cover "few rows per chunk" and "whole file".
+    for chunk_bytes in [7usize, 113, 1 << 20] {
+        let streamed = read_libsvm_streamed(&path, chunk_bytes).expect("streamed load");
+        assert_datasets_bit_identical(&streamed, &full, &format!("chunk_bytes={chunk_bytes}"));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn streamed_load_reports_malformed_lines_like_in_ram() {
+    let path = temp_path("malformed");
+    let mut f = std::fs::File::create(&path).expect("create temp file");
+    writeln!(f, "+1 1:0.5 2:1.0").expect("write");
+    writeln!(f, "-1 1:-0.25").expect("write");
+    writeln!(f, "+1 1:zero").expect("write");
+    drop(f);
+    let full_err = read_libsvm(&path).expect_err("in-RAM load must fail").to_string();
+    // tiny chunks put the bad line in its own late chunk, so this also
+    // checks the stream's global line numbering
+    let stream_err = read_libsvm_streamed(&path, 4)
+        .expect_err("streamed load must fail")
+        .to_string();
+    assert_eq!(stream_err, full_err);
+    assert!(full_err.contains("line 3"), "got: {full_err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn shard_backed_cache_rows_bit_identical_to_in_ram() {
+    let (path, _) = heart_file("shards", 50, 13);
+    let full = read_libsvm(&path).expect("in-RAM load");
+    let kernel = Kernel::rbf(0.2);
+    let shards = Arc::new(ShardedDataset::shard_file(&path, 256).expect("shard file"));
+    assert!(shards.n_shards() > 1, "test needs a multi-shard split");
+    assert_datasets_bit_identical(&shards.load_full(), &full, "shard reassembly");
+
+    // shared (per-γ) store: shard-filled rows vs in-RAM rows
+    let source = Arc::new(ShardRowSource::new(Arc::clone(&shards), kernel, 2));
+    let via_shards = SharedKernelCache::with_byte_budget_sharded(source, 1 << 20);
+    let in_ram = SharedKernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 1 << 20);
+    for i in 0..full.len() {
+        let (a, b) = (via_shards.row(i), in_ram.row(i));
+        for j in 0..full.len() {
+            assert_eq!(a.get(j).to_bits(), b.get(j).to_bits(), "shared row {i} col {j}");
+        }
+    }
+
+    // solver-facing cache: same contract through the LRU front end
+    let source = Arc::new(ShardRowSource::new(Arc::clone(&shards), kernel, 2));
+    let mut sharded_cache = KernelCache::with_sharded_source(source, 1 << 20);
+    let mut ram_cache = KernelCache::with_byte_budget(KernelEval::new(full.clone(), kernel), 1 << 20);
+    for i in 0..full.len() {
+        let a = sharded_cache.row(i).to_f64_vec();
+        let b = ram_cache.row(i).to_f64_vec();
+        for j in 0..full.len() {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "cache row {i} col {j}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Start a worker on an ephemeral port; returns (address, worker handle,
+/// join receiver that yields once `serve` has drained and returned).
+fn spawn_worker() -> (String, Arc<GridWorker>, mpsc::Receiver<()>) {
+    let worker = Arc::new(GridWorker::new());
+    let me = Arc::clone(&worker);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        me.serve("127.0.0.1:0", move |addr| addr_tx.send(addr).unwrap())
+            .expect("worker serve failed");
+        done_tx.send(()).ok();
+    });
+    let addr = addr_rx.recv().expect("worker never bound");
+    (addr.to_string(), worker, done_rx)
+}
+
+fn grid_opts(seed: u64) -> GridOptions {
+    GridOptions {
+        profile: GridOptions::default().profile.with_rng_seed(seed),
+        k: 2,
+        seeder: "sir".into(),
+        ..Default::default()
+    }
+}
+
+fn assert_grids_bit_identical(sharded: &GridResult, local: &GridResult) {
+    assert_eq!(sharded.points.len(), local.points.len());
+    for (s, l) in sharded.points.iter().zip(&local.points) {
+        assert_eq!(s.c.to_bits(), l.c.to_bits(), "cell C");
+        assert_eq!(s.gamma.to_bits(), l.gamma.to_bits(), "cell gamma");
+        assert_eq!(
+            s.accuracy.to_bits(),
+            l.accuracy.to_bits(),
+            "accuracy at C={} gamma={}",
+            s.c,
+            s.gamma
+        );
+        assert_eq!(s.iterations, l.iterations, "iterations at C={} gamma={}", s.c, s.gamma);
+        assert_eq!(s.rounds, l.rounds, "rounds at C={} gamma={}", s.c, s.gamma);
+    }
+}
+
+#[test]
+fn two_worker_sharded_grid_matches_single_process() {
+    let (path, _) = heart_file("grid", 48, 9);
+    let cs = [1.0, 10.0];
+    let gammas = [0.1, 0.5];
+    let opts = grid_opts(9);
+
+    // single-process reference on the same seed (uniform budget)
+    let full = read_libsvm(&path).expect("in-RAM load");
+    let local = grid_search_opts(&full, &cs, &gammas, &opts);
+
+    // two live workers; 512-byte shards force the workers' kernel caches
+    // through the out-of-core fill path
+    let (addr_a, worker_a, done_a) = spawn_worker();
+    let (addr_b, worker_b, done_b) = spawn_worker();
+    let spec = DatasetSpec::File {
+        path: path.to_string_lossy().into_owned(),
+        shard_bytes: Some(512),
+    };
+    let sharded = run_sharded_grid(&spec, &cs, &gammas, &opts, &[addr_a, addr_b])
+        .expect("sharded grid failed");
+    assert_grids_bit_identical(&sharded, &local);
+
+    worker_a.shutdown();
+    worker_b.shutdown();
+    done_a.recv().expect("worker a never drained");
+    done_b.recv().expect("worker b never drained");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn dead_worker_cells_are_recovered_not_dropped() {
+    // reserve a port, then free it: connecting will be refused
+    let dead_addr = {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        listener.local_addr().expect("addr").to_string()
+    };
+    let (live_addr, worker, done) = spawn_worker();
+
+    let spec = DatasetSpec::Synth {
+        name: "heart".into(),
+        n: Some(40),
+        seed: 5,
+    };
+    let cs = [1.0, 10.0];
+    let gammas = [0.1, 0.5];
+    let opts = grid_opts(5);
+    let local = grid_search_opts(&synth::generate("heart", Some(40), 5), &cs, &gammas, &opts);
+
+    // the dead address owns every other γ column; its cells must land on
+    // the survivor (or the in-process fallback) with identical bits
+    let sharded = run_sharded_grid(&spec, &cs, &gammas, &opts, &[dead_addr, live_addr])
+        .expect("grid must survive a dead worker");
+    assert_grids_bit_identical(&sharded, &local);
+
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+}
