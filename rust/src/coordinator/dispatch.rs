@@ -36,10 +36,30 @@
 //! none remain, computes the remainder in-process. A cell is never
 //! silently dropped — [`run_sharded_grid`] either returns every cell of
 //! the grid or an error.
+//!
+//! The driver side is governed by a [`DispatchPolicy`]: every worker
+//! socket carries connect/read/write timeouts, transient failures
+//! (refused connection, dropped connection, corrupt or truncated frame)
+//! are retried with the seeded bounded backoff of
+//! [`RetryPolicy`](crate::util::retry::RetryPolicy), and a *hung* worker
+//! — alive to heartbeat pings but silent past its per-cell lease — is
+//! detected by the lease deadline and forfeits its cells through the
+//! same recovery ladder as a dead one. Telemetry (retries, lease
+//! expiries, heartbeat failures, reassigned and fallback cells, plus
+//! per-worker failure counts) comes back in a [`DispatchReport`].
+//!
+//! Long grids can additionally journal completed cells
+//! ([`run_journaled_grid`]): a killed driver replays the journal on
+//! restart, verifies its [`ScheduleGraph`] fingerprint, and dispatches
+//! only the missing cells — the resumed [`GridResult`] is bit-identical
+//! to an uninterrupted run. Fault-injection hooks for all of the above
+//! live in [`crate::testing::fault`] and cost one atomic load when no
+//! plan is armed.
 
 #![deny(missing_docs)]
 
 use super::grid::{GridOptions, GridPoint, GridResult};
+use super::journal::{fnv1a64, GridJournal};
 use super::schedule::{BudgetPolicy, ScheduleGraph};
 use crate::config::RunProfile;
 use crate::cv::CvOptions;
@@ -47,19 +67,134 @@ use crate::data::{read_libsvm, synth, Dataset, ShardedDataset};
 use crate::kernel::{
     Kernel, KernelEval, ShardRowSource, SharedKernelCache, DEFAULT_RESIDENT_SHARDS,
 };
+use crate::metrics::Counter;
 use crate::seeding::seeder_by_name;
+use crate::testing::fault::{self, FrameOutcome};
 use crate::util::json::Json;
 use crate::util::pool::{effective_threads, scoped_map};
-use anyhow::{bail, ensure, Context, Result};
+use crate::util::retry::RetryPolicy;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-/// How long [`GridWorker::serve`] waits for in-flight connections to
-/// finish their current responses before giving up the drain.
-const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
+/// Upper bound on one blocking `read` slice while waiting for a worker
+/// reply: small enough that lease/heartbeat checks stay responsive,
+/// large enough to stay off the scheduler's back on the healthy path.
+const READ_SLICE: Duration = Duration::from_millis(200);
+
+/// Driver-side fault-tolerance tunables for sharded dispatch
+/// (docs/DISTRIBUTED.md §4). Purely *when to give up* knobs: none of
+/// them can change a cell's bits, only which process ends up computing
+/// it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchPolicy {
+    /// Retry schedule for transient failures (refused/dropped
+    /// connections, corrupt or truncated frames). Jitter draws come from
+    /// a [`Pcg32`] stream derived from the profile's `rng_seed`.
+    pub retry: RetryPolicy,
+    /// Connect/write timeout on every worker socket, and the reply
+    /// budget for one heartbeat ping.
+    pub io_timeout: Duration,
+    /// Base lease added to every request regardless of size (covers
+    /// dataset load and share construction).
+    pub lease_floor: Duration,
+    /// Additional lease per assigned cell. A worker silent past
+    /// `lease_floor + lease_per_cell × cells` is declared hung and
+    /// forfeits the group — even if it still answers heartbeats.
+    pub lease_per_cell: Duration,
+    /// How often the waiting driver pings the worker on a side
+    /// connection; a failed ping fails the attempt immediately instead
+    /// of waiting out the lease.
+    pub heartbeat: Duration,
+}
+
+impl Default for DispatchPolicy {
+    /// Generous production defaults: 10 s I/O timeout, 30 s + 60 s/cell
+    /// lease, 2 s heartbeats, three attempts with 100 ms–2 s backoff.
+    fn default() -> Self {
+        DispatchPolicy {
+            retry: RetryPolicy::default(),
+            io_timeout: Duration::from_secs(10),
+            lease_floor: Duration::from_secs(30),
+            lease_per_cell: Duration::from_secs(60),
+            heartbeat: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Per-worker dispatch telemetry for one grid run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerReport {
+    /// Worker address as given to the driver.
+    pub addr: String,
+    /// Cells this worker returned (initial assignment + reassignments).
+    pub cells: usize,
+    /// Re-sent requests after transient failures.
+    pub retries: u64,
+    /// Failed request attempts, including the final one of a forfeit.
+    pub failures: u64,
+}
+
+/// What the fault-tolerance machinery did during one grid run —
+/// returned by [`run_sharded_grid_with`] / [`run_journaled_grid`] and
+/// printed under the grid summary table.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchReport {
+    /// One entry per worker address, in pool order.
+    pub workers: Vec<WorkerReport>,
+    /// Total transient-failure retries across the pool.
+    pub retries: u64,
+    /// Lease deadlines that expired (hung workers).
+    pub lease_timeouts: u64,
+    /// Heartbeat pings that went unanswered (dead workers).
+    pub heartbeat_failures: u64,
+    /// Cells that entered the recovery ladder after a worker forfeited.
+    pub reassigned_cells: u64,
+    /// Cells the driver computed in-process because no worker could.
+    pub fallback_cells: u64,
+}
+
+/// Shared atomic counters the concurrent dispatch threads write
+/// ([`Counter`] from the metrics tier); snapshotted into the
+/// [`DispatchReport`] when the run completes.
+#[derive(Default)]
+struct DispatchCounters {
+    retries: Counter,
+    lease_timeouts: Counter,
+    heartbeat_failures: Counter,
+    reassigned_cells: Counter,
+    fallback_cells: Counter,
+}
+
+/// A failed dispatch attempt: the error plus whether retrying the same
+/// worker could plausibly help. Deterministic rejections (`ok:false`)
+/// and expired leases are fatal; I/O and frame-decode failures are
+/// transient.
+struct DispatchFailure {
+    error: anyhow::Error,
+    retryable: bool,
+}
+
+impl DispatchFailure {
+    fn transient(error: anyhow::Error) -> DispatchFailure {
+        DispatchFailure {
+            error,
+            retryable: true,
+        }
+    }
+
+    fn fatal(error: anyhow::Error) -> DispatchFailure {
+        DispatchFailure {
+            error,
+            retryable: false,
+        }
+    }
+}
 
 /// Where a grid worker (or the driver's in-process fallback) gets its
 /// dataset. The spec crosses the wire, so it names *sources*, not
@@ -262,6 +397,9 @@ fn run_cells(
                 ..Default::default()
             },
         );
+        // chaos seam: an armed crash-at-cell plan aborts the process
+        // here — after the cell completed, before its row is sent
+        fault::cell_hook();
         (
             nodes[i],
             GridPoint {
@@ -280,7 +418,7 @@ fn run_cells(
 /// can exceed 2⁵³), everything else as numbers (Rust's shortest
 /// round-trip float formatting makes `c`/`gamma`/`accuracy` bit-exact
 /// through parse).
-fn row_to_json(node: usize, p: &GridPoint) -> Json {
+pub(crate) fn row_to_json(node: usize, p: &GridPoint) -> Json {
     Json::obj(vec![
         ("node", Json::num(node as f64)),
         ("c", Json::num(p.c)),
@@ -293,7 +431,7 @@ fn row_to_json(node: usize, p: &GridPoint) -> Json {
 }
 
 /// Inverse of [`row_to_json`].
-fn row_from_json(v: &Json) -> Result<(usize, GridPoint)> {
+pub(crate) fn row_from_json(v: &Json) -> Result<(usize, GridPoint)> {
     let num = |k: &str| {
         v.get(k)
             .and_then(Json::as_f64)
@@ -332,15 +470,19 @@ fn row_from_json(v: &Json) -> Result<(usize, GridPoint)> {
 /// assigned node group, and reads the rows back.
 ///
 /// Lifecycle (bind, accept, per-connection handler threads, self-connect
-/// wake on shutdown, read-side drain with a 10 s deadline) matches
-/// [`PredictServer`](super::PredictServer) — the two tiers fail and stop
-/// the same way.
+/// wake on shutdown, read-side drain with a configurable deadline —
+/// [`DEFAULT_DRAIN_DEADLINE`](super::DEFAULT_DRAIN_DEADLINE) unless
+/// overridden) matches [`PredictServer`](super::PredictServer) — the two
+/// tiers fail and stop the same way.
 pub struct GridWorker {
     stop: Arc<AtomicBool>,
     bound: Mutex<Option<SocketAddr>>,
     conns: Mutex<HashMap<u64, TcpStream>>,
     conn_seq: AtomicU64,
     drained: Condvar,
+    requests: Counter,
+    cells: Counter,
+    drain_deadline: Duration,
 }
 
 impl Default for GridWorker {
@@ -360,7 +502,26 @@ impl GridWorker {
             conns: Mutex::new(HashMap::new()),
             conn_seq: AtomicU64::new(0),
             drained: Condvar::new(),
+            requests: Counter::new(),
+            cells: Counter::new(),
+            drain_deadline: super::DEFAULT_DRAIN_DEADLINE,
         }
+    }
+
+    /// Override the shutdown drain deadline (`--drain-secs` on the CLI).
+    pub fn with_drain_deadline(mut self, deadline: Duration) -> GridWorker {
+        self.drain_deadline = deadline;
+        self
+    }
+
+    /// Requests served so far (any op, well-formed or not).
+    pub fn requests_served(&self) -> u64 {
+        self.requests.get()
+    }
+
+    /// Grid cells evaluated so far across all `grid` requests.
+    pub fn cells_evaluated(&self) -> u64 {
+        self.cells.get()
     }
 
     /// Bind and serve until a `shutdown` request (or [`shutdown`] call)
@@ -452,7 +613,7 @@ impl GridWorker {
     /// get their responses), then wait until all handlers have released
     /// or the deadline passes.
     fn drain(&self) {
-        let deadline = std::time::Instant::now() + DRAIN_DEADLINE;
+        let deadline = std::time::Instant::now() + self.drain_deadline;
         let mut conns = self.conns.lock().expect("conns lock poisoned");
         for stream in conns.values() {
             let _ = stream.shutdown(std::net::Shutdown::Read);
@@ -483,7 +644,20 @@ impl GridWorker {
                 continue;
             }
             let response = self.respond(&line);
-            writeln!(writer, "{response}")?;
+            // chaos seam: an armed fault plan may rewrite, truncate, or
+            // swallow this reply frame (one atomic load when no plan is
+            // installed)
+            let reply = response.to_string();
+            match fault::frame(&line, &reply) {
+                None => writeln!(writer, "{reply}")?,
+                Some(FrameOutcome::Send(text)) => writeln!(writer, "{text}")?,
+                Some(FrameOutcome::SendPartial(bytes)) => {
+                    writer.write_all(&bytes)?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                Some(FrameOutcome::Drop) => return Ok(()),
+            }
             if self.stop.load(Ordering::SeqCst) {
                 // this connection may have carried the shutdown op — wake
                 // the acceptor so serve() can start the drain
@@ -498,6 +672,7 @@ impl GridWorker {
     /// Malformed input of any kind yields `{"ok":false,"error":…}` —
     /// never a panic, never a dropped line.
     pub fn respond(&self, line: &str) -> Json {
+        self.requests.inc();
         match self.respond_inner(line) {
             Ok(j) => j,
             Err(e) => Json::obj(vec![
@@ -517,6 +692,17 @@ impl GridWorker {
             "ping" => Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("role", Json::str("grid-worker")),
+            ])),
+            "info" => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("role", Json::str("grid-worker")),
+                ("requests", Json::num(self.requests.get() as f64)),
+                ("grid_cells", Json::num(self.cells.get() as f64)),
+                (
+                    "drain_secs",
+                    Json::num(self.drain_deadline.as_secs_f64()),
+                ),
+                ("fault_plan", Json::Bool(fault::is_active())),
             ])),
             "grid" => self.respond_grid(&req),
             "shutdown" => {
@@ -610,6 +796,7 @@ impl GridWorker {
             &profile,
             &nodes,
         )?;
+        self.cells.add(rows.len() as u64);
         Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             (
@@ -648,62 +835,208 @@ fn grid_request(
     ])
 }
 
-/// Send one request line to `addr` and parse the result rows back.
-fn dispatch_to(addr: &str, request: &Json) -> Result<Vec<(usize, GridPoint)>> {
-    let stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to worker {addr}"))?;
+/// Resolve `addr` and open a TCP connection under `timeout`, trying each
+/// resolved candidate address in turn.
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let candidates: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving worker address {addr}"))?
+        .collect();
+    let mut last: Option<std::io::Error> = None;
+    for sa in candidates {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => anyhow::Error::new(e).context(format!("connecting to worker {addr}")),
+        None => anyhow!("worker address {addr} resolved to no candidates"),
+    })
+}
+
+/// One heartbeat: open a side connection to `addr`, send `ping`, and
+/// require an `ok:true` reply within `timeout`. A worker busy on a grid
+/// request still answers — the accept loop keeps running — so a failed
+/// ping means the process is gone, not merely slow.
+fn ping_worker(addr: &str, timeout: Duration) -> Result<()> {
+    let stream = connect(addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
     let mut writer = stream.try_clone()?;
-    writeln!(writer, "{request}")?;
-    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{{\"op\":\"ping\"}}")?;
     let mut line = String::new();
-    reader
+    BufReader::new(stream)
         .read_line(&mut line)
-        .with_context(|| format!("reading from worker {addr}"))?;
+        .with_context(|| format!("reading ping reply from worker {addr}"))?;
+    let resp = Json::parse(line.trim())
+        .with_context(|| format!("parsing ping reply from worker {addr}"))?;
     ensure!(
-        !line.trim().is_empty(),
-        "worker {addr} closed the connection without replying"
+        resp.get("ok") == Some(&Json::Bool(true)),
+        "worker {addr} rejected the heartbeat ping"
     );
-    let resp =
-        Json::parse(line.trim()).with_context(|| format!("parsing worker {addr} response"))?;
+    Ok(())
+}
+
+/// One dispatch attempt: send `request` to `addr` and read the reply
+/// frame under the policy's I/O timeout, per-cell lease deadline, and
+/// heartbeat pings. Failures are classified transient (retrying the
+/// same worker could help: connect/read/write errors, dropped
+/// connections, corrupt or truncated frames, failed heartbeats) or
+/// fatal (`ok:false` rejections and expired leases).
+fn dispatch_once(
+    addr: &str,
+    request: &Json,
+    n_cells: usize,
+    policy: &DispatchPolicy,
+    counters: &DispatchCounters,
+) -> std::result::Result<Vec<(usize, GridPoint)>, DispatchFailure> {
+    let io_err = |e: std::io::Error, what: &str| {
+        DispatchFailure::transient(anyhow::Error::new(e).context(format!("{what} {addr}")))
+    };
+    let stream = connect(addr, policy.io_timeout).map_err(DispatchFailure::transient)?;
+    stream
+        .set_write_timeout(Some(policy.io_timeout))
+        .map_err(|e| io_err(e, "configuring socket to worker"))?;
+    // short read slices keep the lease/heartbeat checks responsive while
+    // the worker computes
+    stream
+        .set_read_timeout(Some(READ_SLICE.min(policy.io_timeout)))
+        .map_err(|e| io_err(e, "configuring socket to worker"))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| io_err(e, "configuring socket to worker"))?;
+    writeln!(writer, "{request}").map_err(|e| io_err(e, "writing to worker"))?;
+
+    // accumulate reply bytes slice by slice, scanning for the newline;
+    // `read_line` is off the table because a timeout mid-read leaves a
+    // BufReader's buffer unspecified
+    let lease = policy
+        .lease_floor
+        .saturating_add(policy.lease_per_cell.saturating_mul(n_cells.max(1) as u32));
+    let deadline = Instant::now() + lease;
+    let mut next_heartbeat = Instant::now() + policy.heartbeat;
+    let mut reader = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    let line: String = loop {
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            // lossy: a corrupt frame need not be valid UTF-8
+            break String::from_utf8_lossy(&buf[..pos]).into_owned();
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            counters.lease_timeouts.inc();
+            return Err(DispatchFailure::fatal(anyhow!(
+                "worker {addr} exceeded its {:.1} s lease for {n_cells} cell(s)",
+                lease.as_secs_f64()
+            )));
+        }
+        if now >= next_heartbeat {
+            if let Err(e) = ping_worker(addr, policy.io_timeout) {
+                counters.heartbeat_failures.inc();
+                return Err(DispatchFailure::transient(
+                    e.context(format!("worker {addr} stopped answering heartbeats")),
+                ));
+            }
+            next_heartbeat = now + policy.heartbeat;
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => {
+                return Err(DispatchFailure::transient(anyhow!(
+                    "worker {addr} closed the connection mid-reply ({} byte(s) received)",
+                    buf.len()
+                )))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(io_err(e, "reading from worker")),
+        }
+    };
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return Err(DispatchFailure::transient(anyhow!(
+            "worker {addr} sent an empty reply frame"
+        )));
+    }
+    let resp = Json::parse(trimmed).map_err(|e| {
+        DispatchFailure::transient(
+            anyhow::Error::new(e).context(format!("worker {addr} sent a corrupt frame")),
+        )
+    })?;
     if resp.get("ok") != Some(&Json::Bool(true)) {
-        bail!(
+        return Err(DispatchFailure::fatal(anyhow!(
             "worker {addr} rejected the request: {}",
             resp.get("error")
                 .and_then(Json::as_str)
                 .unwrap_or("unknown error")
-        );
+        )));
     }
     resp.get("rows")
         .and_then(Json::as_arr)
-        .with_context(|| format!("worker {addr} response missing 'rows'"))?
+        .ok_or_else(|| {
+            DispatchFailure::transient(anyhow!("worker {addr} response missing 'rows'"))
+        })?
         .iter()
         .map(row_from_json)
-        .collect()
+        .collect::<Result<Vec<_>>>()
+        .map_err(|e| {
+            DispatchFailure::transient(e.context(format!("decoding rows from worker {addr}")))
+        })
 }
 
-/// Run a uniform (C, γ) grid across `workers` (TCP addresses of
-/// [`GridWorker`] processes) and collect the cells back in C-major
-/// order — bit-identical per cell to the single-process
-/// [`grid_search_opts`](super::grid_search_opts) sweep with the same
-/// options.
-///
-/// The unit of assignment is a γ column (so one worker fills one shared
-/// row store per owned γ), columns round-robined over the pool. Reuse
-/// shapes that couple cells across that boundary are rejected: `warm_c`,
-/// `seed_gamma` and non-[`Uniform`](BudgetPolicy::Uniform) policies need
-/// the single-process scheduler.
-///
-/// Worker failure is recovered, never ignored: a failed worker's cells
-/// are re-sent to each surviving worker in turn, and whatever still
-/// remains is computed in-process, so the returned grid is always
-/// complete (docs/DISTRIBUTED.md §4).
-pub fn run_sharded_grid(
-    spec: &DatasetSpec,
+/// Send one request line to `addr` and parse the result rows back,
+/// retrying transient failures under the policy's seeded backoff.
+/// Telemetry lands in `counters` (pool-wide) and `stats` (this worker).
+fn dispatch_to(
+    addr: &str,
+    request: &Json,
+    n_cells: usize,
+    policy: &DispatchPolicy,
+    rng: &mut Pcg32,
+    counters: &DispatchCounters,
+    stats: &mut WorkerReport,
+) -> Result<Vec<(usize, GridPoint)>> {
+    let attempts = policy.retry.max_attempts.max(1);
+    let mut attempt = 1usize;
+    loop {
+        match dispatch_once(addr, request, n_cells, policy, counters) {
+            Ok(rows) => return Ok(rows),
+            Err(f) => {
+                stats.failures += 1;
+                if !f.retryable || attempt >= attempts {
+                    return Err(f
+                        .error
+                        .context(format!("worker {addr} failed after {attempt} attempt(s)")));
+                }
+                eprintln!(
+                    "warning: worker {addr} attempt {attempt} failed ({:#}); retrying",
+                    f.error
+                );
+                std::thread::sleep(policy.retry.backoff(attempt, rng));
+                stats.retries += 1;
+                counters.retries.inc();
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Shared validation for the sharded entry points: non-empty axes and
+/// pool, independent-cells-only options. Returns the [`ScheduleGraph`]
+/// both the driver and every worker will run.
+fn validate_sharded(
     c_values: &[f64],
     gamma_values: &[f64],
     opts: &GridOptions,
     workers: &[String],
-) -> Result<GridResult> {
+) -> Result<ScheduleGraph> {
     ensure!(
         !c_values.is_empty() && !gamma_values.is_empty(),
         "grid axes must be non-empty"
@@ -718,37 +1051,231 @@ pub fn run_sharded_grid(
              successive halving couple cells across the worker boundary (run single-process)"
         );
     }
-    let graph = ScheduleGraph::build_csvc(c_values, gamma_values, false, false);
+    Ok(ScheduleGraph::build_csvc(c_values, gamma_values, false, false))
+}
+
+/// Stable fingerprint of everything that determines a grid's results:
+/// FNV-1a-64 over the canonical serialization of the full `grid`
+/// request (dataset spec, axes, k, seeder, profile, schedule) with an
+/// empty node assignment. Object keys serialize in sorted order, so the
+/// bytes — and the fingerprint — are deterministic. The journal layer
+/// uses it to refuse resuming a journal against a different run.
+pub fn grid_fingerprint(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    graph: &ScheduleGraph,
+) -> u64 {
+    fnv1a64(
+        grid_request(spec, c_values, gamma_values, opts, graph, &[])
+            .to_string()
+            .as_bytes(),
+    )
+}
+
+/// Run a uniform (C, γ) grid across `workers` (TCP addresses of
+/// [`GridWorker`] processes) and collect the cells back in C-major
+/// order — bit-identical per cell to the single-process
+/// [`grid_search_opts`](super::grid_search_opts) sweep with the same
+/// options. Uses the default [`DispatchPolicy`]; see
+/// [`run_sharded_grid_with`] for the policy-carrying variant and the
+/// full failure-semantics contract.
+pub fn run_sharded_grid(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    workers: &[String],
+) -> Result<GridResult> {
+    run_sharded_grid_with(
+        spec,
+        c_values,
+        gamma_values,
+        opts,
+        workers,
+        &DispatchPolicy::default(),
+    )
+    .map(|(grid, _)| grid)
+}
+
+/// [`run_sharded_grid`] with explicit fault-tolerance tunables,
+/// returning dispatch telemetry alongside the grid.
+///
+/// The unit of assignment is a γ column (so one worker fills one shared
+/// row store per owned γ), columns round-robined over the pool. Reuse
+/// shapes that couple cells across that boundary are rejected: `warm_c`,
+/// `seed_gamma` and non-[`Uniform`](BudgetPolicy::Uniform) policies need
+/// the single-process scheduler.
+///
+/// Worker failure is recovered, never ignored: transient failures are
+/// retried on the same worker under the policy's seeded backoff, a dead
+/// or hung worker (failed heartbeat, expired lease) forfeits its cells
+/// to each surviving worker in turn, and whatever still remains is
+/// computed in-process — the returned grid is always complete
+/// (docs/DISTRIBUTED.md §4).
+pub fn run_sharded_grid_with(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    workers: &[String],
+    policy: &DispatchPolicy,
+) -> Result<(GridResult, DispatchReport)> {
+    let graph = validate_sharded(c_values, gamma_values, opts, workers)?;
+    run_grid_core(
+        spec,
+        c_values,
+        gamma_values,
+        opts,
+        workers,
+        policy,
+        &graph,
+        Vec::new(),
+        None,
+    )
+}
+
+/// [`run_sharded_grid_with`] plus a crash-safe journal at
+/// `journal_path`: completed cells are appended as their rows arrive,
+/// and a pre-existing journal with a matching fingerprint is replayed so
+/// only the missing cells are dispatched. A driver killed mid-grid
+/// therefore resumes to a [`GridResult`] bit-identical to an
+/// uninterrupted run (`tests/chaos_dispatch.rs` pins it); a journal
+/// written by a *different* run (other axes, dataset, seed, …) is
+/// rejected with a fingerprint error instead of being merged.
+pub fn run_journaled_grid(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    workers: &[String],
+    policy: &DispatchPolicy,
+    journal_path: &std::path::Path,
+) -> Result<(GridResult, DispatchReport)> {
+    let graph = validate_sharded(c_values, gamma_values, opts, workers)?;
+    let fingerprint = grid_fingerprint(spec, c_values, gamma_values, opts, &graph);
+    let journal = GridJournal::open(journal_path, fingerprint, graph.nodes.len())?;
+    let preplaced = journal.recovered().to_vec();
+    if !preplaced.is_empty() {
+        eprintln!(
+            "journal: resuming {} — {} of {} cell(s) already complete",
+            journal_path.display(),
+            preplaced.len(),
+            graph.nodes.len()
+        );
+    }
+    let journal = Mutex::new(journal);
+    run_grid_core(
+        spec,
+        c_values,
+        gamma_values,
+        opts,
+        workers,
+        policy,
+        &graph,
+        preplaced,
+        Some(&journal),
+    )
+}
+
+/// Append `rows` to the journal, warning instead of failing the run — a
+/// broken journal costs resumability, never the grid itself.
+fn journal_append(journal: &Mutex<GridJournal>, rows: &[(usize, GridPoint)]) {
+    let mut j = journal.lock().expect("journal lock poisoned");
+    for (node, p) in rows {
+        if let Err(e) = j.append(*node, p) {
+            eprintln!("warning: journal append failed ({e:#}); continuing without it");
+            break;
+        }
+    }
+}
+
+/// The shared grid driver behind [`run_sharded_grid_with`] and
+/// [`run_journaled_grid`]: assign γ columns round-robin, dispatch
+/// concurrently under `policy`, run the survivor→in-process recovery
+/// ladder, and return the complete grid plus telemetry. `preplaced`
+/// rows (journal replay) are trusted verbatim and their nodes never
+/// dispatched; completed rows stream into `journal` from the dispatch
+/// threads as they arrive, so a driver killed at any point leaves a
+/// resumable journal behind.
+#[allow(clippy::too_many_arguments)]
+fn run_grid_core(
+    spec: &DatasetSpec,
+    c_values: &[f64],
+    gamma_values: &[f64],
+    opts: &GridOptions,
+    workers: &[String],
+    policy: &DispatchPolicy,
+    graph: &ScheduleGraph,
+    preplaced: Vec<(usize, GridPoint)>,
+    journal: Option<&Mutex<GridJournal>>,
+) -> Result<(GridResult, DispatchReport)> {
+    let counters = DispatchCounters::default();
+    let mut points: Vec<Option<GridPoint>> = vec![None; graph.nodes.len()];
+    for (node, p) in preplaced {
+        ensure!(
+            node < points.len(),
+            "journal row indexes node {node} outside the {}-cell grid",
+            points.len()
+        );
+        points[node] = Some(p);
+    }
 
     // γ columns are the assignment unit (a worker fills one shared row
     // store per γ it owns), round-robined over the pool; node order
-    // within a column stays C-major.
+    // within a column stays C-major. Journal-recovered nodes are not
+    // re-dispatched.
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
     for (i, node) in graph.nodes.iter().enumerate() {
-        assignment[node.gamma_index % workers.len()].push(i);
+        if points[i].is_none() {
+            assignment[node.gamma_index % workers.len()].push(i);
+        }
     }
 
-    // one request per worker, in flight concurrently
-    let outcomes: Vec<Result<Vec<(usize, GridPoint)>>> = std::thread::scope(|s| {
-        let graph = &graph;
-        let handles: Vec<_> = assignment
-            .iter()
-            .enumerate()
-            .map(|(w, nodes)| {
-                s.spawn(move || {
-                    if nodes.is_empty() {
-                        return Ok(Vec::new());
-                    }
-                    let req = grid_request(spec, c_values, gamma_values, opts, graph, nodes);
-                    dispatch_to(&workers[w], &req)
+    // one request per worker, in flight concurrently; per-worker Pcg32
+    // streams keep the retry jitter schedules deterministic per run seed
+    let outcomes: Vec<(Result<Vec<(usize, GridPoint)>>, WorkerReport)> =
+        std::thread::scope(|s| {
+            let counters = &counters;
+            let handles: Vec<_> = assignment
+                .iter()
+                .enumerate()
+                .map(|(w, nodes)| {
+                    s.spawn(move || {
+                        let mut stats = WorkerReport {
+                            addr: workers[w].clone(),
+                            ..Default::default()
+                        };
+                        if nodes.is_empty() {
+                            return (Ok(Vec::new()), stats);
+                        }
+                        let req = grid_request(spec, c_values, gamma_values, opts, graph, nodes);
+                        let mut rng = Pcg32::new(opts.profile.rng_seed, 0x52E7 + w as u64);
+                        let out = dispatch_to(
+                            &workers[w],
+                            &req,
+                            nodes.len(),
+                            policy,
+                            &mut rng,
+                            counters,
+                            &mut stats,
+                        );
+                        if let Ok(rows) = &out {
+                            stats.cells += rows.len();
+                            if let Some(j) = journal {
+                                journal_append(j, rows);
+                            }
+                        }
+                        (out, stats)
+                    })
                 })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("dispatch thread panicked"))
-            .collect()
-    });
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("dispatch thread panicked"))
+                .collect()
+        });
 
     fn place(points: &mut [Option<GridPoint>], rows: Vec<(usize, GridPoint)>) -> Result<()> {
         for (node, p) in rows {
@@ -769,9 +1296,10 @@ pub fn run_sharded_grid(
             .collect()
     }
 
-    let mut points: Vec<Option<GridPoint>> = vec![None; graph.nodes.len()];
+    let mut reports: Vec<WorkerReport> = Vec::with_capacity(workers.len());
     let mut alive: Vec<usize> = Vec::new();
-    for (w, outcome) in outcomes.into_iter().enumerate() {
+    for (w, (outcome, stats)) in outcomes.into_iter().enumerate() {
+        reports.push(stats);
         match outcome {
             Ok(rows) => {
                 place(&mut points, rows)?;
@@ -787,13 +1315,29 @@ pub fn run_sharded_grid(
     // recovery: re-send whatever is missing to each survivor in turn,
     // then compute the rest in-process — a cell is never dropped
     let mut todo = missing(&points);
+    if !todo.is_empty() {
+        counters.reassigned_cells.add(todo.len() as u64);
+    }
     for &w in &alive {
         if todo.is_empty() {
             break;
         }
-        let req = grid_request(spec, c_values, gamma_values, opts, &graph, &todo);
-        match dispatch_to(&workers[w], &req) {
+        let req = grid_request(spec, c_values, gamma_values, opts, graph, &todo);
+        let mut rng = Pcg32::new(opts.profile.rng_seed, 0x52E8 + w as u64);
+        match dispatch_to(
+            &workers[w],
+            &req,
+            todo.len(),
+            policy,
+            &mut rng,
+            &counters,
+            &mut reports[w],
+        ) {
             Ok(rows) => {
+                reports[w].cells += rows.len();
+                if let Some(j) = journal {
+                    journal_append(j, &rows);
+                }
                 place(&mut points, rows)?;
                 todo = missing(&points);
             }
@@ -808,6 +1352,7 @@ pub fn run_sharded_grid(
             "warning: no worker could run {} cell(s); computing them in-process",
             todo.len()
         );
+        counters.fallback_cells.add(todo.len() as u64);
         let ds = spec.load()?;
         let mut used = vec![false; gamma_values.len()];
         for &n in &todo {
@@ -816,7 +1361,7 @@ pub fn run_sharded_grid(
         let shares = build_shares(spec, &ds, gamma_values, &used, &opts.profile)?;
         let rows = run_cells(
             &ds,
-            &graph,
+            graph,
             c_values,
             gamma_values,
             &shares,
@@ -825,14 +1370,28 @@ pub fn run_sharded_grid(
             &opts.profile,
             &todo,
         )?;
+        if let Some(j) = journal {
+            journal_append(j, &rows);
+        }
         place(&mut points, rows)?;
     }
-    Ok(GridResult {
-        points: points
-            .into_iter()
-            .map(|p| p.expect("every node placed by workers or fallback"))
-            .collect(),
-    })
+    let report = DispatchReport {
+        workers: reports,
+        retries: counters.retries.get(),
+        lease_timeouts: counters.lease_timeouts.get(),
+        heartbeat_failures: counters.heartbeat_failures.get(),
+        reassigned_cells: counters.reassigned_cells.get(),
+        fallback_cells: counters.fallback_cells.get(),
+    };
+    Ok((
+        GridResult {
+            points: points
+                .into_iter()
+                .map(|p| p.expect("every node placed by workers or fallback"))
+                .collect(),
+        },
+        report,
+    ))
 }
 
 #[cfg(test)]
@@ -895,6 +1454,60 @@ mod tests {
         let resp = w.respond(r#"{"op":"ping"}"#);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(resp.get("role").and_then(Json::as_str), Some("grid-worker"));
+    }
+
+    #[test]
+    fn info_reports_counters_and_drain() {
+        let w = GridWorker::new().with_drain_deadline(Duration::from_secs(3));
+        let _ = w.respond(r#"{"op":"ping"}"#);
+        let resp = w.respond(r#"{"op":"info"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("role").and_then(Json::as_str), Some("grid-worker"));
+        // the ping above plus this info request
+        assert_eq!(resp.get("requests").and_then(Json::as_usize), Some(2));
+        assert_eq!(resp.get("grid_cells").and_then(Json::as_usize), Some(0));
+        assert_eq!(resp.get("drain_secs").and_then(Json::as_f64), Some(3.0));
+        // value depends on whether this test process armed a plan; the
+        // field itself must always be present
+        assert!(resp.get("fault_plan").is_some());
+    }
+
+    #[test]
+    fn dispatch_policy_default_is_sane() {
+        let p = DispatchPolicy::default();
+        assert!(p.retry.max_attempts >= 1);
+        assert!(p.heartbeat < p.lease_floor, "heartbeats must fire within a lease");
+        assert!(p.io_timeout > READ_SLICE, "read slices subdivide the I/O budget");
+        assert!(p.lease_per_cell > Duration::ZERO);
+    }
+
+    #[test]
+    fn grid_fingerprint_tracks_run_identity() {
+        let spec = DatasetSpec::Synth {
+            name: "heart".into(),
+            n: Some(40),
+            seed: 3,
+        };
+        let opts = GridOptions {
+            k: 2,
+            ..Default::default()
+        };
+        let graph = ScheduleGraph::build_csvc(&[1.0, 10.0], &[0.2], false, false);
+        let a = grid_fingerprint(&spec, &[1.0, 10.0], &[0.2], &opts, &graph);
+        let b = grid_fingerprint(&spec, &[1.0, 10.0], &[0.2], &opts, &graph);
+        assert_eq!(a, b, "same run, same fingerprint");
+        let c = grid_fingerprint(&spec, &[1.0, 10.0], &[0.5], &opts, &graph);
+        assert_ne!(a, c, "gamma axis changes the fingerprint");
+        let other = DatasetSpec::Synth {
+            name: "heart".into(),
+            n: Some(40),
+            seed: 4,
+        };
+        assert_ne!(
+            a,
+            grid_fingerprint(&other, &[1.0, 10.0], &[0.2], &opts, &graph),
+            "dataset seed changes the fingerprint"
+        );
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Crash-safe grid journaling: append-only JSON-lines checkpoints of
+//! completed grid cells, so a driver killed mid-grid resumes instead of
+//! recomputing (docs/DISTRIBUTED.md §4).
+//!
+//! File layout — one JSON object per line:
+//!
+//! ```text
+//! {"cells":4,"fingerprint":"8d2f…","kind":"alphaseed-grid-journal","version":1}
+//! {"accuracy":…,"c":1,"elapsed_us":…,"gamma":0.2,"iterations":"1234","node":0,"rounds":2}
+//! {"accuracy":…,"c":10,"elapsed_us":…,"gamma":0.2,"iterations":"1310","node":1,"rounds":2}
+//! ```
+//!
+//! The header carries an FNV-1a-64 fingerprint of everything that
+//! determines the grid's results (dataset spec, axes, k, seeder,
+//! profile, schedule — see
+//! [`grid_fingerprint`](super::grid_fingerprint)); [`GridJournal::open`]
+//! refuses to replay a journal whose fingerprint differs from the run
+//! being started, so stale checkpoints from another sweep can never be
+//! merged into this one. Rows reuse the wire row codec
+//! (`row_to_json` / `row_from_json`), so the same precision rules apply:
+//! `iterations` crosses as a decimal string (u64 exceeds 2⁵³ in f64) and
+//! floats round-trip bit-exactly through shortest-representation
+//! formatting — a resumed grid is bit-identical to an uninterrupted one.
+//!
+//! **Torn tails.** Every append is a single `writeln` + flush, so a
+//! crash can leave at most one incomplete final line. `open` truncates
+//! such a tail (with a warning) and replays the complete rows before
+//! it; an unparsable line *before* the tail means real corruption and is
+//! an error, not a silent skip.
+
+#![deny(missing_docs)]
+
+use super::dispatch::{row_from_json, row_to_json};
+use super::grid::GridPoint;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// File-format marker in the header line.
+const JOURNAL_KIND: &str = "alphaseed-grid-journal";
+/// Format version in the header line.
+const JOURNAL_VERSION: usize = 1;
+
+/// FNV-1a 64-bit hash — the journal's run fingerprint. Chosen for being
+/// a dozen lines with well-known test vectors, not for collision
+/// resistance: the fingerprint guards against *accidental* journal
+/// reuse, and any mismatch is a hard error either way.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    hash
+}
+
+/// An open grid journal: the validated rows recovered from a previous
+/// run plus an append handle for this one.
+pub struct GridJournal {
+    path: PathBuf,
+    file: File,
+    recovered: Vec<(usize, GridPoint)>,
+    n_cells: usize,
+}
+
+impl GridJournal {
+    /// Open (or create) the journal at `path` for a run with the given
+    /// `fingerprint` and `n_cells`-cell schedule.
+    ///
+    /// A fresh path gets a header line and no recovered rows. An
+    /// existing journal is validated — header kind/version, fingerprint
+    /// equality, node range — and its complete rows become
+    /// [`recovered`](Self::recovered); an incomplete final line (torn by
+    /// a crash mid-append) is truncated away with a warning. A
+    /// fingerprint mismatch is an error: the journal belongs to a
+    /// different run and must not be merged or overwritten silently.
+    pub fn open(path: &Path, fingerprint: u64, n_cells: usize) -> Result<GridJournal> {
+        ensure!(n_cells > 0, "journal: the schedule has no cells");
+        let fingerprint_hex = format!("{fingerprint:016x}");
+        let mut recovered: Vec<(usize, GridPoint)> = Vec::new();
+        if path.exists() {
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("reading journal {}", path.display()))?;
+            let keep = Self::validate(&bytes, &fingerprint_hex, n_cells, &mut recovered)
+                .with_context(|| format!("journal {}", path.display()))?;
+            if keep < bytes.len() {
+                eprintln!(
+                    "warning: journal {} has a torn final line ({} byte(s)); truncating it",
+                    path.display(),
+                    bytes.len() - keep
+                );
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(path)
+                    .with_context(|| format!("truncating journal {}", path.display()))?;
+                f.set_len(keep as u64)
+                    .with_context(|| format!("truncating journal {}", path.display()))?;
+            }
+            let file = OpenOptions::new()
+                .append(true)
+                .open(path)
+                .with_context(|| format!("opening journal {} for append", path.display()))?;
+            Ok(GridJournal {
+                path: path.to_path_buf(),
+                file,
+                recovered,
+                n_cells,
+            })
+        } else {
+            let mut file = OpenOptions::new()
+                .create_new(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("creating journal {}", path.display()))?;
+            let header = Json::obj(vec![
+                ("kind", Json::str(JOURNAL_KIND)),
+                ("version", Json::num(JOURNAL_VERSION as f64)),
+                ("fingerprint", Json::str(fingerprint_hex)),
+                ("cells", Json::num(n_cells as f64)),
+            ]);
+            writeln!(file, "{header}")
+                .and_then(|()| file.flush())
+                .with_context(|| format!("writing journal header to {}", path.display()))?;
+            Ok(GridJournal {
+                path: path.to_path_buf(),
+                file,
+                recovered,
+                n_cells,
+            })
+        }
+    }
+
+    /// Validate an existing journal's bytes: check the header against
+    /// this run, parse the complete rows into `recovered`, and return
+    /// how many leading bytes to keep (anything after is a torn tail).
+    fn validate(
+        bytes: &[u8],
+        fingerprint_hex: &str,
+        n_cells: usize,
+        recovered: &mut Vec<(usize, GridPoint)>,
+    ) -> Result<usize> {
+        // split into newline-terminated lines; an unterminated remainder
+        // is by construction a torn append
+        let mut lines: Vec<(usize, &[u8])> = Vec::new(); // (start offset, line without \n)
+        let mut start = 0usize;
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == b'\n' {
+                lines.push((start, &bytes[start..i]));
+                start = i + 1;
+            }
+        }
+        let mut keep = start; // offset just past the last complete line
+        ensure!(
+            !lines.is_empty(),
+            "missing header line (empty or fully torn file)"
+        );
+        let header = Json::parse(&String::from_utf8_lossy(lines[0].1))
+            .context("header line is not valid JSON")?;
+        ensure!(
+            header.get("kind").and_then(Json::as_str) == Some(JOURNAL_KIND),
+            "not a grid journal (bad 'kind')"
+        );
+        ensure!(
+            header.get("version").and_then(Json::as_usize) == Some(JOURNAL_VERSION),
+            "unsupported journal version"
+        );
+        let found = header
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .context("header missing 'fingerprint'")?;
+        ensure!(
+            found == fingerprint_hex,
+            "fingerprint mismatch: journal was written by a different run \
+             (journal {found}, this run {fingerprint_hex}); refusing to resume — \
+             delete the file or pass a different --journal path"
+        );
+        ensure!(
+            header.get("cells").and_then(Json::as_usize) == Some(n_cells),
+            "header cell count does not match the schedule"
+        );
+        for (i, &(offset, line)) in lines.iter().enumerate().skip(1) {
+            let text = String::from_utf8_lossy(line);
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(trimmed)
+                .map_err(anyhow::Error::new)
+                .and_then(|v| row_from_json(&v));
+            match parsed {
+                Ok((node, p)) => {
+                    ensure!(
+                        node < n_cells,
+                        "row {i} indexes node {node} outside the {n_cells}-cell grid"
+                    );
+                    recovered.push((node, p));
+                }
+                // a bad *final* complete line is still a torn append
+                // (e.g. the process died between write and flush of a
+                // larger buffer); anything earlier is corruption
+                Err(_) if i == lines.len() - 1 => {
+                    keep = offset;
+                    break;
+                }
+                Err(e) => return Err(e.context(format!("row {i} is corrupt"))),
+            }
+        }
+        Ok(keep)
+    }
+
+    /// Append one completed cell. Flushes per row: a journal is only
+    /// useful if the rows hit the file before the process can die.
+    pub fn append(&mut self, node: usize, p: &GridPoint) -> Result<()> {
+        ensure!(
+            node < self.n_cells,
+            "journal append: node {node} outside the {}-cell grid",
+            self.n_cells
+        );
+        writeln!(self.file, "{}", row_to_json(node, p))
+            .and_then(|()| self.file.flush())
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Rows recovered from a previous run of the same grid (empty for a
+    /// fresh journal), in file order.
+    pub fn recovered(&self) -> &[(usize, GridPoint)] {
+        &self.recovered
+    }
+
+    /// Where this journal lives.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "alphaseed_journal_{}_{tag}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn point(seed: u64) -> GridPoint {
+        GridPoint {
+            c: 0.1 + 0.2,
+            gamma: 1.0 / 3.0,
+            accuracy: (seed as f64) / 7.0,
+            iterations: (1u64 << 53) + seed,
+            rounds: 2,
+            elapsed: Duration::from_micros(1000 + seed),
+        }
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fresh_journal_roundtrips_rows_bit_identically() {
+        let path = temp_path("roundtrip");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = GridJournal::open(&path, 0xBEEF, 4).unwrap();
+            assert!(j.recovered().is_empty());
+            j.append(0, &point(1)).unwrap();
+            j.append(2, &point(2)).unwrap();
+        }
+        let j = GridJournal::open(&path, 0xBEEF, 4).unwrap();
+        let rows = j.recovered();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, 0);
+        assert_eq!(rows[1].0, 2);
+        for (row, seed) in rows.iter().zip([1u64, 2]) {
+            let expect = point(seed);
+            assert_eq!(row.1.c.to_bits(), expect.c.to_bits());
+            assert_eq!(row.1.gamma.to_bits(), expect.gamma.to_bits());
+            assert_eq!(row.1.accuracy.to_bits(), expect.accuracy.to_bits());
+            assert_eq!(row.1.iterations, expect.iterations);
+            assert_eq!(row.1.rounds, expect.rounds);
+            assert_eq!(row.1.elapsed, expect.elapsed);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_refused() {
+        let path = temp_path("fingerprint");
+        std::fs::remove_file(&path).ok();
+        drop(GridJournal::open(&path, 1, 4).unwrap());
+        let err = GridJournal::open(&path, 2, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_rows_before_it_survive() {
+        let path = temp_path("torn");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = GridJournal::open(&path, 7, 4).unwrap();
+            j.append(1, &point(5)).unwrap();
+        }
+        // crash mid-append: garbage with no trailing newline
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"node\":2,\"c\":1.0,\"gam").unwrap();
+        }
+        let j = GridJournal::open(&path, 7, 4).unwrap();
+        assert_eq!(j.recovered().len(), 1);
+        assert_eq!(j.recovered()[0].0, 1);
+        // the tail is gone from the file: a third open sees a clean journal
+        drop(j);
+        let j = GridJournal::open(&path, 7, 4).unwrap();
+        assert_eq!(j.recovered().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_interior_row_is_an_error_not_a_skip() {
+        let path = temp_path("interior");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = GridJournal::open(&path, 7, 4).unwrap();
+            j.append(0, &point(1)).unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            // a *complete* garbage line followed by a valid row
+            writeln!(f, "not json").unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{}", row_to_json(3, &point(9))).unwrap();
+        }
+        let err = GridJournal::open(&path, 7, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn out_of_range_node_is_rejected_on_replay_and_append() {
+        let path = temp_path("range");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut j = GridJournal::open(&path, 7, 2).unwrap();
+            let err = j.append(2, &point(1)).unwrap_err();
+            assert!(format!("{err:#}").contains("outside"), "{err:#}");
+            j.append(1, &point(1)).unwrap();
+            // hand-write a row past the grid, newline-terminated, then a
+            // valid one so it is not treated as a torn tail
+            writeln!(j.file, "{}", row_to_json(9, &point(2))).unwrap();
+            writeln!(j.file, "{}", row_to_json(0, &point(3))).unwrap();
+        }
+        let err = GridJournal::open(&path, 7, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+}

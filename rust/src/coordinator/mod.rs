@@ -35,20 +35,38 @@
 //! single-process uniform sweep; a [`DatasetSpec`] names the data by
 //! source (file or synthetic generator) so nothing heavier than the
 //! schedule crosses the wire (docs/DISTRIBUTED.md §3–§4).
+//!
+//! Distribution is fault-tolerant without giving up that bit-identity: a
+//! [`DispatchPolicy`] bounds every socket wait (timeouts, per-cell
+//! leases, heartbeats) and retries transient failures with seeded
+//! backoff, [`run_journaled_grid`] checkpoints completed cells into a
+//! fingerprint-guarded [`GridJournal`] so a killed driver resumes
+//! instead of recomputing, and the whole ladder is exercised by
+//! deterministic fault injection ([`crate::testing::fault`]).
 
 mod dispatch;
 pub mod experiments;
 mod grid;
 mod jobs;
+mod journal;
 mod registry;
 pub mod schedule;
 mod server;
+
+/// Default deadline both the grid worker and the predict server give
+/// in-flight connections to finish during shutdown drain (override with
+/// `--drain-secs` / the `with_drain_deadline` builders).
+pub const DEFAULT_DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
 pub use grid::{
     grid_search, grid_search_opts, grid_search_ovo, grid_search_svr, promote_best_csvc,
     promote_best_svr, GridOptions, GridPoint, GridResult, SvrGridPoint, SvrGridResult,
 };
-pub use dispatch::{run_sharded_grid, DatasetSpec, GridWorker};
+pub use dispatch::{
+    grid_fingerprint, run_journaled_grid, run_sharded_grid, run_sharded_grid_with, DatasetSpec,
+    DispatchPolicy, DispatchReport, GridWorker, WorkerReport,
+};
+pub use journal::GridJournal;
 pub use schedule::{BudgetPolicy, GridNode, ScheduleGraph};
 pub use jobs::{run_one, Coordinator, JobOutcome, JobSpec};
 pub use registry::{ModelRegistry, ServeModel, VersionedModel};

@@ -34,8 +34,10 @@
 //! `shutdown` request sets the stop flag and wakes the acceptor with a
 //! self-connection. The acceptor then stops taking new connections and
 //! *drains*: idle readers are unblocked by shutting the read side of each
-//! tracked connection, and the loop waits (condvar, 10 s deadline) until
-//! every handler has finished writing its in-flight responses.
+//! tracked connection, and the loop waits (condvar, deadline of
+//! [`DEFAULT_DRAIN_DEADLINE`](super::DEFAULT_DRAIN_DEADLINE) unless
+//! overridden via `--drain-secs`) until every handler has finished
+//! writing its in-flight responses.
 //!
 //! Each connection gets a dedicated handler thread: connections block in
 //! reads for their whole lifetime, so parking them on the process-wide
@@ -51,6 +53,7 @@ use crate::data::{DataMatrix, Dataset};
 use crate::metrics::{Counter, Histogram};
 use crate::runtime::{BackendChoice, XlaBackend};
 use crate::smo::{Model, PlattScaler};
+use crate::testing::fault::{self, FrameOutcome};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
@@ -64,10 +67,6 @@ use std::sync::{Arc, Condvar, Mutex};
 /// per-request kernel-row buffer (`MAX_BATCH × 8` bytes per SV pass) and
 /// keeps one client from wedging a worker with an unbounded allocation.
 pub const MAX_BATCH: usize = 4096;
-
-/// How long [`PredictServer::serve`] waits for in-flight connections to
-/// finish their current responses before giving up the drain.
-const DRAIN_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Server state shared across connections.
 pub struct PredictServer {
@@ -87,6 +86,7 @@ pub struct PredictServer {
     conns: Mutex<HashMap<u64, TcpStream>>,
     conn_seq: AtomicU64,
     drained: Condvar,
+    drain_deadline: std::time::Duration,
 }
 
 impl PredictServer {
@@ -120,7 +120,14 @@ impl PredictServer {
             conns: Mutex::new(HashMap::new()),
             conn_seq: AtomicU64::new(0),
             drained: Condvar::new(),
+            drain_deadline: super::DEFAULT_DRAIN_DEADLINE,
         }
+    }
+
+    /// Override the shutdown drain deadline (`--drain-secs` on the CLI).
+    pub fn with_drain_deadline(mut self, deadline: std::time::Duration) -> PredictServer {
+        self.drain_deadline = deadline;
+        self
     }
 
     /// The registry this server reads from — share it with a grid search
@@ -219,7 +226,7 @@ impl PredictServer {
     /// get their responses — only the read half closes), then wait until
     /// all handlers have released or the deadline passes.
     fn drain(&self) {
-        let deadline = std::time::Instant::now() + DRAIN_DEADLINE;
+        let deadline = std::time::Instant::now() + self.drain_deadline;
         let mut conns = self.conns.lock().expect("conns lock poisoned");
         for stream in conns.values() {
             let _ = stream.shutdown(std::net::Shutdown::Read);
@@ -252,7 +259,20 @@ impl PredictServer {
             let started = std::time::Instant::now();
             let response = self.respond(&line);
             self.latency.record(started.elapsed());
-            writeln!(writer, "{response}")?;
+            // chaos seam: an armed fault plan may rewrite, truncate, or
+            // swallow this reply frame (one atomic load when no plan is
+            // installed)
+            let reply = response.to_string();
+            match fault::frame(&line, &reply) {
+                None => writeln!(writer, "{reply}")?,
+                Some(FrameOutcome::Send(text)) => writeln!(writer, "{text}")?,
+                Some(FrameOutcome::SendPartial(bytes)) => {
+                    writer.write_all(&bytes)?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                Some(FrameOutcome::Drop) => return Ok(()),
+            }
             if self.stop.load(Ordering::SeqCst) {
                 // this connection may have carried the shutdown op — wake
                 // the acceptor so serve() can start the drain

@@ -123,14 +123,28 @@ fn print_help() {
            --points-out <file> write the evaluated cells as deterministic\n\
                                JSON (wall times excluded; CI diffs sharded\n\
                                vs single-process dumps byte-for-byte)\n\
+           --journal <file>    (with --workers) append completed cells as\n\
+                               JSON lines; re-running with the same journal\n\
+                               resumes the grid bit-identically after a\n\
+                               crash (docs/DISTRIBUTED.md §4)\n\
+           --lease-secs <f>    per-cell lease before a silent worker is\n\
+                               declared hung and forfeits its cells (default 60)\n\
+           --heartbeat-secs <f> ping interval while awaiting a worker reply\n\
+                               (default 2)\n\
+           --dispatch-retries <int> attempts per request on transient worker\n\
+                               failures (default 3)\n\
          worker options:\n\
            --port <int>        TCP port (default 7879; 0 picks a free port)\n\
+           --drain-secs <f>    shutdown drain deadline for in-flight\n\
+                               connections (default 10)\n\
          serve options:\n\
            --task <t>          csvc|svr|oneclass model to train and serve\n\
            --port <int>        TCP port (default 7878; 0 picks a free port)\n\
            --probs             Platt-calibrate C-SVC probabilities (seeded CV)\n\
            --backend <b>       native|xla batched decision fills (default native;\n\
                                xla falls back to native per request if unavailable)\n\
+           --drain-secs <f>    shutdown drain deadline for in-flight\n\
+                               connections (default 10)\n\
          benchgate options:\n\
            --current <file>    freshly emitted BENCH_*.json\n\
            --baseline <file>   committed BENCH_*.baseline.json\n\
@@ -678,6 +692,25 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
         "shard-backed row stores are wired through the distributed path; add --workers \
          (docs/DISTRIBUTED.md §2)",
     )?;
+    reject_opt(
+        args,
+        "journal",
+        "cell journaling checkpoints sharded dispatch; add --workers \
+         (docs/DISTRIBUTED.md §4)",
+    )?;
+    for key in ["lease-secs", "heartbeat-secs", "dispatch-retries"] {
+        reject_opt(
+            args,
+            key,
+            "tunes the sharded dispatch fault-tolerance policy; add --workers \
+             (docs/DISTRIBUTED.md §4)",
+        )?;
+    }
+    reject_opt(
+        args,
+        "drain-secs",
+        "sets the shutdown drain deadline of `worker` and `serve` processes",
+    )?;
     let (ds, _, _) = load_dataset(args)?;
     let cs = args.list_or("c-grid", &[0.5, 1.0, 10.0, 100.0])?;
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
@@ -719,6 +752,60 @@ fn cmd_grid_csvc(args: &Args) -> Result<()> {
         write_grid_points(&g, &path)?;
     }
     Ok(())
+}
+
+/// Parse `--lease-secs`, `--heartbeat-secs` and `--dispatch-retries`
+/// into a [`DispatchPolicy`](alphaseed::coordinator::DispatchPolicy)
+/// (production defaults where unset). Pure when-to-give-up knobs: none
+/// of them can change a cell's bits, only which process computes it.
+fn dispatch_policy_args(args: &Args) -> Result<alphaseed::coordinator::DispatchPolicy> {
+    let mut policy = alphaseed::coordinator::DispatchPolicy::default();
+    if let Some(s) = args.opt_parse::<f64>("lease-secs")? {
+        if !s.is_finite() || s <= 0.0 {
+            bail!("--lease-secs {s}: the per-cell lease must be a positive number of seconds");
+        }
+        policy.lease_per_cell = std::time::Duration::from_secs_f64(s);
+        // a short lease implies a latency-sensitive run: shrink the base
+        // lease to match instead of hiding behind the 30 s floor
+        policy.lease_floor = policy.lease_floor.min(policy.lease_per_cell);
+    }
+    if let Some(s) = args.opt_parse::<f64>("heartbeat-secs")? {
+        if !s.is_finite() || s <= 0.0 {
+            bail!("--heartbeat-secs {s}: the ping interval must be a positive number of seconds");
+        }
+        policy.heartbeat = std::time::Duration::from_secs_f64(s);
+    }
+    if let Some(n) = args.opt_parse::<usize>("dispatch-retries")? {
+        if n == 0 {
+            bail!("--dispatch-retries 0: at least one attempt is needed to dispatch at all");
+        }
+        policy.retry.max_attempts = n;
+    }
+    Ok(policy)
+}
+
+/// Print the fault-tolerance telemetry under the sharded grid table:
+/// per-worker cells/retries/failures plus the pool-wide counters.
+fn print_dispatch_report(report: &alphaseed::coordinator::DispatchReport) {
+    let mut t = Table::new("dispatch").header(&["worker", "cells", "retries", "failures"]);
+    for w in &report.workers {
+        t.row(vec![
+            w.addr.clone(),
+            w.cells.to_string(),
+            w.retries.to_string(),
+            w.failures.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "dispatch: {} retry(ies), {} lease timeout(s), {} heartbeat failure(s), \
+         {} reassigned cell(s), {} in-process fallback cell(s)",
+        report.retries,
+        report.lease_timeouts,
+        report.heartbeat_failures,
+        report.reassigned_cells,
+        report.fallback_cells
+    );
 }
 
 /// `grid --workers a:p,b:p`: ship per-γ node groups to grid-worker
@@ -775,6 +862,13 @@ fn cmd_grid_csvc_sharded(
     let gammas = args.list_or("gamma-grid", &[0.05, 0.2, 0.8])?;
     let k = args.parse_or("k", 5usize)?;
     let seeder = args.str_or("seeder", "sir");
+    let dispatch_policy = dispatch_policy_args(args)?;
+    let journal = args.opt_str("journal");
+    reject_opt(
+        args,
+        "drain-secs",
+        "sets the shutdown drain deadline of `worker` and `serve` processes",
+    )?;
     let profile = run_profile(
         args,
         alphaseed::coordinator::GridOptions::default().profile,
@@ -782,20 +876,33 @@ fn cmd_grid_csvc_sharded(
     args.reject_unknown()?;
 
     let started = std::time::Instant::now();
-    let g = alphaseed::coordinator::run_sharded_grid(
-        &spec,
-        &cs,
-        &gammas,
-        &alphaseed::coordinator::GridOptions {
-            profile,
-            k,
-            seeder: seeder.clone(),
-            warm_c: false,
-            policy: BudgetPolicy::Uniform,
-            seed_gamma: false,
-        },
-        workers,
-    )?;
+    let opts = alphaseed::coordinator::GridOptions {
+        profile,
+        k,
+        seeder: seeder.clone(),
+        warm_c: false,
+        policy: BudgetPolicy::Uniform,
+        seed_gamma: false,
+    };
+    let (g, report) = match &journal {
+        Some(path) => alphaseed::coordinator::run_journaled_grid(
+            &spec,
+            &cs,
+            &gammas,
+            &opts,
+            workers,
+            &dispatch_policy,
+            std::path::Path::new(path),
+        )?,
+        None => alphaseed::coordinator::run_sharded_grid_with(
+            &spec,
+            &cs,
+            &gammas,
+            &opts,
+            workers,
+            &dispatch_policy,
+        )?,
+    };
     print_csvc_grid(
         &g,
         format!(
@@ -805,6 +912,7 @@ fn cmd_grid_csvc_sharded(
             fmt_secs(started.elapsed())
         ),
     );
+    print_dispatch_report(&report);
     if let Some(path) = points_out {
         write_grid_points(&g, &path)?;
     }
@@ -817,12 +925,34 @@ fn cmd_grid_csvc_sharded(
 /// no state between requests (docs/DISTRIBUTED.md §3).
 fn cmd_worker(args: &Args) -> Result<()> {
     let port = args.parse_or("port", 7879u16)?;
+    let drain = parse_drain_secs(args)?;
     args.reject_unknown()?;
-    let worker = std::sync::Arc::new(alphaseed::coordinator::GridWorker::new());
+    // chaos testing: ALPHASEED_FAULT_PLAN stages deterministic failures
+    // in this process; a malformed plan fails startup loudly
+    if alphaseed::testing::fault::install_from_env().map_err(anyhow::Error::msg)? {
+        eprintln!(
+            "fault: plan armed from {}",
+            alphaseed::testing::fault::FAULT_PLAN_ENV
+        );
+    }
+    let mut worker = alphaseed::coordinator::GridWorker::new();
+    if let Some(deadline) = drain {
+        worker = worker.with_drain_deadline(deadline);
+    }
+    let worker = std::sync::Arc::new(worker);
     worker.serve(&format!("127.0.0.1:{port}"), |addr| {
         println!("grid worker listening on {addr} — send {{\"op\":\"grid\",…}} lines");
     })?;
     Ok(())
+}
+
+/// Parse `--drain-secs` for the serving processes (`worker` / `serve`).
+fn parse_drain_secs(args: &Args) -> Result<Option<std::time::Duration>> {
+    match args.opt_parse::<f64>("drain-secs")? {
+        None => Ok(None),
+        Some(s) if s.is_finite() && s >= 0.0 => Ok(Some(std::time::Duration::from_secs_f64(s))),
+        Some(s) => bail!("--drain-secs {s}: the drain deadline must be a non-negative number"),
+    }
 }
 
 fn cmd_datagen(args: &Args) -> Result<()> {
@@ -1029,7 +1159,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .str_or("backend", "native")
         .parse::<BackendChoice>()
         .map_err(anyhow::Error::msg)?;
+    let drain = parse_drain_secs(args)?;
     args.reject_unknown()?;
+    // chaos testing: ALPHASEED_FAULT_PLAN stages deterministic failures
+    // in this process; a malformed plan fails startup loudly
+    if alphaseed::testing::fault::install_from_env().map_err(anyhow::Error::msg)? {
+        eprintln!(
+            "fault: plan armed from {}",
+            alphaseed::testing::fault::FAULT_PLAN_ENV
+        );
+    }
 
     println!(
         "{} model trained: {} SVs ({}-d); serving on 127.0.0.1:{port}",
@@ -1038,7 +1177,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.dim()
     );
     let registry = std::sync::Arc::new(ModelRegistry::new(model, "startup"));
-    let server = std::sync::Arc::new(PredictServer::with_registry_backend(registry, backend));
+    let mut server = PredictServer::with_registry_backend(registry, backend);
+    if let Some(deadline) = drain {
+        server = server.with_drain_deadline(deadline);
+    }
+    let server = std::sync::Arc::new(server);
     server.serve(&format!("127.0.0.1:{port}"), |addr| {
         println!("listening on {addr} — send {{\"op\":\"predict\",\"rows\":[[…]]}} lines");
     })?;

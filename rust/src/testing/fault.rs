@@ -1,0 +1,408 @@
+//! Deterministic fault injection for the distributed tier.
+//!
+//! A [`FaultPlan`] describes process-level failures to stage at the
+//! TCP/JSON-lines seams of `coordinator/dispatch.rs` and
+//! `coordinator/server.rs`: crash after N grid cells, hang instead of
+//! replying, delay a reply, truncate a frame mid-write, corrupt a frame,
+//! or drop the connection. Worker processes arm a plan from the
+//! `ALPHASEED_FAULT_PLAN` environment variable (parsed once at startup
+//! by `alphaseed worker` / `alphaseed serve`), so the chaos suite in
+//! `tests/chaos_dispatch.rs` and the CI smoke drive *real* child
+//! processes through real failures — and assert the recovered grid is
+//! bit-identical to a fault-free run.
+//!
+//! **Cost when off.** The two hooks ([`frame`], [`cell_hook`]) sit at
+//! per-request and per-cell granularity — never inside the solver or
+//! kernel loops — and with no plan installed each is a single
+//! `OnceLock` load-and-branch. Nothing else is touched on the healthy
+//! path.
+//!
+//! **Determinism.** Every fault fires exactly once (one-shot arming per
+//! directive), and the corruption bytes are drawn from a [`Pcg32`]
+//! seeded by the plan's `seed=` field — the same plan string always
+//! stages the same failure.
+//!
+//! Plan grammar (semicolon-separated directives):
+//!
+//! ```text
+//! seed=7                      jitter/corruption RNG seed (default 0)
+//! crash-at-cell:2             abort the process after 2 completed cells
+//! grid:hang                   never answer the next matching op
+//! grid:delay:250              delay the next reply by 250 ms
+//! grid:partial-write:16       write 16 bytes of the reply, then close
+//! grid:corrupt-frame          garble the reply into invalid JSON
+//! grid:drop-conn              close the connection instead of replying
+//! ```
+//!
+//! The op selector names a wire op (`grid`, `ping`, `predict`, …) or
+//! `*` for any.
+
+#![deny(missing_docs)]
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Environment variable a worker/server process reads its plan from.
+pub const FAULT_PLAN_ENV: &str = "ALPHASEED_FAULT_PLAN";
+
+/// How long a `hang` directive sleeps before quietly dropping the
+/// connection — far beyond any lease deadline, so the driver always
+/// times out first.
+const HANG: Duration = Duration::from_secs(3600);
+
+/// One staged failure kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Abort the whole process once this many grid cells have completed.
+    CrashAtCell(u64),
+    /// Sleep "forever" instead of replying (the driver's lease expires).
+    Hang,
+    /// Sleep this long, then reply normally (a slow-but-healthy worker).
+    Delay(Duration),
+    /// Write only the first N bytes of the reply, then close.
+    PartialWrite(usize),
+    /// Reply with a deterministically garbled, unparsable frame.
+    CorruptFrame,
+    /// Close the connection without writing anything.
+    DropConn,
+}
+
+/// One directive: a wire-op selector (`*` = any) plus the failure kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Wire op this directive matches (`grid`, `ping`, `predict`, `*`).
+    pub op: String,
+    /// What happens when it matches.
+    pub kind: FaultKind,
+}
+
+/// A parsed `ALPHASEED_FAULT_PLAN`: a seed plus staged directives, each
+/// of which fires exactly once.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Seed for the corruption RNG (the `seed=` item; default 0).
+    pub seed: u64,
+    /// Staged directives, in plan order.
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar (see the module docs). Errors name the
+    /// offending directive so a typo'd plan fails worker startup loudly
+    /// instead of silently injecting nothing.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for raw in text.split(';') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(seed) = item.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse::<u64>()
+                    .map_err(|_| format!("fault plan: bad seed '{seed}' (u64)"))?;
+                continue;
+            }
+            let parts: Vec<&str> = item.split(':').collect();
+            let parse_num = |what: &str, s: &str| -> Result<u64, String> {
+                s.parse::<u64>()
+                    .map_err(|_| format!("fault plan: bad {what} in '{item}'"))
+            };
+            let (op, kind) = match parts.as_slice() {
+                ["crash-at-cell", n] => (
+                    "*".to_string(),
+                    FaultKind::CrashAtCell(parse_num("cell count", n)?.max(1)),
+                ),
+                [op, "hang"] => (op.to_string(), FaultKind::Hang),
+                [op, "delay", ms] => (
+                    op.to_string(),
+                    FaultKind::Delay(Duration::from_millis(parse_num("delay", ms)?)),
+                ),
+                [op, "partial-write", n] => (
+                    op.to_string(),
+                    FaultKind::PartialWrite(parse_num("byte count", n)? as usize),
+                ),
+                [op, "corrupt-frame"] => (op.to_string(), FaultKind::CorruptFrame),
+                [op, "drop-conn"] => (op.to_string(), FaultKind::DropConn),
+                _ => {
+                    return Err(format!(
+                        "fault plan: unknown directive '{item}' \
+                         (crash-at-cell:N | op:hang | op:delay:MS | \
+                         op:partial-write:N | op:corrupt-frame | op:drop-conn | seed=N)"
+                    ))
+                }
+            };
+            plan.specs.push(FaultSpec { op, kind });
+        }
+        Ok(plan)
+    }
+}
+
+/// What a frame-level seam should do instead of the normal reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameOutcome {
+    /// Write this text (the original reply after a delay, or a corrupted
+    /// frame) followed by a newline.
+    Send(String),
+    /// Write exactly these bytes (no newline), flush, and close the
+    /// connection — a reply torn mid-frame.
+    SendPartial(Vec<u8>),
+    /// Close the connection without writing anything.
+    Drop,
+}
+
+/// An armed [`FaultPlan`]: per-directive one-shot flags, the completed
+/// cell counter for `crash-at-cell`, and the corruption RNG.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Vec<AtomicBool>,
+    cells: AtomicU64,
+    rng: Mutex<Pcg32>,
+}
+
+impl FaultInjector {
+    /// Arm a plan.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let fired = plan.specs.iter().map(|_| AtomicBool::new(false)).collect();
+        let rng = Mutex::new(Pcg32::seed_from_u64(plan.seed));
+        FaultInjector {
+            plan,
+            fired,
+            cells: AtomicU64::new(0),
+            rng,
+        }
+    }
+
+    /// Frame seam: called with the raw request line and the reply text
+    /// right before the reply would be written. `None` means no armed
+    /// directive matches — write the reply normally. A `hang` directive
+    /// does its sleeping in here.
+    pub fn frame_outcome(&self, request_line: &str, response: &str) -> Option<FrameOutcome> {
+        let op = Json::parse(request_line)
+            .ok()
+            .and_then(|req| req.get("op").and_then(Json::as_str).map(str::to_string))?;
+        for (i, spec) in self.plan.specs.iter().enumerate() {
+            if matches!(spec.kind, FaultKind::CrashAtCell(_)) {
+                continue;
+            }
+            if spec.op != "*" && spec.op != op {
+                continue;
+            }
+            if self.fired[i].swap(true, Ordering::SeqCst) {
+                continue; // already fired: one-shot
+            }
+            eprintln!("fault: injecting {:?} on op '{op}'", spec.kind);
+            return Some(match &spec.kind {
+                FaultKind::Hang => {
+                    std::thread::sleep(HANG);
+                    FrameOutcome::Drop
+                }
+                FaultKind::Delay(d) => {
+                    std::thread::sleep(*d);
+                    FrameOutcome::Send(response.to_string())
+                }
+                FaultKind::PartialWrite(n) => {
+                    let cut = (*n).min(response.len());
+                    FrameOutcome::SendPartial(response.as_bytes()[..cut].to_vec())
+                }
+                FaultKind::CorruptFrame => FrameOutcome::Send(self.corrupt(response)),
+                FaultKind::DropConn => FrameOutcome::Drop,
+                FaultKind::CrashAtCell(_) => unreachable!("filtered above"),
+            });
+        }
+        None
+    }
+
+    /// Cell seam: a grid cell just completed. Returns `Some(done)` when
+    /// an armed `crash-at-cell` directive says the process must die now.
+    pub fn cell_completed(&self) -> Option<u64> {
+        let done = self.cells.fetch_add(1, Ordering::SeqCst) + 1;
+        for (i, spec) in self.plan.specs.iter().enumerate() {
+            if let FaultKind::CrashAtCell(n) = spec.kind {
+                if done >= n && !self.fired[i].swap(true, Ordering::SeqCst) {
+                    return Some(done);
+                }
+            }
+        }
+        None
+    }
+
+    /// Garble a reply into guaranteed-invalid JSON: cut at an RNG-chosen
+    /// char boundary inside the frame and append an unterminated marker,
+    /// so the driver's parse fails and its retry path runs.
+    fn corrupt(&self, response: &str) -> String {
+        let boundaries: Vec<usize> = response
+            .char_indices()
+            .map(|(i, _)| i)
+            .filter(|&i| i > 0)
+            .collect();
+        let cut = if boundaries.is_empty() {
+            0
+        } else {
+            let mut rng = self.rng.lock().expect("fault rng poisoned");
+            boundaries[rng.gen_range(boundaries.len())]
+        };
+        format!("{}~corrupt~", &response[..cut])
+    }
+}
+
+static ACTIVE: OnceLock<FaultInjector> = OnceLock::new();
+
+/// Arm the process-global injector from [`FAULT_PLAN_ENV`], if set.
+/// Returns whether a plan was installed; a malformed plan is an error so
+/// worker startup fails loudly instead of running an unfaulted "chaos"
+/// test. Idempotent: a second call with the variable still set is a
+/// no-op.
+pub fn install_from_env() -> Result<bool, String> {
+    let Ok(text) = std::env::var(FAULT_PLAN_ENV) else {
+        return Ok(false);
+    };
+    let plan = FaultPlan::parse(&text)?;
+    let _ = ACTIVE.set(FaultInjector::new(plan));
+    Ok(true)
+}
+
+/// Whether this process has an armed fault plan (reported by the worker
+/// and server `info` ops so operators can tell a chaos process apart).
+pub fn is_active() -> bool {
+    ACTIVE.get().is_some()
+}
+
+/// Process-global frame seam (see [`FaultInjector::frame_outcome`]).
+/// A single atomic load when no plan is installed.
+pub fn frame(request_line: &str, response: &str) -> Option<FrameOutcome> {
+    ACTIVE.get()?.frame_outcome(request_line, response)
+}
+
+/// Process-global cell seam: aborts the process when an armed
+/// `crash-at-cell` directive triggers. A single atomic load when no
+/// plan is installed.
+pub fn cell_hook() {
+    if let Some(inj) = ACTIVE.get() {
+        if let Some(done) = inj.cell_completed() {
+            eprintln!("fault: crash-at-cell after {done} cell(s); aborting");
+            std::process::abort();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=7; crash-at-cell:2; grid:hang; grid:delay:250; \
+             grid:partial-write:16; predict:corrupt-frame; *:drop-conn",
+        )
+        .expect("plan parses");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.specs.len(), 6);
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec {
+                op: "*".into(),
+                kind: FaultKind::CrashAtCell(2)
+            }
+        );
+        assert_eq!(plan.specs[2].kind, FaultKind::Delay(Duration::from_millis(250)));
+        assert_eq!(plan.specs[3].kind, FaultKind::PartialWrite(16));
+        assert_eq!(plan.specs[4].op, "predict");
+        assert_eq!(plan.specs[5].kind, FaultKind::DropConn);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_directives() {
+        for bad in [
+            "grid:explode",
+            "crash-at-cell:x",
+            "grid:delay:soon",
+            "seed=minus-one",
+            "grid:partial-write",
+        ] {
+            let err = FaultPlan::parse(bad).expect_err(bad);
+            assert!(err.contains("fault plan"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_valid_and_inert() {
+        let inj = FaultInjector::new(FaultPlan::parse("").unwrap());
+        assert_eq!(inj.frame_outcome(r#"{"op":"grid"}"#, "{}"), None);
+        assert_eq!(inj.cell_completed(), None);
+    }
+
+    #[test]
+    fn frame_fault_matches_op_and_fires_once() {
+        let inj = FaultInjector::new(FaultPlan::parse("grid:drop-conn").unwrap());
+        // non-matching op: untouched, still armed
+        assert_eq!(inj.frame_outcome(r#"{"op":"ping"}"#, "{}"), None);
+        assert_eq!(
+            inj.frame_outcome(r#"{"op":"grid"}"#, "{}"),
+            Some(FrameOutcome::Drop)
+        );
+        // one-shot: the next matching frame passes through
+        assert_eq!(inj.frame_outcome(r#"{"op":"grid"}"#, "{}"), None);
+    }
+
+    #[test]
+    fn wildcard_matches_any_op_and_unparsable_requests_pass_through() {
+        let inj = FaultInjector::new(FaultPlan::parse("*:drop-conn").unwrap());
+        // an unparsable request never reaches the reply seam faults
+        assert_eq!(inj.frame_outcome("not json", "{}"), None);
+        assert_eq!(
+            inj.frame_outcome(r#"{"op":"ping"}"#, "{}"),
+            Some(FrameOutcome::Drop)
+        );
+    }
+
+    #[test]
+    fn corrupt_frame_is_unparsable_and_seed_deterministic() {
+        let reply = r#"{"ok":true,"rows":[{"node":0,"c":1}]}"#;
+        let one = FaultInjector::new(FaultPlan::parse("seed=3;grid:corrupt-frame").unwrap());
+        let two = FaultInjector::new(FaultPlan::parse("seed=3;grid:corrupt-frame").unwrap());
+        let (a, b) = (
+            one.frame_outcome(r#"{"op":"grid"}"#, reply).unwrap(),
+            two.frame_outcome(r#"{"op":"grid"}"#, reply).unwrap(),
+        );
+        assert_eq!(a, b, "same seed, same corruption");
+        let FrameOutcome::Send(text) = a else {
+            panic!("corrupt-frame must still send");
+        };
+        assert!(Json::parse(&text).is_err(), "must be invalid JSON: {text}");
+    }
+
+    #[test]
+    fn partial_write_truncates_reply_bytes() {
+        let inj = FaultInjector::new(FaultPlan::parse("grid:partial-write:5").unwrap());
+        let out = inj.frame_outcome(r#"{"op":"grid"}"#, r#"{"ok":true}"#).unwrap();
+        assert_eq!(out, FrameOutcome::SendPartial(b"{\"ok\"".to_vec()));
+        // a request larger than the reply is clamped, not a panic
+        let inj = FaultInjector::new(FaultPlan::parse("grid:partial-write:999").unwrap());
+        let out = inj.frame_outcome(r#"{"op":"grid"}"#, "{}").unwrap();
+        assert_eq!(out, FrameOutcome::SendPartial(b"{}".to_vec()));
+    }
+
+    #[test]
+    fn crash_at_cell_triggers_at_the_threshold_once() {
+        let inj = FaultInjector::new(FaultPlan::parse("crash-at-cell:2").unwrap());
+        assert_eq!(inj.cell_completed(), None);
+        assert_eq!(inj.cell_completed(), Some(2));
+        // one-shot: the decision is not re-issued for later cells
+        assert_eq!(inj.cell_completed(), None);
+    }
+
+    #[test]
+    fn delay_still_sends_the_original_reply() {
+        let inj = FaultInjector::new(FaultPlan::parse("grid:delay:5").unwrap());
+        let reply = r#"{"ok":true}"#;
+        let started = std::time::Instant::now();
+        let out = inj.frame_outcome(r#"{"op":"grid"}"#, reply).unwrap();
+        assert!(started.elapsed() >= Duration::from_millis(5));
+        assert_eq!(out, FrameOutcome::Send(reply.to_string()));
+    }
+}

@@ -7,6 +7,8 @@
 //! (A documented offline-registry substitution — README.md "Offline-build
 //! notes".)
 
+pub mod fault;
+
 use crate::data::{DataMatrix, Dataset};
 use crate::util::rng::Pcg32;
 

@@ -6,5 +6,6 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod pool;
+pub mod retry;
 pub mod rng;
 pub mod timing;

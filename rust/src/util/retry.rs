@@ -1,0 +1,195 @@
+//! Bounded retry with exponential backoff and seeded jitter.
+//!
+//! The grid driver retries *transient* worker failures (connection
+//! refused mid-restart, a corrupted or truncated response frame, a
+//! dropped connection) before forfeiting a node group to the
+//! survivor→in-process recovery ladder (docs/DISTRIBUTED.md §4). The
+//! jitter source is a [`Pcg32`] stream derived from the run's
+//! `rng_seed`, so a retry schedule — like everything else in a run — is
+//! reproducible from the profile alone.
+//!
+//! Backoff is the textbook bounded-exponential shape: attempt `i`
+//! (1-based) sleeps `base · 2^(i−1)`, capped at `max_delay`, plus a
+//! uniform jitter draw in `[0, jitter · delay)` to de-synchronize
+//! concurrent dispatch threads hammering the same recovering worker.
+
+#![deny(missing_docs)]
+
+use crate::util::rng::Pcg32;
+use std::time::Duration;
+
+/// Bounded exponential backoff policy for transient dispatch failures.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (so `1` means "never retry").
+    pub max_attempts: usize,
+    /// Backoff before the second attempt; doubles per further attempt.
+    pub base_delay: Duration,
+    /// Upper bound on the un-jittered backoff.
+    pub max_delay: Duration,
+    /// Jitter fraction: each backoff adds a uniform draw in
+    /// `[0, jitter · delay)`. `0.0` disables jitter.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    /// Three attempts, 100 ms base, 2 s cap, 50% jitter — small enough
+    /// that a genuinely dead worker forfeits its cells in well under a
+    /// lease period, large enough to ride out a one-frame glitch.
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_secs(2),
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff to sleep after failed attempt `attempt` (1-based).
+    /// Deterministic given the RNG state: the exponential part is
+    /// `base · 2^(attempt−1)` capped at `max_delay`, and the jitter part
+    /// consumes exactly one `next_f64` draw.
+    pub fn backoff(&self, attempt: usize, rng: &mut Pcg32) -> Duration {
+        let doublings = attempt.saturating_sub(1).min(31) as u32;
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << doublings)
+            .min(self.max_delay);
+        let jitter_secs = exp.as_secs_f64() * self.jitter.max(0.0) * rng.next_f64();
+        exp + Duration::from_secs_f64(jitter_secs)
+    }
+
+    /// Run `op` up to `max_attempts` times, sleeping the jittered
+    /// backoff between attempts. `op` receives the 1-based attempt
+    /// number; the last error is returned if every attempt fails.
+    pub fn run<T, E>(
+        &self,
+        rng: &mut Pcg32,
+        mut op: impl FnMut(usize) -> Result<T, E>,
+    ) -> Result<T, E> {
+        let attempts = self.max_attempts.max(1);
+        let mut attempt = 1;
+        loop {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempt >= attempts => return Err(e),
+                Err(_) => {
+                    std::thread::sleep(self.backoff(attempt, rng));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_jitter() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(35),
+            jitter: 0.0,
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let p = no_jitter();
+        let mut rng = Pcg32::seed_from_u64(1);
+        assert_eq!(p.backoff(1, &mut rng), Duration::from_millis(10));
+        assert_eq!(p.backoff(2, &mut rng), Duration::from_millis(20));
+        // 40 ms exceeds the 35 ms cap
+        assert_eq!(p.backoff(3, &mut rng), Duration::from_millis(35));
+        assert_eq!(p.backoff(9, &mut rng), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_seed_deterministic() {
+        let p = RetryPolicy {
+            jitter: 0.5,
+            ..no_jitter()
+        };
+        for attempt in 1..=4 {
+            let mut a = Pcg32::seed_from_u64(7);
+            let mut b = Pcg32::seed_from_u64(7);
+            let d = p.backoff(attempt, &mut a);
+            assert_eq!(d, p.backoff(attempt, &mut b), "same seed, same backoff");
+            let exp = p.base_delay.saturating_mul(1 << (attempt - 1)).min(p.max_delay);
+            assert!(d >= exp, "jitter only adds: {d:?} < {exp:?}");
+            assert!(
+                d < exp + exp.mul_f64(p.jitter),
+                "jitter bounded by fraction: {d:?} at attempt {attempt}"
+            );
+        }
+    }
+
+    #[test]
+    fn huge_attempt_index_does_not_overflow() {
+        let p = RetryPolicy {
+            max_delay: Duration::from_secs(3),
+            ..no_jitter()
+        };
+        let mut rng = Pcg32::seed_from_u64(3);
+        assert_eq!(p.backoff(usize::MAX, &mut rng), Duration::from_secs(3));
+    }
+
+    #[test]
+    fn run_retries_then_succeeds() {
+        let p = RetryPolicy {
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            ..no_jitter()
+        };
+        let mut rng = Pcg32::seed_from_u64(5);
+        let mut seen = Vec::new();
+        let out: Result<&str, &str> = p.run(&mut rng, |attempt| {
+            seen.push(attempt);
+            if attempt < 3 {
+                Err("transient")
+            } else {
+                Ok("done")
+            }
+        });
+        assert_eq!(out, Ok("done"));
+        assert_eq!(seen, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn run_gives_up_after_max_attempts_with_last_error() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(1),
+            jitter: 0.0,
+        };
+        let mut rng = Pcg32::seed_from_u64(5);
+        let mut calls = 0;
+        let out: Result<(), String> = p.run(&mut rng, |attempt| {
+            calls += 1;
+            Err(format!("attempt {attempt} failed"))
+        });
+        assert_eq!(calls, 3);
+        assert_eq!(out.unwrap_err(), "attempt 3 failed");
+    }
+
+    #[test]
+    fn zero_max_attempts_still_runs_once() {
+        let p = RetryPolicy {
+            max_attempts: 0,
+            ..no_jitter()
+        };
+        let mut rng = Pcg32::seed_from_u64(5);
+        let mut calls = 0;
+        let out: Result<(), &str> = p.run(&mut rng, |_| {
+            calls += 1;
+            Err("nope")
+        });
+        assert_eq!(calls, 1);
+        assert!(out.is_err());
+    }
+}

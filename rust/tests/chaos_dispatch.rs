@@ -1,0 +1,420 @@
+//! Chaos suite for the fault-tolerant distributed tier
+//! (docs/DISTRIBUTED.md §4): real `alphaseed worker` child processes are
+//! armed with deterministic fault plans (`ALPHASEED_FAULT_PLAN`) — hang
+//! mid-cell, crash after a cell, corrupt a frame, tear a frame mid-write,
+//! reply slowly — and every recovered grid must be **bit-identical** per
+//! cell to the fault-free single-process run, with zero dropped cells.
+//!
+//! The journal half pins crash-safe resume: a journaled grid cut back to
+//! a prefix resumes to the same bits while dispatching only the missing
+//! cells, torn journal tails are truncated not trusted, and a journal
+//! from a different run is refused by fingerprint.
+//!
+//! No test sleeps longer than the lease deadline it exercises: the hang
+//! scenario uses a ~4 s lease and everything else turns on retries in
+//! the tens of milliseconds.
+
+use alphaseed::coordinator::{
+    grid_search_opts, run_journaled_grid, run_sharded_grid_with, DatasetSpec, DispatchPolicy,
+    GridOptions, GridResult, GridWorker,
+};
+use alphaseed::data::synth;
+use alphaseed::testing::fault::FAULT_PLAN_ENV;
+use alphaseed::util::retry::RetryPolicy;
+use std::io::BufRead;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+const CS: [f64; 2] = [1.0, 10.0];
+const GAMMAS: [f64; 2] = [0.1, 0.5];
+const N: usize = 36;
+const SEED: u64 = 9;
+
+fn grid_opts() -> GridOptions {
+    GridOptions {
+        profile: GridOptions::default().profile.with_rng_seed(SEED),
+        k: 2,
+        seeder: "sir".into(),
+        ..Default::default()
+    }
+}
+
+fn synth_spec() -> DatasetSpec {
+    DatasetSpec::Synth {
+        name: "heart".into(),
+        n: Some(N),
+        seed: SEED,
+    }
+}
+
+/// The fault-free single-process reference for the 2×2 grid.
+fn local_reference() -> GridResult {
+    grid_search_opts(
+        &synth::generate("heart", Some(N), SEED),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+    )
+}
+
+/// Tight policy so failure detection runs in test time: ~20–100 ms
+/// backoff, 200 ms heartbeats, 1 s + 1.5 s/cell leases.
+fn fast_policy() -> DispatchPolicy {
+    DispatchPolicy {
+        retry: RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_millis(100),
+            jitter: 0.5,
+        },
+        io_timeout: Duration::from_secs(5),
+        lease_floor: Duration::from_secs(1),
+        lease_per_cell: Duration::from_millis(1500),
+        heartbeat: Duration::from_millis(200),
+    }
+}
+
+fn assert_grids_bit_identical(recovered: &GridResult, local: &GridResult) {
+    assert_eq!(recovered.points.len(), local.points.len(), "cell count");
+    for (s, l) in recovered.points.iter().zip(&local.points) {
+        assert_eq!(s.c.to_bits(), l.c.to_bits(), "cell C");
+        assert_eq!(s.gamma.to_bits(), l.gamma.to_bits(), "cell gamma");
+        assert_eq!(
+            s.accuracy.to_bits(),
+            l.accuracy.to_bits(),
+            "accuracy at C={} gamma={}",
+            s.c,
+            s.gamma
+        );
+        assert_eq!(s.iterations, l.iterations, "iterations at C={} gamma={}", s.c, s.gamma);
+        assert_eq!(s.rounds, l.rounds, "rounds at C={} gamma={}", s.c, s.gamma);
+    }
+}
+
+/// A real `alphaseed worker` child process, optionally armed with a
+/// fault plan through its environment — the same route the CI chaos
+/// smoke uses. Killed on drop so a failing assertion can't leak it.
+struct ChildWorker {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl ChildWorker {
+    fn spawn(fault_plan: Option<&str>) -> ChildWorker {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_alphaseed"));
+        cmd.args(["worker", "--port", "0"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null());
+        match fault_plan {
+            Some(plan) => {
+                cmd.env(FAULT_PLAN_ENV, plan);
+            }
+            None => {
+                cmd.env_remove(FAULT_PLAN_ENV);
+            }
+        }
+        let mut child = cmd.spawn().expect("spawn alphaseed worker");
+        // ready line: "grid worker listening on <addr> — send …"
+        let stdout = child.stdout.take().expect("stdout piped");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read worker ready line");
+        let addr = line
+            .split_whitespace()
+            .nth(4)
+            .unwrap_or_else(|| panic!("unexpected ready line: {line:?}"))
+            .to_string();
+        ChildWorker { child, addr }
+    }
+}
+
+impl Drop for ChildWorker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn hung_worker_forfeits_by_lease_and_grid_is_bit_identical() {
+    let hung = ChildWorker::spawn(Some("grid:hang"));
+    let clean = ChildWorker::spawn(None);
+    let (grid, report) = run_sharded_grid_with(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[hung.addr.clone(), clean.addr.clone()],
+        &fast_policy(),
+    )
+    .expect("grid must survive a hung worker");
+    assert_grids_bit_identical(&grid, &local_reference());
+    assert!(
+        report.lease_timeouts >= 1,
+        "the hang must be detected by lease expiry, not luck: {report:?}"
+    );
+    assert!(
+        report.reassigned_cells >= 1,
+        "the hung worker's cells must enter the recovery ladder: {report:?}"
+    );
+}
+
+#[test]
+fn crashed_worker_cells_are_reassigned_bit_identically() {
+    // the worker aborts after completing its first cell — the driver
+    // sees the connection die mid-reply, retries into a refused
+    // connection, and forfeits the group to the survivor
+    let crashing = ChildWorker::spawn(Some("crash-at-cell:1"));
+    let clean = ChildWorker::spawn(None);
+    let (grid, report) = run_sharded_grid_with(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[crashing.addr.clone(), clean.addr.clone()],
+        &fast_policy(),
+    )
+    .expect("grid must survive a crashed worker");
+    assert_grids_bit_identical(&grid, &local_reference());
+    assert!(report.reassigned_cells >= 1, "{report:?}");
+    let crashed = &report.workers[0];
+    assert!(
+        crashed.failures >= 1,
+        "the crashed worker's failures must be attributed to its address: {report:?}"
+    );
+}
+
+#[test]
+fn corrupt_frame_is_retried_on_the_same_worker() {
+    let flaky = ChildWorker::spawn(Some("seed=5;grid:corrupt-frame"));
+    let clean = ChildWorker::spawn(None);
+    let (grid, report) = run_sharded_grid_with(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[flaky.addr.clone(), clean.addr.clone()],
+        &fast_policy(),
+    )
+    .expect("grid must survive a corrupt frame");
+    assert_grids_bit_identical(&grid, &local_reference());
+    assert!(report.retries >= 1, "{report:?}");
+    // the corruption is one-shot, so the retry lands on the same worker
+    // and nothing needs the recovery ladder
+    assert_eq!(report.reassigned_cells, 0, "{report:?}");
+    assert_eq!(report.fallback_cells, 0, "{report:?}");
+    assert_eq!(report.workers[0].cells, 2, "{report:?}");
+}
+
+#[test]
+fn frame_torn_mid_write_is_retried_to_success() {
+    let torn = ChildWorker::spawn(Some("grid:partial-write:20"));
+    let clean = ChildWorker::spawn(None);
+    let (grid, report) = run_sharded_grid_with(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[torn.addr.clone(), clean.addr.clone()],
+        &fast_policy(),
+    )
+    .expect("grid must survive a torn reply frame");
+    assert_grids_bit_identical(&grid, &local_reference());
+    assert!(report.retries >= 1, "{report:?}");
+    assert_eq!(report.fallback_cells, 0, "{report:?}");
+}
+
+#[test]
+fn slow_worker_within_its_lease_keeps_its_cells() {
+    let slow = ChildWorker::spawn(Some("grid:delay:1000"));
+    let clean = ChildWorker::spawn(None);
+    // generous lease: one second of injected delay must NOT look hung
+    let policy = DispatchPolicy {
+        lease_floor: Duration::from_secs(10),
+        ..fast_policy()
+    };
+    let (grid, report) = run_sharded_grid_with(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[slow.addr.clone(), clean.addr.clone()],
+        &policy,
+    )
+    .expect("grid must tolerate a slow worker");
+    assert_grids_bit_identical(&grid, &local_reference());
+    assert_eq!(report.lease_timeouts, 0, "{report:?}");
+    assert_eq!(report.reassigned_cells, 0, "{report:?}");
+    assert_eq!(
+        report.workers[0].cells, 2,
+        "the slow worker must keep its own cells: {report:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// journal: crash-safe resume (in-process workers — the kill itself is
+// simulated by cutting the journal back to a prefix, which is exactly
+// the on-disk state a killed driver leaves behind)
+// ---------------------------------------------------------------------
+
+/// In-process worker on an ephemeral port (same helper as
+/// tests/stream_shard.rs), so resume tests can read its cell counter.
+fn spawn_worker() -> (String, Arc<GridWorker>, mpsc::Receiver<()>) {
+    let worker = Arc::new(GridWorker::new());
+    let me = Arc::clone(&worker);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        me.serve("127.0.0.1:0", move |addr| addr_tx.send(addr).unwrap())
+            .expect("worker serve failed");
+        done_tx.send(()).ok();
+    });
+    let addr = addr_rx.recv().expect("worker never bound");
+    (addr.to_string(), worker, done_rx)
+}
+
+fn journal_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("alphaseed-chaos-{tag}-{}.jsonl", std::process::id()))
+}
+
+#[test]
+fn journaled_grid_resumes_bit_identically_after_a_cut() {
+    let path = journal_path("resume");
+    std::fs::remove_file(&path).ok();
+    let local = local_reference();
+
+    // full journaled run
+    let (addr, worker, done) = spawn_worker();
+    let (grid, _) = run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[addr],
+        &fast_policy(),
+        &path,
+    )
+    .expect("journaled grid failed");
+    assert_grids_bit_identical(&grid, &local);
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+
+    // "kill" the driver after one completed cell: keep header + 1 row —
+    // the exact file a crash right after the first append leaves behind
+    let text = std::fs::read_to_string(&path).expect("read journal");
+    let mut lines = text.lines();
+    let header = lines.next().expect("journal header");
+    let first_row = lines.next().expect("at least one journaled row");
+    assert_eq!(text.lines().count(), 5, "header + 4 cells expected");
+    std::fs::write(&path, format!("{header}\n{first_row}\n")).expect("cut journal");
+
+    // resume: only the 3 missing cells may be dispatched
+    let (addr, worker, done) = spawn_worker();
+    let (resumed, _) = run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[addr],
+        &fast_policy(),
+        &path,
+    )
+    .expect("resumed grid failed");
+    assert_grids_bit_identical(&resumed, &local);
+    assert_eq!(
+        worker.cells_evaluated(),
+        3,
+        "the journaled cell must not be recomputed"
+    );
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn journal_with_torn_tail_resumes_cleanly() {
+    let path = journal_path("torn");
+    std::fs::remove_file(&path).ok();
+    let local = local_reference();
+
+    let (addr, worker, done) = spawn_worker();
+    let (grid, _) = run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[addr],
+        &fast_policy(),
+        &path,
+    )
+    .expect("journaled grid failed");
+    assert_grids_bit_identical(&grid, &local);
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+
+    // crash mid-append: unterminated garbage at the tail
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(&path)
+        .expect("open journal");
+    f.write_all(b"{\"node\":3,\"c\":10.0,\"gam").expect("tear tail");
+    drop(f);
+
+    let (addr, worker, done) = spawn_worker();
+    let (resumed, report) = run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[addr],
+        &fast_policy(),
+        &path,
+    )
+    .expect("journal with a torn tail must still resume");
+    assert_grids_bit_identical(&resumed, &local);
+    // every cell was already journaled, so nothing is dispatched at all
+    assert_eq!(worker.cells_evaluated(), 0);
+    assert_eq!(report.workers[0].cells, 0);
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn journal_from_a_different_run_is_refused_by_fingerprint() {
+    let path = journal_path("stale");
+    std::fs::remove_file(&path).ok();
+
+    let (addr, worker, done) = spawn_worker();
+    run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &GAMMAS,
+        &grid_opts(),
+        &[addr.clone()],
+        &fast_policy(),
+        &path,
+    )
+    .expect("journaled grid failed");
+
+    // same journal, different γ axis: a different run entirely
+    let err = run_journaled_grid(
+        &synth_spec(),
+        &CS,
+        &[0.1, 0.9],
+        &grid_opts(),
+        &[addr],
+        &fast_policy(),
+        &path,
+    )
+    .expect_err("a stale journal must be refused");
+    assert!(
+        format!("{err:#}").contains("fingerprint"),
+        "error must name the fingerprint mismatch: {err:#}"
+    );
+    worker.shutdown();
+    done.recv().expect("worker never drained");
+    std::fs::remove_file(&path).ok();
+}
